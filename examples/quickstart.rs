@@ -1,0 +1,72 @@
+//! Quickstart: load the artifact manifest, run one Runtime3C search, deploy
+//! the chosen variant through PJRT, and run a single inference.
+//!
+//!   make artifacts          # once (trains + lowers the palette)
+//!   cargo run --release --example quickstart
+//!
+//! This is the 60-second tour of the whole stack: manifest → cost model /
+//! accuracy predictor → Runtime3C (Algorithm 1) → artifact snap → PJRT
+//! executable → logits.
+
+use anyhow::Result;
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::platform::Platform;
+use adaspring::util::rng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Artifacts: one HLO per compression-config variant, plus priors.
+    let manifest = Manifest::load("artifacts/manifest.json")?;
+    let platform = Platform::raspberry_pi_4b();
+    let mut engine = AdaSpring::new(&manifest, "d3", &platform, true)?;
+    println!(
+        "task: {} — {} palette variants, backbone acc {:.1}%",
+        engine.task().title,
+        engine.task().variants.len(),
+        engine.task().backbone.accuracy * 100.0
+    );
+
+    // 2. A deployment context: 70% battery, 1.8 MB of L2 available.
+    let c = Constraints::from_battery(
+        0.70,
+        engine.task().acc_loss_threshold,
+        engine.task().latency_budget_ms,
+        (1.8 * 1024.0 * 1024.0) as u64,
+    );
+    println!("context: λ1={:.2} λ2={:.2}, S_bgt={} KB", c.lambda1, c.lambda2, c.storage_budget_bytes / 1024);
+
+    // 3. Evolve: Runtime3C search + artifact swap (the paper's ≤6.2 ms op).
+    let evo = engine.evolve(&c)?;
+    println!(
+        "evolved: {} -> variant v{} (search {:.2} ms, total {:.2} ms incl. first-compile)",
+        evo.search.evaluation.config.describe(),
+        evo.variant_id,
+        evo.search.search_time_us as f64 / 1e3,
+        evo.evolution_us as f64 / 1e3,
+    );
+
+    // 4. Inference through the deployed PJRT executable.
+    let n: usize = engine.task().input_shape.iter().product();
+    let mut rng = Rng::new(42);
+    let input: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let (logits, stats) = engine.infer(&input)?;
+    println!(
+        "inference ok: {} logits, argmax {}, host latency {:.2} ms",
+        logits.len(),
+        logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0,
+        stats.latency_us as f64 / 1e3
+    );
+
+    // 5. Re-evolve under battery pressure: the config changes, no retraining.
+    let tight = Constraints::from_battery(0.15, 0.05, 15.0, 300 * 1024);
+    let evo2 = engine.evolve(&tight)?;
+    println!(
+        "re-evolved under pressure: {} -> v{} ({:.2} ms)",
+        evo2.search.evaluation.config.describe(),
+        evo2.variant_id,
+        evo2.evolution_us as f64 / 1e3
+    );
+    Ok(())
+}

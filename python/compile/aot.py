@@ -1,0 +1,340 @@
+"""AOT build pipeline: train the self-evolutionary network, lower every
+palette variant to HLO text, and emit artifacts/manifest.json.
+
+This is the only entry point that runs Python — `make artifacts` invokes it
+once; afterwards the Rust coordinator is self-contained (paper §4: training
+is decoupled from runtime adaptation; §5: the runtime search operates on the
+pre-trained variant palette).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per task the artifact set contains:
+  * one HLO file per palette variant (weights baked in as constants —
+    switching executables at runtime IS the paper's weight evolution);
+  * measured validation accuracy, MACs C, params Sp, activations Sa per
+    variant (the Pareto/ranking priors of Algorithm 1 line 4);
+  * one-at-a-time probe accuracies per (layer, operator) — the prior-based
+    accuracy predictor used by the Rust search;
+  * trained channel importance and mutation magnitudes (§4.2.2-3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, operators, train
+from .data import TASKS, train_val_split
+
+# ---------------------------------------------------------------------------
+# Palette definition (the "elite and flexible search space", §5.1)
+# ---------------------------------------------------------------------------
+
+N_LAYERS = len(model.BACKBONE_WIDTHS)
+
+# Deterministic mixed configs exercising the paper's suggested groupings
+# (δ1+δ3, δ2+δ4, ...) across layers.
+MIXED_CONFIGS = [
+    [0, 1, 6, 4, 0],
+    [0, 2, 6, 8, 6],
+    [0, 7, 0, 2, 6],
+    [0, 4, 2, 5, 6],
+    [0, 1, 0, 1, 6],
+    [0, 2, 6, 2, 6],
+    [0, 8, 6, 7, 6],
+    [0, 5, 6, 5, 6],
+]
+
+# One-at-a-time probes for the runtime accuracy predictor.
+PROBE_LAYERS = (1, 3)           # a prunable mid layer and a late layer
+PROBE_OPS = (operators.FIRE, operators.SVD, operators.CH50, operators.CH75)
+PROBE_RES_LAYERS = (2, 4)       # residual layers: probe DEPTH
+PROBE_RES_OPS = (operators.DEPTH,)
+
+
+def canonical_config(config):
+    """Replace per-layer illegal operators with IDENTITY.
+
+    Mirrors coordinator/config.rs::canonicalize — both sides must agree so
+    the Rust search's snapped configs match artifact configs exactly.
+    Legality only depends on static backbone structure (widths/strides/
+    residual flags), never on upstream pruning.
+    """
+    out = [0]
+    for i in range(1, N_LAYERS):
+        op = config[i]
+        cin = model.BACKBONE_WIDTHS[i - 1]
+        cout = model.BACKBONE_WIDTHS[i]
+        ok = operators.op_is_legal(op, cin, cout, model.BACKBONE_STRIDES[i],
+                                   model.BACKBONE_RESIDUAL[i])
+        out.append(op if ok else 0)
+    return out
+
+
+def palette_configs():
+    """Backbone + uniform-prefix configs + mixed configs, deduplicated."""
+    configs = [[0] * N_LAYERS]
+    for op in range(1, operators.NUM_OPS):
+        for prefix in (3, N_LAYERS):
+            cfg = [0] * N_LAYERS
+            for i in range(1, prefix):
+                cfg[i] = op
+            configs.append(cfg)
+    configs.extend([list(c) for c in MIXED_CONFIGS])
+    seen, out = set(), []
+    for cfg in configs:
+        canon = tuple(canonical_config(cfg))
+        if canon not in seen:
+            seen.add(canon)
+            out.append(list(canon))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def lower_to_hlo_text(layers, input_shape, use_pallas: bool = True) -> str:
+    """Lower a variant (batch-1 inference) to HLO text.
+
+    `use_pallas=False` lowers the pure-jnp reference path instead — used to
+    emit the roofline artifact the runtime_exec bench compares against
+    (interpret-mode Pallas lowers to unrolled slice/dot chains; the ref path
+    lowers to native convolutions, XLA:CPU's fast path).
+    """
+    spec = jax.ShapeDtypeStruct((1,) + tuple(input_shape), jnp.float32)
+
+    def fn(x):
+        return (model.forward(layers, x, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(spec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default elides weight
+    # tensors as "{...}", which xla_extension 0.5.1's text parser silently
+    # parses as zeros — the compiled variant would return bias-only logits.
+    return comp.as_hlo_text(True)
+
+
+# ---------------------------------------------------------------------------
+# Layer (de)serialization for the training cache
+# ---------------------------------------------------------------------------
+
+def _flatten_layers(layers, prefix, store, meta_list):
+    metas = []
+    for j, layer in enumerate(layers):
+        meta = {}
+        for k, v in layer.items():
+            if isinstance(v, np.ndarray):
+                store[f"{prefix}/l{j}/{k}"] = v
+            else:
+                meta[k] = v
+        metas.append(meta)
+    meta_list[prefix] = metas
+
+
+def _unflatten_layers(prefix, store, meta_list):
+    metas = meta_list[prefix]
+    layers = []
+    for j, meta in enumerate(metas):
+        layer = dict(meta)
+        key_prefix = f"{prefix}/l{j}/"
+        for k in store.files:
+            if k.startswith(key_prefix):
+                layer[k[len(key_prefix):]] = store[k]
+        layers.append(layer)
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# Per-task build
+# ---------------------------------------------------------------------------
+
+def build_task(task, out_dir, *, fast=False, force=False, verbose=True):
+    cache_path = os.path.join(out_dir, "cache", f"{task.name}.npz")
+    meta_path = os.path.join(out_dir, "cache", f"{task.name}.meta.json")
+    os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+
+    n_train, n_val = (768, 256) if fast else (2048, 512)
+    bb_steps = 60 if fast else (200 if task.input_shape[0] > 40 else 250)
+    batch = 48 if task.input_shape[0] > 40 else 64
+
+    train_set, val_set = train_val_split(task, n_train=n_train, n_val=n_val)
+    configs = palette_configs()
+
+    cached = None
+    if os.path.exists(cache_path) and os.path.exists(meta_path) and not force:
+        cached = np.load(cache_path, allow_pickle=False)
+        cache_meta = json.load(open(meta_path))
+        if cache_meta.get("fast") != fast or \
+           cache_meta.get("n_configs") != len(configs):
+            cached = None
+
+    if cached is None:
+        t0 = time.time()
+        if verbose:
+            print(f"[{task.name}] training backbone ({bb_steps} steps)...")
+        backbone, bb_acc = train.train_backbone(
+            task, train_set, val_set, steps=bb_steps, batch=batch,
+            elastic=False)
+        # Depth-elastic ensemble phase: make residual branches droppable.
+        backbone = train.depth_anneal(
+            backbone, train_set, steps=30 if fast else 120, batch=batch)
+        bb_acc = train.accuracy(backbone, *val_set)
+        importances = train.refine_importance(backbone, train_set)
+        stats = train.layer_input_stats(backbone, train_set[0])
+        sigmas, sigma_scale = train.calibrate_mutation(
+            backbone, importances, val_set)
+        if verbose:
+            print(f"[{task.name}] backbone acc={bb_acc:.3f} "
+                  f"({time.time()-t0:.0f}s)")
+
+        acc_target = bb_acc - 0.02
+        store, meta_list = {}, {}
+        _flatten_layers(backbone, "backbone", store, meta_list)
+
+        # Palette variants: transform + (conditional) distillation.
+        variant_accs, variant_tuned = [], []
+        for vi, cfg in enumerate(configs):
+            v = operators.apply_config(backbone, cfg, importances, stats)
+            v, acc, tuned = train.distill_variant(
+                v, backbone, train_set, val_set, acc_target=acc_target,
+                batch=batch, steps=30 if fast else 60, adaptive=not fast)
+            variant_accs.append(acc)
+            variant_tuned.append(tuned)
+            _flatten_layers(v, f"v{vi}", store, meta_list)
+            if verbose:
+                print(f"[{task.name}] variant {vi} {cfg} acc={acc:.3f}"
+                      f"{' (tuned)' if tuned else ''}")
+
+        # One-at-a-time probes for the accuracy predictor.
+        probes = {}
+        probe_list = [(i, op) for i in PROBE_LAYERS for op in PROBE_OPS] + \
+                     [(i, op) for i in PROBE_RES_LAYERS for op in PROBE_RES_OPS]
+        for (i, op) in probe_list:
+            cfg = [0] * N_LAYERS
+            cfg[i] = op
+            canon = canonical_config(cfg)
+            if canon[i] != op:
+                continue
+            v = operators.apply_config(backbone, canon, importances, stats)
+            v, acc, _ = train.distill_variant(
+                v, backbone, train_set, val_set, acc_target=acc_target,
+                batch=batch, steps=30 if fast else 60, adaptive=not fast)
+            probes[f"{i}:{op}"] = float(max(0.0, bb_acc - acc))
+            if verbose:
+                print(f"[{task.name}] probe layer={i} op={op} "
+                      f"drop={probes[f'{i}:{op}']:.3f}")
+
+        cache_meta = {
+            "fast": fast,
+            "n_configs": len(configs),
+            "bb_acc": float(bb_acc),
+            "variant_accs": [float(a) for a in variant_accs],
+            "variant_tuned": variant_tuned,
+            "probes": probes,
+            "importances": [imp.tolist() for imp in importances],
+            "sigmas": [s.tolist() for s in sigmas],
+            "sigma_scale": sigma_scale,
+            "stats": stats,
+            "meta_list": meta_list,
+        }
+        np.savez(cache_path, **store)
+        json.dump(cache_meta, open(meta_path, "w"))
+        cached = np.load(cache_path, allow_pickle=False)
+
+    cache_meta = json.load(open(meta_path))
+    meta_list = cache_meta["meta_list"]
+
+    # Lower every palette variant to HLO text.
+    task_dir = os.path.join(out_dir, task.name)
+    os.makedirs(task_dir, exist_ok=True)
+    # Roofline artifact: backbone lowered via the pure-jnp path (native
+    # convs) — the comparison point for the Pallas-path perf numbers.
+    ref_path = os.path.join(task_dir, "v0_ref.hlo.txt")
+    if not os.path.exists(ref_path):
+        bb_layers = _unflatten_layers("v0", cached, meta_list)
+        with open(ref_path, "w") as f:
+            f.write(lower_to_hlo_text(bb_layers, task.input_shape,
+                                      use_pallas=False))
+    variants = []
+    for vi, cfg in enumerate(configs):
+        layers = _unflatten_layers(f"v{vi}", cached, meta_list)
+        per_layer, totals = model.layer_costs(layers, task.input_shape)
+        hlo_rel = f"{task.name}/v{vi}.hlo.txt"
+        hlo_path = os.path.join(out_dir, hlo_rel)
+        if not os.path.exists(hlo_path):
+            text = lower_to_hlo_text(layers, task.input_shape)
+            with open(hlo_path, "w") as f:
+                f.write(text)
+        variants.append({
+            "id": vi,
+            "config": cfg,
+            "hlo": hlo_rel,
+            "accuracy": cache_meta["variant_accs"][vi],
+            "tuned": cache_meta["variant_tuned"][vi],
+            "macs": totals["macs"],
+            "params": totals["params"],
+            "acts": totals["acts"],
+            "per_layer": per_layer,
+        })
+
+    return {
+        "name": task.name,
+        "title": task.title,
+        "input_shape": list(task.input_shape),
+        "num_classes": task.num_classes,
+        "latency_budget_ms": task.latency_budget_ms,
+        "acc_loss_threshold": task.acc_loss_threshold,
+        "backbone": {
+            "widths": list(model.BACKBONE_WIDTHS),
+            "strides": list(model.BACKBONE_STRIDES),
+            "residual": list(model.BACKBONE_RESIDUAL),
+            "kernel": model.KERNEL_SIZE,
+            "accuracy": cache_meta["bb_acc"],
+        },
+        "variants": variants,
+        "probes": cache_meta["probes"],
+        "importances": cache_meta["importances"],
+        "mutation_sigmas": cache_meta["sigmas"],
+        "sigma_scale": cache_meta["sigma_scale"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--tasks", default="d1,d2,d3,d4,d5")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny training budget (CI smoke)")
+    ap.add_argument("--force", action="store_true", help="retrain caches")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    os.makedirs(args.out, exist_ok=True)
+    tasks = [TASKS[t] for t in args.tasks.split(",")]
+    manifest = {"version": 1, "fast": args.fast, "tasks": {}}
+    for task in tasks:
+        manifest["tasks"][task.name] = build_task(
+            task, args.out, fast=args.fast, force=args.force)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    json.dump(manifest, open(manifest_path, "w"), indent=1)
+    print(f"wrote {manifest_path} ({len(tasks)} tasks, "
+          f"{sum(len(t['variants']) for t in manifest['tasks'].values())} "
+          f"variants) in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Synthetic task generators for the five AdaSpring evaluation workloads.
+
+The paper (Table 1) evaluates on CIFAR-100 (10-class subset), ImageNet
+(5-class subset), UbiSound (9 acoustic classes), HAR (7 activities), and
+StateFarm (10 driver behaviours).  None of those datasets ship with this
+repository, so each task is replaced by a deterministic synthetic generator
+with the same tensor shape and class count (DESIGN.md §5-1).  The generators
+are class-conditional mixtures: each class owns a pair of smooth random
+templates; a sample is a convex mixture of its templates plus structured and
+white noise.  This yields tasks that (a) a small CNN learns to >90%, and
+(b) degrade *monotonically and mildly* under compression — the property every
+experiment in the paper actually exercises.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """Static description of one evaluation task (paper Table 1)."""
+
+    name: str            # short id, e.g. "d1"
+    title: str           # human-readable, e.g. "CIFAR-100 (10 classes)"
+    input_shape: tuple   # HWC
+    num_classes: int
+    # Latency budget (ms) and accuracy-loss threshold used in §6.3.
+    latency_budget_ms: float
+    acc_loss_threshold: float
+
+
+# Paper Table 1 + §6.3 budget settings.  Input shapes follow the datasets:
+# CIFAR 32x32x3, (downscaled) ImageNet 48x48x3, UbiSound MFCC-like 32x32x1,
+# HAR 128x6 accelerometer+gyro window, StateFarm 48x48x3.
+TASKS = {
+    # Accuracy-loss thresholds are the paper's §6.3 values (0.5/0.3/0.6/0.5
+    # *percent* — their observed losses are ≤2.1%), stored as fractions.
+    "d1": TaskSpec("d1", "CIFAR-100 (10 classes)", (32, 32, 3), 10, 20.0, 0.005),
+    "d2": TaskSpec("d2", "ImageNet (5 classes)", (48, 48, 3), 5, 10.0, 0.003),
+    "d3": TaskSpec("d3", "UbiSound (9 classes)", (32, 32, 1), 9, 30.0, 0.006),
+    "d4": TaskSpec("d4", "HAR (7 classes)", (128, 6, 1), 7, 20.0, 0.005),
+    "d5": TaskSpec("d5", "StateFarm (10 classes)", (48, 48, 3), 10, 20.0, 0.005),
+}
+
+
+def _smooth_templates(key, num, shape):
+    """Random low-frequency templates: white noise blurred along H and W."""
+    h, w, c = shape
+    out = jax.random.normal(key, (num, h, w, c))
+    # Repeated 3-tap circular averaging = cheap separable low-pass. The
+    # repeat count scales with the spatial extent so big inputs stay smooth.
+    reps_h = max(2, h // 8)
+    reps_w = max(1, w // 8)
+    for _ in range(reps_h):
+        out = (out + jnp.roll(out, 1, axis=1) + jnp.roll(out, -1, axis=1)) / 3.0
+    for _ in range(reps_w):
+        out = (out + jnp.roll(out, 1, axis=2) + jnp.roll(out, -1, axis=2)) / 3.0
+    return out / (jnp.std(out) + 1e-6)
+
+
+def make_dataset(task: TaskSpec, num_samples: int, seed: int = 0):
+    """Deterministic synthetic dataset for `task`.
+
+    Returns (x, y): x float32 [N, H, W, C], y int32 [N].
+    """
+    # Templates define the task itself: keyed by the task only, NOT the
+    # sample seed — train/val draws must share the same class structure.
+    task_key = jax.random.PRNGKey(sum(ord(c) for c in task.name) * 7919)
+    k_tmpl, k_warp = jax.random.split(task_key)
+    key = jax.random.PRNGKey(seed * 9973 + 17)
+    k_cls, k_mix, k_noise = jax.random.split(key, 3)
+    shape = task.input_shape
+    # Two templates per class -> intra-class variability via mixing.
+    templates = _smooth_templates(k_tmpl, task.num_classes * 2, shape)
+    templates = templates.reshape((task.num_classes, 2) + shape)
+
+    y = jax.random.randint(k_cls, (num_samples,), 0, task.num_classes)
+    alpha = jax.random.uniform(k_mix, (num_samples, 1, 1, 1), minval=0.15, maxval=0.85)
+    t0 = templates[y, 0]
+    t1 = templates[y, 1]
+    base = alpha * t0 + (1.0 - alpha) * t1
+    # Structured distractors (shared across classes) + white noise; amplitudes
+    # tuned so the backbone lands in the mid-90s and compression visibly
+    # (but mildly) degrades accuracy — the regime of the paper's Tables 2-3.
+    distractors = _smooth_templates(jax.random.fold_in(k_warp, 3), 4, shape)
+    d_mix = jax.random.uniform(k_noise, (num_samples, 4, 1, 1, 1), minval=-1.0, maxval=1.0)
+    d = jnp.sum(d_mix * distractors[None], axis=1)
+    white = jax.random.normal(jax.random.fold_in(k_noise, 1), (num_samples,) + shape)
+    # Per-sample random gain makes absolute magnitude uninformative.
+    gain = jax.random.uniform(jax.random.fold_in(k_noise, 2), (num_samples, 1, 1, 1),
+                              minval=0.7, maxval=1.3)
+    x = gain * (base + d) + 0.9 * white
+    return np.asarray(x, dtype=np.float32), np.asarray(y, dtype=np.int32)
+
+
+def train_val_split(task: TaskSpec, n_train: int = 4096, n_val: int = 1024, seed: int = 0):
+    """Disjoint train/val draws from the same generative process."""
+    x_tr, y_tr = make_dataset(task, n_train, seed=seed)
+    x_va, y_va = make_dataset(task, n_val, seed=seed + 1)
+    return (x_tr, y_tr), (x_va, y_va)

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for the AdaSpring self-evolutionary network.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` used by the pytest suite and
+by the (fast) training path; the Pallas versions are what the AOT artifacts
+lower to.  All kernels require ``interpret=True`` on CPU PJRT.
+"""
+
+from .conv2d import conv2d
+from .depthwise import depthwise
+from .fire import fire
+from .head import gap_dense
+from .pointwise import pointwise
+from . import ref
+
+__all__ = ["conv2d", "depthwise", "fire", "gap_dense", "pointwise", "ref"]

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: direct tiled 2-D convolution (NHWC).
+
+TPU mapping (DESIGN.md §6): the grid iterates over the batch; each grid step
+holds one padded input image plus the full weight tensor in VMEM, builds the
+im2col patch matrix in registers, and issues a single MXU-shaped
+``(Ho*Wo, K*K*Cin) @ (K*K*Cin, Cout)`` dot.  This mirrors the paper's
+L2-cache-residency argument: the per-step VMEM weight footprint *is* the
+quantity the compression operators shrink (C/Sp is MXU work per weight byte).
+
+Always lowered with ``interpret=True`` — real-TPU Mosaic custom-calls cannot
+run on the CPU PJRT plugin (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, k: int, relu: bool):
+    """One grid step: VALID conv of a single padded image against all filters."""
+    x = x_ref[...]          # (1, Hp, Wp, Cin)  — padded input tile in VMEM
+    w = w_ref[...]          # (K, K, Cin, Cout) — full weight tile in VMEM
+    b = b_ref[...]          # (Cout,)
+    _, hp, wp, cin = x.shape
+    cout = w.shape[-1]
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+
+    # im2col: gather the K*K shifted views; static python loop -> unrolled
+    # into slices, so the lowered HLO is loop-free and fusable.
+    cols = []
+    for kh in range(k):
+        for kw in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, kh, kw, 0),
+                (1, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, cin),
+                (1, stride, stride, 1),
+            )  # (1, Ho, Wo, Cin)
+            cols.append(patch.reshape(ho * wo, cin))
+    patches = jnp.concatenate(cols, axis=1)                 # (Ho*Wo, K*K*Cin)
+    wmat = w.transpose(0, 1, 2, 3).reshape(k * k * cin, cout)
+    acc = jnp.dot(patches, wmat, preferred_element_type=jnp.float32)
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(1, ho, wo, cout)
+
+
+def conv2d(x, w, b, *, stride: int = 1, relu: bool = True, interpret: bool = True):
+    """SAME-padded conv2d via a Pallas kernel.
+
+    Args:
+      x: (N, H, W, Cin) float32.
+      w: (K, K, Cin, Cout) float32.
+      b: (Cout,) float32.
+      stride: spatial stride (same for H and W).
+      relu: fuse a ReLU into the kernel epilogue.
+      interpret: must stay True on CPU PJRT (Mosaic is TPU-only).
+
+    Returns: (N, Ho, Wo, Cout) float32 with Ho = ceil(H/stride).
+    """
+    n, h, wd, cin = x.shape
+    k = w.shape[0]
+    ho = -(-h // stride)
+    wo = -(-wd // stride)
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - wd, 0)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    hp, wp = xp.shape[1], xp.shape[2]
+    cout = w.shape[-1]
+
+    kernel = functools.partial(_conv2d_kernel, stride=stride, k=k, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)

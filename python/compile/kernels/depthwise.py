@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: depthwise 2-D convolution (NHWC).
+
+Used by the MobileNet baseline (Table 3's comparison anchor) and by the
+depthwise-separable flavour of the δ2 factorization operator.  Depthwise conv
+has *low* arithmetic intensity (C/Sa is poor: every activation byte is touched
+by only K*K MACs), which is exactly the pathology the paper's hardware-
+efficiency criterion penalizes — having it as a real kernel lets the Fig-10(d)
+sweep show that effect instead of asserting it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _depthwise_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, k: int, relu: bool):
+    x = x_ref[...]          # (1, Hp, Wp, C) padded
+    w = w_ref[...]          # (K, K, C)
+    b = b_ref[...]          # (C,)
+    _, hp, wp, c = x.shape
+    ho = (hp - k) // stride + 1
+    wo = (wp - k) // stride + 1
+    acc = jnp.zeros((ho * wo, c), dtype=jnp.float32)
+    for kh in range(k):
+        for kw in range(k):
+            patch = jax.lax.slice(
+                x,
+                (0, kh, kw, 0),
+                (1, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            ).reshape(ho * wo, c)
+            acc = acc + patch * w[kh, kw][None, :]
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(1, ho, wo, c)
+
+
+def depthwise(x, w, b, *, stride: int = 1, relu: bool = True, interpret: bool = True):
+    """SAME-padded depthwise conv: x (N,H,W,C), w (K,K,C), b (C,)."""
+    n, h, wd, c = x.shape
+    k = w.shape[0]
+    ho = -(-h // stride)
+    wo = -(-wd // stride)
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - wd, 0)
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    hp, wp = xp.shape[1], xp.shape[2]
+    kernel = functools.partial(_depthwise_kernel, stride=stride, k=k, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((k, k, c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)

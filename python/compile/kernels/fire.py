@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: fused Fire block (δ1 — multi-branch channel merging).
+
+The Fire block (SqueezeNet, paper §4.1 operator δ1) replaces one K×K conv by
+a 1×1 *squeeze* followed by parallel 1×1 and 3×3 *expand* branches whose
+outputs are concatenated.  Fusing all three matmuls into one kernel keeps the
+squeeze activations in VMEM — they never round-trip to HBM — which is the TPU
+analogue of the paper's "keep the small intermediate in L2-cache" argument and
+is what makes δ1 raise C/Sp rather than lower it.
+
+Padding convention: the squeeze runs over the *unpadded* input; the squeeze
+map is then zero-padded for the 3×3 expand (exactly a SAME conv over the
+squeeze output — matching ref.fire_ref and real SqueezeNet).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fire_kernel(x_ref, ws_ref, bs_ref, fs_ref, we1_ref, be1_ref, we3_ref,
+                 be3_ref, o_ref, *, stride: int, relu: bool):
+    x = x_ref[...]                # (N, H, W, Cin) — unpadded
+    ws = ws_ref[...]              # (Cin, S)
+    bs = bs_ref[...]              # (S,)
+    fs = fs_ref[...]              # (S,) squeeze activation floor (0 = ReLU)
+    we1 = we1_ref[...]            # (S, E1)
+    be1 = be1_ref[...]            # (E1,)
+    we3 = we3_ref[...]            # (3, 3, S, E3)
+    be3 = be3_ref[...]            # (E3,)
+    n, h, w, cin = x.shape
+    s = ws.shape[-1]
+    e1 = we1.shape[-1]
+    e3 = we3.shape[-1]
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+
+    # Squeeze: 1x1 over the unpadded tile (stays in VMEM).  The activation
+    # is a *floored* ReLU max(z+bs, fs): with fs=0 this is the classic Fire
+    # squeeze; the function-preserving transformation of
+    # operators.fire_from_conv uses fs=-shift so the unit stays linear on
+    # the whole data range.
+    sq = jnp.dot(x.reshape(n * h * w, cin), ws, preferred_element_type=jnp.float32)
+    sq = jnp.maximum(sq + bs[None, :], fs[None, :]).reshape(n, h, w, s)
+
+    # Expand 1x1 branch: a strided 1x1 conv samples sq at (i*stride, j*stride).
+    centre = jax.lax.slice(
+        sq, (0, 0, 0, 0),
+        (n, (ho - 1) * stride + 1, (wo - 1) * stride + 1, s),
+        (1, stride, stride, 1),
+    ).reshape(n * ho * wo, s)
+    out1 = jnp.dot(centre, we1, preferred_element_type=jnp.float32) + be1[None, :]
+
+    # Expand 3x3 branch: SAME conv over sq = zero-pad then im2col + one dot.
+    pad_h = max((ho - 1) * stride + 3 - h, 0)
+    pad_w = max((wo - 1) * stride + 3 - w, 0)
+    sqp = jnp.pad(sq, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                       (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    cols = []
+    for kh in range(3):
+        for kw in range(3):
+            patch = jax.lax.slice(
+                sqp,
+                (0, kh, kw, 0),
+                (n, kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, s),
+                (1, stride, stride, 1),
+            ).reshape(n * ho * wo, s)
+            cols.append(patch)
+    patches = jnp.concatenate(cols, axis=1)               # (N*Ho*Wo, 9*S)
+    out3 = jnp.dot(patches, we3.reshape(9 * s, e3),
+                   preferred_element_type=jnp.float32) + be3[None, :]
+
+    out = jnp.concatenate([out1, out3], axis=1)           # (N*Ho*Wo, E1+E3)
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out.reshape(n, ho, wo, e1 + e3)
+
+
+def fire(x, ws, bs, fs, we1, be1, we3, be3, *, stride: int = 1,
+         relu: bool = True, interpret: bool = True):
+    """Fused SqueezeNet Fire block with SAME padding on the 3x3 expand.
+
+    x: (N,H,W,Cin); ws/bs/fs squeeze 1x1 (Cin,S)/(S,)/(S,) with fs the
+    per-channel activation floor; we1/be1 expand 1x1 (S,E1)/(E1,); we3/be3
+    expand 3x3 (3,3,S,E3)/(E3,).
+    Returns (N, ceil(H/stride), ceil(W/stride), E1+E3).
+    """
+    n, h, wd, cin = x.shape
+    ho = -(-h // stride)
+    wo = -(-wd // stride)
+    s, e1, e3 = ws.shape[-1], we1.shape[-1], we3.shape[-1]
+    kernel = functools.partial(_fire_kernel, stride=stride, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, e1 + e3), jnp.float32),
+        interpret=interpret,
+    )(x, ws, bs, fs, we1, be1, we3, be3)

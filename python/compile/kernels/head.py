@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: fused GAP + dense classifier head.
+
+The Table-2 backbone ends in a global-average-pool followed by a single dense
+layer (the paper deliberately avoids big FC stacks, §4.1).  Fusing the two
+keeps the pooled (C,)-vector in VMEM and makes the head one grid step per
+sample.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]                        # (1, H, W, C)
+    w = w_ref[...]                        # (C, num_classes)
+    b = b_ref[...]                        # (num_classes,)
+    _, h, wd, c = x.shape
+    pooled = jnp.mean(x.reshape(h * wd, c), axis=0)            # (C,)
+    logits = jnp.dot(pooled[None, :], w, preferred_element_type=jnp.float32)
+    o_ref[...] = logits + b[None, :]
+
+
+def gap_dense(x, w, b, *, interpret: bool = True):
+    """Global average pool over HW then dense: returns (N, num_classes)."""
+    n, h, wd, c = x.shape
+    classes = w.shape[-1]
+    return pl.pallas_call(
+        _head_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c, classes), lambda i: (0, 0)),
+            pl.BlockSpec((classes,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, classes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, classes), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

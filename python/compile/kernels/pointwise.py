@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: pointwise (1x1) convolution.
+
+The 1x1 conv is the workhorse of the δ1 (Fire squeeze/expand) and δ2
+(rank-restore) compression operators: it is a pure channel-mixing matmul
+``(H*W, Cin) @ (Cin, Cout)``, the most MXU-friendly shape in the whole
+network.  Kept as its own kernel (rather than conv2d with K=1) so the lowered
+HLO of compressed variants shows the operator structure the paper reasons
+about, and so the VMEM footprint accounting in costmodel.rs stays exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pointwise_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]                      # (1, H, W, Cin)
+    w = w_ref[...]                      # (Cin, Cout)
+    b = b_ref[...]                      # (Cout,)
+    _, h, wd, cin = x.shape
+    acc = jnp.dot(x.reshape(h * wd, cin), w, preferred_element_type=jnp.float32)
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(1, h, wd, w.shape[-1])
+
+
+def pointwise(x, w, b, *, relu: bool = True, interpret: bool = True):
+    """1x1 convolution: x (N,H,W,Cin) @ w (Cin,Cout) + b, optional ReLU."""
+    n, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    kernel = functools.partial(_pointwise_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, wd, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, cout), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth (pytest asserts kernel == ref to
+float32 tolerance) *and* the fast path used during ensemble training — the
+Pallas kernels only need to run on the AOT/lowering path, so training uses
+``lax.conv_general_dilated`` which XLA:CPU executes orders of magnitude
+faster than interpret-mode Pallas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1, relu: bool = True):
+    """SAME conv2d, NHWC/HWIO. Matches kernels.conv2d bit-for-bit semantics."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def pointwise_ref(x, w, b, *, relu: bool = True):
+    """1x1 conv as an einsum over the channel axis."""
+    out = jnp.einsum("nhwc,cd->nhwd", x, w) + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def depthwise_ref(x, w, b, *, stride: int = 1, relu: bool = True):
+    """SAME depthwise conv, w: (K, K, C)."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, :, None, :],                   # (K, K, 1, C) HWIO with groups
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def fire_ref(x, ws, bs, fs, we1, be1, we3, be3, *, stride: int = 1, relu: bool = True):
+    """Fire block oracle: squeeze(1x1) -> [expand1x1 || expand3x3] concat.
+
+    The 1x1 expand branch samples the squeeze output at the output grid
+    (centre taps), matching the fused kernel's convention.
+    """
+    pre = jnp.einsum("nhwc,cd->nhwd", x, ws) + bs[None, None, None, :]
+    sq = jnp.maximum(pre, fs[None, None, None, :])   # floored ReLU (fs=0 -> ReLU)
+    # expand 1x1 at stride: subsample the squeeze map like a strided 1x1 conv.
+    sq_strided = sq[:, ::stride, ::stride, :]
+    out1 = pointwise_ref(sq_strided, we1, be1, relu=False)
+    out3 = conv2d_ref(sq, we3, be3, stride=stride, relu=False)
+    out = jnp.concatenate([out1, out3], axis=-1)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def gap_dense_ref(x, w, b):
+    """Global average pool + dense."""
+    pooled = jnp.mean(x, axis=(1, 2))
+    return pooled @ w + b[None, :]

@@ -1,0 +1,201 @@
+"""L2 JAX model: the AdaSpring backbone and its compressed variants.
+
+The Table-2 backbone is 5 conv layers + GAP + dense.  ``forward`` runs either
+the pure-jnp reference path (fast — used for training/accuracy measurement)
+or the Pallas kernel path (what the AOT artifacts lower to).  Both paths are
+numerically cross-checked in python/tests.
+
+Cost accounting (MACs C, parameter count Sp, activation count Sa) lives here
+too and is the Python mirror of rust/src/coordinator/costmodel.rs; the
+manifest carries both so the Rust side can assert agreement at load time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+from .data import TaskSpec
+
+# Backbone hyper-parameters (initialized "at design time using AdaDeep"
+# per paper §3.3 — here: a fixed high-performance template per task).
+# Layers 3 and 5 are square, stride-1 *residual* blocks: the paper's δ4
+# (depth-elastic pruning via residual connections, §4.1) drops the conv
+# branch and keeps the identity path — function-preserving by construction.
+BACKBONE_WIDTHS = (16, 32, 32, 64, 64)
+BACKBONE_STRIDES = (1, 2, 1, 2, 1)
+BACKBONE_RESIDUAL = (False, False, True, False, True)
+KERNEL_SIZE = 3
+
+
+def init_backbone(task: TaskSpec, seed: int = 0):
+    """He-initialized backbone: list of conv layer dicts + head dict."""
+    key = jax.random.PRNGKey(seed + 1234)
+    cin = task.input_shape[-1]
+    layers = []
+    for width, stride, res in zip(BACKBONE_WIDTHS, BACKBONE_STRIDES, BACKBONE_RESIDUAL):
+        key, kw = jax.random.split(key)
+        fan_in = KERNEL_SIZE * KERNEL_SIZE * cin
+        w = jax.random.normal(kw, (KERNEL_SIZE, KERNEL_SIZE, cin, width))
+        w = w * jnp.sqrt(2.0 / fan_in)
+        layers.append({
+            "kind": "conv",
+            "w": np.asarray(w, dtype=np.float32),
+            "b": np.zeros((width,), dtype=np.float32),
+            "stride": stride,
+            "residual": res,
+        })
+        cin = width
+    key, kw = jax.random.split(key)
+    hw = jax.random.normal(kw, (cin, task.num_classes)) * jnp.sqrt(1.0 / cin)
+    layers.append({
+        "kind": "head",
+        "w": np.asarray(hw, dtype=np.float32),
+        "b": np.zeros((task.num_classes,), dtype=np.float32),
+    })
+    return layers
+
+
+def forward(layers, x, *, use_pallas: bool = False):
+    """Run a (backbone or variant) layer list.  Returns logits (N, classes)."""
+    for layer in layers:
+        kind = layer.get("kind", "conv")
+        res = layer.get("residual", False)
+        if kind == "conv":
+            if use_pallas:
+                y = kernels.conv2d(x, layer["w"], layer["b"], stride=layer["stride"])
+            else:
+                y = ref.conv2d_ref(x, layer["w"], layer["b"], stride=layer["stride"])
+            x = x + y if res else y
+        elif kind == "fire":
+            args = (x, layer["ws"], layer["bs"], layer["fs"], layer["we1"],
+                    layer["be1"], layer["we3"], layer["be3"])
+            if use_pallas:
+                y = kernels.fire(*args, stride=layer["stride"])
+            else:
+                y = ref.fire_ref(*args, stride=layer["stride"])
+            x = x + y if res else y
+        elif kind == "svd":
+            if use_pallas:
+                y = kernels.conv2d(x, layer["w1"], jnp.zeros(layer["w1"].shape[-1]),
+                                   stride=layer["stride"], relu=False)
+                y = kernels.pointwise(y, layer["w2"], layer["b2"], relu=True)
+            else:
+                y = ref.conv2d_ref(x, layer["w1"], jnp.zeros(layer["w1"].shape[-1]),
+                                   stride=layer["stride"], relu=False)
+                y = ref.pointwise_ref(y, layer["w2"], layer["b2"], relu=True)
+            x = x + y if res else y
+        elif kind == "head":
+            if use_pallas:
+                x = kernels.gap_dense(x, layer["w"], layer["b"])
+            else:
+                x = ref.gap_dense_ref(x, layer["w"], layer["b"])
+        elif kind == "skip":
+            continue
+        else:
+            raise ValueError(f"unknown layer kind {kind}")
+    return x
+
+
+def trainable_params(layers):
+    """Extract the trainable pytree (arrays only) from a layer list."""
+    out = []
+    for layer in layers:
+        out.append({k: jnp.asarray(v) for k, v in layer.items()
+                    if isinstance(v, (np.ndarray, jnp.ndarray))})
+    return out
+
+
+def merge_params(layers, params):
+    """Inverse of trainable_params: write arrays back into the layer list."""
+    merged = []
+    for layer, p in zip(layers, params):
+        d = dict(layer)
+        for k, v in p.items():
+            d[k] = np.asarray(v, dtype=np.float32)
+        merged.append(d)
+    return merged
+
+
+def forward_params(params, meta, x, *, use_pallas: bool = False):
+    """forward() over a params pytree + static meta (kind/stride per layer)."""
+    layers = []
+    for p, m in zip(params, meta):
+        d = dict(m)
+        d.update(p)
+        layers.append(d)
+    return forward(layers, x, use_pallas=use_pallas)
+
+
+def layer_meta(layers):
+    """Static (non-array) part of each layer — jit-safe closure data."""
+    out = []
+    for layer in layers:
+        out.append({k: v for k, v in layer.items()
+                    if not isinstance(v, (np.ndarray, jnp.ndarray))})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting (mirror of costmodel.rs — keep the arithmetic identical).
+# ---------------------------------------------------------------------------
+
+def _spatial(h, w, stride):
+    return -(-h // stride), -(-w // stride)
+
+
+def layer_costs(layers, input_shape):
+    """Per-layer (macs, params, activations) plus totals.
+
+    Activation count Sa follows the paper's convention: the number of output
+    activation elements each layer writes (N=1).  Returns (per_layer, totals)
+    with totals = {"macs": C, "params": Sp, "acts": Sa}.
+    """
+    h, w, _ = input_shape
+    per_layer = []
+    tot = {"macs": 0, "params": 0, "acts": 0}
+    for layer in layers:
+        kind = layer.get("kind", "conv")
+        if kind == "conv":
+            k, _, cin, cout = layer["w"].shape
+            ho, wo = _spatial(h, w, layer["stride"])
+            macs = ho * wo * k * k * cin * cout
+            params = k * k * cin * cout + cout
+            acts = ho * wo * cout
+            h, w = ho, wo
+        elif kind == "fire":
+            cin, s = layer["ws"].shape
+            e1 = layer["we1"].shape[1]
+            e3 = layer["we3"].shape[3]
+            ho, wo = _spatial(h, w, layer["stride"])
+            # squeeze runs at input resolution, expands at output resolution.
+            macs = h * w * cin * s + ho * wo * (s * e1 + 9 * s * e3)
+            params = cin * s + 2 * s + s * e1 + e1 + 9 * s * e3 + e3
+            acts = h * w * s + ho * wo * (e1 + e3)
+            h, w = ho, wo
+        elif kind == "svd":
+            k, _, cin, r = layer["w1"].shape
+            cout = layer["w2"].shape[1]
+            ho, wo = _spatial(h, w, layer["stride"])
+            macs = ho * wo * (k * k * cin * r + r * cout)
+            params = k * k * cin * r + r * cout + cout
+            acts = ho * wo * (r + cout)
+            h, w = ho, wo
+        elif kind == "head":
+            cin, classes = layer["w"].shape
+            macs = h * w * cin + cin * classes
+            params = cin * classes + classes
+            acts = classes
+        elif kind == "skip":
+            per_layer.append({"macs": 0, "params": 0, "acts": 0})
+            continue
+        else:
+            raise ValueError(kind)
+        entry = {"macs": int(macs), "params": int(params), "acts": int(acts)}
+        per_layer.append(entry)
+        for key in tot:
+            tot[key] += entry[key]
+    return per_layer, tot

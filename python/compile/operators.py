@@ -1,0 +1,270 @@
+"""Compression operators δ1–δ4 as retraining-free weight transformations.
+
+Paper §4.1 defines four operator families; §4.2.2 trains their variant
+weights by (1) function-preserving parameter transformation (δ1, δ2),
+(2) knowledge distillation (δ3, δ4), and (3) trainable channel-wise mutation
+(δ3).  This module implements the *transformations* — given a trained
+backbone layer, produce the compressed layer's weights.  train.py owns the
+fine-tuning; the Rust coordinator (coordinator/operators.rs) mirrors the
+shape arithmetic exactly (cross-checked by tests on the manifest).
+
+Operator ids (shared with the Rust side — keep in sync with operators.rs):
+
+  0 IDENTITY       keep the conv layer as-is
+  1 FIRE           δ1 multi-branch channel merging (SqueezeNet Fire)
+  2 SVD            δ2 low-rank factorization (K×K → K×K@r + 1×1)
+  3 CH25           δ3 channel pruning, 25% pruned
+  4 CH50           δ3 channel pruning, 50% pruned
+  5 CH75           δ3 channel pruning, 75% pruned
+  6 DEPTH          δ4 depth scaling: skip the layer (needs Cin==Cout, s=1)
+  7 FIRE_CH50      δ1+δ3 group (paper §5.1.2 suggested grouping)
+  8 SVD_CH50       δ2+δ3 group
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IDENTITY, FIRE, SVD, CH25, CH50, CH75, DEPTH, FIRE_CH50, SVD_CH50 = range(9)
+
+OP_NAMES = {
+    IDENTITY: "identity",
+    FIRE: "fire",
+    SVD: "svd",
+    CH25: "ch25",
+    CH50: "ch50",
+    CH75: "ch75",
+    DEPTH: "depth",
+    FIRE_CH50: "fire+ch50",
+    SVD_CH50: "svd+ch50",
+}
+NUM_OPS = len(OP_NAMES)
+
+# δ1 squeeze ratio and δ2 rank ratio.  The paper's offline-retrained SVD
+# baseline uses k=m/12; retraining-free operation needs a gentler rank (the
+# elite-space principle, §5.1.1: operators that survive *without* retraining).
+FIRE_SQUEEZE_RATIO = 0.5
+SVD_RANK_RATIO = 0.5
+PRUNE_RATIOS = {CH25: 0.25, CH50: 0.50, CH75: 0.75}
+
+
+def op_is_legal(op: int, cin: int, cout: int, stride: int,
+                residual: bool = False) -> bool:
+    """Per-layer legality (mirrored by operators.rs::is_legal).
+
+    δ4 (DEPTH) drops the conv branch of a residual block — only residual
+    layers are skippable.  Channel-pruning ops change Cout and therefore
+    cannot apply to residual layers (the identity add needs Cin == Cout).
+    """
+    if op == DEPTH:
+        return residual and cin == cout and stride == 1
+    if op in (CH25, CH50, CH75, FIRE_CH50, SVD_CH50):
+        if residual:
+            return False
+        ratio = PRUNE_RATIOS.get(op, 0.5)
+        return int(round(cout * (1.0 - ratio))) >= 4
+    return True
+
+
+def channel_importance(w: np.ndarray) -> np.ndarray:
+    """L1-norm filter importance over a (K, K, Cin, Cout) weight tensor.
+
+    This is the *prior* ranking; train.py refines it with a gradient
+    sensitivity probe (the paper's trained architecture importance, §4.2.2-3).
+    """
+    return np.abs(w).sum(axis=(0, 1, 2))
+
+
+def keep_indices(importance: np.ndarray, prune_ratio: float) -> np.ndarray:
+    """Sorted indices of the channels that survive pruning at `prune_ratio`."""
+    cout = importance.shape[0]
+    n_keep = max(4, int(round(cout * (1.0 - prune_ratio))))
+    order = np.argsort(-importance, kind="stable")
+    return np.sort(order[:n_keep])
+
+
+def fire_from_conv(w: np.ndarray, b: np.ndarray, rms_in: float = 1.0,
+                   squeeze_ratio: float = FIRE_SQUEEZE_RATIO,
+                   allow_permute: bool = True):
+    """\u03b41: conv(K,K,Cin,Cout) -> squeeze(1x1,Cin,S) + expand(1x1 || 3x3).
+
+    Function-preserving init (paper \u00a74.2.2-1): a rank-S SVD over the Cin axis
+    gives the squeeze projection; the expand branches re-synthesize the
+    original filters in the squeezed basis.  The squeeze ReLU is linearized
+    by a *bias shift*: each squeeze unit gets bias +4\u00b7std(u\u00b7x) (estimated from
+    `rms_in`, the RMS of this layer's input activations measured at training
+    time), pushing it into the linear region; the expand biases subtract the
+    shift exactly.  The 1\u00d71 expand branch carries the most point-like output
+    filters (highest centre-tap energy fraction) when permutation is allowed;
+    on residual layers the output order must be preserved.
+
+    Returns (params, perm) where perm maps fire-output position -> original
+    output channel (None when allow_permute=False).
+    """
+    k, _, cin, cout = w.shape
+    s = max(4, int(round(cin * squeeze_ratio)))
+    s = min(s, cin)
+    e1 = max(2, cout // 4)
+    e3 = cout - e1
+    if allow_permute:
+        energy = (w ** 2).sum(axis=(0, 1, 2))
+        centre = (w[k // 2, k // 2] ** 2).sum(axis=0)
+        pointness = centre / (energy + 1e-12)
+        order = np.argsort(-pointness, kind="stable")
+        perm = np.concatenate([np.sort(order[:e1]), np.sort(order[e1:])])
+    else:
+        perm = np.arange(cout)
+    wp = w[..., perm]
+    bp = b[perm]
+
+    mat = wp.transpose(2, 0, 1, 3).reshape(cin, k * k * cout)
+    u, sv, vt = np.linalg.svd(mat, full_matrices=False)
+    r = min(s, sv.shape[0])
+    ws = (u[:, :r] * np.sqrt(sv[:r])[None, :]).astype(np.float32)  # (Cin, S)
+    m = (np.sqrt(sv[:r])[:, None] * vt[:r]).reshape(r, k, k, cout)
+    if r < s:  # pad to requested squeeze width
+        ws = np.pad(ws, ((0, 0), (0, s - r)))
+        m = np.pad(m, ((0, s - r), (0, 0), (0, 0), (0, 0)))
+
+    # Activation floor: squeeze unit j sees u_j . x with std ~ ||u_j||*rms_in;
+    # flooring at -4 sigma keeps the unit linear over the data range while
+    # evaluating to 0 on zero input (SAME-padding stays exact).
+    col_norm = np.sqrt((ws ** 2).sum(axis=0))
+    shift = (4.0 * col_norm * float(rms_in)).astype(np.float32)     # (S,)
+    bs = np.zeros_like(shift)
+    fs = (-shift).astype(np.float32)
+
+    # 1x1 branch: centre taps of the point-like filters.
+    we1 = m[:, k // 2, k // 2, :e1].astype(np.float32)              # (S, E1)
+    # 3x3 branch: full filters for the remaining e3 outputs.
+    we3 = m[:, :, :, e1:].transpose(1, 2, 0, 3).astype(np.float32)  # (K,K,S,E3)
+    be1 = bp[:e1].astype(np.float32)
+    be3 = bp[e1:].astype(np.float32)
+    params = {"ws": ws, "bs": bs, "fs": fs, "we1": we1, "be1": be1,
+              "we3": we3, "be3": be3}
+    return params, (perm if allow_permute else None)
+
+
+def svd_from_conv(w: np.ndarray, b: np.ndarray, rank_ratio: float = SVD_RANK_RATIO):
+    """δ2: conv(K,K,Cin,Cout) -> conv(K,K,Cin,r) . pointwise(r,Cout).
+
+    Exact function preservation up to the truncated singular mass: the first
+    factor runs without bias/ReLU, the 1×1 restores Cout and carries b + ReLU.
+    """
+    k, _, cin, cout = w.shape
+    r = max(4, int(round(cout * rank_ratio)))
+    r = min(r, min(k * k * cin, cout))
+    mat = w.reshape(k * k * cin, cout)
+    u, sv, vt = np.linalg.svd(mat, full_matrices=False)
+    w1 = (u[:, :r] * np.sqrt(sv[:r])[None, :]).reshape(k, k, cin, r).astype(np.float32)
+    w2 = (np.sqrt(sv[:r])[:, None] * vt[:r]).astype(np.float32)    # (r, Cout)
+    return {"w1": w1, "w2": w2, "b2": b.astype(np.float32)}
+
+
+def prune_conv(w: np.ndarray, b: np.ndarray, keep: np.ndarray):
+    """δ3 on a plain conv layer: keep the given output channels."""
+    return w[..., keep].astype(np.float32), b[keep].astype(np.float32)
+
+
+def slice_input_channels(w: np.ndarray, keep: np.ndarray):
+    """Propagate an upstream prune: keep the given *input* channels."""
+    if w.ndim == 4:       # conv (K,K,Cin,Cout)
+        return w[:, :, keep, :].astype(np.float32)
+    return w[keep, :].astype(np.float32)  # pointwise / dense (Cin, Cout)
+
+
+def apply_op_to_layer(op: int, w, b, stride: int, residual: bool, importance,
+                      rms_in: float = 1.0):
+    """Apply one operator to a trained conv layer.
+
+    Returns (layer_dict, keep_out) where layer_dict describes the compressed
+    layer for model.forward and keep_out is the output-channel index array
+    mapping new output position -> original channel (None means identity
+    order / layer skipped).  layer_dict kinds: conv | fire | svd | skip.
+    """
+    if op == IDENTITY:
+        return {"kind": "conv", "w": w, "b": b, "stride": stride,
+                "residual": residual}, None
+    if op == FIRE:
+        p, perm = fire_from_conv(w, b, rms_in, allow_permute=not residual)
+        return {"kind": "fire", "stride": stride, "residual": residual, **p}, perm
+    if op == SVD:
+        p = svd_from_conv(w, b)
+        return {"kind": "svd", "stride": stride, "residual": residual, **p}, None
+    if op in (CH25, CH50, CH75):
+        keep = keep_indices(importance, PRUNE_RATIOS[op])
+        wp, bp = prune_conv(w, b, keep)
+        return {"kind": "conv", "w": wp, "b": bp, "stride": stride,
+                "residual": False}, keep
+    if op == DEPTH:
+        return {"kind": "skip"}, None
+    if op == FIRE_CH50:
+        keep = keep_indices(importance, 0.5)
+        wp, bp = prune_conv(w, b, keep)
+        p, perm = fire_from_conv(wp, bp, rms_in)
+        keep_out = keep[perm] if perm is not None else keep
+        return {"kind": "fire", "stride": stride, "residual": False, **p}, keep_out
+    if op == SVD_CH50:
+        keep = keep_indices(importance, 0.5)
+        wp, bp = prune_conv(w, b, keep)
+        p = svd_from_conv(wp, bp)
+        return {"kind": "svd", "stride": stride, "residual": False, **p}, keep
+    raise ValueError(f"unknown op {op}")
+
+
+def apply_config(backbone, config, importances, stats=None):
+    """Build a variant's layer list from a backbone and a per-layer op config.
+
+    backbone: list of conv layer dicts {"w","b","stride","residual"} + final
+    {"kind":"head","w","b"}; config: op id per conv layer (config[0] must be
+    IDENTITY -- paper: start from the second conv to preserve input detail);
+    importances: per-layer channel importance arrays (trained ranking);
+    stats: per-conv-layer input-activation RMS (from train.layer_input_stats)
+    used by the fire bias-shift init; defaults to 1.0.
+
+    Returns the variant layer list (same schema as backbone but with
+    fire/svd/skip layers and pruned shapes).
+    """
+    conv_layers = [l for l in backbone if l.get("kind", "conv") == "conv"]
+    head = backbone[-1]
+    assert head["kind"] == "head"
+    assert len(config) == len(conv_layers)
+    assert config[0] == IDENTITY, "first conv layer is never compressed"
+
+    out_layers = []
+    keep = None  # output->original channel map from the previous layer
+    for i, layer in enumerate(conv_layers):
+        w, b, stride = layer["w"], layer["b"], layer["stride"]
+        residual = layer.get("residual", False)
+        imp = importances[i]
+        if keep is not None:
+            w = slice_input_channels(w, keep)
+            if residual:
+                # A residual layer downstream of a prune must stay square:
+                # restrict its outputs to the same surviving subspace.
+                w = w[..., keep]
+                b = b[keep]
+                imp = imp[keep]
+        op = config[i]
+        cin, cout = w.shape[2], w.shape[3]
+        if not op_is_legal(op, cin, cout, stride, residual):
+            op = IDENTITY
+        rms_in = 1.0 if stats is None else float(stats[i])
+        new_layer, keep_out = apply_op_to_layer(op, w, b, stride, residual, imp,
+                                                rms_in=rms_in)
+        if new_layer["kind"] == "skip":
+            # Layer dropped: upstream keep-set flows through untouched.
+            continue
+        out_layers.append(new_layer)
+        if residual:
+            # Output space equals input space; the upstream map persists.
+            pass
+        else:
+            keep = keep_out
+
+    hw = head["w"]
+    if keep is not None:
+        hw = slice_input_channels(hw, keep)
+    out_layers.append({"kind": "head", "w": hw.astype(np.float32),
+                       "b": head["b"].astype(np.float32)})
+    return out_layers

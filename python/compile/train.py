@@ -1,0 +1,364 @@
+"""Ensemble training of the self-evolutionary network (paper §4.2).
+
+Design-time pipeline per task:
+
+  1. train a high-accuracy backbone (standard back-prop, mini-batch SGD/Adam
+     with gradient normalization — §4.2.2 last paragraph);
+  2. refine the channel importance ranking with a first-order Taylor
+     sensitivity probe (the "trainable architecture ranking", §4.2.2-2);
+  3. for every palette variant, apply the function-preserving transformation
+     (operators.py) and fine-tune **only if** accuracy fell below the target
+     threshold (§4.2.2-1), using knowledge distillation from the backbone
+     (§4.2.2-2) so variants never interfere with each other's weights —
+     each variant owns its transformed copy (parameter recycling without
+     catastrophic interference);
+  4. calibrate the channel-wise mutation magnitudes (§4.2.2-3): Gaussian
+     noise whose per-channel magnitude is inversely proportional to trained
+     importance, scaled down until the injected accuracy drop is below eps.
+
+All training runs on the pure-jnp reference path; Pallas only appears on the
+AOT lowering path (see aot.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+from .data import TaskSpec
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (manual Adam — no optax dependency)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _normalize_grads(grads, max_norm=5.0):
+    """Global-norm clip — the paper's gradient normalization for stable
+    ensemble training (§4.2.2, last paragraph)."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+def _ce_loss(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _kd_loss(student_logits, teacher_logits, y, temperature=3.0, alpha=0.7):
+    """Hinton KD: alpha * KL(teacher || student) at T + (1-alpha) * CE."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits / t)
+    logp_s = jax.nn.log_softmax(student_logits / t)
+    kd = -jnp.mean(jnp.sum(p_t * logp_s, axis=1)) * (t * t)
+    return alpha * kd + (1 - alpha) * _ce_loss(student_logits, y)
+
+
+def accuracy(layers, x, y, batch: int = 512) -> float:
+    """Top-1 accuracy over (x, y) on the reference path."""
+    meta = model.layer_meta(layers)
+    params = model.trainable_params(layers)
+
+    @jax.jit
+    def logits_fn(params, xb):
+        return model.forward_params(params, meta, xb)
+
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        xb, yb = x[i:i + batch], y[i:i + batch]
+        pred = np.argmax(np.asarray(logits_fn(params, xb)), axis=1)
+        correct += int((pred == yb).sum())
+    return correct / x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# 1. Backbone training
+# ---------------------------------------------------------------------------
+
+def _masked_forward(params, meta, x, ch_masks, depth_gates):
+    """Forward pass with per-layer output-channel masks and residual-branch
+    gates — the *elastic* training pass that makes the backbone robust to
+    δ3 pruning and δ4 depth-skips (the ensemble-training half of §4.2.2-2:
+    variant ratios are exercised during design-time training, so the
+    transformed variants start close to their final accuracy)."""
+    conv_i = 0
+    for p, m in zip(params, meta):
+        kind = m.get("kind", "conv")
+        if kind == "conv":
+            y = ref_forward_conv(p, m, x)
+            if m.get("residual", False):
+                x = x + depth_gates[conv_i] * y
+            else:
+                x = y * ch_masks[conv_i][None, None, None, :]
+            conv_i += 1
+        else:  # head
+            from .kernels import ref as _ref
+            x = _ref.gap_dense_ref(x, p["w"], p["b"])
+    return x
+
+
+def ref_forward_conv(p, m, x):
+    from .kernels import ref as _ref
+    return _ref.conv2d_ref(x, p["w"], p["b"], stride=m["stride"])
+
+
+def train_backbone(task: TaskSpec, train_set, val_set, *, steps: int = 500,
+                   batch: int = 128, lr: float = 2e-3, seed: int = 0,
+                   elastic: bool = True, verbose: bool = False):
+    """Backbone training: standard CE plus an elastic-variant CE term.
+
+    Every step draws random channel keep-masks for the prunable (non-
+    residual) conv layers and Bernoulli gates for the residual branches,
+    and adds the loss of that sub-network.  This is the design-time half of
+    the paper's ensemble training: δ3/δ4 variants derived later by
+    operators.apply_config start near backbone accuracy instead of
+    collapsing, so runtime compression stays retraining-free.
+    """
+    x_tr, y_tr = train_set
+    layers = model.init_backbone(task, seed=seed)
+    meta = model.layer_meta(layers)
+    params = model.trainable_params(layers)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    widths = [l["w"].shape[-1] for l in layers if l.get("kind", "conv") == "conv"]
+    residual = [l.get("residual", False) for l in layers
+                if l.get("kind", "conv") == "conv"]
+
+    @jax.jit
+    def step(params, opt, xb, yb, ch_masks, depth_gates, elastic_w):
+        def loss_fn(p):
+            loss = _ce_loss(model.forward_params(p, meta, xb), yb)
+            loss = loss + elastic_w * _ce_loss(
+                _masked_forward(p, meta, xb, ch_masks, depth_gates), yb)
+            return loss
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = _normalize_grads(grads)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    warmup = steps // 2  # let the full net converge before elastic phase
+    for it in range(steps):
+        idx = rng.integers(0, x_tr.shape[0], size=batch)
+        use_elastic = elastic and it >= warmup
+        ch_masks, depth_gates = [], []
+        for wdt, res in zip(widths, residual):
+            if res:
+                ch_masks.append(jnp.ones((wdt,), dtype=jnp.float32))
+                gate = 1.0 if (not use_elastic or rng.random() < 0.85) else 0.0
+                depth_gates.append(jnp.float32(gate))
+            else:
+                if use_elastic:
+                    keep = rng.uniform(0.4, 1.0)
+                    mask = (rng.random(wdt) < keep).astype(np.float32)
+                    if mask.sum() < 4:
+                        mask[:4] = 1.0
+                    # inverted-dropout scaling keeps magnitudes stable
+                    ch_masks.append(jnp.asarray(mask / max(mask.mean(), 1e-3)))
+                else:
+                    ch_masks.append(jnp.ones((wdt,), dtype=jnp.float32))
+                depth_gates.append(jnp.float32(1.0))
+        params, opt, loss = step(params, opt, x_tr[idx], y_tr[idx],
+                                 ch_masks, depth_gates,
+                                 jnp.float32(0.5 if use_elastic else 0.0))
+        if verbose and (it + 1) % 100 == 0:
+            print(f"  [backbone {task.name}] step {it+1}/{steps} loss={float(loss):.3f}")
+
+    trained = model.merge_params(layers, params)
+    acc = accuracy(trained, *val_set)
+    return trained, acc
+
+
+def depth_anneal(layers, train_set, *, steps: int = 150, batch: int = 64,
+                 lr: float = 5e-4, gate_keep: float = 0.5, seed: int = 0):
+    """Short post-training phase that makes residual branches droppable.
+
+    Trains with Bernoulli gates on the residual (δ4-skippable) branches only
+    — the depth-elastic half of the paper's ensemble training.  Run after
+    the main backbone converges so the full-network accuracy is preserved.
+    """
+    x_tr, y_tr = train_set
+    meta = model.layer_meta(layers)
+    params = model.trainable_params(layers)
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed + 5)
+    widths = [l["w"].shape[-1] for l in layers if l.get("kind", "conv") == "conv"]
+    residual = [l.get("residual", False) for l in layers
+                if l.get("kind", "conv") == "conv"]
+    ones = [jnp.ones((w,), dtype=jnp.float32) for w in widths]
+
+    @jax.jit
+    def step(params, opt, xb, yb, gates):
+        def loss_fn(p):
+            full = _ce_loss(model.forward_params(p, meta, xb), yb)
+            gated = _ce_loss(_masked_forward(p, meta, xb, ones, gates), yb)
+            return full + gated
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = _normalize_grads(grads)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    for _ in range(steps):
+        idx = rng.integers(0, x_tr.shape[0], size=batch)
+        gates = [jnp.float32(1.0 if not res or rng.random() < gate_keep else 0.0)
+                 for res in residual]
+        params, opt, _ = step(params, opt, x_tr[idx], y_tr[idx], gates)
+    return model.merge_params(layers, params)
+
+
+def layer_input_stats(layers, x, max_samples: int = 256):
+    """RMS of every conv layer's input activations (feeds the fire bias-shift
+    init in operators.fire_from_conv).  Returns one float per conv layer."""
+    from .kernels import ref as _ref
+    stats = []
+    h = jnp.asarray(x[:max_samples])
+    for layer in layers:
+        kind = layer.get("kind", "conv")
+        if kind == "conv":
+            stats.append(float(jnp.sqrt(jnp.mean(h ** 2))))
+            y = _ref.conv2d_ref(h, layer["w"], layer["b"], stride=layer["stride"])
+            h = h + y if layer.get("residual", False) else y
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# 2. Trained channel importance (Taylor sensitivity x L1 prior)
+# ---------------------------------------------------------------------------
+
+def refine_importance(layers, train_set, batch: int = 256):
+    """First-order Taylor importance per conv output channel.
+
+    importance_j = |w_j|_1 * mean|dL/dw_j| — the product ranks channels by
+    how much the loss moves when the channel is removed (the paper's trained
+    ranking that guides which channels δ3 prunes first).
+    """
+    x_tr, y_tr = train_set
+    meta = model.layer_meta(layers)
+    params = model.trainable_params(layers)
+    xb, yb = x_tr[:batch], y_tr[:batch]
+
+    @jax.jit
+    def grads_fn(params):
+        def loss_fn(p):
+            return _ce_loss(model.forward_params(p, meta, xb), yb)
+        return jax.grad(loss_fn)(params)
+
+    grads = grads_fn(params)
+    importances = []
+    for layer, g in zip(layers, grads):
+        if layer.get("kind", "conv") != "conv":
+            continue
+        w = np.asarray(layer["w"])
+        gw = np.asarray(g["w"])
+        l1 = np.abs(w).sum(axis=(0, 1, 2))
+        taylor = np.abs(w * gw).sum(axis=(0, 1, 2))
+        imp = l1 * (1e-8 + taylor)
+        importances.append((imp / (imp.max() + 1e-12)).astype(np.float32))
+    return importances
+
+
+# ---------------------------------------------------------------------------
+# 3. Variant fine-tuning via knowledge distillation
+# ---------------------------------------------------------------------------
+
+def distill_variant(variant_layers, backbone_layers, train_set, val_set, *,
+                    acc_target: float, steps: int = 60, batch: int = 128,
+                    lr: float = 1.5e-3, seed: int = 0, adaptive: bool = True):
+    """Fine-tune a transformed variant against the backbone teacher.
+
+    Skips training entirely when the function-preserving transformation
+    already meets `acc_target` (paper §4.2.2-1: "will only be fine-tuned when
+    its accuracy is lower than that").  With `adaptive`, the step budget
+    scales with the initial accuracy gap.  Returns (layers, val_acc, tuned?).
+    """
+    x_tr, y_tr = train_set
+    val_acc = accuracy(variant_layers, *val_set)
+    if val_acc >= acc_target:
+        return variant_layers, val_acc, False
+    if adaptive:
+        gap = acc_target - val_acc
+        steps = (40 if gap < 0.1 else
+                 120 if gap < 0.35 else
+                 220 if gap < 0.55 else 320)
+
+    s_meta = model.layer_meta(variant_layers)
+    s_params = model.trainable_params(variant_layers)
+    t_meta = model.layer_meta(backbone_layers)
+    t_params = model.trainable_params(backbone_layers)
+    opt = adam_init(s_params)
+    rng = np.random.default_rng(seed + 77)
+
+    @jax.jit
+    def step(s_params, opt, xb, yb):
+        teacher_logits = model.forward_params(t_params, t_meta, xb)
+
+        def loss_fn(p):
+            student_logits = model.forward_params(p, s_meta, xb)
+            return _kd_loss(student_logits, teacher_logits, yb)
+        loss, grads = jax.value_and_grad(loss_fn)(s_params)
+        grads = _normalize_grads(grads)
+        s_params, opt = adam_update(s_params, grads, opt, lr)
+        return s_params, opt, loss
+
+    for _ in range(steps):
+        idx = rng.integers(0, x_tr.shape[0], size=batch)
+        s_params, opt, _ = step(s_params, opt, x_tr[idx], y_tr[idx])
+
+    tuned = model.merge_params(variant_layers, s_params)
+    return tuned, accuracy(tuned, *val_set), True
+
+
+# ---------------------------------------------------------------------------
+# 4. Trainable channel-wise mutation magnitudes
+# ---------------------------------------------------------------------------
+
+def calibrate_mutation(layers, importances, val_set, *, eps: float = 0.01,
+                       sigma0: float = 0.2, seed: int = 0):
+    """Calibrate per-channel Gaussian mutation magnitudes (§4.2.2-3).
+
+    sigma_j = sigma * (1 - importance_j): important channels get less noise.
+    sigma is halved until injecting the noise into every conv layer costs
+    less than `eps` validation accuracy.  Returns (sigmas, sigma_scale).
+    """
+    base_acc = accuracy(layers, *val_set)
+    rng = np.random.default_rng(seed + 31)
+    sigma = sigma0
+    for _ in range(6):
+        noisy = []
+        for layer, imp_i in zip(layers, importances + [None]):
+            if layer.get("kind", "conv") != "conv" or imp_i is None:
+                noisy.append(layer)
+                continue
+            per_ch = sigma * (1.0 - imp_i)
+            noise = rng.normal(size=layer["w"].shape).astype(np.float32)
+            w = layer["w"] * (1.0 + noise * per_ch[None, None, None, :])
+            noisy.append({**layer, "w": w})
+        if base_acc - accuracy(noisy, *val_set) <= eps:
+            break
+        sigma *= 0.5
+    sigmas = [(sigma * (1.0 - imp)).astype(np.float32) for imp in importances]
+    return sigmas, float(sigma)

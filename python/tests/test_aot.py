@@ -1,0 +1,55 @@
+"""AOT pipeline invariants that don't need training: palette construction,
+canonicalization parity with the Rust side, and HLO lowering hygiene."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, operators
+from compile.data import TASKS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_palette_contains_backbone_and_is_deduped():
+    configs = aot.palette_configs()
+    assert [0] * aot.N_LAYERS in configs
+    as_tuples = [tuple(c) for c in configs]
+    assert len(as_tuples) == len(set(as_tuples)), "duplicates in palette"
+    assert len(configs) >= 15
+
+
+def test_palette_configs_are_canonical():
+    for cfg in aot.palette_configs():
+        assert cfg == aot.canonical_config(cfg), cfg
+
+
+def test_canonical_config_fixes_illegal():
+    # depth on non-residual layer 2 (idx 1) must fall back to identity
+    assert aot.canonical_config([0, 6, 0, 0, 0]) == [0, 0, 0, 0, 0]
+    # depth on residual layer 3 (idx 2) survives
+    assert aot.canonical_config([0, 0, 6, 0, 0]) == [0, 0, 6, 0, 0]
+    # ch50 on residual layer -> identity
+    assert aot.canonical_config([0, 0, 4, 0, 4]) == [0, 0, 0, 0, 0]
+
+
+def test_lowered_hlo_contains_full_constants():
+    """Large constants must NOT be elided — xla_extension 0.5.1 parses the
+    elided "{...}" as zeros (the bias-only-logits bug)."""
+    task = TASKS["d3"]
+    bb = model.init_backbone(task)
+    text = aot.lower_to_hlo_text(bb, task.input_shape)
+    assert "{...}" not in text, "elided constants in HLO text"
+    assert "ENTRY" in text
+    assert f"f32[1,{task.input_shape[0]},{task.input_shape[1]},{task.input_shape[2]}]" in text
+
+
+def test_lowered_variant_hlo_parses_shapes():
+    task = TASKS["d3"]
+    bb = model.init_backbone(task)
+    imps = [operators.channel_importance(l["w"]) for l in bb
+            if l.get("kind", "conv") == "conv"]
+    v = operators.apply_config(bb, [0, 2, 6, 4, 0], imps)
+    text = aot.lower_to_hlo_text(v, task.input_shape)
+    assert f"f32[1,{task.num_classes}]" in text  # logits shape present

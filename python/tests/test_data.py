@@ -1,0 +1,46 @@
+"""Synthetic-task generator invariants."""
+
+import numpy as np
+
+from compile.data import TASKS, make_dataset, train_val_split
+
+
+def test_shapes_and_classes():
+    for task in TASKS.values():
+        x, y = make_dataset(task, 64, seed=0)
+        assert x.shape == (64,) + task.input_shape
+        assert y.min() >= 0 and y.max() < task.num_classes
+        assert x.dtype == np.float32
+
+
+def test_deterministic_per_seed():
+    t = TASKS["d3"]
+    x1, y1 = make_dataset(t, 32, seed=5)
+    x2, y2 = make_dataset(t, 32, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_different_seeds_differ():
+    t = TASKS["d3"]
+    x1, _ = make_dataset(t, 32, seed=1)
+    x2, _ = make_dataset(t, 32, seed=2)
+    assert not np.allclose(x1, x2)
+
+
+def test_train_val_share_class_structure():
+    """Class templates must be identical across splits (the bug class the
+    generator once had): a class-mean classifier fit on train must beat
+    chance on val."""
+    t = TASKS["d3"]
+    (xt, yt), (xv, yv) = train_val_split(t, n_train=512, n_val=256)
+    means = np.stack([xt[yt == c].mean(axis=0).ravel() for c in range(t.num_classes)])
+    dists = ((xv.reshape(len(xv), -1)[:, None, :] - means[None]) ** 2).sum(-1)
+    acc = (dists.argmin(1) == yv).mean()
+    assert acc > 2.0 / t.num_classes, f"nearest-mean acc {acc} ~ chance"
+
+
+def test_all_five_tasks_registered():
+    assert set(TASKS) == {"d1", "d2", "d3", "d4", "d5"}
+    assert TASKS["d2"].num_classes == 5
+    assert TASKS["d4"].input_shape == (128, 6, 1)

@@ -1,0 +1,178 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/channel counts; assert_allclose at float32
+tolerance.  This is the core correctness signal for the AOT path — the HLO
+artifacts are lowered from exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def rand(key, shape, scale=0.5):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(5, 18),
+    w=st.integers(5, 18),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    relu=st.booleans(),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, stride, relu):
+    x = rand(1, (2, h, w, cin))
+    wgt = rand(2, (3, 3, cin, cout), 0.2)
+    b = rand(3, (cout,), 0.1)
+    got = kernels.conv2d(x, wgt, b, stride=stride, relu=relu)
+    want = ref.conv2d_ref(x, wgt, b, stride=stride, relu=relu)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_conv2d_odd_sizes_stride2():
+    x = rand(4, (1, 7, 9, 3))
+    wgt = rand(5, (3, 3, 3, 5), 0.2)
+    b = jnp.zeros((5,))
+    got = kernels.conv2d(x, wgt, b, stride=2)
+    want = ref.conv2d_ref(x, wgt, b, stride=2)
+    assert got.shape == (1, 4, 5, 5)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# pointwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(2, 16),
+    cin=st.integers(1, 16),
+    cout=st.integers(1, 16),
+    relu=st.booleans(),
+)
+def test_pointwise_matches_ref(h, cin, cout, relu):
+    x = rand(11, (2, h, h, cin))
+    wgt = rand(12, (cin, cout), 0.3)
+    b = rand(13, (cout,), 0.1)
+    got = kernels.pointwise(x, wgt, b, relu=relu)
+    want = ref.pointwise_ref(x, wgt, b, relu=relu)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# depthwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(5, 16),
+    c=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+)
+def test_depthwise_matches_ref(h, c, stride):
+    x = rand(21, (2, h, h, c))
+    wgt = rand(22, (3, 3, c), 0.3)
+    b = rand(23, (c,), 0.1)
+    got = kernels.depthwise(x, wgt, b, stride=stride)
+    want = ref.depthwise_ref(x, wgt, b, stride=stride)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# fire (fused)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(
+    h=st.integers(6, 14),
+    cin=st.integers(2, 10),
+    s=st.integers(2, 8),
+    e1=st.integers(1, 6),
+    e3=st.integers(1, 6),
+    stride=st.sampled_from([1, 2]),
+)
+def test_fire_matches_ref(h, cin, s, e1, e3, stride):
+    x = rand(31, (2, h, h, cin))
+    ws = rand(32, (cin, s), 0.3)
+    bs = rand(33, (s,), 0.1)
+    fs = jnp.zeros((s,))  # classic ReLU squeeze
+    we1 = rand(34, (s, e1), 0.3)
+    be1 = rand(35, (e1,), 0.1)
+    we3 = rand(36, (3, 3, s, e3), 0.3)
+    be3 = rand(37, (e3,), 0.1)
+    got = kernels.fire(x, ws, bs, fs, we1, be1, we3, be3, stride=stride)
+    want = ref.fire_ref(x, ws, bs, fs, we1, be1, we3, be3, stride=stride)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_fire_floored_squeeze():
+    """The function-preserving transform uses negative floors."""
+    x = jnp.maximum(rand(41, (1, 8, 8, 4)), 0)
+    ws = rand(42, (4, 4), 0.4)
+    bs = jnp.zeros((4,))
+    fs = -2.0 * jnp.ones((4,))  # floor well below typical pre-activations
+    we1 = rand(43, (4, 2), 0.3)
+    be1 = jnp.zeros((2,))
+    we3 = rand(44, (3, 3, 4, 3), 0.3)
+    be3 = jnp.zeros((3,))
+    got = kernels.fire(x, ws, bs, fs, we1, be1, we3, be3)
+    want = ref.fire_ref(x, ws, bs, fs, we1, be1, we3, be3)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# head
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(1, 12), c=st.integers(1, 32), classes=st.integers(2, 12))
+def test_head_matches_ref(h, c, classes):
+    x = rand(51, (3, h, h, c))
+    wgt = rand(52, (c, classes), 0.3)
+    b = rand(53, (classes,), 0.1)
+    got = kernels.gap_dense(x, wgt, b)
+    want = ref.gap_dense_ref(x, wgt, b)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# kernels inside jit (the lowering context used by aot.py)
+# ---------------------------------------------------------------------------
+
+def test_kernels_lower_under_jit():
+    x = rand(61, (1, 8, 8, 3))
+    wgt = rand(62, (3, 3, 3, 4), 0.2)
+    b = jnp.zeros((4,))
+
+    @jax.jit
+    def f(x):
+        return kernels.conv2d(x, wgt, b, stride=2)
+
+    np.testing.assert_allclose(f(x), ref.conv2d_ref(x, wgt, b, stride=2), **TOL)
+
+
+def test_conv2d_batch_independence():
+    """Per-sample results identical to the batched run (grid over N)."""
+    x = rand(71, (3, 8, 8, 2))
+    wgt = rand(72, (3, 3, 2, 4), 0.2)
+    b = rand(73, (4,), 0.1)
+    full = kernels.conv2d(x, wgt, b)
+    for i in range(3):
+        one = kernels.conv2d(x[i:i + 1], wgt, b)
+        np.testing.assert_allclose(one[0], full[i], **TOL)

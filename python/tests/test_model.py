@@ -1,0 +1,81 @@
+"""L2 model invariants: forward shapes, pallas/ref agreement on full
+variants, and the cost accounting the Rust side mirrors."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, operators
+from compile.data import TASKS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def backbone():
+    return model.init_backbone(TASKS["d3"])
+
+
+def test_forward_shapes_all_tasks():
+    for task in TASKS.values():
+        bb = model.init_backbone(task)
+        x = jnp.zeros((2,) + task.input_shape)
+        out = model.forward(bb, x)
+        assert out.shape == (2, task.num_classes), task.name
+
+
+def test_pallas_and_ref_paths_agree_on_backbone(backbone):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 32, 32, 1)).astype(np.float32))
+    a = model.forward(backbone, x, use_pallas=False)
+    b = model.forward(backbone, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_and_ref_paths_agree_on_variant(backbone):
+    imps = [operators.channel_importance(l["w"]) for l in backbone
+            if l.get("kind", "conv") == "conv"]
+    v = operators.apply_config(backbone, [0, 1, 6, 8, 6], imps)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 32, 32, 1)).astype(np.float32))
+    a = model.forward(v, x, use_pallas=False)
+    b = model.forward(v, x, use_pallas=True)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_residual_layers_are_square_stride1(backbone):
+    convs = [l for l in backbone if l.get("kind", "conv") == "conv"]
+    for l in convs:
+        if l.get("residual"):
+            assert l["w"].shape[2] == l["w"].shape[3]
+            assert l["stride"] == 1
+
+
+def test_layer_costs_hand_check(backbone):
+    per_layer, tot = model.layer_costs(backbone, (32, 32, 1))
+    # L1: 32*32*9*1*16
+    assert per_layer[0]["macs"] == 32 * 32 * 9 * 1 * 16
+    assert per_layer[0]["params"] == 9 * 16 + 16
+    # head: 8*8*64 GAP + 64*9 dense
+    assert per_layer[-1]["macs"] == 8 * 8 * 64 + 64 * 9
+    assert tot["macs"] == sum(p["macs"] for p in per_layer)
+
+
+def test_costs_drop_under_compression(backbone):
+    imps = [operators.channel_importance(l["w"]) for l in backbone
+            if l.get("kind", "conv") == "conv"]
+    _, bb = model.layer_costs(backbone, (32, 32, 1))
+    for cfg in ([0, 2, 2, 2, 2], [0, 4, 0, 4, 0], [0, 0, 6, 0, 6]):
+        v = operators.apply_config(backbone, cfg, imps)
+        _, tv = model.layer_costs(v, (32, 32, 1))
+        assert tv["params"] < bb["params"], cfg
+        assert tv["macs"] < bb["macs"], cfg
+
+
+def test_trainable_params_round_trip(backbone):
+    params = model.trainable_params(backbone)
+    merged = model.merge_params(backbone, params)
+    for a, b in zip(backbone, merged):
+        np.testing.assert_array_equal(a["w"], b["w"])
+        assert a.get("stride") == b.get("stride")

@@ -1,0 +1,162 @@
+"""Operator-transformation invariants: function preservation, shape
+propagation, legality — the §4.2.2-1 guarantees the runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model, operators
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_conv(key, cin, cout):
+    rng = np.random.default_rng(key)
+    w = (rng.standard_normal((3, 3, cin, cout)) * 0.2).astype(np.float32)
+    b = (rng.standard_normal(cout) * 0.1).astype(np.float32)
+    return w, b
+
+
+def relu_input(key, n, h, c):
+    rng = np.random.default_rng(key)
+    return jnp.maximum(jnp.asarray(rng.standard_normal((n, h, h, c)).astype(np.float32)), 0)
+
+
+# ---------------------------------------------------------------------------
+# δ2 SVD: exact function preservation at full rank, bounded error otherwise
+# ---------------------------------------------------------------------------
+
+def test_svd_full_rank_exact():
+    w, b = make_conv(0, 8, 8)   # rank ratio 0.5 -> r=4 < 8; force full rank
+    p = operators.svd_from_conv(w, b, rank_ratio=1.0)
+    x = relu_input(1, 2, 10, 8)
+    y_ref = ref.conv2d_ref(x, w, b)
+    y_svd = ref.pointwise_ref(
+        ref.conv2d_ref(x, p["w1"], jnp.zeros(p["w1"].shape[-1]), relu=False),
+        p["w2"], p["b2"])
+    np.testing.assert_allclose(y_svd, y_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(cin=st.integers(4, 12), cout=st.sampled_from([8, 16, 32]))
+def test_svd_truncation_error_bounded(cin, cout):
+    w, b = make_conv(2, cin, cout)
+    p = operators.svd_from_conv(w, b)  # rank 0.5
+    x = relu_input(3, 2, 8, cin)
+    y_ref = ref.conv2d_ref(x, w, b)
+    y_svd = ref.pointwise_ref(
+        ref.conv2d_ref(x, p["w1"], jnp.zeros(p["w1"].shape[-1]), relu=False),
+        p["w2"], p["b2"])
+    rel = float(jnp.mean((y_svd - y_ref) ** 2) / (jnp.mean(y_ref ** 2) + 1e-9))
+    assert rel < 0.8, f"rank-truncation error {rel} out of control"
+
+
+# ---------------------------------------------------------------------------
+# δ1 fire: floored-ReLU init is near-exact at full squeeze rank
+# ---------------------------------------------------------------------------
+
+def test_fire_full_rank_3x3_branch_near_exact():
+    w, b = make_conv(4, 16, 32)
+    x = relu_input(5, 2, 12, 16)
+    rms = float(jnp.sqrt(jnp.mean(x ** 2)))
+    p, perm = operators.fire_from_conv(w, b, rms_in=rms, squeeze_ratio=1.0)
+    y_ref = ref.conv2d_ref(x, w[..., perm], b[perm])
+    y = ref.fire_ref(x, p["ws"], p["bs"], p["fs"], p["we1"], p["be1"],
+                     p["we3"], p["be3"])
+    e1 = p["we1"].shape[1]
+    # 3x3 branch (beyond e1) is exact at full rank; centre-tap branch is the
+    # only approximation.
+    err3 = float(jnp.mean((y[..., e1:] - y_ref[..., e1:]) ** 2)
+                 / (jnp.mean(y_ref[..., e1:] ** 2) + 1e-9))
+    assert err3 < 1e-3, f"3x3 branch err {err3}"
+
+
+def test_fire_permutation_is_valid():
+    w, b = make_conv(6, 8, 24)
+    p, perm = operators.fire_from_conv(w, b, rms_in=1.0)
+    assert sorted(perm.tolist()) == list(range(24))
+    assert p["we1"].shape[1] + p["we3"].shape[3] == 24
+
+
+def test_fire_no_permute_on_residual():
+    w, b = make_conv(7, 16, 16)
+    _, perm = operators.fire_from_conv(w, b, rms_in=1.0, allow_permute=False)
+    assert perm is None
+
+
+# ---------------------------------------------------------------------------
+# δ3 pruning
+# ---------------------------------------------------------------------------
+
+def test_keep_indices_monotone_in_ratio():
+    imp = np.linspace(1.0, 0.0, 32)
+    k25 = operators.keep_indices(imp, 0.25)
+    k50 = operators.keep_indices(imp, 0.50)
+    k75 = operators.keep_indices(imp, 0.75)
+    assert len(k25) > len(k50) > len(k75) >= 4
+    # higher-ratio keep sets are nested in lower-ratio ones
+    assert set(k75).issubset(set(k50)) and set(k50).issubset(set(k25))
+
+
+def test_keep_indices_picks_most_important():
+    imp = np.array([0.1, 0.9, 0.2, 0.8, 0.3, 0.7, 0.4, 0.6])
+    keep = operators.keep_indices(imp, 0.5)
+    assert set(keep) == {1, 3, 5, 7}
+
+
+# ---------------------------------------------------------------------------
+# apply_config invariants (shape walk mirrored by costmodel.rs)
+# ---------------------------------------------------------------------------
+
+def _backbone(task_name="d3"):
+    from compile.data import TASKS
+    return model.init_backbone(TASKS[task_name])
+
+
+@settings(max_examples=15, deadline=None)
+@given(cfg=st.lists(st.integers(0, operators.NUM_OPS - 1), min_size=5, max_size=5))
+def test_apply_config_always_runs(cfg):
+    cfg[0] = 0
+    bb = _backbone()
+    imps = [operators.channel_importance(l["w"]) for l in bb
+            if l.get("kind", "conv") == "conv"]
+    v = operators.apply_config(bb, cfg, imps)
+    x = jnp.zeros((1, 32, 32, 1))
+    out = model.forward(v, x)
+    assert out.shape == (1, 9)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_depth_skip_shortens_network():
+    bb = _backbone()
+    imps = [operators.channel_importance(l["w"]) for l in bb
+            if l.get("kind", "conv") == "conv"]
+    v = operators.apply_config(bb, [0, 0, 6, 0, 6], imps)
+    kinds = [l.get("kind") for l in v]
+    assert kinds.count("conv") == 3  # layers 3 and 5 dropped
+    assert kinds[-1] == "head"
+
+
+def test_prune_propagates_to_head():
+    bb = _backbone()
+    imps = [operators.channel_importance(l["w"]) for l in bb
+            if l.get("kind", "conv") == "conv"]
+    # prune the last conv layer's outputs 50% -> head input halves... but L5
+    # is residual so pruning applies at L4 and L5 stays square in kept dims.
+    v = operators.apply_config(bb, [0, 0, 0, 4, 0], imps)
+    head = v[-1]
+    assert head["w"].shape[0] == 32  # 64 * 0.5
+
+
+def test_illegal_ops_fall_back_to_identity():
+    bb = _backbone()
+    imps = [operators.channel_importance(l["w"]) for l in bb
+            if l.get("kind", "conv") == "conv"]
+    # depth on non-residual L2, ch50 on residual L3 -> both identity
+    v = operators.apply_config(bb, [0, 6, 4, 0, 0], imps)
+    costs_v = model.layer_costs(v, (32, 32, 1))[1]
+    costs_bb = model.layer_costs(bb, (32, 32, 1))[1]
+    assert costs_v == costs_bb

@@ -1,0 +1,53 @@
+//! Bench: classic-binary vs progressive-shortest candidate encoding
+//! (Fig. 10(c) — the paper claims one order of magnitude search-cost gap).
+
+include!("harness.rs");
+
+use adaspring::coordinator::encoding::{decode_binary, encode_binary, ProgressiveCode};
+use adaspring::coordinator::operators::{Op, ALL_OPS};
+use adaspring::coordinator::CompressionConfig;
+
+fn main() {
+    let cfg = CompressionConfig::from_ids(&[0, 1, 6, 4, 8]).unwrap();
+
+    bench("encode_binary", 1000, 100_000, || {
+        std::hint::black_box(encode_binary(&cfg));
+    });
+    let bits = encode_binary(&cfg);
+    bench("decode_binary", 1000, 100_000, || {
+        std::hint::black_box(decode_binary(&bits, 5).unwrap());
+    });
+    bench("progressive_extend_chain", 1000, 100_000, || {
+        let code = ProgressiveCode::new()
+            .extend(Op::Fire)
+            .extend(Op::Depth)
+            .extend(Op::Ch50)
+            .extend(Op::SvdCh50);
+        std::hint::black_box(code.to_config(5).unwrap());
+    });
+
+    // Space enumeration cost: full binary space vs progressive beam.
+    bench("enumerate_binary_space_9ops_4layers", 2, 20, || {
+        let mut count = 0usize;
+        let mut stack = vec![0u8; 5];
+        loop {
+            count += 1;
+            let mut i = 1;
+            loop {
+                if i >= 5 {
+                    break;
+                }
+                if (stack[i] as usize) + 1 < ALL_OPS.len() {
+                    stack[i] += 1;
+                    break;
+                }
+                stack[i] = 0;
+                i += 1;
+            }
+            if i >= 5 {
+                break;
+            }
+        }
+        std::hint::black_box(count);
+    });
+}

@@ -1,0 +1,29 @@
+// Minimal benchmark harness (criterion is unavailable offline).
+// Provides warmup + timed iterations with mean/p50/p99 reporting, compiled
+// into each `harness = false` bench via `include!`.
+
+use std::time::Instant;
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones and
+/// print a stats line.  Returns the mean microseconds.
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((q * (samples.len() - 1) as f64).round() as usize).min(samples.len() - 1)];
+    println!(
+        "bench {name:<42} mean {mean:>10.2} µs   p50 {:>10.2} µs   p99 {:>10.2} µs   ({iters} iters)",
+        p(0.5),
+        p(0.99)
+    );
+    mean
+}

@@ -1,0 +1,72 @@
+//! Bench: PJRT artifact load/compile (one-off) and per-inference execution
+//! latency of the deployed variant — the L3 hot path after evolution.
+
+include!("harness.rs");
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::platform::Platform;
+use adaspring::util::rng::Rng;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts/manifest.json") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (no artifacts): {e}");
+            return;
+        }
+    };
+    let platform = Platform::raspberry_pi_4b();
+    let task_name = if manifest.tasks.contains_key("d3") {
+        "d3".to_string()
+    } else {
+        let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
+        names.sort();
+        names[0].clone()
+    };
+    let mut engine = AdaSpring::new(&manifest, &task_name, &platform, true).unwrap();
+    let task = engine.task().clone();
+    let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
+    let evo = engine.evolve(&c).unwrap();
+    println!(
+        "deployed v{} ({}); first evolution incl. compile: {:.2} ms",
+        evo.variant_id,
+        evo.search.evaluation.config.describe(),
+        evo.evolution_us as f64 / 1e3
+    );
+
+    let n: usize = task.input_shape.iter().product();
+    let mut rng = Rng::new(3);
+    let input: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    bench(&format!("pjrt_infer_batch1/{task_name}"), 10, 100, || {
+        let (logits, _) = engine.infer(&input).unwrap();
+        std::hint::black_box(logits.len());
+    });
+
+    // Warm re-evolution (executable cached): the paper's swap latency.
+    bench(&format!("evolve_warm/{task_name}"), 5, 50, || {
+        let e = engine.evolve(&c).unwrap();
+        std::hint::black_box(e.variant_id);
+    });
+
+    // Roofline comparison: the same backbone lowered via the pure-jnp path
+    // (native XLA convolutions) instead of interpret-mode Pallas.
+    let ref_hlo = manifest.root.join(format!("{task_name}/v0_ref.hlo.txt"));
+    if ref_hlo.exists() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let proto = xla::HloModuleProto::from_text_file(ref_hlo.to_str().unwrap()).unwrap();
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).unwrap();
+        let dims: Vec<i64> = std::iter::once(1i64).chain(task.input_shape.iter().map(|&d| d as i64)).collect();
+        let lit = xla::Literal::vec1(&input).reshape(&dims).unwrap();
+        bench(&format!("pjrt_infer_refpath/{task_name}"), 10, 100, || {
+            let r = exe.execute::<xla::Literal>(std::slice::from_ref(&lit)).unwrap()[0][0]
+                .to_literal_sync()
+                .unwrap();
+            std::hint::black_box(r.to_tuple1().unwrap().to_vec::<f32>().unwrap().len());
+        });
+    } else {
+        eprintln!("no v0_ref.hlo.txt — rebuild artifacts for the roofline bench");
+    }
+}

@@ -1,0 +1,45 @@
+//! Bench: Runtime3C end-to-end search latency — the paper's headline
+//! "3.8 ms search cost / ≤6.2 ms evolution latency" (Table 2 + §6.6).
+//! Also times the Greedy baseline (paper: 25 ms) for the same context.
+
+include!("harness.rs");
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::search::{GreedyOptimizer, Mutator, Runtime3C};
+use adaspring::coordinator::Manifest;
+use adaspring::platform::Platform;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts/manifest.json") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping (no artifacts): {e}");
+            return;
+        }
+    };
+    let platform = Platform::raspberry_pi_4b();
+    for task_name in ["d1", "d3"] {
+        if !manifest.tasks.contains_key(task_name) {
+            continue;
+        }
+        let engine = AdaSpring::new(&manifest, task_name, &platform, false).unwrap();
+        let task = engine.task();
+        let c = Constraints::from_battery(0.62, task.acc_loss_threshold, task.latency_budget_ms, (1.6 * 1024.0 * 1024.0) as u64);
+        let r3c = Runtime3C::new(Mutator::from_task(task));
+        let mean_us = bench(&format!("runtime3c_search/{task_name}"), 20, 200, || {
+            let r = r3c.search(&engine.evaluator, &c);
+            std::hint::black_box(r.candidates_evaluated);
+        });
+        println!(
+            "  -> {} search latency {:.3} ms (paper target ≤6.2 ms, Table-2 value 3.8 ms)",
+            task_name,
+            mean_us / 1e3
+        );
+        let greedy = GreedyOptimizer::new();
+        bench(&format!("greedy_search/{task_name}"), 20, 200, || {
+            let r = greedy.search(&engine.evaluator, &c);
+            std::hint::black_box(r.candidates_evaluated);
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Regenerates paper Fig. 8: overall performance of AdaSpring on the five
+//! tasks (Pi 4B), mean ± std over five battery moments
+//! {85, 75, 62, 52, 38}% with (2 − σ) MB cache noise.
+//!
+//! Emits the normalized (log) series A, E, T, C, Sp, Sa per task.
+//!
+//! Usage: cargo run --release --bin bench_fig8 [-- --csv]
+
+use anyhow::Result;
+
+use adaspring::context::CacheContention;
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::metrics::{f2, Series, Table};
+use adaspring::platform::Platform;
+use adaspring::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    let platform = Platform::raspberry_pi_4b();
+    let moments = [0.85, 0.75, 0.62, 0.52, 0.38];
+    println!("# Fig. 8 — AdaSpring across tasks on {} (log-normalized)\n", platform.name);
+
+    let mut out = Table::new(&[
+        "Task", "A (%)", "log E", "log T", "log C", "log Sp", "log Sa", "acc loss (pp)",
+    ]);
+    let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
+    names.sort();
+    for name in &names {
+        let mut engine = AdaSpring::new(&manifest, name, &platform, false)?;
+        let task = engine.task().clone();
+        let mut cache = CacheContention::new(platform.l2_cache_bytes, 0.25, 17);
+        let mut acc = Series::default();
+        let (mut e, mut t, mut c_, mut sp, mut sa) =
+            (Series::default(), Series::default(), Series::default(), Series::default(), Series::default());
+        for &battery in &moments {
+            cache.advance(3600.0);
+            let cons = Constraints::from_battery(
+                battery,
+                task.acc_loss_threshold,
+                task.latency_budget_ms,
+                cache.available_bytes(),
+            );
+            let evo = engine.evolve(&cons)?;
+            let ev = &evo.search.evaluation;
+            acc.push(evo.deployed_accuracy);
+            e.push(ev.efficiency.ln());
+            t.push(ev.latency_ms.ln());
+            c_.push((ev.costs.macs as f64).ln());
+            sp.push((ev.costs.params as f64).ln());
+            sa.push((ev.costs.acts as f64).ln());
+        }
+        let fmt = |s: &Series| format!("{} ± {}", f2(s.mean()), f2(s.std()));
+        out.row(vec![
+            task.title.clone(),
+            format!("{:.1} ± {:.1}", acc.mean() * 100.0, acc.std() * 100.0),
+            fmt(&e),
+            fmt(&t),
+            fmt(&c_),
+            fmt(&sp),
+            fmt(&sa),
+            format!("{:.1}", (task.backbone.accuracy - acc.mean()) * 100.0),
+        ]);
+    }
+    if args.flag("csv") {
+        println!("{}", out.to_csv());
+    } else {
+        println!("{}", out.to_markdown());
+    }
+    Ok(())
+}

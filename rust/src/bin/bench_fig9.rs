@@ -1,0 +1,67 @@
+//! Regenerates paper Fig. 9 + Table 4: AdaSpring for the sound-recognition
+//! task (d3) across the three platforms, at the four dynamic moments of
+//! Table 4 (9:00 → 12:00: battery {86,78,72,61}%, cache {2,1.6,1.5,1.7} MB,
+//! inference demand {2,1,2,1}).
+//!
+//! Usage: cargo run --release --bin bench_fig9 [-- --csv]
+
+use anyhow::Result;
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::metrics::{f1, f2, Table};
+use adaspring::platform::Platform;
+use adaspring::util::cli::Args;
+
+const MOMENTS: [(&str, f64, f64, u32); 4] = [
+    ("9:00am", 0.86, 2.0, 2),
+    ("10:00am", 0.78, 1.6, 1),
+    ("11:00am", 0.72, 1.5, 2),
+    ("12:00noon", 0.61, 1.7, 1),
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    let task_name = args.get_or("task", "d3");
+    println!("# Fig. 9 / Table 4 — {} across platforms under dynamic context\n", task_name);
+
+    let mut out = Table::new(&[
+        "Platform", "Time", "Battery", "Cache MB", "Config", "A (%)", "T (ms)",
+        "C/Sp", "C/Sa", "En (mJ)", "search µs",
+    ]);
+    for platform in Platform::all() {
+        let mut engine = AdaSpring::new(&manifest, task_name, &platform, false)?;
+        let task = engine.task().clone();
+        for (label, battery, cache_mb, _infer) in MOMENTS {
+            let c = Constraints::from_battery(
+                battery,
+                task.acc_loss_threshold,
+                task.latency_budget_ms,
+                (cache_mb * 1024.0 * 1024.0) as u64,
+            );
+            let evo = engine.evolve(&c)?;
+            let e = &evo.search.evaluation;
+            out.row(vec![
+                platform.name.to_string(),
+                label.to_string(),
+                format!("{:.0}%", battery * 100.0),
+                f1(cache_mb),
+                e.config.describe(),
+                format!("{:.1}", evo.deployed_accuracy * 100.0),
+                f2(e.latency_ms),
+                f1(e.costs.c_sp()),
+                f1(e.costs.c_sa()),
+                f2(e.energy_mj),
+                evo.search.search_time_us.to_string(),
+            ]);
+        }
+    }
+    if args.flag("csv") {
+        println!("{}", out.to_csv());
+    } else {
+        println!("{}", out.to_markdown());
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Regenerates paper Table 3: AdaSpring's specialized DNN per task,
+//! compared against the MobileNet(-style depthwise-separable) compressed
+//! network — ratios for A-loss, E, T, C, Sp, Sa.
+//!
+//! Usage: cargo run --release --bin bench_table3
+
+use anyhow::Result;
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::{CompressionConfig, Manifest, Op};
+use adaspring::metrics::{f1, Table};
+use adaspring::platform::Platform;
+use adaspring::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    let platform = Platform::raspberry_pi_4b();
+    println!("# Table 3 — AdaSpring vs MobileNet-style depthwise compression, per task\n");
+
+    let mut out = Table::new(&[
+        "Task", "AdaSpring config", "A loss", "E", "T", "C", "Sp", "Sa",
+    ]);
+    let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
+    names.sort();
+    for name in &names {
+        let mut engine = AdaSpring::new(&manifest, name, &platform, false)?;
+        let task = engine.task().clone();
+        let c = Constraints::from_battery(
+            0.7,
+            task.acc_loss_threshold,
+            task.latency_budget_ms,
+            2 << 20,
+        );
+        let evo = engine.evolve(&c)?;
+        let ours = &evo.search.evaluation;
+
+        // MobileNet anchor: depthwise-separable ≈ uniform SVD-factorized
+        // conv (the closest operator in our space, as in Table 2).
+        let n = task.n_layers();
+        let mut mb = CompressionConfig::identity(n);
+        for l in 1..n {
+            mb.set(l, Op::Svd);
+        }
+        let mb = mb.canonicalize(engine.evaluator.cost_model().backbone());
+        let mbe = engine.evaluator.evaluate(&mb, &c);
+
+        let ours_acc = task.backbone.accuracy - ours.acc_loss;
+        let mb_acc = task.backbone.accuracy - mbe.acc_loss;
+        out.row(vec![
+            task.title.clone(),
+            ours.config.describe(),
+            format!("{:+.1}%", (mb_acc - ours_acc) * 100.0),
+            format!("{}x", f1(ours.efficiency / mbe.efficiency)),
+            format!("{}x", f1(mbe.latency_ms / ours.latency_ms)),
+            format!("{}x", f1(mbe.costs.macs as f64 / ours.costs.macs as f64)),
+            format!("{}x", f1(mbe.costs.params as f64 / ours.costs.params as f64)),
+            format!("{}x", f1(mbe.costs.acts as f64 / ours.costs.acts as f64)),
+        ]);
+    }
+    println!("{}", out.to_markdown());
+    println!("ratios >1x mean AdaSpring better (except A loss: negative = AdaSpring more accurate).");
+    Ok(())
+}

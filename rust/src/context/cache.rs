@@ -1,0 +1,110 @@
+//! L2-cache contention simulator (paper §6.3/§6.6): "we simulate the
+//! unpredictable storage resource contention by other software using the
+//! randomization noise σ injection to Cache's available capacity, i.e.,
+//! (2 − σ) MB", with σ re-randomized periodically (hourly in the case
+//! study).
+
+use crate::util::rng::Rng;
+
+/// Mean-reverting noisy contention on the L2 cache.
+#[derive(Debug, Clone)]
+pub struct CacheContention {
+    total_bytes: u64,
+    /// Maximum contention fraction (σ_max / total).
+    max_contention: f64,
+    /// Seconds between σ re-randomizations (paper: hourly).
+    pub update_period_s: f64,
+    rng: Rng,
+    sigma_fraction: f64,
+    since_update_s: f64,
+}
+
+impl CacheContention {
+    /// `max_contention` ∈ [0,1): largest fraction other apps may occupy.
+    pub fn new(total_bytes: u64, max_contention: f64, seed: u64) -> CacheContention {
+        let mut rng = Rng::new(seed);
+        let sigma = rng.range(0.0, max_contention.max(0.0));
+        CacheContention {
+            total_bytes,
+            max_contention: max_contention.clamp(0.0, 0.95),
+            update_period_s: 3600.0,
+            rng,
+            sigma_fraction: sigma,
+            since_update_s: 0.0,
+        }
+    }
+
+    /// Advance simulated time; σ re-randomizes each period (|Gaussian|
+    /// truncated to the contention range, per the paper's "randomization
+    /// noise (e.g. Gaussian noise) σ injection").
+    pub fn advance(&mut self, dt: f64) {
+        self.since_update_s += dt;
+        while self.since_update_s >= self.update_period_s {
+            self.since_update_s -= self.update_period_s;
+            let g = self.rng.normal().abs() * 0.5 * self.max_contention;
+            self.sigma_fraction = g.min(self.max_contention);
+        }
+    }
+
+    /// Bytes currently available for DNN parameters: (total − σ).
+    pub fn available_bytes(&self) -> u64 {
+        ((self.total_bytes as f64) * (1.0 - self.sigma_fraction)) as u64
+    }
+
+    /// Current contention fraction σ/total.
+    pub fn sigma_fraction(&self) -> f64 {
+        self.sigma_fraction
+    }
+
+    /// Force a specific availability (replaying Table-4 moments).
+    pub fn set_available_bytes(&mut self, bytes: u64) {
+        let frac = 1.0 - bytes as f64 / self.total_bytes as f64;
+        self.sigma_fraction = frac.clamp(0.0, 0.95);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_within_bounds() {
+        let mut c = CacheContention::new(2 << 20, 0.3, 9);
+        for _ in 0..100 {
+            c.advance(3600.0);
+            let a = c.available_bytes();
+            assert!(a >= ((2 << 20) as f64 * 0.69) as u64, "a={a}");
+            assert!(a <= 2 << 20);
+        }
+    }
+
+    #[test]
+    fn sigma_changes_across_periods() {
+        let mut c = CacheContention::new(2 << 20, 0.3, 10);
+        let mut values = std::collections::HashSet::new();
+        for _ in 0..10 {
+            c.advance(3600.0);
+            values.insert(c.available_bytes());
+        }
+        assert!(values.len() > 3, "contention should vary: {values:?}");
+    }
+
+    #[test]
+    fn set_available_replays_table4() {
+        let mut c = CacheContention::new(2 << 20, 0.3, 1);
+        c.set_available_bytes((1.6 * 1024.0 * 1024.0) as u64);
+        let a = c.available_bytes() as f64 / (1024.0 * 1024.0);
+        assert!((a - 1.6).abs() < 0.01, "a={a}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = CacheContention::new(2 << 20, 0.3, 5);
+        let mut b = CacheContention::new(2 << 20, 0.3, 5);
+        for _ in 0..5 {
+            a.advance(3600.0);
+            b.advance(3600.0);
+            assert_eq!(a.available_bytes(), b.available_bytes());
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Ambient-event arrival traces (paper Fig. 2 / §6.6): the sound-event
+//! frequency of the environment drives how often the DNN runs, which in
+//! turn drives energy drain.  The case study plays emergency and social
+//! sound events over a 9:00–17:00 day.
+
+use crate::util::rng::Rng;
+
+/// Kinds of acoustic events in the UbiEar-style case study (§6.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Fire alarm, smoke alarm, kettle whistle, ...
+    Emergency,
+    /// Doorbell, door knocking, crying, ...
+    Social,
+}
+
+/// One sensed event requiring a DNN inference.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Seconds since trace start.
+    pub t_seconds: f64,
+    pub kind: EventKind,
+}
+
+/// Piecewise-constant diurnal intensity profile (events/minute).
+#[derive(Debug, Clone)]
+pub struct DayProfile {
+    /// (start_hour_offset, rate_per_min) segments over the 8-hour day.
+    pub segments: Vec<(f64, f64)>,
+}
+
+impl DayProfile {
+    /// The §6.6 shape: quiet morning, busy midday, moderate afternoon.
+    pub fn standard() -> DayProfile {
+        DayProfile {
+            segments: vec![
+                (0.0, 0.5),  // 9:00 quiet
+                (1.5, 2.0),  // 10:30 pickup
+                (3.0, 4.0),  // 12:00 busy lunchtime
+                (5.0, 1.5),  // 14:00 settle
+                (7.0, 2.5),  // 16:00 end-of-day activity
+            ],
+        }
+    }
+
+    /// Rate (events/min) at hour-offset `h` into the day.
+    pub fn rate_at_hours(&self, h: f64) -> f64 {
+        let mut rate = self.segments.first().map(|s| s.1).unwrap_or(1.0);
+        for &(start, r) in &self.segments {
+            if h >= start {
+                rate = r;
+            }
+        }
+        rate
+    }
+}
+
+/// Poisson event trace sampled from a day profile.
+#[derive(Debug, Clone)]
+pub struct EventTrace {
+    profile: DayProfile,
+    seed: u64,
+}
+
+impl EventTrace {
+    pub fn day_profile(seed: u64) -> EventTrace {
+        EventTrace { profile: DayProfile::standard(), seed }
+    }
+
+    pub fn with_profile(profile: DayProfile, seed: u64) -> EventTrace {
+        EventTrace { profile, seed }
+    }
+
+    /// Instantaneous rate (events/min) at `t` seconds into the trace.
+    pub fn rate_at(&self, t_seconds: f64) -> f64 {
+        self.profile.rate_at_hours(t_seconds / 3600.0)
+    }
+
+    /// Materialize all events over `duration_s` seconds (thinned Poisson).
+    pub fn sample(&self, duration_s: f64) -> Vec<Event> {
+        let mut rng = Rng::new(self.seed);
+        let max_rate = self
+            .profile
+            .segments
+            .iter()
+            .map(|s| s.1)
+            .fold(0.0f64, f64::max)
+            .max(1e-6);
+        let mut events = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            // Exponential inter-arrival at the max rate, then thin.
+            let u = rng.f64().max(1e-12);
+            t += -u.ln() / (max_rate / 60.0);
+            if t >= duration_s {
+                break;
+            }
+            if rng.f64() < self.rate_at(t) / max_rate {
+                let kind = if rng.chance(0.25) {
+                    EventKind::Emergency
+                } else {
+                    EventKind::Social
+                };
+                events.push(Event { t_seconds: t, kind });
+            }
+        }
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_hours_have_more_events() {
+        let trace = EventTrace::day_profile(3);
+        let events = trace.sample(8.0 * 3600.0);
+        let busy = events
+            .iter()
+            .filter(|e| e.t_seconds >= 3.0 * 3600.0 && e.t_seconds < 5.0 * 3600.0)
+            .count();
+        let quiet = events.iter().filter(|e| e.t_seconds < 1.5 * 3600.0).count();
+        assert!(busy > quiet, "busy={busy} quiet={quiet}");
+    }
+
+    #[test]
+    fn event_count_tracks_expected_mass() {
+        let trace = EventTrace::day_profile(11);
+        let events = trace.sample(8.0 * 3600.0);
+        // Expected: integral of the profile ≈ (0.5*90 + 2*90 + 4*120 +
+        // 1.5*120 + 2.5*60) = 1035 events over the day.
+        let n = events.len() as f64;
+        assert!(n > 700.0 && n < 1400.0, "n={n}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = EventTrace::day_profile(5).sample(3600.0).len();
+        let b = EventTrace::day_profile(5).sample(3600.0).len();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn both_kinds_occur() {
+        let events = EventTrace::day_profile(1).sample(4.0 * 3600.0);
+        assert!(events.iter().any(|e| e.kind == EventKind::Emergency));
+        assert!(events.iter().any(|e| e.kind == EventKind::Social));
+    }
+}

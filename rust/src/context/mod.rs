@@ -1,0 +1,120 @@
+//! Dynamic deployment-context awareness (paper §3.3 block iii, §6.4, §6.6).
+//!
+//! The deployment context is the tuple the paper varies in every
+//! experiment: remaining battery (drives λ1/λ2), available L2 cache
+//! (drives S_bgt(t)), and the ambient event frequency (drives inference
+//! load and hence energy drain).  Each dimension gets a faithful simulator
+//! (DESIGN.md §5): battery drains through a consumption model, cache
+//! availability is a noisy contention process, and events follow a
+//! day-profile arrival process.
+
+pub mod battery;
+pub mod cache;
+pub mod events;
+pub mod trigger;
+
+pub use battery::Battery;
+pub use cache::CacheContention;
+pub use events::{DayProfile, EventTrace};
+pub use trigger::{Trigger, TriggerPolicy};
+
+use crate::coordinator::eval::Constraints;
+
+/// A sampled deployment-context snapshot at simulated time `t`.
+#[derive(Debug, Clone, Copy)]
+pub struct ContextSnapshot {
+    /// Simulated wall-clock, seconds since experiment start.
+    pub t_seconds: f64,
+    /// Remaining battery fraction in [0, 1].
+    pub battery_fraction: f64,
+    /// Available L2-cache bytes for DNN parameters: (2 − σ) MB.
+    pub available_cache: u64,
+    /// Events (inference requests) per minute right now.
+    pub event_rate_per_min: f64,
+}
+
+impl ContextSnapshot {
+    /// Constraint set per paper §6.3: λ2 = max(0.3, 1 − E_remaining),
+    /// S_bgt = available cache, plus the task's static thresholds.
+    pub fn constraints(&self, acc_loss_threshold: f64, latency_budget_ms: f64) -> Constraints {
+        Constraints::from_battery(
+            self.battery_fraction,
+            acc_loss_threshold,
+            latency_budget_ms,
+            self.available_cache,
+        )
+    }
+}
+
+/// The full context simulator driving the case study and Fig-8/9 benches.
+#[derive(Debug, Clone)]
+pub struct ContextSimulator {
+    pub battery: Battery,
+    pub cache: CacheContention,
+    pub events: EventTrace,
+    t_seconds: f64,
+}
+
+impl ContextSimulator {
+    pub fn new(battery: Battery, cache: CacheContention, events: EventTrace) -> Self {
+        ContextSimulator { battery, cache, events, t_seconds: 0.0 }
+    }
+
+    /// Advance simulated time by `dt` seconds, draining battery with
+    /// `energy_j` consumed by DNN work during the interval.
+    pub fn advance(&mut self, dt: f64, energy_j: f64) {
+        self.t_seconds += dt;
+        self.battery.drain(dt, energy_j);
+        self.cache.advance(dt);
+    }
+
+    pub fn now(&self) -> f64 {
+        self.t_seconds
+    }
+
+    /// Snapshot the current context.
+    pub fn snapshot(&mut self) -> ContextSnapshot {
+        ContextSnapshot {
+            t_seconds: self.t_seconds,
+            battery_fraction: self.battery.fraction(),
+            available_cache: self.cache.available_bytes(),
+            event_rate_per_min: self.events.rate_at(self.t_seconds),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    #[test]
+    fn snapshot_constraints_follow_battery() {
+        let p = Platform::jetbot();
+        let mut sim = ContextSimulator::new(
+            Battery::new(&p),
+            CacheContention::new(p.l2_cache_bytes, 0.25, 42),
+            EventTrace::day_profile(7),
+        );
+        let snap = sim.snapshot();
+        let c = snap.constraints(0.5, 20.0);
+        assert!((c.lambda2 - 0.3).abs() < 1e-9, "full battery -> λ2 = 0.3");
+        // Burn a large amount of energy, λ2 must grow.
+        sim.advance(3600.0, p.battery_joules() * 0.6);
+        let c2 = sim.snapshot().constraints(0.5, 20.0);
+        assert!(c2.lambda2 > 0.5);
+    }
+
+    #[test]
+    fn time_advances() {
+        let p = Platform::raspberry_pi_4b();
+        let mut sim = ContextSimulator::new(
+            Battery::new(&p),
+            CacheContention::new(p.l2_cache_bytes, 0.25, 1),
+            EventTrace::day_profile(1),
+        );
+        sim.advance(10.0, 0.0);
+        sim.advance(5.0, 0.0);
+        assert!((sim.now() - 15.0).abs() < 1e-9);
+    }
+}

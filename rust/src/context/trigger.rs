@@ -1,0 +1,107 @@
+//! Evolution trigger (paper §3.3): "the dynamic deployment context
+//! awareness block detects the evolution demands and triggers the runtime
+//! adaptive compression block.  The triggering station can be modeled as
+//! the noticeable context changes or by a pre-defined frequency."
+
+use super::ContextSnapshot;
+
+/// When to re-run the Runtime3C search.
+#[derive(Debug, Clone, Copy)]
+pub enum TriggerPolicy {
+    /// Re-evolve every fixed interval (the case study uses 2 h).
+    Periodic { period_s: f64 },
+    /// Re-evolve on noticeable context change: battery moved by more than
+    /// `battery_delta` or available cache by more than `cache_delta_bytes`.
+    OnChange { battery_delta: f64, cache_delta_bytes: u64 },
+    /// Both: change-detection with a periodic floor.
+    Hybrid { period_s: f64, battery_delta: f64, cache_delta_bytes: u64 },
+}
+
+/// Stateful trigger.
+#[derive(Debug, Clone)]
+pub struct Trigger {
+    policy: TriggerPolicy,
+    last_fire_t: Option<f64>,
+    last_snapshot: Option<ContextSnapshot>,
+}
+
+impl Trigger {
+    pub fn new(policy: TriggerPolicy) -> Trigger {
+        Trigger { policy, last_fire_t: None, last_snapshot: None }
+    }
+
+    /// Should the engine re-evolve at this snapshot?  Firing updates the
+    /// internal reference state.
+    pub fn should_fire(&mut self, snap: &ContextSnapshot) -> bool {
+        let fire = match (self.last_fire_t, self.last_snapshot.as_ref()) {
+            (None, _) => true, // always evolve once at startup
+            (Some(t0), prev) => match self.policy {
+                TriggerPolicy::Periodic { period_s } => snap.t_seconds - t0 >= period_s,
+                TriggerPolicy::OnChange { battery_delta, cache_delta_bytes } => {
+                    prev.is_some_and(|p| changed(p, snap, battery_delta, cache_delta_bytes))
+                }
+                TriggerPolicy::Hybrid { period_s, battery_delta, cache_delta_bytes } => {
+                    snap.t_seconds - t0 >= period_s
+                        || prev.is_some_and(|p| changed(p, snap, battery_delta, cache_delta_bytes))
+                }
+            },
+        };
+        if fire {
+            self.last_fire_t = Some(snap.t_seconds);
+            self.last_snapshot = Some(*snap);
+        }
+        fire
+    }
+}
+
+fn changed(
+    prev: &ContextSnapshot,
+    now: &ContextSnapshot,
+    battery_delta: f64,
+    cache_delta_bytes: u64,
+) -> bool {
+    (prev.battery_fraction - now.battery_fraction).abs() >= battery_delta
+        || prev.available_cache.abs_diff(now.available_cache) >= cache_delta_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(t: f64, battery: f64, cache: u64) -> ContextSnapshot {
+        ContextSnapshot {
+            t_seconds: t,
+            battery_fraction: battery,
+            available_cache: cache,
+            event_rate_per_min: 1.0,
+        }
+    }
+
+    #[test]
+    fn fires_once_at_startup() {
+        let mut tr = Trigger::new(TriggerPolicy::Periodic { period_s: 7200.0 });
+        assert!(tr.should_fire(&snap(0.0, 0.9, 2 << 20)));
+        assert!(!tr.should_fire(&snap(60.0, 0.9, 2 << 20)));
+    }
+
+    #[test]
+    fn periodic_fires_every_two_hours() {
+        let mut tr = Trigger::new(TriggerPolicy::Periodic { period_s: 7200.0 });
+        assert!(tr.should_fire(&snap(0.0, 0.9, 2 << 20)));
+        assert!(!tr.should_fire(&snap(7000.0, 0.5, 1 << 20)));
+        assert!(tr.should_fire(&snap(7200.0, 0.5, 1 << 20)));
+        assert!(!tr.should_fire(&snap(7300.0, 0.5, 1 << 20)));
+    }
+
+    #[test]
+    fn change_detector_reacts_to_battery_and_cache() {
+        let mut tr = Trigger::new(TriggerPolicy::OnChange {
+            battery_delta: 0.1,
+            cache_delta_bytes: 256 * 1024,
+        });
+        assert!(tr.should_fire(&snap(0.0, 0.9, 2 << 20)));
+        assert!(!tr.should_fire(&snap(10.0, 0.85, 2 << 20)));
+        assert!(tr.should_fire(&snap(20.0, 0.75, 2 << 20))); // battery moved 0.15
+        assert!(tr.should_fire(&snap(30.0, 0.75, (2 << 20) - 512 * 1024))); // cache moved
+    }
+}

@@ -1,0 +1,258 @@
+//! Prior-based accuracy predictor (paper §4.2.2-2 / Algorithm 1 line 4).
+//!
+//! The paper pre-tests variant networks at design time and uses the
+//! resulting ranking at runtime ("we leverage the ranking of the pre-tested
+//! accuracy and energy cost of the DNNs to establish the Pareto front").
+//! We reproduce that with a small additive model fitted at manifest-load
+//! time: accuracy-loss(config) ≈ Σᵢ drop(layer i, op i) + γ·(k−1), with the
+//! per-(layer, op) drops and the interaction term γ ridge-fitted to the
+//! palette's measured accuracies plus the one-at-a-time probes.  Exact
+//! palette configs short-circuit to their measured value.
+
+use std::collections::HashMap;
+
+use super::config::CompressionConfig;
+use super::manifest::TaskArtifacts;
+use super::operators::{Op, NUM_OPS};
+
+/// Fitted accuracy predictor for one task.
+#[derive(Debug, Clone)]
+pub struct AccuracyModel {
+    n_layers: usize,
+    backbone_acc: f64,
+    /// Per-(layer, op) drop coefficients, flattened layer*NUM_OPS + op.
+    coeffs: Vec<f64>,
+    /// Interaction penalty per additional compressed layer.
+    gamma: f64,
+    /// Measured accuracies for exact palette configs.
+    exact: HashMap<Vec<u8>, f64>,
+}
+
+impl AccuracyModel {
+    /// Fit from manifest data.
+    pub fn fit(task: &TaskArtifacts) -> AccuracyModel {
+        let n_layers = task.n_layers();
+        let n_feat = n_layers * NUM_OPS + 1; // + interaction feature
+        let mut rows: Vec<(Vec<usize>, f64, f64)> = Vec::new(); // (feature idxs, interaction, y)
+
+        let bb_acc = task.backbone.accuracy;
+        // Palette variants.
+        for v in &task.variants {
+            let mut idxs = Vec::new();
+            let mut k = 0usize;
+            for (i, &opid) in v.config.iter().enumerate() {
+                if opid != 0 {
+                    idxs.push(i * NUM_OPS + opid as usize);
+                    k += 1;
+                }
+            }
+            let inter = k.saturating_sub(1) as f64;
+            rows.push((idxs, inter, (bb_acc - v.accuracy).max(-0.05)));
+        }
+        // One-at-a-time probes (already expressed as drops).
+        for (key, &drop) in &task.probes {
+            if let Some((layer, op)) = parse_probe_key(key) {
+                rows.push((vec![layer * NUM_OPS + op], 0.0, drop));
+            }
+        }
+
+        let coeffs = ridge_fit(&rows, n_feat, 1e-3);
+        let (gamma, mut c) = (coeffs[n_feat - 1], coeffs);
+        c.truncate(n_feat - 1);
+
+        let exact = task
+            .variants
+            .iter()
+            .map(|v| (v.config.clone(), v.accuracy))
+            .collect();
+
+        AccuracyModel { n_layers, backbone_acc: bb_acc, coeffs: c, gamma, exact }
+    }
+
+    pub fn backbone_accuracy(&self) -> f64 {
+        self.backbone_acc
+    }
+
+    /// Predicted accuracy loss (≥ 0) of a config vs the backbone.
+    pub fn predict_loss(&self, config: &CompressionConfig) -> f64 {
+        let ids = config.ops_ids();
+        if let Some(&acc) = self.exact.get(&ids) {
+            return (self.backbone_acc - acc).max(0.0);
+        }
+        let mut loss = 0.0;
+        let mut k = 0usize;
+        for (i, &opid) in ids.iter().enumerate().take(self.n_layers) {
+            if opid != 0 {
+                loss += self.coeffs[i * NUM_OPS + opid as usize];
+                k += 1;
+            }
+        }
+        if k > 1 {
+            loss += self.gamma * (k - 1) as f64;
+        }
+        loss.clamp(0.0, 1.0)
+    }
+
+    /// Predicted absolute accuracy of a config.
+    pub fn predict_accuracy(&self, config: &CompressionConfig) -> f64 {
+        (self.backbone_acc - self.predict_loss(config)).clamp(0.0, 1.0)
+    }
+
+    /// Per-(layer, op) marginal drop — exposes the trained architecture
+    /// importance ranking used to guide layer-order decisions.
+    pub fn marginal_drop(&self, layer: usize, op: Op) -> f64 {
+        if op == Op::Identity {
+            return 0.0;
+        }
+        self.coeffs[layer * NUM_OPS + op.id() as usize].max(0.0)
+    }
+}
+
+fn parse_probe_key(key: &str) -> Option<(usize, usize)> {
+    let (l, o) = key.split_once(':')?;
+    Some((l.parse().ok()?, o.parse().ok()?))
+}
+
+/// Ridge regression via normal equations + Gaussian elimination.  Feature
+/// vectors are sparse one-hots plus one dense interaction column (the last
+/// feature).  Small (≤ 46×46) so a dense solve is fine.
+fn ridge_fit(rows: &[(Vec<usize>, f64, f64)], n_feat: usize, lambda: f64) -> Vec<f64> {
+    let mut ata = vec![vec![0.0f64; n_feat]; n_feat];
+    let mut aty = vec![0.0f64; n_feat];
+    for (idxs, inter, y) in rows {
+        // Materialize the sparse feature vector's nonzeros.
+        let mut nz: Vec<(usize, f64)> = idxs.iter().map(|&i| (i, 1.0)).collect();
+        if *inter != 0.0 {
+            nz.push((n_feat - 1, *inter));
+        }
+        for &(i, vi) in &nz {
+            aty[i] += vi * y;
+            for &(j, vj) in &nz {
+                ata[i][j] += vi * vj;
+            }
+        }
+    }
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += lambda;
+    }
+    solve_dense(ata, aty)
+}
+
+/// Gaussian elimination with partial pivoting.
+fn solve_dense(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue; // unconstrained feature; ridge keeps it near zero
+        }
+        for row in (col + 1)..n {
+            let f = a[row][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        if a[col][col].abs() < 1e-12 {
+            continue;
+        }
+        let mut s = b[col];
+        for k in (col + 1)..n {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::manifest::{Backbone, Variant};
+    use std::collections::HashMap;
+
+    fn task_with(variants: Vec<(Vec<u8>, f64)>, probes: Vec<(&str, f64)>) -> TaskArtifacts {
+        TaskArtifacts {
+            name: "t".into(),
+            title: "t".into(),
+            input_shape: vec![32, 32, 1],
+            num_classes: 4,
+            latency_budget_ms: 20.0,
+            acc_loss_threshold: 0.5,
+            backbone: Backbone {
+                widths: vec![16, 32, 32, 64, 64],
+                strides: vec![1, 2, 1, 2, 1],
+                residual: vec![false, false, true, false, true],
+                kernel: 3,
+                accuracy: 0.95,
+            },
+            variants: variants
+                .into_iter()
+                .enumerate()
+                .map(|(i, (config, accuracy))| Variant {
+                    id: i,
+                    config,
+                    hlo: String::new(),
+                    accuracy,
+                    tuned: false,
+                    macs: 1,
+                    params: 1,
+                    acts: 1,
+                    per_layer: vec![],
+                })
+                .collect(),
+            probes: probes.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            importances: vec![],
+            mutation_sigmas: vec![],
+            sigma_scale: 0.1,
+        }
+    }
+
+    #[test]
+    fn exact_palette_configs_short_circuit() {
+        let t = task_with(
+            vec![(vec![0, 0, 0, 0, 0], 0.95), (vec![0, 4, 0, 4, 0], 0.90)],
+            vec![],
+        );
+        let m = AccuracyModel::fit(&t);
+        let cfg = CompressionConfig::from_ids(&[0, 4, 0, 4, 0]).unwrap();
+        assert!((m.predict_loss(&cfg) - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn probes_drive_single_layer_predictions() {
+        let t = task_with(vec![(vec![0, 0, 0, 0, 0], 0.95)], vec![("1:4", 0.03)]);
+        let m = AccuracyModel::fit(&t);
+        let cfg = CompressionConfig::from_ids(&[0, 4, 0, 0, 0]).unwrap();
+        let loss = m.predict_loss(&cfg);
+        assert!((loss - 0.03).abs() < 0.01, "loss={loss}");
+    }
+
+    #[test]
+    fn more_compression_never_reduces_predicted_loss_much() {
+        let t = task_with(
+            vec![
+                (vec![0, 0, 0, 0, 0], 0.95),
+                (vec![0, 4, 0, 0, 0], 0.93),
+                (vec![0, 4, 0, 4, 0], 0.90),
+            ],
+            vec![("1:4", 0.02), ("3:4", 0.03)],
+        );
+        let m = AccuracyModel::fit(&t);
+        let one = m.predict_loss(&CompressionConfig::from_ids(&[0, 4, 0, 0, 0]).unwrap());
+        let two = m.predict_loss(&CompressionConfig::from_ids(&[0, 4, 0, 4, 0]).unwrap());
+        assert!(two >= one, "two={two} one={one}");
+    }
+}

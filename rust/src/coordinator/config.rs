@@ -1,0 +1,151 @@
+//! Compression configurations: a per-conv-layer operator assignment.
+//!
+//! A `CompressionConfig` is the unit the Runtime3C search manipulates and
+//! what the paper encodes (Fig. 7).  Layer 0 is never compressed ("we start
+//! exploring compression operator configurations from the second conv layer
+//! by default to preserve more input details", Algorithm 1 footnote).
+
+use anyhow::{anyhow, Result};
+use super::manifest::Backbone;
+use super::operators::Op;
+
+/// Per-layer operator assignment over the backbone's conv layers.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CompressionConfig {
+    ops: Vec<Op>,
+}
+
+impl CompressionConfig {
+    /// All-identity (uncompressed backbone) config of `n` layers.
+    pub fn identity(n: usize) -> Self {
+        CompressionConfig { ops: vec![Op::Identity; n] }
+    }
+
+    /// Build from wire ids (e.g. a manifest `config` array).
+    pub fn from_ids(ids: &[u8]) -> Result<Self> {
+        let ops = ids
+            .iter()
+            .map(|&i| Op::from_id(i).ok_or_else(|| anyhow!("bad op id {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        if ops.first().is_some_and(|&o| o != Op::Identity) {
+            return Err(anyhow!("layer 0 must be identity"));
+        }
+        Ok(CompressionConfig { ops })
+    }
+
+    pub fn from_ops(ops: Vec<Op>) -> Self {
+        CompressionConfig { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn op(&self, layer: usize) -> Op {
+        self.ops[layer]
+    }
+
+    pub fn ops(&self) -> &[Op] {
+        &self.ops
+    }
+
+    pub fn set(&mut self, layer: usize, op: Op) {
+        debug_assert!(layer > 0, "layer 0 is never compressed");
+        self.ops[layer] = op;
+    }
+
+    /// Wire ids (manifest format).
+    pub fn ops_ids(&self) -> Vec<u8> {
+        self.ops.iter().map(|o| o.id()).collect()
+    }
+
+    /// Number of compressed (non-identity) layers.
+    pub fn compressed_count(&self) -> usize {
+        self.ops.iter().filter(|&&o| o != Op::Identity).count()
+    }
+
+    /// Replace illegal per-layer choices with Identity — mirror of
+    /// aot.py::canonical_config.  Legality only depends on the static
+    /// backbone structure.
+    pub fn canonicalize(&self, bb: &Backbone) -> CompressionConfig {
+        let mut out = vec![Op::Identity];
+        for i in 1..self.ops.len() {
+            let cin = bb.widths[i - 1];
+            let cout = bb.widths[i];
+            let ok = self.ops[i].is_legal(cin, cout, bb.strides[i], bb.residual[i]);
+            out.push(if ok { self.ops[i] } else { Op::Identity });
+        }
+        CompressionConfig { ops: out }
+    }
+
+    /// Is every non-identity choice legal as-is?
+    pub fn is_canonical(&self, bb: &Backbone) -> bool {
+        self == &self.canonicalize(bb)
+    }
+
+    /// Human-readable summary like "δ1(fire)@L2 + δ3(ch50)@L4".
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o != Op::Identity)
+            .map(|(i, &o)| format!("{}({})@L{}", o.family(), o.name(), i + 1))
+            .collect();
+        if parts.is_empty() {
+            "backbone (uncompressed)".to_string()
+        } else {
+            parts.join(" + ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bb() -> Backbone {
+        Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        }
+    }
+
+    #[test]
+    fn identity_is_canonical() {
+        let c = CompressionConfig::identity(5);
+        assert!(c.is_canonical(&bb()));
+        assert_eq!(c.compressed_count(), 0);
+    }
+
+    #[test]
+    fn from_ids_rejects_compressed_layer0() {
+        assert!(CompressionConfig::from_ids(&[1, 0, 0, 0, 0]).is_err());
+        assert!(CompressionConfig::from_ids(&[0, 9, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn canonicalize_fixes_illegal_choices() {
+        // depth on non-residual layer 1 -> identity; ch50 on residual L3 -> identity
+        let c = CompressionConfig::from_ids(&[0, 6, 4, 4, 6]).unwrap();
+        let canon = c.canonicalize(&bb());
+        assert_eq!(canon.ops_ids(), vec![0, 0, 0, 4, 6]);
+        assert!(canon.is_canonical(&bb()));
+    }
+
+    #[test]
+    fn describe_names_families() {
+        let c = CompressionConfig::from_ids(&[0, 1, 0, 4, 6]).unwrap();
+        let s = c.describe();
+        assert!(s.contains("δ1(fire)@L2"), "{s}");
+        assert!(s.contains("δ3(ch50)@L4"), "{s}");
+        assert!(s.contains("δ4(depth)@L5"), "{s}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Analytic cost model: MACs C, parameters Sp, activations Sa, and the
+//! hardware-efficiency criteria of paper §5.1.2.
+//!
+//! This mirrors the shape arithmetic of `python/compile/model.py::
+//! layer_costs` *and* the shape propagation of `operators.py::apply_config`
+//! (upstream prunes shrink downstream Cin; residual layers downstream of a
+//! prune become square in the kept subspace; skipped layers vanish).  The
+//! integration test `tests/manifest_crosscheck.rs` asserts bit-equality
+//! with the Python numbers recorded in the manifest for every variant.
+
+use super::config::CompressionConfig;
+use super::manifest::Backbone;
+use super::operators::{self, Op};
+
+/// Default aggregation coefficients for Eq. 2 (benched in Fig. 10(d)).
+pub const MU1_DEFAULT: f64 = 0.4;
+pub const MU2_DEFAULT: f64 = 0.6;
+
+/// Totals over one variant network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Costs {
+    /// Multiply-accumulate count per inference (C).
+    pub macs: u64,
+    /// Parameter element count (Sp).
+    pub params: u64,
+    /// Activation element count written per inference (Sa).
+    pub acts: u64,
+}
+
+impl Costs {
+    /// Parameter arithmetic intensity C/Sp (paper §5.1.2).
+    pub fn c_sp(&self) -> f64 {
+        self.macs as f64 / self.params.max(1) as f64
+    }
+
+    /// Activation arithmetic intensity C/Sa.
+    pub fn c_sa(&self) -> f64 {
+        self.macs as f64 / self.acts.max(1) as f64
+    }
+
+    /// Hardware-efficiency aggregate E ≈ μ1·C/Sp + μ2·C/Sa (Eq. 2).
+    pub fn efficiency(&self, mu1: f64, mu2: f64) -> f64 {
+        mu1 * self.c_sp() + mu2 * self.c_sa()
+    }
+
+    /// Parameter bytes at f32.
+    pub fn param_bytes(&self) -> u64 {
+        self.params * 4
+    }
+
+    /// Activation bytes at f32.
+    pub fn act_bytes(&self) -> u64 {
+        self.acts * 4
+    }
+}
+
+/// Per-layer cost entry plus the layer's structural role.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerCosts {
+    pub macs: u64,
+    pub params: u64,
+    pub acts: u64,
+    /// Operator actually applied (after legality fallback).
+    pub op: Op,
+}
+
+/// Cost model bound to one backbone + input shape.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    backbone: Backbone,
+    input_hw: (usize, usize),
+    input_c: usize,
+    num_classes: usize,
+}
+
+impl CostModel {
+    pub fn new(backbone: &Backbone, input_shape: &[usize], num_classes: usize) -> Self {
+        CostModel {
+            backbone: backbone.clone(),
+            input_hw: (input_shape[0], input_shape[1]),
+            input_c: input_shape[2],
+            num_classes,
+        }
+    }
+
+    pub fn backbone(&self) -> &Backbone {
+        &self.backbone
+    }
+
+    fn ceil_div(a: usize, b: usize) -> usize {
+        a.div_ceil(b)
+    }
+
+    /// Per-layer costs (conv layers then head) under `config`.
+    ///
+    /// `config` is canonicalized internally so callers may pass raw search
+    /// candidates.
+    pub fn layer_costs(&self, config: &CompressionConfig) -> Vec<LayerCosts> {
+        let cfg = config.canonicalize(&self.backbone);
+        let k = self.backbone.kernel;
+        let (mut h, mut w) = self.input_hw;
+        let mut cin = self.input_c;
+        let mut out = Vec::with_capacity(cfg.len() + 1);
+        for i in 0..cfg.len() {
+            let stride = self.backbone.strides[i];
+            let residual = self.backbone.residual[i];
+            // Residual layers downstream of pruning stay square in the kept
+            // subspace, so their effective cout equals the incoming cin.
+            let cout_full = self.backbone.widths[i];
+            let cout_base = if residual { cin } else { cout_full };
+            let op = cfg.op(i);
+            let ho = Self::ceil_div(h, stride);
+            let wo = Self::ceil_div(w, stride);
+            let lc = match op {
+                Op::Identity => LayerCosts {
+                    macs: (ho * wo * k * k * cin * cout_base) as u64,
+                    params: (k * k * cin * cout_base + cout_base) as u64,
+                    acts: (ho * wo * cout_base) as u64,
+                    op,
+                },
+                Op::Fire | Op::FireCh50 => {
+                    let cout = if op == Op::FireCh50 {
+                        operators::kept_channels(cout_base, op.prune_ratio())
+                    } else {
+                        cout_base
+                    };
+                    let s = operators::fire_squeeze_width(cin);
+                    let e1 = operators::fire_e1_width(cout);
+                    let e3 = cout - e1;
+                    LayerCosts {
+                        // squeeze at input res, expands at output res
+                        macs: (h * w * cin * s + ho * wo * (s * e1 + 9 * s * e3)) as u64,
+                        params: (cin * s + 2 * s + s * e1 + e1 + 9 * s * e3 + e3) as u64,
+                        acts: (h * w * s + ho * wo * (e1 + e3)) as u64,
+                        op,
+                    }
+                }
+                Op::Svd | Op::SvdCh50 => {
+                    let cout = if op == Op::SvdCh50 {
+                        operators::kept_channels(cout_base, op.prune_ratio())
+                    } else {
+                        cout_base
+                    };
+                    let r = operators::svd_rank(k, cin, cout);
+                    LayerCosts {
+                        macs: (ho * wo * (k * k * cin * r + r * cout)) as u64,
+                        params: (k * k * cin * r + r * cout + cout) as u64,
+                        acts: (ho * wo * (r + cout)) as u64,
+                        op,
+                    }
+                }
+                Op::Ch25 | Op::Ch50 | Op::Ch75 => {
+                    let cout = operators::kept_channels(cout_base, op.prune_ratio());
+                    LayerCosts {
+                        macs: (ho * wo * k * k * cin * cout) as u64,
+                        params: (k * k * cin * cout + cout) as u64,
+                        acts: (ho * wo * cout) as u64,
+                        op,
+                    }
+                }
+                Op::Depth => LayerCosts { macs: 0, params: 0, acts: 0, op },
+            };
+            out.push(lc);
+            // Advance shape state.
+            if op != Op::Depth {
+                h = ho;
+                w = wo;
+                cin = match op {
+                    Op::Identity => cout_base,
+                    Op::Fire => cout_base,
+                    Op::Svd => cout_base,
+                    Op::Ch25 | Op::Ch50 | Op::Ch75 | Op::FireCh50 | Op::SvdCh50 => {
+                        operators::kept_channels(cout_base, op.prune_ratio())
+                    }
+                    Op::Depth => unreachable!(),
+                };
+            }
+            // Depth-skip: h, w, cin all pass through untouched.
+        }
+        // Head: GAP + dense.
+        out.push(LayerCosts {
+            macs: (h * w * cin + cin * self.num_classes) as u64,
+            params: (cin * self.num_classes + self.num_classes) as u64,
+            acts: self.num_classes as u64,
+            op: Op::Identity,
+        });
+        out
+    }
+
+    /// Total costs under `config`.
+    pub fn costs(&self, config: &CompressionConfig) -> Costs {
+        let mut c = Costs { macs: 0, params: 0, acts: 0 };
+        for lc in self.layer_costs(config) {
+            c.macs += lc.macs;
+            c.params += lc.params;
+            c.acts += lc.acts;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        let bb = Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        };
+        CostModel::new(&bb, &[32, 32, 1], 9)
+    }
+
+    #[test]
+    fn backbone_costs_match_hand_calc() {
+        let m = model();
+        let c = m.costs(&CompressionConfig::identity(5));
+        // L1: 32*32*9*1*16 = 147456 macs; L2: 16*16*9*16*32 = 1179648;
+        // L3: 16*16*9*32*32 = 2359296; L4: 8*8*9*32*64 = 1179648;
+        // L5: 8*8*9*64*64 = 2359296; head: 8*8*64 + 64*9 = 4672.
+        assert_eq!(c.macs, 147456 + 1179648 + 2359296 + 1179648 + 2359296 + 4672);
+        // params: 9*1*16+16 + 9*16*32+32 + 9*32*32+32 + 9*32*64+64 + 9*64*64+64
+        //         + 64*9+9
+        assert_eq!(
+            c.params,
+            (144 + 16) + (4608 + 32) + (9216 + 32) + (18432 + 64) + (36864 + 64) + (576 + 9)
+        );
+    }
+
+    #[test]
+    fn depth_skip_removes_layer_costs() {
+        let m = model();
+        let full = m.costs(&CompressionConfig::identity(5));
+        let skipped = m.costs(&CompressionConfig::from_ids(&[0, 0, 6, 0, 6]).unwrap());
+        assert_eq!(full.macs - skipped.macs, 2359296 + 2359296);
+        assert!(skipped.params < full.params);
+    }
+
+    #[test]
+    fn prune_shrinks_downstream_cin() {
+        let m = model();
+        let pruned = m.layer_costs(&CompressionConfig::from_ids(&[0, 4, 0, 0, 0]).unwrap());
+        // L2 halves outputs to 16 -> residual L3 becomes 16x16 square.
+        assert_eq!(pruned[2].params, (9 * 16 * 16 + 16) as u64);
+        // L4 cin is 16 instead of 32.
+        assert_eq!(pruned[3].params, (9 * 16 * 64 + 64) as u64);
+    }
+
+    #[test]
+    fn illegal_ops_fall_back_to_identity_costs() {
+        let m = model();
+        let a = m.costs(&CompressionConfig::from_ids(&[0, 6, 0, 0, 0]).unwrap()); // illegal depth
+        let b = m.costs(&CompressionConfig::identity(5));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fire_raises_c_sp() {
+        let m = model();
+        let bb = m.costs(&CompressionConfig::identity(5));
+        let fire = m.costs(&CompressionConfig::from_ids(&[0, 1, 1, 1, 1]).unwrap());
+        assert!(fire.params < bb.params, "fire compresses params");
+        assert!(fire.c_sp() > bb.c_sp(), "fire raises parameter intensity");
+    }
+
+    #[test]
+    fn efficiency_uses_mu_weights() {
+        let c = Costs { macs: 1000, params: 10, acts: 100 };
+        let e = c.efficiency(MU1_DEFAULT, MU2_DEFAULT);
+        assert!((e - (0.4 * 100.0 + 0.6 * 10.0)).abs() < 1e-9);
+    }
+}

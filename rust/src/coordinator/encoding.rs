@@ -1,0 +1,211 @@
+//! Candidate encodings (paper §5.2.1, Fig. 7).
+//!
+//! Two encodings of a `CompressionConfig`:
+//!
+//! * **Classic binary** — N bits of per-layer participation + N fields of
+//!   ⌈log2 M⌉ bits for the chosen operator.  Length (1+⌈log2 M⌉)·N bits;
+//!   search-space complexity O(Mᴺ).
+//! * **Progressive shortest** — the paper's layer-dependent encoding: one
+//!   leading count digit (how many layers are compressed so far) followed
+//!   by one operator digit per compressed layer, grown layer-by-layer as
+//!   Algorithm 1 advances.  Length 1..N+1 digits; the progressive search
+//!   explores O(N²) strings instead of O(Mᴺ).
+//!
+//! Both encodings are exercised by `bench_fig10 --part c` and the
+//! `encoding` criterion bench to reproduce the Fig.-10(c) search-cost gap.
+
+use anyhow::{anyhow, Result};
+
+use super::config::CompressionConfig;
+use super::operators::{Op, NUM_OPS};
+
+/// Bits needed for one operator field in the classic encoding.
+pub const OP_FIELD_BITS: usize = {
+    // ceil(log2(NUM_OPS)) computed at compile time.
+    let mut bits = 0;
+    let mut v = NUM_OPS - 1;
+    while v > 0 {
+        bits += 1;
+        v >>= 1;
+    }
+    bits
+};
+
+/// Classic binary encoding: participation bitmap + fixed-width op fields.
+pub fn encode_binary(config: &CompressionConfig) -> Vec<bool> {
+    let n = config.len();
+    let mut bits = Vec::with_capacity(n * (1 + OP_FIELD_BITS));
+    for i in 0..n {
+        bits.push(config.op(i) != Op::Identity);
+    }
+    for i in 0..n {
+        let id = config.op(i).id() as usize;
+        for b in (0..OP_FIELD_BITS).rev() {
+            bits.push((id >> b) & 1 == 1);
+        }
+    }
+    bits
+}
+
+/// Decode a classic binary string back into a config.
+pub fn decode_binary(bits: &[bool], n_layers: usize) -> Result<CompressionConfig> {
+    if bits.len() != n_layers * (1 + OP_FIELD_BITS) {
+        return Err(anyhow!(
+            "binary encoding length {} != {}",
+            bits.len(),
+            n_layers * (1 + OP_FIELD_BITS)
+        ));
+    }
+    let mut ops = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let participates = bits[i];
+        let mut id = 0usize;
+        for b in 0..OP_FIELD_BITS {
+            id = (id << 1) | bits[n_layers + i * OP_FIELD_BITS + b] as usize;
+        }
+        let op = Op::from_id(id as u8).ok_or_else(|| anyhow!("bad op id {id}"))?;
+        // The participation bit is authoritative (the redundancy the paper
+        // criticizes: two ways to say "not compressed").
+        ops.push(if participates { op } else { Op::Identity });
+    }
+    CompressionConfig::from_ids(&ops.iter().map(|o| o.id()).collect::<Vec<_>>())
+}
+
+/// Progressive shortest encoding: `[count, op_1, ..., op_count]` digits.
+///
+/// Digit 0 is the number of compressed-or-visited layers so far; each
+/// following digit is the operator id chosen for the corresponding visited
+/// layer (in layer order, starting at layer 2 / index 1).  This mirrors the
+/// inherit-and-append step of Algorithm 1 lines 3/8.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgressiveCode {
+    digits: Vec<u8>,
+}
+
+impl ProgressiveCode {
+    /// Empty code: nothing visited yet.
+    pub fn new() -> Self {
+        ProgressiveCode { digits: vec![0] }
+    }
+
+    /// Inherit the survival string and append the next layer's choice
+    /// (Algorithm 1: "inherit 3C configurations from layer (i-1)").
+    pub fn extend(&self, op: Op) -> ProgressiveCode {
+        let mut digits = self.digits.clone();
+        digits[0] += 1;
+        digits.push(op.id());
+        ProgressiveCode { digits }
+    }
+
+    /// Number of visited layers.
+    pub fn visited(&self) -> usize {
+        self.digits[0] as usize
+    }
+
+    pub fn digits(&self) -> &[u8] {
+        &self.digits
+    }
+
+    /// Encoding length in digits (1..=N+1) — the Fig. 7(b) quantity.
+    pub fn len(&self) -> usize {
+        self.digits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // always carries the count digit
+    }
+
+    /// Expand into a full config over `n_layers` (unvisited layers are
+    /// identity).  Visited layers fill indices 1..=visited.
+    pub fn to_config(&self, n_layers: usize) -> Result<CompressionConfig> {
+        let visited = self.visited();
+        if visited + 1 > n_layers {
+            return Err(anyhow!("code visits {} layers but model has {}", visited, n_layers));
+        }
+        let mut ids = vec![0u8; n_layers];
+        for (j, &d) in self.digits[1..].iter().enumerate() {
+            if Op::from_id(d).is_none() {
+                return Err(anyhow!("bad op digit {d}"));
+            }
+            ids[j + 1] = d;
+        }
+        CompressionConfig::from_ids(&ids)
+    }
+
+    /// Build the code that represents a full config's compressed prefix.
+    pub fn from_config_prefix(config: &CompressionConfig, visited: usize) -> ProgressiveCode {
+        let mut code = ProgressiveCode::new();
+        for i in 1..=visited {
+            code = code.extend(config.op(i));
+        }
+        code
+    }
+}
+
+impl Default for ProgressiveCode {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Size of the search space each encoding induces, as the paper counts it
+/// (§5.2.1): classic binary → 2^N · M^N; progressive → Σ_k (k·M) ≈ O(N²·M)
+/// strings materialized by the layer-progressive search.
+pub fn binary_space_size(n_layers: usize, m_ops: usize) -> f64 {
+    2f64.powi(n_layers as i32) * (m_ops as f64).powi(n_layers as i32)
+}
+
+/// Number of candidate strings the progressive search materializes.
+pub fn progressive_space_size(n_layers: usize, m_ops: usize, beam: usize) -> f64 {
+    // At each of N-1 layers the beam evaluates `beam` inherited strings
+    // × M operator extensions.
+    ((n_layers - 1) * beam * m_ops) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_round_trip() {
+        let c = CompressionConfig::from_ids(&[0, 1, 6, 4, 8]).unwrap();
+        let bits = encode_binary(&c);
+        assert_eq!(bits.len(), 5 * (1 + OP_FIELD_BITS));
+        let back = decode_binary(&bits, 5).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn binary_length_matches_paper_formula() {
+        // Paper: encoding length N + M_bits*N = (1+M_bits)N.
+        assert_eq!(OP_FIELD_BITS, 4); // 9 ops -> 4 bits
+        let c = CompressionConfig::identity(3);
+        assert_eq!(encode_binary(&c).len(), 3 + 3 * 4);
+    }
+
+    #[test]
+    fn progressive_grows_from_2_digits() {
+        let code = ProgressiveCode::new().extend(Op::Fire);
+        assert_eq!(code.len(), 2); // count digit + one op digit
+        assert_eq!(code.visited(), 1);
+        let full = code.extend(Op::Ch50).extend(Op::Depth).extend(Op::Svd);
+        assert_eq!(full.len(), 5); // N digits for N-1 visited + count
+        let cfg = full.to_config(5).unwrap();
+        assert_eq!(cfg.ops_ids(), vec![0, 1, 4, 6, 2]);
+    }
+
+    #[test]
+    fn progressive_round_trip_via_prefix() {
+        let c = CompressionConfig::from_ids(&[0, 2, 6, 4, 0]).unwrap();
+        let code = ProgressiveCode::from_config_prefix(&c, 3);
+        let back = code.to_config(5).unwrap();
+        assert_eq!(back.ops_ids(), vec![0, 2, 6, 4, 0]);
+    }
+
+    #[test]
+    fn space_sizes_match_complexity_claims() {
+        // N=3, M=9: binary 2^3*9^3 = 5832; progressive with beam 2 ~ 36.
+        assert_eq!(binary_space_size(3, 9) as u64, 5832);
+        assert!(progressive_space_size(3, 9, 2) < 100.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! The AdaSpring engine: context snapshot → trigger → Runtime3C search →
+//! artifact snap → executable swap (paper Fig. 4, the full online loop).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::accuracy::AccuracyModel;
+use super::config::CompressionConfig;
+use super::costmodel::CostModel;
+use super::eval::{Constraints, Evaluator};
+use super::manifest::{Manifest, TaskArtifacts, Variant};
+use super::search::{Mutator, Runtime3C, Runtime3CParams, SearchResult};
+use crate::context::ContextSnapshot;
+use crate::platform::Platform;
+use crate::runtime::{Executor, LoadedVariant};
+
+/// Outcome of one evolution step (paper's "runtime evolution" unit).
+#[derive(Debug, Clone)]
+pub struct Evolution {
+    pub search: SearchResult,
+    /// Palette variant actually deployed (post-snap).
+    pub variant_id: usize,
+    /// Per-layer distance between searched config and deployed artifact.
+    pub snap_distance: usize,
+    /// End-to-end evolution latency (search + snap + swap), microseconds.
+    pub evolution_us: u128,
+    /// Deployed variant's design-time measured accuracy.
+    pub deployed_accuracy: f64,
+}
+
+/// The runtime engine for one task on one platform.
+pub struct AdaSpring {
+    task: TaskArtifacts,
+    root: PathBuf,
+    pub evaluator: Evaluator,
+    searcher: Runtime3C,
+    executor: Option<Executor>,
+    active: Option<Arc<LoadedVariant>>,
+    active_variant: Option<usize>,
+}
+
+impl AdaSpring {
+    /// Build from a loaded manifest.  `with_executor=false` skips PJRT
+    /// (cost-model-only benches — much faster to construct).
+    pub fn new(
+        manifest: &Manifest,
+        task_name: &str,
+        platform: &Platform,
+        with_executor: bool,
+    ) -> Result<AdaSpring> {
+        let task = manifest.task(task_name)?.clone();
+        let cost_model = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+        let accuracy = AccuracyModel::fit(&task);
+        let evaluator = Evaluator::new(cost_model, accuracy, platform);
+        let searcher = Runtime3C::new(Mutator::from_task(&task));
+        let executor = if with_executor { Some(Executor::new(&task)?) } else { None };
+        Ok(AdaSpring {
+            task,
+            root: manifest.root.clone(),
+            evaluator,
+            searcher,
+            executor,
+            active: None,
+            active_variant: None,
+        })
+    }
+
+    pub fn task(&self) -> &TaskArtifacts {
+        &self.task
+    }
+
+    /// Override search parameters (ablations).
+    pub fn set_search_params(&mut self, params: Runtime3CParams) {
+        self.searcher = Runtime3C::with_params(Mutator::from_task(&self.task), params);
+    }
+
+    /// Constraints for a context snapshot using this task's thresholds.
+    pub fn constraints_for(&self, snap: &ContextSnapshot) -> Constraints {
+        snap.constraints(self.task.acc_loss_threshold, self.task.latency_budget_ms)
+    }
+
+    /// One full evolution: search, snap to the nearest artifact, swap the
+    /// active executable (compiling lazily on first use).
+    pub fn evolve(&mut self, constraints: &Constraints) -> Result<Evolution> {
+        let t0 = Instant::now();
+        let search = self.searcher.search(&self.evaluator, constraints);
+        let (variant, snap_distance) = self.task.nearest_variant(&search.evaluation.config);
+        let variant_id = variant.id;
+        let deployed_accuracy = variant.accuracy;
+        if let Some(exec) = self.executor.as_mut() {
+            let v: Variant = variant.clone();
+            let loaded = exec.load(&self.task, &v, &self.root.clone())?;
+            self.active = Some(loaded);
+        }
+        self.active_variant = Some(variant_id);
+        Ok(Evolution {
+            search,
+            variant_id,
+            snap_distance,
+            evolution_us: t0.elapsed().as_micros(),
+            deployed_accuracy,
+        })
+    }
+
+    /// Currently deployed palette variant id.
+    pub fn active_variant(&self) -> Option<usize> {
+        self.active_variant
+    }
+
+    /// Deployed variant metadata.
+    pub fn active_variant_info(&self) -> Option<&Variant> {
+        self.active_variant.and_then(|id| self.task.variants.iter().find(|v| v.id == id))
+    }
+
+    /// Run one inference through the active executable.
+    pub fn infer(&self, input: &[f32]) -> Result<(Vec<f32>, crate::runtime::ExecStats)> {
+        let exec = self
+            .executor
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("engine built without executor"))?;
+        let active = self
+            .active
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no active variant — call evolve() first"))?;
+        exec.infer(active, input)
+    }
+
+    /// Deployed config (searched config snapped to the palette).
+    pub fn active_config(&self) -> Option<CompressionConfig> {
+        self.active_variant_info()
+            .map(|v| CompressionConfig::from_ids(&v.config).expect("manifest configs are valid"))
+    }
+
+    /// Measured PJRT latency of the active variant (host microbenchmark).
+    pub fn measure_active_latency_us(&self, input: &[f32], iters: usize) -> Result<f64> {
+        let exec = self
+            .executor
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("engine built without executor"))?;
+        let active = self
+            .active
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no active variant"))?;
+        exec.measure_latency_us(active, input, iters)
+    }
+}

@@ -1,0 +1,199 @@
+//! Candidate evaluation: the objective of Eq. 1 and the dynamic constraint
+//! set, shared by Runtime3C and the baseline optimizers.
+
+use super::accuracy::AccuracyModel;
+use super::config::CompressionConfig;
+use super::costmodel::{CostModel, Costs};
+use crate::platform::{EnergyModel, LatencyModel, Platform};
+
+/// Time-varying constraint set (paper Eq. 1): accuracy-loss threshold,
+/// latency budget, storage budget, and the relative importance λ1/λ2.
+#[derive(Debug, Clone, Copy)]
+pub struct Constraints {
+    pub acc_loss_threshold: f64,
+    pub latency_budget_ms: f64,
+    /// Storage budget for parameters S_bgt(t) — the available L2, bytes.
+    pub storage_budget_bytes: u64,
+    /// λ1: relative importance of accuracy.
+    pub lambda1: f64,
+    /// λ2: relative importance of energy efficiency.
+    pub lambda2: f64,
+}
+
+impl Constraints {
+    /// λ weighting from remaining battery, as §6.3 specifies:
+    /// λ2 = max(0.3, 1 − E_remaining), λ1 = 1 − λ2.
+    pub fn from_battery(
+        remaining_fraction: f64,
+        acc_loss_threshold: f64,
+        latency_budget_ms: f64,
+        storage_budget_bytes: u64,
+    ) -> Constraints {
+        let lambda2 = (1.0 - remaining_fraction).max(0.3);
+        Constraints {
+            acc_loss_threshold,
+            latency_budget_ms,
+            storage_budget_bytes,
+            lambda1: 1.0 - lambda2,
+            lambda2,
+        }
+    }
+}
+
+/// Everything the searches need to score one candidate.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub config: CompressionConfig,
+    pub costs: Costs,
+    pub acc_loss: f64,
+    pub efficiency: f64,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    /// Hard-constraint satisfaction (Eq. 1 s.t. clauses).
+    pub feasible: bool,
+}
+
+/// Reference accuracy-loss scale for the Norm(.) aggregation: the paper's
+/// observed operating band is ≤2.1% loss, so 2% is "one unit" of loss.
+pub const ACC_LOSS_FLOOR: f64 = 0.02;
+
+impl Evaluation {
+    /// Aggregated objective (lower is better): λ1·Norm(A_loss) − λ2·Norm(E),
+    /// Norm = log (paper §3.2).  The loss term is normalized against
+    /// ACC_LOSS_FLOOR — ln(1 + loss/floor) — so a lossless candidate scores
+    /// 0 on the accuracy axis instead of −∞, which would freeze the search
+    /// at the uncompressed backbone whenever predicted losses are tiny.
+    pub fn score(&self, c: &Constraints) -> f64 {
+        c.lambda1 * (1.0 + self.acc_loss / ACC_LOSS_FLOOR).ln()
+            - c.lambda2 * (self.efficiency + 1e-9).ln()
+    }
+
+    /// Normalized violation of the Eq.-1 hard constraints (0 when feasible).
+    /// Drives the layer-progressive search towards feasibility: among
+    /// infeasible candidates the one closest to satisfying the context wins.
+    pub fn violation(&self, c: &Constraints) -> f64 {
+        // NB: uses the raw budget as the scale; evaluate() already folded
+        // the platform's param_cache_fraction into feasibility.
+        let storage = (self.costs.param_bytes() as f64
+            - c.storage_budget_bytes as f64 * 0.15)
+            .max(0.0)
+            / c.storage_budget_bytes.max(1) as f64;
+        let latency =
+            (self.latency_ms - c.latency_budget_ms).max(0.0) / c.latency_budget_ms.max(1e-9);
+        let acc = (self.acc_loss - c.acc_loss_threshold).max(0.0)
+            / c.acc_loss_threshold.max(1e-9);
+        storage + latency + acc
+    }
+}
+
+/// Evaluator bound to one task + platform.
+#[derive(Debug, Clone)]
+pub struct Evaluator {
+    cost_model: CostModel,
+    accuracy: AccuracyModel,
+    energy: EnergyModel,
+    latency: LatencyModel,
+    param_cache_fraction: f64,
+    pub mu1: f64,
+    pub mu2: f64,
+}
+
+impl Evaluator {
+    pub fn new(cost_model: CostModel, accuracy: AccuracyModel, platform: &Platform) -> Evaluator {
+        Evaluator {
+            cost_model,
+            accuracy,
+            energy: EnergyModel::new(platform),
+            latency: LatencyModel::new(platform),
+            param_cache_fraction: platform.param_cache_fraction,
+            mu1: platform.mu.0,
+            mu2: platform.mu.1,
+        }
+    }
+
+    /// Override the Eq.-2 aggregation coefficients (Fig. 10(d) sweep).
+    pub fn with_mu(mut self, mu1: f64, mu2: f64) -> Evaluator {
+        self.mu1 = mu1;
+        self.mu2 = mu2;
+        self
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cost_model.backbone().widths.len()
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost_model
+    }
+
+    pub fn accuracy_model(&self) -> &AccuracyModel {
+        &self.accuracy
+    }
+
+    /// Full evaluation of one candidate under the current constraints.
+    pub fn evaluate(&self, config: &CompressionConfig, c: &Constraints) -> Evaluation {
+        let costs = self.cost_model.costs(config);
+        let acc_loss = self.accuracy.predict_loss(config);
+        let efficiency = costs.efficiency(self.mu1, self.mu2);
+        let latency_ms = self.latency.total_ms(&costs, c.storage_budget_bytes);
+        let energy_mj = self.energy.dnn_energy_mj(&costs, c.storage_budget_bytes);
+        // Parameters must fit the *parameter-usable* slice of the budget
+        // (cache shared with the rest of the system — platform model).
+        let param_budget =
+            (c.storage_budget_bytes as f64 * self.param_cache_fraction) as u64;
+        let feasible = acc_loss <= c.acc_loss_threshold
+            && latency_ms <= c.latency_budget_ms
+            && costs.param_bytes() <= param_budget;
+        Evaluation { config: config.clone(), costs, acc_loss, efficiency, latency_ms, energy_mj, feasible }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::manifest::Backbone;
+
+    fn evaluator() -> Evaluator {
+        let bb = Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        };
+        let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+        let task = crate::coordinator::test_fixtures::toy_task_with_backbone(&bb);
+        let am = AccuracyModel::fit(&task);
+        Evaluator::new(cm, am, &Platform::raspberry_pi_4b())
+    }
+
+    #[test]
+    fn lambda_from_battery_follows_paper_rule() {
+        let c = Constraints::from_battery(0.9, 0.5, 20.0, 2 << 20);
+        assert!((c.lambda2 - 0.3).abs() < 1e-9); // max(0.3, 0.1)
+        let c = Constraints::from_battery(0.2, 0.5, 20.0, 2 << 20);
+        assert!((c.lambda2 - 0.8).abs() < 1e-9);
+        assert!((c.lambda1 + c.lambda2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infeasible_when_storage_too_small() {
+        let e = evaluator();
+        let c = Constraints::from_battery(0.8, 0.5, 1000.0, 1024); // 1 KB budget
+        let ev = e.evaluate(&CompressionConfig::identity(5), &c);
+        assert!(!ev.feasible);
+    }
+
+    #[test]
+    fn fire_raises_parameter_intensity() {
+        // δ1 trades parameter footprint for activation traffic: C/Sp must
+        // rise (the §5.1.2 mechanism); total Eq.-2 E depends on µ weights.
+        let e = evaluator();
+        let c = Constraints::from_battery(0.5, 0.5, 1000.0, 2 << 20);
+        let bb = e.evaluate(&CompressionConfig::identity(5), &c);
+        let fire = e.evaluate(&CompressionConfig::from_ids(&[0, 1, 1, 1, 1]).unwrap(), &c);
+        assert!(fire.costs.c_sp() > bb.costs.c_sp());
+        assert!(fire.costs.params < bb.costs.params);
+        assert!(fire.costs.c_sa() < bb.costs.c_sa(), "fire adds activation traffic");
+    }
+}

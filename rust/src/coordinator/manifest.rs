@@ -1,0 +1,362 @@
+//! Loader for `artifacts/manifest.json` — the contract between the Python
+//! build path (aot.py) and the Rust runtime.  Parsed with the in-repo JSON
+//! substrate (util::json); no serde available offline.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::config::CompressionConfig;
+use super::operators::Op;
+use crate::util::json::Json;
+
+/// Whole-manifest root.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    /// Built with `--fast` (CI smoke budgets)?
+    pub fast: bool,
+    pub tasks: HashMap<String, TaskArtifacts>,
+    /// Directory the manifest was loaded from (HLO paths are relative).
+    pub root: PathBuf,
+}
+
+/// Per-task artifact set (one self-evolutionary network).
+#[derive(Debug, Clone)]
+pub struct TaskArtifacts {
+    pub name: String,
+    pub title: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub latency_budget_ms: f64,
+    pub acc_loss_threshold: f64,
+    pub backbone: Backbone,
+    pub variants: Vec<Variant>,
+    /// One-at-a-time accuracy drops keyed "layer:op" (predictor priors).
+    pub probes: HashMap<String, f64>,
+    /// Trained channel-importance ranking per conv layer (§4.2.2-2).
+    pub importances: Vec<Vec<f64>>,
+    /// Trained per-channel mutation magnitudes (§4.2.2-3).
+    pub mutation_sigmas: Vec<Vec<f64>>,
+    /// Global mutation scale after calibration.
+    pub sigma_scale: f64,
+}
+
+/// Backbone structure (shapes only; weights live in the HLO artifacts).
+#[derive(Debug, Clone)]
+pub struct Backbone {
+    pub widths: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub residual: Vec<bool>,
+    pub kernel: usize,
+    pub accuracy: f64,
+}
+
+/// One AOT-compiled compression-configuration variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub id: usize,
+    pub config: Vec<u8>,
+    /// HLO text path relative to the artifacts root.
+    pub hlo: String,
+    /// Measured validation accuracy (design-time, §4.2).
+    pub accuracy: f64,
+    /// Whether distillation fine-tuning was required.
+    pub tuned: bool,
+    pub macs: u64,
+    pub params: u64,
+    pub acts: u64,
+    pub per_layer: Vec<LayerCost>,
+}
+
+/// Python-side per-layer cost entry (cross-checked against costmodel.rs).
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub macs: u64,
+    pub params: u64,
+    pub acts: u64,
+}
+
+impl Manifest {
+    /// Load a manifest and remember its root directory.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest")?;
+        let root = path
+            .parent()
+            .ok_or_else(|| anyhow!("manifest has no parent dir"))?
+            .to_path_buf();
+        Self::from_json(&j, root)
+    }
+
+    fn from_json(j: &Json, root: PathBuf) -> Result<Manifest> {
+        let mut tasks = HashMap::new();
+        for (name, tj) in j.get("tasks")?.as_obj()? {
+            tasks.insert(name.clone(), TaskArtifacts::from_json(tj)?);
+        }
+        Ok(Manifest {
+            version: j.get("version")?.as_u64()?,
+            fast: j.opt("fast").map(|v| v.as_bool()).transpose()?.unwrap_or(false),
+            tasks,
+            root,
+        })
+    }
+
+    /// Default on-disk location (repo-root `artifacts/`).
+    pub fn default_path() -> PathBuf {
+        PathBuf::from("artifacts/manifest.json")
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskArtifacts> {
+        self.tasks.get(name).ok_or_else(|| {
+            anyhow!(
+                "task {name} not in manifest (have: {:?})",
+                self.tasks.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl TaskArtifacts {
+    fn from_json(j: &Json) -> Result<TaskArtifacts> {
+        let bb = j.get("backbone")?;
+        let backbone = Backbone {
+            widths: bb.get("widths")?.as_usize_vec()?,
+            strides: bb.get("strides")?.as_usize_vec()?,
+            residual: bb.get("residual")?.as_bool_vec()?,
+            kernel: bb.get("kernel")?.as_usize()?,
+            accuracy: bb.get("accuracy")?.as_f64()?,
+        };
+        let variants = j
+            .get("variants")?
+            .as_arr()?
+            .iter()
+            .map(Variant::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let probes = j
+            .get("probes")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.as_f64()?)))
+            .collect::<Result<HashMap<_, _>>>()?;
+        let vec2 = |key: &str| -> Result<Vec<Vec<f64>>> {
+            j.get(key)?.as_arr()?.iter().map(|v| v.as_f64_vec()).collect()
+        };
+        Ok(TaskArtifacts {
+            name: j.get("name")?.as_str()?.to_string(),
+            title: j.get("title")?.as_str()?.to_string(),
+            input_shape: j.get("input_shape")?.as_usize_vec()?,
+            num_classes: j.get("num_classes")?.as_usize()?,
+            latency_budget_ms: j.get("latency_budget_ms")?.as_f64()?,
+            acc_loss_threshold: j.get("acc_loss_threshold")?.as_f64()?,
+            backbone,
+            variants,
+            probes,
+            importances: vec2("importances")?,
+            mutation_sigmas: vec2("mutation_sigmas")?,
+            sigma_scale: j.get("sigma_scale")?.as_f64()?,
+        })
+    }
+
+    /// Number of conv layers in the backbone.
+    pub fn n_layers(&self) -> usize {
+        self.backbone.widths.len()
+    }
+
+    /// The uncompressed variant (all-identity config).
+    pub fn backbone_variant(&self) -> &Variant {
+        self.variants
+            .iter()
+            .find(|v| v.config.iter().all(|&o| o == 0))
+            .expect("palette always contains the backbone config")
+    }
+
+    /// Variant whose canonical config equals `config` exactly, if any.
+    pub fn variant_for(&self, config: &CompressionConfig) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.config == config.ops_ids())
+    }
+
+    /// Nearest palette variant by per-layer config distance — the artifact
+    /// "snap" step (DESIGN.md §2): the search explores the full space, the
+    /// executor runs the closest pre-lowered artifact.
+    pub fn nearest_variant(&self, config: &CompressionConfig) -> (&Variant, usize) {
+        let ids = config.ops_ids();
+        self.variants
+            .iter()
+            .map(|v| {
+                let dist: usize = v
+                    .config
+                    .iter()
+                    .zip(ids.iter())
+                    .map(|(&a, &b)| config_op_distance(a, b))
+                    .sum();
+                (v, dist)
+            })
+            .min_by_key(|&(v, d)| (d, std::cmp::Reverse((v.accuracy * 1e6) as u64)))
+            .expect("palette is non-empty")
+    }
+
+    /// Probe accuracy drop for (layer, op), if measured.
+    pub fn probe_drop(&self, layer: usize, op: Op) -> Option<f64> {
+        self.probes.get(&format!("{}:{}", layer, op.id())).copied()
+    }
+
+    /// Absolute path of a variant's HLO artifact.
+    pub fn hlo_path(&self, v: &Variant, root: &Path) -> PathBuf {
+        root.join(&v.hlo)
+    }
+}
+
+impl Variant {
+    fn from_json(j: &Json) -> Result<Variant> {
+        let config = j
+            .get("config")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_u64()? as u8))
+            .collect::<Result<Vec<u8>>>()?;
+        let per_layer = j
+            .get("per_layer")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(LayerCost {
+                    macs: l.get("macs")?.as_u64()?,
+                    params: l.get("params")?.as_u64()?,
+                    acts: l.get("acts")?.as_u64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Variant {
+            id: j.get("id")?.as_usize()?,
+            config,
+            hlo: j.get("hlo")?.as_str()?.to_string(),
+            accuracy: j.get("accuracy")?.as_f64()?,
+            tuned: j.get("tuned")?.as_bool()?,
+            macs: j.get("macs")?.as_u64()?,
+            params: j.get("params")?.as_u64()?,
+            acts: j.get("acts")?.as_u64()?,
+            per_layer,
+        })
+    }
+}
+
+/// Distance between two operator choices at one layer: 0 if equal, 1 if
+/// same δ-family (e.g. ch25 vs ch50), 3 otherwise.
+fn config_op_distance(a: u8, b: u8) -> usize {
+    if a == b {
+        return 0;
+    }
+    let (fa, fb) = match (Op::from_id(a), Op::from_id(b)) {
+        (Some(x), Some(y)) => (x.family(), y.family()),
+        _ => return 3,
+    };
+    if fa == fb {
+        1
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn toy_task() -> TaskArtifacts {
+        TaskArtifacts {
+            name: "t".into(),
+            title: "toy".into(),
+            input_shape: vec![32, 32, 1],
+            num_classes: 4,
+            latency_budget_ms: 20.0,
+            acc_loss_threshold: 0.5,
+            backbone: Backbone {
+                widths: vec![16, 32, 32, 64, 64],
+                strides: vec![1, 2, 1, 2, 1],
+                residual: vec![false, false, true, false, true],
+                kernel: 3,
+                accuracy: 0.95,
+            },
+            variants: vec![
+                Variant {
+                    id: 0,
+                    config: vec![0, 0, 0, 0, 0],
+                    hlo: "t/v0.hlo.txt".into(),
+                    accuracy: 0.95,
+                    tuned: false,
+                    macs: 100,
+                    params: 10,
+                    acts: 5,
+                    per_layer: vec![],
+                },
+                Variant {
+                    id: 1,
+                    config: vec![0, 4, 0, 4, 0],
+                    hlo: "t/v1.hlo.txt".into(),
+                    accuracy: 0.93,
+                    tuned: true,
+                    macs: 50,
+                    params: 5,
+                    acts: 4,
+                    per_layer: vec![],
+                },
+            ],
+            probes: HashMap::from([("1:4".to_string(), 0.02)]),
+            importances: vec![],
+            mutation_sigmas: vec![],
+            sigma_scale: 0.1,
+        }
+    }
+
+    #[test]
+    fn backbone_variant_is_all_identity() {
+        let t = toy_task();
+        assert_eq!(t.backbone_variant().id, 0);
+    }
+
+    #[test]
+    fn nearest_variant_prefers_family_match() {
+        let t = toy_task();
+        let cfg = CompressionConfig::from_ids(&[0, 5, 0, 4, 0]).unwrap(); // ch75,ch50
+        let (v, d) = t.nearest_variant(&cfg);
+        assert_eq!(v.id, 1); // ch50/ch50 is family-distance 1, backbone is 6
+        assert_eq!(d, 1);
+    }
+
+    #[test]
+    fn probe_lookup() {
+        let t = toy_task();
+        assert_eq!(t.probe_drop(1, Op::Ch50), Some(0.02));
+        assert_eq!(t.probe_drop(2, Op::Ch50), None);
+    }
+
+    #[test]
+    fn json_manifest_parses() {
+        let doc = r#"{"version": 1, "fast": true, "tasks": {"d9": {
+            "name": "d9", "title": "toy", "input_shape": [8, 8, 1],
+            "num_classes": 2, "latency_budget_ms": 10.0,
+            "acc_loss_threshold": 0.5,
+            "backbone": {"widths": [4, 8], "strides": [1, 2],
+                         "residual": [false, false], "kernel": 3,
+                         "accuracy": 0.9},
+            "variants": [{"id": 0, "config": [0, 0], "hlo": "d9/v0.hlo.txt",
+                          "accuracy": 0.9, "tuned": false, "macs": 10,
+                          "params": 5, "acts": 3,
+                          "per_layer": [{"macs": 10, "params": 5, "acts": 3}]}],
+            "probes": {"1:4": 0.01},
+            "importances": [[1.0, 0.5, 0.2, 0.1]],
+            "mutation_sigmas": [[0.1, 0.2]],
+            "sigma_scale": 0.1}}}"#;
+        let j = Json::parse(doc).unwrap();
+        let m = Manifest::from_json(&j, PathBuf::from("/tmp")).unwrap();
+        assert!(m.fast);
+        let t = m.task("d9").unwrap();
+        assert_eq!(t.n_layers(), 2);
+        assert_eq!(t.variants[0].per_layer.len(), 1);
+        assert_eq!(t.probe_drop(1, Op::Ch50), Some(0.01));
+        assert!(m.task("nope").is_err());
+    }
+}

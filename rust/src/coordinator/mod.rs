@@ -1,0 +1,102 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`operators`] / [`config`] / [`encoding`] — the compression-operator
+//!   space and its candidate encodings (paper §4.1, §5.2.1).
+//! * [`costmodel`] / [`accuracy`] / [`eval`] — the runtime scoring stack:
+//!   arithmetic-intensity cost model (Eq. 2), prior-based accuracy
+//!   predictor, and the Eq.-1 objective/constraints.
+//! * [`search`] — Runtime3C (Algorithm 1) plus the Exhaustive and Greedy
+//!   baseline optimizers of §6.1.
+//! * [`baselines`] — hand-crafted / on-demand DNN specialization baselines
+//!   (Table 2 rows).
+//! * [`manifest`] — artifact manifest loader.
+//! * [`engine`] — the AdaSpring engine wiring context → search → executor.
+
+pub mod accuracy;
+pub mod baselines;
+pub mod config;
+pub mod costmodel;
+pub mod encoding;
+pub mod engine;
+pub mod eval;
+pub mod manifest;
+pub mod operators;
+pub mod search;
+
+pub use config::CompressionConfig;
+pub use manifest::Manifest;
+pub use operators::Op;
+
+/// Shared test fixtures (unit tests across coordinator modules).
+#[cfg(test)]
+pub mod test_fixtures {
+    use std::collections::HashMap;
+
+    use super::manifest::{Backbone, TaskArtifacts, Variant};
+
+    /// A toy task with a plausible palette + probes for predictor tests.
+    pub fn toy_task_with_backbone(bb: &Backbone) -> TaskArtifacts {
+        let mk = |id: usize, config: Vec<u8>, accuracy: f64| Variant {
+            id,
+            config,
+            hlo: format!("t/v{id}.hlo.txt"),
+            accuracy,
+            tuned: id != 0,
+            macs: 1_000_000 / (id as u64 + 1),
+            params: 70_000 / (id as u64 + 1),
+            acts: 54_000,
+            per_layer: vec![],
+        };
+        TaskArtifacts {
+            name: "t".into(),
+            title: "toy".into(),
+            input_shape: vec![32, 32, 1],
+            num_classes: 9,
+            latency_budget_ms: 30.0,
+            acc_loss_threshold: 0.6,
+            backbone: bb.clone(),
+            variants: vec![
+                mk(0, vec![0, 0, 0, 0, 0], bb.accuracy),
+                mk(1, vec![0, 1, 1, 1, 1], bb.accuracy - 0.015),
+                mk(2, vec![0, 2, 2, 2, 2], bb.accuracy - 0.010),
+                mk(3, vec![0, 4, 0, 4, 0], bb.accuracy - 0.020),
+                mk(4, vec![0, 5, 0, 5, 0], bb.accuracy - 0.060),
+                mk(5, vec![0, 0, 6, 0, 6], bb.accuracy - 0.030),
+                mk(6, vec![0, 7, 0, 7, 0], bb.accuracy - 0.040),
+                mk(7, vec![0, 8, 6, 8, 6], bb.accuracy - 0.050),
+            ],
+            probes: HashMap::from([
+                ("1:1".to_string(), 0.005),
+                ("1:2".to_string(), 0.004),
+                ("1:4".to_string(), 0.010),
+                ("1:5".to_string(), 0.030),
+                ("3:1".to_string(), 0.006),
+                ("3:2".to_string(), 0.005),
+                ("3:4".to_string(), 0.012),
+                ("3:5".to_string(), 0.035),
+                ("2:6".to_string(), 0.012),
+                ("4:6".to_string(), 0.018),
+            ]),
+            importances: vec![vec![1.0; 16], vec![0.8; 32], vec![0.6; 32],
+                              vec![0.5; 64], vec![0.4; 64]],
+            mutation_sigmas: vec![vec![0.05; 16], vec![0.08; 32], vec![0.1; 32],
+                                  vec![0.12; 64], vec![0.15; 64]],
+            sigma_scale: 0.1,
+        }
+    }
+
+    /// The standard 5-layer toy backbone.
+    pub fn toy_backbone() -> Backbone {
+        Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        }
+    }
+
+    pub fn toy_task() -> TaskArtifacts {
+        toy_task_with_backbone(&toy_backbone())
+    }
+}

@@ -1,0 +1,230 @@
+//! Compression operators δ1–δ4 (paper §4.1) and their grouping (§5.1.2).
+//!
+//! This is the Rust mirror of `python/compile/operators.py` — operator ids,
+//! legality rules, and shape arithmetic MUST stay in sync (the integration
+//! tests cross-check both against `artifacts/manifest.json`).
+
+/// Operator ids shared with the Python side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Op {
+    /// Keep the conv layer as-is.
+    Identity = 0,
+    /// δ1 multi-branch channel merging (SqueezeNet Fire block).
+    Fire = 1,
+    /// δ2 low-rank factorization: K×K conv → K×K@r + 1×1.
+    Svd = 2,
+    /// δ3 channel pruning, 25% of output channels pruned.
+    Ch25 = 3,
+    /// δ3 channel pruning, 50% pruned.
+    Ch50 = 4,
+    /// δ3 channel pruning, 75% pruned.
+    Ch75 = 5,
+    /// δ4 depth scaling: drop the conv branch of a residual block.
+    Depth = 6,
+    /// δ1+δ3 group (paper-suggested hardware-efficient pairing).
+    FireCh50 = 7,
+    /// δ2+δ3 group.
+    SvdCh50 = 8,
+}
+
+/// All operators, in id order.
+pub const ALL_OPS: [Op; 9] = [
+    Op::Identity,
+    Op::Fire,
+    Op::Svd,
+    Op::Ch25,
+    Op::Ch50,
+    Op::Ch75,
+    Op::Depth,
+    Op::FireCh50,
+    Op::SvdCh50,
+];
+
+/// Number of selectable operators per layer (M in the paper's Fig. 7
+/// encoding-complexity analysis; M = 8 non-identity ops + identity).
+pub const NUM_OPS: usize = ALL_OPS.len();
+
+/// δ1 squeeze width ratio (relative to Cin). Mirror of FIRE_SQUEEZE_RATIO.
+pub const FIRE_SQUEEZE_RATIO: f64 = 0.5;
+/// δ2 rank ratio (relative to Cout). Mirror of SVD_RANK_RATIO.
+pub const SVD_RANK_RATIO: f64 = 0.5;
+
+impl Op {
+    /// Operator from its wire id.
+    pub fn from_id(id: u8) -> Option<Op> {
+        ALL_OPS.get(id as usize).copied()
+    }
+
+    /// Wire id (same as the Python constants).
+    pub fn id(self) -> u8 {
+        self as u8
+    }
+
+    /// Human-readable name (matches OP_NAMES in operators.py).
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Identity => "identity",
+            Op::Fire => "fire",
+            Op::Svd => "svd",
+            Op::Ch25 => "ch25",
+            Op::Ch50 => "ch50",
+            Op::Ch75 => "ch75",
+            Op::Depth => "depth",
+            Op::FireCh50 => "fire+ch50",
+            Op::SvdCh50 => "svd+ch50",
+        }
+    }
+
+    /// δ-family label used in the paper's case-study narration (Fig. 12).
+    pub fn family(self) -> &'static str {
+        match self {
+            Op::Identity => "-",
+            Op::Fire => "δ1",
+            Op::Svd => "δ2",
+            Op::Ch25 | Op::Ch50 | Op::Ch75 => "δ3",
+            Op::Depth => "δ4",
+            Op::FireCh50 => "δ1+δ3",
+            Op::SvdCh50 => "δ2+δ3",
+        }
+    }
+
+    /// Channel-prune fraction carried by this operator (0 for none).
+    pub fn prune_ratio(self) -> f64 {
+        match self {
+            Op::Ch25 => 0.25,
+            Op::Ch50 | Op::FireCh50 | Op::SvdCh50 => 0.50,
+            Op::Ch75 => 0.75,
+            _ => 0.0,
+        }
+    }
+
+    /// Does this operator change the layer's output-channel count?
+    pub fn prunes_output(self) -> bool {
+        self.prune_ratio() > 0.0
+    }
+
+    /// Per-layer legality — mirror of operators.py::op_is_legal.
+    ///
+    /// δ4 only drops residual branches; channel-changing ops cannot apply
+    /// to residual layers (the identity add needs Cin == Cout).
+    pub fn is_legal(self, cin: usize, cout: usize, stride: usize, residual: bool) -> bool {
+        match self {
+            Op::Depth => residual && cin == cout && stride == 1,
+            Op::Ch25 | Op::Ch50 | Op::Ch75 | Op::FireCh50 | Op::SvdCh50 => {
+                if residual {
+                    return false;
+                }
+                let keep = (cout as f64 * (1.0 - self.prune_ratio())).round() as usize;
+                keep.max(4) >= 4 && keep >= 4
+            }
+            _ => true,
+        }
+    }
+
+    /// Coarse-grained (δ1/δ2 structural) vs fine-grained (δ3/δ4 scaling)
+    /// classification from §5.1.1.
+    pub fn is_coarse(self) -> bool {
+        matches!(self, Op::Fire | Op::Svd | Op::FireCh50 | Op::SvdCh50)
+    }
+
+    /// Mutation neighbours for the channel-wise variance injection
+    /// (Algorithm 1 line 5): same operator family, jittered scaling ratio
+    /// or toggled fine-grained pairing.
+    pub fn mutation_neighbours(self) -> &'static [Op] {
+        match self {
+            Op::Identity => &[Op::Ch25, Op::Depth],
+            Op::Fire => &[Op::FireCh50, Op::Svd],
+            Op::Svd => &[Op::SvdCh50, Op::Fire],
+            Op::Ch25 => &[Op::Ch50, Op::Identity],
+            Op::Ch50 => &[Op::Ch25, Op::Ch75],
+            Op::Ch75 => &[Op::Ch50, Op::SvdCh50],
+            Op::Depth => &[Op::Identity, Op::Fire],
+            Op::FireCh50 => &[Op::Fire, Op::Ch50],
+            Op::SvdCh50 => &[Op::Svd, Op::Ch50],
+        }
+    }
+}
+
+/// Squeeze width of a δ1 fire transform (mirror of fire_from_conv).
+pub fn fire_squeeze_width(cin: usize) -> usize {
+    ((cin as f64 * FIRE_SQUEEZE_RATIO).round() as usize).max(4).min(cin)
+}
+
+/// 1×1-expand width of a δ1 fire transform.
+pub fn fire_e1_width(cout: usize) -> usize {
+    (cout / 4).max(2)
+}
+
+/// δ2 rank (mirror of svd_from_conv).
+pub fn svd_rank(k: usize, cin: usize, cout: usize) -> usize {
+    ((cout as f64 * SVD_RANK_RATIO).round() as usize)
+        .max(4)
+        .min((k * k * cin).min(cout))
+}
+
+/// Surviving output-channel count under a prune ratio (mirror of
+/// keep_indices).
+pub fn kept_channels(cout: usize, prune_ratio: f64) -> usize {
+    ((cout as f64 * (1.0 - prune_ratio)).round() as usize).max(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip() {
+        for op in ALL_OPS {
+            assert_eq!(Op::from_id(op.id()), Some(op));
+        }
+        assert_eq!(Op::from_id(9), None);
+    }
+
+    #[test]
+    fn depth_requires_residual_square_stride1() {
+        assert!(Op::Depth.is_legal(64, 64, 1, true));
+        assert!(!Op::Depth.is_legal(64, 64, 1, false));
+        assert!(!Op::Depth.is_legal(32, 64, 1, true));
+        assert!(!Op::Depth.is_legal(64, 64, 2, true));
+    }
+
+    #[test]
+    fn prune_illegal_on_residual() {
+        for op in [Op::Ch25, Op::Ch50, Op::Ch75, Op::FireCh50, Op::SvdCh50] {
+            assert!(!op.is_legal(64, 64, 1, true), "{op:?}");
+            assert!(op.is_legal(32, 64, 2, false), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn structural_ops_always_legal_on_plain_layers() {
+        for op in [Op::Identity, Op::Fire, Op::Svd] {
+            assert!(op.is_legal(3, 16, 1, false));
+            assert!(op.is_legal(64, 64, 1, true));
+        }
+    }
+
+    #[test]
+    fn shape_helpers_match_python() {
+        // python: s = max(4, round(cin*0.5)); e1 = max(2, cout//4);
+        //         r = max(4, min(round(cout*0.5), min(9*cin, cout)))
+        assert_eq!(fire_squeeze_width(16), 8);
+        assert_eq!(fire_squeeze_width(3), 3); // min(max(4,2),3)=3
+        assert_eq!(fire_e1_width(64), 16);
+        assert_eq!(fire_e1_width(6), 2);
+        assert_eq!(svd_rank(3, 16, 32), 16);
+        assert_eq!(svd_rank(3, 3, 16), 8);
+        assert_eq!(kept_channels(64, 0.75), 16);
+        assert_eq!(kept_channels(8, 0.75), 4);
+    }
+
+    #[test]
+    fn mutation_neighbours_are_distinct() {
+        for op in ALL_OPS {
+            for n in op.mutation_neighbours() {
+                assert_ne!(*n, op);
+            }
+        }
+    }
+}

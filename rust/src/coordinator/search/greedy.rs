@@ -1,0 +1,97 @@
+//! Greedy-optimizer baseline (paper §6.1): "selects the best compression
+//! operator layer-by-layer that obtains the best tradeoff between accuracy
+//! and parameter size, in which the relative importance is equally set to a
+//! fixed value of 0.5."
+//!
+//! Unlike Runtime3C it (a) scores accuracy-vs-*parameter-size* rather than
+//! the hardware-efficiency criteria, (b) keeps no Pareto front or mutation
+//! diversity, and (c) never early-stops on context satisfaction — exactly
+//! the behaviour Table 2 measures (fast but ~9 points worse accuracy).
+
+use std::time::Instant;
+
+use super::runtime3c::SearchResult;
+use crate::coordinator::config::CompressionConfig;
+use crate::coordinator::encoding::ProgressiveCode;
+use crate::coordinator::eval::{Constraints, Evaluator};
+use crate::coordinator::operators::ALL_OPS;
+
+/// Greedy layer-by-layer optimizer.
+#[derive(Debug, Clone, Default)]
+pub struct GreedyOptimizer;
+
+impl GreedyOptimizer {
+    pub fn new() -> Self {
+        GreedyOptimizer
+    }
+
+    pub fn search(&self, eval: &Evaluator, c: &Constraints) -> SearchResult {
+        let t0 = Instant::now();
+        let n = eval.n_layers();
+        let backbone_params =
+            eval.cost_model().costs(&CompressionConfig::identity(n)).params as f64;
+        let mut current = CompressionConfig::identity(n);
+        let mut evaluated = 0usize;
+
+        for layer in 1..n {
+            let mut best: Option<(f64, CompressionConfig)> = None;
+            for &op in ALL_OPS.iter() {
+                let mut cfg = current.clone();
+                cfg.set(layer, op);
+                let cfg = cfg.canonicalize(eval.cost_model().backbone());
+                let e = eval.evaluate(&cfg, c);
+                evaluated += 1;
+                // Fixed 0.5/0.5 tradeoff between accuracy loss and params.
+                let score = 0.5 * (e.acc_loss + 1e-3).ln()
+                    + 0.5 * (e.costs.params as f64 / backbone_params).ln();
+                if best.as_ref().is_none_or(|(s, _)| score < *s) {
+                    best = Some((score, cfg));
+                }
+            }
+            current = best.unwrap().1;
+        }
+
+        let evaluation = eval.evaluate(&current, c);
+        SearchResult {
+            layers_visited: n - 1,
+            candidates_evaluated: evaluated,
+            search_time_us: t0.elapsed().as_micros(),
+            code: ProgressiveCode::from_config_prefix(&current, n - 1),
+            early_stop: false,
+            evaluation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accuracy::AccuracyModel;
+    use crate::coordinator::costmodel::CostModel;
+    use crate::coordinator::test_fixtures::{toy_backbone, toy_task};
+    use crate::platform::Platform;
+
+    fn evaluator() -> Evaluator {
+        let cm = CostModel::new(&toy_backbone(), &[32, 32, 1], 9);
+        Evaluator::new(cm, AccuracyModel::fit(&toy_task()), &Platform::raspberry_pi_4b())
+    }
+
+    #[test]
+    fn greedy_compresses_something() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.5, 0.10, 30.0, 2 << 20);
+        let r = GreedyOptimizer::new().search(&eval, &c);
+        assert!(r.evaluation.config.compressed_count() > 0);
+        assert_eq!(r.layers_visited, 4);
+    }
+
+    #[test]
+    fn greedy_always_visits_all_layers() {
+        // No early stop even with a trivially satisfied budget.
+        let eval = evaluator();
+        let c = Constraints::from_battery(1.0, 0.9, 1e6, u64::MAX / 2);
+        let r = GreedyOptimizer::new().search(&eval, &c);
+        assert!(!r.early_stop);
+        assert_eq!(r.layers_visited, 4);
+    }
+}

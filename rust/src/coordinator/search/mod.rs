@@ -1,0 +1,12 @@
+//! Runtime search strategies (paper §5.2) and baseline optimizers (§6.1).
+
+pub mod exhaustive;
+pub mod greedy;
+pub mod mutation;
+pub mod pareto;
+pub mod runtime3c;
+
+pub use exhaustive::ExhaustiveOptimizer;
+pub use greedy::GreedyOptimizer;
+pub use mutation::Mutator;
+pub use runtime3c::{Runtime3C, Runtime3CParams, SearchResult};

@@ -1,0 +1,124 @@
+//! Trained channel-wise variance mutation (paper §4.2.2-3, Algorithm 1
+//! line 5: "mutate and augment 2 candidates to 6").
+//!
+//! The design-time training calibrates a per-layer mutation magnitude
+//! (manifest `mutation_sigmas` / `sigma_scale`): important channels receive
+//! little noise, so mutating a layer whose channels are important is less
+//! likely to change the operator aggressively.  At runtime the mutation
+//! perturbs a candidate's operator choice at the current layer towards a
+//! family neighbour (ch50→ch25/ch75, fire→fire+ch50, ...), with the jump
+//! probability scaled by the trained magnitude.
+
+use crate::coordinator::config::CompressionConfig;
+use crate::coordinator::manifest::TaskArtifacts;
+use crate::util::rng::Rng;
+
+/// Mutation engine bound to a task's trained magnitudes.
+#[derive(Debug, Clone)]
+pub struct Mutator {
+    /// Mean mutation magnitude per layer (from trained per-channel sigmas).
+    layer_sigma: Vec<f64>,
+    /// Global calibration scale.
+    sigma_scale: f64,
+}
+
+impl Mutator {
+    pub fn from_task(task: &TaskArtifacts) -> Mutator {
+        let layer_sigma = task
+            .mutation_sigmas
+            .iter()
+            .map(|s| {
+                if s.is_empty() {
+                    0.1
+                } else {
+                    s.iter().sum::<f64>() / s.len() as f64
+                }
+            })
+            .collect();
+        Mutator { layer_sigma, sigma_scale: task.sigma_scale.max(1e-3) }
+    }
+
+    /// Uniform fallback (tests / baselines without trained sigmas).
+    pub fn uniform(n_layers: usize, sigma: f64) -> Mutator {
+        Mutator { layer_sigma: vec![sigma; n_layers], sigma_scale: sigma }
+    }
+
+    /// Mutation probability at `layer` — higher trained variance ⇒ the
+    /// layer tolerates bolder architecture jumps.
+    pub fn jump_probability(&self, layer: usize) -> f64 {
+        let sigma = self.layer_sigma.get(layer).copied().unwrap_or(0.1);
+        (sigma / self.sigma_scale).clamp(0.1, 1.0)
+    }
+
+    /// Produce `count` mutants of `base` by perturbing the op at `layer`
+    /// towards family neighbours.  Mutants are canonical-legal by
+    /// construction of `mutation_neighbours` + downstream canonicalization.
+    pub fn mutate_at(
+        &self,
+        base: &CompressionConfig,
+        layer: usize,
+        count: usize,
+        rng: &mut Rng,
+    ) -> Vec<CompressionConfig> {
+        let mut out = Vec::with_capacity(count);
+        let op = base.op(layer);
+        let neighbours = op.mutation_neighbours();
+        let p = self.jump_probability(layer);
+        for k in 0..count {
+            let mut cfg = base.clone();
+            if rng.chance(p) || k == 0 {
+                // Deterministic first mutant: cycle through neighbours so
+                // the augmentation always adds diversity.
+                let n = neighbours[k % neighbours.len()];
+                cfg.set(layer, n);
+            }
+            out.push(cfg);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::operators::Op;
+    use crate::coordinator::test_fixtures::toy_task;
+
+    #[test]
+    fn from_task_reads_sigmas() {
+        let m = Mutator::from_task(&toy_task());
+        assert_eq!(m.layer_sigma.len(), 5);
+        // Later layers have larger trained sigma -> larger jump probability.
+        assert!(m.jump_probability(4) >= m.jump_probability(0));
+    }
+
+    #[test]
+    fn mutants_differ_from_base_at_least_once() {
+        let m = Mutator::uniform(5, 0.2);
+        let mut rng = Rng::new(1);
+        let base = CompressionConfig::from_ids(&[0, 4, 0, 0, 0]).unwrap();
+        let mutants = m.mutate_at(&base, 1, 4, &mut rng);
+        assert_eq!(mutants.len(), 4);
+        assert!(mutants.iter().any(|c| c.op(1) != Op::Ch50));
+        // Only the target layer moves.
+        for c in &mutants {
+            for l in [0usize, 2, 3, 4] {
+                assert_eq!(c.op(l), base.op(l));
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_stays_in_neighbourhood() {
+        let m = Mutator::uniform(5, 1.0);
+        let mut rng = Rng::new(7);
+        let base = CompressionConfig::from_ids(&[0, 1, 0, 0, 0]).unwrap(); // fire
+        for c in m.mutate_at(&base, 1, 16, &mut rng) {
+            let op = c.op(1);
+            assert!(
+                op == Op::Fire || Op::Fire.mutation_neighbours().contains(&op),
+                "unexpected mutation {op:?}"
+            );
+        }
+    }
+}

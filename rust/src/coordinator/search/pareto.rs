@@ -1,0 +1,152 @@
+//! Pareto-front utilities over (accuracy-loss ↓, efficiency ↑) — the
+//! decision structure of Algorithm 1 lines 4/6.
+
+use crate::coordinator::eval::{Constraints, Evaluation};
+
+/// Indices of the Pareto-optimal evaluations: no other candidate has both
+/// lower accuracy loss and higher efficiency.
+pub fn pareto_front(evals: &[Evaluation]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, a) in evals.iter().enumerate() {
+        for (j, b) in evals.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let dominates = b.acc_loss <= a.acc_loss
+                && b.efficiency >= a.efficiency
+                && (b.acc_loss < a.acc_loss || b.efficiency > a.efficiency);
+            if dominates {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+/// The best-two compromises on the front by the λ-weighted objective
+/// (Algorithm 1 line 4: "select 2 candidates from the Pareto front").
+pub fn best_two<'a>(
+    evals: &'a [Evaluation],
+    front: &[usize],
+    c: &Constraints,
+) -> Vec<&'a Evaluation> {
+    let mut ranked: Vec<&Evaluation> = front.iter().map(|&i| &evals[i]).collect();
+    ranked.sort_by(|a, b| a.score(c).partial_cmp(&b.score(c)).unwrap());
+    ranked.truncate(2);
+    ranked
+}
+
+/// Pareto-optimal single survivor (Algorithm 1 line 6: min A_loss while
+/// max E).  Feasible candidates are preferred *before* dominance filtering
+/// (the Eq.-1 constraints are hard); when nothing is feasible yet — the
+/// usual state at early layers under a tight budget — the candidate with
+/// the smallest constraint violation wins (ties broken by the λ-weighted
+/// score), so the layer-progressive search makes monotone progress towards
+/// the budget instead of stalling on the unconstrained optimum.
+pub fn survivor<'a>(evals: &'a [Evaluation], c: &Constraints) -> Option<&'a Evaluation> {
+    if evals.is_empty() {
+        return None;
+    }
+    let feasible_idxs: Vec<usize> =
+        (0..evals.len()).filter(|&i| evals[i].feasible).collect();
+    if !feasible_idxs.is_empty() {
+        // Pareto front restricted to the feasible subset, then best score.
+        let mut best: Option<usize> = None;
+        'outer: for &i in &feasible_idxs {
+            let a = &evals[i];
+            for &j in &feasible_idxs {
+                if i == j {
+                    continue;
+                }
+                let b = &evals[j];
+                let dominates = b.acc_loss <= a.acc_loss
+                    && b.efficiency >= a.efficiency
+                    && (b.acc_loss < a.acc_loss || b.efficiency > a.efficiency);
+                if dominates {
+                    continue 'outer;
+                }
+            }
+            if best.is_none_or(|k| a.score(c) < evals[k].score(c)) {
+                best = Some(i);
+            }
+        }
+        return best.map(|i| &evals[i]);
+    }
+    evals.iter().min_by(|a, b| {
+        (a.violation(c), a.score(c))
+            .partial_cmp(&(b.violation(c), b.score(c)))
+            .unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::CompressionConfig;
+    use crate::coordinator::costmodel::Costs;
+
+    fn ev(acc_loss: f64, efficiency: f64, feasible: bool) -> Evaluation {
+        Evaluation {
+            config: CompressionConfig::identity(5),
+            costs: Costs { macs: 1, params: 1, acts: 1 },
+            acc_loss,
+            efficiency,
+            latency_ms: 1.0,
+            energy_mj: 1.0,
+            feasible,
+        }
+    }
+
+    fn constraints() -> Constraints {
+        Constraints {
+            acc_loss_threshold: 0.5,
+            latency_budget_ms: 100.0,
+            storage_budget_bytes: 1 << 21,
+            lambda1: 0.5,
+            lambda2: 0.5,
+        }
+    }
+
+    #[test]
+    fn dominated_points_excluded() {
+        let evals = vec![
+            ev(0.01, 100.0, true), // dominates the next
+            ev(0.02, 90.0, true),
+            ev(0.05, 200.0, true), // different trade-off: on front
+        ];
+        let front = pareto_front(&evals);
+        assert_eq!(front, vec![0, 2]);
+    }
+
+    #[test]
+    fn identical_points_both_survive() {
+        let evals = vec![ev(0.01, 100.0, true), ev(0.01, 100.0, true)];
+        assert_eq!(pareto_front(&evals).len(), 2);
+    }
+
+    #[test]
+    fn survivor_prefers_feasible() {
+        let evals = vec![
+            ev(0.001, 500.0, false), // better score but infeasible
+            ev(0.02, 100.0, true),
+        ];
+        let s = survivor(&evals, &constraints()).unwrap();
+        assert!(s.feasible);
+        assert!((s.acc_loss - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survivor_falls_back_when_nothing_feasible() {
+        let evals = vec![ev(0.9, 10.0, false), ev(0.7, 5.0, false)];
+        assert!(survivor(&evals, &constraints()).is_some());
+    }
+
+    #[test]
+    fn best_two_returns_at_most_two() {
+        let evals = vec![ev(0.01, 100.0, true), ev(0.05, 200.0, true), ev(0.1, 300.0, true)];
+        let front = pareto_front(&evals);
+        assert!(front.len() >= 2);
+        assert_eq!(best_two(&evals, &front, &constraints()).len(), 2);
+    }
+}

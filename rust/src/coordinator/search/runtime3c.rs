@@ -1,0 +1,301 @@
+//! Runtime3C (Algorithm 1): Pareto decision-based runtime search for
+//! convolutional compression operator configurations.
+//!
+//! The paper decomposes the global problem into per-layer subproblems
+//! solved collaboratively: at each conv layer (starting from the second),
+//! the search inherits the survivor configuration of the previous layers,
+//! selects two candidates from the Pareto front of the hardware-efficient
+//! operator groups, mutates/augments them to six with the trained
+//! channel-wise variances, picks the Pareto-optimal survivor, and stops as
+//! soon as the deployment-context constraints are satisfied.
+
+use std::time::Instant;
+
+use super::mutation::Mutator;
+use super::pareto;
+use crate::coordinator::config::CompressionConfig;
+use crate::coordinator::encoding::ProgressiveCode;
+use crate::coordinator::eval::{Constraints, Evaluation, Evaluator};
+use crate::coordinator::operators::ALL_OPS;
+use crate::util::rng::Rng;
+
+/// Tunables of the Runtime3C search (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Runtime3CParams {
+    /// Candidates kept from the Pareto front per layer (paper: 2).
+    pub beam: usize,
+    /// Candidate pool after mutation augmentation (paper: 6).
+    pub augmented: usize,
+    /// Valid-space guard: candidates with predicted accuracy loss above
+    /// this are excluded from the Pareto selection (paper: 5%).
+    pub valid_loss_cap: f64,
+    /// RNG seed (mutation is the only stochastic step).
+    pub seed: u64,
+    /// Disable the mutation augmentation (Fig. 10(b) ablation).
+    pub mutate: bool,
+    /// Disable layer-inheritance: each layer restarts from identity
+    /// (the "locally greedy" ablation of Fig. 10(b)).
+    pub inherit: bool,
+    /// Relative score-improvement threshold below which a feasible search
+    /// stops (Algorithm 1 line 11: "judge whether the DNN performance
+    /// satisfies the current deployment context" — performance means the
+    /// λ-weighted objective, not just the hard budgets; stopping the moment
+    /// the budgets hold would leave the battery-driven efficiency demand
+    /// unserved).
+    pub converge_eps: f64,
+}
+
+impl Default for Runtime3CParams {
+    fn default() -> Self {
+        Runtime3CParams {
+            beam: 2,
+            augmented: 6,
+            valid_loss_cap: 0.05,
+            seed: 0x3C,
+            mutate: true,
+            inherit: true,
+            converge_eps: 0.02,
+        }
+    }
+}
+
+/// Search outcome: the chosen configuration plus bookkeeping for the
+/// paper's cost accounting (search latency, candidates evaluated, the
+/// progressive encoding trace).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub evaluation: Evaluation,
+    pub layers_visited: usize,
+    pub candidates_evaluated: usize,
+    pub search_time_us: u128,
+    pub code: ProgressiveCode,
+    /// Constraints were met before exhausting all layers.
+    pub early_stop: bool,
+}
+
+/// Runtime3C searcher.
+#[derive(Debug, Clone)]
+pub struct Runtime3C {
+    pub params: Runtime3CParams,
+    mutator: Mutator,
+}
+
+impl Runtime3C {
+    pub fn new(mutator: Mutator) -> Runtime3C {
+        Runtime3C { params: Runtime3CParams::default(), mutator }
+    }
+
+    pub fn with_params(mutator: Mutator, params: Runtime3CParams) -> Runtime3C {
+        Runtime3C { params, mutator }
+    }
+
+    /// Run Algorithm 1 under `constraints`.
+    pub fn search(&self, eval: &Evaluator, constraints: &Constraints) -> SearchResult {
+        let t0 = Instant::now();
+        let n = eval.n_layers();
+        let mut rng = Rng::new(self.params.seed);
+        let mut current = CompressionConfig::identity(n);
+        let mut code = ProgressiveCode::new();
+        let mut evaluated = 0usize;
+        let mut early_stop = false;
+        let mut layers_visited = 0usize;
+        let mut prev_score = eval.evaluate(&current, constraints).score(constraints);
+
+        // Line 2: iterate conv layers, starting from the second (idx 1).
+        for layer in 1..n {
+            layers_visited += 1;
+            // Line 3: inherit configuration from layers < `layer`.
+            let base = if self.params.inherit {
+                current.clone()
+            } else {
+                CompressionConfig::identity(n)
+            };
+
+            // Line 1: candidate space at this layer = hardware-efficient
+            // operator groups Δ' (legal ops incl. the paper's δ1+δ3 /
+            // δ2+δ3 pairings baked in as group operators).
+            let mut candidates: Vec<Evaluation> = Vec::with_capacity(ALL_OPS.len());
+            for &op in ALL_OPS.iter() {
+                let mut cfg = base.clone();
+                cfg.set(layer, op);
+                let cfg = cfg.canonicalize(eval.cost_model().backbone());
+                let e = eval.evaluate(&cfg, constraints);
+                evaluated += 1;
+                candidates.push(e);
+            }
+
+            // Valid-space guard (paper: exclude A_loss > 5%) — unless that
+            // empties the pool entirely.
+            let valid: Vec<Evaluation> = {
+                let v: Vec<Evaluation> = candidates
+                    .iter()
+                    .filter(|e| e.acc_loss <= self.params.valid_loss_cap)
+                    .cloned()
+                    .collect();
+                if v.is_empty() {
+                    candidates.clone()
+                } else {
+                    v
+                }
+            };
+
+            // Line 4: two best compromises from the Pareto front.
+            let front = pareto::pareto_front(&valid);
+            let two = pareto::best_two(&valid, &front, constraints);
+            let mut pool: Vec<Evaluation> = two.into_iter().cloned().collect();
+
+            // Line 5: mutate/augment to `augmented` candidates.
+            if self.params.mutate {
+                let need = self.params.augmented.saturating_sub(pool.len());
+                let seeds: Vec<CompressionConfig> =
+                    pool.iter().map(|e| e.config.clone()).collect();
+                let mut added = 0usize;
+                'grow: for seed_cfg in seeds.iter().cycle() {
+                    if added >= need {
+                        break 'grow;
+                    }
+                    let mutants = self.mutator.mutate_at(seed_cfg, layer, 2, &mut rng);
+                    for m in mutants {
+                        if added >= need {
+                            break 'grow;
+                        }
+                        let m = m.canonicalize(eval.cost_model().backbone());
+                        let e = eval.evaluate(&m, constraints);
+                        evaluated += 1;
+                        pool.push(e);
+                        added += 1;
+                    }
+                }
+            }
+
+            // The valid-space guard applies to the augmented pool too —
+            // mutation must not smuggle in candidates beyond the paper's
+            // A_loss > 5% invalid region.
+            let pool: Vec<Evaluation> = {
+                let v: Vec<Evaluation> = pool
+                    .iter()
+                    .filter(|e| e.acc_loss <= self.params.valid_loss_cap)
+                    .cloned()
+                    .collect();
+                if v.is_empty() {
+                    pool
+                } else {
+                    v
+                }
+            };
+
+            // Line 6: Pareto-optimal survivor (min A_loss, max E).
+            if let Some(surv) = pareto::survivor(&pool, constraints) {
+                // Lines 7-8: adopt the survivor; weights evolve by artifact
+                // switch (engine::select_artifact) — encode the choice.
+                current = surv.config.clone();
+            }
+            code = code.extend(current.op(layer));
+
+            // Lines 9-12: forward-evaluate the whole model and stop when the
+            // current deployment context is satisfied: hard budgets hold AND
+            // the λ-weighted objective has converged (no meaningful gain
+            // from compressing this layer).
+            let whole = eval.evaluate(&current, constraints);
+            evaluated += 1;
+            let improvement = prev_score - whole.score(constraints);
+            prev_score = whole.score(constraints);
+            if whole.feasible && improvement.abs() <= self.params.converge_eps {
+                early_stop = layer + 1 < n;
+                break;
+            }
+        }
+
+        let evaluation = eval.evaluate(&current, constraints);
+        SearchResult {
+            evaluation,
+            layers_visited,
+            candidates_evaluated: evaluated,
+            search_time_us: t0.elapsed().as_micros(),
+            code,
+            early_stop,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accuracy::AccuracyModel;
+    use crate::coordinator::costmodel::CostModel;
+    use crate::coordinator::test_fixtures::{toy_backbone, toy_task};
+    use crate::platform::Platform;
+
+    fn setup() -> (Evaluator, Runtime3C) {
+        let task = toy_task();
+        let bb = toy_backbone();
+        let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+        let am = AccuracyModel::fit(&task);
+        let eval = Evaluator::new(cm, am, &Platform::raspberry_pi_4b());
+        let r3c = Runtime3C::new(Mutator::from_task(&task));
+        (eval, r3c)
+    }
+
+    #[test]
+    fn search_returns_canonical_config() {
+        let (eval, r3c) = setup();
+        let c = Constraints::from_battery(0.8, 0.02, 30.0, 2 << 20);
+        let res = r3c.search(&eval, &c);
+        assert!(res.evaluation.config.is_canonical(eval.cost_model().backbone()));
+        assert!(res.candidates_evaluated > 0);
+    }
+
+    #[test]
+    fn tight_storage_budget_forces_compression() {
+        let (eval, r3c) = setup();
+        // Backbone params ≈ 69.5k * 4B ≈ 278KB; demand 150 KB.
+        let c = Constraints::from_battery(0.5, 0.10, 50.0, 150 * 1024);
+        let res = r3c.search(&eval, &c);
+        assert!(res.evaluation.config.compressed_count() > 0);
+        assert!(
+            res.evaluation.costs.param_bytes() <= 150 * 1024,
+            "params {} exceed budget",
+            res.evaluation.costs.param_bytes()
+        );
+    }
+
+    #[test]
+    fn relaxed_budget_stops_early() {
+        let (eval, r3c) = setup();
+        let c = Constraints::from_battery(0.9, 0.5, 1000.0, 8 << 20);
+        let res = r3c.search(&eval, &c);
+        assert!(res.early_stop || res.layers_visited <= 1);
+    }
+
+    #[test]
+    fn search_is_deterministic_per_seed() {
+        let (eval, r3c) = setup();
+        let c = Constraints::from_battery(0.4, 0.05, 20.0, 220 * 1024);
+        let a = r3c.search(&eval, &c);
+        let b = r3c.search(&eval, &c);
+        assert_eq!(a.evaluation.config, b.evaluation.config);
+    }
+
+    #[test]
+    fn progressive_code_tracks_visited_layers() {
+        let (eval, r3c) = setup();
+        let c = Constraints::from_battery(0.5, 0.05, 20.0, 150 * 1024);
+        let res = r3c.search(&eval, &c);
+        assert_eq!(res.code.visited(), res.layers_visited);
+    }
+
+    #[test]
+    fn battery_pressure_shifts_towards_efficiency() {
+        let (eval, r3c) = setup();
+        let full = Constraints::from_battery(1.0, 0.05, 40.0, 2 << 20);
+        let low = Constraints::from_battery(0.1, 0.05, 40.0, 2 << 20);
+        let e_full = r3c.search(&eval, &full).evaluation;
+        let e_low = r3c.search(&eval, &low).evaluation;
+        assert!(
+            e_low.efficiency >= e_full.efficiency * 0.99,
+            "low battery should not pick a less efficient config: {} vs {}",
+            e_low.efficiency,
+            e_full.efficiency
+        );
+    }
+}

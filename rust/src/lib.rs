@@ -1,0 +1,27 @@
+//! AdaSpring: context-adaptive and runtime-evolutionary deep model
+//! compression (Liu et al., IMWUT 5(1):24, 2021) — Rust L3 coordinator.
+//!
+//! The coordinator owns everything that happens after `make artifacts`:
+//! deployment-context simulation, the Runtime3C compression search
+//! (Algorithm 1), artifact selection/execution through PJRT, and the
+//! serving loop.  Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md §2):
+//! * [`coordinator`] — operators, configs, encodings, cost model, accuracy
+//!   predictor, Runtime3C + baseline optimizers, the AdaSpring engine.
+//! * [`runtime`] — PJRT CPU client; loads HLO-text artifacts and executes.
+//! * [`context`] — dynamic deployment context: battery, cache, events.
+//! * [`platform`] — analytic device models (RedMi 3S / Pi 4B / Jetbot).
+//! * [`serving`] — tokio request loop driving inference over events.
+//! * [`metrics`] — table/series emission for the benchmark harness.
+
+pub mod context;
+pub mod coordinator;
+pub mod metrics;
+pub mod platform;
+pub mod runtime;
+pub mod serving;
+pub mod util;
+
+pub use coordinator::engine::AdaSpring;
+pub use coordinator::manifest::Manifest;

@@ -1,0 +1,211 @@
+//! AdaSpring CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   info                       — manifest + platform summary
+//!   search   [--task --platform --battery --cache-mb ...]
+//!                              — one Runtime3C search, printed
+//!   evolve   [--task --platform ...]
+//!                              — search + artifact snap + PJRT swap + infer
+//!   serve    [--task --platform --minutes]
+//!                              — threaded serving demo over an event trace
+//!
+//! The bench binaries (bench_table2, ..., bench_fig10) regenerate the
+//! paper's tables/figures; the examples (quickstart, sound_assistant,
+//! dynamic_context) are the end-to-end drivers.
+
+use anyhow::{bail, Result};
+
+use adaspring::context::{Battery, CacheContention, ContextSimulator, EventTrace, Trigger, TriggerPolicy};
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::metrics::{f1, f2, Table};
+use adaspring::platform::Platform;
+use adaspring::serving::ServingLoop;
+use adaspring::util::cli::Args;
+use adaspring::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "search" => search(&args),
+        "evolve" => evolve(&args),
+        "serve" => serve(&args),
+        other => bail!("unknown subcommand {other}; try info|search|evolve|serve"),
+    }
+}
+
+fn load_manifest(args: &Args) -> Result<Manifest> {
+    Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))
+}
+
+fn platform(args: &Args) -> Platform {
+    Platform::by_name(args.get_or("platform", "raspberry")).unwrap_or_else(Platform::raspberry_pi_4b)
+}
+
+fn info(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    println!("AdaSpring manifest v{} (fast={})", m.version, m.fast);
+    let mut t = Table::new(&["task", "title", "input", "classes", "variants", "backbone acc"]);
+    let mut names: Vec<_> = m.tasks.keys().collect();
+    names.sort();
+    for name in names {
+        let task = &m.tasks[name];
+        t.row(vec![
+            task.name.clone(),
+            task.title.clone(),
+            format!("{:?}", task.input_shape),
+            task.num_classes.to_string(),
+            task.variants.len().to_string(),
+            format!("{:.3}", task.backbone.accuracy),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    println!("platforms:");
+    for p in Platform::all() {
+        println!(
+            "  {} ({}) — L2 {} MB, battery {} mAh",
+            p.name,
+            p.processor,
+            p.l2_cache_bytes / (1 << 20),
+            p.battery_mah
+        );
+    }
+    Ok(())
+}
+
+fn constraints_from_args(
+    args: &Args,
+    task: &adaspring::coordinator::manifest::TaskArtifacts,
+) -> Constraints {
+    let battery = args.get_f64("battery", 0.8);
+    let cache_mb = args.get_f64("cache-mb", 2.0);
+    Constraints::from_battery(
+        battery,
+        args.get_f64("acc-loss", task.acc_loss_threshold),
+        args.get_f64("latency-ms", task.latency_budget_ms),
+        (cache_mb * 1024.0 * 1024.0) as u64,
+    )
+}
+
+fn search(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let task_name = args.get_or("task", "d3");
+    let p = platform(args);
+    let mut engine = AdaSpring::new(&m, task_name, &p, false)?;
+    let c = constraints_from_args(args, engine.task());
+    let evo = engine.evolve(&c)?;
+    let e = &evo.search.evaluation;
+    println!("task={task_name} platform={}", p.name);
+    println!(
+        "context: battery-driven λ1={:.2} λ2={:.2}, S_bgt={} KB, T_bgt={} ms",
+        c.lambda1,
+        c.lambda2,
+        c.storage_budget_bytes / 1024,
+        c.latency_budget_ms
+    );
+    println!("searched config : {}", e.config.describe());
+    println!("deployed variant: v{} (snap distance {})", evo.variant_id, evo.snap_distance);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["predicted acc loss".into(), format!("{:.3}", e.acc_loss)]);
+    t.row(vec!["C (MACs)".into(), e.costs.macs.to_string()]);
+    t.row(vec!["Sp (params)".into(), e.costs.params.to_string()]);
+    t.row(vec!["Sa (acts)".into(), e.costs.acts.to_string()]);
+    t.row(vec!["C/Sp".into(), f1(e.costs.c_sp())]);
+    t.row(vec!["C/Sa".into(), f1(e.costs.c_sa())]);
+    t.row(vec!["E (Eq.2)".into(), f1(e.efficiency)]);
+    t.row(vec!["modelled latency (ms)".into(), f2(e.latency_ms)]);
+    t.row(vec!["modelled energy (mJ)".into(), f2(e.energy_mj)]);
+    t.row(vec!["search time (µs)".into(), evo.search.search_time_us.to_string()]);
+    t.row(vec!["evolution time (µs)".into(), evo.evolution_us.to_string()]);
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn evolve(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let task_name = args.get_or("task", "d3");
+    let p = platform(args);
+    let mut engine = AdaSpring::new(&m, task_name, &p, true)?;
+    let c = constraints_from_args(args, engine.task());
+    let evo = engine.evolve(&c)?;
+    println!(
+        "evolved to variant v{} ({}) in {:.2} ms (search {:.2} ms)",
+        evo.variant_id,
+        evo.search.evaluation.config.describe(),
+        evo.evolution_us as f64 / 1e3,
+        evo.search.search_time_us as f64 / 1e3
+    );
+    // One inference through PJRT to prove the artifact runs.
+    let n: usize = engine.task().input_shape.iter().product();
+    let mut rng = Rng::new(7);
+    let input: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let (logits, stats) = engine.infer(&input)?;
+    println!(
+        "inference: {} classes, argmax={}, host latency {:.2} ms",
+        logits.len(),
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0),
+        stats.latency_us as f64 / 1e3
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let m = load_manifest(args)?;
+    let task_name = args.get_or("task", "d3");
+    let p = platform(args);
+    let minutes = args.get_f64("minutes", 10.0);
+    let mut engine = AdaSpring::new(&m, task_name, &p, true)?;
+    let n_in: usize = engine.task().input_shape.iter().product();
+
+    let mut sim = ContextSimulator::new(
+        Battery::new(&p).with_fraction(args.get_f64("battery", 0.86)),
+        CacheContention::new(p.l2_cache_bytes, 0.25, 42),
+        EventTrace::day_profile(7),
+    );
+    let events = sim.events.sample(minutes * 60.0);
+    println!("serving {} events over {minutes} simulated minutes on {}", events.len(), p.name);
+
+    let mut looper = ServingLoop {
+        engine: &mut engine,
+        sim: &mut sim,
+        trigger: Trigger::new(TriggerPolicy::Hybrid {
+            period_s: 7200.0,
+            battery_delta: 0.05,
+            cache_delta_bytes: 256 * 1024,
+        }),
+        energy_per_inference_j: 3e-3,
+    };
+    let mut rng = Rng::new(123);
+    let report = looper.run(&events, minutes * 60.0, |_ev| {
+        (0..n_in).map(|_| rng.normal() as f32).collect()
+    })?;
+
+    println!(
+        "handled {} inferences ({} dropped); host p50={:.2} ms p99={:.2} ms",
+        report.inferences,
+        report.dropped,
+        report.inference_latency_us.percentile(50.0) / 1e3,
+        report.inference_latency_us.percentile(99.0) / 1e3
+    );
+    let mut t = Table::new(&["t (min)", "battery", "cache KB", "variant", "config", "evolve ms"]);
+    for e in &report.evolutions {
+        t.row(vec![
+            f1(e.t_seconds / 60.0),
+            format!("{:.0}%", e.battery_fraction * 100.0),
+            (e.available_cache / 1024).to_string(),
+            format!("v{}", e.variant_id),
+            e.config_desc.clone(),
+            f2(e.evolution_us as f64 / 1e3),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}

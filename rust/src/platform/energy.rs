@@ -1,0 +1,141 @@
+//! Per-inference energy model (DESIGN.md §5-3).
+//!
+//! The paper argues (§5.1.2, citing Jha et al.) that energy is dominated by
+//! data movement, not parameter count: SqueezeNet has 51.8× fewer parameters
+//! than AlexNet yet costs 33% *more* energy because of its larger activation
+//! traffic.  The model below reproduces that mechanism:
+//!
+//!   En = C·e_mac                                   (compute)
+//!      + param_bytes·e_param(cache_resident?)      (weight traffic)
+//!      + 2·act_bytes·e_act(spills?)                (activation write+read)
+//!      + sensing                                   (per-event overhead)
+//!
+//! Parameters read from L2 when the model fits the *currently available*
+//! cache budget (the dynamic context!), from DRAM otherwise — this is why
+//! shrinking Sp below S_bgt(t) pays off so strongly, and why activation-
+//! heavy "compressed" nets can lose.
+
+use super::Platform;
+use crate::coordinator::costmodel::Costs;
+
+/// Energy model bound to a platform.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    platform: Platform,
+}
+
+/// Energy breakdown per inference, joules.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyBreakdown {
+    pub compute_j: f64,
+    pub param_j: f64,
+    pub act_j: f64,
+    pub sensing_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.param_j + self.act_j + self.sensing_j
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_j() * 1e3
+    }
+}
+
+impl EnergyModel {
+    pub fn new(platform: &Platform) -> EnergyModel {
+        EnergyModel { platform: platform.clone() }
+    }
+
+    /// Energy per inference given the variant's costs and the currently
+    /// available L2 (bytes).  Only `param_cache_fraction` of it is usable
+    /// for DNN data (cache shared with the rest of the system).
+    pub fn inference_energy(&self, costs: &Costs, available_cache: u64) -> EnergyBreakdown {
+        let p = &self.platform;
+        let param_bytes = costs.param_bytes() as f64;
+        let act_bytes = costs.act_bytes() as f64;
+
+        let available_cache =
+            (available_cache as f64 * p.param_cache_fraction) as u64;
+        let cache_resident = costs.param_bytes() <= available_cache;
+        let e_param_byte = if cache_resident {
+            p.energy_per_sram_byte
+        } else {
+            p.energy_per_dram_byte
+        };
+        // Activations that overflow what's left of the cache after the
+        // parameters spill to DRAM.
+        let cache_left = available_cache.saturating_sub(costs.param_bytes()) as f64;
+        let act_spill_fraction = if act_bytes <= cache_left {
+            0.0
+        } else {
+            (act_bytes - cache_left) / act_bytes
+        };
+        let e_act_byte = act_spill_fraction * p.energy_per_dram_byte
+            + (1.0 - act_spill_fraction) * p.energy_per_sram_byte;
+
+        EnergyBreakdown {
+            compute_j: costs.macs as f64 * p.energy_per_mac,
+            param_j: param_bytes * e_param_byte,
+            act_j: 2.0 * act_bytes * e_act_byte, // write + read
+            sensing_j: p.sensing_energy_per_event,
+        }
+    }
+
+    /// Energy in mJ excluding the fixed sensing overhead (the quantity the
+    /// paper's Table 2 "En(mJ)" column varies with the DNN).
+    pub fn dnn_energy_mj(&self, costs: &Costs, available_cache: u64) -> f64 {
+        let b = self.inference_energy(costs, available_cache);
+        (b.compute_j + b.param_j + b.act_j) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(&Platform::raspberry_pi_4b())
+    }
+
+    #[test]
+    fn cache_residency_lowers_param_energy() {
+        let m = model();
+        // 50k params = 200 KB; effective slice of a 2 MB budget is ~307 KB
+        // (param_cache_fraction) -> resident; a 256 KB budget -> ~38 KB
+        // effective -> spilled.
+        let costs = Costs { macs: 1_000_000, params: 50_000, acts: 10_000 };
+        let cached = m.inference_energy(&costs, 2 * 1024 * 1024);
+        let spilled = m.inference_energy(&costs, 256 * 1024);
+        assert!(spilled.param_j > cached.param_j * 5.0);
+        assert_eq!(cached.compute_j, spilled.compute_j);
+    }
+
+    #[test]
+    fn squeeze_anomaly_reproduces() {
+        // A "compressed" net with far fewer params but much larger
+        // activation traffic must cost MORE energy when activations spill —
+        // the paper's SqueezeNet-vs-AlexNet anchor.
+        let m = model();
+        let cache = 256 * 1024; // tight budget
+        let chunky = Costs { macs: 5_000_000, params: 2_000_000, acts: 50_000 };
+        let squeezed = Costs { macs: 5_000_000, params: 40_000, acts: 2_000_000 };
+        let e_chunky = m.dnn_energy_mj(&chunky, cache);
+        let e_squeezed = m.dnn_energy_mj(&squeezed, cache);
+        assert!(
+            e_squeezed > e_chunky,
+            "activation-heavy net must cost more: {e_squeezed} vs {e_chunky}"
+        );
+    }
+
+    #[test]
+    fn energy_lands_in_paper_band() {
+        // Table 2 energies are 1.9..5.2 mJ for CIFAR-scale nets; our
+        // backbone (≈7.2M MACs, ≈70k params, ≈54k acts) should land nearby.
+        let m = model();
+        let backbone = Costs { macs: 7_230_016, params: 69_471, acts: 54_000 };
+        let mj = m.dnn_energy_mj(&backbone, 2 * 1024 * 1024);
+        assert!(mj > 0.5 && mj < 10.0, "backbone energy {mj} mJ out of band");
+    }
+}

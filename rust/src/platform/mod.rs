@@ -1,0 +1,159 @@
+//! Analytic mobile-platform models (paper Table 4, left).
+//!
+//! The paper measures on a RedMi 3S smartphone, a Raspberry Pi 4B, and an
+//! NVIDIA Jetbot.  None of that hardware is attached here, so each device is
+//! modelled analytically (DESIGN.md §5-2): compute throughput, memory
+//! energies, L2 capacity, and battery.  The constants are calibrated so the
+//! published anchors hold — backbone-class nets land in the paper's
+//! latency/energy bands and the "fewer parameters but more energy"
+//! SqueezeNet anomaly (§5.1.2, Jha et al.) reproduces.
+
+pub mod energy;
+pub mod latency;
+
+pub use energy::EnergyModel;
+pub use latency::LatencyModel;
+
+/// Static description of one deployment platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub processor: &'static str,
+    /// L2 cache capacity in bytes (the paper's parameter-storage budget).
+    pub l2_cache_bytes: u64,
+    /// Battery capacity in mAh (Table 4).
+    pub battery_mah: f64,
+    /// Nominal battery voltage (V) for mAh → J conversion.
+    pub battery_volts: f64,
+    /// Effective MAC throughput (MAC/s) for conv workloads.
+    pub macs_per_sec: f64,
+    /// DRAM bandwidth (bytes/s) for parameter/activation loads.
+    pub dram_bandwidth: f64,
+    /// Energy per MAC (J).
+    pub energy_per_mac: f64,
+    /// Energy per byte moved from SRAM/L2 (J).
+    pub energy_per_sram_byte: f64,
+    /// Energy per byte moved from DRAM (J).
+    pub energy_per_dram_byte: f64,
+    /// Idle sensing overhead per inference (J) — microphone/IMU sampling.
+    pub sensing_energy_per_event: f64,
+    /// Fraction of the available L2 realistically usable for DNN
+    /// parameters: the cache is shared with activations, other apps'
+    /// working sets, and the OS.  Applied to the dynamic (2−σ)MB budget —
+    /// this is the model-scale substitution of DESIGN.md §5-2 that lets
+    /// our ~280 KB backbone feel the same residency pressure the paper's
+    /// ~2 MB models felt against a 2 MB L2.
+    pub param_cache_fraction: f64,
+    /// Empirically calibrated Eq.-2 aggregation coefficients (µ1, µ2).
+    /// The paper calibrates these per platform via the Fig-10(d) sweep and
+    /// lands at (0.4, 0.6) on its ARM devices; on our analytic platform
+    /// models the same sweep (bench_fig10 --part d) lands at (0.8, 0.2) —
+    /// parameter intensity is the stronger energy predictor here because
+    /// the variant space changes C much more than the paper's did.
+    pub mu: (f64, f64),
+}
+
+impl Platform {
+    /// Xiaomi RedMi 3S (device 1): Qualcomm (Snapdragon 430-class), 2 MB L2,
+    /// 4100 mAh.
+    pub fn redmi_3s() -> Platform {
+        Platform {
+            name: "RedMi 3S",
+            processor: "Qualcomm B21",
+            l2_cache_bytes: 2 * 1024 * 1024,
+            battery_mah: 4100.0,
+            battery_volts: 3.85,
+            macs_per_sec: 4.2e8,
+            dram_bandwidth: 5.2e9,
+            energy_per_mac: 1.0e-10,
+            energy_per_sram_byte: 7.0e-11,
+            energy_per_dram_byte: 2.0e-9,
+            sensing_energy_per_event: 9.0e-4,
+            param_cache_fraction: 0.15,
+            mu: (0.8, 0.2),
+        }
+    }
+
+    /// Raspberry Pi 4B (device 3 in §6.1, the Table-2 testbed): Cortex-A72,
+    /// 2 MB shared L2, powered by a 3800 mAh pack.
+    pub fn raspberry_pi_4b() -> Platform {
+        Platform {
+            name: "Raspberry Pi 4B",
+            processor: "Cortex-A72",
+            l2_cache_bytes: 2 * 1024 * 1024,
+            battery_mah: 3800.0,
+            battery_volts: 5.0,
+            macs_per_sec: 3.4e8,
+            dram_bandwidth: 4.0e9,
+            energy_per_mac: 1.2e-10,
+            energy_per_sram_byte: 8.0e-11,
+            energy_per_dram_byte: 2.4e-9,
+            sensing_energy_per_event: 1.1e-3,
+            param_cache_fraction: 0.15,
+            mu: (0.8, 0.2),
+        }
+    }
+
+    /// NVIDIA Jetbot (device 4, the §6.6 case-study robot): Cortex-A57,
+    /// 2 MB L2, 7200 mAh.
+    pub fn jetbot() -> Platform {
+        Platform {
+            name: "NVIDIA Jetbot",
+            processor: "Cortex-A57",
+            l2_cache_bytes: 2 * 1024 * 1024,
+            battery_mah: 7200.0,
+            battery_volts: 5.0,
+            macs_per_sec: 2.9e8,
+            dram_bandwidth: 3.2e9,
+            energy_per_mac: 1.4e-10,
+            energy_per_sram_byte: 9.0e-11,
+            energy_per_dram_byte: 2.6e-9,
+            sensing_energy_per_event: 1.3e-3,
+            param_cache_fraction: 0.15,
+            mu: (0.8, 0.2),
+        }
+    }
+
+    /// All three evaluation platforms in paper order.
+    pub fn all() -> Vec<Platform> {
+        vec![Self::redmi_3s(), Self::raspberry_pi_4b(), Self::jetbot()]
+    }
+
+    /// Platform by (case-insensitive) name prefix.
+    pub fn by_name(name: &str) -> Option<Platform> {
+        let n = name.to_lowercase();
+        Self::all().into_iter().find(|p| p.name.to_lowercase().contains(&n))
+    }
+
+    /// Total battery energy in joules.
+    pub fn battery_joules(&self) -> f64 {
+        self.battery_mah / 1000.0 * 3600.0 * self.battery_volts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Platform::by_name("jetbot").unwrap().name, "NVIDIA Jetbot");
+        assert_eq!(Platform::by_name("raspberry").unwrap().name, "Raspberry Pi 4B");
+        assert_eq!(Platform::by_name("redmi").unwrap().name, "RedMi 3S");
+        assert!(Platform::by_name("iphone").is_none());
+    }
+
+    #[test]
+    fn battery_energy_positive_and_ordered() {
+        let j = Platform::jetbot().battery_joules();
+        let p = Platform::raspberry_pi_4b().battery_joules();
+        assert!(j > p, "7200mAh@5V > 3800mAh@5V");
+    }
+
+    #[test]
+    fn all_platforms_have_2mb_l2() {
+        for p in Platform::all() {
+            assert_eq!(p.l2_cache_bytes, 2 * 1024 * 1024, "{}", p.name);
+        }
+    }
+}

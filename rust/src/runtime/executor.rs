@@ -1,0 +1,121 @@
+//! HLO-text → PJRT executable cache + batched execution.
+//!
+//! Each palette variant is one self-contained HLO module (weights baked in
+//! as constants), so *switching executables is the runtime weight
+//! evolution* (DESIGN.md §2).  Compilation happens lazily and is cached;
+//! the swap on re-evolution is therefore a pointer move after first use —
+//! the ≤6.2 ms evolution-latency claim covers the search + swap, not the
+//! one-off compile.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::manifest::{TaskArtifacts, Variant};
+
+/// One compiled variant ready to run.
+pub struct LoadedVariant {
+    pub variant_id: usize,
+    pub exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling this artifact (one-off).
+    pub compile_ms: f64,
+}
+
+/// Execution statistics for one inference.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecStats {
+    pub latency_us: u128,
+    pub output_len: usize,
+}
+
+/// PJRT CPU executor with a per-task executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: HashMap<usize, Arc<LoadedVariant>>,
+    input_shape: Vec<usize>,
+}
+
+impl Executor {
+    /// Create a CPU executor for one task's artifact family.
+    pub fn new(task: &TaskArtifacts) -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Executor { client, cache: HashMap::new(), input_shape: task.input_shape.clone() })
+    }
+
+    /// Number of PJRT devices (CPU: 1).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile a variant's HLO artifact (cached).
+    pub fn load(&mut self, task: &TaskArtifacts, v: &Variant, root: &Path) -> Result<Arc<LoadedVariant>> {
+        if let Some(l) = self.cache.get(&v.id) {
+            return Ok(l.clone());
+        }
+        let path = task.hlo_path(v, root);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))
+        .with_context(|| format!("variant {}", v.id))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling variant {}: {e:?}", v.id))?;
+        let loaded = Arc::new(LoadedVariant {
+            variant_id: v.id,
+            exe,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        self.cache.insert(v.id, loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Run one batch-1 inference; returns (logits, stats).
+    pub fn infer(&self, loaded: &LoadedVariant, input: &[f32]) -> Result<(Vec<f32>, ExecStats)> {
+        let expect: usize = self.input_shape.iter().product();
+        if input.len() != expect {
+            return Err(anyhow!("input length {} != {}", input.len(), expect));
+        }
+        let dims: Vec<i64> = std::iter::once(1i64)
+            .chain(self.input_shape.iter().map(|&d| d as i64))
+            .collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape input: {e:?}"))?;
+        let t0 = Instant::now();
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let latency_us = t0.elapsed().as_micros();
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let logits = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let output_len = logits.len();
+        Ok((logits, ExecStats { latency_us, output_len }))
+    }
+
+    /// Measure mean inference latency over `iters` runs (after 1 warmup).
+    pub fn measure_latency_us(&self, loaded: &LoadedVariant, input: &[f32], iters: usize) -> Result<f64> {
+        self.infer(loaded, input)?; // warmup
+        let mut total = 0u128;
+        for _ in 0..iters {
+            let (_, stats) = self.infer(loaded, input)?;
+            total += stats.latency_us;
+        }
+        Ok(total as f64 / iters.max(1) as f64)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client.  Python never runs here — the HLO was lowered once by
+//! `python/compile/aot.py` (see /opt/xla-example/load_hlo for the pattern).
+
+pub mod executor;
+
+pub use executor::{ExecStats, Executor, LoadedVariant};

@@ -1,0 +1,7 @@
+//! Offline-build substrates: JSON, RNG, CLI parsing, table formatting.
+//! (The usual ecosystem crates are unavailable in this environment; see
+//! Cargo.toml header note and DESIGN.md §5.)
+
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,119 @@
+//! Integration: the dynamic-context stack end to end — a simulated day's
+//! battery/cache/event trajectory driving trigger decisions and constraint
+//! evolution, plus the engine's evolution trajectory over that day
+//! (cost-model only; PJRT not needed here).
+
+use adaspring::context::{
+    Battery, CacheContention, ContextSimulator, EventTrace, Trigger, TriggerPolicy,
+};
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::Manifest;
+use adaspring::platform::Platform;
+
+#[test]
+fn day_simulation_produces_paper_like_trajectory() {
+    let p = Platform::jetbot();
+    let mut sim = ContextSimulator::new(
+        Battery::new(&p).with_fraction(0.86),
+        CacheContention::new(p.l2_cache_bytes, 0.3, 99),
+        EventTrace::day_profile(42),
+    );
+    let mut trigger = Trigger::new(TriggerPolicy::Periodic { period_s: 7200.0 });
+    let mut fires = 0;
+    let mut batteries = Vec::new();
+    // 8 hours in 5-minute ticks, each tick costs some DNN energy.
+    for _ in 0..(8 * 12) {
+        sim.advance(300.0, 0.5);
+        let snap = sim.snapshot();
+        batteries.push(snap.battery_fraction);
+        if trigger.should_fire(&snap) {
+            fires += 1;
+        }
+        // Cache availability always within the (2−σ) envelope.
+        assert!(snap.available_cache <= p.l2_cache_bytes);
+        assert!(snap.available_cache >= (p.l2_cache_bytes as f64 * 0.69) as u64);
+    }
+    // Periodic 2h trigger over 8h: 4-5 firings (startup + every 2 h).
+    assert!((4..=5).contains(&fires), "fires={fires}");
+    // Battery declines monotonically and lands in a plausible day range.
+    assert!(batteries.windows(2).all(|w| w[1] <= w[0] + 1e-12));
+    let last = *batteries.last().unwrap();
+    assert!(last < 0.86 && last > 0.4, "end-of-day battery {last}");
+}
+
+#[test]
+fn engine_trajectory_respects_each_budget() {
+    let Ok(m) = Manifest::load("artifacts/manifest.json") else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut engine = AdaSpring::new(&m, "d3", &Platform::raspberry_pi_4b(), false).unwrap();
+    let task = engine.task().clone();
+    let backbone_params = task.backbone_variant().params;
+    let frac = Platform::raspberry_pi_4b().param_cache_fraction;
+    // Battery draining + cache shrinking: every deployment must fit the
+    // effective parameter budget of its own moment (the Eq.-1 S constraint);
+    // exact per-step monotonicity is NOT guaranteed by Algorithm 1.
+    for (battery, cache_mb) in [(0.9, 2.0), (0.6, 1.6), (0.4, 1.2), (0.2, 0.9)] {
+        let budget = (cache_mb * 1024.0 * 1024.0) as u64;
+        let c = adaspring::coordinator::eval::Constraints::from_battery(
+            battery,
+            task.acc_loss_threshold.max(0.02),
+            task.latency_budget_ms,
+            budget,
+        );
+        let evo = engine.evolve(&c).unwrap();
+        let v = &task.variants[evo.variant_id];
+        let effective = (budget as f64 * frac) as u64;
+        assert!(
+            v.params * 4 <= effective || v.params <= backbone_params,
+            "deployed {} params against effective budget {} B",
+            v.params,
+            effective
+        );
+        if backbone_params * 4 > effective {
+            // Backbone doesn't fit: the engine must have compressed.
+            assert!(v.params < backbone_params, "at ({battery},{cache_mb})");
+        }
+        // Evolution latency (no executor) stays well under the paper bound.
+        assert!(evo.evolution_us < 6_200, "evolution {} µs", evo.evolution_us);
+    }
+}
+
+#[test]
+fn scale_up_happens_when_context_relaxes() {
+    let Ok(m) = Manifest::load("artifacts/manifest.json") else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let mut engine = AdaSpring::new(&m, "d3", &Platform::jetbot(), false).unwrap();
+    let task = engine.task().clone();
+    let tight = adaspring::coordinator::eval::Constraints::from_battery(
+        0.3, 0.05, task.latency_budget_ms * 0.6, (1.0 * 1024.0 * 1024.0) as u64,
+    );
+    let loose = adaspring::coordinator::eval::Constraints::from_battery(
+        0.95, task.acc_loss_threshold, 1e6, 4 << 20,
+    );
+    let v_tight = engine.evolve(&tight).unwrap().variant_id;
+    let v_loose = engine.evolve(&loose).unwrap().variant_id;
+    let p_tight = task.variants[v_tight].params;
+    let p_loose = task.variants[v_loose].params;
+    assert!(
+        p_loose >= p_tight,
+        "relaxed context must allow scale-up: {p_tight} -> {p_loose}"
+    );
+}
+
+#[test]
+fn event_trace_rates_match_profile_integral() {
+    let trace = EventTrace::day_profile(123);
+    // rate_at is piecewise constant; the sampled count over each segment
+    // should be near rate*duration.
+    let events = trace.sample(8.0 * 3600.0);
+    let early = events.iter().filter(|e| e.t_seconds < 5400.0).count() as f64;
+    let expected_early = 0.5 * 90.0; // 0.5/min for the first 90 min
+    assert!(
+        early > expected_early * 0.5 && early < expected_early * 2.0,
+        "early-count {early} vs expected {expected_early}"
+    );
+}

@@ -1,0 +1,93 @@
+//! Integration: the Rust cost model must agree with the Python-side numbers
+//! recorded in the manifest for EVERY palette variant of every task — this
+//! is the contract that makes the runtime search's cost predictions valid
+//! for the actual artifacts.
+//!
+//! Skips cleanly when artifacts have not been built yet.
+
+use adaspring::coordinator::costmodel::CostModel;
+use adaspring::coordinator::{CompressionConfig, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts/manifest.json").ok()
+}
+
+#[test]
+fn rust_costs_match_python_for_all_variants() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for (name, task) in &m.tasks {
+        let cm = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+        for v in &task.variants {
+            let cfg = CompressionConfig::from_ids(&v.config).unwrap();
+            let c = cm.costs(&cfg);
+            assert_eq!(c.macs, v.macs, "{name} v{} macs (config {:?})", v.id, v.config);
+            assert_eq!(c.params, v.params, "{name} v{} params", v.id);
+            assert_eq!(c.acts, v.acts, "{name} v{} acts", v.id);
+        }
+    }
+}
+
+#[test]
+fn manifest_configs_are_canonical() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for task in m.tasks.values() {
+        for v in &task.variants {
+            let cfg = CompressionConfig::from_ids(&v.config).unwrap();
+            assert!(
+                cfg.is_canonical(&task.backbone),
+                "{} v{} config {:?} not canonical",
+                task.name,
+                v.id,
+                v.config
+            );
+        }
+    }
+}
+
+#[test]
+fn palette_contains_backbone_and_compressed_variants() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for task in m.tasks.values() {
+        let bb = task.backbone_variant();
+        assert_eq!(bb.accuracy, task.backbone.accuracy);
+        let compressed = task.variants.iter().filter(|v| v.id != bb.id).count();
+        assert!(compressed >= 10, "{}: only {} compressed variants", task.name, compressed);
+        // Accuracy sanity: most of the palette within 25 points of backbone.
+        let ok = task
+            .variants
+            .iter()
+            .filter(|v| v.accuracy >= task.backbone.accuracy - 0.25)
+            .count();
+        assert!(
+            ok * 2 >= task.variants.len(),
+            "{}: too many collapsed variants",
+            task.name
+        );
+    }
+}
+
+#[test]
+fn probes_reference_legal_layer_ops() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    for task in m.tasks.values() {
+        for key in task.probes.keys() {
+            let (layer, op) = key.split_once(':').unwrap();
+            let layer: usize = layer.parse().unwrap();
+            let op: u8 = op.parse().unwrap();
+            assert!(layer >= 1 && layer < task.n_layers());
+            assert!(adaspring::coordinator::Op::from_id(op).is_some());
+        }
+    }
+}

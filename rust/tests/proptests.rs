@@ -1,0 +1,235 @@
+//! Property-based tests (hand-rolled quickcheck over util::rng — proptest
+//! is unavailable offline).  Each property runs a few hundred random cases
+//! with deterministic seeds; failures print the seed for replay.
+
+use adaspring::coordinator::accuracy::AccuracyModel;
+use adaspring::coordinator::config::CompressionConfig;
+use adaspring::coordinator::costmodel::CostModel;
+use adaspring::coordinator::encoding::{decode_binary, encode_binary, ProgressiveCode};
+use adaspring::coordinator::eval::{Constraints, Evaluator};
+use adaspring::coordinator::manifest::Backbone;
+use adaspring::coordinator::operators::{Op, ALL_OPS, NUM_OPS};
+use adaspring::coordinator::search::pareto::{pareto_front, survivor};
+use adaspring::coordinator::search::{Mutator, Runtime3C};
+use adaspring::platform::Platform;
+use adaspring::util::json::Json;
+use adaspring::util::rng::Rng;
+
+fn backbone() -> Backbone {
+    Backbone {
+        widths: vec![16, 32, 32, 64, 64],
+        strides: vec![1, 2, 1, 2, 1],
+        residual: vec![false, false, true, false, true],
+        kernel: 3,
+        accuracy: 0.95,
+    }
+}
+
+fn random_config(rng: &mut Rng, n: usize) -> CompressionConfig {
+    let mut ids = vec![0u8];
+    for _ in 1..n {
+        ids.push(rng.below(NUM_OPS) as u8);
+    }
+    CompressionConfig::from_ids(&ids).unwrap()
+}
+
+#[test]
+fn prop_binary_encoding_round_trips() {
+    let mut rng = Rng::new(0xE1);
+    for case in 0..500 {
+        let cfg = random_config(&mut rng, 5);
+        let bits = encode_binary(&cfg);
+        let back = decode_binary(&bits, 5).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(back, cfg, "case {case}");
+    }
+}
+
+#[test]
+fn prop_progressive_prefix_round_trips() {
+    let mut rng = Rng::new(0xE2);
+    for case in 0..500 {
+        let cfg = random_config(&mut rng, 5);
+        let visited = rng.below(5);
+        let code = ProgressiveCode::from_config_prefix(&cfg, visited);
+        assert_eq!(code.visited(), visited, "case {case}");
+        let back = code.to_config(5).unwrap();
+        for i in 1..=visited {
+            assert_eq!(back.op(i), cfg.op(i), "case {case} layer {i}");
+        }
+        for i in (visited + 1)..5 {
+            assert_eq!(back.op(i), Op::Identity, "case {case} tail {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_canonicalize_is_idempotent_and_legal() {
+    let bb = backbone();
+    let mut rng = Rng::new(0xE3);
+    for case in 0..500 {
+        let cfg = random_config(&mut rng, 5);
+        let canon = cfg.canonicalize(&bb);
+        assert!(canon.is_canonical(&bb), "case {case}");
+        assert_eq!(canon.canonicalize(&bb), canon, "case {case}: idempotent");
+        for i in 1..5 {
+            let op = canon.op(i);
+            assert!(
+                op.is_legal(bb.widths[i - 1], bb.widths[i], bb.strides[i], bb.residual[i]),
+                "case {case}: illegal {op:?} at {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_costs_positive_and_compression_never_grows_params() {
+    let bb = backbone();
+    let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+    let id_costs = cm.costs(&CompressionConfig::identity(5));
+    let mut rng = Rng::new(0xE4);
+    for case in 0..500 {
+        let cfg = random_config(&mut rng, 5).canonicalize(&bb);
+        let c = cm.costs(&cfg);
+        assert!(c.macs > 0 && c.params > 0 && c.acts > 0, "case {case}");
+        // No operator in the elite space *increases* the parameter count.
+        assert!(
+            c.params <= id_costs.params,
+            "case {case}: {:?} params {} > backbone {}",
+            cfg.ops_ids(),
+            c.params,
+            id_costs.params
+        );
+    }
+}
+
+#[test]
+fn prop_pareto_front_members_not_dominated() {
+    let bb = backbone();
+    let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+    let task = toy_task_like(&bb);
+    let am = AccuracyModel::fit(&task);
+    let eval = Evaluator::new(cm, am, &Platform::raspberry_pi_4b());
+    let c = Constraints::from_battery(0.5, 0.1, 30.0, 2 << 20);
+    let mut rng = Rng::new(0xE5);
+    for case in 0..50 {
+        let evals: Vec<_> = (0..12)
+            .map(|_| eval.evaluate(&random_config(&mut rng, 5), &c))
+            .collect();
+        let front = pareto_front(&evals);
+        assert!(!front.is_empty(), "case {case}");
+        for &i in &front {
+            for (j, other) in evals.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let dominates = other.acc_loss < evals[i].acc_loss
+                    && other.efficiency > evals[i].efficiency;
+                assert!(!dominates, "case {case}: front member {i} dominated by {j}");
+            }
+        }
+        // Survivor is always drawn from the candidate set.
+        let s = survivor(&evals, &c).unwrap();
+        assert!(evals.iter().any(|e| e.config == s.config), "case {case}");
+    }
+}
+
+#[test]
+fn prop_runtime3c_output_always_canonical_and_fast() {
+    let bb = backbone();
+    let task = toy_task_like(&bb);
+    let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+    let am = AccuracyModel::fit(&task);
+    let eval = Evaluator::new(cm, am, &Platform::jetbot());
+    let r3c = Runtime3C::new(Mutator::from_task(&task));
+    let mut rng = Rng::new(0xE6);
+    for case in 0..100 {
+        let c = Constraints::from_battery(
+            rng.range(0.05, 1.0),
+            rng.range(0.01, 0.5),
+            rng.range(5.0, 60.0),
+            (rng.range(0.1, 2.5) * 1024.0 * 1024.0) as u64,
+        );
+        let res = r3c.search(&eval, &c);
+        assert!(res.evaluation.config.is_canonical(&bb), "case {case}");
+        assert!(res.search_time_us < 100_000, "case {case}: {} µs", res.search_time_us);
+        assert!(res.candidates_evaluated <= 6 * 9 * 4 + 20, "case {case}");
+    }
+}
+
+#[test]
+fn prop_json_round_trips_random_documents() {
+    let mut rng = Rng::new(0xE7);
+    for case in 0..200 {
+        let doc = random_json(&mut rng, 0);
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, doc, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    let choice = if depth > 3 { rng.below(4) } else { rng.below(6) };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num((rng.range(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let len = rng.below(8);
+            let s: String = (0..len)
+                .map(|_| {
+                    let chars = ['a', 'Z', '0', ' ', '"', '\\', 'µ', '\n'];
+                    chars[rng.below(chars.len())]
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                m.insert(format!("k{i}"), random_json(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn toy_task_like(bb: &Backbone) -> adaspring::coordinator::manifest::TaskArtifacts {
+    use adaspring::coordinator::manifest::{TaskArtifacts, Variant};
+    use std::collections::HashMap;
+    let mk = |id: usize, config: Vec<u8>, accuracy: f64| Variant {
+        id,
+        config,
+        hlo: String::new(),
+        accuracy,
+        tuned: false,
+        macs: 1,
+        params: 1,
+        acts: 1,
+        per_layer: vec![],
+    };
+    TaskArtifacts {
+        name: "t".into(),
+        title: "t".into(),
+        input_shape: vec![32, 32, 1],
+        num_classes: 9,
+        latency_budget_ms: 30.0,
+        acc_loss_threshold: 0.6,
+        backbone: bb.clone(),
+        variants: vec![
+            mk(0, vec![0, 0, 0, 0, 0], 0.95),
+            mk(1, vec![0, 2, 2, 2, 2], 0.94),
+            mk(2, vec![0, 4, 0, 4, 0], 0.93),
+            mk(3, vec![0, 0, 6, 0, 6], 0.92),
+        ],
+        probes: HashMap::from([
+            ("1:1".to_string(), 0.005),
+            ("1:4".to_string(), 0.010),
+            ("3:5".to_string(), 0.035),
+            ("2:6".to_string(), 0.012),
+        ]),
+        importances: vec![vec![1.0; 16], vec![0.8; 32], vec![0.6; 32], vec![0.5; 64], vec![0.4; 64]],
+        mutation_sigmas: vec![vec![0.05; 16], vec![0.08; 32], vec![0.1; 32], vec![0.12; 64], vec![0.15; 64]],
+        sigma_scale: 0.1,
+    }
+}

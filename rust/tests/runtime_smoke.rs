@@ -1,0 +1,139 @@
+//! Integration: load + compile + execute real HLO artifacts through PJRT,
+//! and verify the engine's evolve→infer lifecycle against live artifacts.
+//! Skips cleanly when artifacts are absent.
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::Constraints;
+use adaspring::coordinator::Manifest;
+use adaspring::platform::Platform;
+use adaspring::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load("artifacts/manifest.json").ok()
+}
+
+fn any_task(m: &Manifest) -> String {
+    let mut names: Vec<_> = m.tasks.keys().cloned().collect();
+    names.sort();
+    names[0].clone()
+}
+
+#[test]
+fn evolve_then_infer_produces_logits() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let task_name = any_task(&m);
+    let mut engine = AdaSpring::new(&m, &task_name, &Platform::raspberry_pi_4b(), true).unwrap();
+    let task = engine.task().clone();
+    let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
+    let evo = engine.evolve(&c).unwrap();
+    assert!(engine.active_variant().is_some());
+
+    let n: usize = task.input_shape.iter().product();
+    let mut rng = Rng::new(5);
+    let input: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let (logits, stats) = engine.infer(&input).unwrap();
+    assert_eq!(logits.len(), task.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()), "logits finite");
+    assert!(stats.latency_us > 0);
+    // Search itself must be millisecond-class (paper ≤6.2 ms).
+    assert!(
+        evo.search.search_time_us < 50_000,
+        "search took {} µs",
+        evo.search.search_time_us
+    );
+}
+
+#[test]
+fn different_inputs_give_different_logits() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let task_name = any_task(&m);
+    let mut engine = AdaSpring::new(&m, &task_name, &Platform::jetbot(), true).unwrap();
+    let task = engine.task().clone();
+    let c = Constraints::from_battery(0.9, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
+    engine.evolve(&c).unwrap();
+    let n: usize = task.input_shape.iter().product();
+    let mut rng = Rng::new(6);
+    let a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let (la, _) = engine.infer(&a).unwrap();
+    let (lb, _) = engine.infer(&b).unwrap();
+    assert_ne!(la, lb, "logits must depend on the input");
+}
+
+#[test]
+fn tight_context_deploys_smaller_variant() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let task_name = any_task(&m);
+    let mut engine = AdaSpring::new(&m, &task_name, &Platform::raspberry_pi_4b(), false).unwrap();
+    let task = engine.task().clone();
+    let loose = Constraints::from_battery(0.95, task.acc_loss_threshold, 1e6, 8 << 20);
+    let evo_loose = engine.evolve(&loose).unwrap();
+    let tight = Constraints::from_battery(
+        0.2,
+        task.acc_loss_threshold.max(0.2),
+        task.latency_budget_ms,
+        160 * 1024,
+    );
+    let evo_tight = engine.evolve(&tight).unwrap();
+    let v_loose = &task.variants[evo_loose.variant_id];
+    let v_tight = &task.variants[evo_tight.variant_id];
+    assert!(
+        v_tight.params <= v_loose.params,
+        "tight context must not deploy a bigger model: {} vs {}",
+        v_tight.params,
+        v_loose.params
+    );
+}
+
+#[test]
+fn reject_wrong_input_length() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let task_name = any_task(&m);
+    let mut engine = AdaSpring::new(&m, &task_name, &Platform::raspberry_pi_4b(), true).unwrap();
+    let task = engine.task().clone();
+    let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
+    engine.evolve(&c).unwrap();
+    assert!(engine.infer(&[0.0f32; 7]).is_err());
+}
+
+#[test]
+fn v0_matches_python_reference_logits() {
+    // Ground truth computed by python/compile (ref + pallas paths agree):
+    // forward(v0, full((1,32,32,3), 0.1)) for task d1.
+    let Some(m) = manifest() else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Some(task) = m.tasks.get("d1") else {
+        eprintln!("skipping: no d1");
+        return;
+    };
+    let mut exec = adaspring::runtime::Executor::new(task).unwrap();
+    let v0 = task.backbone_variant();
+    let loaded = exec.load(task, v0, &m.root).unwrap();
+    let n: usize = task.input_shape.iter().product();
+    let input = vec![0.1f32; n];
+    let (logits, _) = exec.infer(&loaded, &input).unwrap();
+    let expected = [
+        4.1668506, 6.2969723, 2.0392056, -5.4781094, 1.6099322, -0.14166747,
+        -6.1772013, -5.7402945, 1.8252716, -3.5560446f32,
+    ];
+    for (i, (&got, &want)) in logits.iter().zip(expected.iter()).enumerate() {
+        assert!(
+            (got - want).abs() < 1e-3,
+            "logit {i}: got {got}, want {want} (full: {logits:?})"
+        );
+    }
+}
