@@ -17,7 +17,7 @@ use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, Table};
 use adaspring::platform::Platform;
-use adaspring::serving::ServingLoop;
+use adaspring::serving::{InferenceMode, ServingLoop};
 use adaspring::util::cli::Args;
 use adaspring::util::rng::Rng;
 
@@ -62,6 +62,7 @@ fn main() -> Result<()> {
             cache_delta_bytes: 384 * 1024,
         }),
         energy_per_inference_j: energy_j,
+        inference: InferenceMode::Pjrt,
     };
     let mut rng = Rng::new(9);
     let report = looper.run(&events, hours * 3600.0, |_ev| {

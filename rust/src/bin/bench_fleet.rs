@@ -1,0 +1,145 @@
+//! Fleet serving bench: simulate a heterogeneous device fleet (six
+//! archetypes, round-robin) over sharded workers with a shared variant
+//! cache, and report fleet-wide latency percentiles, evolution counts,
+//! energy, and the cache hit rate (DESIGN.md §7).
+//!
+//! Usage:
+//!   cargo run --release --bin bench_fleet -- [--devices 100] [--shards 4]
+//!       [--hours 8] [--seed 42] [--task d3] [--manifest path]
+//!       [--stripes 16] [--sweep] [--csv]
+//!
+//! Runs out of the box with no artifacts: when no manifest is found the
+//! synthetic palette (`Manifest::synthetic`) is used and inference is
+//! served from the platform latency model.  `--sweep` sweeps fleet size
+//! (10/100/1000) × shard count (1/2/4/8) and emits one JSON record per
+//! cell; a single run emits the full fleet JSON report (schema:
+//! README.md "Fleet report schema").
+
+use anyhow::Result;
+
+use adaspring::coordinator::Manifest;
+use adaspring::fleet::{run_fleet, FleetConfig, FleetReport};
+use adaspring::metrics::Table;
+use adaspring::util::cli::Args;
+use adaspring::util::json::Json;
+
+fn load_manifest(args: &Args) -> Manifest {
+    let path = args.get_or("manifest", "artifacts/manifest.json");
+    match Manifest::load(path) {
+        Ok(m) => {
+            eprintln!("using artifact manifest {path}");
+            m
+        }
+        Err(_) => {
+            eprintln!("no artifact manifest at {path}; using the synthetic palette");
+            Manifest::synthetic()
+        }
+    }
+}
+
+fn config_from(args: &Args) -> FleetConfig {
+    let defaults = FleetConfig::default();
+    FleetConfig {
+        devices: args.get_usize("devices", defaults.devices),
+        shards: args.get_usize("shards", defaults.shards),
+        duration_s: args.get_f64("hours", 8.0) * 3600.0,
+        seed: args.get_usize("seed", defaults.seed as usize) as u64,
+        task: args.get_or("task", &defaults.task).to_string(),
+        cache_stripes: args.get_usize("stripes", defaults.cache_stripes),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let manifest = load_manifest(&args);
+
+    if args.flag("sweep") {
+        return sweep(&args, &manifest);
+    }
+
+    let cfg = config_from(&args);
+    println!(
+        "# Fleet serving — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
+        cfg.devices,
+        cfg.duration_s / 3600.0,
+        cfg.shards,
+        cfg.task,
+        cfg.seed
+    );
+    let report = run_fleet(&manifest, &cfg)?;
+    print_summary(&report);
+    let table = report.archetype_table();
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+    println!("fleet JSON:\n{}", report.to_json());
+    Ok(())
+}
+
+fn print_summary(r: &FleetReport) {
+    println!(
+        "fleet totals: {} inferences ({} dropped), {} evolutions, {:.1} J DNN energy, wall {:.0} ms",
+        r.inferences, r.dropped, r.evolutions, r.energy_j, r.wall_ms
+    );
+    println!(
+        "inference latency: p50={:.2} ms  p95={:.2} ms  p99={:.2} ms  mean={:.2} ms",
+        r.latency.p50_ms, r.latency.p95_ms, r.latency.p99_ms, r.latency.mean_ms
+    );
+    println!(
+        "search latency: p50={:.0} µs  p99={:.0} µs",
+        r.search_p50_us, r.search_p99_us
+    );
+    println!(
+        "variant cache: {} compiled, {} hits / {} misses (hit rate {:.1}%)\n",
+        r.cache.entries,
+        r.cache.hits,
+        r.cache.misses,
+        r.cache.hit_rate() * 100.0
+    );
+}
+
+/// Fleet-size × shard-count sweep: the scaling table behind the fleet
+/// subsystem's headline (cross-device cache reuse grows with fleet size).
+fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
+    let base = config_from(args);
+    let device_points = [10usize, 100, 1000];
+    let shard_points = [1usize, 2, 4, 8];
+    println!(
+        "# Fleet sweep — devices x shards, {:.1} h simulated (task {}, seed {})\n",
+        base.duration_s / 3600.0,
+        base.task,
+        base.seed
+    );
+    let mut table = Table::new(&[
+        "devices", "shards", "inferences", "evolutions", "p50 ms", "p95 ms", "p99 ms",
+        "cache hit %", "wall ms",
+    ]);
+    let mut records: Vec<Json> = Vec::new();
+    for &devices in &device_points {
+        for &shards in &shard_points {
+            let cfg = FleetConfig { devices, shards, ..base.clone() };
+            let r = run_fleet(manifest, &cfg)?;
+            table.row(vec![
+                devices.to_string(),
+                shards.to_string(),
+                r.inferences.to_string(),
+                r.evolutions.to_string(),
+                format!("{:.2}", r.latency.p50_ms),
+                format!("{:.2}", r.latency.p95_ms),
+                format!("{:.2}", r.latency.p99_ms),
+                format!("{:.1}", r.cache.hit_rate() * 100.0),
+                format!("{:.0}", r.wall_ms),
+            ]);
+            records.push(r.to_json());
+        }
+    }
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+    println!("sweep JSON:\n{}", Json::Arr(records));
+    Ok(())
+}

@@ -15,7 +15,7 @@ use super::manifest::{Manifest, TaskArtifacts, Variant};
 use super::search::{Mutator, Runtime3C, Runtime3CParams, SearchResult};
 use crate::context::ContextSnapshot;
 use crate::platform::Platform;
-use crate::runtime::{Executor, LoadedVariant};
+use crate::runtime::{ExecutableCache, Executor, LoadedVariant};
 
 /// Outcome of one evolution step (paper's "runtime evolution" unit).
 #[derive(Debug, Clone)]
@@ -68,8 +68,27 @@ impl AdaSpring {
         })
     }
 
+    /// Build with an executor over a *shared* executable cache: variants
+    /// compiled by any engine holding the same cache `Arc` are reused here
+    /// (the fleet's cross-device hot path, DESIGN.md §4/§7).
+    pub fn with_shared_cache(
+        manifest: &Manifest,
+        task_name: &str,
+        platform: &Platform,
+        cache: Arc<ExecutableCache>,
+    ) -> Result<AdaSpring> {
+        let mut engine = Self::new(manifest, task_name, platform, false)?;
+        engine.executor = Some(Executor::with_cache(&engine.task, cache)?);
+        Ok(engine)
+    }
+
     pub fn task(&self) -> &TaskArtifacts {
         &self.task
+    }
+
+    /// Was this engine built with a PJRT executor?
+    pub fn has_executor(&self) -> bool {
+        self.executor.is_some()
     }
 
     /// Override search parameters (ablations).
@@ -132,6 +151,15 @@ impl AdaSpring {
     pub fn active_config(&self) -> Option<CompressionConfig> {
         self.active_variant_info()
             .map(|v| CompressionConfig::from_ids(&v.config).expect("manifest configs are valid"))
+    }
+
+    /// Modelled per-inference latency (ms) of the deployed variant under
+    /// the given available-cache budget; `None` before the first
+    /// evolution.  This is the inference path when PJRT artifacts are
+    /// absent (`serving::InferenceMode::Modeled`, fleet simulation).
+    pub fn modeled_active_latency_ms(&self, available_cache: u64) -> Option<f64> {
+        self.active_config()
+            .map(|cfg| self.evaluator.modeled_latency_ms(&cfg, available_cache))
     }
 
     /// Measured PJRT latency of the active variant (host microbenchmark).

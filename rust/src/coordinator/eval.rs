@@ -130,6 +130,19 @@ impl Evaluator {
         &self.accuracy
     }
 
+    /// Modelled per-inference latency (ms) of `config` under the given
+    /// available-cache budget — the serving loops' modeled-inference path
+    /// (used when PJRT artifacts are absent, e.g. fleet simulation).
+    pub fn modeled_latency_ms(&self, config: &CompressionConfig, available_cache: u64) -> f64 {
+        self.latency.total_ms(&self.cost_model.costs(config), available_cache)
+    }
+
+    /// Modelled per-inference DNN energy (mJ) of `config` under the given
+    /// available-cache budget.
+    pub fn modeled_energy_mj(&self, config: &CompressionConfig, available_cache: u64) -> f64 {
+        self.energy.dnn_energy_mj(&self.cost_model.costs(config), available_cache)
+    }
+
     /// Full evaluation of one candidate under the current constraints.
     pub fn evaluate(&self, config: &CompressionConfig, c: &Constraints) -> Evaluation {
         let costs = self.cost_model.costs(config);

@@ -110,6 +110,20 @@ impl Manifest {
         PathBuf::from("artifacts/manifest.json")
     }
 
+    /// A fully synthetic in-memory manifest: one sound-recognition-shaped
+    /// task ("d3") over the standard 5-layer backbone, with a 13-variant
+    /// palette whose cost columns are produced by the same
+    /// [`super::costmodel::CostModel`] the runtime search uses (so the
+    /// cost cross-check contract holds by construction).  This is the
+    /// manifest behind the fleet simulation and `bench_fleet` when no
+    /// `artifacts/manifest.json` has been built — no Python, no disk.
+    pub fn synthetic() -> Manifest {
+        let task = TaskArtifacts::synthetic();
+        let mut tasks = HashMap::new();
+        tasks.insert(task.name.clone(), task);
+        Manifest { version: 1, fast: true, tasks, root: PathBuf::from("artifacts") }
+    }
+
     pub fn task(&self, name: &str) -> Result<&TaskArtifacts> {
         self.tasks.get(name).ok_or_else(|| {
             anyhow!(
@@ -121,6 +135,113 @@ impl Manifest {
 }
 
 impl TaskArtifacts {
+    /// The synthetic "d3" task backing [`Manifest::synthetic`].  Palette
+    /// configs are canonical-legal for the backbone (prunes only on the
+    /// non-residual layers 1/3, depth only on the residual layers 2/4);
+    /// accuracies follow the fixture drops used across the unit tests.
+    pub fn synthetic() -> TaskArtifacts {
+        let backbone = Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        };
+        let input_shape = vec![32usize, 32, 1];
+        let num_classes = 9usize;
+        let cm = super::costmodel::CostModel::new(&backbone, &input_shape, num_classes);
+        let palette: [(&[u8], f64); 13] = [
+            (&[0, 0, 0, 0, 0], 0.000),
+            (&[0, 1, 1, 1, 1], 0.015),
+            (&[0, 2, 2, 2, 2], 0.010),
+            (&[0, 3, 0, 3, 0], 0.006),
+            (&[0, 4, 0, 4, 0], 0.020),
+            (&[0, 5, 0, 5, 0], 0.060),
+            (&[0, 0, 6, 0, 6], 0.030),
+            (&[0, 7, 0, 7, 0], 0.040),
+            (&[0, 8, 6, 8, 6], 0.050),
+            (&[0, 1, 6, 4, 6], 0.035),
+            (&[0, 4, 6, 4, 6], 0.045),
+            (&[0, 2, 0, 4, 0], 0.018),
+            (&[0, 3, 6, 5, 6], 0.055),
+        ];
+        let variants: Vec<Variant> = palette
+            .iter()
+            .enumerate()
+            .map(|(id, (ids, drop))| {
+                let cfg = CompressionConfig::from_ids(ids).expect("synthetic configs are valid");
+                let costs = cm.costs(&cfg);
+                let per_layer = cm
+                    .layer_costs(&cfg)
+                    .into_iter()
+                    .map(|l| LayerCost { macs: l.macs, params: l.params, acts: l.acts })
+                    .collect();
+                Variant {
+                    id,
+                    config: ids.to_vec(),
+                    hlo: format!("d3/v{id}.hlo.txt"),
+                    accuracy: backbone.accuracy - drop,
+                    tuned: *drop > 0.02,
+                    macs: costs.macs,
+                    params: costs.params,
+                    acts: costs.acts,
+                    per_layer,
+                }
+            })
+            .collect();
+        let probes: HashMap<String, f64> = [
+            ("1:1", 0.005),
+            ("1:2", 0.004),
+            ("1:3", 0.003),
+            ("1:4", 0.010),
+            ("1:5", 0.030),
+            ("1:7", 0.014),
+            ("1:8", 0.012),
+            ("2:1", 0.006),
+            ("2:2", 0.005),
+            ("2:6", 0.012),
+            ("3:1", 0.006),
+            ("3:2", 0.005),
+            ("3:3", 0.004),
+            ("3:4", 0.012),
+            ("3:5", 0.035),
+            ("3:7", 0.016),
+            ("3:8", 0.014),
+            ("4:1", 0.008),
+            ("4:2", 0.007),
+            ("4:6", 0.018),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+        TaskArtifacts {
+            name: "d3".into(),
+            title: "ubisound (synthetic palette)".into(),
+            input_shape,
+            num_classes,
+            latency_budget_ms: 30.0,
+            acc_loss_threshold: 0.05,
+            backbone,
+            variants,
+            probes,
+            importances: vec![
+                vec![1.0; 16],
+                vec![0.8; 32],
+                vec![0.6; 32],
+                vec![0.5; 64],
+                vec![0.4; 64],
+            ],
+            mutation_sigmas: vec![
+                vec![0.05; 16],
+                vec![0.08; 32],
+                vec![0.1; 32],
+                vec![0.12; 64],
+                vec![0.15; 64],
+            ],
+            sigma_scale: 0.1,
+        }
+    }
+
     fn from_json(j: &Json) -> Result<TaskArtifacts> {
         let bb = j.get("backbone")?;
         let backbone = Backbone {

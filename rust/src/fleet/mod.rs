@@ -1,0 +1,38 @@
+//! Fleet serving: sharded multi-device simulation over a shared
+//! concurrent variant cache (DESIGN.md §7).
+//!
+//! The paper evaluates one device evolving one DNN; this subsystem serves
+//! an entire heterogeneous fleet under one substrate:
+//!
+//! * [`scenarios`] — the archetype library: six device profiles
+//!   (commuter phone, jogger wearable, office hub, overnight low-battery
+//!   phone, Pi-class edge box, Jetbot robot), each binding a platform
+//!   model, event-trace generator, battery/cache dynamics, and trigger
+//!   policy, all deterministic per (fleet seed, device id).
+//! * [`session`] — the per-device serving state machine, semantically
+//!   identical to [`crate::serving::ServingLoop`] but steppable so shard
+//!   workers can interleave many devices in simulated-time order.
+//! * [`pool`] — the sharded runtime: device → shard by id, one worker
+//!   thread per shard draining a simulated-time-ordered queue; the only
+//!   cross-shard state is the shared variant cache
+//!   ([`crate::runtime::ShardedCache`]), where the first session to
+//!   deploy a variant pays its compile and every later one reuses it.
+//! * [`report`] — fleet-wide rollups: p50/p95/p99 inference latency,
+//!   evolution counts, energy, cache hit rate; JSON for `bench_fleet`.
+//!
+//! `cargo run --release --bin bench_fleet -- --devices 100 --shards 4`
+//! drives the whole stack without artifacts (synthetic manifest +
+//! modeled inference); with artifacts present, engines can share one
+//! [`crate::runtime::ExecutableCache`] via
+//! [`crate::coordinator::engine::AdaSpring::with_shared_cache`] for the
+//! same reuse on the real PJRT path.
+
+pub mod pool;
+pub mod report;
+pub mod scenarios;
+pub mod session;
+
+pub use pool::{run_fleet, shard_of, FleetConfig};
+pub use report::{ArchetypeSummary, FleetReport, LatencySummary};
+pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};
+pub use session::{DeviceReport, DeviceSession, SimCompiledVariant, SimVariantCache};

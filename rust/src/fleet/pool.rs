@@ -1,0 +1,153 @@
+//! Sharded fleet runtime (DESIGN.md §7-3).
+//!
+//! N worker threads each own a *shard* of device sessions (device →
+//! shard by id modulo, so ownership is static and lock-free) and drain a
+//! per-shard priority queue ordered by simulated time: the worker always
+//! steps the session whose next instant is earliest, so devices inside a
+//! shard interleave exactly as a global simulated clock would order them.
+//! The only cross-shard state is the shared concurrent variant cache —
+//! the piece that *should* be shared, because compiled variants are
+//! immutable and expensive.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::report::FleetReport;
+use super::session::{DeviceReport, DeviceSession, SimVariantCache};
+use crate::coordinator::manifest::Manifest;
+use crate::runtime::ShardedCache;
+
+/// Fleet run parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of simulated devices (archetypes assigned round-robin).
+    pub devices: usize,
+    /// Number of shard worker threads.
+    pub shards: usize,
+    /// Simulated duration per device (seconds).
+    pub duration_s: f64,
+    /// Fleet seed; all per-device seeds derive from it.
+    pub seed: u64,
+    /// Task to serve on every device.
+    pub task: String,
+    /// Stripe count of the shared variant cache.
+    pub cache_stripes: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            devices: 100,
+            shards: 4,
+            duration_s: 8.0 * 3600.0,
+            seed: 42,
+            task: "d3".to_string(),
+            cache_stripes: 16,
+        }
+    }
+}
+
+/// Static shard ownership: device → shard by id modulo.
+pub fn shard_of(device_id: u64, shards: usize) -> usize {
+    (device_id % shards.max(1) as u64) as usize
+}
+
+/// Run a whole fleet to completion and aggregate the result.
+///
+/// Every shard worker builds its sessions, then repeatedly pops the
+/// earliest-due session from its simulated-time heap, steps it once, and
+/// reinserts it — until every session has consumed its duration.
+pub fn run_fleet(manifest: &Manifest, cfg: &FleetConfig) -> Result<FleetReport> {
+    let shards = cfg.shards.max(1);
+    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
+    let t0 = Instant::now();
+
+    let per_shard: Vec<Result<Vec<DeviceReport>>> = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let cache = Arc::clone(&cache);
+            handles.push(scope.spawn(move || run_shard(manifest, cfg, shard, shards, &cache)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
+            .collect()
+    });
+
+    let mut device_reports = Vec::with_capacity(cfg.devices);
+    for shard_result in per_shard {
+        device_reports.extend(shard_result?);
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(FleetReport::aggregate(cfg, device_reports, cache.stats(), wall_ms))
+}
+
+/// One shard worker: own the sessions for `shard`, drain them in
+/// simulated-time order.
+fn run_shard(
+    manifest: &Manifest,
+    cfg: &FleetConfig,
+    shard: usize,
+    shards: usize,
+    cache: &SimVariantCache,
+) -> Result<Vec<DeviceReport>> {
+    let ids: Vec<u64> = (0..cfg.devices as u64)
+        .filter(|&d| shard_of(d, shards) == shard)
+        .collect();
+    let mut sessions = ids
+        .iter()
+        .map(|&d| DeviceSession::new(manifest, &cfg.task, d, cfg.seed, cfg.duration_s))
+        .collect::<Result<Vec<DeviceSession>>>()?;
+
+    // Per-shard simulated-time queue: (next-due time as ordered bits, idx).
+    // Times are non-negative finite (or +inf when done), so the IEEE-754
+    // bit pattern orders identically to the float.
+    let mut queue: BinaryHeap<Reverse<(u64, usize)>> = sessions
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.is_done())
+        .map(|(i, s)| Reverse((s.next_due().to_bits(), i)))
+        .collect();
+    while let Some(Reverse((_, i))) = queue.pop() {
+        if sessions[i].is_done() {
+            continue;
+        }
+        sessions[i].step(cache)?;
+        if !sessions[i].is_done() {
+            queue.push(Reverse((sessions[i].next_due().to_bits(), i)));
+        }
+    }
+
+    Ok(sessions.into_iter().map(|s| s.into_report(shard)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_is_a_partition() {
+        for shards in [1usize, 2, 4, 7] {
+            let mut counts = vec![0usize; shards];
+            for d in 0..100u64 {
+                let s = shard_of(d, shards);
+                assert!(s < shards);
+                counts[s] += 1;
+            }
+            assert_eq!(counts.iter().sum::<usize>(), 100);
+            // Modulo assignment balances within one device.
+            let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced shards: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn zero_shards_degrades_to_one() {
+        assert_eq!(shard_of(5, 0), 0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Fleet-wide aggregation (DESIGN.md §7-4): roll per-device serving
+//! reports into the operator's view — latency percentiles across every
+//! inference in the fleet, evolution counts, energy, and the shared
+//! cache's hit rate (the cross-device reuse win) — with JSON emission for
+//! the bench harness (schema documented in README.md).
+
+use std::collections::BTreeMap;
+
+use super::pool::FleetConfig;
+use super::scenarios::ALL_ARCHETYPES;
+use super::session::DeviceReport;
+use crate::metrics::{Series, Table};
+use crate::runtime::CacheStats;
+use crate::util::json::Json;
+
+/// Latency summary in milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    fn from_series_us(s: &Series) -> LatencySummary {
+        if s.is_empty() {
+            return LatencySummary::default();
+        }
+        let p = s.percentiles(&[50.0, 95.0, 99.0]);
+        LatencySummary {
+            p50_ms: p[0] / 1e3,
+            p95_ms: p[1] / 1e3,
+            p99_ms: p[2] / 1e3,
+            mean_ms: s.mean() / 1e3,
+            max_ms: s.max() / 1e3,
+        }
+    }
+}
+
+/// Per-archetype rollup.
+#[derive(Debug, Clone)]
+pub struct ArchetypeSummary {
+    pub archetype: &'static str,
+    pub devices: usize,
+    pub inferences: usize,
+    pub evolutions: usize,
+    pub latency: LatencySummary,
+    pub battery_end_mean: f64,
+    pub energy_j: f64,
+    /// Shared-cache lookups by this archetype's sessions (deployment
+    /// changes only — re-deploys of a session's own variant don't count).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// The whole fleet run, aggregated.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub devices: usize,
+    pub shards: usize,
+    pub duration_s: f64,
+    pub seed: u64,
+    pub task: String,
+    pub inferences: usize,
+    pub dropped: usize,
+    pub evolutions: usize,
+    pub latency: LatencySummary,
+    pub search_p50_us: f64,
+    pub search_p99_us: f64,
+    pub energy_j: f64,
+    pub cache: CacheStats,
+    pub per_archetype: Vec<ArchetypeSummary>,
+    pub wall_ms: f64,
+}
+
+impl FleetReport {
+    /// Roll `reports` up into the fleet view.
+    pub fn aggregate(
+        cfg: &FleetConfig,
+        reports: Vec<DeviceReport>,
+        cache: CacheStats,
+        wall_ms: f64,
+    ) -> FleetReport {
+        let mut latency_us = Series::default();
+        let mut search_us = Series::default();
+        let mut inferences = 0usize;
+        let mut dropped = 0usize;
+        let mut evolutions = 0usize;
+        let mut energy_j = 0.0f64;
+        let mut by_archetype: BTreeMap<&'static str, Vec<&DeviceReport>> = BTreeMap::new();
+        for r in &reports {
+            latency_us.extend_from(&r.latency_us);
+            search_us.extend_from(&r.search_us);
+            inferences += r.inferences;
+            dropped += r.dropped;
+            evolutions += r.evolutions;
+            energy_j += r.energy_j;
+            by_archetype.entry(r.archetype).or_default().push(r);
+        }
+
+        // Archetype rollups in canonical order (skipping absent ones).
+        let per_archetype = ALL_ARCHETYPES
+            .iter()
+            .filter_map(|a| {
+                let rs = by_archetype.get(a.name())?;
+                let mut lat = Series::default();
+                let mut inf = 0usize;
+                let mut evo = 0usize;
+                let mut battery = 0.0f64;
+                let mut energy = 0.0f64;
+                let mut hits = 0u64;
+                let mut misses = 0u64;
+                for r in rs {
+                    lat.extend_from(&r.latency_us);
+                    inf += r.inferences;
+                    evo += r.evolutions;
+                    battery += r.battery_end;
+                    energy += r.energy_j;
+                    hits += r.cache_hits;
+                    misses += r.cache_misses;
+                }
+                Some(ArchetypeSummary {
+                    archetype: a.name(),
+                    devices: rs.len(),
+                    inferences: inf,
+                    evolutions: evo,
+                    latency: LatencySummary::from_series_us(&lat),
+                    battery_end_mean: battery / rs.len().max(1) as f64,
+                    energy_j: energy,
+                    cache_hits: hits,
+                    cache_misses: misses,
+                })
+            })
+            .collect();
+
+        let search_pcts = search_us.percentiles(&[50.0, 99.0]);
+        FleetReport {
+            devices: cfg.devices,
+            shards: cfg.shards,
+            duration_s: cfg.duration_s,
+            seed: cfg.seed,
+            task: cfg.task.clone(),
+            inferences,
+            dropped,
+            evolutions,
+            latency: LatencySummary::from_series_us(&latency_us),
+            search_p50_us: search_pcts[0],
+            search_p99_us: search_pcts[1],
+            energy_j,
+            cache,
+            per_archetype,
+            wall_ms,
+        }
+    }
+
+    /// JSON emission (schema: README.md "Fleet report schema").
+    pub fn to_json(&self) -> Json {
+        let num = Json::Num;
+        let mut fleet = BTreeMap::new();
+        fleet.insert("devices".into(), num(self.devices as f64));
+        fleet.insert("shards".into(), num(self.shards as f64));
+        fleet.insert("duration_s".into(), num(self.duration_s));
+        fleet.insert("seed".into(), num(self.seed as f64));
+        fleet.insert("task".into(), Json::Str(self.task.clone()));
+
+        let mut totals = BTreeMap::new();
+        totals.insert("inferences".into(), num(self.inferences as f64));
+        totals.insert("dropped".into(), num(self.dropped as f64));
+        totals.insert("evolutions".into(), num(self.evolutions as f64));
+        totals.insert("energy_j".into(), num(self.energy_j));
+        totals.insert("wall_ms".into(), num(self.wall_ms));
+
+        let mut cache = BTreeMap::new();
+        cache.insert("compiled".into(), num(self.cache.entries as f64));
+        cache.insert("hits".into(), num(self.cache.hits as f64));
+        cache.insert("misses".into(), num(self.cache.misses as f64));
+        cache.insert("hit_rate".into(), num(self.cache.hit_rate()));
+
+        let mut search = BTreeMap::new();
+        search.insert("p50_us".into(), num(self.search_p50_us));
+        search.insert("p99_us".into(), num(self.search_p99_us));
+
+        let archetypes = self
+            .per_archetype
+            .iter()
+            .map(|a| {
+                let mut m = BTreeMap::new();
+                m.insert("archetype".into(), Json::Str(a.archetype.to_string()));
+                m.insert("devices".into(), num(a.devices as f64));
+                m.insert("inferences".into(), num(a.inferences as f64));
+                m.insert("evolutions".into(), num(a.evolutions as f64));
+                m.insert("latency_ms".into(), latency_json(&a.latency));
+                m.insert("battery_end_mean".into(), num(a.battery_end_mean));
+                m.insert("energy_j".into(), num(a.energy_j));
+                m.insert("cache_hits".into(), num(a.cache_hits as f64));
+                m.insert("cache_misses".into(), num(a.cache_misses as f64));
+                Json::Obj(m)
+            })
+            .collect();
+
+        let mut root = BTreeMap::new();
+        root.insert("fleet".into(), Json::Obj(fleet));
+        root.insert("totals".into(), Json::Obj(totals));
+        root.insert("latency_ms".into(), latency_json(&self.latency));
+        root.insert("search_us".into(), Json::Obj(search));
+        root.insert("cache".into(), Json::Obj(cache));
+        root.insert("archetypes".into(), Json::Arr(archetypes));
+        Json::Obj(root)
+    }
+
+    /// Per-archetype markdown table for the bench output.
+    pub fn archetype_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "archetype", "devices", "inferences", "evolutions", "p50 ms", "p95 ms", "p99 ms",
+            "battery end", "energy J",
+        ]);
+        for a in &self.per_archetype {
+            t.row(vec![
+                a.archetype.to_string(),
+                a.devices.to_string(),
+                a.inferences.to_string(),
+                a.evolutions.to_string(),
+                format!("{:.2}", a.latency.p50_ms),
+                format!("{:.2}", a.latency.p95_ms),
+                format!("{:.2}", a.latency.p99_ms),
+                format!("{:.0}%", a.battery_end_mean * 100.0),
+                format!("{:.1}", a.energy_j),
+            ]);
+        }
+        t
+    }
+}
+
+fn latency_json(l: &LatencySummary) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("p50".into(), Json::Num(l.p50_ms));
+    m.insert("p95".into(), Json::Num(l.p95_ms));
+    m.insert("p99".into(), Json::Num(l.p99_ms));
+    m.insert("mean".into(), Json::Num(l.mean_ms));
+    m.insert("max".into(), Json::Num(l.max_ms));
+    Json::Obj(m)
+}

@@ -1,0 +1,287 @@
+//! Scenario profile library: device archetypes for fleet simulation
+//! (DESIGN.md §7-1).
+//!
+//! The paper evaluates one device at a time; a production fleet mixes
+//! radically different deployment contexts.  Each [`Archetype`] binds a
+//! platform model, a diurnal event profile, battery/cache dynamics, and an
+//! evolution-trigger policy into one [`Scenario`] — the unit a
+//! [`crate::fleet::DeviceSession`] is instantiated from.  Everything is
+//! deterministic per (fleet seed, device id), so fleet runs replay
+//! bit-identically.
+
+use crate::context::events::DayProfile;
+use crate::context::{Battery, CacheContention, ContextSimulator, EventTrace, Trigger, TriggerPolicy};
+use crate::platform::Platform;
+use crate::util::rng::Rng;
+
+/// The six fleet device archetypes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Archetype {
+    /// Smartphone carried through a working day: paper-style diurnal
+    /// event load, steady screen/sensing drain.
+    CommuterPhone,
+    /// Wrist wearable of a runner: bursty workout windows on a tiny
+    /// battery and a 1 MB L2 — the storage-constrained extreme.
+    JoggerWearable,
+    /// Mains-backed smart-hub in a shared office: high steady event rate,
+    /// heavy cache contention from co-resident services, battery ~flat.
+    OfficeHub,
+    /// Phone left uncharged overnight: almost no events, battery already
+    /// low — λ2 pressure dominates every evolution.
+    OvernightPhone,
+    /// Pi-class edge box on a UPS: constant moderate load, shared L2.
+    EdgeBox,
+    /// The §6.6 patrol robot: motor-dominated drain, patrol-leg bursts.
+    JetbotRobot,
+}
+
+/// All archetypes, in fleet round-robin order.
+pub const ALL_ARCHETYPES: [Archetype; 6] = [
+    Archetype::CommuterPhone,
+    Archetype::JoggerWearable,
+    Archetype::OfficeHub,
+    Archetype::OvernightPhone,
+    Archetype::EdgeBox,
+    Archetype::JetbotRobot,
+];
+
+impl Archetype {
+    /// Stable kebab-case name (report keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Archetype::CommuterPhone => "commuter-phone",
+            Archetype::JoggerWearable => "jogger-wearable",
+            Archetype::OfficeHub => "office-hub",
+            Archetype::OvernightPhone => "overnight-phone",
+            Archetype::EdgeBox => "edge-box",
+            Archetype::JetbotRobot => "jetbot-robot",
+        }
+    }
+
+    /// Deterministic archetype for a fleet device id (round-robin mix).
+    pub fn for_device(device_id: u64) -> Archetype {
+        ALL_ARCHETYPES[(device_id % ALL_ARCHETYPES.len() as u64) as usize]
+    }
+
+    /// The scenario profile bound to this archetype.
+    pub fn scenario(self) -> Scenario {
+        Scenario::for_archetype(self)
+    }
+}
+
+/// One device archetype's full deployment-context profile.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub archetype: Archetype,
+    pub platform: Platform,
+    /// Diurnal event intensity (events/minute segments).
+    pub profile: DayProfile,
+    /// Battery fraction at simulation start.
+    pub initial_battery: f64,
+    /// Baseline device draw (W): screen, sensing, motors, OS.
+    pub baseline_watts: f64,
+    /// Maximum L2 contention fraction from co-resident software.
+    pub cache_contention: f64,
+    /// Seconds between contention re-randomizations.
+    pub cache_update_period_s: f64,
+    /// Evolution trigger policy.
+    pub trigger: TriggerPolicy,
+}
+
+impl Scenario {
+    /// The profile table: one row per archetype.
+    pub fn for_archetype(archetype: Archetype) -> Scenario {
+        match archetype {
+            Archetype::CommuterPhone => Scenario {
+                archetype,
+                platform: Platform::redmi_3s(),
+                profile: DayProfile::standard(),
+                initial_battery: 0.86,
+                baseline_watts: 0.9,
+                cache_contention: 0.25,
+                cache_update_period_s: 3600.0,
+                trigger: TriggerPolicy::Hybrid {
+                    period_s: 7200.0,
+                    battery_delta: 0.05,
+                    cache_delta_bytes: 256 * 1024,
+                },
+            },
+            Archetype::JoggerWearable => Scenario {
+                archetype,
+                platform: Platform::wearable(),
+                profile: DayProfile {
+                    segments: vec![(0.0, 1.0), (0.5, 6.0), (1.5, 1.0), (5.0, 5.0), (6.0, 1.5)],
+                },
+                initial_battery: 0.65,
+                baseline_watts: 0.35,
+                cache_contention: 0.35,
+                cache_update_period_s: 1800.0,
+                trigger: TriggerPolicy::OnChange {
+                    battery_delta: 0.04,
+                    cache_delta_bytes: 128 * 1024,
+                },
+            },
+            Archetype::OfficeHub => Scenario {
+                archetype,
+                platform: Platform::office_hub(),
+                profile: DayProfile { segments: vec![(0.0, 3.0), (4.0, 5.0), (6.0, 3.5)] },
+                initial_battery: 1.0,
+                baseline_watts: 2.5,
+                cache_contention: 0.4,
+                cache_update_period_s: 900.0,
+                trigger: TriggerPolicy::Periodic { period_s: 3600.0 },
+            },
+            Archetype::OvernightPhone => Scenario {
+                archetype,
+                platform: Platform::redmi_3s(),
+                profile: DayProfile { segments: vec![(0.0, 0.2), (6.0, 0.5)] },
+                initial_battery: 0.15,
+                baseline_watts: 0.35,
+                cache_contention: 0.1,
+                cache_update_period_s: 7200.0,
+                trigger: TriggerPolicy::OnChange {
+                    battery_delta: 0.02,
+                    cache_delta_bytes: 512 * 1024,
+                },
+            },
+            Archetype::EdgeBox => Scenario {
+                archetype,
+                platform: Platform::raspberry_pi_4b(),
+                profile: DayProfile { segments: vec![(0.0, 2.0)] },
+                initial_battery: 0.95,
+                baseline_watts: 1.4,
+                cache_contention: 0.3,
+                cache_update_period_s: 3600.0,
+                trigger: TriggerPolicy::Periodic { period_s: 7200.0 },
+            },
+            Archetype::JetbotRobot => Scenario {
+                archetype,
+                platform: Platform::jetbot(),
+                profile: DayProfile {
+                    segments: vec![
+                        (0.0, 0.5),
+                        (1.0, 4.0),
+                        (2.0, 0.5),
+                        (3.0, 4.0),
+                        (4.0, 0.5),
+                        (5.0, 4.0),
+                        (6.0, 0.5),
+                        (7.0, 2.0),
+                    ],
+                },
+                initial_battery: 0.86,
+                baseline_watts: 1.8,
+                cache_contention: 0.3,
+                cache_update_period_s: 3600.0,
+                trigger: TriggerPolicy::Hybrid {
+                    period_s: 7200.0,
+                    battery_delta: 0.08,
+                    cache_delta_bytes: 384 * 1024,
+                },
+            },
+        }
+    }
+
+    /// Per-device sub-seed for the context simulator (battery/cache).
+    pub fn context_seed(fleet_seed: u64, device_id: u64) -> u64 {
+        Rng::new(fleet_seed ^ device_id.wrapping_mul(0x9E3779B97F4A7C15)).next_u64()
+    }
+
+    /// Per-device sub-seed for the event trace (decorrelated from the
+    /// context seed so traces and contention vary independently).
+    pub fn trace_seed(fleet_seed: u64, device_id: u64) -> u64 {
+        let mut rng = Rng::new(fleet_seed ^ device_id.wrapping_mul(0x9E3779B97F4A7C15));
+        rng.next_u64();
+        rng.next_u64()
+    }
+
+    /// This scenario's context simulator, deterministically seeded.
+    pub fn simulator(&self, context_seed: u64) -> ContextSimulator {
+        let mut battery =
+            Battery::new(&self.platform).with_fraction(self.initial_battery);
+        battery.baseline_watts = self.baseline_watts;
+        let mut cache = CacheContention::new(
+            self.platform.l2_cache_bytes,
+            self.cache_contention,
+            context_seed,
+        );
+        cache.update_period_s = self.cache_update_period_s;
+        let events = EventTrace::with_profile(self.profile.clone(), context_seed);
+        ContextSimulator::new(battery, cache, events)
+    }
+
+    /// This scenario's event trace, deterministically seeded.
+    pub fn trace(&self, trace_seed: u64) -> EventTrace {
+        EventTrace::with_profile(self.profile.clone(), trace_seed)
+    }
+
+    /// A fresh trigger in this scenario's policy.
+    pub fn make_trigger(&self) -> Trigger {
+        Trigger::new(self.trigger)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn archetype_assignment_is_total_and_deterministic() {
+        for id in 0..64u64 {
+            assert_eq!(Archetype::for_device(id), Archetype::for_device(id));
+        }
+        // All six archetypes appear in any 6-device window.
+        let window: Vec<Archetype> = (0..6u64).map(Archetype::for_device).collect();
+        for a in ALL_ARCHETYPES {
+            assert!(window.contains(&a), "{:?} missing from round-robin", a);
+        }
+    }
+
+    #[test]
+    fn traces_replay_identically_per_seed() {
+        for a in ALL_ARCHETYPES {
+            let s = a.scenario();
+            let seed = Scenario::trace_seed(42, 7);
+            let t1: Vec<f64> =
+                s.trace(seed).sample(4.0 * 3600.0).iter().map(|e| e.t_seconds).collect();
+            let t2: Vec<f64> =
+                s.trace(seed).sample(4.0 * 3600.0).iter().map(|e| e.t_seconds).collect();
+            assert_eq!(t1, t2, "{:?} trace must replay", a);
+            assert!(!t1.is_empty(), "{:?} produced no events in 4 h", a);
+        }
+    }
+
+    #[test]
+    fn device_sub_seeds_decorrelate() {
+        let a = Scenario::context_seed(42, 0);
+        let b = Scenario::context_seed(42, 1);
+        let c = Scenario::context_seed(43, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(Scenario::context_seed(42, 0), Scenario::trace_seed(42, 0));
+    }
+
+    #[test]
+    fn simulators_are_deterministic_and_respect_profiles() {
+        let s = Archetype::OvernightPhone.scenario();
+        let seed = Scenario::context_seed(1, 3);
+        let mut sim1 = s.simulator(seed);
+        let mut sim2 = s.simulator(seed);
+        for _ in 0..10 {
+            sim1.advance(1800.0, 0.1);
+            sim2.advance(1800.0, 0.1);
+            let (a, b) = (sim1.snapshot(), sim2.snapshot());
+            assert_eq!(a.available_cache, b.available_cache);
+            assert!((a.battery_fraction - b.battery_fraction).abs() < 1e-12);
+        }
+        // The overnight phone starts low on battery by construction.
+        assert!(sim1.snapshot().battery_fraction < 0.15);
+    }
+
+    #[test]
+    fn archetype_names_are_unique() {
+        let names: std::collections::HashSet<&str> =
+            ALL_ARCHETYPES.iter().map(|a| a.name()).collect();
+        assert_eq!(names.len(), ALL_ARCHETYPES.len());
+    }
+}

@@ -1,0 +1,270 @@
+//! Per-device serving session (DESIGN.md §7-2).
+//!
+//! A [`DeviceSession`] is one device's serving state machine: a
+//! device-local [`ContextSimulator`] + [`Trigger`] + engine with its
+//! active variant, advanced through the *same* event-loop semantics as
+//! [`crate::serving::ServingLoop`] (context check every
+//! [`CONTEXT_CHECK_PERIOD_S`], trigger-gated evolution, modeled inference
+//! with per-inference energy drain) — but step-at-a-time, so a shard
+//! worker can interleave many sessions in simulated-time order.  A
+//! single-device fleet run therefore reproduces `ServingLoop`'s evolution
+//! trajectory exactly (asserted by `tests/fleet.rs`).
+//!
+//! On evolution, sessions load their deployed variant through the shared
+//! [`ShardedCache`]: the first session fleet-wide to deploy a variant
+//! "compiles" it, every later session reuses the entry — the cross-device
+//! hot-path win the fleet report surfaces as the cache hit rate.
+
+use anyhow::Result;
+
+use super::scenarios::{Archetype, Scenario};
+use crate::context::{ContextSimulator, Trigger};
+use crate::context::events::Event;
+use crate::coordinator::engine::AdaSpring;
+use crate::coordinator::manifest::Manifest;
+use crate::coordinator::CompressionConfig;
+use crate::metrics::Series;
+use crate::platform::EnergyModel;
+use crate::runtime::ShardedCache;
+use crate::serving::{EvolutionRecord, ServingReport, CONTEXT_CHECK_PERIOD_S};
+
+/// A simulated compiled-variant entry: what the shared cache holds on the
+/// modeled path (the PJRT path holds [`crate::runtime::LoadedVariant`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SimCompiledVariant {
+    pub variant_id: usize,
+    pub param_bytes: u64,
+}
+
+/// Shared simulated-executable cache, keyed by (task, variant).
+pub type SimVariantCache = ShardedCache<SimCompiledVariant>;
+
+/// One device's serving session.
+pub struct DeviceSession {
+    pub device_id: u64,
+    pub archetype: Archetype,
+    platform_name: String,
+    engine: AdaSpring,
+    sim: ContextSimulator,
+    trigger: Trigger,
+    events: Vec<Event>,
+    energy_per_inference_j: f64,
+    duration_s: f64,
+    // Loop state, mirroring ServingLoop::run.
+    t: f64,
+    last_t: f64,
+    next_check: f64,
+    ei: usize,
+    done: bool,
+    report: ServingReport,
+    /// Variant this session last fetched from the shared cache; re-deploys
+    /// of the same variant skip the cache so the hit rate measures actual
+    /// reuse of compiles, not a session re-touching its own executable.
+    loaded_variant: Option<usize>,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+/// A finished session's summary, handed to the fleet aggregator.
+#[derive(Debug)]
+pub struct DeviceReport {
+    pub device_id: u64,
+    pub shard: usize,
+    pub archetype: &'static str,
+    pub platform: String,
+    pub inferences: usize,
+    pub dropped: usize,
+    pub evolutions: usize,
+    pub latency_us: Series,
+    pub search_us: Series,
+    pub battery_end: f64,
+    pub energy_j: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl DeviceSession {
+    /// Build the session for `device_id` with its round-robin archetype.
+    pub fn new(
+        manifest: &Manifest,
+        task: &str,
+        device_id: u64,
+        fleet_seed: u64,
+        duration_s: f64,
+    ) -> Result<DeviceSession> {
+        let scenario = Archetype::for_device(device_id).scenario();
+        Self::with_scenario(manifest, task, &scenario, device_id, fleet_seed, duration_s)
+    }
+
+    /// Build from an explicit scenario (tests, custom mixes).
+    pub fn with_scenario(
+        manifest: &Manifest,
+        task: &str,
+        scenario: &Scenario,
+        device_id: u64,
+        fleet_seed: u64,
+        duration_s: f64,
+    ) -> Result<DeviceSession> {
+        let engine = AdaSpring::new(manifest, task, &scenario.platform, false)?;
+        let sim = scenario.simulator(Scenario::context_seed(fleet_seed, device_id));
+        let events = scenario
+            .trace(Scenario::trace_seed(fleet_seed, device_id))
+            .sample(duration_s);
+        // Per-inference energy from the platform model at backbone costs,
+        // matching the sound_assistant case study's accounting.
+        let energy_per_inference_j = {
+            let costs = engine
+                .evaluator
+                .cost_model()
+                .costs(&CompressionConfig::identity(engine.task().n_layers()));
+            EnergyModel::new(&scenario.platform)
+                .inference_energy(&costs, scenario.platform.l2_cache_bytes)
+                .total_j()
+        };
+        Ok(DeviceSession {
+            device_id,
+            archetype: scenario.archetype,
+            platform_name: scenario.platform.name.to_string(),
+            engine,
+            sim,
+            trigger: scenario.make_trigger(),
+            events,
+            energy_per_inference_j,
+            duration_s,
+            t: 0.0,
+            last_t: 0.0,
+            next_check: 0.0,
+            ei: 0,
+            done: duration_s <= 0.0,
+            report: ServingReport::default(),
+            loaded_variant: None,
+            cache_hits: 0,
+            cache_misses: 0,
+        })
+    }
+
+    /// Has the session consumed its whole simulated duration?
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// The simulated instant the next [`step`](Self::step) will process
+    /// (the shard queue's ordering key); `INFINITY` once done.
+    pub fn next_due(&self) -> f64 {
+        if self.done {
+            return f64::INFINITY;
+        }
+        let next_event_t = self
+            .events
+            .get(self.ei)
+            .map(|e| e.t_seconds)
+            .unwrap_or(f64::INFINITY);
+        next_event_t.min(self.next_check).min(self.duration_s)
+    }
+
+    /// Process one simulated instant — one iteration of the
+    /// `ServingLoop::run` body: advance the simulators, maybe evolve at a
+    /// context check, maybe serve an event with modeled inference.
+    pub fn step(&mut self, cache: &SimVariantCache) -> Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        let next_event_t = self
+            .events
+            .get(self.ei)
+            .map(|e| e.t_seconds)
+            .unwrap_or(f64::INFINITY);
+        let t = next_event_t.min(self.next_check).min(self.duration_s);
+        self.t = t;
+        self.sim.advance(t - self.last_t, 0.0);
+        self.last_t = t;
+
+        if t >= self.next_check {
+            let snap = self.sim.snapshot();
+            if self.trigger.should_fire(&snap) {
+                let constraints = self.engine.constraints_for(&snap);
+                let evo = self.engine.evolve(&constraints)?;
+                if self.loaded_variant != Some(evo.variant_id) {
+                    self.load_variant(cache, evo.variant_id)?;
+                    self.loaded_variant = Some(evo.variant_id);
+                }
+                self.report.evolutions.push(EvolutionRecord::capture(&snap, &evo));
+            }
+            self.next_check = t + CONTEXT_CHECK_PERIOD_S;
+        }
+
+        if (t - next_event_t).abs() < 1e-9 && self.ei < self.events.len() {
+            self.ei += 1;
+            let available = self.sim.snapshot().available_cache;
+            match self.engine.modeled_active_latency_ms(available) {
+                Some(latency_ms) => {
+                    self.report.inferences += 1;
+                    self.report.inference_latency_us.push(latency_ms * 1e3);
+                    self.sim.advance(0.0, self.energy_per_inference_j);
+                }
+                None => self.report.dropped += 1,
+            }
+        }
+
+        self.done = self.t >= self.duration_s;
+        Ok(())
+    }
+
+    /// Run the session to completion (single-device paths and tests; the
+    /// shard pool interleaves [`step`](Self::step) calls instead).
+    pub fn run_to_completion(&mut self, cache: &SimVariantCache) -> Result<()> {
+        while !self.done {
+            self.step(cache)?;
+        }
+        Ok(())
+    }
+
+    /// Fetch the deployed variant through the shared cache, simulating
+    /// the one-off compile on first fleet-wide use.
+    fn load_variant(&mut self, cache: &SimVariantCache, variant_id: usize) -> Result<()> {
+        let task = self.engine.task();
+        let key = (task.name.clone(), variant_id);
+        let param_bytes = task
+            .variants
+            .iter()
+            .find(|v| v.id == variant_id)
+            .map(|v| v.params * 4)
+            .unwrap_or(0);
+        let (_entry, hit) = cache
+            .get_or_try_insert_with(key, || Ok(SimCompiledVariant { variant_id, param_bytes }))?;
+        if hit {
+            self.cache_hits += 1;
+        } else {
+            self.cache_misses += 1;
+        }
+        Ok(())
+    }
+
+    /// The serving report accumulated so far.
+    pub fn report(&self) -> &ServingReport {
+        &self.report
+    }
+
+    /// Consume the session into its fleet summary.
+    pub fn into_report(self, shard: usize) -> DeviceReport {
+        let mut search_us = Series::default();
+        for e in &self.report.evolutions {
+            search_us.push(e.search_time_us as f64);
+        }
+        DeviceReport {
+            device_id: self.device_id,
+            shard,
+            archetype: self.archetype.name(),
+            platform: self.platform_name,
+            inferences: self.report.inferences,
+            dropped: self.report.dropped,
+            evolutions: self.report.evolutions.len(),
+            latency_us: self.report.inference_latency_us,
+            search_us,
+            battery_end: self.sim.battery.fraction(),
+            energy_j: self.report.inferences as f64 * self.energy_per_inference_j,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+        }
+    }
+}

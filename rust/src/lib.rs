@@ -4,19 +4,26 @@
 //! The coordinator owns everything that happens after `make artifacts`:
 //! deployment-context simulation, the Runtime3C compression search
 //! (Algorithm 1), artifact selection/execution through PJRT, and the
-//! serving loop.  Python never runs on the request path.
+//! serving paths — from a single device up to a sharded fleet.  Python
+//! never runs on the request path.
 //!
 //! Module map (see DESIGN.md §2):
 //! * [`coordinator`] — operators, configs, encodings, cost model, accuracy
 //!   predictor, Runtime3C + baseline optimizers, the AdaSpring engine.
-//! * [`runtime`] — PJRT CPU client; loads HLO-text artifacts and executes.
+//! * [`runtime`] — PJRT CPU client; loads HLO-text artifacts and executes
+//!   them through a lock-striped, shareable executable cache.
 //! * [`context`] — dynamic deployment context: battery, cache, events.
-//! * [`platform`] — analytic device models (RedMi 3S / Pi 4B / Jetbot).
-//! * [`serving`] — tokio request loop driving inference over events.
+//! * [`platform`] — analytic device models (RedMi 3S / Pi 4B / Jetbot,
+//!   plus the fleet-only wearable and office-hub classes).
+//! * [`serving`] — single-device serving loop (std::thread + mpsc request
+//!   pump; tokio is unavailable offline) driving inference over events.
+//! * [`fleet`] — sharded multi-device simulation: scenario archetypes,
+//!   per-device sessions, shard workers, fleet-wide aggregation.
 //! * [`metrics`] — table/series emission for the benchmark harness.
 
 pub mod context;
 pub mod coordinator;
+pub mod fleet;
 pub mod metrics;
 pub mod platform;
 pub mod runtime;

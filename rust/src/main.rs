@@ -6,11 +6,14 @@
 //!                              — one Runtime3C search, printed
 //!   evolve   [--task --platform ...]
 //!                              — search + artifact snap + PJRT swap + infer
-//!   serve    [--task --platform --minutes]
+//!   serve    [--task --platform --minutes --modeled]
 //!                              — threaded serving demo over an event trace
+//!                                (--modeled: platform-model inference,
+//!                                no artifacts needed)
 //!
 //! The bench binaries (bench_table2, ..., bench_fig10) regenerate the
-//! paper's tables/figures; the examples (quickstart, sound_assistant,
+//! paper's tables/figures; bench_fleet drives the sharded fleet runtime
+//! (DESIGN.md §7); the examples (quickstart, sound_assistant,
 //! dynamic_context) are the end-to-end drivers.
 
 use anyhow::{bail, Result};
@@ -21,7 +24,7 @@ use adaspring::coordinator::eval::Constraints;
 use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, Table};
 use adaspring::platform::Platform;
-use adaspring::serving::ServingLoop;
+use adaspring::serving::{InferenceMode, ServingLoop};
 use adaspring::util::cli::Args;
 use adaspring::util::rng::Rng;
 
@@ -158,11 +161,22 @@ fn evolve(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let m = load_manifest(args)?;
+    // --modeled serves from the platform latency model (no HLO artifacts
+    // needed — falls back to the synthetic palette when the manifest is
+    // absent); default is real PJRT inference.
+    let modeled = args.flag("modeled");
+    let m = match load_manifest(args) {
+        Ok(m) => m,
+        Err(_) if modeled => {
+            eprintln!("no artifact manifest; using the synthetic palette");
+            Manifest::synthetic()
+        }
+        Err(e) => return Err(e),
+    };
     let task_name = args.get_or("task", "d3");
     let p = platform(args);
     let minutes = args.get_f64("minutes", 10.0);
-    let mut engine = AdaSpring::new(&m, task_name, &p, true)?;
+    let mut engine = AdaSpring::new(&m, task_name, &p, !modeled)?;
     let n_in: usize = engine.task().input_shape.iter().product();
 
     let mut sim = ContextSimulator::new(
@@ -182,6 +196,7 @@ fn serve(args: &Args) -> Result<()> {
             cache_delta_bytes: 256 * 1024,
         }),
         energy_per_inference_j: 3e-3,
+        inference: if modeled { InferenceMode::Modeled } else { InferenceMode::Pjrt },
     };
     let mut rng = Rng::new(123);
     let report = looper.run(&events, minutes * 60.0, |_ev| {

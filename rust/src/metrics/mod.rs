@@ -104,6 +104,17 @@ impl Series {
         self.values.push(v);
     }
 
+    /// Raw samples (insertion order).
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Append every sample of `other` (fleet-wide aggregation of
+    /// per-device series).
+    pub fn extend_from(&mut self, other: &Series) {
+        self.values.extend_from_slice(&other.values);
+    }
+
     pub fn len(&self) -> usize {
         self.values.len()
     }
@@ -128,13 +139,23 @@ impl Series {
     }
 
     pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles from a single sort (the fleet-aggregation hot
+    /// path; `percentile` in a loop would re-sort per call).
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
         if self.values.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut v = self.values.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        ps.iter()
+            .map(|&p| {
+                let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+                v[idx.min(v.len() - 1)]
+            })
+            .collect()
     }
 
     pub fn std(&self) -> f64 {

@@ -114,15 +114,65 @@ impl Platform {
         }
     }
 
+    /// Wear-OS-class wearable (fleet archetype, not a paper platform):
+    /// small in-order cores, 1 MB L2, a 420 mAh cell.  The tight cache
+    /// makes parameter residency the dominant constraint.
+    pub fn wearable() -> Platform {
+        Platform {
+            name: "Wearable W1",
+            processor: "Cortex-A53",
+            l2_cache_bytes: 1024 * 1024,
+            battery_mah: 420.0,
+            battery_volts: 3.85,
+            macs_per_sec: 1.6e8,
+            dram_bandwidth: 2.0e9,
+            energy_per_mac: 1.6e-10,
+            energy_per_sram_byte: 1.0e-10,
+            energy_per_dram_byte: 3.0e-9,
+            sensing_energy_per_event: 6.0e-4,
+            param_cache_fraction: 0.15,
+            mu: (0.8, 0.2),
+        }
+    }
+
+    /// Mains-backed office smart-hub (fleet archetype): big cores, 4 MB
+    /// L2, and a UPS-class reserve so the battery fraction stays high —
+    /// compression pressure comes from cache contention, not energy.
+    pub fn office_hub() -> Platform {
+        Platform {
+            name: "Office Hub",
+            processor: "Cortex-A76",
+            l2_cache_bytes: 4 * 1024 * 1024,
+            battery_mah: 20_000.0,
+            battery_volts: 5.0,
+            macs_per_sec: 1.2e9,
+            dram_bandwidth: 8.0e9,
+            energy_per_mac: 8.0e-11,
+            energy_per_sram_byte: 6.0e-11,
+            energy_per_dram_byte: 1.6e-9,
+            sensing_energy_per_event: 8.0e-4,
+            param_cache_fraction: 0.20,
+            mu: (0.8, 0.2),
+        }
+    }
+
     /// All three evaluation platforms in paper order.
     pub fn all() -> Vec<Platform> {
         vec![Self::redmi_3s(), Self::raspberry_pi_4b(), Self::jetbot()]
     }
 
-    /// Platform by (case-insensitive) name prefix.
+    /// The paper platforms plus the fleet-only device classes.
+    pub fn extended() -> Vec<Platform> {
+        let mut v = Self::all();
+        v.push(Self::wearable());
+        v.push(Self::office_hub());
+        v
+    }
+
+    /// Platform by (case-insensitive) name prefix, over the extended set.
     pub fn by_name(name: &str) -> Option<Platform> {
         let n = name.to_lowercase();
-        Self::all().into_iter().find(|p| p.name.to_lowercase().contains(&n))
+        Self::extended().into_iter().find(|p| p.name.to_lowercase().contains(&n))
     }
 
     /// Total battery energy in joules.
@@ -155,5 +205,16 @@ mod tests {
         for p in Platform::all() {
             assert_eq!(p.l2_cache_bytes, 2 * 1024 * 1024, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn fleet_platforms_extend_without_touching_paper_set() {
+        assert_eq!(Platform::all().len(), 3);
+        assert_eq!(Platform::extended().len(), 5);
+        assert_eq!(Platform::by_name("wearable").unwrap().name, "Wearable W1");
+        assert_eq!(Platform::by_name("office").unwrap().name, "Office Hub");
+        // The wearable's cache is the tightest; the hub's the loosest.
+        assert!(Platform::wearable().l2_cache_bytes < Platform::redmi_3s().l2_cache_bytes);
+        assert!(Platform::office_hub().l2_cache_bytes > Platform::jetbot().l2_cache_bytes);
     }
 }

@@ -1,0 +1,211 @@
+//! Lock-striped concurrent variant cache (DESIGN.md §4).
+//!
+//! Compiled executables are the expensive, immutable, perfectly shareable
+//! resource of the whole runtime: every device session that evolves to
+//! palette variant v of task t wants *the same* compiled artifact.  This
+//! cache makes that sharing explicit — entries are `Arc<V>` keyed by
+//! `(task, variant)`, the map is striped across independent mutexes so
+//! concurrent sessions on different variants never contend, and a builder
+//! closure runs at most once per key (the stripe lock is held across the
+//! build, so two sessions racing to compile the same variant serialize and
+//! the loser gets the winner's artifact).
+//!
+//! The cache is generic over the entry type: the PJRT path stores
+//! [`crate::runtime::LoadedVariant`] (see [`crate::runtime::Executor`]),
+//! and the fleet's modeled path stores its simulated-compile entries —
+//! both share the hit/miss accounting that the fleet report surfaces as
+//! the cross-device reuse win.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+/// Cache key: (task name, palette variant id).
+pub type VariantKey = (String, usize);
+
+/// Snapshot of the cache counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hits over total lookups (0 when the cache was never consulted).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A lock-striped `(task, variant) → Arc<V>` map with build-once inserts.
+pub struct ShardedCache<V> {
+    stripes: Vec<Mutex<HashMap<VariantKey, Arc<V>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Default stripe count — enough that a handful of shard workers rarely
+/// collide, small enough to stay cheap for single-engine use.
+pub const DEFAULT_STRIPES: usize = 16;
+
+impl<V> ShardedCache<V> {
+    pub fn new(stripes: usize) -> ShardedCache<V> {
+        let n = stripes.max(1);
+        ShardedCache {
+            stripes: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn stripe(&self, key: &VariantKey) -> &Mutex<HashMap<VariantKey, Arc<V>>> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        let idx = (h.finish() % self.stripes.len() as u64) as usize;
+        &self.stripes[idx]
+    }
+
+    /// Fetch the entry for `key`, building it with `build` on first use.
+    /// Returns the shared entry plus whether this lookup was a hit.  The
+    /// stripe lock is held across `build`, so the builder runs at most
+    /// once per key even under concurrent callers (they serialize on the
+    /// stripe and the second caller finds the first caller's entry).
+    pub fn get_or_try_insert_with(
+        &self,
+        key: VariantKey,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, bool)> {
+        let mut map = self.stripe(&key).lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(entry) = map.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((entry.clone(), true));
+        }
+        let entry = Arc::new(build()?);
+        map.insert(key, entry.clone());
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        Ok((entry, false))
+    }
+
+    /// Fetch without building (no hit/miss accounting).
+    pub fn peek(&self, key: &VariantKey) -> Option<Arc<V>> {
+        let map = self.stripe(key).lock().unwrap_or_else(|p| p.into_inner());
+        map.get(key).cloned()
+    }
+
+    /// Number of cached entries across all stripes.
+    pub fn len(&self) -> usize {
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot (entries / hits / misses).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn builds_once_and_counts_hits() {
+        let cache: ShardedCache<u32> = ShardedCache::new(4);
+        let built = AtomicUsize::new(0);
+        let key = || ("d3".to_string(), 7usize);
+        let (a, hit_a) = cache
+            .get_or_try_insert_with(key(), || {
+                built.fetch_add(1, Ordering::SeqCst);
+                Ok(42)
+            })
+            .unwrap();
+        let (b, hit_b) = cache
+            .get_or_try_insert_with(key(), || {
+                built.fetch_add(1, Ordering::SeqCst);
+                Ok(43)
+            })
+            .unwrap();
+        assert!(!hit_a);
+        assert!(hit_b);
+        assert_eq!((*a, *b), (42, 42), "second caller sees the first build");
+        assert_eq!(built.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.hits, s.misses), (1, 1, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_alias() {
+        let cache: ShardedCache<usize> = ShardedCache::new(2);
+        for id in 0..32 {
+            cache
+                .get_or_try_insert_with(("t".to_string(), id), || Ok(id * 10))
+                .unwrap();
+        }
+        assert_eq!(cache.len(), 32);
+        for id in 0..32 {
+            assert_eq!(*cache.peek(&("t".to_string(), id)).unwrap(), id * 10);
+        }
+        assert!(cache.peek(&("other".to_string(), 0)).is_none());
+    }
+
+    #[test]
+    fn build_failure_is_not_cached() {
+        let cache: ShardedCache<u32> = ShardedCache::new(1);
+        let key = ("t".to_string(), 1usize);
+        let r = cache.get_or_try_insert_with(key.clone(), || Err(anyhow::anyhow!("boom")));
+        assert!(r.is_err());
+        assert!(cache.peek(&key).is_none());
+        let (_, hit) = cache.get_or_try_insert_with(key, || Ok(5)).unwrap();
+        assert!(!hit, "failed build must not poison the key");
+    }
+
+    #[test]
+    fn two_threads_compile_once() {
+        let cache: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(8));
+        let built = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let cache = Arc::clone(&cache);
+            let built = Arc::clone(&built);
+            handles.push(std::thread::spawn(move || {
+                let (v, _) = cache
+                    .get_or_try_insert_with(("d3".to_string(), 3), || {
+                        built.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(99)
+                    })
+                    .unwrap();
+                *v
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 99);
+        }
+        assert_eq!(built.load(Ordering::SeqCst), 1, "one compile across threads");
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 2);
+        assert_eq!(s.hits, 1);
+    }
+}

@@ -6,14 +6,21 @@
 //! the swap on re-evolution is therefore a pointer move after first use —
 //! the ≤6.2 ms evolution-latency claim covers the search + swap, not the
 //! one-off compile.
+//!
+//! The cache is an [`ExecutableCache`] (DESIGN.md §4): an `Arc`-shared,
+//! lock-striped map keyed by (task, variant).  An executor built with
+//! [`Executor::new`] owns a private cache (the single-device case); fleet
+//! deployments hand the same `Arc` to every engine via
+//! [`Executor::with_cache`], so a variant compiled by one device session
+//! is reused by every other session that evolves to it.
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::cache::{ShardedCache, DEFAULT_STRIPES};
 use crate::coordinator::manifest::{TaskArtifacts, Variant};
 
 /// One compiled variant ready to run.
@@ -24,6 +31,9 @@ pub struct LoadedVariant {
     pub compile_ms: f64,
 }
 
+/// Shared compiled-executable cache, keyed by (task, variant).
+pub type ExecutableCache = ShardedCache<LoadedVariant>;
+
 /// Execution statistics for one inference.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecStats {
@@ -31,18 +41,30 @@ pub struct ExecStats {
     pub output_len: usize,
 }
 
-/// PJRT CPU executor with a per-task executable cache.
+/// PJRT CPU executor over a (possibly shared) executable cache.
 pub struct Executor {
     client: xla::PjRtClient,
-    cache: HashMap<usize, Arc<LoadedVariant>>,
+    cache: Arc<ExecutableCache>,
     input_shape: Vec<usize>,
 }
 
 impl Executor {
-    /// Create a CPU executor for one task's artifact family.
+    /// Create a CPU executor for one task's artifact family with a
+    /// private cache (single-engine deployments).
     pub fn new(task: &TaskArtifacts) -> Result<Executor> {
+        Self::with_cache(task, Arc::new(ShardedCache::new(DEFAULT_STRIPES)))
+    }
+
+    /// Create a CPU executor over a shared cache: compiled variants are
+    /// reused across every executor holding the same `Arc`.
+    pub fn with_cache(task: &TaskArtifacts, cache: Arc<ExecutableCache>) -> Result<Executor> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Executor { client, cache: HashMap::new(), input_shape: task.input_shape.clone() })
+        Ok(Executor { client, cache, input_shape: task.input_shape.clone() })
+    }
+
+    /// The executable cache backing this executor.
+    pub fn cache(&self) -> &Arc<ExecutableCache> {
+        &self.cache
     }
 
     /// Number of PJRT devices (CPU: 1).
@@ -50,29 +72,30 @@ impl Executor {
         self.client.device_count()
     }
 
-    /// Load + compile a variant's HLO artifact (cached).
-    pub fn load(&mut self, task: &TaskArtifacts, v: &Variant, root: &Path) -> Result<Arc<LoadedVariant>> {
-        if let Some(l) = self.cache.get(&v.id) {
-            return Ok(l.clone());
-        }
-        let path = task.hlo_path(v, root);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))
-        .with_context(|| format!("variant {}", v.id))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling variant {}: {e:?}", v.id))?;
-        let loaded = Arc::new(LoadedVariant {
-            variant_id: v.id,
-            exe,
-            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
-        });
-        self.cache.insert(v.id, loaded.clone());
+    /// Load + compile a variant's HLO artifact (cached fleet-wide when the
+    /// cache is shared; the compile runs at most once per (task, variant)).
+    pub fn load(&self, task: &TaskArtifacts, v: &Variant, root: &Path) -> Result<Arc<LoadedVariant>> {
+        let (loaded, _hit) = self
+            .cache
+            .get_or_try_insert_with((task.name.clone(), v.id), || {
+                let path = task.hlo_path(v, root);
+                let t0 = Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))
+                .with_context(|| format!("variant {}", v.id))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling variant {}: {e:?}", v.id))?;
+                Ok(LoadedVariant {
+                    variant_id: v.id,
+                    exe,
+                    compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+                })
+            })?;
         Ok(loaded)
     }
 
@@ -114,7 +137,8 @@ impl Executor {
         Ok(total as f64 / iters.max(1) as f64)
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of compiled executables currently cached (fleet-wide count
+    /// when the cache is shared).
     pub fn cached_count(&self) -> usize {
         self.cache.len()
     }

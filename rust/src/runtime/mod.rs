@@ -1,7 +1,13 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
 //! client.  Python never runs here — the HLO was lowered once by
 //! `python/compile/aot.py` (see /opt/xla-example/load_hlo for the pattern).
+//!
+//! Compiled executables live in a lock-striped [`cache::ShardedCache`]
+//! keyed by (task, variant); share one cache `Arc` across executors to
+//! reuse compiles across engines/devices (DESIGN.md §4).
 
+pub mod cache;
 pub mod executor;
 
-pub use executor::{ExecStats, Executor, LoadedVariant};
+pub use cache::{CacheStats, ShardedCache, VariantKey, DEFAULT_STRIPES};
+pub use executor::{ExecStats, ExecutableCache, Executor, LoadedVariant};

@@ -1,10 +1,18 @@
 //! Serving loop: events → inference through the active variant, with
 //! periodic/context-triggered re-evolution (paper Fig. 4's online path).
 //!
-//! Implemented over std::thread + mpsc (tokio is unavailable offline); the
-//! coordinator thread owns the engine, a producer thread replays the event
-//! trace, and a control channel carries evolution triggers — the same
-//! leader/worker shape a tokio runtime would express.
+//! Implemented over std::thread + mpsc (tokio is unavailable offline; see
+//! DESIGN.md §2): the coordinator thread owns the engine, a producer
+//! thread replays the event trace, and a control channel carries evolution
+//! triggers — the same leader/worker shape an async runtime would express.
+//! Multi-device serving lives in [`crate::fleet`], which runs one of these
+//! per-device state machines per session across sharded workers.
+//!
+//! Two inference paths share the loop ([`InferenceMode`]): `Pjrt` runs the
+//! compiled artifact through the executor; `Modeled` serves from the
+//! platform latency model (used when artifacts are absent — CI, fleet
+//! simulation) with identical scheduling/trigger/energy semantics, so
+//! evolution behaviour is comparable across the two.
 
 use std::sync::mpsc;
 use std::thread;
@@ -13,9 +21,13 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::context::events::Event;
-use crate::context::{ContextSimulator, Trigger};
+use crate::context::{ContextSimulator, ContextSnapshot, Trigger};
 use crate::coordinator::engine::{AdaSpring, Evolution};
 use crate::metrics::Series;
+
+/// Cadence (seconds of simulated time) at which the serving loop samples
+/// the deployment context and consults the evolution trigger.
+pub const CONTEXT_CHECK_PERIOD_S: f64 = 60.0;
 
 /// A unit of work for the serving loop.
 #[derive(Debug)]
@@ -24,6 +36,17 @@ pub enum Request {
     Infer { input: Vec<f32>, t_seconds: f64 },
     /// Drain and stop.
     Shutdown,
+}
+
+/// How the loop serves each event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum InferenceMode {
+    /// Real PJRT execution through the active compiled variant.
+    #[default]
+    Pjrt,
+    /// Platform-model latency for the active variant (no artifacts
+    /// needed); energy accounting matches the Pjrt path.
+    Modeled,
 }
 
 /// Serving statistics over a run.
@@ -51,20 +74,42 @@ pub struct EvolutionRecord {
     pub c_sa: f64,
 }
 
+impl EvolutionRecord {
+    /// Record one evolution against the context snapshot that demanded it
+    /// (shared by [`ServingLoop`] and the fleet's per-device sessions).
+    pub fn capture(snap: &ContextSnapshot, evo: &Evolution) -> EvolutionRecord {
+        EvolutionRecord {
+            t_seconds: snap.t_seconds,
+            battery_fraction: snap.battery_fraction,
+            available_cache: snap.available_cache,
+            variant_id: evo.variant_id,
+            config_desc: evo.search.evaluation.config.describe(),
+            search_time_us: evo.search.search_time_us,
+            evolution_us: evo.evolution_us,
+            deployed_accuracy: evo.deployed_accuracy,
+            energy_mj: evo.search.evaluation.energy_mj,
+            c_sp: evo.search.evaluation.costs.c_sp(),
+            c_sa: evo.search.evaluation.costs.c_sa(),
+        }
+    }
+}
+
 /// Synchronous serving driver used by the case study: replays an event
-/// trace against simulated time (no wall-clock sleeps), running real PJRT
-/// inference per event and re-evolving per the trigger policy.
+/// trace against simulated time (no wall-clock sleeps), running inference
+/// per event and re-evolving per the trigger policy.
 pub struct ServingLoop<'a> {
     pub engine: &'a mut AdaSpring,
     pub sim: &'a mut ContextSimulator,
     pub trigger: Trigger,
     /// Energy drawn per inference (J), from the platform energy model.
     pub energy_per_inference_j: f64,
+    /// How events are served (PJRT executable vs platform model).
+    pub inference: InferenceMode,
 }
 
 impl<'a> ServingLoop<'a> {
     /// Replay `events` over `duration_s` of simulated time.  `make_input`
-    /// renders an input frame for an event.
+    /// renders an input frame for an event (unused in `Modeled` mode).
     pub fn run(
         &mut self,
         events: &[Event],
@@ -73,7 +118,7 @@ impl<'a> ServingLoop<'a> {
     ) -> Result<ServingReport> {
         let mut report = ServingReport::default();
         let mut last_t = 0.0f64;
-        let check_period = 60.0; // context re-check cadence (1 min)
+        let check_period = CONTEXT_CHECK_PERIOD_S;
         let mut next_check = 0.0f64;
         let mut ei = 0usize;
 
@@ -92,7 +137,7 @@ impl<'a> ServingLoop<'a> {
                 if self.trigger.should_fire(&snap) {
                     let constraints = self.engine.constraints_for(&snap);
                     let evo = self.engine.evolve(&constraints)?;
-                    report.evolutions.push(self.record(&snap, &evo));
+                    report.evolutions.push(EvolutionRecord::capture(&snap, &evo));
                 }
                 next_check = t + check_period;
             }
@@ -100,38 +145,33 @@ impl<'a> ServingLoop<'a> {
             if (t - next_event_t).abs() < 1e-9 && ei < events.len() {
                 let ev = events[ei];
                 ei += 1;
-                let input = make_input(&ev);
-                match self.engine.infer(&input) {
-                    Ok((_logits, stats)) => {
-                        report.inferences += 1;
-                        report.inference_latency_us.push(stats.latency_us as f64);
-                        self.sim.advance(0.0, self.energy_per_inference_j);
+                match self.inference {
+                    InferenceMode::Pjrt => {
+                        let input = make_input(&ev);
+                        match self.engine.infer(&input) {
+                            Ok((_logits, stats)) => {
+                                report.inferences += 1;
+                                report.inference_latency_us.push(stats.latency_us as f64);
+                                self.sim.advance(0.0, self.energy_per_inference_j);
+                            }
+                            Err(_) => report.dropped += 1,
+                        }
                     }
-                    Err(_) => report.dropped += 1,
+                    InferenceMode::Modeled => {
+                        let available = self.sim.snapshot().available_cache;
+                        match self.engine.modeled_active_latency_ms(available) {
+                            Some(latency_ms) => {
+                                report.inferences += 1;
+                                report.inference_latency_us.push(latency_ms * 1e3);
+                                self.sim.advance(0.0, self.energy_per_inference_j);
+                            }
+                            None => report.dropped += 1,
+                        }
+                    }
                 }
             }
         }
         Ok(report)
-    }
-
-    fn record(
-        &self,
-        snap: &crate::context::ContextSnapshot,
-        evo: &Evolution,
-    ) -> EvolutionRecord {
-        EvolutionRecord {
-            t_seconds: snap.t_seconds,
-            battery_fraction: snap.battery_fraction,
-            available_cache: snap.available_cache,
-            variant_id: evo.variant_id,
-            config_desc: evo.search.evaluation.config.describe(),
-            search_time_us: evo.search.search_time_us,
-            evolution_us: evo.evolution_us,
-            deployed_accuracy: evo.deployed_accuracy,
-            energy_mj: evo.search.evaluation.energy_mj,
-            c_sp: evo.search.evaluation.costs.c_sp(),
-            c_sa: evo.search.evaluation.costs.c_sa(),
-        }
     }
 }
 

