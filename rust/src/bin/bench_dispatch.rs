@@ -1,0 +1,243 @@
+//! Dispatch-layer bench: drive the fleet through admission control,
+//! windowed cross-device batching, and work-stealing shard scheduling
+//! (DESIGN.md §8), and report queue/wait/shed/batch/steal telemetry on
+//! top of the fleet summary.
+//!
+//! Usage:
+//!   cargo run --release --bin bench_dispatch -- [--devices 24] [--shards 4]
+//!       [--hours 2] [--seed 42] [--task d3] [--manifest path] [--stripes 16]
+//!       [--window 0.25] [--capacity 256] [--policy block|shed-newest|
+//!        shed-oldest|deadline:SECS] [--rate R --burst B] [--max-batch 16]
+//!       [--placement modulo|packed] [--no-steal] [--json-out path]
+//!       [--sweep] [--csv]
+//!
+//! Unknown flags are rejected with this usage (sweep typos must fail
+//! loudly, not silently fall back to defaults).
+//!
+//! Runs out of the box with no artifacts (synthetic palette + modeled
+//! inference).  `--sweep` sweeps backpressure policy × batch window ×
+//! shard count under a deliberately tight admission queue (capacity 4
+//! unless `--capacity` is given) so the policies visibly diverge; it
+//! emits one JSON record per cell.  A single run emits the fleet JSON
+//! report with its `"dispatch"` block (schema: README.md).  `--json-out`
+//! additionally writes the JSON to a file for the CI bench-smoke
+//! artifact upload.
+
+use anyhow::{anyhow, Result};
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::{BackpressurePolicy, DispatchConfig, Placement, RateLimit};
+use adaspring::fleet::{run_fleet_dispatch, FleetConfig, FleetReport};
+use adaspring::metrics::Table;
+use adaspring::util::cli::Args;
+use adaspring::util::json::Json;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &[
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "window", "capacity",
+    "policy", "rate", "burst", "max-batch", "placement", "no-steal", "json-out", "sweep", "csv",
+];
+
+const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal"];
+
+const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H] [--seed N] \
+                     [--task NAME] [--manifest PATH] [--stripes N] [--window SECS] \
+                     [--capacity N] [--policy block|shed-newest|shed-oldest|deadline:SECS] \
+                     [--rate PER_S --burst N] [--max-batch N] [--placement modulo|packed] \
+                     [--no-steal] [--json-out PATH] [--sweep] [--csv]";
+
+fn fleet_config(args: &Args) -> FleetConfig {
+    // Dispatch-bench defaults: a smaller, shorter fleet than the raw
+    // fleet bench — the grid multiplies runs.
+    let defaults =
+        FleetConfig { devices: 24, duration_s: 2.0 * 3600.0, ..FleetConfig::default() };
+    FleetConfig::from_args(args, defaults)
+}
+
+fn dispatch_config(args: &Args) -> Result<DispatchConfig> {
+    let defaults = DispatchConfig::default();
+    let policy_name = args.get_or("policy", "block");
+    let policy = BackpressurePolicy::parse(policy_name)
+        .ok_or_else(|| anyhow!("bad --policy {policy_name:?}\n{USAGE}"))?;
+    let placement_name = args.get_or("placement", "modulo");
+    let placement = Placement::parse(placement_name)
+        .ok_or_else(|| anyhow!("bad --placement {placement_name:?}\n{USAGE}"))?;
+    let rate_per_s = args.get_f64("rate", 0.0);
+    let rate_limit = if rate_per_s > 0.0 {
+        Some(RateLimit { rate_per_s, burst: args.get_f64("burst", rate_per_s.max(1.0)) })
+    } else {
+        None
+    };
+    Ok(DispatchConfig {
+        queue_capacity: args.get_usize("capacity", defaults.queue_capacity),
+        policy,
+        rate_limit,
+        batch_window_s: args.get_f64("window", defaults.batch_window_s),
+        max_batch: args.get_usize("max-batch", defaults.max_batch),
+        stealing: !args.flag("no-steal"),
+        placement,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_or_synthetic(args.get_or("manifest", "artifacts/manifest.json"));
+
+    if args.flag("sweep") {
+        return sweep(&args, &manifest);
+    }
+
+    let cfg = fleet_config(&args);
+    let dcfg = dispatch_config(&args)?;
+    println!(
+        "# Dispatch — {} devices x {:.1} h over {} shards (policy {}, window {} s, capacity {})\n",
+        cfg.devices,
+        cfg.duration_s / 3600.0,
+        cfg.shards,
+        dcfg.policy.describe(),
+        dcfg.batch_window_s,
+        dcfg.queue_capacity
+    );
+    let report = run_fleet_dispatch(&manifest, &cfg, &dcfg)?;
+    print_summary(&report);
+    let table = report.archetype_table();
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+    let json = report.to_json();
+    println!("fleet JSON:\n{json}");
+    write_json_out(&args, &json)?;
+    Ok(())
+}
+
+fn print_summary(r: &FleetReport) {
+    println!(
+        "fleet totals: {} inferences ({} dropped, {} shed), {} evolutions, {:.1} J, wall {:.0} ms",
+        r.inferences, r.dropped, r.shed, r.evolutions, r.energy_j, r.wall_ms
+    );
+    println!(
+        "inference latency: p50={:.2} ms  p95={:.2} ms  p99={:.2} ms  mean={:.2} ms",
+        r.latency.p50_ms, r.latency.p95_ms, r.latency.p99_ms, r.latency.mean_ms
+    );
+    println!(
+        "variant cache: {} compiled, hit rate {:.1}%",
+        r.cache.entries,
+        r.cache.hit_rate() * 100.0
+    );
+    let Some(d) = &r.dispatch else { return };
+    println!(
+        "dispatch: {} workers, policy {}, window {} s, capacity {}, stealing {}",
+        d.workers,
+        d.policy,
+        d.batch_window_s,
+        d.queue_capacity,
+        if d.stealing_enabled { "on" } else { "off" }
+    );
+    let a = &d.admission;
+    println!(
+        "queue: {} submitted, {} admitted, {} shed (rate {} / full {} / displaced {} / deadline {}), depth max {} mean {:.2}",
+        a.submitted,
+        a.admitted,
+        a.shed_total(),
+        a.shed_rate_limited,
+        a.shed_queue_full,
+        a.shed_displaced,
+        a.shed_deadline,
+        a.depth_max,
+        a.depth_mean()
+    );
+    if !d.wait_us.is_empty() {
+        let p = d.wait_us.percentiles(&[50.0, 95.0]);
+        println!(
+            "queue waits: p50={:.2} ms  p95={:.2} ms  max={:.2} ms",
+            p[0] / 1e3,
+            p[1] / 1e3,
+            d.wait_us.max() / 1e3
+        );
+    }
+    println!(
+        "batches: {} executed, mean size {:.2}, max size {}",
+        d.batches.batches,
+        d.batches.size_mean(),
+        d.batches.size_max
+    );
+    println!(
+        "stealing: {} steals moved {} sessions; busiest worker {:.0} ms stepping\n",
+        d.steals,
+        d.sessions_stolen,
+        d.max_busy_ms()
+    );
+}
+
+/// Policy × batch-window × shard-count sweep under a tight admission
+/// queue — the grid behind the subsystem's headline numbers.
+fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
+    let base = fleet_config(args);
+    let base_dispatch = dispatch_config(args)?;
+    // Undersized by default so the policies visibly diverge.
+    let capacity = args.get_usize("capacity", 4);
+    let policies = [
+        BackpressurePolicy::Block,
+        BackpressurePolicy::ShedNewest,
+        BackpressurePolicy::ShedOldest,
+        BackpressurePolicy::Deadline { max_wait_s: 2.0 },
+    ];
+    let windows = [0.0f64, 0.25, 1.0];
+    let shard_points = [1usize, 2, 4];
+    println!(
+        "# Dispatch sweep — policy x window x shards, {} devices x {:.1} h (capacity {})\n",
+        base.devices,
+        base.duration_s / 3600.0,
+        capacity
+    );
+    let mut table = Table::new(&[
+        "policy", "window s", "shards", "inferences", "shed", "p50 ms", "wait p95 ms",
+        "batch mean", "steals", "wall ms",
+    ]);
+    let mut records: Vec<Json> = Vec::new();
+    for policy in policies {
+        for &window in &windows {
+            for &shards in &shard_points {
+                let cfg = FleetConfig { shards, ..base.clone() };
+                let dcfg = DispatchConfig {
+                    queue_capacity: capacity,
+                    policy,
+                    batch_window_s: window,
+                    ..base_dispatch.clone()
+                };
+                let r = run_fleet_dispatch(manifest, &cfg, &dcfg)?;
+                let d = r.dispatch.as_ref().expect("dispatch runs carry dispatch stats");
+                let wait_p95_ms = if d.wait_us.is_empty() {
+                    0.0
+                } else {
+                    d.wait_us.percentiles(&[95.0])[0] / 1e3
+                };
+                table.row(vec![
+                    policy.describe(),
+                    format!("{window}"),
+                    shards.to_string(),
+                    r.inferences.to_string(),
+                    r.shed.to_string(),
+                    format!("{:.2}", r.latency.p50_ms),
+                    format!("{wait_p95_ms:.2}"),
+                    format!("{:.2}", d.batches.size_mean()),
+                    d.steals.to_string(),
+                    format!("{:.0}", r.wall_ms),
+                ]);
+                records.push(r.to_json());
+            }
+        }
+    }
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+    let json = Json::Arr(records);
+    println!("sweep JSON:\n{json}");
+    write_json_out(args, &json)?;
+    Ok(())
+}

@@ -6,14 +6,19 @@
 //! Usage:
 //!   cargo run --release --bin bench_fleet -- [--devices 100] [--shards 4]
 //!       [--hours 8] [--seed 42] [--task d3] [--manifest path]
-//!       [--stripes 16] [--sweep] [--csv]
+//!       [--stripes 16] [--json-out path] [--sweep] [--csv]
+//!
+//! Unknown flags are rejected with this usage (sweep typos must fail
+//! loudly, not silently fall back to defaults).
 //!
 //! Runs out of the box with no artifacts: when no manifest is found the
 //! synthetic palette (`Manifest::synthetic`) is used and inference is
 //! served from the platform latency model.  `--sweep` sweeps fleet size
 //! (10/100/1000) × shard count (1/2/4/8) and emits one JSON record per
 //! cell; a single run emits the full fleet JSON report (schema:
-//! README.md "Fleet report schema").
+//! README.md "Fleet report schema").  `--json-out` additionally writes
+//! the JSON (report or sweep array) to a file — the CI bench-smoke step
+//! uploads it as a workflow artifact.
 
 use anyhow::Result;
 
@@ -22,36 +27,27 @@ use adaspring::fleet::{run_fleet, FleetConfig, FleetReport};
 use adaspring::metrics::Table;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
+use adaspring::util::write_json_out;
 
-fn load_manifest(args: &Args) -> Manifest {
-    let path = args.get_or("manifest", "artifacts/manifest.json");
-    match Manifest::load(path) {
-        Ok(m) => {
-            eprintln!("using artifact manifest {path}");
-            m
-        }
-        Err(_) => {
-            eprintln!("no artifact manifest at {path}; using the synthetic palette");
-            Manifest::synthetic()
-        }
-    }
-}
+const ALLOWED: &[&str] = &[
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "json-out", "sweep",
+    "csv",
+];
+
+const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv"];
+
+const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
+                     [--task NAME] [--manifest PATH] [--stripes N] [--json-out PATH] [--sweep] \
+                     [--csv]";
 
 fn config_from(args: &Args) -> FleetConfig {
-    let defaults = FleetConfig::default();
-    FleetConfig {
-        devices: args.get_usize("devices", defaults.devices),
-        shards: args.get_usize("shards", defaults.shards),
-        duration_s: args.get_f64("hours", 8.0) * 3600.0,
-        seed: args.get_usize("seed", defaults.seed as usize) as u64,
-        task: args.get_or("task", &defaults.task).to_string(),
-        cache_stripes: args.get_usize("stripes", defaults.cache_stripes),
-    }
+    FleetConfig::from_args(args, FleetConfig::default())
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = load_manifest(&args);
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_or_synthetic(args.get_or("manifest", "artifacts/manifest.json"));
 
     if args.flag("sweep") {
         return sweep(&args, &manifest);
@@ -74,7 +70,9 @@ fn main() -> Result<()> {
     } else {
         println!("{}", table.to_markdown());
     }
-    println!("fleet JSON:\n{}", report.to_json());
+    let json = report.to_json();
+    println!("fleet JSON:\n{json}");
+    write_json_out(&args, &json)?;
     Ok(())
 }
 
@@ -140,6 +138,8 @@ fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
     } else {
         println!("{}", table.to_markdown());
     }
-    println!("sweep JSON:\n{}", Json::Arr(records));
+    let json = Json::Arr(records);
+    println!("sweep JSON:\n{json}");
+    write_json_out(args, &json)?;
     Ok(())
 }

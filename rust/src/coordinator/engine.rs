@@ -162,6 +162,15 @@ impl AdaSpring {
             .map(|cfg| self.evaluator.modeled_latency_ms(&cfg, available_cache))
     }
 
+    /// Modelled per-inference latency (ms) of the deployed variant when
+    /// served inside a batch of `k` same-variant requests (the dispatch
+    /// layer's modeled batching path, DESIGN.md §8-2); `None` before the
+    /// first evolution.
+    pub fn modeled_active_batched_latency_ms(&self, available_cache: u64, k: usize) -> Option<f64> {
+        self.active_config()
+            .map(|cfg| self.evaluator.modeled_batched_latency_ms(&cfg, available_cache, k))
+    }
+
     /// Measured PJRT latency of the active variant (host microbenchmark).
     pub fn measure_active_latency_us(&self, input: &[f32], iters: usize) -> Result<f64> {
         let exec = self

@@ -137,6 +137,18 @@ impl Evaluator {
         self.latency.total_ms(&self.cost_model.costs(config), available_cache)
     }
 
+    /// Modelled per-inference latency (ms) of `config` when served inside
+    /// a batch of `k` same-variant requests (the dispatch layer's batcher
+    /// path, DESIGN.md §8-2).
+    pub fn modeled_batched_latency_ms(
+        &self,
+        config: &CompressionConfig,
+        available_cache: u64,
+        k: usize,
+    ) -> f64 {
+        self.latency.batched_total_ms(&self.cost_model.costs(config), available_cache, k)
+    }
+
     /// Modelled per-inference DNN energy (mJ) of `config` under the given
     /// available-cache budget.
     pub fn modeled_energy_mj(&self, config: &CompressionConfig, available_cache: u64) -> f64 {

@@ -124,6 +124,22 @@ impl Manifest {
         Manifest { version: 1, fast: true, tasks, root: PathBuf::from("artifacts") }
     }
 
+    /// Load `path`, falling back to [`Self::synthetic`] when no artifact
+    /// manifest is there — the bench binaries' out-of-the-box path.
+    /// Announces the choice on stderr.
+    pub fn load_or_synthetic(path: &str) -> Manifest {
+        match Self::load(path) {
+            Ok(m) => {
+                eprintln!("using artifact manifest {path}");
+                m
+            }
+            Err(_) => {
+                eprintln!("no artifact manifest at {path}; using the synthetic palette");
+                Manifest::synthetic()
+            }
+        }
+    }
+
     pub fn task(&self, name: &str) -> Result<&TaskArtifacts> {
         self.tasks.get(name).ok_or_else(|| {
             anyhow!(

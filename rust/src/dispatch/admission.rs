@@ -1,0 +1,487 @@
+//! Bounded admission queue with pluggable backpressure (DESIGN.md §8-1).
+//!
+//! Each shard fronts its batch buffer with a bounded admission queue: at
+//! most `queue_capacity` requests may wait for any one batch-window
+//! flush.  A request that arrives to a full window is handled by the
+//! shard's [`BackpressurePolicy`]; before the queue, an optional
+//! per-device-archetype token bucket sheds sustained overload at the
+//! source ([`RateLimit`]).
+//!
+//! The whole admission simulation is a **deterministic pre-pass**
+//! ([`admit_shard`]): fleet event traces are sampled up front and do not
+//! depend on the serving context, so shedding/wait decisions are a pure
+//! function of the shard's merged arrival stream.  Sessions then consume
+//! their per-event [`AdmissionVerdict`]s while stepping — which is what
+//! makes session-granularity work stealing (§8-3) trajectory-preserving:
+//! no admission decision can depend on which worker steps which session
+//! when.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::context::events::Event;
+use crate::fleet::scenarios::Archetype;
+use crate::metrics::Series;
+
+use super::DispatchConfig;
+
+/// What a shard does with a request that arrives to a full window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BackpressurePolicy {
+    /// Producer backpressure: the request waits for the next window with
+    /// spare capacity (its wait grows; nothing is shed).
+    Block,
+    /// Shed the arriving request (classic tail drop).
+    ShedNewest,
+    /// Shed the oldest request waiting in the window and admit the
+    /// newcomer (freshest-data-first).
+    ShedOldest,
+    /// Like [`Block`](Self::Block), but shed any request whose resulting
+    /// wait would exceed the deadline.
+    Deadline {
+        /// Maximum tolerable queue wait in simulated seconds.
+        max_wait_s: f64,
+    },
+}
+
+impl BackpressurePolicy {
+    /// Stable kebab-case name for reports and CLI round-trips.
+    pub fn describe(&self) -> String {
+        match self {
+            BackpressurePolicy::Block => "block".to_string(),
+            BackpressurePolicy::ShedNewest => "shed-newest".to_string(),
+            BackpressurePolicy::ShedOldest => "shed-oldest".to_string(),
+            BackpressurePolicy::Deadline { max_wait_s } => format!("deadline:{max_wait_s}"),
+        }
+    }
+
+    /// Parse a CLI name: "block" | "shed-newest" | "shed-oldest" |
+    /// "deadline:SECONDS".
+    pub fn parse(name: &str) -> Option<BackpressurePolicy> {
+        match name {
+            "block" => Some(BackpressurePolicy::Block),
+            "shed-newest" => Some(BackpressurePolicy::ShedNewest),
+            "shed-oldest" => Some(BackpressurePolicy::ShedOldest),
+            _ => {
+                let secs = name.strip_prefix("deadline:")?;
+                let max_wait_s: f64 = secs.parse().ok()?;
+                if max_wait_s >= 0.0 {
+                    Some(BackpressurePolicy::Deadline { max_wait_s })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Token-bucket rate limit, one bucket per device archetype per shard.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateLimit {
+    /// Sustained admission rate (requests/simulated-second).
+    pub rate_per_s: f64,
+    /// Burst capacity (tokens).
+    pub burst: f64,
+}
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The archetype's token bucket was empty.
+    RateLimited,
+    /// `ShedNewest` on a full window.
+    QueueFull,
+    /// Displaced by a newer request under `ShedOldest`.
+    Displaced,
+    /// Projected wait exceeded the `Deadline` policy's bound.
+    Deadline,
+}
+
+/// The pre-pass's decision for one (session, event).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionVerdict {
+    /// Serve the request: it flushes with batch window `window` after
+    /// `wait_us` microseconds of simulated queueing.
+    Admitted {
+        /// Batch-window key (shared by every request flushing together).
+        window: u64,
+        /// Simulated queue wait (flush instant − arrival), microseconds.
+        wait_us: f64,
+    },
+    /// Drop the request at admission.
+    Shed(ShedReason),
+}
+
+/// Admission counters for one shard (merged fleet-wide by the report).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdmissionStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    pub shed_rate_limited: u64,
+    pub shed_queue_full: u64,
+    pub shed_displaced: u64,
+    pub shed_deadline: u64,
+    /// Maximum instantaneous queue depth observed at any arrival.
+    pub depth_max: usize,
+    /// Sum of queue depths sampled at each arrival (mean = sum/submitted).
+    pub depth_sum: u64,
+}
+
+impl AdmissionStats {
+    /// Total sheds across every reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_rate_limited + self.shed_queue_full + self.shed_displaced + self.shed_deadline
+    }
+
+    /// Mean queue depth over arrival instants (0 when nothing arrived).
+    pub fn depth_mean(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.depth_sum as f64 / self.submitted as f64
+        }
+    }
+
+    /// Fold another shard's counters into this one.
+    pub fn merge(&mut self, o: &AdmissionStats) {
+        self.submitted += o.submitted;
+        self.admitted += o.admitted;
+        self.shed_rate_limited += o.shed_rate_limited;
+        self.shed_queue_full += o.shed_queue_full;
+        self.shed_displaced += o.shed_displaced;
+        self.shed_deadline += o.shed_deadline;
+        self.depth_max = self.depth_max.max(o.depth_max);
+        self.depth_sum += o.depth_sum;
+    }
+}
+
+/// One shard's admission pre-pass output.
+#[derive(Debug)]
+pub struct ShardAdmission {
+    /// `verdicts[i][j]` — input session `i`, event `j`.
+    pub verdicts: Vec<Vec<AdmissionVerdict>>,
+    pub stats: AdmissionStats,
+    /// Queue waits of finally-admitted requests, microseconds.
+    pub wait_us: Series,
+}
+
+/// Batch-window key of arrival instant `t` (window 0 disables batching:
+/// each arrival instant is its own flush group, so the key is the time's
+/// bit pattern).
+pub fn window_key(t: f64, window_s: f64) -> u64 {
+    if window_s > 0.0 {
+        (t / window_s).floor() as u64
+    } else {
+        t.to_bits()
+    }
+}
+
+/// Run the deterministic admission pre-pass for one shard.
+///
+/// `sessions` lists the shard's sessions as (device id, archetype,
+/// pre-sampled event trace); event lists must be time-sorted (they are,
+/// by construction of [`crate::context::EventTrace::sample`]).  Returns
+/// one verdict per event, aligned to input order.
+pub fn admit_shard(
+    cfg: &DispatchConfig,
+    sessions: &[(u64, Archetype, &[Event])],
+) -> ShardAdmission {
+    let capacity = cfg.queue_capacity.max(1);
+    let window_s = cfg.batch_window_s.max(0.0);
+
+    // Merged arrival stream, ordered by (time, device id).
+    let mut arrivals: Vec<(f64, u64, usize, usize, Archetype)> = Vec::new();
+    for (si, (device_id, archetype, events)) in sessions.iter().enumerate() {
+        for (ei, e) in events.iter().enumerate() {
+            arrivals.push((e.t_seconds, *device_id, si, ei, *archetype));
+        }
+    }
+    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let mut verdicts: Vec<Vec<AdmissionVerdict>> = sessions
+        .iter()
+        .map(|(_, _, events)| vec![AdmissionVerdict::Shed(ShedReason::QueueFull); events.len()])
+        .collect();
+    let mut stats = AdmissionStats::default();
+
+    // Per-archetype token buckets (start full).
+    let mut buckets: Vec<(f64, f64)> = Vec::new(); // (tokens, last_t) by archetype index
+    if let Some(rl) = cfg.rate_limit {
+        buckets = vec![(rl.burst, 0.0); crate::fleet::ALL_ARCHETYPES.len()];
+    }
+
+    // Per-window occupancy, pending-flush times (nondecreasing), and —
+    // for ShedOldest — the FIFO identity of each window's occupants.
+    let mut slot_count: HashMap<u64, usize> = HashMap::new();
+    let mut pending_flush: VecDeque<f64> = VecDeque::new();
+    let mut slot_entries: HashMap<u64, VecDeque<(usize, usize)>> = HashMap::new();
+    // Monotone deferral cursor: every slot a future arrival could
+    // target below it has been verified full.  Arrivals are time-sorted
+    // (so start slots never rewind) and occupancy never drains, so the
+    // Block/Deadline walk can resume here instead of rescanning the
+    // whole backlog (keeps sustained overload O(n), not O(n²)).
+    let mut deferral_hint: u64 = 0;
+
+    for (t, _device, si, ei, archetype) in arrivals {
+        stats.submitted += 1;
+
+        // Drain everything that flushed before this arrival.
+        while pending_flush.front().is_some_and(|&f| f <= t) {
+            pending_flush.pop_front();
+        }
+
+        // Token bucket first: sustained overload sheds at the source.
+        if let Some(rl) = cfg.rate_limit {
+            let b = &mut buckets[archetype.index()];
+            b.0 = (b.0 + (t - b.1) * rl.rate_per_s).min(rl.burst);
+            b.1 = t;
+            if b.0 < 1.0 {
+                verdicts[si][ei] = AdmissionVerdict::Shed(ShedReason::RateLimited);
+                stats.shed_rate_limited += 1;
+                let depth = pending_flush.len();
+                stats.depth_max = stats.depth_max.max(depth);
+                stats.depth_sum += depth as u64;
+                continue;
+            }
+            b.0 -= 1.0;
+        }
+
+        let slot = window_key(t, window_s);
+        let flush_of = |s: u64| -> f64 {
+            if window_s > 0.0 {
+                (s + 1) as f64 * window_s
+            } else {
+                t
+            }
+        };
+
+        let occupied = *slot_count.get(&slot).unwrap_or(&0);
+        let full = window_s > 0.0 && occupied >= capacity;
+        match cfg.policy {
+            BackpressurePolicy::ShedNewest if full => {
+                verdicts[si][ei] = AdmissionVerdict::Shed(ShedReason::QueueFull);
+                stats.shed_queue_full += 1;
+            }
+            BackpressurePolicy::ShedOldest if full => {
+                // Displace the window's oldest occupant; the newcomer
+                // reuses its slot and flush entry.
+                if let Some((osi, oei)) = slot_entries.get_mut(&slot).and_then(|q| q.pop_front())
+                {
+                    verdicts[osi][oei] = AdmissionVerdict::Shed(ShedReason::Displaced);
+                    stats.shed_displaced += 1;
+                    stats.admitted += 1;
+                    let wait_us = (flush_of(slot) - t) * 1e6;
+                    verdicts[si][ei] = AdmissionVerdict::Admitted { window: slot, wait_us };
+                    slot_entries.entry(slot).or_default().push_back((si, ei));
+                } else {
+                    // Defensive: a full window always has occupants.
+                    verdicts[si][ei] = AdmissionVerdict::Shed(ShedReason::QueueFull);
+                    stats.shed_queue_full += 1;
+                }
+            }
+            _ => {
+                // Block / Deadline (and any policy on a non-full window):
+                // take the first window at or after the arrival's with
+                // spare capacity, resuming from the monotone cursor.
+                let mut s = if window_s > 0.0 { slot.max(deferral_hint) } else { slot };
+                while window_s > 0.0 && *slot_count.get(&s).unwrap_or(&0) >= capacity {
+                    s += 1;
+                }
+                deferral_hint = deferral_hint.max(s);
+                let wait_s = flush_of(s) - t;
+                if let BackpressurePolicy::Deadline { max_wait_s } = cfg.policy {
+                    if wait_s > max_wait_s {
+                        verdicts[si][ei] = AdmissionVerdict::Shed(ShedReason::Deadline);
+                        stats.shed_deadline += 1;
+                        let depth = pending_flush.len();
+                        stats.depth_max = stats.depth_max.max(depth);
+                        stats.depth_sum += depth as u64;
+                        continue;
+                    }
+                }
+                stats.admitted += 1;
+                verdicts[si][ei] =
+                    AdmissionVerdict::Admitted { window: s, wait_us: wait_s * 1e6 };
+                *slot_count.entry(s).or_insert(0) += 1;
+                pending_flush.push_back(flush_of(s));
+                if matches!(cfg.policy, BackpressurePolicy::ShedOldest) {
+                    slot_entries.entry(s).or_default().push_back((si, ei));
+                }
+            }
+        }
+
+        let depth = pending_flush.len();
+        stats.depth_max = stats.depth_max.max(depth);
+        stats.depth_sum += depth as u64;
+    }
+
+    // Waits of the *finally* admitted set (displacement can overturn an
+    // earlier admit, so collect at the end rather than during the walk).
+    let mut wait_us = Series::default();
+    for vs in &verdicts {
+        for v in vs {
+            if let AdmissionVerdict::Admitted { wait_us: w, .. } = v {
+                wait_us.push(*w);
+            }
+        }
+    }
+    debug_assert_eq!(wait_us.len() as u64, stats.admitted - stats.shed_displaced);
+    stats.admitted -= stats.shed_displaced;
+
+    ShardAdmission { verdicts, stats, wait_us }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::context::events::EventKind;
+
+    fn ev(ts: &[f64]) -> Vec<Event> {
+        ts.iter().map(|&t| Event { t_seconds: t, kind: EventKind::Social }).collect()
+    }
+
+    fn cfg(policy: BackpressurePolicy, capacity: usize, window_s: f64) -> DispatchConfig {
+        DispatchConfig {
+            queue_capacity: capacity,
+            policy,
+            rate_limit: None,
+            batch_window_s: window_s,
+            ..DispatchConfig::default()
+        }
+    }
+
+    fn verdict(a: &ShardAdmission, ei: usize) -> AdmissionVerdict {
+        a.verdicts[0][ei]
+    }
+
+    #[test]
+    fn shed_newest_drops_the_third_arrival() {
+        let events = ev(&[0.1, 0.2, 0.3]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::ShedNewest, 2, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        assert!(matches!(verdict(&a, 0), AdmissionVerdict::Admitted { window: 0, .. }));
+        assert!(matches!(verdict(&a, 1), AdmissionVerdict::Admitted { window: 0, .. }));
+        assert_eq!(verdict(&a, 2), AdmissionVerdict::Shed(ShedReason::QueueFull));
+        assert_eq!((a.stats.admitted, a.stats.shed_queue_full), (2, 1));
+    }
+
+    #[test]
+    fn shed_oldest_displaces_the_first_arrival() {
+        let events = ev(&[0.1, 0.2, 0.3]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::ShedOldest, 2, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        assert_eq!(verdict(&a, 0), AdmissionVerdict::Shed(ShedReason::Displaced));
+        assert!(matches!(verdict(&a, 1), AdmissionVerdict::Admitted { .. }));
+        assert!(matches!(verdict(&a, 2), AdmissionVerdict::Admitted { .. }));
+        assert_eq!((a.stats.admitted, a.stats.shed_displaced), (2, 1));
+        assert_eq!(a.wait_us.len(), 2);
+    }
+
+    #[test]
+    fn block_defers_to_the_next_window() {
+        let events = ev(&[0.1, 0.2, 0.3]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::Block, 2, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        match verdict(&a, 2) {
+            AdmissionVerdict::Admitted { window, wait_us } => {
+                assert_eq!(window, 1, "third arrival defers to window 1");
+                assert!((wait_us - (2.0 - 0.3) * 1e6).abs() < 1.0, "wait_us={wait_us}");
+            }
+            v => panic!("expected deferral, got {v:?}"),
+        }
+        assert_eq!(a.stats.shed_total(), 0, "Block never sheds");
+    }
+
+    #[test]
+    fn deadline_sheds_what_block_would_defer_too_far() {
+        let events = ev(&[0.1, 0.2, 0.3]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::Deadline { max_wait_s: 1.0 }, 2, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        // Deferred flush would be t=2.0 → wait 1.7 s > 1.0 s deadline.
+        assert_eq!(verdict(&a, 2), AdmissionVerdict::Shed(ShedReason::Deadline));
+        assert_eq!(a.stats.shed_deadline, 1);
+        // A generous deadline admits it instead.
+        let a2 = admit_shard(
+            &cfg(BackpressurePolicy::Deadline { max_wait_s: 5.0 }, 2, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        assert!(matches!(verdict(&a2, 2), AdmissionVerdict::Admitted { window: 1, .. }));
+    }
+
+    #[test]
+    fn token_bucket_sheds_sustained_overload() {
+        let events = ev(&[0.1, 0.2, 1.5]);
+        let mut c = cfg(BackpressurePolicy::Block, 64, 1.0);
+        c.rate_limit = Some(RateLimit { rate_per_s: 1.0, burst: 1.0 });
+        let a = admit_shard(&c, &[(0, Archetype::CommuterPhone, &events)]);
+        assert!(matches!(verdict(&a, 0), AdmissionVerdict::Admitted { .. }));
+        assert_eq!(verdict(&a, 1), AdmissionVerdict::Shed(ShedReason::RateLimited));
+        assert!(
+            matches!(verdict(&a, 2), AdmissionVerdict::Admitted { .. }),
+            "bucket refills by t=1.5"
+        );
+        // Buckets are per archetype: a second archetype is undisturbed.
+        let e2 = ev(&[0.15]);
+        let a2 = admit_shard(
+            &c,
+            &[(0, Archetype::CommuterPhone, &events), (1, Archetype::JoggerWearable, &e2)],
+        );
+        assert!(matches!(a2.verdicts[1][0], AdmissionVerdict::Admitted { .. }));
+    }
+
+    #[test]
+    fn window_zero_is_waitless_passthrough() {
+        let events = ev(&[0.1, 0.2, 0.3, 0.4]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::ShedNewest, 1, 0.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        for ei in 0..4 {
+            match verdict(&a, ei) {
+                AdmissionVerdict::Admitted { wait_us, .. } => assert_eq!(wait_us, 0.0),
+                v => panic!("window 0 must admit everything, got {v:?}"),
+            }
+        }
+        assert_eq!(a.stats.shed_total(), 0);
+        // Distinct instants get distinct batch keys.
+        assert_ne!(window_key(0.1, 0.0), window_key(0.2, 0.0));
+    }
+
+    #[test]
+    fn depth_tracks_pending_requests() {
+        let events = ev(&[0.1, 0.2, 0.3, 1.5]);
+        let a = admit_shard(
+            &cfg(BackpressurePolicy::Block, 8, 1.0),
+            &[(0, Archetype::CommuterPhone, &events)],
+        );
+        // Three pending inside window 0; all flushed before t=1.5.
+        assert_eq!(a.stats.depth_max, 3);
+        assert_eq!(a.stats.submitted, 4);
+        assert!(a.stats.depth_mean() > 0.0);
+    }
+
+    #[test]
+    fn merge_folds_counters() {
+        let mut a =
+            AdmissionStats { submitted: 3, admitted: 2, depth_max: 4, ..Default::default() };
+        let b = AdmissionStats {
+            submitted: 2,
+            admitted: 1,
+            shed_queue_full: 1,
+            depth_max: 2,
+            depth_sum: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!((a.submitted, a.admitted, a.shed_queue_full), (5, 3, 1));
+        assert_eq!(a.depth_max, 4);
+        assert_eq!(a.depth_sum, 5);
+    }
+}

@@ -1,0 +1,161 @@
+//! Simulated-time windowed batcher (DESIGN.md §8-2).
+//!
+//! Admitted requests flush at aligned batch-window boundaries
+//! (`window = floor(t / batch_window_s)`, per shard).  At each flush,
+//! compatible requests — same task, same deployed palette variant — are
+//! grouped into batches of at most `max_batch`; a batch of k same-variant
+//! inferences amortizes the parameter-load phase of the latency model
+//! across its members, so each one's service latency is its solo modeled
+//! latency scaled by the platform's sublinear
+//! [`crate::platform::Platform::batch_per_inference_factor`].
+//!
+//! Batch membership is a pure function of (window, variant) over the
+//! shard's admitted requests, so assembly runs as a deterministic
+//! post-pass over finished sessions — the same property that lets the
+//! admission pre-pass (§8-1) and work stealing (§8-3) compose without
+//! ordering races.  With `batch_window_s == 0` every request is its own
+//! flush group: batch size 1, zero wait, and per-inference latency equal
+//! to the direct serving path (the parity case `tests/dispatch.rs`
+//! asserts).
+
+use std::collections::BTreeMap;
+
+use crate::fleet::DeviceSession;
+use crate::metrics::Series;
+
+use super::DispatchConfig;
+
+/// One admitted-and-served inference, recorded by a session while
+/// stepping and consumed by the batch post-pass.
+#[derive(Debug, Clone, Copy)]
+pub struct ServedRequest {
+    /// Batch-window key ([`super::admission::window_key`]).
+    pub window: u64,
+    /// Palette variant deployed when the request was served.
+    pub variant_id: usize,
+    /// Simulated queue wait (flush − arrival), microseconds.
+    pub wait_us: f64,
+    /// Solo modeled inference latency at service time, microseconds.
+    pub single_us: f64,
+}
+
+/// Batch-execution statistics for one shard (merged fleet-wide).
+#[derive(Debug, Clone, Default)]
+pub struct BatchStats {
+    /// Number of executed batches.
+    pub batches: u64,
+    /// Total requests served through batches.
+    pub served: u64,
+    /// Largest batch executed.
+    pub size_max: usize,
+    /// Batch-size histogram: size → number of batches of that size.
+    pub histogram: BTreeMap<usize, u64>,
+    /// End-to-end dispatch latency per request (wait + batched service),
+    /// microseconds.
+    pub total_us: Series,
+}
+
+impl BatchStats {
+    /// Mean executed-batch size (0 when nothing ran).
+    pub fn size_mean(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.served as f64 / self.batches as f64
+        }
+    }
+
+    /// Fold another shard's batch stats into this one.
+    pub fn merge(&mut self, o: &BatchStats) {
+        self.batches += o.batches;
+        self.served += o.served;
+        self.size_max = self.size_max.max(o.size_max);
+        for (size, count) in &o.histogram {
+            *self.histogram.entry(*size).or_insert(0) += count;
+        }
+        self.total_us.extend_from(&o.total_us);
+    }
+}
+
+/// Assemble and "execute" one shard's batches from its finished
+/// sessions' served requests, pushing each request's final (batched)
+/// service latency into its session's report.
+///
+/// `sessions` must be the shard's full session set, sorted by device id —
+/// batch membership and intra-batch order are then deterministic
+/// regardless of which worker stepped which session (§8-3).
+pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>]) -> BatchStats {
+    debug_assert!(
+        sessions.windows(2).all(|w| w[0].device_id < w[1].device_id),
+        "assemble_batches needs device-id-sorted sessions"
+    );
+    let mut batches: Vec<Vec<(usize, usize)>> = Vec::new();
+    if cfg.batch_window_s > 0.0 {
+        // (window, variant) → requests, in (device, arrival) order.
+        let mut groups: BTreeMap<(u64, usize), Vec<(usize, usize)>> = BTreeMap::new();
+        for (si, s) in sessions.iter().enumerate() {
+            for (ri, r) in s.served_requests().iter().enumerate() {
+                groups.entry((r.window, r.variant_id)).or_default().push((si, ri));
+            }
+        }
+        for members in groups.into_values() {
+            for chunk in members.chunks(cfg.batch_cap()) {
+                batches.push(chunk.to_vec());
+            }
+        }
+    } else {
+        // Window 0 is exact passthrough: every request is its own batch
+        // — even two devices whose traces happen to emit bit-identical
+        // arrival instants must not co-batch.
+        for (si, s) in sessions.iter().enumerate() {
+            for ri in 0..s.served_requests().len() {
+                batches.push(vec![(si, ri)]);
+            }
+        }
+    }
+
+    let mut stats = BatchStats::default();
+    for chunk in &batches {
+        let k = chunk.len();
+        stats.batches += 1;
+        stats.served += k as u64;
+        stats.size_max = stats.size_max.max(k);
+        *stats.histogram.entry(k).or_insert(0) += 1;
+        for &(si, ri) in chunk {
+            let r = sessions[si].served_requests()[ri];
+            let factor = sessions[si].platform().batch_per_inference_factor(k);
+            let service_us = r.single_us * factor;
+            stats.total_us.push(r.wait_us + service_us);
+            sessions[si].record_dispatched_latency(service_us);
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_merge_and_mean() {
+        let mut a = BatchStats {
+            batches: 2,
+            served: 6,
+            size_max: 4,
+            histogram: [(2usize, 1u64), (4, 1)].into_iter().collect(),
+            total_us: Series::default(),
+        };
+        let b = BatchStats {
+            batches: 1,
+            served: 2,
+            size_max: 2,
+            histogram: [(2usize, 1u64)].into_iter().collect(),
+            total_us: Series::default(),
+        };
+        a.merge(&b);
+        assert_eq!((a.batches, a.served, a.size_max), (3, 8, 4));
+        assert_eq!(a.histogram.get(&2), Some(&2));
+        assert!((a.size_mean() - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(BatchStats::default().size_mean(), 0.0);
+    }
+}

@@ -1,0 +1,160 @@
+//! Dispatch subsystem: admission control, cross-device batching, and
+//! work-stealing shard scheduling for the fleet serving path
+//! (DESIGN.md §8).
+//!
+//! PR 1's fleet stepped every device through an unbounded, statically
+//! partitioned per-shard queue: a diurnal-peak burst on one shard stalled
+//! the whole simulated fleet, and every inference executed solo.  This
+//! layer sits between [`crate::fleet`] sessions and execution and fixes
+//! all three gaps:
+//!
+//! * [`admission`] (§8-1) — a bounded admission queue per shard with
+//!   pluggable backpressure policies ([`BackpressurePolicy`]: `Block`,
+//!   `ShedNewest`, `ShedOldest`, deadline shedding) and a per-archetype
+//!   token-bucket rate limiter.  Because fleet event traces are sampled
+//!   up front and are context-independent, the whole admission simulation
+//!   is a *pure function of the shard's merged arrival stream* and runs
+//!   as a deterministic pre-pass — per-event verdicts are fixed before a
+//!   single session steps.
+//! * [`batcher`] (§8-2) — a simulated-time windowed batcher: admitted
+//!   requests flush at aligned window boundaries, grouped by
+//!   (window, deployed variant), and each batch of k same-variant
+//!   inferences amortizes the parameter-load phase through the
+//!   platform's calibratable sublinear batch-latency curve
+//!   ([`crate::platform::Platform::batch_per_inference_factor`]).
+//! * [`stealing`] (§8-3) — work stealing between shard workers: when a
+//!   worker's local heap drains it steals half the earliest-due sessions
+//!   from the most-loaded worker.  Admission verdicts are precomputed and
+//!   sessions are otherwise independent, so stealing changes *which
+//!   thread* steps a session — never its simulated trajectory — and
+//!   fleet results stay bit-deterministic under any interleaving.
+//! * [`stats`] (§8-4) — queue-depth / wait-time / shed-count /
+//!   batch-size-histogram metrics folded into the fleet report JSON
+//!   (`"dispatch"` block; schema in README.md).
+//!
+//! [`crate::fleet::run_fleet_dispatch`] wires the layer under the fleet;
+//! `bench_dispatch` sweeps policy × batch-window × shard-count over the
+//! synthetic manifest.
+
+pub mod admission;
+pub mod batcher;
+pub mod stats;
+pub mod stealing;
+
+pub use admission::{
+    admit_shard, AdmissionStats, AdmissionVerdict, BackpressurePolicy, RateLimit, ShardAdmission,
+    ShedReason,
+};
+pub use batcher::{assemble_batches, BatchStats, ServedRequest};
+pub use stats::DispatchReport;
+pub use stealing::StealPool;
+
+/// How devices are placed onto shard workers (the *home shard* is also
+/// the admission/batching domain; with stealing enabled it is only the
+/// starting placement, not an ownership pin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Static device → shard by id modulo (PR 1's `shard_of`).
+    #[default]
+    Modulo,
+    /// Adversarial skew: every device lands on shard 0 — the
+    /// diurnal-peak pile-up the work-stealing path exists to absorb.
+    Packed,
+}
+
+impl Placement {
+    /// Home shard of `device` under this placement.
+    pub fn home_shard(self, device: u64, shards: usize) -> usize {
+        match self {
+            Placement::Modulo => crate::fleet::shard_of(device, shards),
+            Placement::Packed => 0,
+        }
+    }
+
+    /// Parse a CLI name ("modulo" | "packed").
+    pub fn parse(name: &str) -> Option<Placement> {
+        match name {
+            "modulo" => Some(Placement::Modulo),
+            "packed" => Some(Placement::Packed),
+            _ => None,
+        }
+    }
+}
+
+/// Dispatch-layer configuration (per fleet run).
+#[derive(Debug, Clone)]
+pub struct DispatchConfig {
+    /// Bounded admission-queue capacity per shard per batch window.
+    pub queue_capacity: usize,
+    /// What happens when the queue is full.
+    pub policy: BackpressurePolicy,
+    /// Optional per-device-archetype token-bucket rate limiter.
+    pub rate_limit: Option<RateLimit>,
+    /// Batch window in simulated seconds; 0 disables batching (each
+    /// request flushes at its arrival instant, batch size 1 — exactly
+    /// `ServingLoop` semantics).
+    pub batch_window_s: f64,
+    /// Maximum requests per executed batch; 0 = unbounded.
+    pub max_batch: usize,
+    /// Steal sessions between shard workers when a worker drains.
+    pub stealing: bool,
+    /// Device → home-shard placement.
+    pub placement: Placement,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> DispatchConfig {
+        DispatchConfig {
+            queue_capacity: 256,
+            policy: BackpressurePolicy::Block,
+            rate_limit: None,
+            batch_window_s: 0.25,
+            max_batch: 16,
+            stealing: true,
+            placement: Placement::Modulo,
+        }
+    }
+}
+
+impl DispatchConfig {
+    /// A passthrough configuration: no batching, no rate limit, ample
+    /// queue, `Block` backpressure — dispatch-enabled runs under it are
+    /// parity-equal to the direct fleet path (asserted in
+    /// `tests/dispatch.rs`).
+    pub fn passthrough() -> DispatchConfig {
+        DispatchConfig { batch_window_s: 0.0, ..DispatchConfig::default() }
+    }
+
+    /// Effective per-batch cap (`max_batch == 0` means unbounded).
+    pub fn batch_cap(&self) -> usize {
+        if self.max_batch == 0 {
+            usize::MAX
+        } else {
+            self.max_batch
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_modes() {
+        for d in 0..24u64 {
+            assert_eq!(Placement::Modulo.home_shard(d, 4), (d % 4) as usize);
+            assert_eq!(Placement::Packed.home_shard(d, 4), 0);
+        }
+        assert_eq!(Placement::parse("packed"), Some(Placement::Packed));
+        assert_eq!(Placement::parse("modulo"), Some(Placement::Modulo));
+        assert_eq!(Placement::parse("hash"), None);
+    }
+
+    #[test]
+    fn batch_cap_zero_is_unbounded() {
+        let mut cfg = DispatchConfig::default();
+        assert_eq!(cfg.batch_cap(), 16);
+        cfg.max_batch = 0;
+        assert_eq!(cfg.batch_cap(), usize::MAX);
+    }
+}

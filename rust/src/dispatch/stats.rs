@@ -1,0 +1,216 @@
+//! Dispatch-layer metrics (DESIGN.md §8-4): queue depths, waits, sheds,
+//! batch-size histogram, and steal counters, folded into the fleet
+//! report's `"dispatch"` JSON block (schema in README.md).
+
+use std::collections::BTreeMap;
+
+use crate::metrics::Series;
+use crate::util::json::Json;
+
+use super::admission::AdmissionStats;
+use super::batcher::BatchStats;
+use super::DispatchConfig;
+
+/// Fleet-wide dispatch telemetry for one run, attached to
+/// [`crate::fleet::FleetReport`] when the dispatcher is in the path.
+#[derive(Debug)]
+pub struct DispatchReport {
+    /// Shard workers actually spawned (≤ configured shards when the
+    /// fleet is smaller).
+    pub workers: usize,
+    /// Backpressure policy (kebab-case, as configured).
+    pub policy: String,
+    pub batch_window_s: f64,
+    pub queue_capacity: usize,
+    pub stealing_enabled: bool,
+    /// Merged admission counters across shards.
+    pub admission: AdmissionStats,
+    /// Queue waits of admitted requests, microseconds.
+    pub wait_us: Series,
+    /// Merged batch-execution stats across shards.
+    pub batches: BatchStats,
+    pub steals: u64,
+    pub sessions_stolen: u64,
+    /// Per-worker stepping time (wall ms) — the load-balance view the
+    /// stealing tests assert on.
+    pub worker_busy_ms: Vec<f64>,
+}
+
+impl DispatchReport {
+    /// Assemble from the run's parts.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: &DispatchConfig,
+        workers: usize,
+        admission: AdmissionStats,
+        wait_us: Series,
+        batches: BatchStats,
+        steals: u64,
+        sessions_stolen: u64,
+        worker_busy_ms: Vec<f64>,
+    ) -> DispatchReport {
+        DispatchReport {
+            workers,
+            policy: cfg.policy.describe(),
+            batch_window_s: cfg.batch_window_s,
+            queue_capacity: cfg.queue_capacity,
+            stealing_enabled: cfg.stealing,
+            admission,
+            wait_us,
+            batches,
+            steals,
+            sessions_stolen,
+            worker_busy_ms,
+        }
+    }
+
+    /// Total requests shed at admission.
+    pub fn shed_total(&self) -> u64 {
+        self.admission.shed_total()
+    }
+
+    /// The most-loaded worker's stepping time (0 with no workers).
+    pub fn max_busy_ms(&self) -> f64 {
+        self.worker_busy_ms.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// JSON emission (`"dispatch"` block; schema: README.md).
+    pub fn to_json(&self) -> Json {
+        let num = Json::Num;
+
+        let mut shed = BTreeMap::new();
+        shed.insert("rate_limited".into(), num(self.admission.shed_rate_limited as f64));
+        shed.insert("queue_full".into(), num(self.admission.shed_queue_full as f64));
+        shed.insert("displaced".into(), num(self.admission.shed_displaced as f64));
+        shed.insert("deadline".into(), num(self.admission.shed_deadline as f64));
+        shed.insert("total".into(), num(self.admission.shed_total() as f64));
+
+        let mut queue = BTreeMap::new();
+        queue.insert("submitted".into(), num(self.admission.submitted as f64));
+        queue.insert("admitted".into(), num(self.admission.admitted as f64));
+        queue.insert("depth_max".into(), num(self.admission.depth_max as f64));
+        queue.insert("depth_mean".into(), num(self.admission.depth_mean()));
+        queue.insert("shed".into(), Json::Obj(shed));
+
+        let histogram = self
+            .batches
+            .histogram
+            .iter()
+            .map(|(size, count)| {
+                let mut m = BTreeMap::new();
+                m.insert("size".into(), num(*size as f64));
+                m.insert("count".into(), num(*count as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut batches = BTreeMap::new();
+        batches.insert("count".into(), num(self.batches.batches as f64));
+        batches.insert("served".into(), num(self.batches.served as f64));
+        batches.insert("size_mean".into(), num(self.batches.size_mean()));
+        batches.insert("size_max".into(), num(self.batches.size_max as f64));
+        batches.insert("histogram".into(), Json::Arr(histogram));
+
+        let mut steals = BTreeMap::new();
+        steals.insert("count".into(), num(self.steals as f64));
+        steals.insert("sessions".into(), num(self.sessions_stolen as f64));
+        steals.insert(
+            "worker_busy_ms".into(),
+            Json::Arr(self.worker_busy_ms.iter().map(|&b| num(b)).collect()),
+        );
+
+        let mut root = BTreeMap::new();
+        root.insert("workers".into(), num(self.workers as f64));
+        root.insert("policy".into(), Json::Str(self.policy.clone()));
+        root.insert("window_s".into(), num(self.batch_window_s));
+        root.insert("capacity".into(), num(self.queue_capacity as f64));
+        root.insert("stealing".into(), Json::Bool(self.stealing_enabled));
+        root.insert("queue".into(), Json::Obj(queue));
+        root.insert("wait_ms".into(), series_summary_ms(&self.wait_us));
+        root.insert("total_ms".into(), series_summary_ms(&self.batches.total_us));
+        root.insert("batches".into(), Json::Obj(batches));
+        root.insert("steals".into(), Json::Obj(steals));
+        Json::Obj(root)
+    }
+}
+
+/// p50/p95/max/mean summary of a microsecond series, in milliseconds
+/// (zeros when empty — degenerate fleets must stay NaN-free).
+fn series_summary_ms(s: &Series) -> Json {
+    let mut m = BTreeMap::new();
+    let (p50, p95, max, mean) = if s.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        let p = s.percentiles(&[50.0, 95.0]);
+        (p[0], p[1], s.max(), s.mean())
+    };
+    m.insert("p50".into(), Json::Num(p50 / 1e3));
+    m.insert("p95".into(), Json::Num(p95 / 1e3));
+    m.insert("max".into(), Json::Num(max / 1e3));
+    m.insert("mean".into(), Json::Num(mean / 1e3));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_report_serializes_without_nans() {
+        let cfg = DispatchConfig::default();
+        let r = DispatchReport::new(
+            &cfg,
+            0,
+            AdmissionStats::default(),
+            Series::default(),
+            BatchStats::default(),
+            0,
+            0,
+            vec![],
+        );
+        assert_eq!(r.max_busy_ms(), 0.0);
+        let json = r.to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        let wait = parsed.get("wait_ms").unwrap();
+        for k in ["p50", "p95", "max", "mean"] {
+            let v = wait.get(k).unwrap().as_f64().unwrap();
+            assert!(v.is_finite(), "{k} must be finite, got {v}");
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(
+            parsed.get("batches").unwrap().get("size_mean").unwrap().as_f64().unwrap(),
+            0.0
+        );
+        assert_eq!(parsed.get("queue").unwrap().get("depth_mean").unwrap().as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn histogram_round_trips() {
+        let cfg = DispatchConfig::default();
+        let batches = BatchStats {
+            batches: 2,
+            served: 5,
+            size_max: 3,
+            histogram: [(2usize, 1u64), (3, 1)].into_iter().collect(),
+            total_us: Series::default(),
+        };
+        let r = DispatchReport::new(
+            &cfg,
+            2,
+            AdmissionStats::default(),
+            Series::default(),
+            batches,
+            3,
+            7,
+            vec![1.0, 2.0],
+        );
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let hist = parsed.get("batches").unwrap().get("histogram").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 2);
+        assert_eq!(hist[0].get("size").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("steals").unwrap().get("count").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(
+            parsed.get("steals").unwrap().get("worker_busy_ms").unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+}

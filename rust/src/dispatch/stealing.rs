@@ -1,0 +1,291 @@
+//! Work stealing between shard workers (DESIGN.md §8-3).
+//!
+//! PR 1 pinned every session to the worker `shard_of` chose for it, so a
+//! skewed placement (all diurnal-peak devices on one shard) serialized
+//! the whole fleet behind one thread.  Here each worker owns a shared,
+//! simulated-time-ordered heap of *whole sessions*: it pops the
+//! earliest-due session, steps it once, and reinserts it — and when its
+//! local heap drains it steals half the earliest-due sessions from the
+//! most-loaded worker and keeps going.
+//!
+//! Stealing is safe precisely because of the dispatch factorization:
+//! admission verdicts are precomputed (§8-1) and batch membership is a
+//! placement-independent post-pass (§8-2), so sessions share no mutable
+//! state beyond the build-once variant cache.  Moving a session between
+//! workers changes *which thread* advances it — never its simulated
+//! trajectory — and fleet results are bit-identical with stealing on or
+//! off (asserted in `tests/dispatch.rs`); only wall-clock changes.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::fleet::{DeviceSession, SimVariantCache};
+
+/// A session waiting in a worker's heap, ordered by (next simulated due
+/// instant, device id) — reversed so [`BinaryHeap`] pops the earliest.
+struct Pending {
+    /// `next_due().to_bits()` — non-negative finite times (and the
+    /// terminal `+inf`) order identically to the float.
+    key: u64,
+    /// Device id: a deterministic total order among equal due times.
+    seq: u64,
+    session: Box<DeviceSession>,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Pending) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Pending) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Pending) -> CmpOrdering {
+        // Reversed: the max-heap's top is the earliest-due session.
+        other.key.cmp(&self.key).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Shared work-stealing scheduler state for one dispatch-mode fleet run.
+pub struct StealPool {
+    queues: Vec<Mutex<BinaryHeap<Pending>>>,
+    /// Sessions not yet run to completion (fleet-wide).
+    remaining: AtomicUsize,
+    abort: AtomicBool,
+    steals: AtomicU64,
+    sessions_stolen: AtomicU64,
+}
+
+impl StealPool {
+    /// A pool for `workers` shard workers expecting `total_sessions`
+    /// sessions fleet-wide.
+    pub fn new(workers: usize, total_sessions: usize) -> StealPool {
+        StealPool {
+            queues: (0..workers.max(1)).map(|_| Mutex::new(BinaryHeap::new())).collect(),
+            remaining: AtomicUsize::new(total_sessions),
+            abort: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            sessions_stolen: AtomicU64::new(0),
+        }
+    }
+
+    fn heap(&self, w: usize) -> std::sync::MutexGuard<'_, BinaryHeap<Pending>> {
+        self.queues[w].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Seed worker `w`'s heap with its home-shard sessions.
+    pub fn seed(&self, w: usize, sessions: Vec<Box<DeviceSession>>) {
+        let mut heap = self.heap(w);
+        for session in sessions {
+            heap.push(Pending {
+                key: session.next_due().to_bits(),
+                seq: session.device_id,
+                session,
+            });
+        }
+    }
+
+    /// Abort the run (a worker hit an error); every drain loop bails.
+    pub fn set_abort(&self) {
+        self.abort.store(true, Ordering::Relaxed);
+    }
+
+    /// Number of successful steal operations.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Number of sessions moved by steals.
+    pub fn sessions_stolen(&self) -> u64 {
+        self.sessions_stolen.load(Ordering::Relaxed)
+    }
+
+    /// Worker `w`'s main loop: step own sessions in simulated-time order;
+    /// when the local heap drains, either stop (`steal == false`, static
+    /// partitioning) or steal from the most-loaded worker until the whole
+    /// fleet is done.  Returns the sessions this worker finished and its
+    /// busy time (wall milliseconds spent stepping).
+    pub fn drain(
+        &self,
+        w: usize,
+        steal: bool,
+        cache: &SimVariantCache,
+    ) -> Result<(Vec<Box<DeviceSession>>, f64)> {
+        let mut finished = Vec::new();
+        let mut busy = Duration::ZERO;
+        loop {
+            if self.abort.load(Ordering::Relaxed) {
+                break;
+            }
+            let popped = self.heap(w).pop();
+            match popped {
+                Some(mut p) => {
+                    let t0 = Instant::now();
+                    let stepped = p.session.step(cache);
+                    busy += t0.elapsed();
+                    if let Err(e) = stepped {
+                        self.set_abort();
+                        return Err(e);
+                    }
+                    if p.session.is_done() {
+                        self.remaining.fetch_sub(1, Ordering::Relaxed);
+                        finished.push(p.session);
+                    } else {
+                        p.key = p.session.next_due().to_bits();
+                        self.heap(w).push(p);
+                    }
+                }
+                None => {
+                    if self.remaining.load(Ordering::Relaxed) == 0 {
+                        break;
+                    }
+                    if !steal {
+                        break;
+                    }
+                    if !self.steal_into(w) {
+                        // Nothing stealable right now (sessions are
+                        // mid-step elsewhere, or a worker is still
+                        // building its shard) — back off briefly so the
+                        // holders get the cores, then look again.
+                        thread::sleep(Duration::from_micros(100));
+                    }
+                }
+            }
+        }
+        Ok((finished, busy.as_secs_f64() * 1e3))
+    }
+
+    /// Steal half the earliest-due sessions from the most-loaded worker
+    /// into `w`'s heap.  Returns false when nothing was stealable.
+    fn steal_into(&self, w: usize) -> bool {
+        let mut victim = None;
+        let mut best = 0usize;
+        for (i, q) in self.queues.iter().enumerate() {
+            if i == w {
+                continue;
+            }
+            let len = q.lock().unwrap_or_else(|p| p.into_inner()).len();
+            if len > best {
+                best = len;
+                victim = Some(i);
+            }
+        }
+        let Some(v) = victim else { return false };
+        let mut taken = Vec::new();
+        {
+            let mut vq = self.heap(v);
+            let take = (vq.len() + 1) / 2;
+            for _ in 0..take {
+                match vq.pop() {
+                    Some(p) => taken.push(p),
+                    None => break,
+                }
+            }
+        }
+        if taken.is_empty() {
+            return false;
+        }
+        self.steals.fetch_add(1, Ordering::Relaxed);
+        self.sessions_stolen.fetch_add(taken.len() as u64, Ordering::Relaxed);
+        let mut own = self.heap(w);
+        for p in taken {
+            own.push(p);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::manifest::Manifest;
+    use crate::runtime::ShardedCache;
+
+    fn sessions(n: u64, duration_s: f64) -> Vec<Box<DeviceSession>> {
+        let manifest = Manifest::synthetic();
+        (0..n)
+            .map(|d| {
+                Box::new(DeviceSession::new(&manifest, "d3", d, 7, duration_s).unwrap())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pending_orders_earliest_due_first() {
+        let mut ss = sessions(3, 600.0);
+        let mut heap = BinaryHeap::new();
+        for (key, s) in [(2.0f64, ss.pop()), (0.5, ss.pop()), (1.0, ss.pop())] {
+            heap.push(Pending { key: key.to_bits(), seq: 0, session: s.unwrap() });
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| heap.pop().map(|p| f64::from_bits(p.key)))
+            .collect();
+        assert_eq!(order, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn packed_seed_is_drained_by_thieves() {
+        let pool = StealPool::new(3, 6);
+        pool.seed(0, sessions(6, 1800.0));
+        let cache: SimVariantCache = ShardedCache::new(4);
+        let counts: Vec<usize> = thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|w| {
+                    let pool = &pool;
+                    let cache = &cache;
+                    scope.spawn(move || pool.drain(w, true, cache).unwrap().0.len())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(counts.iter().sum::<usize>(), 6, "every session finishes exactly once");
+        assert!(pool.steals() >= 1, "thieves must have stolen from worker 0");
+        assert!(pool.sessions_stolen() >= 1);
+    }
+
+    #[test]
+    fn static_mode_never_crosses_workers() {
+        let pool = StealPool::new(2, 4);
+        pool.seed(0, sessions(2, 600.0));
+        pool.seed(1, {
+            let manifest = Manifest::synthetic();
+            (2..4u64)
+                .map(|d| Box::new(DeviceSession::new(&manifest, "d3", d, 7, 600.0).unwrap()))
+                .collect()
+        });
+        let cache: SimVariantCache = ShardedCache::new(4);
+        let counts: Vec<usize> = thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|w| {
+                    let pool = &pool;
+                    let cache = &cache;
+                    scope.spawn(move || pool.drain(w, false, cache).unwrap().0.len())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(counts, vec![2, 2]);
+        assert_eq!(pool.steals(), 0);
+    }
+
+    #[test]
+    fn already_done_sessions_drain_immediately() {
+        let pool = StealPool::new(1, 2);
+        pool.seed(0, sessions(2, 0.0));
+        let cache: SimVariantCache = ShardedCache::new(2);
+        let (finished, _busy) = pool.drain(0, false, &cache).unwrap();
+        assert_eq!(finished.len(), 2);
+    }
+}

@@ -20,6 +20,12 @@
 //! * [`report`] — fleet-wide rollups: p50/p95/p99 inference latency,
 //!   evolution counts, energy, cache hit rate; JSON for `bench_fleet`.
 //!
+//! [`run_fleet_dispatch`] additionally routes every inference through
+//! the dispatch layer ([`crate::dispatch`], DESIGN.md §8): bounded
+//! admission queues with backpressure policies, windowed cross-device
+//! batching on the platform batch-latency curve, and work stealing
+//! between shard workers — `bench_dispatch` sweeps it.
+//!
 //! `cargo run --release --bin bench_fleet -- --devices 100 --shards 4`
 //! drives the whole stack without artifacts (synthetic manifest +
 //! modeled inference); with artifacts present, engines can share one
@@ -32,7 +38,7 @@ pub mod report;
 pub mod scenarios;
 pub mod session;
 
-pub use pool::{run_fleet, shard_of, FleetConfig};
+pub use pool::{run_fleet, run_fleet_dispatch, shard_of, FleetConfig};
 pub use report::{ArchetypeSummary, FleetReport, LatencySummary};
 pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};
 pub use session::{DeviceReport, DeviceSession, SimCompiledVariant, SimVariantCache};

@@ -1,13 +1,22 @@
-//! Sharded fleet runtime (DESIGN.md §7-3).
+//! Sharded fleet runtime (DESIGN.md §7-3) and its dispatch-mode variant
+//! (§8).
 //!
-//! N worker threads each own a *shard* of device sessions (device →
-//! shard by id modulo, so ownership is static and lock-free) and drain a
-//! per-shard priority queue ordered by simulated time: the worker always
-//! steps the session whose next instant is earliest, so devices inside a
-//! shard interleave exactly as a global simulated clock would order them.
-//! The only cross-shard state is the shared concurrent variant cache —
-//! the piece that *should* be shared, because compiled variants are
-//! immutable and expensive.
+//! The direct path ([`run_fleet`]): N worker threads each own a *shard*
+//! of device sessions (device → shard by id modulo, so ownership is
+//! static and lock-free) and drain a per-shard priority queue ordered by
+//! simulated time: the worker always steps the session whose next
+//! instant is earliest, so devices inside a shard interleave exactly as
+//! a global simulated clock would order them.  The only cross-shard
+//! state is the shared concurrent variant cache — the piece that
+//! *should* be shared, because compiled variants are immutable and
+//! expensive.
+//!
+//! The dispatch path ([`run_fleet_dispatch`]) routes every inference
+//! through [`crate::dispatch`]: each worker builds its home shard's
+//! sessions, runs the deterministic admission pre-pass (§8-1) over the
+//! shard's merged arrival stream, then steps sessions from a shared
+//! work-stealing heap (§8-3); a post-pass assembles cross-device batches
+//! (§8-2) and folds dispatch telemetry into the report (§8-4).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -18,8 +27,15 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::report::FleetReport;
+use super::scenarios::Archetype;
 use super::session::{DeviceReport, DeviceSession, SimVariantCache};
+use crate::context::events::Event;
 use crate::coordinator::manifest::Manifest;
+use crate::dispatch::{
+    admit_shard, assemble_batches, AdmissionStats, BatchStats, DispatchConfig, DispatchReport,
+    ShardAdmission, StealPool,
+};
+use crate::metrics::Series;
 use crate::runtime::ShardedCache;
 
 /// Fleet run parameters.
@@ -52,7 +68,26 @@ impl Default for FleetConfig {
     }
 }
 
-/// Static shard ownership: device → shard by id modulo.
+impl FleetConfig {
+    /// Parse the bench binaries' shared fleet flags (`--devices`,
+    /// `--shards`, `--hours`, `--seed`, `--task`, `--stripes`) over
+    /// this config's values as defaults.
+    pub fn from_args(args: &crate::util::cli::Args, defaults: FleetConfig) -> FleetConfig {
+        FleetConfig {
+            devices: args.get_usize("devices", defaults.devices),
+            shards: args.get_usize("shards", defaults.shards),
+            duration_s: args.get_f64("hours", defaults.duration_s / 3600.0) * 3600.0,
+            seed: args.get_usize("seed", defaults.seed as usize) as u64,
+            task: args.get_or("task", &defaults.task).to_string(),
+            cache_stripes: args.get_usize("stripes", defaults.cache_stripes),
+        }
+    }
+}
+
+/// Static device → shard by id modulo: the direct path's only placement
+/// mechanism, and the dispatch layer's default *starting* placement
+/// ([`crate::dispatch::Placement::Modulo`]) before work stealing
+/// rebalances.
 pub fn shard_of(device_id: u64, shards: usize) -> usize {
     (device_id % shards.max(1) as u64) as usize
 }
@@ -124,6 +159,151 @@ fn run_shard(
     }
 
     Ok(sessions.into_iter().map(|s| s.into_report(shard)).collect())
+}
+
+/// What one dispatch-mode worker hands back to the aggregator.
+struct WorkerOutcome {
+    finished: Vec<Box<DeviceSession>>,
+    busy_ms: f64,
+    admission: AdmissionStats,
+    wait_us: Series,
+}
+
+/// Run a fleet with every inference routed through the dispatch layer
+/// (DESIGN.md §8): bounded admission per shard, windowed cross-device
+/// batching, and (optionally) work stealing between shard workers.
+///
+/// Simulated results are bit-identical with stealing on or off — the
+/// admission pre-pass and batch post-pass are pure functions of the
+/// fleet's deterministic trajectories, so stealing changes only which
+/// thread steps which session (and hence the wall-clock).
+pub fn run_fleet_dispatch(
+    manifest: &Manifest,
+    cfg: &FleetConfig,
+    dcfg: &DispatchConfig,
+) -> Result<FleetReport> {
+    // One worker per home shard; idle shards beyond the fleet size are
+    // not spawned (degenerate `shards > devices` stays well-formed).
+    let workers = cfg.shards.max(1).min(cfg.devices.max(1));
+    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
+    let pool = StealPool::new(workers, cfg.devices);
+    let t0 = Instant::now();
+
+    let outcomes: Vec<Result<WorkerOutcome>> = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let cache = Arc::clone(&cache);
+            let pool = &pool;
+            handles.push(scope.spawn(move || {
+                run_dispatch_worker(manifest, cfg, dcfg, w, workers, pool, &cache)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("dispatch worker panicked"))))
+            .collect()
+    });
+
+    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(cfg.devices);
+    let mut admission = AdmissionStats::default();
+    let mut wait_us = Series::default();
+    let mut busy_ms = vec![0.0f64; workers];
+    for (w, outcome) in outcomes.into_iter().enumerate() {
+        let o = outcome?;
+        sessions.extend(o.finished);
+        admission.merge(&o.admission);
+        wait_us.extend_from(&o.wait_us);
+        busy_ms[w] = o.busy_ms;
+    }
+
+    // Deterministic batch post-pass (§8-2): per home shard over
+    // device-id-sorted sessions, independent of who stepped what.
+    sessions.sort_by_key(|s| (s.home_shard, s.device_id));
+    let mut batches = BatchStats::default();
+    let mut i = 0;
+    while i < sessions.len() {
+        let shard = sessions[i].home_shard;
+        let mut j = i;
+        while j < sessions.len() && sessions[j].home_shard == shard {
+            j += 1;
+        }
+        batches.merge(&assemble_batches(dcfg, &mut sessions[i..j]));
+        i = j;
+    }
+
+    let device_reports: Vec<DeviceReport> = sessions
+        .into_iter()
+        .map(|s| {
+            let shard = s.home_shard;
+            s.into_report(shard)
+        })
+        .collect();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let mut report = FleetReport::aggregate(cfg, device_reports, cache.stats(), wall_ms);
+    report.dispatch = Some(DispatchReport::new(
+        dcfg,
+        workers,
+        admission,
+        wait_us,
+        batches,
+        pool.steals(),
+        pool.sessions_stolen(),
+        busy_ms,
+    ));
+    Ok(report)
+}
+
+/// One dispatch-mode worker: build the home shard's sessions, run its
+/// admission pre-pass, then step from the shared work-stealing pool.
+fn run_dispatch_worker(
+    manifest: &Manifest,
+    cfg: &FleetConfig,
+    dcfg: &DispatchConfig,
+    w: usize,
+    workers: usize,
+    pool: &StealPool,
+    cache: &SimVariantCache,
+) -> Result<WorkerOutcome> {
+    // If this worker unwinds, don't leave stealing workers spinning on
+    // the remaining-session count forever.
+    struct AbortOnUnwind<'a>(&'a StealPool);
+    impl Drop for AbortOnUnwind<'_> {
+        fn drop(&mut self) {
+            if thread::panicking() {
+                self.0.set_abort();
+            }
+        }
+    }
+    let _abort_guard = AbortOnUnwind(pool);
+
+    let ids: Vec<u64> = (0..cfg.devices as u64)
+        .filter(|&d| dcfg.placement.home_shard(d, workers) == w)
+        .collect();
+    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(ids.len());
+    for &d in &ids {
+        let mut session = match DeviceSession::new(manifest, &cfg.task, d, cfg.seed, cfg.duration_s)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                // Unblock every other worker before bailing.
+                pool.set_abort();
+                return Err(e);
+            }
+        };
+        session.home_shard = w;
+        sessions.push(Box::new(session));
+    }
+
+    let inputs: Vec<(u64, Archetype, &[Event])> =
+        sessions.iter().map(|s| (s.device_id, s.archetype, s.events())).collect();
+    let ShardAdmission { verdicts, stats, wait_us } = admit_shard(dcfg, &inputs);
+    for (session, verdict) in sessions.iter_mut().zip(verdicts) {
+        session.set_dispatch(verdict);
+    }
+
+    pool.seed(w, sessions);
+    let (finished, busy_ms) = pool.drain(w, dcfg.stealing, cache)?;
+    Ok(WorkerOutcome { finished, busy_ms, admission: stats, wait_us })
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use super::pool::FleetConfig;
 use super::scenarios::ALL_ARCHETYPES;
 use super::session::DeviceReport;
+use crate::dispatch::DispatchReport;
 use crate::metrics::{Series, Table};
 use crate::runtime::CacheStats;
 use crate::util::json::Json;
@@ -45,6 +46,8 @@ pub struct ArchetypeSummary {
     pub archetype: &'static str,
     pub devices: usize,
     pub inferences: usize,
+    /// Events shed at admission for this archetype (dispatch path only).
+    pub shed: usize,
     pub evolutions: usize,
     pub latency: LatencySummary,
     pub battery_end_mean: f64,
@@ -65,6 +68,9 @@ pub struct FleetReport {
     pub task: String,
     pub inferences: usize,
     pub dropped: usize,
+    /// Events shed by admission control fleet-wide (0 on the direct
+    /// path).
+    pub shed: usize,
     pub evolutions: usize,
     pub latency: LatencySummary,
     pub search_p50_us: f64,
@@ -73,6 +79,9 @@ pub struct FleetReport {
     pub cache: CacheStats,
     pub per_archetype: Vec<ArchetypeSummary>,
     pub wall_ms: f64,
+    /// Dispatch-layer telemetry (DESIGN.md §8-4); `None` when the run
+    /// used the direct path.
+    pub dispatch: Option<DispatchReport>,
 }
 
 impl FleetReport {
@@ -87,6 +96,7 @@ impl FleetReport {
         let mut search_us = Series::default();
         let mut inferences = 0usize;
         let mut dropped = 0usize;
+        let mut shed = 0usize;
         let mut evolutions = 0usize;
         let mut energy_j = 0.0f64;
         let mut by_archetype: BTreeMap<&'static str, Vec<&DeviceReport>> = BTreeMap::new();
@@ -95,6 +105,7 @@ impl FleetReport {
             search_us.extend_from(&r.search_us);
             inferences += r.inferences;
             dropped += r.dropped;
+            shed += r.shed;
             evolutions += r.evolutions;
             energy_j += r.energy_j;
             by_archetype.entry(r.archetype).or_default().push(r);
@@ -107,6 +118,7 @@ impl FleetReport {
                 let rs = by_archetype.get(a.name())?;
                 let mut lat = Series::default();
                 let mut inf = 0usize;
+                let mut sh = 0usize;
                 let mut evo = 0usize;
                 let mut battery = 0.0f64;
                 let mut energy = 0.0f64;
@@ -115,6 +127,7 @@ impl FleetReport {
                 for r in rs {
                     lat.extend_from(&r.latency_us);
                     inf += r.inferences;
+                    sh += r.shed;
                     evo += r.evolutions;
                     battery += r.battery_end;
                     energy += r.energy_j;
@@ -125,6 +138,7 @@ impl FleetReport {
                     archetype: a.name(),
                     devices: rs.len(),
                     inferences: inf,
+                    shed: sh,
                     evolutions: evo,
                     latency: LatencySummary::from_series_us(&lat),
                     battery_end_mean: battery / rs.len().max(1) as f64,
@@ -144,6 +158,7 @@ impl FleetReport {
             task: cfg.task.clone(),
             inferences,
             dropped,
+            shed,
             evolutions,
             latency: LatencySummary::from_series_us(&latency_us),
             search_p50_us: search_pcts[0],
@@ -152,6 +167,7 @@ impl FleetReport {
             cache,
             per_archetype,
             wall_ms,
+            dispatch: None,
         }
     }
 
@@ -168,6 +184,7 @@ impl FleetReport {
         let mut totals = BTreeMap::new();
         totals.insert("inferences".into(), num(self.inferences as f64));
         totals.insert("dropped".into(), num(self.dropped as f64));
+        totals.insert("shed".into(), num(self.shed as f64));
         totals.insert("evolutions".into(), num(self.evolutions as f64));
         totals.insert("energy_j".into(), num(self.energy_j));
         totals.insert("wall_ms".into(), num(self.wall_ms));
@@ -190,6 +207,7 @@ impl FleetReport {
                 m.insert("archetype".into(), Json::Str(a.archetype.to_string()));
                 m.insert("devices".into(), num(a.devices as f64));
                 m.insert("inferences".into(), num(a.inferences as f64));
+                m.insert("shed".into(), num(a.shed as f64));
                 m.insert("evolutions".into(), num(a.evolutions as f64));
                 m.insert("latency_ms".into(), latency_json(&a.latency));
                 m.insert("battery_end_mean".into(), num(a.battery_end_mean));
@@ -207,6 +225,9 @@ impl FleetReport {
         root.insert("search_us".into(), Json::Obj(search));
         root.insert("cache".into(), Json::Obj(cache));
         root.insert("archetypes".into(), Json::Arr(archetypes));
+        if let Some(dispatch) = &self.dispatch {
+            root.insert("dispatch".into(), dispatch.to_json());
+        }
         Json::Obj(root)
     }
 

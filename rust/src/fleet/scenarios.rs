@@ -58,6 +58,15 @@ impl Archetype {
         }
     }
 
+    /// Position in [`ALL_ARCHETYPES`] (dense index for per-archetype
+    /// state such as the dispatcher's token buckets).
+    pub fn index(self) -> usize {
+        ALL_ARCHETYPES
+            .iter()
+            .position(|a| *a == self)
+            .expect("every archetype is in ALL_ARCHETYPES")
+    }
+
     /// Deterministic archetype for a fleet device id (round-robin mix).
     pub fn for_device(device_id: u64) -> Archetype {
         ALL_ARCHETYPES[(device_id % ALL_ARCHETYPES.len() as u64) as usize]

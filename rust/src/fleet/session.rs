@@ -14,6 +14,13 @@
 //! [`ShardedCache`]: the first session fleet-wide to deploy a variant
 //! "compiles" it, every later session reuses the entry — the cross-device
 //! hot-path win the fleet report surfaces as the cache hit rate.
+//!
+//! Under the dispatch layer (DESIGN.md §8) a session additionally carries
+//! its per-event [`AdmissionVerdict`]s: shed events are skipped (no
+//! energy, no inference), admitted events are served and recorded as
+//! [`ServedRequest`]s for the batch post-pass to price.  With no verdicts
+//! attached the session serves every event inline — the direct path,
+//! byte-identical to PR 1.
 
 use anyhow::Result;
 
@@ -23,8 +30,9 @@ use crate::context::events::Event;
 use crate::coordinator::engine::AdaSpring;
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::CompressionConfig;
+use crate::dispatch::{AdmissionVerdict, ServedRequest};
 use crate::metrics::Series;
-use crate::platform::EnergyModel;
+use crate::platform::{EnergyModel, Platform};
 use crate::runtime::ShardedCache;
 use crate::serving::{EvolutionRecord, ServingReport, CONTEXT_CHECK_PERIOD_S};
 
@@ -43,7 +51,11 @@ pub type SimVariantCache = ShardedCache<SimCompiledVariant>;
 pub struct DeviceSession {
     pub device_id: u64,
     pub archetype: Archetype,
-    platform_name: String,
+    /// Home shard under the dispatch layer's placement: the session's
+    /// admission/batching domain, and its starting worker before any
+    /// work stealing (DESIGN.md §8-3).  0 on the direct path.
+    pub home_shard: usize,
+    platform: Platform,
     engine: AdaSpring,
     sim: ContextSimulator,
     trigger: Trigger,
@@ -63,6 +75,14 @@ pub struct DeviceSession {
     loaded_variant: Option<usize>,
     cache_hits: u64,
     cache_misses: u64,
+    /// Per-event admission verdicts from the dispatch pre-pass
+    /// (DESIGN.md §8-1); `None` = direct path, serve every event inline.
+    verdicts: Option<Vec<AdmissionVerdict>>,
+    /// Requests served through the dispatcher, awaiting the batch
+    /// post-pass (§8-2) to assign their final latencies.
+    served: Vec<ServedRequest>,
+    /// Events shed at admission (never executed, no energy drained).
+    shed: usize,
 }
 
 /// A finished session's summary, handed to the fleet aggregator.
@@ -74,6 +94,9 @@ pub struct DeviceReport {
     pub platform: String,
     pub inferences: usize,
     pub dropped: usize,
+    /// Events shed by the dispatch layer's admission control (0 on the
+    /// direct path).
+    pub shed: usize,
     pub evolutions: usize,
     pub latency_us: Series,
     pub search_us: Series,
@@ -124,7 +147,8 @@ impl DeviceSession {
         Ok(DeviceSession {
             device_id,
             archetype: scenario.archetype,
-            platform_name: scenario.platform.name.to_string(),
+            home_shard: 0,
+            platform: scenario.platform.clone(),
             engine,
             sim,
             trigger: scenario.make_trigger(),
@@ -140,7 +164,40 @@ impl DeviceSession {
             loaded_variant: None,
             cache_hits: 0,
             cache_misses: 0,
+            verdicts: None,
+            served: Vec::new(),
+            shed: 0,
         })
+    }
+
+    /// The session's pre-sampled event trace (the dispatch pre-pass's
+    /// arrival stream).
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// This session's device platform (batch-curve lookups, §8-2).
+    pub fn platform(&self) -> &Platform {
+        &self.platform
+    }
+
+    /// Route this session through the dispatcher: one admission verdict
+    /// per event, from [`crate::dispatch::admit_shard`].
+    pub fn set_dispatch(&mut self, verdicts: Vec<AdmissionVerdict>) {
+        debug_assert_eq!(verdicts.len(), self.events.len());
+        self.verdicts = Some(verdicts);
+    }
+
+    /// Requests served through the dispatcher so far (batch post-pass
+    /// input).
+    pub fn served_requests(&self) -> &[ServedRequest] {
+        &self.served
+    }
+
+    /// Record one dispatched request's final (batched) service latency,
+    /// assigned by the batch post-pass.
+    pub fn record_dispatched_latency(&mut self, service_us: f64) {
+        self.report.inference_latency_us.push(service_us);
     }
 
     /// Has the session consumed its whole simulated duration?
@@ -194,15 +251,44 @@ impl DeviceSession {
         }
 
         if (t - next_event_t).abs() < 1e-9 && self.ei < self.events.len() {
+            let idx = self.ei;
             self.ei += 1;
-            let available = self.sim.snapshot().available_cache;
-            match self.engine.modeled_active_latency_ms(available) {
-                Some(latency_ms) => {
-                    self.report.inferences += 1;
-                    self.report.inference_latency_us.push(latency_ms * 1e3);
-                    self.sim.advance(0.0, self.energy_per_inference_j);
+            match self.verdicts.as_ref().map(|v| v[idx]) {
+                // Shed at admission: never executed, no energy drained.
+                Some(AdmissionVerdict::Shed(_)) => self.shed += 1,
+                // Dispatched: serve now, batch the latency in the
+                // post-pass (DESIGN.md §8-2).
+                Some(AdmissionVerdict::Admitted { window, wait_us }) => {
+                    let available = self.sim.snapshot().available_cache;
+                    match (
+                        self.engine.modeled_active_latency_ms(available),
+                        self.engine.active_variant(),
+                    ) {
+                        (Some(latency_ms), Some(variant_id)) => {
+                            self.report.inferences += 1;
+                            self.served.push(ServedRequest {
+                                window,
+                                variant_id,
+                                wait_us,
+                                single_us: latency_ms * 1e3,
+                            });
+                            self.sim.advance(0.0, self.energy_per_inference_j);
+                        }
+                        _ => self.report.dropped += 1,
+                    }
                 }
-                None => self.report.dropped += 1,
+                // Direct path: serve inline, exactly as ServingLoop.
+                None => {
+                    let available = self.sim.snapshot().available_cache;
+                    match self.engine.modeled_active_latency_ms(available) {
+                        Some(latency_ms) => {
+                            self.report.inferences += 1;
+                            self.report.inference_latency_us.push(latency_ms * 1e3);
+                            self.sim.advance(0.0, self.energy_per_inference_j);
+                        }
+                        None => self.report.dropped += 1,
+                    }
+                }
             }
         }
 
@@ -255,9 +341,10 @@ impl DeviceSession {
             device_id: self.device_id,
             shard,
             archetype: self.archetype.name(),
-            platform: self.platform_name,
+            platform: self.platform.name.to_string(),
             inferences: self.report.inferences,
             dropped: self.report.dropped,
+            shed: self.shed,
             evolutions: self.report.evolutions.len(),
             latency_us: self.report.inference_latency_us,
             search_us,

@@ -19,10 +19,14 @@
 //!   pump; tokio is unavailable offline) driving inference over events.
 //! * [`fleet`] — sharded multi-device simulation: scenario archetypes,
 //!   per-device sessions, shard workers, fleet-wide aggregation.
+//! * [`dispatch`] — the layer between fleet sessions and execution:
+//!   bounded admission queues with backpressure policies, windowed
+//!   cross-device batching, work stealing between shard workers.
 //! * [`metrics`] — table/series emission for the benchmark harness.
 
 pub mod context;
 pub mod coordinator;
+pub mod dispatch;
 pub mod fleet;
 pub mod metrics;
 pub mod platform;

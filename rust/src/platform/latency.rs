@@ -57,6 +57,16 @@ impl LatencyModel {
     pub fn total_ms(&self, costs: &Costs, available_cache: u64) -> f64 {
         self.latency(costs, available_cache).total_ms()
     }
+
+    /// Modelled *per-inference* latency when the inference runs inside a
+    /// batch of `k` compatible (same-variant) requests: the solo latency
+    /// scaled by the platform's sublinear batch curve
+    /// ([`Platform::batch_per_inference_factor`], DESIGN.md §8-2).  The
+    /// dispatch layer's batcher applies exactly this scaling, so the
+    /// modeled path and the batcher price batches identically.
+    pub fn batched_total_ms(&self, costs: &Costs, available_cache: u64, k: usize) -> f64 {
+        self.total_ms(costs, available_cache) * self.platform.batch_per_inference_factor(k)
+    }
 }
 
 #[cfg(test)]
@@ -80,6 +90,21 @@ mod tests {
         let miss = m.latency(&c, 256 * 1024);
         assert!(miss.load_ms > hit.load_ms * 10.0);
         assert_eq!(hit.inference_ms, miss.inference_ms);
+    }
+
+    #[test]
+    fn batched_latency_shrinks_per_inference() {
+        let m = LatencyModel::new(&Platform::raspberry_pi_4b());
+        let c = Costs { macs: 7_230_016, params: 69_471, acts: 54_000 };
+        let solo = m.total_ms(&c, 512 * 1024);
+        let b1 = m.batched_total_ms(&c, 512 * 1024, 1);
+        let b8 = m.batched_total_ms(&c, 512 * 1024, 8);
+        assert_eq!(solo, b1, "batch of 1 is the solo path");
+        assert!(b8 < solo, "batching must amortize load time");
+        assert!(
+            b8 > solo * Platform::raspberry_pi_4b().batch_overhead_fraction,
+            "the curve floors at β"
+        );
     }
 
     #[test]

@@ -51,6 +51,16 @@ pub struct Platform {
     /// parameter intensity is the stronger energy predictor here because
     /// the variant space changes C much more than the paper's did.
     pub mu: (f64, f64),
+    /// Batch-latency curve coefficient β ∈ (0, 1] (DESIGN.md §8-2): the
+    /// marginal cost of each additional same-variant inference in a
+    /// batch, relative to a solo inference.  A batch of k costs
+    /// `single × (1 + β(k−1))` total — sublinear because co-scheduled
+    /// same-variant inferences share the parameter-load phase of the
+    /// latency model (T = T_load + T_inference, paper §5.1.2) — so the
+    /// per-inference factor `(1 + β(k−1))/k` falls toward β.  Calibrated
+    /// per platform: wide cores with high memory bandwidth batch better
+    /// (lower β) than in-order wearable cores.
+    pub batch_overhead_fraction: f64,
 }
 
 impl Platform {
@@ -71,6 +81,7 @@ impl Platform {
             sensing_energy_per_event: 9.0e-4,
             param_cache_fraction: 0.15,
             mu: (0.8, 0.2),
+            batch_overhead_fraction: 0.55,
         }
     }
 
@@ -91,6 +102,7 @@ impl Platform {
             sensing_energy_per_event: 1.1e-3,
             param_cache_fraction: 0.15,
             mu: (0.8, 0.2),
+            batch_overhead_fraction: 0.5,
         }
     }
 
@@ -111,6 +123,7 @@ impl Platform {
             sensing_energy_per_event: 1.3e-3,
             param_cache_fraction: 0.15,
             mu: (0.8, 0.2),
+            batch_overhead_fraction: 0.45,
         }
     }
 
@@ -132,6 +145,7 @@ impl Platform {
             sensing_energy_per_event: 6.0e-4,
             param_cache_fraction: 0.15,
             mu: (0.8, 0.2),
+            batch_overhead_fraction: 0.7,
         }
     }
 
@@ -153,6 +167,7 @@ impl Platform {
             sensing_energy_per_event: 8.0e-4,
             param_cache_fraction: 0.20,
             mu: (0.8, 0.2),
+            batch_overhead_fraction: 0.3,
         }
     }
 
@@ -178,6 +193,18 @@ impl Platform {
     /// Total battery energy in joules.
     pub fn battery_joules(&self) -> f64 {
         self.battery_mah / 1000.0 * 3600.0 * self.battery_volts
+    }
+
+    /// Per-inference latency scaling for a batch of `k` same-variant
+    /// inferences (DESIGN.md §8-2): `(1 + β(k−1))/k`, the platform's
+    /// sublinear batch-latency curve.  1.0 at k ≤ 1, strictly
+    /// decreasing in k, asymptoting to β ([`Self::batch_overhead_fraction`]).
+    pub fn batch_per_inference_factor(&self, k: usize) -> f64 {
+        if k <= 1 {
+            return 1.0;
+        }
+        let k = k as f64;
+        (1.0 + self.batch_overhead_fraction * (k - 1.0)) / k
     }
 }
 
@@ -205,6 +232,35 @@ mod tests {
         for p in Platform::all() {
             assert_eq!(p.l2_cache_bytes, 2 * 1024 * 1024, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn batch_curve_is_sublinear_and_monotone() {
+        for p in Platform::extended() {
+            assert!(
+                p.batch_overhead_fraction > 0.0 && p.batch_overhead_fraction <= 1.0,
+                "{}: β out of range",
+                p.name
+            );
+            assert_eq!(p.batch_per_inference_factor(0), 1.0, "{}", p.name);
+            assert_eq!(p.batch_per_inference_factor(1), 1.0, "{}", p.name);
+            let mut prev = 1.0;
+            for k in 2..=32 {
+                let f = p.batch_per_inference_factor(k);
+                assert!(f < prev, "{}: factor must fall with k (k={k})", p.name);
+                assert!(f > p.batch_overhead_fraction, "{}: factor floors at β", p.name);
+                prev = f;
+            }
+            // Total batch time still grows with k (sublinear, not free).
+            let total4 = 4.0 * p.batch_per_inference_factor(4);
+            let total2 = 2.0 * p.batch_per_inference_factor(2);
+            assert!(total4 > total2, "{}", p.name);
+        }
+        // The hub batches best; the wearable worst.
+        assert!(
+            Platform::office_hub().batch_per_inference_factor(8)
+                < Platform::wearable().batch_per_inference_factor(8)
+        );
     }
 
     #[test]

@@ -68,11 +68,21 @@ impl<V> ShardedCache<V> {
         }
     }
 
-    fn stripe(&self, key: &VariantKey) -> &Mutex<HashMap<VariantKey, Arc<V>>> {
+    /// Stripe index a key hashes to (stable per key for a given stripe
+    /// count; exposed so tests can assert the distribution).
+    pub fn stripe_of(&self, key: &VariantKey) -> usize {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
-        let idx = (h.finish() % self.stripes.len() as u64) as usize;
-        &self.stripes[idx]
+        (h.finish() % self.stripes.len() as u64) as usize
+    }
+
+    /// Number of lock stripes.
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    fn stripe(&self, key: &VariantKey) -> &Mutex<HashMap<VariantKey, Arc<V>>> {
+        &self.stripes[self.stripe_of(key)]
     }
 
     /// Fetch the entry for `key`, building it with `build` on first use.

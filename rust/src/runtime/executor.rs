@@ -41,6 +41,25 @@ pub struct ExecStats {
     pub output_len: usize,
 }
 
+/// Execution statistics for one batch ([`Executor::infer_batch`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchExecStats {
+    pub batch_size: usize,
+    /// Wall time for the whole batch, microseconds.
+    pub total_latency_us: u128,
+}
+
+impl BatchExecStats {
+    /// Mean per-inference latency inside the batch (µs; 0 when empty).
+    pub fn per_inference_us(&self) -> f64 {
+        if self.batch_size == 0 {
+            0.0
+        } else {
+            self.total_latency_us as f64 / self.batch_size as f64
+        }
+    }
+}
+
 /// PJRT CPU executor over a (possibly shared) executable cache.
 pub struct Executor {
     client: xla::PjRtClient,
@@ -124,6 +143,33 @@ impl Executor {
         let logits = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
         let output_len = logits.len();
         Ok((logits, ExecStats { latency_us, output_len }))
+    }
+
+    /// Run a batch of compatible (same-variant) inferences, returning
+    /// per-request logits plus batch timing — the PJRT side of the
+    /// dispatch layer's batch path (DESIGN.md §8-2).
+    ///
+    /// The palette artifacts are batch-1 HLO modules, so execution here
+    /// is sequential over the cached executable; the platform batch
+    /// curve ([`crate::platform::Platform::batch_per_inference_factor`])
+    /// models the fused-batch target the modeled path prices.  Lowering
+    /// batch-N variants would slot in behind this same signature.
+    pub fn infer_batch(
+        &self,
+        loaded: &LoadedVariant,
+        inputs: &[Vec<f32>],
+    ) -> Result<(Vec<Vec<f32>>, BatchExecStats)> {
+        let t0 = Instant::now();
+        let mut outputs = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (logits, _stats) = self.infer(loaded, input)?;
+            outputs.push(logits);
+        }
+        let stats = BatchExecStats {
+            batch_size: inputs.len(),
+            total_latency_us: t0.elapsed().as_micros(),
+        };
+        Ok((outputs, stats))
     }
 
     /// Measure mean inference latency over `iters` runs (after 1 warmup).

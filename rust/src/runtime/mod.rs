@@ -10,4 +10,4 @@ pub mod cache;
 pub mod executor;
 
 pub use cache::{CacheStats, ShardedCache, VariantKey, DEFAULT_STRIPES};
-pub use executor::{ExecStats, ExecutableCache, Executor, LoadedVariant};
+pub use executor::{BatchExecStats, ExecStats, ExecutableCache, Executor, LoadedVariant};

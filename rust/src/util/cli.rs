@@ -42,6 +42,58 @@ impl Args {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Reject unknown options/flags, unexpected positionals, and
+    /// boolean flags that swallowed a value (`--csv out.csv` parses as
+    /// option csv="out.csv", which would otherwise silently leave the
+    /// flag unset): print the problems with `usage` to stderr and
+    /// exit 2.  The bench binaries call this first so sweep typos fail
+    /// loudly instead of silently falling back to defaults.
+    pub fn enforce_usage(&self, allowed: &[&str], boolean_flags: &[&str], usage: &str) {
+        let unknown = self.unknown(allowed);
+        let misused = self.misused_flags(boolean_flags);
+        if unknown.is_empty() && misused.is_empty() && self.positional.is_empty() {
+            return;
+        }
+        if !unknown.is_empty() {
+            eprintln!("unknown arguments: {}", unknown.join(" "));
+        }
+        for m in &misused {
+            eprintln!("{m}");
+        }
+        if !self.positional.is_empty() {
+            eprintln!("unexpected positional arguments: {}", self.positional.join(" "));
+        }
+        eprintln!("{usage}");
+        std::process::exit(2);
+    }
+
+    /// Boolean flags that accidentally captured a value (the parser
+    /// turns `--csv out.csv` into option csv="out.csv"); one message
+    /// per misuse.
+    pub fn misused_flags(&self, boolean_flags: &[&str]) -> Vec<String> {
+        boolean_flags
+            .iter()
+            .filter_map(|f| {
+                self.get(f).map(|v| format!("--{f} does not take a value (got {v:?})"))
+            })
+            .collect()
+    }
+
+    /// Option and flag names not in `allowed`, sorted (empty = all
+    /// known).
+    pub fn unknown(&self, allowed: &[&str]) -> Vec<String> {
+        let mut unknown: Vec<String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|name| !allowed.contains(&name.as_str()))
+            .map(|name| format!("--{name}"))
+            .collect();
+        unknown.sort();
+        unknown.dedup();
+        unknown
+    }
+
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
@@ -92,5 +144,26 @@ mod tests {
         let a = parse("--fast --task d1");
         assert!(a.flag("fast"));
         assert_eq!(a.get("task"), Some("d1"));
+    }
+
+    #[test]
+    fn unknown_flags_are_reported_sorted() {
+        let a = parse("--devices 8 --polcy block --sweep --zeta");
+        assert_eq!(a.unknown(&["devices", "policy", "sweep"]), vec!["--polcy", "--zeta"]);
+        assert!(a.unknown(&["devices", "polcy", "sweep", "zeta"]).is_empty());
+        assert!(Args::default().unknown(&[]).is_empty());
+    }
+
+    #[test]
+    fn boolean_flags_that_swallow_values_are_caught() {
+        // `--csv out.csv` misparses as option csv="out.csv"; the strict
+        // benches must reject it instead of silently unsetting the flag.
+        let a = parse("--devices 8 --csv out.csv");
+        assert!(a.unknown(&["devices", "csv"]).is_empty(), "name itself is known");
+        assert!(!a.flag("csv"), "the misparse leaves the flag unset");
+        let misused = a.misused_flags(&["csv", "sweep"]);
+        assert_eq!(misused.len(), 1);
+        assert!(misused[0].contains("--csv") && misused[0].contains("out.csv"));
+        assert!(parse("--csv --sweep").misused_flags(&["csv", "sweep"]).is_empty());
     }
 }

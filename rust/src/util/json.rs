@@ -111,6 +111,12 @@ impl Json {
     pub fn as_bool_vec(&self) -> Result<Vec<bool>> {
         self.as_arr()?.iter().map(|v| v.as_bool()).collect()
     }
+
+    /// Write the serialized document (plus trailing newline) to `path`
+    /// (the bench binaries' `--json-out`).
+    pub fn write_to(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{self}\n"))
+    }
 }
 
 struct Parser<'a> {

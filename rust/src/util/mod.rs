@@ -5,3 +5,16 @@
 pub mod cli;
 pub mod json;
 pub mod rng;
+
+use anyhow::Result;
+
+/// Write the emitted JSON to `--json-out` when the flag is given — the
+/// bench binaries' shared file-output path (CI uploads the file as a
+/// workflow artifact).
+pub fn write_json_out(args: &cli::Args, json: &json::Json) -> Result<()> {
+    if let Some(path) = args.get("json-out") {
+        json.write_to(path)?;
+        eprintln!("wrote JSON report to {path}");
+    }
+    Ok(())
+}

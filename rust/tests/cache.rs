@@ -1,0 +1,117 @@
+//! Integration: `runtime::ShardedCache` build-once semantics under real
+//! thread contention, and stripe distribution across keys — the
+//! invariants the whole fleet/dispatch stack leans on (DESIGN.md §4).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Duration;
+
+use adaspring::runtime::ShardedCache;
+
+#[test]
+fn n_threads_racing_one_key_observe_exactly_one_build() {
+    const THREADS: usize = 8;
+    let cache: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(8));
+    let built = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let cache = Arc::clone(&cache);
+        let built = Arc::clone(&built);
+        let barrier = Arc::clone(&barrier);
+        handles.push(thread::spawn(move || {
+            barrier.wait(); // maximize the race on the stripe lock
+            let (entry, _hit) = cache
+                .get_or_try_insert_with(("d3".to_string(), 7), || {
+                    built.fetch_add(1, Ordering::SeqCst);
+                    thread::sleep(Duration::from_millis(15));
+                    Ok(4242)
+                })
+                .unwrap();
+            *entry
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), 4242, "every racer sees the winner's build");
+    }
+    assert_eq!(built.load(Ordering::SeqCst), 1, "the builder must run exactly once");
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 1);
+    assert_eq!(stats.misses, 1, "one compile fleet-wide");
+    assert_eq!(stats.hits, (THREADS - 1) as u64);
+}
+
+#[test]
+fn contended_distinct_keys_each_build_once() {
+    const THREADS: usize = 8;
+    const KEYS: usize = 16;
+    let cache: Arc<ShardedCache<usize>> = Arc::new(ShardedCache::new(4));
+    let built: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..KEYS).map(|_| AtomicUsize::new(0)).collect());
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let cache = Arc::clone(&cache);
+        let built = Arc::clone(&built);
+        let barrier = Arc::clone(&barrier);
+        handles.push(thread::spawn(move || {
+            barrier.wait();
+            // Each thread walks the keys from a different offset so the
+            // stripes see interleaved, overlapping traffic.
+            for i in 0..KEYS {
+                let id = (t + i) % KEYS;
+                let (v, _) = cache
+                    .get_or_try_insert_with(("d3".to_string(), id), || {
+                        built[id].fetch_add(1, Ordering::SeqCst);
+                        Ok(id * 10)
+                    })
+                    .unwrap();
+                assert_eq!(*v, id * 10);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    for (id, b) in built.iter().enumerate() {
+        assert_eq!(b.load(Ordering::SeqCst), 1, "key {id} built more than once");
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.entries, KEYS);
+    assert_eq!(stats.misses, KEYS as u64);
+    assert_eq!(stats.hits + stats.misses, (THREADS * KEYS) as u64);
+}
+
+#[test]
+fn stripes_distribute_keys_and_are_stable() {
+    let cache: ShardedCache<usize> = ShardedCache::new(8);
+    assert_eq!(cache.stripe_count(), 8);
+    let mut seen = HashSet::new();
+    for id in 0..64usize {
+        let key = ("t".to_string(), id);
+        let stripe = cache.stripe_of(&key);
+        assert!(stripe < cache.stripe_count(), "stripe index in bounds");
+        assert_eq!(stripe, cache.stripe_of(&key), "stable per key");
+        seen.insert(stripe);
+        cache.get_or_try_insert_with(key, || Ok(id)).unwrap();
+    }
+    assert!(
+        seen.len() > 1,
+        "64 keys must spread across stripes (all landed on one of {})",
+        cache.stripe_count()
+    );
+    assert_eq!(cache.len(), 64, "distribution must not alias entries");
+
+    // Task name participates in the hash, not just the variant id.
+    let other: ShardedCache<usize> = ShardedCache::new(8);
+    let spread: HashSet<usize> =
+        (0..16).map(|id| other.stripe_of(&(format!("task-{id}"), 0))).collect();
+    assert!(spread.len() > 1);
+
+    // Zero stripes degrades to one, never panics.
+    let degenerate: ShardedCache<u8> = ShardedCache::new(0);
+    assert_eq!(degenerate.stripe_count(), 1);
+    assert_eq!(degenerate.stripe_of(&("x".to_string(), 3)), 0);
+}

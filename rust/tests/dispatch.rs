@@ -1,0 +1,326 @@
+//! Integration: the dispatch subsystem (DESIGN.md §8) end to end —
+//! ServingLoop parity on the passthrough config, placement-invariant
+//! determinism, the work-stealing wall-clock/balance win on a skewed
+//! fleet, the batching latency win, shedding under an undersized
+//! admission queue, the per-archetype rate limiter, and the PJRT-side
+//! batch execution path.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference) except the `infer_batch` test, which drives the vendored
+//! deterministic PJRT stub over temp HLO files.
+
+use std::sync::Mutex;
+
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::{CompressionConfig, Manifest};
+use adaspring::dispatch::{BackpressurePolicy, DispatchConfig, Placement, RateLimit};
+use adaspring::fleet::{run_fleet, run_fleet_dispatch, Archetype, FleetConfig, Scenario};
+use adaspring::platform::EnergyModel;
+use adaspring::runtime::{Executor, ShardedCache};
+use adaspring::serving::{InferenceMode, ServingLoop};
+
+/// Serializes the wall-clock-sensitive tests so they don't contend with
+/// each other inside the parallel test harness.
+static BENCH_LOCK: Mutex<()> = Mutex::new(());
+
+fn fleet_cfg(devices: usize, shards: usize, hours: f64) -> FleetConfig {
+    FleetConfig {
+        devices,
+        shards,
+        duration_s: hours * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+    }
+}
+
+#[test]
+fn passthrough_single_device_matches_serving_loop() {
+    // Acceptance: a dispatch-enabled single-device run under the
+    // passthrough config (window 0, Block, no rate limit) reproduces
+    // ServingLoop's counts, evolutions, and latency distribution.
+    let manifest = Manifest::synthetic();
+    let scenario = Archetype::CommuterPhone.scenario(); // device 0's archetype
+    let (fleet_seed, device_id) = (42u64, 0u64);
+    let duration_s = 4.0 * 3600.0;
+
+    let mut engine = AdaSpring::new(&manifest, "d3", &scenario.platform, false).unwrap();
+    let energy_j = {
+        let costs = engine
+            .evaluator
+            .cost_model()
+            .costs(&CompressionConfig::identity(engine.task().n_layers()));
+        EnergyModel::new(&scenario.platform)
+            .inference_energy(&costs, scenario.platform.l2_cache_bytes)
+            .total_j()
+    };
+    let mut sim = scenario.simulator(Scenario::context_seed(fleet_seed, device_id));
+    let events = scenario
+        .trace(Scenario::trace_seed(fleet_seed, device_id))
+        .sample(duration_s);
+    let mut looper = ServingLoop {
+        engine: &mut engine,
+        sim: &mut sim,
+        trigger: scenario.make_trigger(),
+        energy_per_inference_j: energy_j,
+        inference: InferenceMode::Modeled,
+    };
+    let loop_report = looper.run(&events, duration_s, |_| Vec::new()).unwrap();
+
+    let cfg = FleetConfig { duration_s, ..fleet_cfg(1, 1, 0.0) };
+    let report = run_fleet_dispatch(&manifest, &cfg, &DispatchConfig::passthrough()).unwrap();
+
+    assert_eq!(report.inferences, loop_report.inferences);
+    assert_eq!(report.dropped, loop_report.dropped);
+    assert_eq!(report.shed, 0, "passthrough never sheds");
+    assert_eq!(report.evolutions, loop_report.evolutions.len());
+    // Same latency samples (batch size 1, wait 0) → same distribution.
+    let p = loop_report.inference_latency_us.percentiles(&[50.0, 99.0]);
+    assert!((report.latency.p50_ms - p[0] / 1e3).abs() < 1e-9);
+    assert!((report.latency.p99_ms - p[1] / 1e3).abs() < 1e-9);
+    assert!(
+        (report.latency.mean_ms - loop_report.inference_latency_us.mean() / 1e3).abs() < 1e-6
+    );
+    let d = report.dispatch.expect("dispatch runs carry dispatch stats");
+    assert_eq!(d.admission.submitted as usize, report.inferences + report.dropped);
+    assert_eq!(d.batches.size_max.max(1), 1, "window 0 never batches");
+}
+
+#[test]
+fn passthrough_fleet_matches_direct_path_counts() {
+    // The dispatcher at window 0 is semantically the direct fleet path.
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(12, 3, 2.0);
+    let direct = run_fleet(&manifest, &cfg).unwrap();
+    let dispatched =
+        run_fleet_dispatch(&manifest, &cfg, &DispatchConfig::passthrough()).unwrap();
+    assert_eq!(dispatched.inferences, direct.inferences);
+    assert_eq!(dispatched.dropped, direct.dropped);
+    assert_eq!(dispatched.evolutions, direct.evolutions);
+    assert_eq!(dispatched.shed, 0);
+    assert!((dispatched.latency.p50_ms - direct.latency.p50_ms).abs() < 1e-12);
+    assert!((dispatched.latency.mean_ms - direct.latency.mean_ms).abs() < 1e-6);
+}
+
+#[test]
+fn dispatch_runs_replay_bit_identically() {
+    // Stealing + batching on: simulated results must not depend on
+    // thread interleaving (the §8 factorization).
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(24, 4, 2.0);
+    let dcfg = DispatchConfig { batch_window_s: 0.25, stealing: true, ..Default::default() };
+    let a = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+    let b = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+    assert_eq!(a.inferences, b.inferences);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.evolutions, b.evolutions);
+    assert_eq!(a.latency.p50_ms, b.latency.p50_ms, "deterministic percentile");
+    assert_eq!(a.latency.mean_ms, b.latency.mean_ms, "deterministic aggregation order");
+    let (da, db) = (a.dispatch.unwrap(), b.dispatch.unwrap());
+    assert_eq!(da.batches.histogram, db.batches.histogram);
+    assert_eq!(da.admission.depth_max, db.admission.depth_max);
+}
+
+#[test]
+fn work_stealing_rebalances_a_skewed_fleet() {
+    // Acceptance: on a packed (worst-case diurnal-peak) placement, work
+    // stealing moves sessions off the loaded worker and cuts wall-clock
+    // versus static partitioning, without changing simulated results.
+    let _guard = BENCH_LOCK.lock().unwrap();
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(48, 4, 8.0);
+    let dcfg_static = DispatchConfig {
+        batch_window_s: 0.0,
+        placement: Placement::Packed,
+        stealing: false,
+        ..Default::default()
+    };
+    let dcfg_steal = DispatchConfig { stealing: true, ..dcfg_static.clone() };
+    let r_static = run_fleet_dispatch(&manifest, &cfg, &dcfg_static).unwrap();
+    let r_steal = run_fleet_dispatch(&manifest, &cfg, &dcfg_steal).unwrap();
+
+    // Stealing changes scheduling, never simulated results.
+    assert_eq!(r_steal.inferences, r_static.inferences);
+    assert_eq!(r_steal.evolutions, r_static.evolutions);
+    assert_eq!(r_steal.latency.p50_ms, r_static.latency.p50_ms);
+    assert_eq!(r_steal.latency.mean_ms, r_static.latency.mean_ms);
+
+    let d_static = r_static.dispatch.as_ref().unwrap();
+    let d_steal = r_steal.dispatch.as_ref().unwrap();
+    assert_eq!(d_static.steals, 0, "static partitioning never steals");
+    assert!(d_steal.steals >= 1, "a packed fleet must trigger steals");
+    assert!(d_steal.sessions_stolen >= 1);
+    // The packed worker sheds a big share of its stepping load...
+    assert!(
+        d_steal.max_busy_ms() < d_static.max_busy_ms() * 0.9,
+        "busiest worker: steal {:.1} ms vs static {:.1} ms",
+        d_steal.max_busy_ms(),
+        d_static.max_busy_ms()
+    );
+    // ...which is a wall-clock win whenever real parallelism exists.
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) >= 2 {
+        assert!(
+            r_steal.wall_ms < r_static.wall_ms,
+            "stealing must cut wall-clock on a skewed fleet: {:.1} ms vs {:.1} ms",
+            r_steal.wall_ms,
+            r_static.wall_ms
+        );
+    }
+}
+
+#[test]
+fn batching_reduces_modeled_per_inference_latency() {
+    // Acceptance: batch window > 0 groups compatible requests and the
+    // sublinear platform curve cuts modeled per-inference latency
+    // versus window = 0, without changing what got served.
+    let _guard = BENCH_LOCK.lock().unwrap();
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(24, 1, 2.0);
+    let unbatched = DispatchConfig {
+        batch_window_s: 0.0,
+        stealing: false,
+        ..Default::default()
+    };
+    let batched = DispatchConfig { batch_window_s: 60.0, ..unbatched.clone() };
+    let r0 = run_fleet_dispatch(&manifest, &cfg, &unbatched).unwrap();
+    let rb = run_fleet_dispatch(&manifest, &cfg, &batched).unwrap();
+
+    assert_eq!(rb.inferences, r0.inferences, "batching must not change what is served");
+    assert_eq!(rb.evolutions, r0.evolutions);
+    assert_eq!((rb.shed, r0.shed), (0, 0), "ample queue, nothing sheds");
+    assert!(
+        rb.latency.mean_ms < r0.latency.mean_ms,
+        "batched mean {:.3} ms must beat unbatched {:.3} ms",
+        rb.latency.mean_ms,
+        r0.latency.mean_ms
+    );
+
+    let d = rb.dispatch.unwrap();
+    assert!(d.batches.size_max > 1, "a busy shard must form real batches");
+    assert_eq!(d.batches.served as usize, rb.inferences);
+    assert_eq!(d.batches.histogram.values().sum::<u64>(), d.batches.batches);
+    assert!(
+        d.batches.histogram.keys().all(|&k| k <= d.batches.size_max),
+        "histogram keys bounded by max size"
+    );
+    // Queue waits are bounded by the window.
+    assert!(d.wait_us.max() <= 60.0 * 1e6 + 1.0);
+    assert!(d.wait_us.max() > 0.0, "windowed flushes imply nonzero waits");
+}
+
+#[test]
+fn shed_newest_sheds_under_an_undersized_queue() {
+    // Acceptance: an undersized admission queue with ShedNewest sheds a
+    // nonzero number of diurnal-peak requests.
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(24, 1, 2.0);
+    let tight = DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 60.0,
+        stealing: false,
+        ..Default::default()
+    };
+    let ample = DispatchConfig { queue_capacity: 100_000, ..tight.clone() };
+    let r_tight = run_fleet_dispatch(&manifest, &cfg, &tight).unwrap();
+    let r_ample = run_fleet_dispatch(&manifest, &cfg, &ample).unwrap();
+
+    assert!(r_tight.shed > 0, "undersized queue must shed");
+    assert_eq!(r_ample.shed, 0, "ample queue must not");
+    assert!(r_tight.inferences < r_ample.inferences);
+
+    let d = r_tight.dispatch.unwrap();
+    assert!(d.admission.shed_queue_full > 0);
+    assert_eq!(d.admission.shed_total() as usize, r_tight.shed);
+    assert_eq!(
+        d.admission.submitted as usize,
+        r_tight.inferences + r_tight.dropped + r_tight.shed,
+        "every event is admitted+served, admitted+dropped, or shed"
+    );
+    assert!(
+        d.admission.depth_max <= 4,
+        "ShedNewest keeps the per-window queue bounded (depth {})",
+        d.admission.depth_max
+    );
+}
+
+#[test]
+fn archetype_rate_limiter_sheds_at_the_source() {
+    let manifest = Manifest::synthetic();
+    let cfg = fleet_cfg(12, 2, 1.0);
+    let dcfg = DispatchConfig {
+        rate_limit: Some(RateLimit { rate_per_s: 0.002, burst: 1.0 }),
+        batch_window_s: 0.25,
+        stealing: false,
+        ..Default::default()
+    };
+    let r = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+    let d = r.dispatch.unwrap();
+    assert!(
+        d.admission.shed_rate_limited > 0,
+        "a 0.002/s bucket must shed diurnal traffic (stats: {:?})",
+        d.admission
+    );
+    assert_eq!(d.admission.shed_total() as usize, r.shed);
+    // Shed events never drain energy: the report stays self-consistent.
+    assert_eq!(d.admission.admitted as usize, r.inferences + r.dropped);
+}
+
+#[test]
+fn modeled_batch_pricing_matches_the_batcher_factor() {
+    // The engine/evaluator batched-latency API and the batch post-pass
+    // must price a batch of k identically (both are defined as
+    // solo × Platform::batch_per_inference_factor(k)); this pins them
+    // together so a recalibration of one can't silently diverge.
+    let manifest = Manifest::synthetic();
+    let platform = adaspring::platform::Platform::raspberry_pi_4b();
+    let mut engine = AdaSpring::new(&manifest, "d3", &platform, false).unwrap();
+    let c = adaspring::coordinator::eval::Constraints::from_battery(0.8, 0.05, 30.0, 2 << 20);
+    engine.evolve(&c).unwrap();
+    let budget = 512 * 1024;
+    let solo = engine.modeled_active_latency_ms(budget).unwrap();
+    assert!(solo > 0.0);
+    for k in [1usize, 2, 8, 16] {
+        let batched = engine.modeled_active_batched_latency_ms(budget, k).unwrap();
+        let expected = solo * platform.batch_per_inference_factor(k);
+        assert!(
+            (batched - expected).abs() < 1e-12,
+            "engine batch pricing must match the batcher factor (k={k})"
+        );
+    }
+}
+
+#[test]
+fn executor_infer_batch_runs_compatible_requests() {
+    // PJRT side of the batch path, over the vendored deterministic stub.
+    let dir = std::env::temp_dir().join(format!("adaspring-dispatch-{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("d3")).unwrap();
+    let hlo = "HloModule m\n\nENTRY main {\n  p = f32[1,1024] parameter(0)\n  ROOT t = (f32[1,9]) tuple(p)\n}\n";
+    let mut manifest = Manifest::synthetic();
+    for v in &manifest.tasks["d3"].variants {
+        std::fs::write(dir.join(&v.hlo), hlo).unwrap();
+    }
+    manifest.root = dir.clone();
+
+    let task = manifest.task("d3").unwrap().clone();
+    let exec = Executor::with_cache(&task, std::sync::Arc::new(ShardedCache::new(4))).unwrap();
+    let loaded = exec.load(&task, task.backbone_variant(), &manifest.root).unwrap();
+
+    let inputs: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32 * 0.5; 1024]).collect();
+    let (outputs, stats) = exec.infer_batch(&loaded, &inputs).unwrap();
+    assert_eq!(outputs.len(), 3);
+    assert_eq!(stats.batch_size, 3);
+    assert!(outputs.iter().all(|o| o.len() == 9));
+    // The stub is input-deterministic: same input, same logits.
+    let (again, _) = exec.infer_batch(&loaded, &inputs).unwrap();
+    assert_eq!(outputs, again);
+    assert!(stats.per_inference_us() >= 0.0);
+    // Empty batches are a no-op, not an error.
+    let (none, zstats) = exec.infer_batch(&loaded, &[]).unwrap();
+    assert!(none.is_empty());
+    assert_eq!(zstats.batch_size, 0);
+    assert_eq!(zstats.per_inference_us(), 0.0);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

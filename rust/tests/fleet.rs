@@ -229,6 +229,66 @@ fn fleet_run_reuses_variants_across_sessions() {
     }
 }
 
+/// Every number in a report must be finite — degenerate fleets may be
+/// empty but never NaN/inf.
+fn assert_finite_json(j: &adaspring::util::json::Json) {
+    use adaspring::util::json::Json;
+    match j {
+        Json::Num(n) => assert!(n.is_finite(), "non-finite number in report JSON"),
+        Json::Arr(a) => a.iter().for_each(assert_finite_json),
+        Json::Obj(m) => m.values().for_each(assert_finite_json),
+        _ => {}
+    }
+}
+
+#[test]
+fn degenerate_fleets_produce_wellformed_empty_reports() {
+    // Regression: devices 0, shards > devices, duration 0, stripes 0 —
+    // both fleet paths must return clean empty reports (no NaN
+    // percentiles, no panicking shard workers).
+    let manifest = Manifest::synthetic();
+    for (devices, shards, duration_s) in
+        [(0usize, 4usize, 3600.0f64), (3, 8, 1800.0), (6, 2, 0.0), (0, 0, 0.0)]
+    {
+        let cfg = FleetConfig {
+            devices,
+            shards,
+            duration_s,
+            seed: 5,
+            task: "d3".to_string(),
+            cache_stripes: 0,
+        };
+        let label = format!("devices={devices} shards={shards} duration={duration_s}");
+        let r = run_fleet(&manifest, &cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_finite_json(&r.to_json());
+        assert_eq!(r.devices, devices, "{label}");
+        if devices == 0 {
+            assert!(r.per_archetype.is_empty(), "{label}");
+        } else {
+            assert_eq!(r.per_archetype.iter().map(|a| a.devices).sum::<usize>(), devices);
+        }
+        if devices == 0 || duration_s == 0.0 {
+            assert_eq!((r.inferences, r.evolutions, r.dropped), (0, 0, 0), "{label}");
+            assert_eq!(r.latency.p50_ms, 0.0, "{label}");
+            assert_eq!(r.energy_j, 0.0, "{label}");
+        }
+        // The dispatch path handles the same degenerate shapes, and its
+        // counts agree with the direct path.
+        let rd = adaspring::fleet::run_fleet_dispatch(
+            &manifest,
+            &cfg,
+            &adaspring::dispatch::DispatchConfig::default(),
+        )
+        .unwrap_or_else(|e| panic!("{label} (dispatch): {e}"));
+        assert_finite_json(&rd.to_json());
+        assert_eq!(rd.inferences, r.inferences, "{label}");
+        assert_eq!(rd.evolutions, r.evolutions, "{label}");
+        assert_eq!(rd.shed, 0, "{label}: default queue never sheds");
+        let d = rd.dispatch.expect("dispatch block present");
+        assert!(d.workers >= 1 && d.workers <= shards.max(1), "{label}");
+    }
+}
+
 #[test]
 fn fleet_json_report_has_the_documented_shape() {
     let manifest = Manifest::synthetic();
