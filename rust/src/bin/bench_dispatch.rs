@@ -34,19 +34,21 @@ use adaspring::util::json::Json;
 use adaspring::util::write_json_out;
 
 const ALLOWED: &[&str] = &[
-    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "window", "capacity",
-    "policy", "rate", "burst", "max-batch", "placement", "no-steal", "json-out", "sweep", "csv",
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "window",
+    "capacity", "policy", "rate", "burst", "max-batch", "placement", "no-steal", "json-out",
+    "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal"];
 
 const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H] [--seed N] \
-                     [--task NAME] [--manifest PATH] [--stripes N] [--window SECS] \
-                     [--capacity N] [--policy block|shed-newest|shed-oldest|deadline:SECS] \
+                     [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
+                     [--window SECS] [--capacity N] \
+                     [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--rate PER_S --burst N] [--max-batch N] [--placement modulo|packed] \
                      [--no-steal] [--json-out PATH] [--sweep] [--csv]";
 
-fn fleet_config(args: &Args) -> FleetConfig {
+fn fleet_config(args: &Args) -> Result<FleetConfig> {
     // Dispatch-bench defaults: a smaller, shorter fleet than the raw
     // fleet bench — the grid multiplies runs.
     let defaults =
@@ -82,13 +84,13 @@ fn dispatch_config(args: &Args) -> Result<DispatchConfig> {
 fn main() -> Result<()> {
     let args = Args::from_env();
     args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_or_synthetic(args.get_or("manifest", "artifacts/manifest.json"));
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
 
     if args.flag("sweep") {
         return sweep(&args, &manifest);
     }
 
-    let cfg = fleet_config(&args);
+    let cfg = fleet_config(&args)?;
     let dcfg = dispatch_config(&args)?;
     println!(
         "# Dispatch — {} devices x {:.1} h over {} shards (policy {}, window {} s, capacity {})\n",
@@ -175,7 +177,7 @@ fn print_summary(r: &FleetReport) {
 /// Policy × batch-window × shard-count sweep under a tight admission
 /// queue — the grid behind the subsystem's headline numbers.
 fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
-    let base = fleet_config(args);
+    let base = fleet_config(args)?;
     let base_dispatch = dispatch_config(args)?;
     // Undersized by default so the policies visibly diverge.
     let capacity = args.get_usize("capacity", 4);

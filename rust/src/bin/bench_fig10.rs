@@ -6,10 +6,15 @@
 //!   (d) aggregation-coefficient (µ1/µ2) sweep for Eq. 2 vs modelled energy.
 //!
 //! Usage: cargo run --release --bin bench_fig10 [-- --part a|b|c|d|all]
+//!            [--task NAME] [--manifest PATH] [--json-out PATH] [--csv]
+//!
+//! Unknown flags are rejected with this usage; runs out of the box on
+//! the synthetic palette when no artifact manifest exists.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use adaspring::coordinator::encoding::{binary_space_size, progressive_space_size};
 use adaspring::coordinator::engine::AdaSpring;
@@ -20,16 +25,28 @@ use adaspring::coordinator::{CompressionConfig, Manifest};
 use adaspring::metrics::{f1, f2, f3, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
+use adaspring::util::json::Json;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &["part", "task", "manifest", "json-out", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const USAGE: &str = "usage: bench_fig10 [--part a|b|c|d|all] [--task NAME] [--manifest PATH] \
+                     [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
     let part = args.get_or("part", "all").to_string();
     let platform = Platform::raspberry_pi_4b();
     let default_task = {
         let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
         names.sort();
-        if names.contains(&"d3".to_string()) { "d3".to_string() } else { names[0].clone() }
+        match names.iter().position(|n| n == "d3") {
+            Some(i) => names.swap_remove(i),
+            None if names.is_empty() => bail!("manifest contains no tasks"),
+            None => names.swap_remove(0),
+        }
     };
     let task_name = args.get_or("task", &default_task).to_string();
     let task_name = task_name.as_str();
@@ -37,8 +54,9 @@ fn main() -> Result<()> {
     let task = engine.task().clone();
     let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
 
+    let mut parts: BTreeMap<String, Json> = BTreeMap::new();
     if part == "a" || part == "all" {
-        part_a(&engine, &c)?;
+        parts.insert("part_a".into(), part_a(&engine, &c)?.to_json());
     }
     if part == "b" || part == "all" {
         // The scheme differences only show under pressure: tight storage,
@@ -49,19 +67,20 @@ fn main() -> Result<()> {
             task.latency_budget_ms * 0.4,
             (1.1 * 1024.0 * 1024.0) as u64,
         );
-        part_b(&manifest, task_name, &platform, &tight)?;
+        parts.insert("part_b".into(), part_b(&manifest, task_name, &platform, &tight)?.to_json());
     }
     if part == "c" || part == "all" {
-        part_c(&manifest, task_name, &platform, &c)?;
+        parts.insert("part_c".into(), part_c(&manifest, task_name, &platform, &c)?.to_json());
     }
     if part == "d" || part == "all" {
-        part_d(&engine, &c)?;
+        parts.insert("part_d".into(), part_d(&engine, &c)?.to_json());
     }
+    write_json_out(&args, &Json::Obj(parts))?;
     Ok(())
 }
 
 /// (a) stand-alone vs blind combination vs hardware-efficiency grouping.
-fn part_a(engine: &AdaSpring, c: &Constraints) -> Result<()> {
+fn part_a(engine: &AdaSpring, c: &Constraints) -> Result<Table> {
     println!("## Fig. 10(a) — hardware-efficiency-guided combination\n");
     let eval = &engine.evaluator;
     let n = engine.task().n_layers();
@@ -116,11 +135,11 @@ fn part_a(engine: &AdaSpring, c: &Constraints) -> Result<()> {
         ]);
     }
     println!("{}", rows.to_markdown());
-    Ok(())
+    Ok(rows)
 }
 
 /// (b) search-scheme ablation: locally greedy / inherit / inherit+mutation.
-fn part_b(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<()> {
+fn part_b(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<Table> {
     println!("## Fig. 10(b) — layer-dependent inheriting and mutation\n");
     let mut rows = Table::new(&["Scheme", "A loss", "E", "score (λ-weighted)", "feasible", "Sp (KB)"]);
     let cases = [
@@ -143,11 +162,11 @@ fn part_b(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<()>
         ]);
     }
     println!("{}", rows.to_markdown());
-    Ok(())
+    Ok(rows)
 }
 
 /// (c) encoding scheme: classic binary vs progressive shortest.
-fn part_c(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<()> {
+fn part_c(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<Table> {
     println!("## Fig. 10(c) — progressive shortest encoding\n");
     let engine = AdaSpring::new(m, task, p, false)?;
     let eval = &engine.evaluator;
@@ -217,11 +236,11 @@ fn part_c(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<()>
         count as f64 / res.candidates_evaluated as f64,
         binary_us as f64 / prog_us.max(1) as f64
     );
-    Ok(())
+    Ok(rows)
 }
 
 /// (d) µ1/µ2 sweep: correlation of Eq.-2 E with modelled energy.
-fn part_d(engine: &AdaSpring, c: &Constraints) -> Result<()> {
+fn part_d(engine: &AdaSpring, c: &Constraints) -> Result<Table> {
     println!("## Fig. 10(d) — aggregation coefficients µ1/µ2\n");
     let eval = &engine.evaluator;
     let task = engine.task();
@@ -248,7 +267,7 @@ fn part_d(engine: &AdaSpring, c: &Constraints) -> Result<()> {
         "paper devices calibrate to (0.4, 0.6); this substrate calibrates to (0.8, 0.2) — \
          see DESIGN.md §µ-calibration for why the optimum flips."
     );
-    Ok(())
+    Ok(rows)
 }
 
 /// Spearman rank correlation between efficiency and inverse energy.

@@ -4,7 +4,12 @@
 //!
 //! Emits the normalized (log) series A, E, T, C, Sp, Sa per task.
 //!
-//! Usage: cargo run --release --bin bench_fig8 [-- --csv]
+//! Usage: cargo run --release --bin bench_fig8 [-- --manifest PATH]
+//!            [--json-out PATH] [--csv]
+//!
+//! Unknown flags are rejected with this usage (shared strict-CLI
+//! contract of the bench binaries); runs out of the box on the
+//! synthetic palette when no artifact manifest exists.
 
 use anyhow::Result;
 
@@ -15,10 +20,17 @@ use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f2, Series, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &["manifest", "json-out", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const USAGE: &str =
+    "usage: bench_fig8 [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
     let platform = Platform::raspberry_pi_4b();
     let moments = [0.85, 0.75, 0.62, 0.52, 0.38];
     println!("# Fig. 8 — AdaSpring across tasks on {} (log-normalized)\n", platform.name);
@@ -69,5 +81,6 @@ fn main() -> Result<()> {
     } else {
         println!("{}", out.to_markdown());
     }
+    write_json_out(&args, &out.to_json())?;
     Ok(())
 }

@@ -3,7 +3,11 @@
 //! Table 4 (9:00 → 12:00: battery {86,78,72,61}%, cache {2,1.6,1.5,1.7} MB,
 //! inference demand {2,1,2,1}).
 //!
-//! Usage: cargo run --release --bin bench_fig9 [-- --csv]
+//! Usage: cargo run --release --bin bench_fig9 [-- --task d3]
+//!            [--manifest PATH] [--json-out PATH] [--csv]
+//!
+//! Unknown flags are rejected with this usage; runs out of the box on
+//! the synthetic palette when no artifact manifest exists.
 
 use anyhow::Result;
 
@@ -13,6 +17,12 @@ use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &["task", "manifest", "json-out", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const USAGE: &str =
+    "usage: bench_fig9 [--task NAME] [--manifest PATH] [--json-out PATH] [--csv]";
 
 const MOMENTS: [(&str, f64, f64, u32); 4] = [
     ("9:00am", 0.86, 2.0, 2),
@@ -23,7 +33,8 @@ const MOMENTS: [(&str, f64, f64, u32); 4] = [
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
     let task_name = args.get_or("task", "d3");
     println!("# Fig. 9 / Table 4 — {} across platforms under dynamic context\n", task_name);
 
@@ -63,5 +74,6 @@ fn main() -> Result<()> {
     } else {
         println!("{}", out.to_markdown());
     }
+    write_json_out(&args, &out.to_json())?;
     Ok(())
 }

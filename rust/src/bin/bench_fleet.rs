@@ -30,30 +30,30 @@ use adaspring::util::json::Json;
 use adaspring::util::write_json_out;
 
 const ALLOWED: &[&str] = &[
-    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "json-out", "sweep",
-    "csv",
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "json-out",
+    "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv"];
 
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
-                     [--task NAME] [--manifest PATH] [--stripes N] [--json-out PATH] [--sweep] \
-                     [--csv]";
+                     [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
+                     [--json-out PATH] [--sweep] [--csv]";
 
-fn config_from(args: &Args) -> FleetConfig {
+fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())
 }
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_or_synthetic(args.get_or("manifest", "artifacts/manifest.json"));
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
 
     if args.flag("sweep") {
         return sweep(&args, &manifest);
     }
 
-    let cfg = config_from(&args);
+    let cfg = config_from(&args)?;
     println!(
         "# Fleet serving — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
         cfg.devices,
@@ -101,7 +101,7 @@ fn print_summary(r: &FleetReport) {
 /// Fleet-size × shard-count sweep: the scaling table behind the fleet
 /// subsystem's headline (cross-device cache reuse grows with fleet size).
 fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
-    let base = config_from(args);
+    let base = config_from(args)?;
     let device_points = [10usize, 100, 1000];
     let shard_points = [1usize, 2, 4, 8];
     println!(

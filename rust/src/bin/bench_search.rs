@@ -1,0 +1,328 @@
+//! Runtime3C search-throughput bench + fleet plan-cache sweep
+//! (DESIGN.md §9): the perf trajectory of the repo's hottest path.
+//!
+//! Part 1 — microbench: searches/sec, µs/search, and candidates/sec for
+//! the arena-backed incremental search (the production path) and the
+//! full-evaluation oracle (`--full-eval` baseline mode), over a
+//! platform × battery × cache context grid.  Both paths appear in one
+//! report by default so the speedup is always measured; `--full-eval`
+//! restricts the run to the oracle alone.
+//!
+//! Part 2 — fleet plan-cache sweep: the same fleet run under
+//! `PlanMode::Banded` (cache-disabled control) and `PlanMode::Shared`,
+//! reporting the plan-cache hit rate and asserting per-device results
+//! are unchanged (`parity_with_banded`).
+//!
+//! Usage:
+//!   cargo run --release --bin bench_search -- [--iters 3] [--task d3]
+//!       [--manifest path] [--devices 36] [--shards 4] [--hours 1]
+//!       [--seed 42] [--full-eval] [--check-floor path]
+//!       [--json-out path] [--csv]
+//!
+//! Unknown flags are rejected with this usage.  `--json-out` writes the
+//! full JSON report (schema: README.md "Search bench schema") — CI emits
+//! it as `BENCH_search.json` and `--check-floor` fails the run when
+//! incremental searches/sec drop more than 2× below the committed
+//! baseline floor (`rust/search_floor.json`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use adaspring::coordinator::accuracy::AccuracyModel;
+use adaspring::coordinator::costmodel::CostModel;
+use adaspring::coordinator::eval::{Constraints, Evaluator};
+use adaspring::coordinator::search::{Mutator, Runtime3C};
+use adaspring::coordinator::Manifest;
+use adaspring::fleet::{run_fleet, FleetConfig, FleetReport, PlanMode};
+use adaspring::metrics::{Series, Table};
+use adaspring::platform::Platform;
+use adaspring::util::cli::Args;
+use adaspring::util::json::Json;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &[
+    "iters", "task", "manifest", "devices", "shards", "hours", "seed", "full-eval",
+    "check-floor", "json-out", "csv",
+];
+
+const BOOLEAN_FLAGS: &[&str] = &["full-eval", "csv"];
+
+const USAGE: &str = "usage: bench_search [--iters N] [--task NAME] [--manifest PATH] \
+                     [--devices N] [--shards N] [--hours H] [--seed N] [--full-eval] \
+                     [--check-floor PATH] [--json-out PATH] [--csv]";
+
+/// Battery moments of the context grid (paper Fig. 8 band + low tail).
+const BATTERY_MOMENTS: [f64; 5] = [0.9, 0.7, 0.5, 0.3, 0.15];
+/// Available-cache moments, MB ((2 − σ) MB band of §6.4).
+const CACHE_MB: [f64; 4] = [2.0, 1.5, 1.0, 0.6];
+
+/// One measured search mode.
+struct ModeStats {
+    searches: usize,
+    candidates: usize,
+    secs: f64,
+    us: Series,
+}
+
+impl ModeStats {
+    fn searches_per_sec(&self) -> f64 {
+        self.searches as f64 / self.secs.max(1e-9)
+    }
+
+    fn candidates_per_sec(&self) -> f64 {
+        self.candidates as f64 / self.secs.max(1e-9)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("searches".into(), Json::Num(self.searches as f64));
+        m.insert("searches_per_sec".into(), Json::Num(self.searches_per_sec()));
+        m.insert("us_per_search_p50".into(), Json::Num(self.us.percentile(50.0)));
+        m.insert("candidates".into(), Json::Num(self.candidates as f64));
+        m.insert("candidates_per_sec".into(), Json::Num(self.candidates_per_sec()));
+        Json::Obj(m)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let task_name = {
+        let default = default_task(&manifest, "d3")?;
+        args.get_or("task", &default).to_string()
+    };
+    let iters = args.get_usize("iters", 3);
+    let full_only = args.flag("full-eval");
+
+    // One evaluator + searcher per platform, over the battery × cache
+    // constraint grid.
+    let task = manifest.task(&task_name)?.clone();
+    let (thr, budget_ms) = (task.acc_loss_threshold, task.latency_budget_ms);
+    let mut setups: Vec<(Evaluator, Runtime3C, Vec<Constraints>)> = Vec::new();
+    for platform in Platform::extended() {
+        let cm = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+        let evaluator = Evaluator::new(cm, AccuracyModel::fit(&task), &platform);
+        let searcher = Runtime3C::new(Mutator::from_task(&task));
+        let contexts: Vec<Constraints> = BATTERY_MOMENTS
+            .iter()
+            .flat_map(|&b| {
+                CACHE_MB.iter().map(move |&mb| {
+                    Constraints::from_battery(b, thr, budget_ms, (mb * 1024.0 * 1024.0) as u64)
+                })
+            })
+            .collect();
+        setups.push((evaluator, searcher, contexts));
+    }
+    let contexts_total: usize = setups.iter().map(|(_, _, c)| c.len()).sum();
+
+    println!(
+        "# Search bench — task {}, {} platforms x {} contexts x {} iters\n",
+        task_name,
+        setups.len(),
+        contexts_total / setups.len().max(1),
+        iters
+    );
+
+    // Default: measure both paths so one report carries the speedup;
+    // --full-eval restricts the run to the oracle baseline alone.
+    let incremental = if full_only { None } else { Some(measure(&setups, iters, false)) };
+    let full = Some(measure(&setups, iters, true));
+
+    let mut table = Table::new(&[
+        "mode", "searches", "searches/s", "p50 µs/search", "candidates", "candidates/s",
+    ]);
+    let mut row = |name: &str, m: &ModeStats| {
+        table.row(vec![
+            name.to_string(),
+            m.searches.to_string(),
+            format!("{:.0}", m.searches_per_sec()),
+            format!("{:.1}", m.us.percentile(50.0)),
+            m.candidates.to_string(),
+            format!("{:.0}", m.candidates_per_sec()),
+        ]);
+    };
+    if let Some(m) = &incremental {
+        row("incremental (arena)", m);
+    }
+    if let Some(m) = &full {
+        row("full-eval (oracle)", m);
+    }
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+
+    let mut search_json = BTreeMap::new();
+    search_json.insert("contexts".into(), Json::Num(contexts_total as f64));
+    search_json.insert("iters".into(), Json::Num(iters as f64));
+    if let Some(m) = &incremental {
+        search_json.insert("incremental".into(), m.to_json());
+    }
+    if let Some(m) = &full {
+        search_json.insert("full".into(), m.to_json());
+    }
+    if let (Some(inc), Some(f)) = (&incremental, &full) {
+        let speedup = inc.candidates_per_sec() / f.candidates_per_sec().max(1e-9);
+        println!("speedup: {speedup:.1}x candidates/sec over the full-eval baseline\n");
+        search_json.insert("speedup_candidates_per_sec".into(), Json::Num(speedup));
+    }
+
+    // Part 2: fleet plan-cache sweep (Shared vs the Banded control).
+    let plan_json = plan_sweep(&args, &manifest, &task_name)?;
+
+    let mut root = BTreeMap::new();
+    root.insert("task".into(), Json::Str(task_name.clone()));
+    root.insert("search".into(), Json::Obj(search_json));
+    root.insert("plan_cache".into(), plan_json);
+    let json = Json::Obj(root);
+    println!("search JSON:\n{json}");
+    write_json_out(&args, &json)?;
+
+    if let Some(path) = args.get("check-floor") {
+        check_floor(path, incremental.as_ref())?;
+    }
+    Ok(())
+}
+
+/// Preferred task if present, else the first task by name; a manifest
+/// with zero tasks is a hard error (not a panic).
+fn default_task(manifest: &Manifest, preferred: &str) -> Result<String> {
+    let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
+    names.sort();
+    if names.iter().any(|n| n == preferred) {
+        return Ok(preferred.to_string());
+    }
+    match names.into_iter().next() {
+        Some(n) => Ok(n),
+        None => bail!("manifest contains no tasks"),
+    }
+}
+
+/// Time one search mode over the whole context grid.
+fn measure(
+    setups: &[(Evaluator, Runtime3C, Vec<Constraints>)],
+    iters: usize,
+    full: bool,
+) -> ModeStats {
+    let mut searches = 0usize;
+    let mut candidates = 0usize;
+    let mut us = Series::default();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for (eval, searcher, contexts) in setups {
+            for c in contexts {
+                let s0 = Instant::now();
+                let r = if full {
+                    searcher.search_full(eval, c)
+                } else {
+                    searcher.search(eval, c)
+                };
+                us.push(s0.elapsed().as_secs_f64() * 1e6);
+                searches += 1;
+                candidates += r.candidates_evaluated;
+            }
+        }
+    }
+    ModeStats { searches, candidates, secs: t0.elapsed().as_secs_f64(), us }
+}
+
+/// Run the fleet under Banded (control) and Shared plan modes; report
+/// the hit rate and whether per-device results are unchanged.
+fn plan_sweep(args: &Args, manifest: &Manifest, task_name: &str) -> Result<Json> {
+    let base = FleetConfig {
+        devices: args.get_usize("devices", 36),
+        shards: args.get_usize("shards", 4),
+        duration_s: args.get_f64("hours", 1.0) * 3600.0,
+        seed: args.get_usize("seed", 42) as u64,
+        task: task_name.to_string(),
+        cache_stripes: 16,
+        plan: PlanMode::Banded,
+    };
+    println!(
+        "# Plan-cache sweep — {} devices x {:.1} h over {} shards (banded control vs shared)\n",
+        base.devices,
+        base.duration_s / 3600.0,
+        base.shards
+    );
+    let banded = run_fleet(manifest, &base)?;
+    let shared = run_fleet(manifest, &FleetConfig { plan: PlanMode::Shared, ..base.clone() })?;
+    let parity = reports_match(&banded, &shared);
+
+    let stats = shared.plan.unwrap_or_default();
+    println!(
+        "plan cache: {} plans, {} hits / {} misses / {} stale (hit rate {:.1}%), \
+         per-device results {} the banded control\n",
+        stats.entries,
+        stats.hits,
+        stats.misses,
+        stats.stale,
+        stats.hit_rate() * 100.0,
+        if parity { "match" } else { "DIVERGE FROM" }
+    );
+
+    let mut m = BTreeMap::new();
+    m.insert("devices".into(), Json::Num(base.devices as f64));
+    m.insert("shards".into(), Json::Num(base.shards as f64));
+    m.insert("hours".into(), Json::Num(base.duration_s / 3600.0));
+    m.insert("plans".into(), Json::Num(stats.entries as f64));
+    m.insert("hits".into(), Json::Num(stats.hits as f64));
+    m.insert("misses".into(), Json::Num(stats.misses as f64));
+    m.insert("stale".into(), Json::Num(stats.stale as f64));
+    m.insert("hit_rate".into(), Json::Num(stats.hit_rate()));
+    m.insert("evolutions".into(), Json::Num(shared.evolutions as f64));
+    m.insert("parity_with_banded".into(), Json::Bool(parity));
+    Ok(Json::Obj(m))
+}
+
+/// Per-device-results parity between two fleet runs (deterministic
+/// simulation: equal means bit-equal).
+fn reports_match(a: &FleetReport, b: &FleetReport) -> bool {
+    let totals = a.inferences == b.inferences
+        && a.dropped == b.dropped
+        && a.evolutions == b.evolutions
+        && a.energy_j == b.energy_j
+        && a.latency.p50_ms == b.latency.p50_ms
+        && a.latency.p95_ms == b.latency.p95_ms
+        && a.latency.p99_ms == b.latency.p99_ms
+        && a.latency.mean_ms == b.latency.mean_ms
+        && a.latency.max_ms == b.latency.max_ms;
+    let archetypes = a.per_archetype.len() == b.per_archetype.len()
+        && a.per_archetype.iter().zip(b.per_archetype.iter()).all(|(x, y)| {
+            x.archetype == y.archetype
+                && x.inferences == y.inferences
+                && x.evolutions == y.evolutions
+                && x.battery_end_mean == y.battery_end_mean
+                && x.energy_j == y.energy_j
+        });
+    totals && archetypes
+}
+
+/// Fail (exit 1) when incremental searches/sec regress more than 2×
+/// below the committed baseline floor.
+fn check_floor(path: &str, incremental: Option<&ModeStats>) -> Result<()> {
+    let Some(m) = incremental else {
+        eprintln!("--check-floor requires the incremental mode (drop --full-eval)");
+        std::process::exit(2);
+    };
+    let floor = Json::parse(&std::fs::read_to_string(path)?)?
+        .get("searches_per_sec_floor")?
+        .as_f64()?;
+    let observed = m.searches_per_sec();
+    let fail_under = floor / 2.0;
+    if observed < fail_under {
+        eprintln!(
+            "FAIL: incremental search throughput {observed:.0}/s is more than 2x below \
+             the committed floor {floor:.0}/s (fail under {fail_under:.0}/s)"
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "floor check ok: {observed:.0} searches/s vs floor {floor:.0}/s \
+         (fails under {fail_under:.0}/s)"
+    );
+    Ok(())
+}

@@ -7,9 +7,14 @@
 //! substrate; the *shape* (who wins, by what factor) is the reproduction
 //! target — see EXPERIMENTS.md §Table 2.
 //!
-//! Usage: cargo run --release --bin bench_table2 [-- --task d1 --csv]
+//! Usage: cargo run --release --bin bench_table2 [-- --task d1]
+//!            [--manifest PATH] [--json-out PATH] [--csv]
+//!
+//! Unknown flags are rejected with this usage; runs out of the box on
+//! the synthetic palette when no artifact manifest exists (falling back
+//! to the first available task when d1 is absent).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use adaspring::coordinator::baselines::table2_rows;
 use adaspring::coordinator::engine::AdaSpring;
@@ -18,11 +23,27 @@ use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, pct, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &["task", "manifest", "json-out", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const USAGE: &str =
+    "usage: bench_table2 [--task NAME] [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
-    let task_name = args.get_or("task", "d1");
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let default_task = {
+        let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
+        names.sort();
+        match names.iter().position(|n| n == "d1") {
+            Some(i) => names.swap_remove(i),
+            None if names.is_empty() => bail!("manifest contains no tasks"),
+            None => names.swap_remove(0),
+        }
+    };
+    let task_name = args.get_or("task", &default_task);
     let platform = Platform::raspberry_pi_4b();
     let engine = AdaSpring::new(&manifest, task_name, &platform, false)?;
     let task = engine.task();
@@ -100,5 +121,6 @@ fn main() -> Result<()> {
         worst_hand_t / ours.latency_ms,
         worst_hand_e / ours.energy_mj
     );
+    write_json_out(&args, &out.to_json())?;
     Ok(())
 }

@@ -2,7 +2,11 @@
 //! compared against the MobileNet(-style depthwise-separable) compressed
 //! network — ratios for A-loss, E, T, C, Sp, Sa.
 //!
-//! Usage: cargo run --release --bin bench_table3
+//! Usage: cargo run --release --bin bench_table3 [-- --manifest PATH]
+//!            [--json-out PATH] [--csv]
+//!
+//! Unknown flags are rejected with this usage; runs out of the box on
+//! the synthetic palette when no artifact manifest exists.
 
 use anyhow::Result;
 
@@ -12,10 +16,16 @@ use adaspring::coordinator::{CompressionConfig, Manifest, Op};
 use adaspring::metrics::{f1, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &["manifest", "json-out", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const USAGE: &str = "usage: bench_table3 [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let manifest = Manifest::load(args.get_or("manifest", "artifacts/manifest.json"))?;
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
     let platform = Platform::raspberry_pi_4b();
     println!("# Table 3 — AdaSpring vs MobileNet-style depthwise compression, per task\n");
 
@@ -59,7 +69,14 @@ fn main() -> Result<()> {
             format!("{}x", f1(mbe.costs.acts as f64 / ours.costs.acts as f64)),
         ]);
     }
-    println!("{}", out.to_markdown());
-    println!("ratios >1x mean AdaSpring better (except A loss: negative = AdaSpring more accurate).");
+    if args.flag("csv") {
+        println!("{}", out.to_csv());
+    } else {
+        println!("{}", out.to_markdown());
+        println!(
+            "ratios >1x mean AdaSpring better (except A loss: negative = AdaSpring more accurate)."
+        );
+    }
+    write_json_out(&args, &out.to_json())?;
     Ok(())
 }

@@ -73,24 +73,48 @@ impl AccuracyModel {
         self.backbone_acc
     }
 
+    /// Additive per-(layer, op) loss term — the O(1) increment the arena
+    /// scorer folds when a candidate extends a prefix by one operator
+    /// (DESIGN.md §9-1).  0 for identity.
+    pub fn loss_coeff(&self, layer: usize, opid: u8) -> f64 {
+        if opid == 0 {
+            return 0.0;
+        }
+        self.coeffs[layer * NUM_OPS + opid as usize]
+    }
+
+    /// Measured palette override for an exact config, if any — the same
+    /// short-circuit [`Self::predict_loss`] applies.
+    pub fn exact_loss(&self, ids: &[u8]) -> Option<f64> {
+        self.exact.get(ids).map(|&acc| (self.backbone_acc - acc).max(0.0))
+    }
+
+    /// Fold the interaction penalty into an accumulated coefficient sum
+    /// and clamp — the shared final step of [`Self::predict_loss`] and the
+    /// arena's incremental accumulation, so both paths are bit-identical.
+    pub fn finalize_loss(&self, sum: f64, compressed: usize) -> f64 {
+        let mut loss = sum;
+        if compressed > 1 {
+            loss += self.gamma * (compressed - 1) as f64;
+        }
+        loss.clamp(0.0, 1.0)
+    }
+
     /// Predicted accuracy loss (≥ 0) of a config vs the backbone.
     pub fn predict_loss(&self, config: &CompressionConfig) -> f64 {
         let ids = config.ops_ids();
-        if let Some(&acc) = self.exact.get(&ids) {
-            return (self.backbone_acc - acc).max(0.0);
+        if let Some(loss) = self.exact_loss(&ids) {
+            return loss;
         }
-        let mut loss = 0.0;
+        let mut sum = 0.0;
         let mut k = 0usize;
         for (i, &opid) in ids.iter().enumerate().take(self.n_layers) {
             if opid != 0 {
-                loss += self.coeffs[i * NUM_OPS + opid as usize];
+                sum += self.loss_coeff(i, opid);
                 k += 1;
             }
         }
-        if k > 1 {
-            loss += self.gamma * (k - 1) as f64;
-        }
-        loss.clamp(0.0, 1.0)
+        self.finalize_loss(sum, k)
     }
 
     /// Predicted absolute accuracy of a config.

@@ -54,6 +54,17 @@ impl Costs {
     }
 }
 
+impl std::ops::Add for Costs {
+    type Output = Costs;
+    fn add(self, rhs: Costs) -> Costs {
+        Costs {
+            macs: self.macs + rhs.macs,
+            params: self.params + rhs.params,
+            acts: self.acts + rhs.acts,
+        }
+    }
+}
+
 /// Per-layer cost entry plus the layer's structural role.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerCosts {
@@ -62,6 +73,22 @@ pub struct LayerCosts {
     pub acts: u64,
     /// Operator actually applied (after legality fallback).
     pub op: Op,
+}
+
+/// Shape/cost accumulator after a prefix of conv layers (DESIGN.md §9-1).
+///
+/// Folding one layer into the state is O(1), which is what lets the
+/// Runtime3C arena score a candidate that extends an inherited prefix by
+/// one operator without re-walking the whole network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefixState {
+    /// Spatial size entering the next layer.
+    pub h: usize,
+    pub w: usize,
+    /// Channel count entering the next layer.
+    pub cin: usize,
+    /// Cost totals over the layers folded so far.
+    pub costs: Costs,
 }
 
 /// Cost model bound to one backbone + input shape.
@@ -91,99 +118,140 @@ impl CostModel {
         a.div_ceil(b)
     }
 
+    /// State before layer 0 (the input shape, zero accumulated cost).
+    pub fn initial_state(&self) -> PrefixState {
+        PrefixState {
+            h: self.input_hw.0,
+            w: self.input_hw.1,
+            cin: self.input_c,
+            costs: Costs { macs: 0, params: 0, acts: 0 },
+        }
+    }
+
+    /// Fold conv layer `i` under `op` into `state`: the layer's costs plus
+    /// the exit state (shape advanced, totals accumulated).  `op` must
+    /// already be canonical for layer `i` (legality fallback applied);
+    /// [`Self::layer_costs`] and the Runtime3C arena both feed it that way.
+    pub fn fold_layer(&self, state: &PrefixState, i: usize, op: Op) -> (LayerCosts, PrefixState) {
+        let k = self.backbone.kernel;
+        let (h, w, cin) = (state.h, state.w, state.cin);
+        let stride = self.backbone.strides[i];
+        let residual = self.backbone.residual[i];
+        // Residual layers downstream of pruning stay square in the kept
+        // subspace, so their effective cout equals the incoming cin.
+        let cout_full = self.backbone.widths[i];
+        let cout_base = if residual { cin } else { cout_full };
+        let ho = Self::ceil_div(h, stride);
+        let wo = Self::ceil_div(w, stride);
+        let lc = match op {
+            Op::Identity => LayerCosts {
+                macs: (ho * wo * k * k * cin * cout_base) as u64,
+                params: (k * k * cin * cout_base + cout_base) as u64,
+                acts: (ho * wo * cout_base) as u64,
+                op,
+            },
+            Op::Fire | Op::FireCh50 => {
+                let cout = if op == Op::FireCh50 {
+                    operators::kept_channels(cout_base, op.prune_ratio())
+                } else {
+                    cout_base
+                };
+                let s = operators::fire_squeeze_width(cin);
+                let e1 = operators::fire_e1_width(cout);
+                let e3 = cout - e1;
+                LayerCosts {
+                    // squeeze at input res, expands at output res
+                    macs: (h * w * cin * s + ho * wo * (s * e1 + 9 * s * e3)) as u64,
+                    params: (cin * s + 2 * s + s * e1 + e1 + 9 * s * e3 + e3) as u64,
+                    acts: (h * w * s + ho * wo * (e1 + e3)) as u64,
+                    op,
+                }
+            }
+            Op::Svd | Op::SvdCh50 => {
+                let cout = if op == Op::SvdCh50 {
+                    operators::kept_channels(cout_base, op.prune_ratio())
+                } else {
+                    cout_base
+                };
+                let r = operators::svd_rank(k, cin, cout);
+                LayerCosts {
+                    macs: (ho * wo * (k * k * cin * r + r * cout)) as u64,
+                    params: (k * k * cin * r + r * cout + cout) as u64,
+                    acts: (ho * wo * (r + cout)) as u64,
+                    op,
+                }
+            }
+            Op::Ch25 | Op::Ch50 | Op::Ch75 => {
+                let cout = operators::kept_channels(cout_base, op.prune_ratio());
+                LayerCosts {
+                    macs: (ho * wo * k * k * cin * cout) as u64,
+                    params: (k * k * cin * cout + cout) as u64,
+                    acts: (ho * wo * cout) as u64,
+                    op,
+                }
+            }
+            Op::Depth => LayerCosts { macs: 0, params: 0, acts: 0, op },
+        };
+        let mut next = *state;
+        next.costs.macs += lc.macs;
+        next.costs.params += lc.params;
+        next.costs.acts += lc.acts;
+        // Advance shape state (Depth-skip: h, w, cin pass through untouched).
+        if op != Op::Depth {
+            next.h = ho;
+            next.w = wo;
+            next.cin = if op.prunes_output() {
+                operators::kept_channels(cout_base, op.prune_ratio())
+            } else {
+                cout_base
+            };
+        }
+        (lc, next)
+    }
+
+    /// Head costs (GAP + dense) for the shape exiting the conv stack.
+    pub fn head_costs(&self, state: &PrefixState) -> LayerCosts {
+        LayerCosts {
+            macs: (state.h * state.w * state.cin + state.cin * self.num_classes) as u64,
+            params: (state.cin * self.num_classes + self.num_classes) as u64,
+            acts: self.num_classes as u64,
+            op: Op::Identity,
+        }
+    }
+
+    /// Cost contribution of identity-extending from layer `from` through
+    /// the head, given the entry `state`.  The arena memoizes this by
+    /// (from, h, w, cin), making whole-model candidate totals O(1)
+    /// amortized (DESIGN.md §9-1).
+    pub fn identity_tail(&self, state: &PrefixState, from: usize) -> Costs {
+        let mut s = *state;
+        s.costs = Costs { macs: 0, params: 0, acts: 0 };
+        for i in from..self.backbone.widths.len() {
+            let (_, next) = self.fold_layer(&s, i, Op::Identity);
+            s = next;
+        }
+        let head = self.head_costs(&s);
+        Costs {
+            macs: s.costs.macs + head.macs,
+            params: s.costs.params + head.params,
+            acts: s.costs.acts + head.acts,
+        }
+    }
+
     /// Per-layer costs (conv layers then head) under `config`.
     ///
     /// `config` is canonicalized internally so callers may pass raw search
     /// candidates.
     pub fn layer_costs(&self, config: &CompressionConfig) -> Vec<LayerCosts> {
         let cfg = config.canonicalize(&self.backbone);
-        let k = self.backbone.kernel;
-        let (mut h, mut w) = self.input_hw;
-        let mut cin = self.input_c;
+        let mut state = self.initial_state();
         let mut out = Vec::with_capacity(cfg.len() + 1);
         for i in 0..cfg.len() {
-            let stride = self.backbone.strides[i];
-            let residual = self.backbone.residual[i];
-            // Residual layers downstream of pruning stay square in the kept
-            // subspace, so their effective cout equals the incoming cin.
-            let cout_full = self.backbone.widths[i];
-            let cout_base = if residual { cin } else { cout_full };
-            let op = cfg.op(i);
-            let ho = Self::ceil_div(h, stride);
-            let wo = Self::ceil_div(w, stride);
-            let lc = match op {
-                Op::Identity => LayerCosts {
-                    macs: (ho * wo * k * k * cin * cout_base) as u64,
-                    params: (k * k * cin * cout_base + cout_base) as u64,
-                    acts: (ho * wo * cout_base) as u64,
-                    op,
-                },
-                Op::Fire | Op::FireCh50 => {
-                    let cout = if op == Op::FireCh50 {
-                        operators::kept_channels(cout_base, op.prune_ratio())
-                    } else {
-                        cout_base
-                    };
-                    let s = operators::fire_squeeze_width(cin);
-                    let e1 = operators::fire_e1_width(cout);
-                    let e3 = cout - e1;
-                    LayerCosts {
-                        // squeeze at input res, expands at output res
-                        macs: (h * w * cin * s + ho * wo * (s * e1 + 9 * s * e3)) as u64,
-                        params: (cin * s + 2 * s + s * e1 + e1 + 9 * s * e3 + e3) as u64,
-                        acts: (h * w * s + ho * wo * (e1 + e3)) as u64,
-                        op,
-                    }
-                }
-                Op::Svd | Op::SvdCh50 => {
-                    let cout = if op == Op::SvdCh50 {
-                        operators::kept_channels(cout_base, op.prune_ratio())
-                    } else {
-                        cout_base
-                    };
-                    let r = operators::svd_rank(k, cin, cout);
-                    LayerCosts {
-                        macs: (ho * wo * (k * k * cin * r + r * cout)) as u64,
-                        params: (k * k * cin * r + r * cout + cout) as u64,
-                        acts: (ho * wo * (r + cout)) as u64,
-                        op,
-                    }
-                }
-                Op::Ch25 | Op::Ch50 | Op::Ch75 => {
-                    let cout = operators::kept_channels(cout_base, op.prune_ratio());
-                    LayerCosts {
-                        macs: (ho * wo * k * k * cin * cout) as u64,
-                        params: (k * k * cin * cout + cout) as u64,
-                        acts: (ho * wo * cout) as u64,
-                        op,
-                    }
-                }
-                Op::Depth => LayerCosts { macs: 0, params: 0, acts: 0, op },
-            };
+            let (lc, next) = self.fold_layer(&state, i, cfg.op(i));
             out.push(lc);
-            // Advance shape state.
-            if op != Op::Depth {
-                h = ho;
-                w = wo;
-                cin = match op {
-                    Op::Identity => cout_base,
-                    Op::Fire => cout_base,
-                    Op::Svd => cout_base,
-                    Op::Ch25 | Op::Ch50 | Op::Ch75 | Op::FireCh50 | Op::SvdCh50 => {
-                        operators::kept_channels(cout_base, op.prune_ratio())
-                    }
-                    Op::Depth => unreachable!(),
-                };
-            }
-            // Depth-skip: h, w, cin all pass through untouched.
+            state = next;
         }
-        // Head: GAP + dense.
-        out.push(LayerCosts {
-            macs: (h * w * cin + cin * self.num_classes) as u64,
-            params: (cin * self.num_classes + self.num_classes) as u64,
-            acts: self.num_classes as u64,
-            op: Op::Identity,
-        });
+        out.push(self.head_costs(&state));
         out
     }
 

@@ -12,10 +12,11 @@ use super::config::CompressionConfig;
 use super::costmodel::CostModel;
 use super::eval::{Constraints, Evaluator};
 use super::manifest::{Manifest, TaskArtifacts, Variant};
+use super::plancache::{ContextQuantizer, PlanCache};
 use super::search::{Mutator, Runtime3C, Runtime3CParams, SearchResult};
 use crate::context::ContextSnapshot;
 use crate::platform::Platform;
-use crate::runtime::{ExecutableCache, Executor, LoadedVariant};
+use crate::runtime::{CacheOutcome, ExecutableCache, Executor, LoadedVariant};
 
 /// Outcome of one evolution step (paper's "runtime evolution" unit).
 #[derive(Debug, Clone)]
@@ -29,6 +30,16 @@ pub struct Evolution {
     pub evolution_us: u128,
     /// Deployed variant's design-time measured accuracy.
     pub deployed_accuracy: f64,
+    /// How the shared plan cache resolved this evolution's search —
+    /// `None` when the engine runs without a plan cache (DESIGN.md §9-2).
+    pub plan_outcome: Option<CacheOutcome>,
+}
+
+impl Evolution {
+    /// Did the shared plan cache serve this evolution without a search?
+    pub fn plan_cache_hit(&self) -> bool {
+        matches!(self.plan_outcome, Some(CacheOutcome::Hit))
+    }
 }
 
 /// The runtime engine for one task on one platform.
@@ -40,6 +51,13 @@ pub struct AdaSpring {
     executor: Option<Executor>,
     active: Option<Arc<LoadedVariant>>,
     active_variant: Option<usize>,
+    platform_name: &'static str,
+    /// Context banding: when set, `evolve` searches at the band's
+    /// representative constraints instead of the exact snapshot
+    /// (DESIGN.md §9-2); prerequisite for plan-cache sharing.
+    quantizer: Option<ContextQuantizer>,
+    /// Fleet-wide shared plan cache (implies banding).
+    plan_cache: Option<Arc<PlanCache>>,
 }
 
 impl AdaSpring {
@@ -65,6 +83,9 @@ impl AdaSpring {
             executor,
             active: None,
             active_variant: None,
+            platform_name: platform.name,
+            quantizer: None,
+            plan_cache: None,
         })
     }
 
@@ -96,16 +117,63 @@ impl AdaSpring {
         self.searcher = Runtime3C::with_params(Mutator::from_task(&self.task), params);
     }
 
+    /// Quantize evolve-time constraints to their band representative
+    /// before searching (DESIGN.md §9-2) — the cache-disabled control:
+    /// identical decisions to a plan-cached engine, no sharing.
+    pub fn set_context_banding(&mut self, quantizer: ContextQuantizer) {
+        self.quantizer = Some(quantizer);
+    }
+
+    /// Attach a shared fleet-wide plan cache.  Implies banding with the
+    /// cache's quantizer, so every engine on the cache derives identical
+    /// search inputs per band — the invariant that makes cached hits
+    /// bit-equal to fresh searches.
+    pub fn set_plan_cache(&mut self, cache: Arc<PlanCache>) {
+        self.quantizer = Some(*cache.quantizer());
+        self.plan_cache = Some(cache);
+    }
+
+    /// The attached plan cache, if any.
+    pub fn plan_cache(&self) -> Option<&Arc<PlanCache>> {
+        self.plan_cache.as_ref()
+    }
+
     /// Constraints for a context snapshot using this task's thresholds.
     pub fn constraints_for(&self, snap: &ContextSnapshot) -> Constraints {
         snap.constraints(self.task.acc_loss_threshold, self.task.latency_budget_ms)
     }
 
-    /// One full evolution: search, snap to the nearest artifact, swap the
-    /// active executable (compiling lazily on first use).
+    /// Derive this evolution's search: exact (legacy), banded, or via the
+    /// shared plan cache (DESIGN.md §9-2).
+    fn run_search(&self, constraints: &Constraints) -> (SearchResult, Option<CacheOutcome>) {
+        if let Some(cache) = &self.plan_cache {
+            let t0 = Instant::now();
+            let sig =
+                cache.quantizer().signature(&self.task.name, self.platform_name, constraints);
+            let (mut result, outcome) =
+                cache.lookup_or_search(sig, |banded| self.searcher.search(&self.evaluator, banded));
+            if outcome == CacheOutcome::Hit {
+                // A hit skipped the search: report the cost actually paid
+                // (signature + lookup), not the original builder's search
+                // latency — otherwise fleet search_us percentiles would
+                // hide the plan cache's whole point.
+                result.search_time_us = t0.elapsed().as_micros();
+            }
+            return (result, Some(outcome));
+        }
+        if let Some(q) = &self.quantizer {
+            let banded = q.banded(&self.task.name, self.platform_name, constraints);
+            return (self.searcher.search(&self.evaluator, &banded), None);
+        }
+        (self.searcher.search(&self.evaluator, constraints), None)
+    }
+
+    /// One full evolution: search (consulting the plan cache when one is
+    /// attached), snap to the nearest artifact, swap the active
+    /// executable (compiling lazily on first use).
     pub fn evolve(&mut self, constraints: &Constraints) -> Result<Evolution> {
         let t0 = Instant::now();
-        let search = self.searcher.search(&self.evaluator, constraints);
+        let (search, plan_outcome) = self.run_search(constraints);
         let (variant, snap_distance) = self.task.nearest_variant(&search.evaluation.config);
         let variant_id = variant.id;
         let deployed_accuracy = variant.accuracy;
@@ -121,6 +189,7 @@ impl AdaSpring {
             snap_distance,
             evolution_us: t0.elapsed().as_micros(),
             deployed_accuracy,
+            plan_outcome,
         })
     }
 

@@ -40,15 +40,20 @@ impl Constraints {
     }
 }
 
-/// Everything the searches need to score one candidate.
-#[derive(Debug, Clone)]
-pub struct Evaluation {
-    pub config: CompressionConfig,
+/// Config-free evaluation of one candidate: every number the Runtime3C
+/// decision structure needs, `Copy` so the per-search arena can score
+/// thousands of candidates without allocating (DESIGN.md §9-1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalCore {
     pub costs: Costs,
     pub acc_loss: f64,
     pub efficiency: f64,
     pub latency_ms: f64,
     pub energy_mj: f64,
+    /// Parameter-usable slice of the storage budget — the platform's
+    /// `param_cache_fraction` folded in at evaluation time, so feasibility
+    /// and [`EvalCore::violation`] agree on every platform.
+    pub param_budget_bytes: u64,
     /// Hard-constraint satisfaction (Eq. 1 s.t. clauses).
     pub feasible: bool,
 }
@@ -57,7 +62,7 @@ pub struct Evaluation {
 /// observed operating band is ≤2.1% loss, so 2% is "one unit" of loss.
 pub const ACC_LOSS_FLOOR: f64 = 0.02;
 
-impl Evaluation {
+impl EvalCore {
     /// Aggregated objective (lower is better): λ1·Norm(A_loss) − λ2·Norm(E),
     /// Norm = log (paper §3.2).  The loss term is normalized against
     /// ACC_LOSS_FLOOR — ln(1 + loss/floor) — so a lossless candidate scores
@@ -71,18 +76,119 @@ impl Evaluation {
     /// Normalized violation of the Eq.-1 hard constraints (0 when feasible).
     /// Drives the layer-progressive search towards feasibility: among
     /// infeasible candidates the one closest to satisfying the context wins.
+    /// The storage term uses the same param-usable budget slice as
+    /// feasibility, so the two agree on all platforms.
     pub fn violation(&self, c: &Constraints) -> f64 {
-        // NB: uses the raw budget as the scale; evaluate() already folded
-        // the platform's param_cache_fraction into feasibility.
-        let storage = (self.costs.param_bytes() as f64
-            - c.storage_budget_bytes as f64 * 0.15)
+        let storage = (self.costs.param_bytes() as f64 - self.param_budget_bytes as f64)
             .max(0.0)
-            / c.storage_budget_bytes.max(1) as f64;
+            / self.param_budget_bytes.max(1) as f64;
         let latency =
             (self.latency_ms - c.latency_budget_ms).max(0.0) / c.latency_budget_ms.max(1e-9);
         let acc = (self.acc_loss - c.acc_loss_threshold).max(0.0)
             / c.acc_loss_threshold.max(1e-9);
         storage + latency + acc
+    }
+}
+
+/// Everything the searches need to score one candidate.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub config: CompressionConfig,
+    pub costs: Costs,
+    pub acc_loss: f64,
+    pub efficiency: f64,
+    pub latency_ms: f64,
+    pub energy_mj: f64,
+    /// Parameter-usable budget slice (see [`EvalCore::param_budget_bytes`]).
+    pub param_budget_bytes: u64,
+    /// Hard-constraint satisfaction (Eq. 1 s.t. clauses).
+    pub feasible: bool,
+}
+
+impl Evaluation {
+    /// Assemble from a scored core plus the materialized config (the
+    /// survivor-only step of the arena search).
+    pub fn from_core(config: CompressionConfig, core: EvalCore) -> Evaluation {
+        Evaluation {
+            config,
+            costs: core.costs,
+            acc_loss: core.acc_loss,
+            efficiency: core.efficiency,
+            latency_ms: core.latency_ms,
+            energy_mj: core.energy_mj,
+            param_budget_bytes: core.param_budget_bytes,
+            feasible: core.feasible,
+        }
+    }
+
+    /// The config-free core (all fields are `Copy`).
+    pub fn core(&self) -> EvalCore {
+        EvalCore {
+            costs: self.costs,
+            acc_loss: self.acc_loss,
+            efficiency: self.efficiency,
+            latency_ms: self.latency_ms,
+            energy_mj: self.energy_mj,
+            param_budget_bytes: self.param_budget_bytes,
+            feasible: self.feasible,
+        }
+    }
+
+    /// See [`EvalCore::score`].
+    pub fn score(&self, c: &Constraints) -> f64 {
+        self.core().score(c)
+    }
+
+    /// See [`EvalCore::violation`].
+    pub fn violation(&self, c: &Constraints) -> f64 {
+        self.core().violation(c)
+    }
+}
+
+/// The scoring surface the Pareto decision structure needs — implemented
+/// by both [`Evaluation`] (the full-eval oracle path) and [`EvalCore`]
+/// (the arena path), so both searches share one decision code path.
+pub trait Scored {
+    fn acc_loss(&self) -> f64;
+    fn efficiency(&self) -> f64;
+    fn feasible(&self) -> bool;
+    fn score(&self, c: &Constraints) -> f64;
+    fn violation(&self, c: &Constraints) -> f64;
+}
+
+impl Scored for EvalCore {
+    fn acc_loss(&self) -> f64 {
+        self.acc_loss
+    }
+    fn efficiency(&self) -> f64 {
+        self.efficiency
+    }
+    fn feasible(&self) -> bool {
+        self.feasible
+    }
+    fn score(&self, c: &Constraints) -> f64 {
+        EvalCore::score(self, c)
+    }
+    fn violation(&self, c: &Constraints) -> f64 {
+        EvalCore::violation(self, c)
+    }
+}
+
+impl Scored for Evaluation {
+    fn acc_loss(&self) -> f64 {
+        self.acc_loss
+    }
+    fn efficiency(&self) -> f64 {
+        self.efficiency
+    }
+    fn feasible(&self) -> bool {
+        self.feasible
+    }
+    fn score(&self, c: &Constraints) -> f64 {
+        Evaluation::score(self, c)
+    }
+    fn violation(&self, c: &Constraints) -> f64 {
+        Evaluation::violation(self, c)
     }
 }
 
@@ -155,21 +261,30 @@ impl Evaluator {
         self.energy.dnn_energy_mj(&self.cost_model.costs(config), available_cache)
     }
 
-    /// Full evaluation of one candidate under the current constraints.
-    pub fn evaluate(&self, config: &CompressionConfig, c: &Constraints) -> Evaluation {
-        let costs = self.cost_model.costs(config);
-        let acc_loss = self.accuracy.predict_loss(config);
+    /// Score a candidate from its aggregate costs and predicted accuracy
+    /// loss — the shared tail of [`Self::evaluate`] and the arena's
+    /// incremental scorer.  Both paths run exactly these expressions on
+    /// identical inputs, which is what makes them bit-identical
+    /// (asserted by `tests/search_parity.rs`).
+    pub fn evaluate_core(&self, costs: Costs, acc_loss: f64, c: &Constraints) -> EvalCore {
         let efficiency = costs.efficiency(self.mu1, self.mu2);
         let latency_ms = self.latency.total_ms(&costs, c.storage_budget_bytes);
         let energy_mj = self.energy.dnn_energy_mj(&costs, c.storage_budget_bytes);
         // Parameters must fit the *parameter-usable* slice of the budget
         // (cache shared with the rest of the system — platform model).
-        let param_budget =
+        let param_budget_bytes =
             (c.storage_budget_bytes as f64 * self.param_cache_fraction) as u64;
         let feasible = acc_loss <= c.acc_loss_threshold
             && latency_ms <= c.latency_budget_ms
-            && costs.param_bytes() <= param_budget;
-        Evaluation { config: config.clone(), costs, acc_loss, efficiency, latency_ms, energy_mj, feasible }
+            && costs.param_bytes() <= param_budget_bytes;
+        EvalCore { costs, acc_loss, efficiency, latency_ms, energy_mj, param_budget_bytes, feasible }
+    }
+
+    /// Full evaluation of one candidate under the current constraints.
+    pub fn evaluate(&self, config: &CompressionConfig, c: &Constraints) -> Evaluation {
+        let costs = self.cost_model.costs(config);
+        let acc_loss = self.accuracy.predict_loss(config);
+        Evaluation::from_core(config.clone(), self.evaluate_core(costs, acc_loss, c))
     }
 }
 

@@ -140,6 +140,22 @@ impl Manifest {
         }
     }
 
+    /// Bench-binary manifest resolution: an *explicitly* requested path
+    /// must load — a typo'd `--manifest` fails loudly instead of
+    /// silently producing synthetic-palette numbers (the strict-CLI
+    /// contract) — while the default path falls back to
+    /// [`Self::synthetic`] when absent.
+    pub fn load_cli(explicit: Option<&str>, default_path: &str) -> Result<Manifest> {
+        match explicit {
+            Some(path) => {
+                let m = Self::load(path)?;
+                eprintln!("using artifact manifest {path}");
+                Ok(m)
+            }
+            None => Ok(Self::load_or_synthetic(default_path)),
+        }
+    }
+
     pub fn task(&self, name: &str) -> Result<&TaskArtifacts> {
         self.tasks.get(name).ok_or_else(|| {
             anyhow!(

@@ -10,6 +10,8 @@
 //! * [`baselines`] — hand-crafted / on-demand DNN specialization baselines
 //!   (Table 2 rows).
 //! * [`manifest`] — artifact manifest loader.
+//! * [`plancache`] — fleet-wide evolution plan cache over quantized
+//!   context signatures (DESIGN.md §9-2).
 //! * [`engine`] — the AdaSpring engine wiring context → search → executor.
 
 pub mod accuracy;
@@ -21,11 +23,13 @@ pub mod engine;
 pub mod eval;
 pub mod manifest;
 pub mod operators;
+pub mod plancache;
 pub mod search;
 
 pub use config::CompressionConfig;
 pub use manifest::Manifest;
 pub use operators::Op;
+pub use plancache::{ContextQuantizer, PlanCache, PlanMode, PlanSignature};
 
 /// Shared test fixtures (unit tests across coordinator modules).
 #[cfg(test)]

@@ -1,0 +1,258 @@
+//! Fleet-wide evolution plan cache (DESIGN.md §9-2).
+//!
+//! Every fleet session repeats the same Runtime3C search under
+//! near-identical contexts: same task, same platform class, battery and
+//! cache levels that differ only in the noise of the simulators.  The
+//! plan cache stops that fleet-wide rework the same way the variant
+//! cache stops repeated compiles: quantize the deployment context into a
+//! band signature, search once *at the band's representative
+//! constraints*, and share the resulting [`SearchResult`] across every
+//! engine holding the cache `Arc`.
+//!
+//! Correctness hinges on one invariant: the search input is a pure
+//! function of the signature.  An engine in banded mode derives its
+//! constraints from the signature ([`ContextQuantizer::representative`])
+//! *before* searching, so a cached hit is exactly the result a fresh
+//! search would have produced — memoization, not approximation.  The
+//! cache-disabled control ([`PlanMode::Banded`]) runs the identical
+//! banded search without sharing; `tests/search_parity.rs` and the fleet
+//! tests assert the two produce identical per-device results.
+//!
+//! Staleness: entries are tagged with the cache epoch at build time.
+//! [`PlanCache::bump_epoch`] (a palette/model push, recalibrated cost
+//! model, …) invalidates everything; the next lookup per signature
+//! rebuilds in place and is counted in the `stale` counter that flows
+//! through the fleet/dispatch reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::eval::Constraints;
+use crate::coordinator::search::SearchResult;
+use crate::runtime::{CacheOutcome, CacheStats, ShardedCache};
+
+/// How evolve-time searches derive their constraints (fleet plumbing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlanMode {
+    /// Exact constraints, no banding, no sharing (the legacy behavior).
+    #[default]
+    Off,
+    /// Band the constraints per the default quantizer but search fresh
+    /// every evolution — the cache-disabled control: identical decisions
+    /// to [`PlanMode::Shared`], no reuse.
+    Banded,
+    /// Band + share one fleet-wide [`PlanCache`].
+    Shared,
+}
+
+impl PlanMode {
+    /// Parse a bench-flag value (`off` / `banded` / `shared`).
+    pub fn parse(s: &str) -> Option<PlanMode> {
+        match s.to_lowercase().as_str() {
+            "off" => Some(PlanMode::Off),
+            "banded" => Some(PlanMode::Banded),
+            "shared" => Some(PlanMode::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanMode::Off => "off",
+            PlanMode::Banded => "banded",
+            PlanMode::Shared => "shared",
+        }
+    }
+}
+
+/// Quantized deployment-context signature — the plan-cache key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanSignature {
+    pub task: String,
+    pub platform: &'static str,
+    /// λ2 band (battery pressure, paper §6.3).
+    pub lambda2_band: u32,
+    /// Latency-budget bucket.
+    pub latency_band: u32,
+    /// Storage-budget (available cache) band.
+    pub storage_band: u64,
+    /// Accuracy-loss-threshold band.
+    pub acc_band: u32,
+}
+
+/// Maps exact Eq.-1 constraints onto a coarse band signature and back to
+/// the band's representative constraints.  Engines in banded mode search
+/// *at the representative*, so every context inside a band shares one
+/// deterministic search — the invariant that makes the plan cache pure
+/// memoization (module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContextQuantizer {
+    /// λ2 band width (λ2 lives in [0.3, 1]).
+    pub lambda2_step: f64,
+    /// Latency-budget bucket width, ms.
+    pub latency_step_ms: f64,
+    /// Storage-budget band width, bytes.
+    pub storage_step_bytes: u64,
+    /// Accuracy-loss-threshold band width.
+    pub acc_step: f64,
+}
+
+impl Default for ContextQuantizer {
+    fn default() -> ContextQuantizer {
+        ContextQuantizer {
+            lambda2_step: 0.05,
+            latency_step_ms: 1.0,
+            storage_step_bytes: 128 * 1024,
+            acc_step: 0.005,
+        }
+    }
+}
+
+impl ContextQuantizer {
+    /// The band signature of `c` for `task` on `platform`.
+    pub fn signature(
+        &self,
+        task: &str,
+        platform: &'static str,
+        c: &Constraints,
+    ) -> PlanSignature {
+        PlanSignature {
+            task: task.to_string(),
+            platform,
+            lambda2_band: (c.lambda2 / self.lambda2_step).round() as u32,
+            latency_band: (c.latency_budget_ms / self.latency_step_ms).round() as u32,
+            storage_band: c.storage_budget_bytes / self.storage_step_bytes.max(1),
+            acc_band: (c.acc_loss_threshold / self.acc_step).round() as u32,
+        }
+    }
+
+    /// The representative constraints of a band — what a banded engine
+    /// actually searches under.
+    pub fn representative(&self, sig: &PlanSignature) -> Constraints {
+        let lambda2 = (sig.lambda2_band as f64 * self.lambda2_step).clamp(0.3, 1.0);
+        Constraints {
+            acc_loss_threshold: sig.acc_band as f64 * self.acc_step,
+            latency_budget_ms: sig.latency_band as f64 * self.latency_step_ms,
+            storage_budget_bytes: sig.storage_band * self.storage_step_bytes
+                + self.storage_step_bytes / 2,
+            lambda1: 1.0 - lambda2,
+            lambda2,
+        }
+    }
+
+    /// Band `c` in one step: signature → representative.
+    pub fn banded(&self, task: &str, platform: &'static str, c: &Constraints) -> Constraints {
+        self.representative(&self.signature(task, platform, c))
+    }
+}
+
+/// One cached plan: the search result plus the epoch it was built in.
+#[derive(Debug, Clone)]
+pub struct PlanEntry {
+    pub result: SearchResult,
+    pub epoch: u64,
+}
+
+/// Lock-striped signature → plan map shared fleet-wide (same striping as
+/// [`crate::runtime::ShardedCache`], which backs it).
+pub struct PlanCache {
+    cache: ShardedCache<PlanEntry, PlanSignature>,
+    quantizer: ContextQuantizer,
+    epoch: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new(stripes: usize) -> PlanCache {
+        Self::with_quantizer(stripes, ContextQuantizer::default())
+    }
+
+    pub fn with_quantizer(stripes: usize, quantizer: ContextQuantizer) -> PlanCache {
+        PlanCache { cache: ShardedCache::new(stripes), quantizer, epoch: AtomicU64::new(0) }
+    }
+
+    pub fn quantizer(&self) -> &ContextQuantizer {
+        &self.quantizer
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Invalidate every cached plan (palette/model push).  Old entries
+    /// stay resident but fail revalidation: the next lookup per
+    /// signature rebuilds in place and counts as stale.
+    pub fn bump_epoch(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Fetch the plan for `sig`, searching at the band representative on
+    /// miss (or stale hit).  The stripe lock is held across the search,
+    /// so concurrent sessions racing one signature search once and share
+    /// the result — the same dedup the variant cache gives compiles.
+    pub fn lookup_or_search(
+        &self,
+        sig: PlanSignature,
+        search: impl FnOnce(&Constraints) -> SearchResult,
+    ) -> (SearchResult, CacheOutcome) {
+        let banded = self.quantizer.representative(&sig);
+        let epoch = self.epoch();
+        let (entry, outcome) = self
+            .cache
+            .get_or_revalidate_with(
+                sig,
+                |e| e.epoch == epoch,
+                || Ok(PlanEntry { result: search(&banded), epoch }),
+            )
+            .expect("plan searches are infallible");
+        (entry.result.clone(), outcome)
+    }
+
+    /// Counter snapshot (entries / hits / misses / stale).
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn constraints(battery: f64, cache_bytes: u64) -> Constraints {
+        Constraints::from_battery(battery, 0.05, 30.0, cache_bytes)
+    }
+
+    #[test]
+    fn nearby_contexts_share_a_band_and_representative() {
+        let q = ContextQuantizer::default();
+        let a = q.signature("d3", "Raspberry Pi 4B", &constraints(0.701, 1_900_000));
+        let b = q.signature("d3", "Raspberry Pi 4B", &constraints(0.703, 1_910_000));
+        assert_eq!(a, b, "noise-level context drift stays in one band");
+        let ra = q.representative(&a);
+        let rb = q.representative(&b);
+        assert_eq!(ra.lambda2.to_bits(), rb.lambda2.to_bits());
+        assert_eq!(ra.storage_budget_bytes, rb.storage_budget_bytes);
+        // Different platforms / tasks never alias.
+        let c = q.signature("d3", "NVIDIA Jetbot", &constraints(0.701, 1_900_000));
+        assert_ne!(a, c);
+        let d = q.signature("d1", "Raspberry Pi 4B", &constraints(0.701, 1_900_000));
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn representative_lambda_stays_normalized() {
+        let q = ContextQuantizer::default();
+        for battery in [0.05, 0.3, 0.5, 0.95] {
+            let sig = q.signature("t", "P", &constraints(battery, 2 << 20));
+            let r = q.representative(&sig);
+            assert!((r.lambda1 + r.lambda2 - 1.0).abs() < 1e-12);
+            assert!((0.3..=1.0).contains(&r.lambda2));
+        }
+    }
+
+    #[test]
+    fn distant_contexts_land_in_different_bands() {
+        let q = ContextQuantizer::default();
+        let hi = q.signature("d3", "P", &constraints(0.9, 2 << 20));
+        let lo = q.signature("d3", "P", &constraints(0.2, 512 * 1024));
+        assert_ne!(hi, lo);
+    }
+}

@@ -1,0 +1,396 @@
+//! Per-search candidate arena: incremental prefix evaluation for the
+//! layer-progressive Runtime3C loop (DESIGN.md §9-1).
+//!
+//! The full-evaluation path scores every candidate with an O(L)
+//! `CostModel::costs` walk plus a `config.clone()`, making each search
+//! O(L²) with heavy allocation.  But Runtime3C's candidates are extremely
+//! structured: at layer i every candidate is *inherited prefix* + *one
+//! operator at i* + *identity tail*.  The arena exploits that shape:
+//!
+//! * the prefix is a [`PrefixState`] accumulator (shape + cost totals +
+//!   additive loss sum), extended once per layer when the survivor is
+//!   committed;
+//! * one candidate costs one [`CostModel::fold_layer`] call (O(1)) plus a
+//!   memoized identity-tail lookup;
+//! * candidates live as packed op-id arrays in the arena's scratch buffer
+//!   — `CompressionConfig` / `Evaluation` are materialized only for the
+//!   survivor, at the end of the search.
+//!
+//! Scoring is bit-identical to `Evaluator::evaluate` by construction:
+//! both paths run the same `fold_layer` arithmetic (integer cost sums are
+//! order-independent), accumulate accuracy-loss coefficients in the same
+//! layer order (float addition order preserved), share the exact-palette
+//! override, and finish through the same `Evaluator::evaluate_core`.
+//! `tests/search_parity.rs` asserts this across randomized configs,
+//! platforms, and constraint sets.
+
+use std::collections::HashMap;
+
+use crate::coordinator::config::CompressionConfig;
+use crate::coordinator::costmodel::{Costs, PrefixState};
+use crate::coordinator::eval::{Constraints, EvalCore, Evaluator, Scored};
+use crate::coordinator::manifest::Backbone;
+use crate::coordinator::operators::{Op, ALL_OPS, NUM_OPS};
+
+/// Static per-layer canonical-operator table — the precomputed mirror of
+/// [`CompressionConfig::canonicalize`] (legality depends only on the
+/// backbone structure), so arena candidates canonicalize in O(1) instead
+/// of cloning and re-walking the config.
+#[derive(Debug, Clone)]
+pub struct CanonTable {
+    canon: Vec<[Op; NUM_OPS]>,
+}
+
+impl CanonTable {
+    pub fn new(bb: &Backbone) -> CanonTable {
+        let n = bb.widths.len();
+        let mut canon = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = [Op::Identity; NUM_OPS];
+            if i > 0 {
+                for (slot, &op) in row.iter_mut().zip(ALL_OPS.iter()) {
+                    let ok =
+                        op.is_legal(bb.widths[i - 1], bb.widths[i], bb.strides[i], bb.residual[i]);
+                    *slot = if ok { op } else { Op::Identity };
+                }
+            }
+            canon.push(row);
+        }
+        CanonTable { canon }
+    }
+
+    /// The operator actually applied at `layer` when `op` is requested.
+    pub fn canonical(&self, layer: usize, op: Op) -> Op {
+        self.canon[layer][op.id() as usize]
+    }
+}
+
+/// One scored candidate at the current search layer: its (canonical)
+/// operator choice plus the whole-model evaluation core.  `Copy` — the
+/// pool never allocates per candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub op: Op,
+    pub core: EvalCore,
+}
+
+impl Scored for Candidate {
+    fn acc_loss(&self) -> f64 {
+        self.core.acc_loss
+    }
+    fn efficiency(&self) -> f64 {
+        self.core.efficiency
+    }
+    fn feasible(&self) -> bool {
+        self.core.feasible
+    }
+    fn score(&self, c: &Constraints) -> f64 {
+        self.core.score(c)
+    }
+    fn violation(&self, c: &Constraints) -> f64 {
+        self.core.violation(c)
+    }
+}
+
+/// The per-search arena: inherited-prefix accumulators, the identity-tail
+/// memo, and the packed op-id scratch buffer candidates are built in.
+pub struct SearchArena<'a> {
+    eval: &'a Evaluator,
+    canon: CanonTable,
+    n: usize,
+    /// Committed canonical prefix ops (identity beyond `prefix_len`).
+    prefix_ids: Vec<u8>,
+    /// Conv layers folded into `state` so far.
+    prefix_len: usize,
+    /// Shape/cost accumulator after the committed prefix.
+    state: PrefixState,
+    /// Accuracy-loss coefficient sum over the committed prefix, in layer
+    /// order (float addition order matches `predict_loss`).
+    loss_sum: f64,
+    /// Compressed-layer count over the committed prefix.
+    loss_k: usize,
+    /// `id_states[i]` = state after identity layers `0..i` (the
+    /// no-inherit ablation's prefix, and the identity whole-model eval).
+    id_states: Vec<PrefixState>,
+    /// (from_layer, h, w, cin) → identity-tail + head cost totals.
+    tail_memo: HashMap<(usize, usize, usize, usize), Costs>,
+    /// Packed op-id buffer of the candidate being scored.
+    scratch: Vec<u8>,
+}
+
+impl<'a> SearchArena<'a> {
+    pub fn new(eval: &'a Evaluator) -> SearchArena<'a> {
+        let cm = eval.cost_model();
+        let n = cm.backbone().widths.len();
+        let canon = CanonTable::new(cm.backbone());
+        let mut id_states = Vec::with_capacity(n + 1);
+        let mut s = cm.initial_state();
+        id_states.push(s);
+        for i in 0..n {
+            let (_lc, next) = cm.fold_layer(&s, i, Op::Identity);
+            s = next;
+            id_states.push(s);
+        }
+        let mut arena = SearchArena {
+            eval,
+            canon,
+            n,
+            prefix_ids: vec![0u8; n],
+            prefix_len: 0,
+            state: cm.initial_state(),
+            loss_sum: 0.0,
+            loss_k: 0,
+            id_states,
+            tail_memo: HashMap::new(),
+            scratch: vec![0u8; n],
+        };
+        // Layer 0 is never compressed (Algorithm 1 footnote).
+        arena.commit(0, Op::Identity);
+        arena
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n
+    }
+
+    /// Packed op-ids of the most recently scored candidate.
+    pub fn scratch(&self) -> &[u8] {
+        &self.scratch
+    }
+
+    /// Committed prefix as packed op-ids (identity beyond the frontier).
+    pub fn prefix_ids(&self) -> &[u8] {
+        &self.prefix_ids
+    }
+
+    /// Identity-tail + head totals from `from`, memoized by entry shape.
+    fn tail(&mut self, from: usize, state: PrefixState) -> Costs {
+        let key = (from, state.h, state.w, state.cin);
+        if let Some(&c) = self.tail_memo.get(&key) {
+            return c;
+        }
+        let c = self.eval.cost_model().identity_tail(&state, from);
+        self.tail_memo.insert(key, c);
+        c
+    }
+
+    /// Score the candidate that extends the prefix with `op` at `layer`
+    /// (identity tail beyond).  `inherited` selects the committed prefix
+    /// (Algorithm 1 line 3) vs the identity prefix (the locally-greedy
+    /// ablation).  Returns the canonical operator actually applied plus
+    /// the whole-model evaluation core.  O(1) amortized.
+    pub fn eval_extension(
+        &mut self,
+        layer: usize,
+        op: Op,
+        inherited: bool,
+        c: &Constraints,
+    ) -> (Op, EvalCore) {
+        debug_assert!(!inherited || layer == self.prefix_len, "arena extends at the frontier");
+        let op = self.canon.canonical(layer, op);
+        let (pre_state, pre_sum, pre_k) = if inherited {
+            (self.state, self.loss_sum, self.loss_k)
+        } else {
+            (self.id_states[layer], 0.0, 0usize)
+        };
+        let (_lc, exit) = self.eval.cost_model().fold_layer(&pre_state, layer, op);
+        let costs = exit.costs + self.tail(layer + 1, exit);
+
+        // Pack the candidate's full op-id array for the exact-palette
+        // override lookup (and for callers that materialize the ids).
+        for b in self.scratch.iter_mut() {
+            *b = 0;
+        }
+        if inherited {
+            self.scratch[..layer].copy_from_slice(&self.prefix_ids[..layer]);
+        }
+        self.scratch[layer] = op.id();
+
+        let acc_loss = match self.eval.accuracy_model().exact_loss(&self.scratch) {
+            Some(loss) => loss,
+            None => {
+                let mut sum = pre_sum;
+                let mut k = pre_k;
+                if op != Op::Identity {
+                    sum += self.eval.accuracy_model().loss_coeff(layer, op.id());
+                    k += 1;
+                }
+                self.eval.accuracy_model().finalize_loss(sum, k)
+            }
+        };
+        (op, self.eval.evaluate_core(costs, acc_loss, c))
+    }
+
+    /// Fold the adopted operator into the committed prefix (Algorithm 1
+    /// lines 7-8): O(1) — this is what keeps the whole search O(L) in
+    /// fold operations instead of O(L²).
+    pub fn commit(&mut self, layer: usize, op: Op) {
+        debug_assert_eq!(layer, self.prefix_len, "prefix commits are layer-ordered");
+        let op = self.canon.canonical(layer, op);
+        let (_lc, exit) = self.eval.cost_model().fold_layer(&self.state, layer, op);
+        self.state = exit;
+        self.prefix_ids[layer] = op.id();
+        if op != Op::Identity {
+            self.loss_sum += self.eval.accuracy_model().loss_coeff(layer, op.id());
+            self.loss_k += 1;
+        }
+        self.prefix_len += 1;
+    }
+
+    /// Evaluation core of the all-identity config — the search's starting
+    /// score, O(1) via the precomputed identity prefix.
+    pub fn identity_core(&mut self, c: &Constraints) -> EvalCore {
+        let full = self.id_states[self.n];
+        let head = self.eval.cost_model().head_costs(&full);
+        let costs =
+            full.costs + Costs { macs: head.macs, params: head.params, acts: head.acts };
+        for b in self.scratch.iter_mut() {
+            *b = 0;
+        }
+        let am = self.eval.accuracy_model();
+        let acc_loss =
+            am.exact_loss(&self.scratch).unwrap_or_else(|| am.finalize_loss(0.0, 0));
+        self.eval.evaluate_core(costs, acc_loss, c)
+    }
+}
+
+/// Score an arbitrary packed op-id config through the arena machinery —
+/// canonicalization, prefix folds, additive loss, exact-palette override,
+/// `evaluate_core`.  Bit-identical to
+/// `Evaluator::evaluate(&config.canonicalize(bb), c)` (the parity-test
+/// oracle comparison), and the fallback the incremental search uses for
+/// the rare whole-model evaluation that is not a frontier extension.
+pub fn eval_ids(eval: &Evaluator, ids: &[u8], c: &Constraints) -> EvalCore {
+    let cm = eval.cost_model();
+    let canon = CanonTable::new(cm.backbone());
+    let mut state = cm.initial_state();
+    let mut canon_ids = vec![0u8; ids.len()];
+    let mut sum = 0.0f64;
+    let mut k = 0usize;
+    for (i, &id) in ids.iter().enumerate() {
+        let op = canon.canonical(i, Op::from_id(id).unwrap_or(Op::Identity));
+        canon_ids[i] = op.id();
+        let (_lc, next) = cm.fold_layer(&state, i, op);
+        state = next;
+        if op != Op::Identity {
+            sum += eval.accuracy_model().loss_coeff(i, op.id());
+            k += 1;
+        }
+    }
+    let head = cm.head_costs(&state);
+    let costs =
+        state.costs + Costs { macs: head.macs, params: head.params, acts: head.acts };
+    let acc_loss = eval
+        .accuracy_model()
+        .exact_loss(&canon_ids)
+        .unwrap_or_else(|| eval.accuracy_model().finalize_loss(sum, k));
+    eval.evaluate_core(costs, acc_loss, c)
+}
+
+/// Materialize the survivor's packed ids as a `CompressionConfig` — the
+/// only point the incremental search allocates a config.
+pub fn materialize(ids: &[u8]) -> CompressionConfig {
+    CompressionConfig::from_ids(ids).expect("arena ids are canonical by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::accuracy::AccuracyModel;
+    use crate::coordinator::costmodel::CostModel;
+    use crate::coordinator::test_fixtures::{toy_backbone, toy_task};
+    use crate::platform::Platform;
+
+    fn evaluator() -> Evaluator {
+        let task = toy_task();
+        let bb = toy_backbone();
+        let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+        let am = AccuracyModel::fit(&task);
+        Evaluator::new(cm, am, &Platform::raspberry_pi_4b())
+    }
+
+    #[test]
+    fn canon_table_matches_config_canonicalize() {
+        let bb = toy_backbone();
+        let table = CanonTable::new(&bb);
+        for layer in 0..bb.widths.len() {
+            for &op in ALL_OPS.iter() {
+                let mut ids = vec![0u8; bb.widths.len()];
+                if layer > 0 {
+                    ids[layer] = op.id();
+                }
+                let cfg = CompressionConfig::from_ids(&ids).unwrap().canonicalize(&bb);
+                let expect = if layer == 0 { Op::Identity } else { cfg.op(layer) };
+                assert_eq!(table.canonical(layer, op), expect, "layer {layer} op {op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_ids_is_bit_identical_to_full_evaluate() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.5, 0.05, 20.0, 220 * 1024);
+        for ids in [
+            vec![0u8, 0, 0, 0, 0],
+            vec![0, 4, 0, 4, 0],
+            vec![0, 1, 6, 4, 6],
+            vec![0, 6, 4, 6, 4], // illegal choices canonicalize away
+            vec![0, 8, 0, 5, 0],
+        ] {
+            let cfg = CompressionConfig::from_ids(&ids)
+                .unwrap()
+                .canonicalize(eval.cost_model().backbone());
+            let full = eval.evaluate(&cfg, &c);
+            let core = eval_ids(&eval, &ids, &c);
+            assert_eq!(full.core(), core, "ids {ids:?}");
+            assert_eq!(full.score(&c).to_bits(), core.score(&c).to_bits());
+            assert_eq!(full.violation(&c).to_bits(), core.violation(&c).to_bits());
+        }
+    }
+
+    #[test]
+    fn extension_matches_full_candidate_evaluation() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.4, 0.05, 20.0, 220 * 1024);
+        let bb = eval.cost_model().backbone().clone();
+        let mut arena = SearchArena::new(&eval);
+        // Commit ch50 at layer 1, then score every op at layer 2 against
+        // the full path over the equivalent config.
+        arena.commit(1, Op::Ch50);
+        for &op in ALL_OPS.iter() {
+            let (cop, core) = arena.eval_extension(2, op, true, &c);
+            let mut cfg = CompressionConfig::identity(5);
+            cfg.set(1, Op::Ch50);
+            cfg.set(2, op);
+            let cfg = cfg.canonicalize(&bb);
+            assert_eq!(cop, cfg.op(2), "{op:?}");
+            let full = eval.evaluate(&cfg, &c);
+            assert_eq!(full.core(), core, "{op:?}");
+            assert_eq!(arena.scratch(), cfg.ops_ids().as_slice(), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn identity_core_matches_identity_evaluate() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.8, 0.05, 30.0, 2 << 20);
+        let mut arena = SearchArena::new(&eval);
+        let full = eval.evaluate(&CompressionConfig::identity(5), &c);
+        assert_eq!(full.core(), arena.identity_core(&c));
+    }
+
+    #[test]
+    fn tail_memo_hits_for_shape_preserving_ops() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.5, 0.05, 20.0, 2 << 20);
+        let mut arena = SearchArena::new(&eval);
+        // Fire and Svd keep the exit shape of layer 1 identical, so the
+        // second evaluation reuses the memoized tail.
+        arena.eval_extension(1, Op::Fire, true, &c);
+        let before = arena.tail_memo.len();
+        arena.eval_extension(1, Op::Svd, true, &c);
+        assert_eq!(arena.tail_memo.len(), before, "same exit shape reuses the tail");
+        arena.eval_extension(1, Op::Ch50, true, &c);
+        assert!(arena.tail_memo.len() > before, "pruned exit shape adds a new tail");
+    }
+}

@@ -1,11 +1,19 @@
 //! Runtime search strategies (paper §5.2) and baseline optimizers (§6.1).
+//!
+//! [`arena`] carries the incremental per-search evaluation engine
+//! (DESIGN.md §9-1): Runtime3C's default `search()` scores candidates as
+//! O(1) prefix extensions over packed op-id arrays; `search_full()` is
+//! the O(L²) full-evaluation oracle kept for parity testing and the
+//! `bench_search --full-eval` baseline.
 
+pub mod arena;
 pub mod exhaustive;
 pub mod greedy;
 pub mod mutation;
 pub mod pareto;
 pub mod runtime3c;
 
+pub use arena::{eval_ids, Candidate, CanonTable, SearchArena};
 pub use exhaustive::ExhaustiveOptimizer;
 pub use greedy::GreedyOptimizer;
 pub use mutation::Mutator;

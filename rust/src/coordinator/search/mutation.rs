@@ -11,6 +11,7 @@
 
 use crate::coordinator::config::CompressionConfig;
 use crate::coordinator::manifest::TaskArtifacts;
+use crate::coordinator::operators::Op;
 use crate::util::rng::Rng;
 
 /// Mutation engine bound to a task's trained magnitudes.
@@ -50,6 +51,27 @@ impl Mutator {
         (sigma / self.sigma_scale).clamp(0.1, 1.0)
     }
 
+    /// Operator-level mutation: the op-only core of [`Self::mutate_at`].
+    /// The arena search (DESIGN.md §9-1) calls this directly — candidates
+    /// at one layer differ only in that layer's operator — and because
+    /// both paths share this function they draw the RNG identically, a
+    /// prerequisite for the incremental/full search parity.
+    pub fn mutate_ops_at(&self, op: Op, layer: usize, count: usize, rng: &mut Rng) -> Vec<Op> {
+        let neighbours = op.mutation_neighbours();
+        let p = self.jump_probability(layer);
+        let mut out = Vec::with_capacity(count);
+        for k in 0..count {
+            let mut chosen = op;
+            if rng.chance(p) || k == 0 {
+                // Deterministic first mutant: cycle through neighbours so
+                // the augmentation always adds diversity.
+                chosen = neighbours[k % neighbours.len()];
+            }
+            out.push(chosen);
+        }
+        out
+    }
+
     /// Produce `count` mutants of `base` by perturbing the op at `layer`
     /// towards family neighbours.  Mutants are canonical-legal by
     /// construction of `mutation_neighbours` + downstream canonicalization.
@@ -60,21 +82,14 @@ impl Mutator {
         count: usize,
         rng: &mut Rng,
     ) -> Vec<CompressionConfig> {
-        let mut out = Vec::with_capacity(count);
-        let op = base.op(layer);
-        let neighbours = op.mutation_neighbours();
-        let p = self.jump_probability(layer);
-        for k in 0..count {
-            let mut cfg = base.clone();
-            if rng.chance(p) || k == 0 {
-                // Deterministic first mutant: cycle through neighbours so
-                // the augmentation always adds diversity.
-                let n = neighbours[k % neighbours.len()];
-                cfg.set(layer, n);
-            }
-            out.push(cfg);
-        }
-        out
+        self.mutate_ops_at(base.op(layer), layer, count, rng)
+            .into_iter()
+            .map(|op| {
+                let mut cfg = base.clone();
+                cfg.set(layer, op);
+                cfg
+            })
+            .collect()
     }
 }
 

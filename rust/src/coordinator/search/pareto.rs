@@ -1,20 +1,26 @@
 //! Pareto-front utilities over (accuracy-loss ↓, efficiency ↑) — the
 //! decision structure of Algorithm 1 lines 4/6.
+//!
+//! Generic over [`Scored`] so the full-evaluation oracle path (over
+//! [`Evaluation`]) and the arena's incremental path (over
+//! [`crate::coordinator::eval::EvalCore`]-backed candidates) share one
+//! decision code path — a prerequisite for the two searches being
+//! bit-identical (DESIGN.md §9-1).
 
-use crate::coordinator::eval::{Constraints, Evaluation};
+use crate::coordinator::eval::{Constraints, Scored};
 
 /// Indices of the Pareto-optimal evaluations: no other candidate has both
 /// lower accuracy loss and higher efficiency.
-pub fn pareto_front(evals: &[Evaluation]) -> Vec<usize> {
+pub fn pareto_front<T: Scored>(evals: &[T]) -> Vec<usize> {
     let mut front = Vec::new();
     'outer: for (i, a) in evals.iter().enumerate() {
         for (j, b) in evals.iter().enumerate() {
             if i == j {
                 continue;
             }
-            let dominates = b.acc_loss <= a.acc_loss
-                && b.efficiency >= a.efficiency
-                && (b.acc_loss < a.acc_loss || b.efficiency > a.efficiency);
+            let dominates = b.acc_loss() <= a.acc_loss()
+                && b.efficiency() >= a.efficiency()
+                && (b.acc_loss() < a.acc_loss() || b.efficiency() > a.efficiency());
             if dominates {
                 continue 'outer;
             }
@@ -26,12 +32,12 @@ pub fn pareto_front(evals: &[Evaluation]) -> Vec<usize> {
 
 /// The best-two compromises on the front by the λ-weighted objective
 /// (Algorithm 1 line 4: "select 2 candidates from the Pareto front").
-pub fn best_two<'a>(
-    evals: &'a [Evaluation],
+pub fn best_two<'a, T: Scored>(
+    evals: &'a [T],
     front: &[usize],
     c: &Constraints,
-) -> Vec<&'a Evaluation> {
-    let mut ranked: Vec<&Evaluation> = front.iter().map(|&i| &evals[i]).collect();
+) -> Vec<&'a T> {
+    let mut ranked: Vec<&T> = front.iter().map(|&i| &evals[i]).collect();
     ranked.sort_by(|a, b| a.score(c).partial_cmp(&b.score(c)).unwrap());
     ranked.truncate(2);
     ranked
@@ -44,12 +50,12 @@ pub fn best_two<'a>(
 /// the smallest constraint violation wins (ties broken by the λ-weighted
 /// score), so the layer-progressive search makes monotone progress towards
 /// the budget instead of stalling on the unconstrained optimum.
-pub fn survivor<'a>(evals: &'a [Evaluation], c: &Constraints) -> Option<&'a Evaluation> {
+pub fn survivor<'a, T: Scored>(evals: &'a [T], c: &Constraints) -> Option<&'a T> {
     if evals.is_empty() {
         return None;
     }
     let feasible_idxs: Vec<usize> =
-        (0..evals.len()).filter(|&i| evals[i].feasible).collect();
+        (0..evals.len()).filter(|&i| evals[i].feasible()).collect();
     if !feasible_idxs.is_empty() {
         // Pareto front restricted to the feasible subset, then best score.
         let mut best: Option<usize> = None;
@@ -60,9 +66,9 @@ pub fn survivor<'a>(evals: &'a [Evaluation], c: &Constraints) -> Option<&'a Eval
                     continue;
                 }
                 let b = &evals[j];
-                let dominates = b.acc_loss <= a.acc_loss
-                    && b.efficiency >= a.efficiency
-                    && (b.acc_loss < a.acc_loss || b.efficiency > a.efficiency);
+                let dominates = b.acc_loss() <= a.acc_loss()
+                    && b.efficiency() >= a.efficiency()
+                    && (b.acc_loss() < a.acc_loss() || b.efficiency() > a.efficiency());
                 if dominates {
                     continue 'outer;
                 }
@@ -85,17 +91,21 @@ mod tests {
     use super::*;
     use crate::coordinator::config::CompressionConfig;
     use crate::coordinator::costmodel::Costs;
+    use crate::coordinator::eval::{EvalCore, Evaluation};
 
     fn ev(acc_loss: f64, efficiency: f64, feasible: bool) -> Evaluation {
-        Evaluation {
-            config: CompressionConfig::identity(5),
-            costs: Costs { macs: 1, params: 1, acts: 1 },
-            acc_loss,
-            efficiency,
-            latency_ms: 1.0,
-            energy_mj: 1.0,
-            feasible,
-        }
+        Evaluation::from_core(
+            CompressionConfig::identity(5),
+            EvalCore {
+                costs: Costs { macs: 1, params: 1, acts: 1 },
+                acc_loss,
+                efficiency,
+                latency_ms: 1.0,
+                energy_mj: 1.0,
+                param_budget_bytes: (1u64 << 21) / 4,
+                feasible,
+            },
+        )
     }
 
     fn constraints() -> Constraints {
@@ -148,5 +158,30 @@ mod tests {
         let front = pareto_front(&evals);
         assert!(front.len() >= 2);
         assert_eq!(best_two(&evals, &front, &constraints()).len(), 2);
+    }
+
+    #[test]
+    fn cores_and_evaluations_share_the_decision_path() {
+        // The same points as EvalCore must produce the same front.
+        let evals = vec![ev(0.01, 100.0, true), ev(0.02, 90.0, true), ev(0.05, 200.0, true)];
+        let cores: Vec<EvalCore> = evals.iter().map(|e| e.core()).collect();
+        assert_eq!(pareto_front(&evals), pareto_front(&cores));
+        let c = constraints();
+        let s_eval = survivor(&evals, &c).unwrap();
+        let s_core = survivor(&cores, &c).unwrap();
+        assert_eq!(s_eval.core(), *s_core);
+    }
+
+    #[test]
+    fn violation_agrees_with_feasibility_scale() {
+        // Storage violation must be 0 exactly when params fit the
+        // param-usable budget slice (the satellite fix: no hardcoded
+        // fraction).
+        let c = constraints();
+        let mut e = ev(0.0, 1.0, true);
+        e.costs = Costs { macs: 1, params: e.param_budget_bytes / 4, acts: 1 };
+        assert_eq!(e.violation(&c), 0.0);
+        e.costs.params += 1; // one element (4 bytes) over the usable slice
+        assert!(e.violation(&c) > 0.0);
     }
 }

@@ -11,12 +11,13 @@
 
 use std::time::Instant;
 
+use super::arena::{eval_ids, materialize, Candidate, SearchArena};
 use super::mutation::Mutator;
 use super::pareto;
 use crate::coordinator::config::CompressionConfig;
 use crate::coordinator::encoding::ProgressiveCode;
-use crate::coordinator::eval::{Constraints, Evaluation, Evaluator};
-use crate::coordinator::operators::ALL_OPS;
+use crate::coordinator::eval::{Constraints, EvalCore, Evaluation, Evaluator};
+use crate::coordinator::operators::{Op, ALL_OPS};
 use crate::util::rng::Rng;
 
 /// Tunables of the Runtime3C search (paper defaults).
@@ -89,8 +90,164 @@ impl Runtime3C {
         Runtime3C { params, mutator }
     }
 
-    /// Run Algorithm 1 under `constraints`.
+    /// Run Algorithm 1 under `constraints` — the arena-backed incremental
+    /// path (DESIGN.md §9-1).  Candidates extend the inherited prefix by
+    /// one operator in O(1) (prefix accumulators + memoized identity
+    /// tails), live as packed op-ids in the per-search arena, and only
+    /// the survivor materializes a `CompressionConfig`/`Evaluation`.
+    /// Decision-for-decision identical to [`Self::search_full`], the
+    /// O(L²) full-evaluation oracle (`tests/search_parity.rs`).
     pub fn search(&self, eval: &Evaluator, constraints: &Constraints) -> SearchResult {
+        let t0 = Instant::now();
+        let n = eval.n_layers();
+        let mut rng = Rng::new(self.params.seed);
+        let mut arena = SearchArena::new(eval);
+        let mut code = ProgressiveCode::new();
+        let mut evaluated = 0usize;
+        let mut early_stop = false;
+        let mut layers_visited = 0usize;
+        // Mirror of the full path's `current` config, as packed op-ids.
+        let mut current_ids = vec![0u8; n];
+        let mut prev_score = arena.identity_core(constraints).score(constraints);
+
+        // Line 2: iterate conv layers, starting from the second (idx 1).
+        for layer in 1..n {
+            layers_visited += 1;
+            // Line 3: inherit the committed prefix (or restart from the
+            // identity prefix — the locally greedy ablation).
+            let inherited = self.params.inherit;
+
+            // Line 1: candidate space at this layer = hardware-efficient
+            // operator groups Δ', each scored as a one-operator extension.
+            let mut candidates: Vec<Candidate> = Vec::with_capacity(ALL_OPS.len());
+            for &op in ALL_OPS.iter() {
+                let (cop, core) = arena.eval_extension(layer, op, inherited, constraints);
+                evaluated += 1;
+                candidates.push(Candidate { op: cop, core });
+            }
+
+            // Valid-space guard (paper: exclude A_loss > 5%) — unless that
+            // empties the pool entirely.
+            let valid: Vec<Candidate> = {
+                let v: Vec<Candidate> = candidates
+                    .iter()
+                    .filter(|e| e.core.acc_loss <= self.params.valid_loss_cap)
+                    .copied()
+                    .collect();
+                if v.is_empty() {
+                    candidates.clone()
+                } else {
+                    v
+                }
+            };
+
+            // Line 4: two best compromises from the Pareto front.
+            let front = pareto::pareto_front(&valid);
+            let two = pareto::best_two(&valid, &front, constraints);
+            let mut pool: Vec<Candidate> = two.into_iter().copied().collect();
+
+            // Line 5: mutate/augment to `augmented` candidates.
+            if self.params.mutate {
+                let need = self.params.augmented.saturating_sub(pool.len());
+                let seeds: Vec<Op> = pool.iter().map(|e| e.op).collect();
+                let mut added = 0usize;
+                'grow: for &seed_op in seeds.iter().cycle() {
+                    if added >= need {
+                        break 'grow;
+                    }
+                    let mutants = self.mutator.mutate_ops_at(seed_op, layer, 2, &mut rng);
+                    for m in mutants {
+                        if added >= need {
+                            break 'grow;
+                        }
+                        let (cop, core) = arena.eval_extension(layer, m, inherited, constraints);
+                        evaluated += 1;
+                        pool.push(Candidate { op: cop, core });
+                        added += 1;
+                    }
+                }
+            }
+
+            // The valid-space guard applies to the augmented pool too —
+            // mutation must not smuggle in candidates beyond the paper's
+            // A_loss > 5% invalid region.
+            let pool: Vec<Candidate> = {
+                let v: Vec<Candidate> = pool
+                    .iter()
+                    .filter(|e| e.core.acc_loss <= self.params.valid_loss_cap)
+                    .copied()
+                    .collect();
+                if v.is_empty() {
+                    pool
+                } else {
+                    v
+                }
+            };
+
+            // Line 6: Pareto-optimal survivor (min A_loss, max E).
+            let survivor = pareto::survivor(&pool, constraints).copied();
+            let chosen_core: Option<EvalCore> = match survivor {
+                Some(surv) => {
+                    // Lines 7-8: adopt the survivor into `current`.
+                    if self.params.inherit {
+                        current_ids[layer] = surv.op.id();
+                    } else {
+                        for b in current_ids.iter_mut() {
+                            *b = 0;
+                        }
+                        current_ids[layer] = surv.op.id();
+                    }
+                    Some(surv.core)
+                }
+                None => None,
+            };
+            let adopted = Op::from_id(current_ids[layer]).expect("arena ids are valid");
+            code = code.extend(adopted);
+            if self.params.inherit {
+                // Fold the adopted op into the committed prefix (O(1)).
+                arena.commit(layer, adopted);
+            }
+
+            // Lines 9-12: forward-evaluate the whole model and stop when
+            // the current deployment context is satisfied.  The whole
+            // model *is* the adopted candidate, so its core is reused;
+            // the no-survivor non-inherit corner falls back to a direct
+            // arena scoring of `current`.
+            let whole: EvalCore = match chosen_core {
+                Some(core) => core,
+                None if self.params.inherit => candidates[0].core,
+                None => eval_ids(eval, &current_ids, constraints),
+            };
+            evaluated += 1;
+            let improvement = prev_score - whole.score(constraints);
+            prev_score = whole.score(constraints);
+            if whole.feasible && improvement.abs() <= self.params.converge_eps {
+                early_stop = layer + 1 < n;
+                break;
+            }
+        }
+
+        // Survivor-only materialization: the one config/Evaluation this
+        // search allocates, produced by the full-evaluation oracle so the
+        // returned `Evaluation` is the oracle's own output.
+        let config = materialize(&current_ids);
+        let evaluation = eval.evaluate(&config, constraints);
+        SearchResult {
+            evaluation,
+            layers_visited,
+            candidates_evaluated: evaluated,
+            search_time_us: t0.elapsed().as_micros(),
+            code,
+            early_stop,
+        }
+    }
+
+    /// Run Algorithm 1 under `constraints` with full per-candidate
+    /// evaluation (`Evaluator::evaluate` on a materialized config for
+    /// every candidate) — O(L) per candidate, O(L²) per search.  Kept as
+    /// the parity oracle for the arena path and as `bench_search`'s
+    /// `--full-eval` baseline mode.
+    pub fn search_full(&self, eval: &Evaluator, constraints: &Constraints) -> SearchResult {
         let t0 = Instant::now();
         let n = eval.n_layers();
         let mut rng = Rng::new(self.params.seed);
@@ -282,6 +439,45 @@ mod tests {
         let c = Constraints::from_battery(0.5, 0.05, 20.0, 150 * 1024);
         let res = r3c.search(&eval, &c);
         assert_eq!(res.code.visited(), res.layers_visited);
+    }
+
+    #[test]
+    fn incremental_search_matches_full_oracle() {
+        // The arena path must make decision-for-decision identical choices
+        // to the full-evaluation oracle, across contexts and ablations.
+        let (eval, _) = setup();
+        let task = toy_task();
+        let contexts = [
+            Constraints::from_battery(0.9, 0.5, 1000.0, 8 << 20),
+            Constraints::from_battery(0.5, 0.10, 50.0, 150 * 1024),
+            Constraints::from_battery(0.4, 0.05, 20.0, 220 * 1024),
+            Constraints::from_battery(0.1, 0.05, 40.0, 2 << 20),
+        ];
+        let params = [
+            Runtime3CParams::default(),
+            Runtime3CParams { mutate: false, ..Default::default() },
+            Runtime3CParams { inherit: false, ..Default::default() },
+            Runtime3CParams { inherit: false, mutate: false, ..Default::default() },
+            Runtime3CParams { seed: 99, converge_eps: 0.0, ..Default::default() },
+        ];
+        for p in params {
+            let r3c = Runtime3C::with_params(Mutator::from_task(&task), p);
+            for c in &contexts {
+                let fast = r3c.search(&eval, c);
+                let full = r3c.search_full(&eval, c);
+                assert_eq!(fast.evaluation.config, full.evaluation.config, "{p:?}");
+                assert_eq!(
+                    fast.evaluation.score(c).to_bits(),
+                    full.evaluation.score(c).to_bits(),
+                    "{p:?}"
+                );
+                assert_eq!(fast.evaluation.feasible, full.evaluation.feasible, "{p:?}");
+                assert_eq!(fast.layers_visited, full.layers_visited, "{p:?}");
+                assert_eq!(fast.candidates_evaluated, full.candidates_evaluated, "{p:?}");
+                assert_eq!(fast.early_stop, full.early_stop, "{p:?}");
+                assert_eq!(fast.code.digits(), full.code.digits(), "{p:?}");
+            }
+        }
     }
 
     #[test]

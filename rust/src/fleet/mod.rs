@@ -38,6 +38,7 @@ pub mod report;
 pub mod scenarios;
 pub mod session;
 
+pub use crate::coordinator::plancache::{PlanCache, PlanMode};
 pub use pool::{run_fleet, run_fleet_dispatch, shard_of, FleetConfig};
 pub use report::{ArchetypeSummary, FleetReport, LatencySummary};
 pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};

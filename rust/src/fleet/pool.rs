@@ -31,6 +31,7 @@ use super::scenarios::Archetype;
 use super::session::{DeviceReport, DeviceSession, SimVariantCache};
 use crate::context::events::Event;
 use crate::coordinator::manifest::Manifest;
+use crate::coordinator::plancache::{PlanCache, PlanMode};
 use crate::dispatch::{
     admit_shard, assemble_batches, AdmissionStats, BatchStats, DispatchConfig, DispatchReport,
     ShardAdmission, StealPool,
@@ -53,6 +54,9 @@ pub struct FleetConfig {
     pub task: String,
     /// Stripe count of the shared variant cache.
     pub cache_stripes: usize,
+    /// Evolution plan policy: exact constraints, banded, or banded with
+    /// one fleet-wide shared plan cache (DESIGN.md §9-2).
+    pub plan: PlanMode,
 }
 
 impl Default for FleetConfig {
@@ -64,23 +68,37 @@ impl Default for FleetConfig {
             seed: 42,
             task: "d3".to_string(),
             cache_stripes: 16,
+            plan: PlanMode::Off,
         }
     }
 }
 
 impl FleetConfig {
     /// Parse the bench binaries' shared fleet flags (`--devices`,
-    /// `--shards`, `--hours`, `--seed`, `--task`, `--stripes`) over
-    /// this config's values as defaults.
-    pub fn from_args(args: &crate::util::cli::Args, defaults: FleetConfig) -> FleetConfig {
-        FleetConfig {
+    /// `--shards`, `--hours`, `--seed`, `--task`, `--stripes`,
+    /// `--plan off|banded|shared`) over this config's values as
+    /// defaults.  A malformed `--plan` value is an error the caller
+    /// surfaces (the bins exit through their `Result` main).
+    pub fn from_args(args: &crate::util::cli::Args, defaults: FleetConfig) -> Result<FleetConfig> {
+        let plan = match args.get("plan") {
+            Some(s) => PlanMode::parse(s)
+                .ok_or_else(|| anyhow!("unknown --plan {s:?} (expected off|banded|shared)"))?,
+            None => defaults.plan,
+        };
+        Ok(FleetConfig {
             devices: args.get_usize("devices", defaults.devices),
             shards: args.get_usize("shards", defaults.shards),
             duration_s: args.get_f64("hours", defaults.duration_s / 3600.0) * 3600.0,
             seed: args.get_usize("seed", defaults.seed as usize) as u64,
             task: args.get_or("task", &defaults.task).to_string(),
             cache_stripes: args.get_usize("stripes", defaults.cache_stripes),
-        }
+            plan,
+        })
+    }
+
+    /// The shared plan cache this config calls for (`Shared` only).
+    pub fn make_plan_cache(&self) -> Option<Arc<PlanCache>> {
+        (self.plan == PlanMode::Shared).then(|| Arc::new(PlanCache::new(self.cache_stripes)))
     }
 }
 
@@ -100,13 +118,17 @@ pub fn shard_of(device_id: u64, shards: usize) -> usize {
 pub fn run_fleet(manifest: &Manifest, cfg: &FleetConfig) -> Result<FleetReport> {
     let shards = cfg.shards.max(1);
     let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
+    let plan_cache = cfg.make_plan_cache();
     let t0 = Instant::now();
 
     let per_shard: Vec<Result<Vec<DeviceReport>>> = thread::scope(|scope| {
         let mut handles = Vec::with_capacity(shards);
         for shard in 0..shards {
             let cache = Arc::clone(&cache);
-            handles.push(scope.spawn(move || run_shard(manifest, cfg, shard, shards, &cache)));
+            let plan_cache = plan_cache.clone();
+            handles.push(scope.spawn(move || {
+                run_shard(manifest, cfg, shard, shards, &cache, plan_cache.as_ref())
+            }));
         }
         handles
             .into_iter()
@@ -119,7 +141,8 @@ pub fn run_fleet(manifest: &Manifest, cfg: &FleetConfig) -> Result<FleetReport> 
         device_reports.extend(shard_result?);
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    Ok(FleetReport::aggregate(cfg, device_reports, cache.stats(), wall_ms))
+    let plan_stats = plan_cache.map(|p| p.stats());
+    Ok(FleetReport::aggregate(cfg, device_reports, cache.stats(), plan_stats, wall_ms))
 }
 
 /// One shard worker: own the sessions for `shard`, drain them in
@@ -130,13 +153,18 @@ fn run_shard(
     shard: usize,
     shards: usize,
     cache: &SimVariantCache,
+    plan_cache: Option<&Arc<PlanCache>>,
 ) -> Result<Vec<DeviceReport>> {
     let ids: Vec<u64> = (0..cfg.devices as u64)
         .filter(|&d| shard_of(d, shards) == shard)
         .collect();
     let mut sessions = ids
         .iter()
-        .map(|&d| DeviceSession::new(manifest, &cfg.task, d, cfg.seed, cfg.duration_s))
+        .map(|&d| {
+            let mut s = DeviceSession::new(manifest, &cfg.task, d, cfg.seed, cfg.duration_s)?;
+            s.set_plan_mode(cfg.plan, plan_cache);
+            Ok(s)
+        })
         .collect::<Result<Vec<DeviceSession>>>()?;
 
     // Per-shard simulated-time queue: (next-due time as ordered bits, idx).
@@ -186,6 +214,7 @@ pub fn run_fleet_dispatch(
     // not spawned (degenerate `shards > devices` stays well-formed).
     let workers = cfg.shards.max(1).min(cfg.devices.max(1));
     let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
+    let plan_cache = cfg.make_plan_cache();
     let pool = StealPool::new(workers, cfg.devices);
     let t0 = Instant::now();
 
@@ -193,9 +222,10 @@ pub fn run_fleet_dispatch(
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let cache = Arc::clone(&cache);
+            let plan_cache = plan_cache.clone();
             let pool = &pool;
             handles.push(scope.spawn(move || {
-                run_dispatch_worker(manifest, cfg, dcfg, w, workers, pool, &cache)
+                run_dispatch_worker(manifest, cfg, dcfg, w, workers, pool, &cache, plan_cache.as_ref())
             }));
         }
         handles
@@ -239,7 +269,9 @@ pub fn run_fleet_dispatch(
         })
         .collect();
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let mut report = FleetReport::aggregate(cfg, device_reports, cache.stats(), wall_ms);
+    let plan_stats = plan_cache.map(|p| p.stats());
+    let mut report =
+        FleetReport::aggregate(cfg, device_reports, cache.stats(), plan_stats, wall_ms);
     report.dispatch = Some(DispatchReport::new(
         dcfg,
         workers,
@@ -255,6 +287,7 @@ pub fn run_fleet_dispatch(
 
 /// One dispatch-mode worker: build the home shard's sessions, run its
 /// admission pre-pass, then step from the shared work-stealing pool.
+#[allow(clippy::too_many_arguments)]
 fn run_dispatch_worker(
     manifest: &Manifest,
     cfg: &FleetConfig,
@@ -263,6 +296,7 @@ fn run_dispatch_worker(
     workers: usize,
     pool: &StealPool,
     cache: &SimVariantCache,
+    plan_cache: Option<&Arc<PlanCache>>,
 ) -> Result<WorkerOutcome> {
     // If this worker unwinds, don't leave stealing workers spinning on
     // the remaining-session count forever.
@@ -291,6 +325,7 @@ fn run_dispatch_worker(
             }
         };
         session.home_shard = w;
+        session.set_plan_mode(cfg.plan, plan_cache);
         sessions.push(Box::new(session));
     }
 

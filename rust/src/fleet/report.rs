@@ -77,6 +77,14 @@ pub struct FleetReport {
     pub search_p99_us: f64,
     pub energy_j: f64,
     pub cache: CacheStats,
+    /// Shared plan-cache counters (DESIGN.md §9-2); `None` unless the
+    /// run used `PlanMode::Shared`.
+    pub plan: Option<CacheStats>,
+    /// Per-device plan-cache outcome totals (hits, misses, stale) summed
+    /// over sessions — agrees with `plan` on single-process runs.
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_stale: u64,
     pub per_archetype: Vec<ArchetypeSummary>,
     pub wall_ms: f64,
     /// Dispatch-layer telemetry (DESIGN.md §8-4); `None` when the run
@@ -90,6 +98,7 @@ impl FleetReport {
         cfg: &FleetConfig,
         reports: Vec<DeviceReport>,
         cache: CacheStats,
+        plan: Option<CacheStats>,
         wall_ms: f64,
     ) -> FleetReport {
         let mut latency_us = Series::default();
@@ -99,6 +108,9 @@ impl FleetReport {
         let mut shed = 0usize;
         let mut evolutions = 0usize;
         let mut energy_j = 0.0f64;
+        let mut plan_hits = 0u64;
+        let mut plan_misses = 0u64;
+        let mut plan_stale = 0u64;
         let mut by_archetype: BTreeMap<&'static str, Vec<&DeviceReport>> = BTreeMap::new();
         for r in &reports {
             latency_us.extend_from(&r.latency_us);
@@ -108,6 +120,9 @@ impl FleetReport {
             shed += r.shed;
             evolutions += r.evolutions;
             energy_j += r.energy_j;
+            plan_hits += r.plan_hits;
+            plan_misses += r.plan_misses;
+            plan_stale += r.plan_stale;
             by_archetype.entry(r.archetype).or_default().push(r);
         }
 
@@ -165,6 +180,10 @@ impl FleetReport {
             search_p99_us: search_pcts[1],
             energy_j,
             cache,
+            plan,
+            plan_hits,
+            plan_misses,
+            plan_stale,
             per_archetype,
             wall_ms,
             dispatch: None,
@@ -193,6 +212,7 @@ impl FleetReport {
         cache.insert("compiled".into(), num(self.cache.entries as f64));
         cache.insert("hits".into(), num(self.cache.hits as f64));
         cache.insert("misses".into(), num(self.cache.misses as f64));
+        cache.insert("stale".into(), num(self.cache.stale as f64));
         cache.insert("hit_rate".into(), num(self.cache.hit_rate()));
 
         let mut search = BTreeMap::new();
@@ -224,6 +244,15 @@ impl FleetReport {
         root.insert("latency_ms".into(), latency_json(&self.latency));
         root.insert("search_us".into(), Json::Obj(search));
         root.insert("cache".into(), Json::Obj(cache));
+        if let Some(plan) = &self.plan {
+            let mut p = BTreeMap::new();
+            p.insert("plans".into(), num(plan.entries as f64));
+            p.insert("hits".into(), num(plan.hits as f64));
+            p.insert("misses".into(), num(plan.misses as f64));
+            p.insert("stale".into(), num(plan.stale as f64));
+            p.insert("hit_rate".into(), num(plan.hit_rate()));
+            root.insert("plan_cache".into(), Json::Obj(p));
+        }
         root.insert("archetypes".into(), Json::Arr(archetypes));
         if let Some(dispatch) = &self.dispatch {
             root.insert("dispatch".into(), dispatch.to_json());

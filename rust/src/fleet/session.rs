@@ -22,6 +22,8 @@
 //! attached the session serves every event inline — the direct path,
 //! byte-identical to PR 1.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::scenarios::{Archetype, Scenario};
@@ -29,11 +31,12 @@ use crate::context::{ContextSimulator, Trigger};
 use crate::context::events::Event;
 use crate::coordinator::engine::AdaSpring;
 use crate::coordinator::manifest::Manifest;
+use crate::coordinator::plancache::{ContextQuantizer, PlanCache, PlanMode};
 use crate::coordinator::CompressionConfig;
 use crate::dispatch::{AdmissionVerdict, ServedRequest};
 use crate::metrics::Series;
 use crate::platform::{EnergyModel, Platform};
-use crate::runtime::ShardedCache;
+use crate::runtime::{CacheOutcome, ShardedCache};
 use crate::serving::{EvolutionRecord, ServingReport, CONTEXT_CHECK_PERIOD_S};
 
 /// A simulated compiled-variant entry: what the shared cache holds on the
@@ -83,6 +86,11 @@ pub struct DeviceSession {
     served: Vec<ServedRequest>,
     /// Events shed at admission (never executed, no energy drained).
     shed: usize,
+    /// Plan-cache outcome counters (DESIGN.md §9-2); all zero when the
+    /// session runs without a shared plan cache.
+    plan_hits: u64,
+    plan_misses: u64,
+    plan_stale: u64,
 }
 
 /// A finished session's summary, handed to the fleet aggregator.
@@ -104,6 +112,11 @@ pub struct DeviceReport {
     pub energy_j: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Shared plan-cache lookups by this session (0s on PlanMode::Off /
+    /// Banded — only `Shared` consults a cache).
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_stale: u64,
 }
 
 impl DeviceSession {
@@ -167,7 +180,28 @@ impl DeviceSession {
             verdicts: None,
             served: Vec::new(),
             shed: 0,
+            plan_hits: 0,
+            plan_misses: 0,
+            plan_stale: 0,
         })
+    }
+
+    /// Route this session's evolutions through the fleet plan policy
+    /// (DESIGN.md §9-2): `Banded` quantizes constraints to band
+    /// representatives, `Shared` additionally consults the fleet-wide
+    /// plan cache.  `Off` leaves the exact-constraints legacy path.
+    pub fn set_plan_mode(&mut self, mode: PlanMode, cache: Option<&Arc<PlanCache>>) {
+        match mode {
+            PlanMode::Off => {}
+            PlanMode::Banded => self.engine.set_context_banding(ContextQuantizer::default()),
+            PlanMode::Shared => {
+                if let Some(c) = cache {
+                    self.engine.set_plan_cache(Arc::clone(c));
+                } else {
+                    self.engine.set_context_banding(ContextQuantizer::default());
+                }
+            }
+        }
     }
 
     /// The session's pre-sampled event trace (the dispatch pre-pass's
@@ -241,6 +275,12 @@ impl DeviceSession {
             if self.trigger.should_fire(&snap) {
                 let constraints = self.engine.constraints_for(&snap);
                 let evo = self.engine.evolve(&constraints)?;
+                match evo.plan_outcome {
+                    Some(CacheOutcome::Hit) => self.plan_hits += 1,
+                    Some(CacheOutcome::Miss) => self.plan_misses += 1,
+                    Some(CacheOutcome::Stale) => self.plan_stale += 1,
+                    None => {}
+                }
                 if self.loaded_variant != Some(evo.variant_id) {
                     self.load_variant(cache, evo.variant_id)?;
                     self.loaded_variant = Some(evo.variant_id);
@@ -352,6 +392,9 @@ impl DeviceSession {
             energy_j: self.report.inferences as f64 * self.energy_per_inference_j,
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
+            plan_hits: self.plan_hits,
+            plan_misses: self.plan_misses,
+            plan_stale: self.plan_stale,
         }
     }
 }

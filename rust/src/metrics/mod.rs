@@ -57,6 +57,27 @@ impl Table {
         out
     }
 
+    /// JSON emission: one object per row keyed by header — the bench
+    /// binaries' shared `--json-out` format for table-shaped reports.
+    /// Cells stay strings (they carry formatted values like "1.2 ± 0.3").
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let rows = self
+            .rows
+            .iter()
+            .map(|row| {
+                let obj = self
+                    .headers
+                    .iter()
+                    .zip(row.iter())
+                    .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                    .collect();
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
     /// Render as CSV.
     pub fn to_csv(&self) -> String {
         let esc = |s: &String| {

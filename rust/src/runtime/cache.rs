@@ -24,21 +24,28 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-/// Cache key: (task name, palette variant id).
+/// Cache key: (task name, palette variant id) — the default key type.
+/// The cache is generic over the key, so the coordinator's evolution
+/// plan cache reuses the same striping (keyed by quantized context
+/// signature, DESIGN.md §9-2).
 pub type VariantKey = (String, usize);
 
 /// Snapshot of the cache counters.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct CacheStats {
     pub entries: usize,
     pub hits: u64,
     pub misses: u64,
+    /// Lookups that found an entry but failed revalidation (rebuilt in
+    /// place; only [`ShardedCache::get_or_revalidate_with`] produces
+    /// these — plain lookups never do).
+    pub stale: u64,
 }
 
 impl CacheStats {
     /// Hits over total lookups (0 when the cache was never consulted).
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.misses;
+        let total = self.hits + self.misses + self.stale;
         if total == 0 {
             0.0
         } else {
@@ -47,30 +54,43 @@ impl CacheStats {
     }
 }
 
-/// A lock-striped `(task, variant) → Arc<V>` map with build-once inserts.
-pub struct ShardedCache<V> {
-    stripes: Vec<Mutex<HashMap<VariantKey, Arc<V>>>>,
+/// How a revalidated lookup resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Entry present and valid — reused.
+    Hit,
+    /// No entry — built.
+    Miss,
+    /// Entry present but failed revalidation — rebuilt.
+    Stale,
+}
+
+/// A lock-striped `K → Arc<V>` map with build-once inserts.
+pub struct ShardedCache<V, K = VariantKey> {
+    stripes: Vec<Mutex<HashMap<K, Arc<V>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    stale: AtomicU64,
 }
 
 /// Default stripe count — enough that a handful of shard workers rarely
 /// collide, small enough to stay cheap for single-engine use.
 pub const DEFAULT_STRIPES: usize = 16;
 
-impl<V> ShardedCache<V> {
-    pub fn new(stripes: usize) -> ShardedCache<V> {
+impl<V, K: Hash + Eq> ShardedCache<V, K> {
+    pub fn new(stripes: usize) -> ShardedCache<V, K> {
         let n = stripes.max(1);
         ShardedCache {
             stripes: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
         }
     }
 
     /// Stripe index a key hashes to (stable per key for a given stripe
     /// count; exposed so tests can assert the distribution).
-    pub fn stripe_of(&self, key: &VariantKey) -> usize {
+    pub fn stripe_of(&self, key: &K) -> usize {
         let mut h = DefaultHasher::new();
         key.hash(&mut h);
         (h.finish() % self.stripes.len() as u64) as usize
@@ -81,7 +101,7 @@ impl<V> ShardedCache<V> {
         self.stripes.len()
     }
 
-    fn stripe(&self, key: &VariantKey) -> &Mutex<HashMap<VariantKey, Arc<V>>> {
+    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, Arc<V>>> {
         &self.stripes[self.stripe_of(key)]
     }
 
@@ -92,7 +112,7 @@ impl<V> ShardedCache<V> {
     /// stripe and the second caller finds the first caller's entry).
     pub fn get_or_try_insert_with(
         &self,
-        key: VariantKey,
+        key: K,
         build: impl FnOnce() -> Result<V>,
     ) -> Result<(Arc<V>, bool)> {
         let mut map = self.stripe(&key).lock().unwrap_or_else(|p| p.into_inner());
@@ -106,8 +126,37 @@ impl<V> ShardedCache<V> {
         Ok((entry, false))
     }
 
+    /// Like [`Self::get_or_try_insert_with`], but an existing entry is
+    /// revalidated with `valid` first; a failing entry is rebuilt in
+    /// place and counted as stale (the plan cache's epoch invalidation,
+    /// DESIGN.md §9-2).  The stripe lock is held across `build`, same
+    /// build-once guarantee as the plain path.
+    pub fn get_or_revalidate_with(
+        &self,
+        key: K,
+        valid: impl Fn(&V) -> bool,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, CacheOutcome)> {
+        let mut map = self.stripe(&key).lock().unwrap_or_else(|p| p.into_inner());
+        let outcome = match map.get(&key) {
+            Some(entry) if valid(entry) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((entry.clone(), CacheOutcome::Hit));
+            }
+            Some(_) => CacheOutcome::Stale,
+            None => CacheOutcome::Miss,
+        };
+        let entry = Arc::new(build()?);
+        map.insert(key, entry.clone());
+        match outcome {
+            CacheOutcome::Stale => self.stale.fetch_add(1, Ordering::Relaxed),
+            _ => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        Ok((entry, outcome))
+    }
+
     /// Fetch without building (no hit/miss accounting).
-    pub fn peek(&self, key: &VariantKey) -> Option<Arc<V>> {
+    pub fn peek(&self, key: &K) -> Option<Arc<V>> {
         let map = self.stripe(key).lock().unwrap_or_else(|p| p.into_inner());
         map.get(key).cloned()
     }
@@ -124,12 +173,13 @@ impl<V> ShardedCache<V> {
         self.len() == 0
     }
 
-    /// Counter snapshot (entries / hits / misses).
+    /// Counter snapshot (entries / hits / misses / stale).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             entries: self.len(),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
         }
     }
 }
@@ -189,6 +239,26 @@ mod tests {
         assert!(cache.peek(&key).is_none());
         let (_, hit) = cache.get_or_try_insert_with(key, || Ok(5)).unwrap();
         assert!(!hit, "failed build must not poison the key");
+    }
+
+    #[test]
+    fn revalidation_rebuilds_stale_entries() {
+        // Generic-key path: epoch-tagged entries, the plan cache's shape.
+        let cache: ShardedCache<(u64, u32), u32> = ShardedCache::new(4);
+        let fetch = |epoch: u64, value: u32| {
+            cache
+                .get_or_revalidate_with(7u32, |e| e.0 == epoch, || Ok((epoch, value)))
+                .unwrap()
+        };
+        let (a, o) = fetch(0, 10);
+        assert_eq!((*a, o), ((0, 10), CacheOutcome::Miss));
+        let (b, o) = fetch(0, 99);
+        assert_eq!((*b, o), ((0, 10), CacheOutcome::Hit), "valid entry reused, not rebuilt");
+        let (c, o) = fetch(1, 42);
+        assert_eq!((*c, o), ((1, 42), CacheOutcome::Stale), "old epoch rebuilt in place");
+        let s = cache.stats();
+        assert_eq!((s.entries, s.hits, s.misses, s.stale), (1, 1, 1, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-9);
     }
 
     #[test]

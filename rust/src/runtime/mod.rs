@@ -9,5 +9,5 @@
 pub mod cache;
 pub mod executor;
 
-pub use cache::{CacheStats, ShardedCache, VariantKey, DEFAULT_STRIPES};
+pub use cache::{CacheOutcome, CacheStats, ShardedCache, VariantKey, DEFAULT_STRIPES};
 pub use executor::{BatchExecStats, ExecStats, ExecutableCache, Executor, LoadedVariant};

@@ -72,6 +72,9 @@ pub struct EvolutionRecord {
     pub energy_mj: f64,
     pub c_sp: f64,
     pub c_sa: f64,
+    /// Whether the shared plan cache served this evolution without a
+    /// fresh search (false when no cache is attached, DESIGN.md §9-2).
+    pub plan_cache_hit: bool,
 }
 
 impl EvolutionRecord {
@@ -90,6 +93,7 @@ impl EvolutionRecord {
             energy_mj: evo.search.evaluation.energy_mj,
             c_sp: evo.search.evaluation.costs.c_sp(),
             c_sa: evo.search.evaluation.costs.c_sa(),
+            plan_cache_hit: evo.plan_cache_hit(),
         }
     }
 }

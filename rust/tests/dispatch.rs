@@ -31,6 +31,7 @@ fn fleet_cfg(devices: usize, shards: usize, hours: f64) -> FleetConfig {
         seed: 42,
         task: "d3".to_string(),
         cache_stripes: 8,
+        ..FleetConfig::default()
     }
 }
 

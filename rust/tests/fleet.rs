@@ -12,8 +12,8 @@ use std::sync::Arc;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::{CompressionConfig, Manifest};
 use adaspring::fleet::{
-    run_fleet, shard_of, Archetype, DeviceSession, FleetConfig, Scenario, SimVariantCache,
-    ALL_ARCHETYPES,
+    run_fleet, shard_of, Archetype, DeviceSession, FleetConfig, PlanMode, Scenario,
+    SimVariantCache, ALL_ARCHETYPES,
 };
 use adaspring::platform::EnergyModel;
 use adaspring::runtime::{ExecutableCache, Executor, ShardedCache};
@@ -200,6 +200,7 @@ fn fleet_run_reuses_variants_across_sessions() {
         seed: 42,
         task: "d3".to_string(),
         cache_stripes: 8,
+        ..FleetConfig::default()
     };
     let report = run_fleet(&manifest, &cfg).unwrap();
     assert_eq!(report.devices, 24);
@@ -227,6 +228,68 @@ fn fleet_run_reuses_variants_across_sessions() {
     for a in &report.per_archetype {
         assert_eq!(a.devices, 4, "{}: round-robin gives 4 devices each", a.archetype);
     }
+}
+
+#[test]
+fn shared_plan_cache_preserves_fleet_results_with_nonzero_hit_rate() {
+    // Acceptance (ISSUE 3): plan-cache-enabled fleet runs report a
+    // nonzero hit rate with per-device results unchanged vs the
+    // cache-disabled (banded) control.  36 devices = 6 per archetype;
+    // same-archetype devices share initial battery and draw σ from at
+    // most 5 storage bands, so a startup signature collision — hence a
+    // hit — is guaranteed by pigeonhole.
+    let manifest = Manifest::synthetic();
+    let base = FleetConfig {
+        devices: 36,
+        shards: 4,
+        duration_s: 2.0 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        plan: PlanMode::Banded,
+    };
+    let banded = run_fleet(&manifest, &base).unwrap();
+    let shared =
+        run_fleet(&manifest, &FleetConfig { plan: PlanMode::Shared, ..base.clone() }).unwrap();
+
+    assert_eq!(banded.inferences, shared.inferences);
+    assert_eq!(banded.dropped, shared.dropped);
+    assert_eq!(banded.evolutions, shared.evolutions);
+    assert_eq!(banded.energy_j.to_bits(), shared.energy_j.to_bits());
+    assert_eq!(banded.latency.p50_ms.to_bits(), shared.latency.p50_ms.to_bits());
+    assert_eq!(banded.latency.p95_ms.to_bits(), shared.latency.p95_ms.to_bits());
+    assert_eq!(banded.latency.p99_ms.to_bits(), shared.latency.p99_ms.to_bits());
+    assert_eq!(banded.latency.mean_ms.to_bits(), shared.latency.mean_ms.to_bits());
+    assert_eq!(banded.per_archetype.len(), shared.per_archetype.len());
+    for (a, b) in banded.per_archetype.iter().zip(shared.per_archetype.iter()) {
+        assert_eq!(a.archetype, b.archetype);
+        assert_eq!(a.inferences, b.inferences, "{}", a.archetype);
+        assert_eq!(a.evolutions, b.evolutions, "{}", a.archetype);
+        assert_eq!(a.battery_end_mean.to_bits(), b.battery_end_mean.to_bits(), "{}", a.archetype);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{}", a.archetype);
+    }
+
+    // The banded control consults no cache; the shared run must report
+    // plan stats with reuse.
+    assert!(banded.plan.is_none());
+    assert_eq!(banded.plan_hits + banded.plan_misses + banded.plan_stale, 0);
+    let plan = shared.plan.expect("shared run reports plan-cache stats");
+    assert!(plan.hits > 0, "fleet sessions must reuse plans: {plan:?}");
+    assert_eq!(plan.stale, 0, "nothing bumps the epoch in-run");
+    assert_eq!(
+        shared.plan_hits + shared.plan_misses + shared.plan_stale,
+        plan.hits + plan.misses + plan.stale,
+        "per-device outcome totals agree with the cache counters"
+    );
+    assert_eq!(
+        (plan.hits + plan.misses) as usize,
+        shared.evolutions,
+        "every evolution consults the plan cache exactly once"
+    );
+    // The plan block lands in the JSON report.
+    let json = shared.to_json().to_string();
+    assert!(json.contains("\"plan_cache\""), "{json}");
+    assert!(!banded.to_json().to_string().contains("\"plan_cache\""));
 }
 
 /// Every number in a report must be finite — degenerate fleets may be
@@ -257,6 +320,7 @@ fn degenerate_fleets_produce_wellformed_empty_reports() {
             seed: 5,
             task: "d3".to_string(),
             cache_stripes: 0,
+            ..FleetConfig::default()
         };
         let label = format!("devices={devices} shards={shards} duration={duration_s}");
         let r = run_fleet(&manifest, &cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
@@ -299,6 +363,7 @@ fn fleet_json_report_has_the_documented_shape() {
         seed: 7,
         task: "d3".to_string(),
         cache_stripes: 4,
+        ..FleetConfig::default()
     };
     let report = run_fleet(&manifest, &cfg).unwrap();
     let json = report.to_json().to_string();

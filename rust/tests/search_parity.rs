@@ -1,0 +1,177 @@
+//! Acceptance (ISSUE 3): the arena's incremental scoring is bit-identical
+//! to `Evaluator::evaluate` (score, violation, feasibility) across
+//! randomized configs, platforms, and constraint sets; the incremental
+//! Runtime3C search reproduces the full-evaluation oracle decision for
+//! decision; and a plan-cache hit is exactly the result of a fresh banded
+//! search (DESIGN.md §9).
+
+use std::sync::Arc;
+
+use adaspring::coordinator::accuracy::AccuracyModel;
+use adaspring::coordinator::costmodel::CostModel;
+use adaspring::coordinator::engine::AdaSpring;
+use adaspring::coordinator::eval::{Constraints, Evaluator};
+use adaspring::coordinator::search::{eval_ids, Mutator, Runtime3C, Runtime3CParams};
+use adaspring::coordinator::{CompressionConfig, ContextQuantizer, Manifest, PlanCache};
+use adaspring::platform::Platform;
+use adaspring::runtime::CacheOutcome;
+use adaspring::util::rng::Rng;
+
+fn evaluator_for(platform: &Platform) -> Evaluator {
+    let manifest = Manifest::synthetic();
+    let task = manifest.task("d3").unwrap();
+    let cm = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+    Evaluator::new(cm, AccuracyModel::fit(task), platform)
+}
+
+fn random_constraints(rng: &mut Rng) -> Constraints {
+    Constraints::from_battery(
+        rng.range(0.05, 1.0),
+        rng.range(0.01, 0.2),
+        rng.range(5.0, 60.0),
+        (rng.range(0.3, 2.5) * 1024.0 * 1024.0) as u64,
+    )
+}
+
+#[test]
+fn arena_scoring_is_bit_identical_to_full_evaluation() {
+    let mut rng = Rng::new(0xA11CE);
+    for platform in Platform::extended() {
+        let eval = evaluator_for(&platform);
+        let bb = eval.cost_model().backbone().clone();
+        let n = bb.widths.len();
+        for _ in 0..200 {
+            let mut ids = vec![0u8; n];
+            for slot in ids.iter_mut().skip(1) {
+                *slot = rng.below(9) as u8;
+            }
+            let c = random_constraints(&mut rng);
+            let cfg = CompressionConfig::from_ids(&ids).unwrap().canonicalize(&bb);
+            let full = eval.evaluate(&cfg, &c);
+            let core = eval_ids(&eval, &ids, &c);
+            assert_eq!(full.core(), core, "ids {ids:?} on {}", platform.name);
+            assert_eq!(
+                full.score(&c).to_bits(),
+                core.score(&c).to_bits(),
+                "score must be bit-identical ({ids:?}, {})",
+                platform.name
+            );
+            assert_eq!(
+                full.violation(&c).to_bits(),
+                core.violation(&c).to_bits(),
+                "violation must be bit-identical ({ids:?}, {})",
+                platform.name
+            );
+            assert_eq!(full.feasible, core.feasible);
+        }
+    }
+}
+
+#[test]
+fn incremental_search_reproduces_the_oracle_across_random_contexts() {
+    let mut rng = Rng::new(7);
+    let manifest = Manifest::synthetic();
+    let task = manifest.task("d3").unwrap();
+    for platform in [Platform::raspberry_pi_4b(), Platform::wearable(), Platform::office_hub()] {
+        let eval = evaluator_for(&platform);
+        for seed in [1u64, 42, 0x3C] {
+            let r3c = Runtime3C::with_params(
+                Mutator::from_task(task),
+                Runtime3CParams { seed, ..Default::default() },
+            );
+            for _ in 0..15 {
+                let c = random_constraints(&mut rng);
+                let fast = r3c.search(&eval, &c);
+                let full = r3c.search_full(&eval, &c);
+                assert_eq!(
+                    fast.evaluation.config, full.evaluation.config,
+                    "seed {seed} on {}",
+                    platform.name
+                );
+                assert_eq!(fast.candidates_evaluated, full.candidates_evaluated);
+                assert_eq!(fast.layers_visited, full.layers_visited);
+                assert_eq!(fast.early_stop, full.early_stop);
+                assert_eq!(fast.code.digits(), full.code.digits());
+                assert_eq!(
+                    fast.evaluation.score(&c).to_bits(),
+                    full.evaluation.score(&c).to_bits()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_cache_hit_equals_fresh_banded_search() {
+    let manifest = Manifest::synthetic();
+    let platform = Platform::raspberry_pi_4b();
+    let cache = Arc::new(PlanCache::new(8));
+    let mut cached = AdaSpring::new(&manifest, "d3", &platform, false).unwrap();
+    cached.set_plan_cache(Arc::clone(&cache));
+    let mut banded = AdaSpring::new(&manifest, "d3", &platform, false).unwrap();
+    banded.set_context_banding(ContextQuantizer::default());
+
+    // Two contexts that differ only at noise level — one band.
+    let c1 = Constraints::from_battery(0.701, 0.05, 30.0, 1_900_000);
+    let c2 = Constraints::from_battery(0.703, 0.05, 30.0, 1_905_000);
+    let e1 = cached.evolve(&c1).unwrap();
+    let e2 = cached.evolve(&c2).unwrap();
+    assert_eq!(e1.plan_outcome, Some(CacheOutcome::Miss), "first lookup populates");
+    assert_eq!(e2.plan_outcome, Some(CacheOutcome::Hit), "same band must hit");
+
+    // The cache-disabled control (banded, fresh searches) produces the
+    // exact same plans — memoization, not approximation.
+    let f1 = banded.evolve(&c1).unwrap();
+    let f2 = banded.evolve(&c2).unwrap();
+    assert!(f1.plan_outcome.is_none() && f2.plan_outcome.is_none());
+    for (cached_evo, fresh) in [(&e1, &f1), (&e2, &f2)] {
+        assert_eq!(cached_evo.search.evaluation.config, fresh.search.evaluation.config);
+        assert_eq!(cached_evo.variant_id, fresh.variant_id);
+        assert_eq!(cached_evo.deployed_accuracy, fresh.deployed_accuracy);
+        assert_eq!(cached_evo.search.candidates_evaluated, fresh.search.candidates_evaluated);
+    }
+    let stats = cache.stats();
+    assert_eq!((stats.entries, stats.hits, stats.misses, stats.stale), (1, 1, 1, 0));
+}
+
+#[test]
+fn epoch_bump_marks_cached_plans_stale_and_rebuilds() {
+    let manifest = Manifest::synthetic();
+    let platform = Platform::jetbot();
+    let cache = Arc::new(PlanCache::new(4));
+    let mut engine = AdaSpring::new(&manifest, "d3", &platform, false).unwrap();
+    engine.set_plan_cache(Arc::clone(&cache));
+    let c = Constraints::from_battery(0.5, 0.05, 30.0, 2 << 20);
+
+    let miss = engine.evolve(&c).unwrap();
+    assert_eq!(miss.plan_outcome, Some(CacheOutcome::Miss));
+    cache.bump_epoch();
+    let stale = engine.evolve(&c).unwrap();
+    assert_eq!(stale.plan_outcome, Some(CacheOutcome::Stale), "old epoch rebuilds");
+    assert_eq!(
+        stale.search.evaluation.config, miss.search.evaluation.config,
+        "rebuild under an unchanged evaluator reproduces the plan"
+    );
+    let hit = engine.evolve(&c).unwrap();
+    assert_eq!(hit.plan_outcome, Some(CacheOutcome::Hit));
+    let stats = cache.stats();
+    assert_eq!((stats.entries, stats.hits, stats.misses, stats.stale), (1, 1, 1, 1));
+}
+
+#[test]
+fn exact_palette_override_survives_the_incremental_path() {
+    // Palette configs short-circuit to measured accuracy in predict_loss;
+    // the arena must take the same branch (the parity would break on
+    // exactly these configs otherwise).
+    let manifest = Manifest::synthetic();
+    let task = manifest.task("d3").unwrap();
+    let eval = evaluator_for(&Platform::raspberry_pi_4b());
+    let c = Constraints::from_battery(0.6, 0.05, 30.0, 2 << 20);
+    for v in &task.variants {
+        let cfg = CompressionConfig::from_ids(&v.config).unwrap();
+        let full = eval.evaluate(&cfg, &c);
+        let core = eval_ids(&eval, &v.config, &c);
+        assert_eq!(full.core(), core, "palette variant {}", v.id);
+        assert_eq!(core.acc_loss, (task.backbone.accuracy - v.accuracy).max(0.0));
+    }
+}
