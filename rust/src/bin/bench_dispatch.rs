@@ -34,16 +34,16 @@ use adaspring::util::json::Json;
 use adaspring::util::write_json_out;
 
 const ALLOWED: &[&str] = &[
-    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "window",
-    "capacity", "policy", "rate", "burst", "max-batch", "placement", "no-steal", "json-out",
-    "sweep", "csv",
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
+    "load", "window", "capacity", "policy", "rate", "burst", "max-batch", "placement",
+    "no-steal", "json-out", "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal"];
 
 const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--window SECS] [--capacity N] \
+                     [--feedback on|off] [--load X] [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--rate PER_S --burst N] [--max-batch N] [--placement modulo|packed] \
                      [--no-steal] [--json-out PATH] [--sweep] [--csv]";
@@ -93,13 +93,16 @@ fn main() -> Result<()> {
     let cfg = fleet_config(&args)?;
     let dcfg = dispatch_config(&args)?;
     println!(
-        "# Dispatch — {} devices x {:.1} h over {} shards (policy {}, window {} s, capacity {})\n",
+        "# Dispatch — {} devices x {:.1} h over {} shards (policy {}, window {} s, capacity {}, \
+         feedback {}, load x{})\n",
         cfg.devices,
         cfg.duration_s / 3600.0,
         cfg.shards,
         dcfg.policy.describe(),
         dcfg.batch_window_s,
-        dcfg.queue_capacity
+        dcfg.queue_capacity,
+        cfg.feedback.name(),
+        cfg.load_multiplier
     );
     let report = run_fleet_dispatch(&manifest, &cfg, &dcfg)?;
     print_summary(&report);

@@ -1,0 +1,323 @@
+//! Feedback-loop bench (DESIGN.md §10-6): the same overloaded fleet with
+//! the dispatch-telemetry → evolution feedback loop off and on, per
+//! overload profile.
+//!
+//! Usage:
+//!   cargo run --release --bin bench_feedback -- [--devices 12] [--shards 2]
+//!       [--hours 0.5] [--seed 42] [--task d3] [--manifest path]
+//!       [--window 0.25] [--capacity 4]
+//!       [--policy block|shed-newest|shed-oldest|deadline:SECS]
+//!       [--profile calm|diurnal-peak|surge|all] [--check-floor path]
+//!       [--json-out path] [--csv]
+//!
+//! Unknown flags are rejected with this usage.  Each profile scales the
+//! fleet's diurnal event curves by a fixed multiplier (calm ×1,
+//! diurnal-peak ×600, surge ×1500 — calibrated so the peak profiles
+//! offer ≈2–3× the modeled backbone service rate per shard, inside what
+//! compressed variants can absorb).  Per profile the bench runs
+//! `run_fleet_dispatch` twice — `--feedback off` (the PR 2 path: static
+//! window-capacity admission, no telemetry) and `--feedback on` (G/D/1
+//! service-model admission + constraint feedback + LoadSpike trigger) —
+//! and reports shed rate, p95 service latency, end-to-end dispatch p95,
+//! and the mean deployed accuracy loss.
+//!
+//! `--check-floor rust/feedback_floor.json` enforces the committed
+//! overload win on the diurnal-peak profile: shed-rate and p95 ratios
+//! (on/off) below their ceilings and bounded extra accuracy loss.  The
+//! simulation is deterministic, so the ratios are machine-independent.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use adaspring::dispatch::{BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{run_fleet_dispatch, FeedbackConfig, FleetConfig, FleetReport};
+use adaspring::metrics::Table;
+use adaspring::util::cli::Args;
+use adaspring::util::json::Json;
+use adaspring::util::write_json_out;
+
+const ALLOWED: &[&str] = &[
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "window",
+    "capacity", "policy", "profile", "check-floor", "json-out", "csv",
+];
+
+const BOOLEAN_FLAGS: &[&str] = &["csv"];
+
+const USAGE: &str = "usage: bench_feedback [--devices N] [--shards N] [--hours H] [--seed N] \
+                     [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
+                     [--window SECS] [--capacity N] \
+                     [--policy block|shed-newest|shed-oldest|deadline:SECS] \
+                     [--profile calm|diurnal-peak|surge|all] [--check-floor PATH] \
+                     [--json-out PATH] [--csv]\n\
+                     (the bench drives --feedback and --load itself, per profile and mode)";
+
+/// The overload profiles: (name, event-intensity multiplier).
+const PROFILES: [(&str, f64); 3] = [("calm", 1.0), ("diurnal-peak", 600.0), ("surge", 1500.0)];
+
+/// One (profile, feedback-mode) cell's headline numbers.
+struct Cell {
+    shed_rate: f64,
+    p95_service_ms: f64,
+    p95_total_ms: f64,
+    inferences: usize,
+    shed: usize,
+    evolutions: usize,
+    acc_loss_evo_mean: f64,
+}
+
+impl Cell {
+    fn from_report(r: &FleetReport) -> Cell {
+        let d = r.dispatch.as_ref().expect("dispatch runs carry dispatch stats");
+        let submitted = d.admission.submitted.max(1) as f64;
+        let p95_total_ms = if d.batches.total_us.is_empty() {
+            0.0
+        } else {
+            d.batches.total_us.percentiles(&[95.0])[0] / 1e3
+        };
+        Cell {
+            shed_rate: r.shed as f64 / submitted,
+            p95_service_ms: r.latency.p95_ms,
+            p95_total_ms,
+            inferences: r.inferences,
+            shed: r.shed,
+            evolutions: r.evolutions,
+            acc_loss_evo_mean: r.acc_loss_evo_mean,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("shed_rate".into(), Json::Num(self.shed_rate));
+        m.insert("p95_service_ms".into(), Json::Num(self.p95_service_ms));
+        m.insert("p95_total_ms".into(), Json::Num(self.p95_total_ms));
+        m.insert("inferences".into(), Json::Num(self.inferences as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
+        m.insert("evolutions".into(), Json::Num(self.evolutions as f64));
+        m.insert("acc_loss_evo_mean".into(), Json::Num(self.acc_loss_evo_mean));
+        Json::Obj(m)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
+    let manifest = adaspring::coordinator::Manifest::load_cli(
+        args.get("manifest"),
+        "artifacts/manifest.json",
+    )?;
+
+    // One parser for the shared fleet flags (devices/shards/hours/seed/
+    // task/stripes/plan); the bench drives feedback + load itself.
+    let defaults =
+        FleetConfig { devices: 12, shards: 2, duration_s: 0.5 * 3600.0, ..FleetConfig::default() };
+    let base = FleetConfig::from_args(&args, defaults)?;
+    let policy_name = args.get_or("policy", "shed-newest");
+    let policy = BackpressurePolicy::parse(policy_name)
+        .ok_or_else(|| anyhow!("bad --policy {policy_name:?}\n{USAGE}"))?;
+    let dcfg = DispatchConfig {
+        queue_capacity: args.get_usize("capacity", 4),
+        policy,
+        batch_window_s: args.get_f64("window", 0.25),
+        stealing: false,
+        ..DispatchConfig::default()
+    };
+
+    let wanted = args.get_or("profile", "all").to_string();
+    let profiles: Vec<(&str, f64)> = PROFILES
+        .iter()
+        .copied()
+        .filter(|(name, _)| wanted == "all" || wanted == *name)
+        .collect();
+    if profiles.is_empty() {
+        bail!("unknown --profile {wanted:?} (expected calm|diurnal-peak|surge|all)");
+    }
+
+    println!(
+        "# Feedback bench — {} devices x {:.2} h over {} shards (policy {}, window {} s, \
+         capacity {})\n",
+        base.devices,
+        base.duration_s / 3600.0,
+        base.shards,
+        dcfg.policy.describe(),
+        dcfg.batch_window_s,
+        dcfg.queue_capacity
+    );
+
+    let mut table = Table::new(&[
+        "profile", "feedback", "submitted", "shed", "shed %", "p95 svc ms", "p95 total ms",
+        "evolutions", "acc loss",
+    ]);
+    let mut records: Vec<Json> = Vec::new();
+    let mut peak_pair: Option<(Cell, Cell)> = None;
+
+    for (name, multiplier) in &profiles {
+        let off_cfg = FleetConfig {
+            load_multiplier: *multiplier,
+            feedback: FeedbackConfig::off(),
+            ..base.clone()
+        };
+        let on_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..off_cfg.clone() };
+        let r_off = run_fleet_dispatch(&manifest, &off_cfg, &dcfg)?;
+        let r_on = run_fleet_dispatch(&manifest, &on_cfg, &dcfg)?;
+        let off = Cell::from_report(&r_off);
+        let on = Cell::from_report(&r_on);
+
+        for (mode, cell, report) in
+            [("off", &off, &r_off), ("on", &on, &r_on)]
+        {
+            let d = report.dispatch.as_ref().expect("dispatch block");
+            table.row(vec![
+                name.to_string(),
+                mode.to_string(),
+                d.admission.submitted.to_string(),
+                cell.shed.to_string(),
+                format!("{:.1}", cell.shed_rate * 100.0),
+                format!("{:.2}", cell.p95_service_ms),
+                format!("{:.2}", cell.p95_total_ms),
+                cell.evolutions.to_string(),
+                format!("{:.4}", cell.acc_loss_evo_mean),
+            ]);
+        }
+
+        let mut rec = BTreeMap::new();
+        rec.insert("profile".into(), Json::Str(name.to_string()));
+        rec.insert("load_multiplier".into(), Json::Num(*multiplier));
+        rec.insert("off".into(), off.to_json());
+        rec.insert("on".into(), on.to_json());
+        rec.insert(
+            "shed_ratio_on_over_off".into(),
+            ratio_json(ratio(on.shed_rate, off.shed_rate)),
+        );
+        rec.insert(
+            "p95_ratio_on_over_off".into(),
+            ratio_json(ratio(on.p95_service_ms, off.p95_service_ms)),
+        );
+        rec.insert(
+            "extra_acc_loss".into(),
+            Json::Num(on.acc_loss_evo_mean - off.acc_loss_evo_mean),
+        );
+        if let Some(fbk) = &r_on.feedback {
+            rec.insert("telemetry".into(), fbk.telemetry_json());
+            rec.insert("feedback".into(), fbk.feedback_json());
+        }
+        records.push(Json::Obj(rec));
+        if *name == "diurnal-peak" {
+            peak_pair = Some((off, on));
+        }
+    }
+
+    if args.flag("csv") {
+        println!("{}", table.to_csv());
+    } else {
+        println!("{}", table.to_markdown());
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("task".into(), Json::Str(base.task.clone()));
+    root.insert("devices".into(), Json::Num(base.devices as f64));
+    root.insert("shards".into(), Json::Num(base.shards as f64));
+    root.insert("hours".into(), Json::Num(base.duration_s / 3600.0));
+    root.insert("policy".into(), Json::Str(dcfg.policy.describe()));
+    root.insert("profiles".into(), Json::Arr(records));
+    let json = Json::Obj(root);
+    println!("feedback JSON:\n{json}");
+    write_json_out(&args, &json)?;
+
+    if let Some(path) = args.get("check-floor") {
+        let Some((off, on)) = peak_pair else {
+            eprintln!(
+                "--check-floor needs the diurnal-peak profile \
+                 (use --profile all or diurnal-peak)"
+            );
+            std::process::exit(2);
+        };
+        check_floor(path, &off, &on)?;
+    }
+    Ok(())
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den <= 0.0 {
+        if num <= 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+/// An undefined (infinite) ratio serializes as `null`, never as a bare
+/// `inf` token that would make the emitted JSON unparseable.
+fn ratio_json(r: f64) -> Json {
+    if r.is_finite() {
+        Json::Num(r)
+    } else {
+        Json::Null
+    }
+}
+
+/// Fail (exit 1) when the committed diurnal-peak overload win does not
+/// hold: shed and p95 ratios (on/off) under their ceilings, extra
+/// accuracy loss bounded, and strictly-lower raw metrics.
+fn check_floor(path: &str, off: &Cell, on: &Cell) -> Result<()> {
+    let floor = Json::parse(&std::fs::read_to_string(path)?)?;
+    let max_shed_ratio = floor.get("max_shed_ratio")?.as_f64()?;
+    let max_p95_ratio = floor.get("max_p95_ratio")?.as_f64()?;
+    let max_extra_acc = floor.get("max_extra_acc_loss")?.as_f64()?;
+
+    let mut failures = Vec::new();
+    if off.shed == 0 {
+        failures.push(
+            "diurnal-peak off-run shed nothing — the overload profile is miscalibrated"
+                .to_string(),
+        );
+    }
+    if on.shed_rate >= off.shed_rate {
+        failures.push(format!(
+            "shed rate not strictly lower with feedback on: {:.3} vs {:.3}",
+            on.shed_rate, off.shed_rate
+        ));
+    }
+    if on.p95_service_ms >= off.p95_service_ms {
+        failures.push(format!(
+            "p95 service latency not strictly lower with feedback on: {:.2} vs {:.2} ms",
+            on.p95_service_ms, off.p95_service_ms
+        ));
+    }
+    let shed_ratio = ratio(on.shed_rate, off.shed_rate);
+    if shed_ratio > max_shed_ratio {
+        failures.push(format!("shed ratio {shed_ratio:.3} above ceiling {max_shed_ratio}"));
+    }
+    let p95_ratio = ratio(on.p95_service_ms, off.p95_service_ms);
+    if p95_ratio > max_p95_ratio {
+        failures.push(format!("p95 ratio {p95_ratio:.3} above ceiling {max_p95_ratio}"));
+    }
+    let extra = on.acc_loss_evo_mean - off.acc_loss_evo_mean;
+    if extra > max_extra_acc {
+        failures.push(format!(
+            "extra accuracy loss {extra:.4} above ceiling {max_extra_acc}"
+        ));
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "floor check ok: shed {:.1}% -> {:.1}% (ratio {:.3} <= {max_shed_ratio}), \
+         p95 {:.2} -> {:.2} ms (ratio {:.3} <= {max_p95_ratio}), \
+         extra acc loss {:.4} <= {max_extra_acc}",
+        off.shed_rate * 100.0,
+        on.shed_rate * 100.0,
+        shed_ratio,
+        off.p95_service_ms,
+        on.p95_service_ms,
+        p95_ratio,
+        extra
+    );
+    Ok(())
+}

@@ -30,15 +30,16 @@ use adaspring::util::json::Json;
 use adaspring::util::write_json_out;
 
 const ALLOWED: &[&str] = &[
-    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "json-out",
-    "sweep", "csv",
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
+    "load", "json-out", "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv"];
 
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--json-out PATH] [--sweep] [--csv]";
+                     [--feedback off] [--load X] [--json-out PATH] [--sweep] [--csv]\n\
+                     (--feedback on needs the dispatch path: bench_dispatch / bench_feedback)";
 
 fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())

@@ -241,6 +241,7 @@ fn plan_sweep(args: &Args, manifest: &Manifest, task_name: &str) -> Result<Json>
         task: task_name.to_string(),
         cache_stripes: 16,
         plan: PlanMode::Banded,
+        ..FleetConfig::default()
     };
     println!(
         "# Plan-cache sweep — {} devices x {:.1} h over {} shards (banded control vs shared)\n",

@@ -43,6 +43,19 @@ impl DayProfile {
         }
     }
 
+    /// The same diurnal shape with every segment rate multiplied by
+    /// `factor` — the fleet's synthetic overload knob (DESIGN.md §10-6).
+    /// A factor of exactly 1.0 returns the profile unchanged, so
+    /// baseline traces stay bit-identical.
+    pub fn scaled(mut self, factor: f64) -> DayProfile {
+        if factor != 1.0 && factor > 0.0 {
+            for s in &mut self.segments {
+                s.1 *= factor;
+            }
+        }
+        self
+    }
+
     /// Rate (events/min) at hour-offset `h` into the day.
     pub fn rate_at_hours(&self, h: f64) -> f64 {
         let mut rate = self.segments.first().map(|s| s.1).unwrap_or(1.0);

@@ -1,0 +1,339 @@
+//! The unified context frame and the feedback-control law
+//! (DESIGN.md §10-2).
+//!
+//! Before this module the context signals were scattered: battery/cache
+//! flowed through `ContextSnapshot::constraints`, the ambient event rate
+//! was sampled but dropped, and the dispatch layer's load counters never
+//! reached evolution at all.  [`ContextFrame`] is the one currency that
+//! carries all of them — the device snapshot, the event-rate arrival
+//! prior, the smoothed [`LoadTelemetry`], and the battery drain-rate
+//! estimate — and **every** constraint derivation in the stack now routes
+//! through it (`ContextSnapshot::constraints` is a thin wrapper over the
+//! no-load frame, so the legacy path is bit-identical by construction).
+//!
+//! [`FeedbackConfig`] is the control law closing the loop
+//! (CrowdHMTware-style cross-level co-adaptation; AdaEvo's load-triggered
+//! timeliness):
+//!
+//! * **shed pressure → compression pressure**: the EWMA shed rate raises
+//!   the λ2 floor above the paper's 0.3, so overload pushes Runtime3C
+//!   toward smaller/faster variants even on a full battery;
+//! * **queue delay → latency budget**: above a utilization threshold the
+//!   G/D/1 wait estimate is debited from the latency budget, so the
+//!   search must leave headroom for queueing, not just raw inference;
+//! * both terms are *off* (and the derivation reduces exactly to the
+//!   paper's §6.3 rule) when `enabled` is false or no telemetry is
+//!   attached — the parity guarantee `tests/feedback.rs` asserts.
+
+use crate::context::telemetry::LoadTelemetry;
+use crate::context::ContextSnapshot;
+use crate::coordinator::eval::Constraints;
+use crate::coordinator::plancache::PlanTtl;
+
+/// Load-spike arm of the evolution trigger (DESIGN.md §10-4): fire when
+/// utilization or the shed rate crosses a threshold, at most once per
+/// cooldown — overload re-evolves *now*, not at the next battery drift.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadSpikeConfig {
+    /// Fire when λ/µ reaches this (≥ 1 means past saturation).
+    pub util_threshold: f64,
+    /// Fire when the EWMA shed fraction reaches this.
+    pub shed_threshold: f64,
+    /// Minimum simulated seconds between spike-triggered fires.
+    pub cooldown_s: f64,
+}
+
+impl Default for LoadSpikeConfig {
+    fn default() -> LoadSpikeConfig {
+        LoadSpikeConfig { util_threshold: 0.85, shed_threshold: 0.02, cooldown_s: 120.0 }
+    }
+}
+
+impl LoadSpikeConfig {
+    /// Is this frame's load spiking past the thresholds?
+    pub fn spiking(&self, load: &LoadTelemetry) -> bool {
+        load.utilization() >= self.util_threshold || load.shed_rate >= self.shed_threshold
+    }
+}
+
+/// The feedback-control configuration (off by default: every consumer
+/// reduces to its pre-feedback behavior, bit-identically).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeedbackConfig {
+    /// Master switch (`--feedback on|off`).
+    pub enabled: bool,
+    /// Telemetry aggregation window, simulated seconds.
+    pub telemetry_window_s: f64,
+    /// EWMA weight of the newest telemetry window.
+    pub ewma_alpha: f64,
+    /// λ2 floor gain: floor = 0.3 + gain · shed_rate (paper floor 0.3).
+    pub shed_lambda2_gain: f64,
+    /// Upper bound on the load-ratcheted λ2 (keeps λ1 > 0).
+    pub lambda2_cap: f64,
+    /// Latency-budget debit per second of estimated G/D/1 queue wait.
+    pub wait_budget_gain: f64,
+    /// The tightened budget never drops below this fraction of the
+    /// task's static budget.
+    pub min_budget_fraction: f64,
+    /// Budget tightening only engages at or above this utilization —
+    /// calm fleets keep the paper-exact budget.
+    pub tighten_above_utilization: f64,
+    /// Load-spike trigger arm.
+    pub spike: LoadSpikeConfig,
+    /// EMA weight for the trigger's drift baseline (DESIGN.md §10-4).
+    pub trigger_ema_alpha: f64,
+    /// Battery-drain-coupled plan-cache TTL (None = plans never age).
+    pub plan_ttl: Option<PlanTtl>,
+}
+
+impl Default for FeedbackConfig {
+    fn default() -> FeedbackConfig {
+        FeedbackConfig {
+            enabled: false,
+            telemetry_window_s: 60.0,
+            ewma_alpha: 0.3,
+            shed_lambda2_gain: 0.6,
+            lambda2_cap: 0.9,
+            wait_budget_gain: 1.0,
+            min_budget_fraction: 0.25,
+            tighten_above_utilization: 0.5,
+            spike: LoadSpikeConfig::default(),
+            trigger_ema_alpha: 0.25,
+            plan_ttl: None,
+        }
+    }
+}
+
+impl FeedbackConfig {
+    /// The disabled configuration (alias of `Default`).
+    pub fn off() -> FeedbackConfig {
+        FeedbackConfig::default()
+    }
+
+    /// The enabled configuration with default gains and the default
+    /// battery-drain plan TTL.
+    pub fn on() -> FeedbackConfig {
+        FeedbackConfig { enabled: true, plan_ttl: Some(PlanTtl::default()), ..Default::default() }
+    }
+
+    /// Parse a `--feedback on|off` flag value.
+    pub fn parse(s: &str) -> Option<FeedbackConfig> {
+        match s.to_lowercase().as_str() {
+            "on" => Some(FeedbackConfig::on()),
+            "off" => Some(FeedbackConfig::off()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        if self.enabled {
+            "on"
+        } else {
+            "off"
+        }
+    }
+
+    /// Derive the Eq.-1 constraint set from a context frame — the single
+    /// constraint-derivation funnel of the stack.  Disabled (or
+    /// load-free) frames reproduce the paper's §6.3 rule bit-exactly;
+    /// enabled frames add the shed-pressure and queue-delay terms.
+    pub fn constraints(
+        &self,
+        frame: &ContextFrame,
+        acc_loss_threshold: f64,
+        latency_budget_ms: f64,
+    ) -> Constraints {
+        let base = Constraints::from_battery(
+            frame.snapshot.battery_fraction,
+            acc_loss_threshold,
+            latency_budget_ms,
+            frame.snapshot.available_cache,
+        );
+        if !self.enabled {
+            return base;
+        }
+        let Some(load) = &frame.load else {
+            return base;
+        };
+        // (a) shed rate ratchets compression pressure: the λ2 floor
+        // rises with the smoothed shed fraction.  The cap bounds only
+        // the load-ratcheted floor — the paper's battery-derived λ2 is
+        // never weakened by attaching telemetry.
+        let floor = (0.3 + self.shed_lambda2_gain * load.shed_rate.clamp(0.0, 1.0))
+            .min(self.lambda2_cap);
+        let lambda2 = base.lambda2.max(floor);
+        // (b) queue delay tightens the latency budget via the G/D/1
+        // service-rate estimate.
+        let latency_budget = if load.utilization() >= self.tighten_above_utilization {
+            let debit_ms = self.wait_budget_gain * load.gd1_wait_s() * 1e3;
+            (latency_budget_ms - debit_ms).max(latency_budget_ms * self.min_budget_fraction)
+        } else {
+            latency_budget_ms
+        };
+        Constraints {
+            acc_loss_threshold,
+            latency_budget_ms: latency_budget,
+            storage_budget_bytes: frame.snapshot.available_cache,
+            lambda1: 1.0 - lambda2,
+            lambda2,
+        }
+    }
+}
+
+/// One unified context observation: the device snapshot plus the load
+/// plane — the single currency every consumer (constraints, trigger,
+/// plan banding, plan TTL) reads (DESIGN.md §10-2).
+#[derive(Debug, Clone, Copy)]
+pub struct ContextFrame {
+    /// Battery / cache / event-rate snapshot (paper §3.3).
+    pub snapshot: ContextSnapshot,
+    /// Arrival-rate prior, requests/s, routed from the snapshot's
+    /// `event_rate_per_min` — the signal the pre-refactor
+    /// `constraints()` silently dropped.
+    pub arrival_prior_per_s: f64,
+    /// Smoothed dispatch telemetry; `None` outside the feedback loop.
+    pub load: Option<LoadTelemetry>,
+    /// Estimated battery drain, fraction/hour (≥ 0; 0 when unknown) —
+    /// drives the plan-cache TTL (DESIGN.md §10-5).
+    pub drain_per_hour: f64,
+}
+
+impl ContextFrame {
+    /// Lift a bare snapshot into a frame (no telemetry, no drain
+    /// estimate) — the legacy derivation path.
+    pub fn from_snapshot(snapshot: &ContextSnapshot) -> ContextFrame {
+        ContextFrame {
+            snapshot: *snapshot,
+            arrival_prior_per_s: snapshot.event_rate_per_min / 60.0,
+            load: None,
+            drain_per_hour: 0.0,
+        }
+    }
+
+    /// Attach a telemetry frame.
+    pub fn with_load(mut self, load: LoadTelemetry) -> ContextFrame {
+        self.load = Some(load);
+        self
+    }
+
+    /// Attach a battery drain-rate estimate (fraction/hour).
+    pub fn with_drain(mut self, drain_per_hour: f64) -> ContextFrame {
+        self.drain_per_hour = drain_per_hour.max(0.0);
+        self
+    }
+
+    /// Offered utilization of the attached telemetry (0 without it).
+    pub fn utilization(&self) -> f64 {
+        self.load.as_ref().map(|l| l.utilization()).unwrap_or(0.0)
+    }
+
+    /// Legacy constraint derivation (paper §6.3 rule; what
+    /// `ContextSnapshot::constraints` delegates to).
+    pub fn constraints(&self, acc_loss_threshold: f64, latency_budget_ms: f64) -> Constraints {
+        FeedbackConfig::off().constraints(self, acc_loss_threshold, latency_budget_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(battery: f64, cache: u64, rate_per_min: f64) -> ContextSnapshot {
+        ContextSnapshot {
+            t_seconds: 100.0,
+            battery_fraction: battery,
+            available_cache: cache,
+            event_rate_per_min: rate_per_min,
+        }
+    }
+
+    #[test]
+    fn off_path_is_bit_identical_to_the_paper_rule() {
+        for battery in [0.05, 0.15, 0.3, 0.5, 0.86, 1.0] {
+            for cache in [512 * 1024u64, 1 << 20, 2 << 20] {
+                let s = snap(battery, cache, 3.0);
+                let legacy = Constraints::from_battery(battery, 0.05, 30.0, cache);
+                let framed = ContextFrame::from_snapshot(&s).constraints(0.05, 30.0);
+                assert_eq!(legacy.lambda1.to_bits(), framed.lambda1.to_bits());
+                assert_eq!(legacy.lambda2.to_bits(), framed.lambda2.to_bits());
+                assert_eq!(legacy.latency_budget_ms.to_bits(), framed.latency_budget_ms.to_bits());
+                assert_eq!(legacy.storage_budget_bytes, framed.storage_budget_bytes);
+                // Enabled but telemetry-free frames also reduce exactly.
+                let fb_on = FeedbackConfig::on().constraints(
+                    &ContextFrame::from_snapshot(&s),
+                    0.05,
+                    30.0,
+                );
+                assert_eq!(legacy.lambda2.to_bits(), fb_on.lambda2.to_bits());
+                assert_eq!(legacy.latency_budget_ms.to_bits(), fb_on.latency_budget_ms.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn event_rate_routes_into_the_frame() {
+        let f = ContextFrame::from_snapshot(&snap(0.8, 2 << 20, 120.0));
+        assert!((f.arrival_prior_per_s - 2.0).abs() < 1e-12, "120/min = 2/s");
+    }
+
+    #[test]
+    fn shed_rate_ratchets_lambda2_floor() {
+        let fb = FeedbackConfig::on();
+        let frame = ContextFrame::from_snapshot(&snap(0.9, 2 << 20, 3.0));
+        // Full battery, no load: λ2 = paper floor 0.3.
+        let mut load = LoadTelemetry::prior(1.0, 100.0);
+        let calm = fb.constraints(&frame.with_load(load), 0.05, 30.0);
+        assert!((calm.lambda2 - 0.3).abs() < 1e-9);
+        // Half the traffic shedding: floor = 0.3 + 0.6·0.5 = 0.6.
+        load.shed_rate = 0.5;
+        let hot = fb.constraints(&frame.with_load(load), 0.05, 30.0);
+        assert!((hot.lambda2 - 0.6).abs() < 1e-9);
+        assert!((hot.lambda1 + hot.lambda2 - 1.0).abs() < 1e-12);
+        // Catastrophic shedding caps below 1 so accuracy keeps a voice.
+        load.shed_rate = 1.0;
+        let worst = fb.constraints(&frame.with_load(load), 0.05, 30.0);
+        assert!((worst.lambda2 - fb.lambda2_cap).abs() < 1e-9);
+        // A low battery still dominates a mild floor.
+        let low_batt = ContextFrame::from_snapshot(&snap(0.1, 2 << 20, 3.0));
+        load.shed_rate = 0.1;
+        let c = fb.constraints(&low_batt.with_load(load), 0.05, 30.0);
+        assert!((c.lambda2 - 0.9).abs() < 1e-9, "max(0.9 battery-rule, 0.36 floor)");
+        // The cap bounds only the load floor: a near-dead battery's
+        // paper-rule λ2 (0.95 > cap) survives telemetry attachment.
+        let dead = ContextFrame::from_snapshot(&snap(0.05, 2 << 20, 3.0));
+        load.shed_rate = 0.0;
+        let c = fb.constraints(&dead.with_load(load), 0.05, 30.0);
+        assert!((c.lambda2 - 0.95).abs() < 1e-9, "battery rule never weakened: {}", c.lambda2);
+    }
+
+    #[test]
+    fn queue_delay_tightens_the_latency_budget() {
+        let fb = FeedbackConfig::on();
+        let frame = ContextFrame::from_snapshot(&snap(0.9, 2 << 20, 3.0));
+        // ρ = 0.8 at µ = 100/s: wait = 0.8/(2·100·0.2) = 20 ms → budget
+        // 30 − 20 = 10 ms (still above the 7.5 ms floor).
+        let load = LoadTelemetry::prior(80.0, 100.0);
+        let c = fb.constraints(&frame.with_load(load), 0.05, 30.0);
+        assert!((c.latency_budget_ms - 10.0).abs() < 1e-9, "got {}", c.latency_budget_ms);
+        // Calm utilization (below the engage threshold): untouched.
+        let calm = LoadTelemetry::prior(10.0, 100.0);
+        let c2 = fb.constraints(&frame.with_load(calm), 0.05, 30.0);
+        assert_eq!(c2.latency_budget_ms.to_bits(), 30.0f64.to_bits());
+        // Saturated with deep backlog: floored at the min fraction.
+        let mut sat = LoadTelemetry::prior(500.0, 100.0);
+        sat.queue_depth = 1000.0;
+        let c3 = fb.constraints(&frame.with_load(sat), 0.05, 30.0);
+        assert!((c3.latency_budget_ms - 30.0 * fb.min_budget_fraction).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert!(FeedbackConfig::parse("on").unwrap().enabled);
+        assert!(!FeedbackConfig::parse("off").unwrap().enabled);
+        assert!(FeedbackConfig::parse("maybe").is_none());
+        assert_eq!(FeedbackConfig::on().name(), "on");
+        assert_eq!(FeedbackConfig::off().name(), "off");
+        assert!(FeedbackConfig::on().plan_ttl.is_some());
+        assert!(FeedbackConfig::off().plan_ttl.is_none());
+    }
+}

@@ -11,11 +11,15 @@
 pub mod battery;
 pub mod cache;
 pub mod events;
+pub mod feedback;
+pub mod telemetry;
 pub mod trigger;
 
 pub use battery::Battery;
 pub use cache::CacheContention;
 pub use events::{DayProfile, EventTrace};
+pub use feedback::{ContextFrame, FeedbackConfig, LoadSpikeConfig};
+pub use telemetry::{LoadTelemetry, TelemetryAggregator, WindowSample};
 pub use trigger::{Trigger, TriggerPolicy};
 
 use crate::coordinator::eval::Constraints;
@@ -36,13 +40,12 @@ pub struct ContextSnapshot {
 impl ContextSnapshot {
     /// Constraint set per paper §6.3: λ2 = max(0.3, 1 − E_remaining),
     /// S_bgt = available cache, plus the task's static thresholds.
+    /// Routed through the unified [`ContextFrame`] derivation funnel
+    /// (DESIGN.md §10-2) — a load-free frame reduces to the paper rule
+    /// bit-exactly, and the event-rate signal rides along instead of
+    /// being dropped.
     pub fn constraints(&self, acc_loss_threshold: f64, latency_budget_ms: f64) -> Constraints {
-        Constraints::from_battery(
-            self.battery_fraction,
-            acc_loss_threshold,
-            latency_budget_ms,
-            self.available_cache,
-        )
+        ContextFrame::from_snapshot(self).constraints(acc_loss_threshold, latency_budget_ms)
     }
 }
 

@@ -1,0 +1,322 @@
+//! Load telemetry: the dispatch-side half of the context plane
+//! (DESIGN.md §10-1).
+//!
+//! The deployment context the paper varies (battery, cache, ambient event
+//! rate) describes the *device*; a serving fleet has a second context the
+//! paper never sees — the *load* the dispatch layer is absorbing: arrival
+//! rate, queue depth, shed rate, the service rate the deployed variants
+//! actually sustain, and how full the cross-device batches run.  PR 2
+//! measured all of that but only reported it; this module turns it into a
+//! first-class context signal.
+//!
+//! Per telemetry window the dispatch loop folds its raw counters into a
+//! [`WindowSample`]; a [`TelemetryAggregator`] EWMA-smooths samples into
+//! the [`LoadTelemetry`] frame that rides inside
+//! [`crate::context::feedback::ContextFrame`] to every consumer:
+//! constraint derivation (shed pressure → λ2 floor, queue delay → latency
+//! budget, DESIGN.md §10-2), the admission layer's G/D/1 service model
+//! (§10-3), the `LoadSpike` trigger arm (§10-4), and the plan cache's
+//! load banding (§10-5).
+//!
+//! The G/D/1 wait estimate ([`LoadTelemetry::gd1_wait_s`]) treats service
+//! as deterministic at the observed rate (inference times for one variant
+//! are near-constant) and arrivals as general: below saturation it is the
+//! classic ρ / (2µ(1−ρ)) mean wait; at or past saturation it degrades to
+//! the backlog drain time, which is the quantity that actually matters
+//! under overload.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Utilization at which the pre-saturation wait formula hands over to the
+/// backlog drain estimate (ρ → 1 blows the closed form up).
+pub const GD1_SATURATION: f64 = 0.95;
+
+/// Raw dispatch counters for one telemetry window (one shard).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowSample {
+    /// Telemetry window index.
+    pub window: u64,
+    /// Window span in simulated seconds.
+    pub span_s: f64,
+    /// Requests that arrived in the window.
+    pub arrivals: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Requests actually served (batched and priced).
+    pub served: u64,
+    /// Sum of per-request (batched) service time, microseconds.
+    pub service_us_sum: f64,
+    /// Executed batches.
+    pub batches: u64,
+    /// Sum of executed batch sizes (mean occupancy = sum / batches).
+    pub batch_size_sum: u64,
+    /// Service-queue backlog (jobs) at window close.
+    pub backlog: f64,
+}
+
+/// The smoothed load frame — the dispatch half of a
+/// [`crate::context::feedback::ContextFrame`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadTelemetry {
+    /// Telemetry windows observed so far (0 = priors only).
+    pub windows: u64,
+    /// EWMA request arrival rate, per simulated second.
+    pub arrival_rate_per_s: f64,
+    /// EWMA observed service rate (requests the serving path completes
+    /// per simulated second of service time); seeded from the platform
+    /// latency model before any observation.
+    pub service_rate_per_s: f64,
+    /// EWMA shed fraction (shed / arrivals) per window.
+    pub shed_rate: f64,
+    /// EWMA service-queue backlog, jobs.
+    pub queue_depth: f64,
+    /// EWMA mean executed-batch size (1.0 when batching is off/idle).
+    pub batch_occupancy: f64,
+}
+
+impl LoadTelemetry {
+    /// A frame carrying only priors (window 0: model-derived service
+    /// rate, event-trace-derived arrival rate — the signal
+    /// `ContextSnapshot::event_rate_per_min` feeds, DESIGN.md §10-1).
+    pub fn prior(arrival_rate_per_s: f64, service_rate_per_s: f64) -> LoadTelemetry {
+        LoadTelemetry {
+            windows: 0,
+            arrival_rate_per_s: arrival_rate_per_s.max(0.0),
+            service_rate_per_s: service_rate_per_s.max(0.0),
+            shed_rate: 0.0,
+            queue_depth: 0.0,
+            batch_occupancy: 1.0,
+        }
+    }
+
+    /// An all-zero frame (no load, no capacity estimate).
+    pub fn idle() -> LoadTelemetry {
+        LoadTelemetry::prior(0.0, 0.0)
+    }
+
+    /// Offered utilization ρ = λ/µ (0 when the service rate is unknown).
+    pub fn utilization(&self) -> f64 {
+        if self.service_rate_per_s <= 0.0 {
+            0.0
+        } else {
+            self.arrival_rate_per_s / self.service_rate_per_s
+        }
+    }
+
+    /// G/D/1-style expected queue wait, seconds: ρ/(2µ(1−ρ)) below
+    /// saturation, backlog drain time ((depth+1)/µ) at or past it.
+    pub fn gd1_wait_s(&self) -> f64 {
+        let mu = self.service_rate_per_s;
+        if mu <= 0.0 {
+            return 0.0;
+        }
+        let rho = self.utilization();
+        if rho >= GD1_SATURATION {
+            (self.queue_depth + 1.0) / mu
+        } else {
+            rho / (2.0 * mu * (1.0 - rho))
+        }
+    }
+
+    /// JSON emission (`"telemetry"` block; schema in README.md).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("windows".into(), Json::Num(self.windows as f64));
+        m.insert("arrival_rate_per_s".into(), Json::Num(self.arrival_rate_per_s));
+        m.insert("service_rate_per_s".into(), Json::Num(self.service_rate_per_s));
+        m.insert("shed_rate".into(), Json::Num(self.shed_rate));
+        m.insert("queue_depth".into(), Json::Num(self.queue_depth));
+        m.insert("batch_occupancy".into(), Json::Num(self.batch_occupancy));
+        m.insert("utilization".into(), Json::Num(self.utilization()));
+        m.insert("gd1_wait_ms".into(), Json::Num(self.gd1_wait_s() * 1e3));
+        Json::Obj(m)
+    }
+}
+
+/// EWMA folder: window samples in, smoothed [`LoadTelemetry`] out.
+#[derive(Debug, Clone)]
+pub struct TelemetryAggregator {
+    alpha: f64,
+    frame: LoadTelemetry,
+}
+
+impl TelemetryAggregator {
+    /// `alpha` is the EWMA weight of the newest window (clamped to
+    /// (0, 1]); the priors seed the frame that window 0 consumes.
+    pub fn new(
+        alpha: f64,
+        arrival_prior_per_s: f64,
+        service_prior_per_s: f64,
+    ) -> TelemetryAggregator {
+        TelemetryAggregator {
+            alpha: alpha.clamp(1e-6, 1.0),
+            frame: LoadTelemetry::prior(arrival_prior_per_s, service_prior_per_s),
+        }
+    }
+
+    /// The current frame (priors until the first observation).
+    pub fn current(&self) -> LoadTelemetry {
+        self.frame
+    }
+
+    /// Fold one window's raw counters in and return the updated frame.
+    pub fn observe(&mut self, s: &WindowSample) -> LoadTelemetry {
+        let a = self.alpha;
+        let ema = |old: f64, new: f64| (1.0 - a) * old + a * new;
+        let span = s.span_s.max(1e-9);
+        self.frame.arrival_rate_per_s =
+            ema(self.frame.arrival_rate_per_s, s.arrivals as f64 / span);
+        if s.served > 0 && s.service_us_sum > 0.0 {
+            let mu_obs = s.served as f64 / (s.service_us_sum / 1e6);
+            self.frame.service_rate_per_s = ema(self.frame.service_rate_per_s, mu_obs);
+        }
+        let shed_obs = if s.arrivals == 0 { 0.0 } else { s.shed as f64 / s.arrivals as f64 };
+        self.frame.shed_rate = ema(self.frame.shed_rate, shed_obs);
+        self.frame.queue_depth = ema(self.frame.queue_depth, s.backlog.max(0.0));
+        if s.batches > 0 {
+            let occ = s.batch_size_sum as f64 / s.batches as f64;
+            self.frame.batch_occupancy = ema(self.frame.batch_occupancy, occ);
+        }
+        self.frame.windows = s.window + 1;
+        self.frame
+    }
+}
+
+/// Arrival-weighted merge of per-shard final frames into the fleet view
+/// (rates add across shards; fractions weight by their denominators).
+pub fn merge_frames(frames: &[LoadTelemetry]) -> LoadTelemetry {
+    if frames.is_empty() {
+        return LoadTelemetry::idle();
+    }
+    let mut out = LoadTelemetry::idle();
+    // The idle seed's occupancy is 1.0 (a batch of one); zero it before
+    // the weighted sum so the merge is a pure arrival-weighted mean.
+    out.batch_occupancy = 0.0;
+    let mut arrival_total = 0.0f64;
+    for f in frames {
+        out.windows = out.windows.max(f.windows);
+        out.arrival_rate_per_s += f.arrival_rate_per_s;
+        out.service_rate_per_s += f.service_rate_per_s;
+        out.queue_depth += f.queue_depth;
+        out.shed_rate += f.shed_rate * f.arrival_rate_per_s;
+        out.batch_occupancy += f.batch_occupancy * f.arrival_rate_per_s;
+        arrival_total += f.arrival_rate_per_s;
+    }
+    if arrival_total > 0.0 {
+        out.shed_rate /= arrival_total;
+        out.batch_occupancy /= arrival_total;
+    } else {
+        out.shed_rate = 0.0;
+        out.batch_occupancy = 1.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(
+        window: u64,
+        arrivals: u64,
+        shed: u64,
+        served: u64,
+        service_ms_each: f64,
+    ) -> WindowSample {
+        WindowSample {
+            window,
+            span_s: 60.0,
+            arrivals,
+            shed,
+            served,
+            service_us_sum: served as f64 * service_ms_each * 1e3,
+            batches: served.max(1),
+            batch_size_sum: served.max(1),
+            backlog: 0.0,
+        }
+    }
+
+    #[test]
+    fn gd1_wait_grows_with_utilization_and_caps_at_saturation() {
+        let mut f = LoadTelemetry::prior(10.0, 100.0); // ρ = 0.1
+        let w_low = f.gd1_wait_s();
+        f.arrival_rate_per_s = 80.0; // ρ = 0.8
+        let w_high = f.gd1_wait_s();
+        assert!(w_low > 0.0 && w_high > w_low, "wait must grow with ρ: {w_low} vs {w_high}");
+        // Closed form at ρ = 0.8, µ = 100: 0.8 / (2·100·0.2) = 0.02 s.
+        assert!((w_high - 0.02).abs() < 1e-12);
+        // Past saturation: backlog drain time, not the blown-up closed form.
+        f.arrival_rate_per_s = 200.0; // ρ = 2
+        f.queue_depth = 9.0;
+        assert!((f.gd1_wait_s() - 0.1).abs() < 1e-12, "(9+1)/100 = 0.1 s");
+        // Unknown service rate → no estimate, not a NaN.
+        assert_eq!(LoadTelemetry::idle().gd1_wait_s(), 0.0);
+        assert_eq!(LoadTelemetry::idle().utilization(), 0.0);
+    }
+
+    #[test]
+    fn aggregator_ewma_tracks_and_seeds_from_priors() {
+        let mut agg = TelemetryAggregator::new(0.5, 2.0, 50.0);
+        let f0 = agg.current();
+        assert_eq!(f0.windows, 0);
+        assert_eq!(f0.arrival_rate_per_s, 2.0);
+        assert_eq!(f0.service_rate_per_s, 50.0);
+        // 600 arrivals / 60 s = 10/s observed; EWMA(0.5): (2+10)/2 = 6.
+        let f1 = agg.observe(&sample(0, 600, 0, 600, 10.0));
+        assert!((f1.arrival_rate_per_s - 6.0).abs() < 1e-9);
+        // Observed µ = 1000 ms / 10 ms = 100/s; EWMA: (50+100)/2 = 75.
+        assert!((f1.service_rate_per_s - 75.0).abs() < 1e-9);
+        assert_eq!(f1.windows, 1);
+        assert_eq!(f1.shed_rate, 0.0);
+        // A shedding window moves the shed EWMA up.
+        let f2 = agg.observe(&sample(1, 600, 300, 300, 10.0));
+        assert!((f2.shed_rate - 0.25).abs() < 1e-9, "EWMA(0, 0.5) = 0.25");
+    }
+
+    #[test]
+    fn empty_windows_keep_the_service_estimate() {
+        let mut agg = TelemetryAggregator::new(0.5, 4.0, 80.0);
+        let f = agg.observe(&WindowSample { window: 0, span_s: 60.0, ..Default::default() });
+        assert_eq!(f.service_rate_per_s, 80.0, "no observation must not decay µ̂");
+        assert!((f.arrival_rate_per_s - 2.0).abs() < 1e-9, "idle window halves the EWMA");
+        assert_eq!(f.batch_occupancy, 1.0);
+    }
+
+    #[test]
+    fn merge_adds_rates_and_weights_fractions() {
+        let mut a = LoadTelemetry::prior(10.0, 100.0);
+        a.shed_rate = 0.5;
+        a.windows = 3;
+        let mut b = LoadTelemetry::prior(30.0, 100.0);
+        b.shed_rate = 0.1;
+        b.windows = 2;
+        let m = merge_frames(&[a, b]);
+        assert_eq!(m.arrival_rate_per_s, 40.0);
+        assert_eq!(m.service_rate_per_s, 200.0);
+        assert_eq!(m.windows, 3);
+        // (0.5·10 + 0.1·30) / 40 = 0.2
+        assert!((m.shed_rate - 0.2).abs() < 1e-12);
+        assert_eq!(merge_frames(&[]).arrival_rate_per_s, 0.0);
+    }
+
+    #[test]
+    fn telemetry_json_is_finite_and_complete() {
+        let f = LoadTelemetry::prior(5.0, 40.0);
+        let parsed = Json::parse(&f.to_json().to_string()).unwrap();
+        for k in [
+            "windows",
+            "arrival_rate_per_s",
+            "service_rate_per_s",
+            "shed_rate",
+            "queue_depth",
+            "batch_occupancy",
+            "utilization",
+            "gd1_wait_ms",
+        ] {
+            let v = parsed.get(k).unwrap().as_f64().unwrap();
+            assert!(v.is_finite(), "{k} must be finite");
+        }
+    }
+}

@@ -2,7 +2,28 @@
 //! awareness block detects the evolution demands and triggers the runtime
 //! adaptive compression block.  The triggering station can be modeled as
 //! the noticeable context changes or by a pre-defined frequency."
+//!
+//! Two context-plane extensions ride on top of the paper's policies
+//! (DESIGN.md §10-4), both strictly opt-in so default triggers replay
+//! bit-identically:
+//!
+//! * **EMA drift baseline** ([`Trigger::with_ema`]) — the raw `OnChange`
+//!   detector compares a *single noisy sample* against the last fired
+//!   snapshot, so one cache-contention glitch fires spuriously and, by
+//!   resetting the reference, swallows whatever slow battery drift had
+//!   accumulated (the hysteresis bug).  With the EMA baseline the
+//!   change arms compare *smoothed* signals against their values at the
+//!   last fire: one-sample glitches are attenuated away while sustained
+//!   drift — however slow per check — accumulates until it crosses the
+//!   delta.
+//! * **Load spike** ([`Trigger::with_load_spike`]) — consulted by
+//!   [`Trigger::should_fire_frame`] when the frame carries dispatch
+//!   telemetry: utilization or shed rate past the threshold fires
+//!   immediately (with a cooldown), so overload re-evolves now instead
+//!   of waiting for battery drift or the periodic floor (AdaEvo-style
+//!   timeliness).
 
+use super::feedback::{ContextFrame, LoadSpikeConfig};
 use super::ContextSnapshot;
 
 /// When to re-run the Runtime3C search.
@@ -23,34 +44,135 @@ pub struct Trigger {
     policy: TriggerPolicy,
     last_fire_t: Option<f64>,
     last_snapshot: Option<ContextSnapshot>,
+    /// EMA weight for the drift baseline; `None` = legacy raw compare.
+    ema_alpha: Option<f64>,
+    /// Smoothed (battery, cache-bytes) baseline, updated every check.
+    ema: Option<(f64, f64)>,
+    /// The baseline at the last fire — what the change arms compare
+    /// against in EMA mode.
+    fired_ema: Option<(f64, f64)>,
+    /// Load-spike arm (feedback loop only).
+    spike: Option<LoadSpikeConfig>,
+    last_spike_t: Option<f64>,
 }
 
 impl Trigger {
     pub fn new(policy: TriggerPolicy) -> Trigger {
-        Trigger { policy, last_fire_t: None, last_snapshot: None }
+        Trigger {
+            policy,
+            last_fire_t: None,
+            last_snapshot: None,
+            ema_alpha: None,
+            ema: None,
+            fired_ema: None,
+            spike: None,
+            last_spike_t: None,
+        }
+    }
+
+    /// Enable the EMA drift baseline for the change arms (the hysteresis
+    /// fix).  `alpha` is the weight of the newest sample.
+    pub fn with_ema(mut self, alpha: f64) -> Trigger {
+        self.ema_alpha = Some(alpha.clamp(1e-6, 1.0));
+        self
+    }
+
+    /// Enable the load-spike arm consulted by
+    /// [`should_fire_frame`](Self::should_fire_frame).
+    pub fn with_load_spike(mut self, spike: LoadSpikeConfig) -> Trigger {
+        self.spike = Some(spike);
+        self
     }
 
     /// Should the engine re-evolve at this snapshot?  Firing updates the
     /// internal reference state.
     pub fn should_fire(&mut self, snap: &ContextSnapshot) -> bool {
-        let fire = match (self.last_fire_t, self.last_snapshot.as_ref()) {
+        self.update_ema(snap);
+        let fire = self.wants_fire(snap);
+        if fire {
+            self.note_fire(snap);
+        }
+        fire
+    }
+
+    /// Frame-aware variant: the paper arms on the snapshot plus the
+    /// load-spike arm on the attached telemetry (DESIGN.md §10-4).
+    /// Without a spike config or telemetry this is exactly
+    /// [`should_fire`](Self::should_fire).
+    pub fn should_fire_frame(&mut self, frame: &ContextFrame) -> bool {
+        self.update_ema(&frame.snapshot);
+        let mut fire = self.wants_fire(&frame.snapshot);
+        if !fire {
+            if let (Some(spike), Some(load)) = (self.spike, frame.load.as_ref()) {
+                let cooled = match self.last_spike_t {
+                    None => true,
+                    Some(t0) => frame.snapshot.t_seconds - t0 >= spike.cooldown_s,
+                };
+                if cooled && spike.spiking(load) {
+                    fire = true;
+                    self.last_spike_t = Some(frame.snapshot.t_seconds);
+                }
+            }
+        }
+        if fire {
+            self.note_fire(&frame.snapshot);
+        }
+        fire
+    }
+
+    /// Pure policy evaluation against the current references.
+    fn wants_fire(&self, snap: &ContextSnapshot) -> bool {
+        match (self.last_fire_t, self.last_snapshot.as_ref()) {
             (None, _) => true, // always evolve once at startup
             (Some(t0), prev) => match self.policy {
                 TriggerPolicy::Periodic { period_s } => snap.t_seconds - t0 >= period_s,
                 TriggerPolicy::OnChange { battery_delta, cache_delta_bytes } => {
-                    prev.is_some_and(|p| changed(p, snap, battery_delta, cache_delta_bytes))
+                    self.drifted(prev, snap, battery_delta, cache_delta_bytes)
                 }
                 TriggerPolicy::Hybrid { period_s, battery_delta, cache_delta_bytes } => {
                     snap.t_seconds - t0 >= period_s
-                        || prev.is_some_and(|p| changed(p, snap, battery_delta, cache_delta_bytes))
+                        || self.drifted(prev, snap, battery_delta, cache_delta_bytes)
                 }
             },
-        };
-        if fire {
-            self.last_fire_t = Some(snap.t_seconds);
-            self.last_snapshot = Some(*snap);
         }
-        fire
+    }
+
+    /// Change-arm test: EMA baseline vs last-fired baseline when
+    /// enabled, else the legacy raw compare against the fired snapshot.
+    fn drifted(
+        &self,
+        prev: Option<&ContextSnapshot>,
+        now: &ContextSnapshot,
+        battery_delta: f64,
+        cache_delta_bytes: u64,
+    ) -> bool {
+        if self.ema_alpha.is_some() {
+            match (self.ema, self.fired_ema) {
+                (Some((eb, ec)), Some((fb, fc))) => {
+                    (eb - fb).abs() >= battery_delta
+                        || (ec - fc).abs() >= cache_delta_bytes as f64
+                }
+                _ => false,
+            }
+        } else {
+            prev.is_some_and(|p| changed(p, now, battery_delta, cache_delta_bytes))
+        }
+    }
+
+    fn update_ema(&mut self, snap: &ContextSnapshot) {
+        if let Some(a) = self.ema_alpha {
+            let (b, c) = (snap.battery_fraction, snap.available_cache as f64);
+            self.ema = Some(match self.ema {
+                Some((eb, ec)) => ((1.0 - a) * eb + a * b, (1.0 - a) * ec + a * c),
+                None => (b, c),
+            });
+        }
+    }
+
+    fn note_fire(&mut self, snap: &ContextSnapshot) {
+        self.last_fire_t = Some(snap.t_seconds);
+        self.last_snapshot = Some(*snap);
+        self.fired_ema = self.ema;
     }
 }
 
@@ -67,6 +189,7 @@ fn changed(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::context::telemetry::LoadTelemetry;
 
     fn snap(t: f64, battery: f64, cache: u64) -> ContextSnapshot {
         ContextSnapshot {
@@ -103,5 +226,66 @@ mod tests {
         assert!(!tr.should_fire(&snap(10.0, 0.85, 2 << 20)));
         assert!(tr.should_fire(&snap(20.0, 0.75, 2 << 20))); // battery moved 0.15
         assert!(tr.should_fire(&snap(30.0, 0.75, (2 << 20) - 512 * 1024))); // cache moved
+    }
+
+    #[test]
+    fn ema_baseline_rejects_glitches_and_catches_slow_drift() {
+        // The hysteresis regression: a one-sample cache glitch fires the
+        // raw detector spuriously (and resets its battery reference); the
+        // EMA baseline attenuates the glitch away, then still fires once
+        // slow monotone battery drift — far below the delta per check —
+        // accumulates past the threshold.
+        let policy = TriggerPolicy::OnChange { battery_delta: 0.1, cache_delta_bytes: 512 * 1024 };
+        let base_cache = 2u64 << 20;
+        let mut raw = Trigger::new(policy);
+        let mut ema = Trigger::new(policy).with_ema(0.25);
+        assert!(raw.should_fire(&snap(0.0, 0.9, base_cache)));
+        assert!(ema.should_fire(&snap(0.0, 0.9, base_cache)));
+
+        // t=60: a single 600 KB contention glitch that reverts next check.
+        let glitch = snap(60.0, 0.9, base_cache - 600 * 1024);
+        assert!(raw.should_fire(&glitch), "raw detector fires on one noisy sample");
+        assert!(!ema.should_fire(&glitch), "EMA baseline smooths the glitch away");
+
+        // Then battery drifts down 0.005 per check — the raw detector
+        // (reference reset by its spurious fire) and the EMA baseline
+        // both see pure drift now; the EMA trigger must fire once the
+        // smoothed battery has moved ≥ 0.1 from the last fire.
+        let mut fired_ema = false;
+        let mut battery = 0.9;
+        for i in 1..=60 {
+            battery -= 0.005;
+            let s = snap(60.0 + i as f64 * 60.0, battery, base_cache);
+            if ema.should_fire(&s) {
+                fired_ema = true;
+                break;
+            }
+        }
+        assert!(fired_ema, "slow monotone drift must eventually fire the EMA trigger");
+    }
+
+    #[test]
+    fn load_spike_fires_with_cooldown() {
+        let spike =
+            LoadSpikeConfig { util_threshold: 1.0, shed_threshold: 0.05, cooldown_s: 120.0 };
+        let mut tr = Trigger::new(TriggerPolicy::Periodic { period_s: 7200.0 })
+            .with_load_spike(spike);
+        let mut overload = LoadTelemetry::prior(200.0, 100.0); // ρ = 2
+        overload.shed_rate = 0.3;
+        let frame = |t: f64, load: Option<LoadTelemetry>| {
+            let mut f = ContextFrame::from_snapshot(&snap(t, 0.9, 2 << 20));
+            f.load = load;
+            f
+        };
+        assert!(tr.should_fire_frame(&frame(0.0, None)), "startup fire");
+        assert!(!tr.should_fire_frame(&frame(60.0, None)), "no telemetry, no spike");
+        assert!(tr.should_fire_frame(&frame(120.0, Some(overload))), "overload fires");
+        assert!(
+            !tr.should_fire_frame(&frame(180.0, Some(overload))),
+            "cooldown suppresses the next spike"
+        );
+        assert!(tr.should_fire_frame(&frame(240.0, Some(overload))), "cooldown elapsed");
+        let calm = LoadTelemetry::prior(10.0, 100.0);
+        assert!(!tr.should_fire_frame(&frame(400.0, Some(calm))), "calm load never spikes");
     }
 }

@@ -12,8 +12,9 @@ use super::config::CompressionConfig;
 use super::costmodel::CostModel;
 use super::eval::{Constraints, Evaluator};
 use super::manifest::{Manifest, TaskArtifacts, Variant};
-use super::plancache::{ContextQuantizer, PlanCache};
+use super::plancache::{ContextQuantizer, PlanCache, PlanTtl};
 use super::search::{Mutator, Runtime3C, Runtime3CParams, SearchResult};
+use crate::context::feedback::{ContextFrame, FeedbackConfig};
 use crate::context::ContextSnapshot;
 use crate::platform::Platform;
 use crate::runtime::{CacheOutcome, ExecutableCache, Executor, LoadedVariant};
@@ -58,6 +59,9 @@ pub struct AdaSpring {
     quantizer: Option<ContextQuantizer>,
     /// Fleet-wide shared plan cache (implies banding).
     plan_cache: Option<Arc<PlanCache>>,
+    /// Battery-drain-coupled plan TTL (DESIGN.md §10-5); `None` keeps
+    /// cached plans age-blind (the pre-feedback behavior).
+    plan_ttl: Option<PlanTtl>,
 }
 
 impl AdaSpring {
@@ -86,6 +90,7 @@ impl AdaSpring {
             platform_name: platform.name,
             quantizer: None,
             plan_cache: None,
+            plan_ttl: None,
         })
     }
 
@@ -138,20 +143,44 @@ impl AdaSpring {
         self.plan_cache.as_ref()
     }
 
+    /// Attach a battery-drain-coupled plan TTL (DESIGN.md §10-5): frame
+    /// evolutions age cached plans by the frame's drain rate.  Without
+    /// one (the default), cached plans never age — the PR 3 behavior.
+    pub fn set_plan_ttl(&mut self, ttl: PlanTtl) {
+        self.plan_ttl = Some(ttl);
+    }
+
     /// Constraints for a context snapshot using this task's thresholds.
     pub fn constraints_for(&self, snap: &ContextSnapshot) -> Constraints {
         snap.constraints(self.task.acc_loss_threshold, self.task.latency_budget_ms)
     }
 
+    /// Constraints for a full context frame under a feedback config
+    /// (DESIGN.md §10-2): the load-aware derivation funnel.
+    pub fn constraints_for_frame(&self, frame: &ContextFrame, fb: &FeedbackConfig) -> Constraints {
+        fb.constraints(frame, self.task.acc_loss_threshold, self.task.latency_budget_ms)
+    }
+
     /// Derive this evolution's search: exact (legacy), banded, or via the
-    /// shared plan cache (DESIGN.md §9-2).
-    fn run_search(&self, constraints: &Constraints) -> (SearchResult, Option<CacheOutcome>) {
+    /// shared plan cache (DESIGN.md §9-2).  `load_band` keys the plan
+    /// cache's load regime (0 on every load-free path) and `age` carries
+    /// (now_s, ttl_s) for drain-coupled expiry (§10-5).
+    fn run_search(
+        &self,
+        constraints: &Constraints,
+        load_band: u32,
+        age: Option<(f64, f64)>,
+    ) -> (SearchResult, Option<CacheOutcome>) {
         if let Some(cache) = &self.plan_cache {
             let t0 = Instant::now();
-            let sig =
-                cache.quantizer().signature(&self.task.name, self.platform_name, constraints);
-            let (mut result, outcome) =
-                cache.lookup_or_search(sig, |banded| self.searcher.search(&self.evaluator, banded));
+            let sig = cache
+                .quantizer()
+                .signature(&self.task.name, self.platform_name, constraints)
+                .with_load_band(load_band);
+            let (mut result, outcome) = cache
+                .lookup_or_search_at(sig, age, |banded| {
+                    self.searcher.search(&self.evaluator, banded)
+                });
             if outcome == CacheOutcome::Hit {
                 // A hit skipped the search: report the cost actually paid
                 // (signature + lookup), not the original builder's search
@@ -168,12 +197,37 @@ impl AdaSpring {
         (self.searcher.search(&self.evaluator, constraints), None)
     }
 
+    /// One full evolution from a unified context frame (DESIGN.md §10):
+    /// load-aware constraints, load-banded plan lookup, drain-aged TTL.
+    /// With feedback disabled (or a load-free frame) this is exactly
+    /// [`evolve`](Self::evolve) at the paper-rule constraints.
+    pub fn evolve_frame(&mut self, frame: &ContextFrame, fb: &FeedbackConfig) -> Result<Evolution> {
+        let constraints = self.constraints_for_frame(frame, fb);
+        let load_band = match (&self.quantizer, fb.enabled) {
+            (Some(q), true) => q.load_band(frame.utilization()),
+            _ => 0,
+        };
+        let age = self
+            .plan_ttl
+            .map(|ttl| (frame.snapshot.t_seconds, ttl.ttl_s(frame.drain_per_hour)));
+        self.evolve_inner(&constraints, load_band, age)
+    }
+
     /// One full evolution: search (consulting the plan cache when one is
     /// attached), snap to the nearest artifact, swap the active
     /// executable (compiling lazily on first use).
     pub fn evolve(&mut self, constraints: &Constraints) -> Result<Evolution> {
+        self.evolve_inner(constraints, 0, None)
+    }
+
+    fn evolve_inner(
+        &mut self,
+        constraints: &Constraints,
+        load_band: u32,
+        age: Option<(f64, f64)>,
+    ) -> Result<Evolution> {
         let t0 = Instant::now();
-        let (search, plan_outcome) = self.run_search(constraints);
+        let (search, plan_outcome) = self.run_search(constraints, load_band, age);
         let (variant, snap_distance) = self.task.nearest_variant(&search.evaluation.config);
         let variant_id = variant.id;
         let deployed_accuracy = variant.accuracy;

@@ -29,7 +29,7 @@ pub mod search;
 pub use config::CompressionConfig;
 pub use manifest::Manifest;
 pub use operators::Op;
-pub use plancache::{ContextQuantizer, PlanCache, PlanMode, PlanSignature};
+pub use plancache::{ContextQuantizer, PlanCache, PlanMode, PlanSignature, PlanTtl};
 
 /// Shared test fixtures (unit tests across coordinator modules).
 #[cfg(test)]

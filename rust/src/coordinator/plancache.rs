@@ -77,6 +77,19 @@ pub struct PlanSignature {
     pub storage_band: u64,
     /// Accuracy-loss-threshold band.
     pub acc_band: u32,
+    /// Load-regime band (quantized utilization, DESIGN.md §10-5); 0 on
+    /// every load-free path, so pre-feedback signatures are unchanged.
+    /// Keeps plans from leaking across idle↔saturated regimes even when
+    /// their load-adjusted constraints happen to band equal.
+    pub load_band: u32,
+}
+
+impl PlanSignature {
+    /// Tag this signature with a load-regime band.
+    pub fn with_load_band(mut self, load_band: u32) -> PlanSignature {
+        self.load_band = load_band;
+        self
+    }
 }
 
 /// Maps exact Eq.-1 constraints onto a coarse band signature and back to
@@ -94,6 +107,8 @@ pub struct ContextQuantizer {
     pub storage_step_bytes: u64,
     /// Accuracy-loss-threshold band width.
     pub acc_step: f64,
+    /// Load-band width in utilization (λ/µ) units (DESIGN.md §10-5).
+    pub load_step: f64,
 }
 
 impl Default for ContextQuantizer {
@@ -103,6 +118,7 @@ impl Default for ContextQuantizer {
             latency_step_ms: 1.0,
             storage_step_bytes: 128 * 1024,
             acc_step: 0.005,
+            load_step: 0.25,
         }
     }
 }
@@ -122,7 +138,18 @@ impl ContextQuantizer {
             latency_band: (c.latency_budget_ms / self.latency_step_ms).round() as u32,
             storage_band: c.storage_budget_bytes / self.storage_step_bytes.max(1),
             acc_band: (c.acc_loss_threshold / self.acc_step).round() as u32,
+            load_band: 0,
         }
+    }
+
+    /// Load-regime band of a utilization reading (0 at idle; saturated
+    /// regimes land in higher bands).  Deterministic: equal utilization
+    /// always maps to one band.
+    pub fn load_band(&self, utilization: f64) -> u32 {
+        if self.load_step <= 0.0 {
+            return 0;
+        }
+        (utilization.max(0.0) / self.load_step).floor().min(u32::MAX as f64) as u32
     }
 
     /// The representative constraints of a band — what a banded engine
@@ -145,11 +172,43 @@ impl ContextQuantizer {
     }
 }
 
+/// Battery-drain-coupled plan TTL (DESIGN.md §10-5, ROADMAP PR 3
+/// follow-up): a cached plan was searched under *some* battery level;
+/// the faster the battery is draining, the sooner that level — and hence
+/// the λ weighting behind the plan — goes stale.  `ttl_s` shrinks
+/// hyperbolically with the drain rate, so a mains-backed hub keeps plans
+/// for the full base TTL while a fast-draining wearable re-searches
+/// sooner.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanTtl {
+    /// TTL at zero drain, simulated seconds.
+    pub base_s: f64,
+    /// Drain sensitivity: TTL = base / (1 + gain · drain_per_hour).
+    pub drain_gain_h: f64,
+}
+
+impl Default for PlanTtl {
+    fn default() -> PlanTtl {
+        PlanTtl { base_s: 2.0 * 3600.0, drain_gain_h: 40.0 }
+    }
+}
+
+impl PlanTtl {
+    /// TTL for a context draining `drain_per_hour` battery fraction per
+    /// hour (clamped at ≥ 0).
+    pub fn ttl_s(&self, drain_per_hour: f64) -> f64 {
+        self.base_s / (1.0 + self.drain_gain_h * drain_per_hour.max(0.0))
+    }
+}
+
 /// One cached plan: the search result plus the epoch it was built in.
 #[derive(Debug, Clone)]
 pub struct PlanEntry {
     pub result: SearchResult,
     pub epoch: u64,
+    /// Simulated build instant (0 on the age-blind legacy path) — what
+    /// the TTL revalidation ages against.
+    pub built_t_s: f64,
 }
 
 /// Lock-striped signature → plan map shared fleet-wide (same striping as
@@ -188,19 +247,51 @@ impl PlanCache {
     /// miss (or stale hit).  The stripe lock is held across the search,
     /// so concurrent sessions racing one signature search once and share
     /// the result — the same dedup the variant cache gives compiles.
+    /// Age-blind: entries only go stale on an epoch bump.
     pub fn lookup_or_search(
         &self,
         sig: PlanSignature,
         search: impl FnOnce(&Constraints) -> SearchResult,
     ) -> (SearchResult, CacheOutcome) {
+        self.lookup_or_search_at(sig, None, search)
+    }
+
+    /// Age-aware lookup (DESIGN.md §10-5): `age` carries the lookup's
+    /// simulated instant plus the TTL the caller's drain rate allows;
+    /// an entry older than the TTL fails revalidation and is rebuilt in
+    /// place (counted `stale`, exactly like an epoch bump).  `None`
+    /// reproduces the age-blind path bit-identically.
+    ///
+    /// Shared-cache caveat: shard workers advance simulated time
+    /// independently, so which thread's `now_s` stamps a TTL rebuild
+    /// depends on stripe-lock order — the hit/stale *counters* are
+    /// scheduling-dependent on multi-shard TTL'd runs.  Plans and device
+    /// trajectories are not: a rebuild searches at the signature's
+    /// representative, so every outcome returns the identical result.
+    pub fn lookup_or_search_at(
+        &self,
+        sig: PlanSignature,
+        age: Option<(f64, f64)>,
+        search: impl FnOnce(&Constraints) -> SearchResult,
+    ) -> (SearchResult, CacheOutcome) {
         let banded = self.quantizer.representative(&sig);
         let epoch = self.epoch();
+        let built_t_s = match age {
+            Some((now_s, _)) => now_s,
+            None => 0.0,
+        };
         let (entry, outcome) = self
             .cache
             .get_or_revalidate_with(
                 sig,
-                |e| e.epoch == epoch,
-                || Ok(PlanEntry { result: search(&banded), epoch }),
+                |e| {
+                    e.epoch == epoch
+                        && match age {
+                            Some((now_s, ttl_s)) => now_s - e.built_t_s <= ttl_s,
+                            None => true,
+                        }
+                },
+                || Ok(PlanEntry { result: search(&banded), epoch, built_t_s }),
             )
             .expect("plan searches are infallible");
         (entry.result.clone(), outcome)
@@ -254,5 +345,98 @@ mod tests {
         let hi = q.signature("d3", "P", &constraints(0.9, 2 << 20));
         let lo = q.signature("d3", "P", &constraints(0.2, 512 * 1024));
         assert_ne!(hi, lo);
+    }
+
+    #[test]
+    fn load_bands_are_deterministic_and_separate_regimes() {
+        let q = ContextQuantizer::default();
+        assert_eq!(q.load_band(0.0), 0);
+        assert_eq!(q.load_band(0.1), q.load_band(0.2), "same regime, same band");
+        assert_eq!(q.load_band(1.3), 5, "1.3 / 0.25 floors to 5");
+        assert_eq!(q.load_band(-3.0), 0, "negative utilization clamps to idle");
+        let base = q.signature("d3", "P", &constraints(0.7, 2 << 20));
+        assert_eq!(base.load_band, 0, "load-free signatures keep the pre-feedback key");
+        let idle = base.clone().with_load_band(q.load_band(0.1));
+        let saturated = base.clone().with_load_band(q.load_band(2.0));
+        assert_eq!(idle, base, "idle regime aliases the legacy band");
+        assert_ne!(idle, saturated, "idle and saturated regimes never share a plan");
+        // Determinism: the same utilization always produces the same key.
+        assert_eq!(
+            base.clone().with_load_band(q.load_band(2.0)),
+            base.with_load_band(q.load_band(2.0))
+        );
+    }
+
+    #[test]
+    fn plan_ttl_orders_expiry_by_drain_rate() {
+        let ttl = PlanTtl::default();
+        let idle = ttl.ttl_s(0.0);
+        let slow = ttl.ttl_s(0.02);
+        let fast = ttl.ttl_s(0.5);
+        assert_eq!(idle, ttl.base_s, "no drain, full TTL");
+        assert!(idle > slow && slow > fast, "faster drain must expire sooner");
+        assert_eq!(ttl.ttl_s(-1.0), ttl.base_s, "negative drain clamps");
+    }
+
+    fn toy_search_result() -> SearchResult {
+        use crate::coordinator::accuracy::AccuracyModel;
+        use crate::coordinator::costmodel::CostModel;
+        use crate::coordinator::eval::Evaluator;
+        use crate::coordinator::manifest::Backbone;
+        use crate::coordinator::search::{Mutator, Runtime3C};
+        use crate::platform::Platform;
+
+        let bb = Backbone {
+            widths: vec![16, 32, 32, 64, 64],
+            strides: vec![1, 2, 1, 2, 1],
+            residual: vec![false, false, true, false, true],
+            kernel: 3,
+            accuracy: 0.95,
+        };
+        let task = crate::coordinator::test_fixtures::toy_task_with_backbone(&bb);
+        let cm = CostModel::new(&bb, &[32, 32, 1], 9);
+        let evaluator = Evaluator::new(cm, AccuracyModel::fit(&task), &Platform::raspberry_pi_4b());
+        Runtime3C::new(Mutator::from_task(&task)).search(&evaluator, &constraints(0.7, 2 << 20))
+    }
+
+    #[test]
+    fn age_aware_lookup_expires_fast_draining_contexts_first() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let cache = PlanCache::new(4);
+        let sig = cache.quantizer().signature("d3", "P", &constraints(0.7, 2 << 20));
+        let ttl = PlanTtl::default();
+        let result = toy_search_result();
+        let builds = AtomicUsize::new(0);
+        let search = |_: &Constraints| {
+            builds.fetch_add(1, Ordering::SeqCst);
+            result.clone()
+        };
+
+        // Build at t = 0.
+        let (_, o) = cache.lookup_or_search_at(sig.clone(), Some((0.0, ttl.ttl_s(0.0))), &search);
+        assert_eq!(o, CacheOutcome::Miss);
+        // t = 1000 s, mains-backed context (no drain): TTL 7200 s → hit.
+        let (_, o) =
+            cache.lookup_or_search_at(sig.clone(), Some((1000.0, ttl.ttl_s(0.0))), &search);
+        assert_eq!(o, CacheOutcome::Hit);
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        // Same instant, fast-draining context (0.5/h → TTL 342 s): the
+        // same-age entry is already expired for it — expiry ordering
+        // follows the drain rate.
+        assert!(ttl.ttl_s(0.5) < 1000.0 && ttl.ttl_s(0.0) > 1000.0);
+        let (_, o) =
+            cache.lookup_or_search_at(sig.clone(), Some((1000.0, ttl.ttl_s(0.5))), &search);
+        assert_eq!(o, CacheOutcome::Stale, "fast drain expires the plan sooner");
+        assert_eq!(builds.load(Ordering::SeqCst), 2, "stale entries rebuild in place");
+        // The rebuild re-stamped the entry at t = 1000: valid again.
+        let (_, o) =
+            cache.lookup_or_search_at(sig.clone(), Some((1100.0, ttl.ttl_s(0.5))), &search);
+        assert_eq!(o, CacheOutcome::Hit);
+        // The age-blind legacy path never expires it.
+        let (_, o) = cache.lookup_or_search(sig, &search);
+        assert_eq!(o, CacheOutcome::Hit);
+        let stats = cache.stats();
+        assert_eq!((stats.entries, stats.stale), (1, 1));
     }
 }

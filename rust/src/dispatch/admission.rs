@@ -83,6 +83,40 @@ pub struct RateLimit {
     pub burst: f64,
 }
 
+/// Stateful per-archetype token buckets — the one implementation of the
+/// §8-1 rate-limit semantics, shared by the whole-trace pre-pass
+/// ([`admit_shard`]) and the feedback loop's streaming admission
+/// (DESIGN.md §10-3), so the two paths cannot drift apart.
+#[derive(Debug, Clone)]
+pub struct RateLimiter {
+    limit: RateLimit,
+    /// (tokens, last refill instant) per archetype index.
+    buckets: Vec<(f64, f64)>,
+}
+
+impl RateLimiter {
+    pub fn new(limit: RateLimit) -> RateLimiter {
+        RateLimiter {
+            limit,
+            buckets: vec![(limit.burst, 0.0); crate::fleet::ALL_ARCHETYPES.len()],
+        }
+    }
+
+    /// Refill `archetype`'s bucket to simulated instant `t` and spend
+    /// one token; `false` means the arrival is shed `RateLimited`.
+    pub fn admit(&mut self, archetype: Archetype, t: f64) -> bool {
+        let b = &mut self.buckets[archetype.index()];
+        b.0 = (b.0 + (t - b.1) * self.limit.rate_per_s).min(self.limit.burst);
+        b.1 = t;
+        if b.0 < 1.0 {
+            false
+        } else {
+            b.0 -= 1.0;
+            true
+        }
+    }
+}
+
 /// Why a request was shed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShedReason {
@@ -204,10 +238,7 @@ pub fn admit_shard(
     let mut stats = AdmissionStats::default();
 
     // Per-archetype token buckets (start full).
-    let mut buckets: Vec<(f64, f64)> = Vec::new(); // (tokens, last_t) by archetype index
-    if let Some(rl) = cfg.rate_limit {
-        buckets = vec![(rl.burst, 0.0); crate::fleet::ALL_ARCHETYPES.len()];
-    }
+    let mut limiter = cfg.rate_limit.map(RateLimiter::new);
 
     // Per-window occupancy, pending-flush times (nondecreasing), and —
     // for ShedOldest — the FIFO identity of each window's occupants.
@@ -230,11 +261,8 @@ pub fn admit_shard(
         }
 
         // Token bucket first: sustained overload sheds at the source.
-        if let Some(rl) = cfg.rate_limit {
-            let b = &mut buckets[archetype.index()];
-            b.0 = (b.0 + (t - b.1) * rl.rate_per_s).min(rl.burst);
-            b.1 = t;
-            if b.0 < 1.0 {
+        if let Some(limiter) = limiter.as_mut() {
+            if !limiter.admit(archetype, t) {
                 verdicts[si][ei] = AdmissionVerdict::Shed(ShedReason::RateLimited);
                 stats.shed_rate_limited += 1;
                 let depth = pending_flush.len();
@@ -242,7 +270,6 @@ pub fn admit_shard(
                 stats.depth_sum += depth as u64;
                 continue;
             }
-            b.0 -= 1.0;
         }
 
         let slot = window_key(t, window_s);

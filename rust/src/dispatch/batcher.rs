@@ -85,16 +85,29 @@ impl BatchStats {
 /// batch membership and intra-batch order are then deterministic
 /// regardless of which worker stepped which session (§8-3).
 pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>]) -> BatchStats {
-    debug_assert!(
-        sessions.windows(2).all(|w| w[0].device_id < w[1].device_id),
-        "assemble_batches needs device-id-sorted sessions"
-    );
+    // The post-pass runs once, on finished sessions whose served lists
+    // are never read again — draining is free and shares the whole
+    // implementation with the feedback path's window assembly.
+    assemble_batches_window(cfg, sessions, u64::MAX).0
+}
+
+/// Shared core of both assembly paths: group `requests` (one vec per
+/// session, aligned to device-id-sorted `sessions`) by (window, variant),
+/// chunk to the batch cap, price each member on its platform's sublinear
+/// curve, and record the final latencies into the sessions.  Returns the
+/// stats plus the service-only microsecond sum (the feedback loop's µ̂
+/// observation; `total_us` additionally includes queue waits).
+fn group_and_price(
+    cfg: &DispatchConfig,
+    sessions: &mut [Box<DeviceSession>],
+    requests: &[Vec<ServedRequest>],
+) -> (BatchStats, f64) {
     let mut batches: Vec<Vec<(usize, usize)>> = Vec::new();
     if cfg.batch_window_s > 0.0 {
         // (window, variant) → requests, in (device, arrival) order.
         let mut groups: BTreeMap<(u64, usize), Vec<(usize, usize)>> = BTreeMap::new();
-        for (si, s) in sessions.iter().enumerate() {
-            for (ri, r) in s.served_requests().iter().enumerate() {
+        for (si, reqs) in requests.iter().enumerate() {
+            for (ri, r) in reqs.iter().enumerate() {
                 groups.entry((r.window, r.variant_id)).or_default().push((si, ri));
             }
         }
@@ -107,14 +120,15 @@ pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>
         // Window 0 is exact passthrough: every request is its own batch
         // — even two devices whose traces happen to emit bit-identical
         // arrival instants must not co-batch.
-        for (si, s) in sessions.iter().enumerate() {
-            for ri in 0..s.served_requests().len() {
+        for (si, reqs) in requests.iter().enumerate() {
+            for ri in 0..reqs.len() {
                 batches.push(vec![(si, ri)]);
             }
         }
     }
 
     let mut stats = BatchStats::default();
+    let mut service_us_sum = 0.0f64;
     for chunk in &batches {
         let k = chunk.len();
         stats.batches += 1;
@@ -122,14 +136,41 @@ pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>
         stats.size_max = stats.size_max.max(k);
         *stats.histogram.entry(k).or_insert(0) += 1;
         for &(si, ri) in chunk {
-            let r = sessions[si].served_requests()[ri];
+            let r = requests[si][ri];
             let factor = sessions[si].platform().batch_per_inference_factor(k);
             let service_us = r.single_us * factor;
+            service_us_sum += service_us;
             stats.total_us.push(r.wait_us + service_us);
             sessions[si].record_dispatched_latency(service_us);
         }
     }
-    stats
+    (stats, service_us_sum)
+}
+
+/// Feedback-path batch assembly (DESIGN.md §10-3): *drain* and price the
+/// requests served in the telemetry window just stepped, so the observed
+/// service latencies can feed the window's [`crate::context::WindowSample`]
+/// before the next window's admission runs.  Returns the window's stats
+/// plus the service-only microsecond sum (the µ̂ observation; the stats'
+/// `total_us` series additionally includes queue waits).  Grouping and
+/// pricing share [`group_and_price`] with [`assemble_batches`], so the
+/// two paths cannot diverge; sessions must be device-id sorted for the
+/// same determinism argument.  Only batch windows below `window_limit`
+/// are drained — a batch straddling the telemetry boundary waits for
+/// the next flush instead of being split and mispriced (`u64::MAX`
+/// drains everything, the final-flush / legacy case).
+pub fn assemble_batches_window(
+    cfg: &DispatchConfig,
+    sessions: &mut [Box<DeviceSession>],
+    window_limit: u64,
+) -> (BatchStats, f64) {
+    debug_assert!(
+        sessions.windows(2).all(|w| w[0].device_id < w[1].device_id),
+        "assemble_batches_window needs device-id-sorted sessions"
+    );
+    let drained: Vec<Vec<ServedRequest>> =
+        sessions.iter_mut().map(|s| s.take_served_before(window_limit)).collect();
+    group_and_price(cfg, sessions, &drained)
 }
 
 #[cfg(test)]

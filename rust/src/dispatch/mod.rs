@@ -38,14 +38,16 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod service;
 pub mod stats;
 pub mod stealing;
 
 pub use admission::{
-    admit_shard, AdmissionStats, AdmissionVerdict, BackpressurePolicy, RateLimit, ShardAdmission,
-    ShedReason,
+    admit_shard, AdmissionStats, AdmissionVerdict, BackpressurePolicy, RateLimit, RateLimiter,
+    ShardAdmission, ShedReason,
 };
-pub use batcher::{assemble_batches, BatchStats, ServedRequest};
+pub use batcher::{assemble_batches, assemble_batches_window, BatchStats, ServedRequest};
+pub use service::ServiceQueue;
 pub use stats::DispatchReport;
 pub use stealing::StealPool;
 

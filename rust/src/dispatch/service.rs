@@ -1,0 +1,178 @@
+//! G/D/1 service-rate admission for the feedback loop (DESIGN.md §10-3).
+//!
+//! PR 2's admission queue bounds *occupancy per batch window* — a crude
+//! proxy that (a) says yes to any load when batching is off (window 0
+//! has unbounded windows) and (b) knows nothing about how fast the
+//! deployed variants can actually serve.  This module replaces the proxy
+//! with the real constraint when the feedback loop is on: a virtual
+//! G/D/1 queue per shard whose service rate µ̂ is the telemetry plane's
+//! estimate ([`crate::context::LoadTelemetry::service_rate_per_s`] —
+//! seeded from the platform latency model, so admission **binds at
+//! window 0 too**, before a single observation).
+//!
+//! Each arrival sees the server's virtual backlog: its wait is the time
+//! until the server drains everything ahead of it at µ̂, and the
+//! backpressure policy decides on that wait/backlog instead of window
+//! occupancy.  `ShedOldest` degrades to `ShedNewest` here: verdicts are
+//! consumed by stepping sessions within the same telemetry window, so a
+//! streaming admission cannot overturn an already-served request.
+//!
+//! The whole struct is a deterministic fold over the time-sorted arrival
+//! stream — the same replayability contract as `admit_shard` (§8-1).
+
+use super::admission::{window_key, AdmissionVerdict, ShedReason};
+use super::BackpressurePolicy;
+
+/// Virtual single-server queue for one shard.
+#[derive(Debug, Clone)]
+pub struct ServiceQueue {
+    /// Simulated instant the virtual server goes idle.
+    free_t: f64,
+    /// Maximum jobs allowed in the virtual backlog (the dispatch
+    /// config's `queue_capacity`, reinterpreted as queue length).
+    capacity: usize,
+}
+
+impl ServiceQueue {
+    pub fn new(capacity: usize) -> ServiceQueue {
+        ServiceQueue { free_t: 0.0, capacity: capacity.max(1) }
+    }
+
+    /// Jobs in the virtual backlog as seen by an arrival at `t` with the
+    /// current service-rate estimate.
+    pub fn backlog_jobs(&self, t: f64, mu_per_s: f64) -> f64 {
+        ((self.free_t - t).max(0.0) * mu_per_s.max(0.0)).floor()
+    }
+
+    /// Admit or shed one arrival at simulated time `t` under service
+    /// rate `mu_per_s`.  Returns the verdict plus the backlog depth the
+    /// arrival observed (for the admission stats).
+    pub fn offer(
+        &mut self,
+        t: f64,
+        mu_per_s: f64,
+        policy: &BackpressurePolicy,
+        batch_window_s: f64,
+    ) -> (AdmissionVerdict, usize) {
+        if mu_per_s <= 0.0 {
+            // No capacity estimate: fail open (admit waitless), exactly
+            // what a brand-new shard with no model would do.
+            let window = window_key(t, batch_window_s);
+            return (AdmissionVerdict::Admitted { window, wait_us: 0.0 }, 0);
+        }
+        let wait_s = (self.free_t - t).max(0.0);
+        let depth = (wait_s * mu_per_s).floor() as usize;
+        let full = depth >= self.capacity;
+        let shed = match policy {
+            // Producer backpressure: never sheds, the wait just grows.
+            BackpressurePolicy::Block => None,
+            // Queue-length bound; a streaming admission cannot displace
+            // already-consumed verdicts, so both shed flavors drop the
+            // newcomer (reason tracks the configured intent).
+            BackpressurePolicy::ShedNewest if full => Some(ShedReason::QueueFull),
+            BackpressurePolicy::ShedOldest if full => Some(ShedReason::Displaced),
+            // Wait-bound shedding — the G/D/1 wait is exact here.
+            BackpressurePolicy::Deadline { max_wait_s } if wait_s > *max_wait_s => {
+                Some(ShedReason::Deadline)
+            }
+            _ => None,
+        };
+        if let Some(reason) = shed {
+            return (AdmissionVerdict::Shed(reason), depth);
+        }
+        self.free_t = self.free_t.max(t) + 1.0 / mu_per_s;
+        let window = window_key(t, batch_window_s);
+        (AdmissionVerdict::Admitted { window, wait_us: wait_s * 1e6 }, depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admitted_wait(v: AdmissionVerdict) -> f64 {
+        match v {
+            AdmissionVerdict::Admitted { wait_us, .. } => wait_us,
+            other => panic!("expected admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn waits_accumulate_at_the_service_rate() {
+        let mut q = ServiceQueue::new(64);
+        let mu = 10.0; // 100 ms per job
+        let (v0, d0) = q.offer(0.0, mu, &BackpressurePolicy::Block, 0.25);
+        let (v1, d1) = q.offer(0.0, mu, &BackpressurePolicy::Block, 0.25);
+        let (v2, d2) = q.offer(0.0, mu, &BackpressurePolicy::Block, 0.25);
+        assert_eq!(admitted_wait(v0), 0.0);
+        assert!((admitted_wait(v1) - 0.1e6).abs() < 1.0);
+        assert!((admitted_wait(v2) - 0.2e6).abs() < 1.0);
+        assert_eq!((d0, d1, d2), (0, 1, 2));
+        // The backlog drains in real (simulated) time.
+        let (v3, d3) = q.offer(1.0, mu, &BackpressurePolicy::Block, 0.25);
+        assert_eq!(admitted_wait(v3), 0.0);
+        assert_eq!(d3, 0);
+    }
+
+    #[test]
+    fn queue_length_policies_bind_even_at_window_zero() {
+        // Window 0 disabled the static per-window bound entirely (PR 2);
+        // the service model still bounds the backlog.
+        let mut q = ServiceQueue::new(2);
+        let mu = 10.0;
+        let p = BackpressurePolicy::ShedNewest;
+        assert!(matches!(q.offer(0.0, mu, &p, 0.0).0, AdmissionVerdict::Admitted { .. }));
+        assert!(matches!(q.offer(0.0, mu, &p, 0.0).0, AdmissionVerdict::Admitted { .. }));
+        assert_eq!(q.offer(0.0, mu, &p, 0.0).0, AdmissionVerdict::Shed(ShedReason::QueueFull));
+        // ShedOldest degrades to dropping the newcomer, tagged Displaced.
+        let mut q2 = ServiceQueue::new(1);
+        let po = BackpressurePolicy::ShedOldest;
+        assert!(matches!(q2.offer(0.0, mu, &po, 0.0).0, AdmissionVerdict::Admitted { .. }));
+        assert_eq!(q2.offer(0.0, mu, &po, 0.0).0, AdmissionVerdict::Shed(ShedReason::Displaced));
+    }
+
+    #[test]
+    fn deadline_sheds_on_projected_wait() {
+        let mut q = ServiceQueue::new(64);
+        let mu = 10.0;
+        let p = BackpressurePolicy::Deadline { max_wait_s: 0.15 };
+        assert!(matches!(q.offer(0.0, mu, &p, 0.25).0, AdmissionVerdict::Admitted { .. }));
+        assert!(matches!(q.offer(0.0, mu, &p, 0.25).0, AdmissionVerdict::Admitted { .. }));
+        // Third arrival would wait 200 ms > 150 ms deadline.
+        assert_eq!(q.offer(0.0, mu, &p, 0.25).0, AdmissionVerdict::Shed(ShedReason::Deadline));
+        // Sheds don't occupy the server: a later arrival is waitless.
+        assert_eq!(admitted_wait(q.offer(0.5, mu, &p, 0.25).0), 0.0);
+    }
+
+    #[test]
+    fn unknown_service_rate_fails_open() {
+        let mut q = ServiceQueue::new(1);
+        for i in 0..5 {
+            let (v, d) = q.offer(i as f64 * 0.001, 0.0, &BackpressurePolicy::ShedNewest, 0.25);
+            assert!(matches!(v, AdmissionVerdict::Admitted { wait_us, .. } if wait_us == 0.0));
+            assert_eq!(d, 0);
+        }
+    }
+
+    #[test]
+    fn faster_service_admits_more_of_the_same_burst() {
+        // The feedback loop's core arithmetic: compressing the deployed
+        // variant raises µ̂, which admits strictly more of an identical
+        // overload burst.
+        let p = BackpressurePolicy::ShedNewest;
+        let count = |mu: f64| {
+            let mut q = ServiceQueue::new(4);
+            (0..100)
+                .filter(|i| {
+                    matches!(
+                        q.offer(i as f64 * 0.01, mu, &p, 0.25).0,
+                        AdmissionVerdict::Admitted { .. }
+                    )
+                })
+                .count()
+        };
+        let slow = count(20.0); // 50 ms/inference
+        let fast = count(80.0); // 12.5 ms/inference
+        assert!(fast > slow, "µ̂ 80/s must admit more than 20/s: {fast} vs {slow}");
+    }
+}

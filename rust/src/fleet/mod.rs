@@ -38,8 +38,9 @@ pub mod report;
 pub mod scenarios;
 pub mod session;
 
+pub use crate::context::feedback::FeedbackConfig;
 pub use crate::coordinator::plancache::{PlanCache, PlanMode};
 pub use pool::{run_fleet, run_fleet_dispatch, shard_of, FleetConfig};
-pub use report::{ArchetypeSummary, FleetReport, LatencySummary};
+pub use report::{ArchetypeSummary, FeedbackBlock, FleetReport, LatencySummary};
 pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};
 pub use session::{DeviceReport, DeviceSession, SimCompiledVariant, SimVariantCache};

@@ -9,6 +9,8 @@ use std::collections::BTreeMap;
 use super::pool::FleetConfig;
 use super::scenarios::ALL_ARCHETYPES;
 use super::session::DeviceReport;
+use crate::context::feedback::FeedbackConfig;
+use crate::context::telemetry::LoadTelemetry;
 use crate::dispatch::DispatchReport;
 use crate::metrics::{Series, Table};
 use crate::runtime::CacheStats;
@@ -85,11 +87,74 @@ pub struct FleetReport {
     pub plan_hits: u64,
     pub plan_misses: u64,
     pub plan_stale: u64,
+    /// Mean (backbone − deployed) accuracy over all evolutions — the
+    /// compression price the feedback bench compares across modes.
+    /// Carried on the struct only; never serialized outside the
+    /// feedback block, so off-path JSON stays bit-identical.
+    pub acc_loss_evo_mean: f64,
     pub per_archetype: Vec<ArchetypeSummary>,
     pub wall_ms: f64,
     /// Dispatch-layer telemetry (DESIGN.md §8-4); `None` when the run
     /// used the direct path.
     pub dispatch: Option<DispatchReport>,
+    /// Feedback-loop rollup (DESIGN.md §10); `None` (and absent from the
+    /// JSON) whenever the loop is off — the off-path bit-parity
+    /// guarantee.
+    pub feedback: Option<FeedbackBlock>,
+}
+
+/// Fleet-level rollup of one feedback-loop run: the merged final
+/// telemetry frame plus the control-law echo and the accuracy price paid
+/// for the load win (DESIGN.md §10-6).
+#[derive(Debug, Clone, Copy)]
+pub struct FeedbackBlock {
+    /// The control law the run used.
+    pub config: FeedbackConfig,
+    /// Telemetry windows processed (max across shards).
+    pub windows: u64,
+    /// Final fleet-merged telemetry frame.
+    pub telemetry: LoadTelemetry,
+    /// Fleet-summed service-rate prior µ̂₀ (modeled, window 0).
+    pub service_rate_prior_per_s: f64,
+    /// Mean (backbone − deployed) accuracy over all evolutions.
+    pub acc_loss_evo_mean: f64,
+}
+
+impl FeedbackBlock {
+    /// The `"telemetry"` JSON block (schema: README.md).
+    pub fn telemetry_json(&self) -> Json {
+        let mut m = match self.telemetry.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("LoadTelemetry::to_json emits an object"),
+        };
+        m.insert("windows".into(), Json::Num(self.windows as f64));
+        m.insert(
+            "service_rate_prior_per_s".into(),
+            Json::Num(self.service_rate_prior_per_s),
+        );
+        Json::Obj(m)
+    }
+
+    /// The `"feedback"` JSON block (schema: README.md).
+    pub fn feedback_json(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("enabled".into(), Json::Bool(self.config.enabled));
+        m.insert("telemetry_window_s".into(), num(self.config.telemetry_window_s));
+        m.insert("ewma_alpha".into(), num(self.config.ewma_alpha));
+        m.insert("shed_lambda2_gain".into(), num(self.config.shed_lambda2_gain));
+        m.insert("wait_budget_gain".into(), num(self.config.wait_budget_gain));
+        m.insert("min_budget_fraction".into(), num(self.config.min_budget_fraction));
+        m.insert("spike_util_threshold".into(), num(self.config.spike.util_threshold));
+        m.insert("spike_shed_threshold".into(), num(self.config.spike.shed_threshold));
+        m.insert("spike_cooldown_s".into(), num(self.config.spike.cooldown_s));
+        m.insert(
+            "plan_ttl_base_s".into(),
+            num(self.config.plan_ttl.map(|t| t.base_s).unwrap_or(0.0)),
+        );
+        m.insert("acc_loss_evo_mean".into(), num(self.acc_loss_evo_mean));
+        Json::Obj(m)
+    }
 }
 
 impl FleetReport {
@@ -111,6 +176,7 @@ impl FleetReport {
         let mut plan_hits = 0u64;
         let mut plan_misses = 0u64;
         let mut plan_stale = 0u64;
+        let mut acc_loss_evo_sum = 0.0f64;
         let mut by_archetype: BTreeMap<&'static str, Vec<&DeviceReport>> = BTreeMap::new();
         for r in &reports {
             latency_us.extend_from(&r.latency_us);
@@ -123,6 +189,7 @@ impl FleetReport {
             plan_hits += r.plan_hits;
             plan_misses += r.plan_misses;
             plan_stale += r.plan_stale;
+            acc_loss_evo_sum += r.acc_loss_evo_sum;
             by_archetype.entry(r.archetype).or_default().push(r);
         }
 
@@ -184,9 +251,15 @@ impl FleetReport {
             plan_hits,
             plan_misses,
             plan_stale,
+            acc_loss_evo_mean: if evolutions > 0 {
+                acc_loss_evo_sum / evolutions as f64
+            } else {
+                0.0
+            },
             per_archetype,
             wall_ms,
             dispatch: None,
+            feedback: None,
         }
     }
 
@@ -256,6 +329,10 @@ impl FleetReport {
         root.insert("archetypes".into(), Json::Arr(archetypes));
         if let Some(dispatch) = &self.dispatch {
             root.insert("dispatch".into(), dispatch.to_json());
+        }
+        if let Some(feedback) = &self.feedback {
+            root.insert("telemetry".into(), feedback.telemetry_json());
+            root.insert("feedback".into(), feedback.feedback_json());
         }
         Json::Obj(root)
     }

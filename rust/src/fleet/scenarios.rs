@@ -191,6 +191,16 @@ impl Scenario {
         }
     }
 
+    /// The same scenario under a traffic multiplier (the bench_feedback
+    /// overload profiles, DESIGN.md §10-6): event intensity scales,
+    /// everything else — platform, battery, cache dynamics, trigger —
+    /// stays put.  A multiplier of exactly 1.0 is the identity, so
+    /// baseline fleets replay bit-identically.
+    pub fn with_load(mut self, multiplier: f64) -> Scenario {
+        self.profile = self.profile.scaled(multiplier);
+        self
+    }
+
     /// Per-device sub-seed for the context simulator (battery/cache).
     pub fn context_seed(fleet_seed: u64, device_id: u64) -> u64 {
         Rng::new(fleet_seed ^ device_id.wrapping_mul(0x9E3779B97F4A7C15)).next_u64()

@@ -27,9 +27,11 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use super::scenarios::{Archetype, Scenario};
-use crate::context::{ContextSimulator, Trigger};
+use crate::context::feedback::{ContextFrame, FeedbackConfig};
+use crate::context::telemetry::LoadTelemetry;
+use crate::context::{ContextSimulator, ContextSnapshot, Trigger};
 use crate::context::events::Event;
-use crate::coordinator::engine::AdaSpring;
+use crate::coordinator::engine::{AdaSpring, Evolution};
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::plancache::{ContextQuantizer, PlanCache, PlanMode};
 use crate::coordinator::CompressionConfig;
@@ -91,6 +93,21 @@ pub struct DeviceSession {
     plan_hits: u64,
     plan_misses: u64,
     plan_stale: u64,
+    /// Feedback-loop configuration (DESIGN.md §10); `None`/disabled =
+    /// the exact pre-feedback step semantics.
+    feedback: Option<FeedbackConfig>,
+    /// Latest shard telemetry frame, pushed per window by the feedback
+    /// worker; rides into every evolve via the [`ContextFrame`].
+    load: Option<LoadTelemetry>,
+    /// (t, battery) at the previous context check — the drain estimator.
+    drain_ref: Option<(f64, f64)>,
+    /// Smoothed battery drain, fraction/hour (plan-TTL input, §10-5).
+    drain_per_hour: f64,
+    /// Design-time backbone accuracy (the acc-loss reference).
+    backbone_accuracy: f64,
+    /// Σ over evolutions of (backbone acc − deployed acc): the bounded
+    /// extra-accuracy-loss metric bench_feedback reports.
+    acc_loss_evo_sum: f64,
 }
 
 /// A finished session's summary, handed to the fleet aggregator.
@@ -117,6 +134,9 @@ pub struct DeviceReport {
     pub plan_hits: u64,
     pub plan_misses: u64,
     pub plan_stale: u64,
+    /// Σ over evolutions of (backbone − deployed) accuracy — the
+    /// feedback bench's extra-accuracy-loss numerator (DESIGN.md §10-6).
+    pub acc_loss_evo_sum: f64,
 }
 
 impl DeviceSession {
@@ -157,6 +177,7 @@ impl DeviceSession {
                 .inference_energy(&costs, scenario.platform.l2_cache_bytes)
                 .total_j()
         };
+        let backbone_accuracy = engine.task().backbone.accuracy;
         Ok(DeviceSession {
             device_id,
             archetype: scenario.archetype,
@@ -183,6 +204,12 @@ impl DeviceSession {
             plan_hits: 0,
             plan_misses: 0,
             plan_stale: 0,
+            feedback: None,
+            load: None,
+            drain_ref: None,
+            drain_per_hour: 0.0,
+            backbone_accuracy,
+            acc_loss_evo_sum: 0.0,
         })
     }
 
@@ -202,6 +229,77 @@ impl DeviceSession {
                 }
             }
         }
+    }
+
+    /// Enable the feedback loop (DESIGN.md §10): load-aware constraint
+    /// derivation, the EMA-baselined trigger with the load-spike arm,
+    /// and (when configured) the drain-coupled plan TTL.  Disabled
+    /// configs leave every step bit-identical to the legacy path.
+    pub fn set_feedback(&mut self, fb: &FeedbackConfig) {
+        if fb.enabled {
+            self.trigger = self
+                .trigger
+                .clone()
+                .with_ema(fb.trigger_ema_alpha)
+                .with_load_spike(fb.spike);
+            if let Some(ttl) = fb.plan_ttl {
+                self.engine.set_plan_ttl(ttl);
+            }
+        }
+        self.feedback = Some(*fb);
+    }
+
+    /// Push the shard's latest telemetry frame (per telemetry window).
+    pub fn set_load(&mut self, load: LoadTelemetry) {
+        self.load = Some(load);
+    }
+
+    /// Switch to streaming verdict delivery: the feedback worker admits
+    /// arrivals window by window and appends verdicts as it goes
+    /// (instead of the whole-trace pre-pass of `set_dispatch`).
+    pub fn init_streaming_verdicts(&mut self) {
+        self.verdicts = Some(Vec::with_capacity(self.events.len()));
+    }
+
+    /// Append the next event's admission verdict (streaming mode; must
+    /// arrive in event order).
+    pub fn push_verdict(&mut self, v: AdmissionVerdict) {
+        if let Some(vs) = self.verdicts.as_mut() {
+            vs.push(v);
+        }
+    }
+
+    /// Drain served requests whose batch-window key is below
+    /// `window_limit` (the feedback path's per-window batch assembly
+    /// input; `u64::MAX` drains everything).  Requests in a still-open
+    /// batch window stay queued so a batch straddling a telemetry-window
+    /// boundary is priced whole, never split.
+    pub fn take_served_before(&mut self, window_limit: u64) -> Vec<ServedRequest> {
+        if window_limit == u64::MAX {
+            return std::mem::take(&mut self.served);
+        }
+        let (ready, later): (Vec<ServedRequest>, Vec<ServedRequest>) =
+            std::mem::take(&mut self.served).into_iter().partition(|r| r.window < window_limit);
+        self.served = later;
+        ready
+    }
+
+    /// This session's arrival-rate prior for window-0 admission
+    /// (DESIGN.md §10-1): the context snapshot's `event_rate_per_min`
+    /// lifted through the [`ContextFrame`] funnel — the signal the
+    /// pre-feedback `constraints()` silently dropped now seeds the
+    /// telemetry plane.
+    pub fn arrival_rate_prior_per_s(&mut self) -> f64 {
+        ContextFrame::from_snapshot(&self.sim.snapshot()).arrival_prior_per_s
+    }
+
+    /// Modeled backbone (identity-config) latency at the platform's full
+    /// L2 — the service-rate prior µ̂₀ before any observation.
+    pub fn modeled_backbone_latency_ms(&self) -> f64 {
+        let identity = CompressionConfig::identity(self.engine.task().n_layers());
+        self.engine
+            .evaluator
+            .modeled_latency_ms(&identity, self.platform.l2_cache_bytes)
     }
 
     /// The session's pre-sampled event trace (the dispatch pre-pass's
@@ -272,20 +370,29 @@ impl DeviceSession {
 
         if t >= self.next_check {
             let snap = self.sim.snapshot();
-            if self.trigger.should_fire(&snap) {
-                let constraints = self.engine.constraints_for(&snap);
-                let evo = self.engine.evolve(&constraints)?;
-                match evo.plan_outcome {
-                    Some(CacheOutcome::Hit) => self.plan_hits += 1,
-                    Some(CacheOutcome::Miss) => self.plan_misses += 1,
-                    Some(CacheOutcome::Stale) => self.plan_stale += 1,
-                    None => {}
+            match self.feedback {
+                // Feedback loop on: trigger and evolve on the unified
+                // frame (snapshot + shard telemetry + drain estimate).
+                Some(fb) if fb.enabled => {
+                    self.update_drain(&snap);
+                    let mut frame =
+                        ContextFrame::from_snapshot(&snap).with_drain(self.drain_per_hour);
+                    if let Some(load) = self.load {
+                        frame = frame.with_load(load);
+                    }
+                    if self.trigger.should_fire_frame(&frame) {
+                        let evo = self.engine.evolve_frame(&frame, &fb)?;
+                        self.after_evolution(&snap, evo, cache)?;
+                    }
                 }
-                if self.loaded_variant != Some(evo.variant_id) {
-                    self.load_variant(cache, evo.variant_id)?;
-                    self.loaded_variant = Some(evo.variant_id);
+                // Legacy path — exactly the pre-feedback semantics.
+                _ => {
+                    if self.trigger.should_fire(&snap) {
+                        let constraints = self.engine.constraints_for(&snap);
+                        let evo = self.engine.evolve(&constraints)?;
+                        self.after_evolution(&snap, evo, cache)?;
+                    }
                 }
-                self.report.evolutions.push(EvolutionRecord::capture(&snap, &evo));
             }
             self.next_check = t + CONTEXT_CHECK_PERIOD_S;
         }
@@ -334,6 +441,46 @@ impl DeviceSession {
 
         self.done = self.t >= self.duration_s;
         Ok(())
+    }
+
+    /// Shared evolution tail: plan-outcome accounting, variant (re)load
+    /// through the shared cache, accuracy-loss tracking, record capture.
+    fn after_evolution(
+        &mut self,
+        snap: &ContextSnapshot,
+        evo: Evolution,
+        cache: &SimVariantCache,
+    ) -> Result<()> {
+        match evo.plan_outcome {
+            Some(CacheOutcome::Hit) => self.plan_hits += 1,
+            Some(CacheOutcome::Miss) => self.plan_misses += 1,
+            Some(CacheOutcome::Stale) => self.plan_stale += 1,
+            None => {}
+        }
+        if self.loaded_variant != Some(evo.variant_id) {
+            self.load_variant(cache, evo.variant_id)?;
+            self.loaded_variant = Some(evo.variant_id);
+        }
+        self.acc_loss_evo_sum += (self.backbone_accuracy - evo.deployed_accuracy).max(0.0);
+        self.report.evolutions.push(EvolutionRecord::capture(snap, &evo));
+        Ok(())
+    }
+
+    /// Update the battery drain-rate estimate from consecutive context
+    /// checks (lightly smoothed; ≥ 0).
+    fn update_drain(&mut self, snap: &ContextSnapshot) {
+        if let Some((t0, b0)) = self.drain_ref {
+            let dt_h = (snap.t_seconds - t0) / 3600.0;
+            if dt_h > 1e-9 {
+                let inst = ((b0 - snap.battery_fraction) / dt_h).max(0.0);
+                self.drain_per_hour = if self.drain_per_hour > 0.0 {
+                    0.5 * self.drain_per_hour + 0.5 * inst
+                } else {
+                    inst
+                };
+            }
+        }
+        self.drain_ref = Some((snap.t_seconds, snap.battery_fraction));
     }
 
     /// Run the session to completion (single-device paths and tests; the
@@ -395,6 +542,7 @@ impl DeviceSession {
             plan_hits: self.plan_hits,
             plan_misses: self.plan_misses,
             plan_stale: self.plan_stale,
+            acc_loss_evo_sum: self.acc_loss_evo_sum,
         }
     }
 }

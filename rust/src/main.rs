@@ -18,7 +18,10 @@
 
 use anyhow::{bail, Result};
 
-use adaspring::context::{Battery, CacheContention, ContextSimulator, EventTrace, Trigger, TriggerPolicy};
+use adaspring::context::{
+    Battery, CacheContention, ContextFrame, ContextSimulator, ContextSnapshot, EventTrace,
+    Trigger, TriggerPolicy,
+};
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
 use adaspring::coordinator::Manifest;
@@ -83,13 +86,18 @@ fn constraints_from_args(
     args: &Args,
     task: &adaspring::coordinator::manifest::TaskArtifacts,
 ) -> Constraints {
-    let battery = args.get_f64("battery", 0.8);
-    let cache_mb = args.get_f64("cache-mb", 2.0);
-    Constraints::from_battery(
-        battery,
+    // The CLI's ad-hoc context is a snapshot like any other: route it
+    // through the unified ContextFrame derivation funnel (DESIGN.md
+    // §10-2) instead of calling the λ rule directly.
+    let snap = ContextSnapshot {
+        t_seconds: 0.0,
+        battery_fraction: args.get_f64("battery", 0.8),
+        available_cache: (args.get_f64("cache-mb", 2.0) * 1024.0 * 1024.0) as u64,
+        event_rate_per_min: 0.0,
+    };
+    ContextFrame::from_snapshot(&snap).constraints(
         args.get_f64("acc-loss", task.acc_loss_threshold),
         args.get_f64("latency-ms", task.latency_budget_ms),
-        (cache_mb * 1024.0 * 1024.0) as u64,
     )
 }
 

@@ -1,0 +1,184 @@
+//! Integration: the load-aware context plane and the dispatch-telemetry →
+//! evolution feedback loop (DESIGN.md §10).
+//!
+//! * parity — with feedback off, the dispatch path is the PR 3 path:
+//!   identical to the direct fleet, no telemetry/feedback JSON blocks;
+//! * the overload win — under the diurnal-peak overload profile,
+//!   feedback on sheds less and serves a lower p95 than feedback off, at
+//!   bounded extra accuracy loss (the bench_feedback floor's claim);
+//! * determinism — feedback runs replay bit-identically;
+//! * plan-cache composition — load banding + the shared plan cache keep
+//!   their every-evolution-accounted invariant under feedback.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::{BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{run_fleet, run_fleet_dispatch, FeedbackConfig, FleetConfig, PlanMode};
+
+/// The overloaded fleet both modes run: one shard, all six archetypes,
+/// 0.2 h under a 600× diurnal multiplier — arrivals beat the modeled
+/// backbone service rate but stay inside what compressed variants
+/// absorb, so the feedback loop has room to win.
+fn overload_cfg() -> FleetConfig {
+    FleetConfig {
+        devices: 6,
+        shards: 1,
+        duration_s: 0.2 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 600.0,
+        ..FleetConfig::default()
+    }
+}
+
+/// The undersized admission the overload presses against.
+fn tight_dispatch() -> DispatchConfig {
+    DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        stealing: false,
+        ..DispatchConfig::default()
+    }
+}
+
+#[test]
+fn feedback_off_is_the_pr3_dispatch_path() {
+    // Parity: with feedback off (the default), the dispatch path is the
+    // pre-feedback code — equal to the direct fleet on the passthrough
+    // config, and the report JSON carries no telemetry/feedback blocks.
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 12,
+        shards: 3,
+        duration_s: 2.0 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        ..FleetConfig::default()
+    };
+    assert!(!cfg.feedback.enabled, "feedback defaults off");
+    let direct = run_fleet(&manifest, &cfg).unwrap();
+    let dispatched = run_fleet_dispatch(&manifest, &cfg, &DispatchConfig::passthrough()).unwrap();
+    assert_eq!(dispatched.inferences, direct.inferences);
+    assert_eq!(dispatched.dropped, direct.dropped);
+    assert_eq!(dispatched.evolutions, direct.evolutions);
+    assert_eq!(dispatched.latency.p50_ms.to_bits(), direct.latency.p50_ms.to_bits());
+    assert_eq!(dispatched.latency.mean_ms.to_bits(), direct.latency.mean_ms.to_bits());
+    assert!(dispatched.feedback.is_none(), "off runs carry no feedback block");
+    let json = dispatched.to_json().to_string();
+    assert!(!json.contains("\"telemetry\""), "off JSON must stay pre-feedback: {json}");
+    assert!(!json.contains("\"feedback\""));
+}
+
+#[test]
+fn feedback_reduces_shed_and_p95_under_overload() {
+    // The acceptance claim behind rust/feedback_floor.json, asserted at
+    // test scale: same overloaded fleet, feedback off vs on.
+    let manifest = Manifest::synthetic();
+    let base = overload_cfg();
+    let dcfg = tight_dispatch();
+    let off = run_fleet_dispatch(&manifest, &base, &dcfg).unwrap();
+    let on = run_fleet_dispatch(
+        &manifest,
+        &FleetConfig { feedback: FeedbackConfig::on(), ..base.clone() },
+        &dcfg,
+    )
+    .unwrap();
+
+    let d_off = off.dispatch.as_ref().unwrap();
+    let d_on = on.dispatch.as_ref().unwrap();
+    assert_eq!(
+        d_off.admission.submitted, d_on.admission.submitted,
+        "same traces, same offered load"
+    );
+    assert!(off.shed > 0, "the overload profile must overwhelm the static queue");
+    assert_eq!(
+        d_on.admission.submitted as usize,
+        on.inferences + on.dropped + on.shed,
+        "feedback admission accounts for every arrival"
+    );
+
+    // The wins the floor enforces, at strict inequality.
+    assert!(
+        on.shed < off.shed,
+        "feedback on must shed less: {} vs {}",
+        on.shed,
+        off.shed
+    );
+    assert!(
+        on.latency.p95_ms < off.latency.p95_ms,
+        "feedback on must serve a lower p95: {:.2} vs {:.2} ms",
+        on.latency.p95_ms,
+        off.latency.p95_ms
+    );
+    // ...at bounded accuracy price (the palette's worst drop is 0.06).
+    let extra = on.acc_loss_evo_mean - off.acc_loss_evo_mean;
+    assert!(extra <= 0.06, "extra accuracy loss {extra} above the structural bound");
+
+    // The on-run surfaces the context plane: telemetry + feedback JSON
+    // blocks with finite, sensible numbers.
+    let fbk = on.feedback.expect("on runs carry the feedback block");
+    assert!(fbk.config.enabled);
+    assert!(fbk.windows > 0);
+    assert!(fbk.telemetry.arrival_rate_per_s > 0.0);
+    assert!(fbk.telemetry.service_rate_per_s > 0.0);
+    assert!(fbk.service_rate_prior_per_s > 0.0);
+    let json = on.to_json().to_string();
+    assert!(json.contains("\"telemetry\""), "{json}");
+    assert!(json.contains("\"feedback\""));
+    assert!(json.contains("\"gd1_wait_ms\""));
+    // Overload evolves more eagerly than the off path (LoadSpike arm).
+    assert!(on.evolutions >= off.evolutions, "{} vs {}", on.evolutions, off.evolutions);
+}
+
+#[test]
+fn feedback_runs_replay_bit_identically() {
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        feedback: FeedbackConfig::on(),
+        ..overload_cfg()
+    };
+    let dcfg = tight_dispatch();
+    let a = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+    let b = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+    assert_eq!(a.inferences, b.inferences);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.evolutions, b.evolutions);
+    assert_eq!(a.latency.p50_ms.to_bits(), b.latency.p50_ms.to_bits());
+    assert_eq!(a.latency.p95_ms.to_bits(), b.latency.p95_ms.to_bits());
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+    let (fa, fb) = (a.feedback.unwrap(), b.feedback.unwrap());
+    let (ta, tb) = (fa.telemetry, fb.telemetry);
+    assert_eq!(ta.arrival_rate_per_s.to_bits(), tb.arrival_rate_per_s.to_bits());
+    assert_eq!(ta.service_rate_per_s.to_bits(), tb.service_rate_per_s.to_bits());
+    assert_eq!(ta.shed_rate.to_bits(), tb.shed_rate.to_bits());
+}
+
+#[test]
+fn feedback_composes_with_the_shared_plan_cache() {
+    // Load banding keys the plan cache per regime; the every-evolution
+    // accounting invariant must survive the feedback path.
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        feedback: FeedbackConfig::on(),
+        plan: PlanMode::Shared,
+        ..overload_cfg()
+    };
+    let r = run_fleet_dispatch(&manifest, &cfg, &tight_dispatch()).unwrap();
+    let plan = r.plan.expect("shared runs report plan stats");
+    assert_eq!(
+        (plan.hits + plan.misses + plan.stale) as usize,
+        r.evolutions,
+        "every evolution consults the plan cache exactly once (stats: {plan:?})"
+    );
+    assert_eq!(
+        r.plan_hits + r.plan_misses + r.plan_stale,
+        plan.hits + plan.misses + plan.stale,
+        "per-device outcome totals agree with the cache counters"
+    );
+    assert!(r.inferences > 0);
+}

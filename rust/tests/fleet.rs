@@ -247,6 +247,7 @@ fn shared_plan_cache_preserves_fleet_results_with_nonzero_hit_rate() {
         task: "d3".to_string(),
         cache_stripes: 8,
         plan: PlanMode::Banded,
+        ..FleetConfig::default()
     };
     let banded = run_fleet(&manifest, &base).unwrap();
     let shared =
