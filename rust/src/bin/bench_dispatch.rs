@@ -26,27 +26,31 @@
 use anyhow::{anyhow, Result};
 
 use adaspring::coordinator::Manifest;
-use adaspring::dispatch::{BackpressurePolicy, DispatchConfig, Placement, RateLimit};
+use adaspring::dispatch::{
+    AdaptiveBatch, BackpressurePolicy, DispatchConfig, Placement, RateLimit,
+};
 use adaspring::fleet::{run_fleet_dispatch, FleetConfig, FleetReport};
 use adaspring::metrics::Table;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "window", "capacity", "policy", "rate", "burst", "max-batch", "placement",
-    "no-steal", "json-out", "sweep", "csv",
+    "load", "window", "capacity", "policy", "rate", "burst", "max-batch", "adaptive-batch",
+    "placement", "no-steal", "json-out", "sweep", "csv",
 ];
 
-const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal"];
+const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal", "adaptive-batch"];
 
 const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
                      [--feedback on|off] [--load X] [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
-                     [--rate PER_S --burst N] [--max-batch N] [--placement modulo|packed] \
-                     [--no-steal] [--json-out PATH] [--sweep] [--csv]";
+                     [--rate PER_S --burst N] [--max-batch N] [--adaptive-batch] \
+                     [--placement modulo|packed] [--no-steal] [--json-out PATH] [--sweep] [--csv]\n\
+                     (--adaptive-batch grows the batch cap with G/D/1 utilization; it engages \
+                     on the windowed pipeline, i.e. with --feedback on)";
 
 fn fleet_config(args: &Args) -> Result<FleetConfig> {
     // Dispatch-bench defaults: a smaller, shorter fleet than the raw
@@ -76,22 +80,21 @@ fn dispatch_config(args: &Args) -> Result<DispatchConfig> {
         rate_limit,
         batch_window_s: args.get_f64("window", defaults.batch_window_s),
         max_batch: args.get_usize("max-batch", defaults.max_batch),
+        adaptive_batch: args.flag("adaptive-batch").then(AdaptiveBatch::default),
         stealing: !args.flag("no-steal"),
         placement,
     })
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
-    if args.flag("sweep") {
-        return sweep(&args, &manifest);
+    if bench.args.flag("sweep") {
+        return sweep(&bench);
     }
 
-    let cfg = fleet_config(&args)?;
-    let dcfg = dispatch_config(&args)?;
+    let cfg = fleet_config(&bench.args)?;
+    let dcfg = dispatch_config(&bench.args)?;
     println!(
         "# Dispatch — {} devices x {:.1} h over {} shards (policy {}, window {} s, capacity {}, \
          feedback {}, load x{})\n",
@@ -104,17 +107,10 @@ fn main() -> Result<()> {
         cfg.feedback.name(),
         cfg.load_multiplier
     );
-    let report = run_fleet_dispatch(&manifest, &cfg, &dcfg)?;
+    let report = run_fleet_dispatch(&bench.manifest, &cfg, &dcfg)?;
     print_summary(&report);
-    let table = report.archetype_table();
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
-    let json = report.to_json();
-    println!("fleet JSON:\n{json}");
-    write_json_out(&args, &json)?;
+    bench.print_table(&report.archetype_table());
+    bench.emit_json("fleet", &report.to_json())?;
     Ok(())
 }
 
@@ -179,7 +175,8 @@ fn print_summary(r: &FleetReport) {
 
 /// Policy × batch-window × shard-count sweep under a tight admission
 /// queue — the grid behind the subsystem's headline numbers.
-fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
+fn sweep(bench: &Bench) -> Result<()> {
+    let (args, manifest): (&Args, &Manifest) = (&bench.args, &bench.manifest);
     let base = fleet_config(args)?;
     let base_dispatch = dispatch_config(args)?;
     // Undersized by default so the policies visibly diverge.
@@ -236,13 +233,7 @@ fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
             }
         }
     }
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
-    let json = Json::Arr(records);
-    println!("sweep JSON:\n{json}");
-    write_json_out(args, &json)?;
+    bench.print_table(&table);
+    bench.emit_json("sweep", &Json::Arr(records))?;
     Ok(())
 }

@@ -7,8 +7,8 @@
 //!       [--hours 0.5] [--seed 42] [--task d3] [--manifest path]
 //!       [--window 0.25] [--capacity 4]
 //!       [--policy block|shed-newest|shed-oldest|deadline:SECS]
-//!       [--profile calm|diurnal-peak|surge|all] [--check-floor path]
-//!       [--json-out path] [--csv]
+//!       [--profile calm|diurnal-peak|surge|all] [--telemetry shard|archetype]
+//!       [--adaptive-batch] [--check-floor path] [--json-out path] [--csv]
 //!
 //! Unknown flags are rejected with this usage.  Each profile scales the
 //! fleet's diurnal event curves by a fixed multiplier (calm ×1,
@@ -21,6 +21,14 @@
 //! and reports shed rate, p95 service latency, end-to-end dispatch p95,
 //! and the mean deployed accuracy loss.
 //!
+//! The bench drives the staged pipeline (DESIGN.md §11) directly: the
+//! off runs are the [`PipelineConfig::dispatch`] preset, the on runs the
+//! [`PipelineConfig::feedback`] preset.  `--telemetry archetype` swaps
+//! the telemetry stage to per-archetype frame keying (§11-3) and
+//! `--adaptive-batch` arms the admission-aware batch-sizing ramp
+//! (§11-4) — both one-line stage swaps on the on-runs; the defaults are
+//! bit-identical to the pre-pipeline bench.
+//!
 //! `--check-floor rust/feedback_floor.json` enforces the committed
 //! overload win on the diurnal-peak profile: shed-rate and p95 ratios
 //! (on/off) below their ceilings and bounded extra accuracy loss.  The
@@ -30,27 +38,30 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use adaspring::dispatch::{BackpressurePolicy, DispatchConfig};
-use adaspring::fleet::{run_fleet_dispatch, FeedbackConfig, FleetConfig, FleetReport};
+use adaspring::dispatch::{AdaptiveBatch, BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{
+    run_pipeline, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, TelemetryMode,
+};
 use adaspring::metrics::Table;
-use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "window",
-    "capacity", "policy", "profile", "check-floor", "json-out", "csv",
+    "capacity", "policy", "profile", "telemetry", "adaptive-batch", "check-floor", "json-out",
+    "csv",
 ];
 
-const BOOLEAN_FLAGS: &[&str] = &["csv"];
+const BOOLEAN_FLAGS: &[&str] = &["csv", "adaptive-batch"];
 
 const USAGE: &str = "usage: bench_feedback [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
                      [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
-                     [--profile calm|diurnal-peak|surge|all] [--check-floor PATH] \
-                     [--json-out PATH] [--csv]\n\
-                     (the bench drives --feedback and --load itself, per profile and mode)";
+                     [--profile calm|diurnal-peak|surge|all] [--telemetry shard|archetype] \
+                     [--adaptive-batch] [--check-floor PATH] [--json-out PATH] [--csv]\n\
+                     (the bench drives --feedback and --load itself, per profile and mode; \
+                     --telemetry / --adaptive-batch are stage swaps on the feedback-on runs)";
 
 /// The overload profiles: (name, event-intensity multiplier).
 const PROFILES: [(&str, f64); 3] = [("calm", 1.0), ("diurnal-peak", 600.0), ("surge", 1500.0)];
@@ -100,21 +111,25 @@ impl Cell {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = adaspring::coordinator::Manifest::load_cli(
-        args.get("manifest"),
-        "artifacts/manifest.json",
-    )?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let args = &bench.args;
+    let manifest = &bench.manifest;
 
     // One parser for the shared fleet flags (devices/shards/hours/seed/
     // task/stripes/plan); the bench drives feedback + load itself.
     let defaults =
         FleetConfig { devices: 12, shards: 2, duration_s: 0.5 * 3600.0, ..FleetConfig::default() };
-    let base = FleetConfig::from_args(&args, defaults)?;
+    let base = FleetConfig::from_args(args, defaults)?;
     let policy_name = args.get_or("policy", "shed-newest");
     let policy = BackpressurePolicy::parse(policy_name)
         .ok_or_else(|| anyhow!("bad --policy {policy_name:?}\n{USAGE}"))?;
+    let telemetry_name = args.get_or("telemetry", "shard");
+    let telemetry = TelemetryMode::parse(telemetry_name)
+        .ok_or_else(|| anyhow!("bad --telemetry {telemetry_name:?} (expected shard|archetype)"))?;
+    // The adaptive ramp only engages on the windowed pipeline, so only
+    // the feedback-on runs carry it (the off runs stay the exact PR 2
+    // dispatch preset either way).
+    let adaptive = args.flag("adaptive-batch").then(AdaptiveBatch::default);
     let dcfg = DispatchConfig {
         queue_capacity: args.get_usize("capacity", 4),
         policy,
@@ -135,13 +150,15 @@ fn main() -> Result<()> {
 
     println!(
         "# Feedback bench — {} devices x {:.2} h over {} shards (policy {}, window {} s, \
-         capacity {})\n",
+         capacity {}, telemetry {}, adaptive batch {})\n",
         base.devices,
         base.duration_s / 3600.0,
         base.shards,
         dcfg.policy.describe(),
         dcfg.batch_window_s,
-        dcfg.queue_capacity
+        dcfg.queue_capacity,
+        telemetry.name(),
+        if adaptive.is_some() { "on" } else { "off" }
     );
 
     let mut table = Table::new(&[
@@ -158,8 +175,13 @@ fn main() -> Result<()> {
             ..base.clone()
         };
         let on_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..off_cfg.clone() };
-        let r_off = run_fleet_dispatch(&manifest, &off_cfg, &dcfg)?;
-        let r_on = run_fleet_dispatch(&manifest, &on_cfg, &dcfg)?;
+        // Off = the dispatch preset (PR 2/3 path, bit-identical); on =
+        // the feedback preset with the requested stage swaps applied.
+        let r_off = run_pipeline(manifest, &PipelineConfig::dispatch(&off_cfg, &dcfg))?;
+        let mut on_pipeline = PipelineConfig::feedback(&on_cfg, &dcfg);
+        on_pipeline.stages.telemetry = telemetry;
+        on_pipeline.dispatch.adaptive_batch = adaptive;
+        let r_on = run_pipeline(manifest, &on_pipeline)?;
         let off = Cell::from_report(&r_off);
         let on = Cell::from_report(&r_on);
 
@@ -207,11 +229,7 @@ fn main() -> Result<()> {
         }
     }
 
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
+    bench.print_table(&table);
 
     let mut root = BTreeMap::new();
     root.insert("task".into(), Json::Str(base.task.clone()));
@@ -219,10 +237,10 @@ fn main() -> Result<()> {
     root.insert("shards".into(), Json::Num(base.shards as f64));
     root.insert("hours".into(), Json::Num(base.duration_s / 3600.0));
     root.insert("policy".into(), Json::Str(dcfg.policy.describe()));
+    root.insert("telemetry_mode".into(), Json::Str(telemetry.name().to_string()));
+    root.insert("adaptive_batch".into(), Json::Bool(adaptive.is_some()));
     root.insert("profiles".into(), Json::Arr(records));
-    let json = Json::Obj(root);
-    println!("feedback JSON:\n{json}");
-    write_json_out(&args, &json)?;
+    bench.emit_json("feedback", &Json::Obj(root))?;
 
     if let Some(path) = args.get("check-floor") {
         let Some((off, on)) = peak_pair else {
@@ -263,7 +281,7 @@ fn ratio_json(r: f64) -> Json {
 /// hold: shed and p95 ratios (on/off) under their ceilings, extra
 /// accuracy loss bounded, and strictly-lower raw metrics.
 fn check_floor(path: &str, off: &Cell, on: &Cell) -> Result<()> {
-    let floor = Json::parse(&std::fs::read_to_string(path)?)?;
+    let floor = Bench::read_floor(path)?;
     let max_shed_ratio = floor.get("max_shed_ratio")?.as_f64()?;
     let max_p95_ratio = floor.get("max_p95_ratio")?.as_f64()?;
     let max_extra_acc = floor.get("max_extra_acc_loss")?.as_f64()?;

@@ -14,7 +14,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use adaspring::coordinator::encoding::{binary_space_size, progressive_space_size};
 use adaspring::coordinator::engine::AdaSpring;
@@ -24,9 +24,8 @@ use adaspring::coordinator::search::{Mutator, Runtime3C, Runtime3CParams};
 use adaspring::coordinator::{CompressionConfig, Manifest};
 use adaspring::metrics::{f1, f2, f3, Table};
 use adaspring::platform::Platform;
-use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
-use adaspring::util::write_json_out;
+use adaspring::util::{write_json_out, Bench};
 
 const ALLOWED: &[&str] = &["part", "task", "manifest", "json-out", "csv"];
 const BOOLEAN_FLAGS: &[&str] = &["csv"];
@@ -34,23 +33,14 @@ const USAGE: &str = "usage: bench_fig10 [--part a|b|c|d|all] [--task NAME] [--ma
                      [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let (args, manifest) = (&bench.args, &bench.manifest);
     let part = args.get_or("part", "all").to_string();
     let platform = Platform::raspberry_pi_4b();
-    let default_task = {
-        let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
-        names.sort();
-        match names.iter().position(|n| n == "d3") {
-            Some(i) => names.swap_remove(i),
-            None if names.is_empty() => bail!("manifest contains no tasks"),
-            None => names.swap_remove(0),
-        }
-    };
+    let default_task = bench.default_task("d3")?;
     let task_name = args.get_or("task", &default_task).to_string();
     let task_name = task_name.as_str();
-    let engine = AdaSpring::new(&manifest, task_name, &platform, false)?;
+    let engine = AdaSpring::new(manifest, task_name, &platform, false)?;
     let task = engine.task().clone();
     let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
 
@@ -67,15 +57,15 @@ fn main() -> Result<()> {
             task.latency_budget_ms * 0.4,
             (1.1 * 1024.0 * 1024.0) as u64,
         );
-        parts.insert("part_b".into(), part_b(&manifest, task_name, &platform, &tight)?.to_json());
+        parts.insert("part_b".into(), part_b(manifest, task_name, &platform, &tight)?.to_json());
     }
     if part == "c" || part == "all" {
-        parts.insert("part_c".into(), part_c(&manifest, task_name, &platform, &c)?.to_json());
+        parts.insert("part_c".into(), part_c(manifest, task_name, &platform, &c)?.to_json());
     }
     if part == "d" || part == "all" {
         parts.insert("part_d".into(), part_d(&engine, &c)?.to_json());
     }
-    write_json_out(&args, &Json::Obj(parts))?;
+    write_json_out(args, &Json::Obj(parts))?;
     Ok(())
 }
 

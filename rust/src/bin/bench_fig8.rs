@@ -16,11 +16,9 @@ use anyhow::Result;
 use adaspring::context::CacheContention;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
-use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f2, Series, Table};
 use adaspring::platform::Platform;
-use adaspring::util::cli::Args;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &["manifest", "json-out", "csv"];
 const BOOLEAN_FLAGS: &[&str] = &["csv"];
@@ -28,9 +26,8 @@ const USAGE: &str =
     "usage: bench_fig8 [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let manifest = &bench.manifest;
     let platform = Platform::raspberry_pi_4b();
     let moments = [0.85, 0.75, 0.62, 0.52, 0.38];
     println!("# Fig. 8 — AdaSpring across tasks on {} (log-normalized)\n", platform.name);
@@ -41,7 +38,7 @@ fn main() -> Result<()> {
     let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
     names.sort();
     for name in &names {
-        let mut engine = AdaSpring::new(&manifest, name, &platform, false)?;
+        let mut engine = AdaSpring::new(manifest, name, &platform, false)?;
         let task = engine.task().clone();
         let mut cache = CacheContention::new(platform.l2_cache_bytes, 0.25, 17);
         let mut acc = Series::default();
@@ -76,11 +73,7 @@ fn main() -> Result<()> {
             format!("{:.1}", (task.backbone.accuracy - acc.mean()) * 100.0),
         ]);
     }
-    if args.flag("csv") {
-        println!("{}", out.to_csv());
-    } else {
-        println!("{}", out.to_markdown());
-    }
-    write_json_out(&args, &out.to_json())?;
+    bench.print_table(&out);
+    adaspring::util::write_json_out(&bench.args, &out.to_json())?;
     Ok(())
 }

@@ -13,11 +13,9 @@ use anyhow::Result;
 
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
-use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, Table};
 use adaspring::platform::Platform;
-use adaspring::util::cli::Args;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &["task", "manifest", "json-out", "csv"];
 const BOOLEAN_FLAGS: &[&str] = &["csv"];
@@ -32,10 +30,9 @@ const MOMENTS: [(&str, f64, f64, u32); 4] = [
 ];
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
-    let task_name = args.get_or("task", "d3");
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let manifest = &bench.manifest;
+    let task_name = bench.args.get_or("task", "d3");
     println!("# Fig. 9 / Table 4 — {} across platforms under dynamic context\n", task_name);
 
     let mut out = Table::new(&[
@@ -43,7 +40,7 @@ fn main() -> Result<()> {
         "C/Sp", "C/Sa", "En (mJ)", "search µs",
     ]);
     for platform in Platform::all() {
-        let mut engine = AdaSpring::new(&manifest, task_name, &platform, false)?;
+        let mut engine = AdaSpring::new(manifest, task_name, &platform, false)?;
         let task = engine.task().clone();
         for (label, battery, cache_mb, _infer) in MOMENTS {
             let c = Constraints::from_battery(
@@ -69,11 +66,7 @@ fn main() -> Result<()> {
             ]);
         }
     }
-    if args.flag("csv") {
-        println!("{}", out.to_csv());
-    } else {
-        println!("{}", out.to_markdown());
-    }
-    write_json_out(&args, &out.to_json())?;
+    bench.print_table(&out);
+    adaspring::util::write_json_out(&bench.args, &out.to_json())?;
     Ok(())
 }

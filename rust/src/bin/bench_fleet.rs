@@ -27,7 +27,7 @@ use adaspring::fleet::{run_fleet, FleetConfig, FleetReport};
 use adaspring::metrics::Table;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
@@ -46,15 +46,13 @@ fn config_from(args: &Args) -> Result<FleetConfig> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
-    if args.flag("sweep") {
-        return sweep(&args, &manifest);
+    if bench.args.flag("sweep") {
+        return sweep(&bench);
     }
 
-    let cfg = config_from(&args)?;
+    let cfg = config_from(&bench.args)?;
     println!(
         "# Fleet serving — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
         cfg.devices,
@@ -63,17 +61,10 @@ fn main() -> Result<()> {
         cfg.task,
         cfg.seed
     );
-    let report = run_fleet(&manifest, &cfg)?;
+    let report = run_fleet(&bench.manifest, &cfg)?;
     print_summary(&report);
-    let table = report.archetype_table();
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
-    let json = report.to_json();
-    println!("fleet JSON:\n{json}");
-    write_json_out(&args, &json)?;
+    bench.print_table(&report.archetype_table());
+    bench.emit_json("fleet", &report.to_json())?;
     Ok(())
 }
 
@@ -101,7 +92,8 @@ fn print_summary(r: &FleetReport) {
 
 /// Fleet-size × shard-count sweep: the scaling table behind the fleet
 /// subsystem's headline (cross-device cache reuse grows with fleet size).
-fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
+fn sweep(bench: &Bench) -> Result<()> {
+    let (args, manifest): (&Args, &Manifest) = (&bench.args, &bench.manifest);
     let base = config_from(args)?;
     let device_points = [10usize, 100, 1000];
     let shard_points = [1usize, 2, 4, 8];
@@ -134,13 +126,7 @@ fn sweep(args: &Args, manifest: &Manifest) -> Result<()> {
             records.push(r.to_json());
         }
     }
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
-    let json = Json::Arr(records);
-    println!("sweep JSON:\n{json}");
-    write_json_out(args, &json)?;
+    bench.print_table(&table);
+    bench.emit_json("sweep", &Json::Arr(records))?;
     Ok(())
 }

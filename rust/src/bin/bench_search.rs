@@ -28,7 +28,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use adaspring::coordinator::accuracy::AccuracyModel;
 use adaspring::coordinator::costmodel::CostModel;
@@ -40,7 +40,7 @@ use adaspring::metrics::{Series, Table};
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "iters", "task", "manifest", "devices", "shards", "hours", "seed", "full-eval",
@@ -87,11 +87,10 @@ impl ModeStats {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let (args, manifest): (&Args, &Manifest) = (&bench.args, &bench.manifest);
     let task_name = {
-        let default = default_task(&manifest, "d3")?;
+        let default = bench.default_task("d3")?;
         args.get_or("task", &default).to_string()
     };
     let iters = args.get_usize("iters", 3);
@@ -150,11 +149,7 @@ fn main() -> Result<()> {
     if let Some(m) = &full {
         row("full-eval (oracle)", m);
     }
-    if args.flag("csv") {
-        println!("{}", table.to_csv());
-    } else {
-        println!("{}", table.to_markdown());
-    }
+    bench.print_table(&table);
 
     let mut search_json = BTreeMap::new();
     search_json.insert("contexts".into(), Json::Num(contexts_total as f64));
@@ -172,34 +167,18 @@ fn main() -> Result<()> {
     }
 
     // Part 2: fleet plan-cache sweep (Shared vs the Banded control).
-    let plan_json = plan_sweep(&args, &manifest, &task_name)?;
+    let plan_json = plan_sweep(args, manifest, &task_name)?;
 
     let mut root = BTreeMap::new();
     root.insert("task".into(), Json::Str(task_name.clone()));
     root.insert("search".into(), Json::Obj(search_json));
     root.insert("plan_cache".into(), plan_json);
-    let json = Json::Obj(root);
-    println!("search JSON:\n{json}");
-    write_json_out(&args, &json)?;
+    bench.emit_json("search", &Json::Obj(root))?;
 
     if let Some(path) = args.get("check-floor") {
         check_floor(path, incremental.as_ref())?;
     }
     Ok(())
-}
-
-/// Preferred task if present, else the first task by name; a manifest
-/// with zero tasks is a hard error (not a panic).
-fn default_task(manifest: &Manifest, preferred: &str) -> Result<String> {
-    let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
-    names.sort();
-    if names.iter().any(|n| n == preferred) {
-        return Ok(preferred.to_string());
-    }
-    match names.into_iter().next() {
-        Some(n) => Ok(n),
-        None => bail!("manifest contains no tasks"),
-    }
 }
 
 /// Time one search mode over the whole context grid.
@@ -309,9 +288,7 @@ fn check_floor(path: &str, incremental: Option<&ModeStats>) -> Result<()> {
         eprintln!("--check-floor requires the incremental mode (drop --full-eval)");
         std::process::exit(2);
     };
-    let floor = Json::parse(&std::fs::read_to_string(path)?)?
-        .get("searches_per_sec_floor")?
-        .as_f64()?;
+    let floor = Bench::read_floor(path)?.get("searches_per_sec_floor")?.as_f64()?;
     let observed = m.searches_per_sec();
     let fail_under = floor / 2.0;
     if observed < fail_under {

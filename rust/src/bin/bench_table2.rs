@@ -14,16 +14,14 @@
 //! the synthetic palette when no artifact manifest exists (falling back
 //! to the first available task when d1 is absent).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use adaspring::coordinator::baselines::table2_rows;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
-use adaspring::coordinator::Manifest;
 use adaspring::metrics::{f1, f2, pct, Table};
 use adaspring::platform::Platform;
-use adaspring::util::cli::Args;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &["task", "manifest", "json-out", "csv"];
 const BOOLEAN_FLAGS: &[&str] = &["csv"];
@@ -31,21 +29,11 @@ const USAGE: &str =
     "usage: bench_table2 [--task NAME] [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
-    let default_task = {
-        let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
-        names.sort();
-        match names.iter().position(|n| n == "d1") {
-            Some(i) => names.swap_remove(i),
-            None if names.is_empty() => bail!("manifest contains no tasks"),
-            None => names.swap_remove(0),
-        }
-    };
-    let task_name = args.get_or("task", &default_task);
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let default_task = bench.default_task("d1")?;
+    let task_name = bench.args.get_or("task", &default_task);
     let platform = Platform::raspberry_pi_4b();
-    let engine = AdaSpring::new(&manifest, task_name, &platform, false)?;
+    let engine = AdaSpring::new(&bench.manifest, task_name, &platform, false)?;
     let task = engine.task();
 
     // "We test the average DNN accuracy at three dynamic moments" — three
@@ -95,10 +83,8 @@ fn main() -> Result<()> {
             r0.scaling.up_label().to_string(),
         ]);
     }
-    if args.flag("csv") {
-        println!("{}", out.to_csv());
-    } else {
-        println!("{}", out.to_markdown());
+    bench.print_table(&out);
+    if !bench.args.flag("csv") {
         println!("* A/T/E columns model-derived over the shared variant space (DESIGN.md §5-5).");
     }
 
@@ -121,6 +107,6 @@ fn main() -> Result<()> {
         worst_hand_t / ours.latency_ms,
         worst_hand_e / ours.energy_mj
     );
-    write_json_out(&args, &out.to_json())?;
+    adaspring::util::write_json_out(&bench.args, &out.to_json())?;
     Ok(())
 }

@@ -12,20 +12,18 @@ use anyhow::Result;
 
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
-use adaspring::coordinator::{CompressionConfig, Manifest, Op};
+use adaspring::coordinator::{CompressionConfig, Op};
 use adaspring::metrics::{f1, Table};
 use adaspring::platform::Platform;
-use adaspring::util::cli::Args;
-use adaspring::util::write_json_out;
+use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &["manifest", "json-out", "csv"];
 const BOOLEAN_FLAGS: &[&str] = &["csv"];
 const USAGE: &str = "usage: bench_table3 [--manifest PATH] [--json-out PATH] [--csv]";
 
 fn main() -> Result<()> {
-    let args = Args::from_env();
-    args.enforce_usage(ALLOWED, BOOLEAN_FLAGS, USAGE);
-    let manifest = Manifest::load_cli(args.get("manifest"), "artifacts/manifest.json")?;
+    let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
+    let manifest = &bench.manifest;
     let platform = Platform::raspberry_pi_4b();
     println!("# Table 3 — AdaSpring vs MobileNet-style depthwise compression, per task\n");
 
@@ -35,7 +33,7 @@ fn main() -> Result<()> {
     let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
     names.sort();
     for name in &names {
-        let mut engine = AdaSpring::new(&manifest, name, &platform, false)?;
+        let mut engine = AdaSpring::new(manifest, name, &platform, false)?;
         let task = engine.task().clone();
         let c = Constraints::from_battery(
             0.7,
@@ -69,14 +67,12 @@ fn main() -> Result<()> {
             format!("{}x", f1(mbe.costs.acts as f64 / ours.costs.acts as f64)),
         ]);
     }
-    if args.flag("csv") {
-        println!("{}", out.to_csv());
-    } else {
-        println!("{}", out.to_markdown());
+    bench.print_table(&out);
+    if !bench.args.flag("csv") {
         println!(
             "ratios >1x mean AdaSpring better (except A loss: negative = AdaSpring more accurate)."
         );
     }
-    write_json_out(&args, &out.to_json())?;
+    adaspring::util::write_json_out(&bench.args, &out.to_json())?;
     Ok(())
 }

@@ -133,6 +133,25 @@ impl FeedbackConfig {
         }
     }
 
+    /// The telemetry tick in simulated seconds (floored away from 0 so
+    /// a degenerate window cannot spin the pipeline's window loop).
+    /// The windowed pipeline reads timing/EWMA parameters from this
+    /// config even when the feedback funnel itself is off (the
+    /// observe-only telemetry stage, DESIGN.md §11-3).
+    pub fn tick_s(&self) -> f64 {
+        self.telemetry_window_s.max(1e-3)
+    }
+
+    /// Number of telemetry windows covering `duration_s` (0 for empty
+    /// durations — the pipeline's safety-net drain handles the rest).
+    pub fn window_count(&self, duration_s: f64) -> u64 {
+        if duration_s <= 0.0 {
+            0
+        } else {
+            (duration_s / self.tick_s()).ceil() as u64
+        }
+    }
+
     /// Derive the Eq.-1 constraint set from a context frame — the single
     /// constraint-derivation funnel of the stack.  Disabled (or
     /// load-free) frames reproduce the paper's §6.3 rule bit-exactly;

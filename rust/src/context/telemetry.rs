@@ -184,6 +184,83 @@ impl TelemetryAggregator {
     }
 }
 
+/// The telemetry *stage*'s aggregation state (DESIGN.md §11-3): the
+/// shard-level [`TelemetryAggregator`] every windowed run maintains —
+/// bit-identical to the pre-pipeline per-shard frames, and the µ̂ source
+/// for G/D/1 admission — plus, under per-archetype keying, one
+/// aggregator per device archetype so each session sees the load *its
+/// device class* generates instead of the shard blend.
+#[derive(Debug, Clone)]
+pub struct TelemetryBank {
+    shard: TelemetryAggregator,
+    keyed: Option<Vec<TelemetryAggregator>>,
+}
+
+impl TelemetryBank {
+    /// Shard-keyed bank (the default): exactly one aggregator.
+    pub fn shard_keyed(
+        alpha: f64,
+        arrival_prior_per_s: f64,
+        service_prior_per_s: f64,
+    ) -> TelemetryBank {
+        TelemetryBank {
+            shard: TelemetryAggregator::new(alpha, arrival_prior_per_s, service_prior_per_s),
+            keyed: None,
+        }
+    }
+
+    /// Archetype-keyed bank: the shard aggregator (seeded from the
+    /// summed priors, exactly as the shard-keyed bank) plus one
+    /// aggregator per key seeded from that key's own priors.
+    pub fn archetype_keyed(
+        alpha: f64,
+        arrival_prior_per_s: f64,
+        service_prior_per_s: f64,
+        key_priors: &[(f64, f64)],
+    ) -> TelemetryBank {
+        TelemetryBank {
+            shard: TelemetryAggregator::new(alpha, arrival_prior_per_s, service_prior_per_s),
+            keyed: Some(
+                key_priors
+                    .iter()
+                    .map(|&(arrival, service)| TelemetryAggregator::new(alpha, arrival, service))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// The current shard-level frame (admission's µ̂ source).
+    pub fn shard_frame(&self) -> LoadTelemetry {
+        self.shard.current()
+    }
+
+    /// The current frame for key `k`; the shard frame when the bank is
+    /// shard-keyed (so callers can ask unconditionally).
+    pub fn frame_for(&self, k: usize) -> LoadTelemetry {
+        match &self.keyed {
+            Some(aggs) => aggs[k].current(),
+            None => self.shard.current(),
+        }
+    }
+
+    /// Fold one window in: the shard sample always, plus per-key samples
+    /// when keyed (`keyed_samples` is ignored by a shard-keyed bank).
+    pub fn observe(&mut self, shard_sample: &WindowSample, keyed_samples: &[WindowSample]) {
+        self.shard.observe(shard_sample);
+        if let Some(aggs) = self.keyed.as_mut() {
+            debug_assert_eq!(aggs.len(), keyed_samples.len());
+            for (agg, sample) in aggs.iter_mut().zip(keyed_samples) {
+                agg.observe(sample);
+            }
+        }
+    }
+
+    /// Consume into (shard frame, per-key frames when keyed).
+    pub fn into_frames(self) -> (LoadTelemetry, Option<Vec<LoadTelemetry>>) {
+        (self.shard.current(), self.keyed.map(|aggs| aggs.iter().map(|a| a.current()).collect()))
+    }
+}
+
 /// Arrival-weighted merge of per-shard final frames into the fleet view
 /// (rates add across shards; fractions weight by their denominators).
 pub fn merge_frames(frames: &[LoadTelemetry]) -> LoadTelemetry {
@@ -282,6 +359,42 @@ mod tests {
         assert_eq!(f.service_rate_per_s, 80.0, "no observation must not decay µ̂");
         assert!((f.arrival_rate_per_s - 2.0).abs() < 1e-9, "idle window halves the EWMA");
         assert_eq!(f.batch_occupancy, 1.0);
+    }
+
+    #[test]
+    fn bank_shard_keying_matches_the_plain_aggregator() {
+        let mut agg = TelemetryAggregator::new(0.5, 2.0, 50.0);
+        let mut bank = TelemetryBank::shard_keyed(0.5, 2.0, 50.0);
+        for w in 0..3 {
+            let s = sample(w, 600, 60, 540, 10.0);
+            agg.observe(&s);
+            bank.observe(&s, &[]);
+        }
+        let (a, b) = (agg.current(), bank.shard_frame());
+        assert_eq!(a.arrival_rate_per_s.to_bits(), b.arrival_rate_per_s.to_bits());
+        assert_eq!(a.service_rate_per_s.to_bits(), b.service_rate_per_s.to_bits());
+        assert_eq!(a.shed_rate.to_bits(), b.shed_rate.to_bits());
+        // Un-keyed banks answer frame_for with the shard frame.
+        assert_eq!(bank.frame_for(3).arrival_rate_per_s.to_bits(), b.arrival_rate_per_s.to_bits());
+        assert!(bank.into_frames().1.is_none());
+    }
+
+    #[test]
+    fn bank_archetype_keying_separates_frames() {
+        let mut bank =
+            TelemetryBank::archetype_keyed(0.5, 10.0, 100.0, &[(2.0, 50.0), (8.0, 50.0)]);
+        let shard = sample(0, 600, 0, 600, 10.0);
+        let quiet = sample(0, 60, 0, 60, 10.0);
+        let busy = sample(0, 540, 0, 540, 10.0);
+        bank.observe(&shard, &[quiet, busy]);
+        assert!(
+            bank.frame_for(1).arrival_rate_per_s > bank.frame_for(0).arrival_rate_per_s,
+            "the busy archetype's frame must carry its own arrival rate"
+        );
+        let (shard_frame, keyed) = bank.into_frames();
+        let keyed = keyed.expect("archetype keying yields per-key frames");
+        assert_eq!(keyed.len(), 2);
+        assert!(shard_frame.arrival_rate_per_s > keyed[0].arrival_rate_per_s);
     }
 
     #[test]

@@ -1,5 +1,11 @@
 //! The AdaSpring engine: context snapshot → trigger → Runtime3C search →
 //! artifact snap → executable swap (paper Fig. 4, the full online loop).
+//!
+//! In the fleet's staged pipeline (DESIGN.md §11) this engine is the
+//! terminal *evolution/plan-cache* stage: [`AdaSpring::evolve`] serves
+//! the un-windowed presets and [`AdaSpring::evolve_frame`] the windowed
+//! ones, where the [`ContextFrame`] carries whichever telemetry keying
+//! (per-shard or per-archetype) the pipeline's telemetry stage produced.
 
 use std::path::PathBuf;
 use std::sync::Arc;

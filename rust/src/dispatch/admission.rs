@@ -15,6 +15,12 @@
 //! makes session-granularity work stealing (§8-3) trajectory-preserving:
 //! no admission decision can depend on which worker steps which session
 //! when.
+//!
+//! In the staged pipeline (DESIGN.md §11) this pre-pass is the
+//! admission stage's `Bounded` flavor; the windowed `VirtualQueue`
+//! flavor ([`super::service::StreamingAdmission`]) shares the
+//! [`RateLimiter`] and stats types defined here, so the two admission
+//! implementations cannot drift on the §8-1 semantics.
 
 use std::collections::{HashMap, VecDeque};
 

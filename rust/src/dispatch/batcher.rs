@@ -1,4 +1,6 @@
-//! Simulated-time windowed batcher (DESIGN.md §8-2).
+//! Simulated-time windowed batcher (DESIGN.md §8-2), shared by the
+//! pipeline's `Windowed` (post-pass) and `Drain` (per-telemetry-window)
+//! batching stages (§11-2).
 //!
 //! Admitted requests flush at aligned batch-window boundaries
 //! (`window = floor(t / batch_window_s)`, per shard).  At each flush,
@@ -17,6 +19,13 @@
 //! flush group: batch size 1, zero wait, and per-inference latency equal
 //! to the direct serving path (the parity case `tests/dispatch.rs`
 //! asserts).
+//!
+//! [`AdaptiveBatch`] is the admission-aware sizing ramp (§11-4): on the
+//! windowed pipeline, the effective per-batch cap grows linearly with
+//! the telemetry plane's G/D/1 utilization, so an overloaded shard
+//! trades per-request latency for amortized throughput exactly when the
+//! queue needs it.  Off (`None`) by default — every legacy path prices
+//! batches at the static cap, bit-identically.
 
 use std::collections::BTreeMap;
 
@@ -37,6 +46,40 @@ pub struct ServedRequest {
     pub wait_us: f64,
     /// Solo modeled inference latency at service time, microseconds.
     pub single_us: f64,
+}
+
+/// Admission-aware batch sizing (DESIGN.md §11-4): a linear ramp from
+/// the configured `max_batch` at `util_floor` utilization up to
+/// `max_scale ×` the cap at utilization 1.0.  Only the windowed
+/// pipeline applies it (it needs a per-window utilization estimate);
+/// un-windowed paths always price at the static cap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveBatch {
+    /// Utilization at or below which the base cap applies unchanged.
+    pub util_floor: f64,
+    /// Cap multiplier reached at utilization ≥ 1.0.
+    pub max_scale: f64,
+}
+
+impl Default for AdaptiveBatch {
+    fn default() -> AdaptiveBatch {
+        AdaptiveBatch { util_floor: 0.5, max_scale: 4.0 }
+    }
+}
+
+impl AdaptiveBatch {
+    /// Effective per-batch cap at `utilization` over base cap `base`
+    /// (`base == 0` = unbounded stays unbounded; the ramp never shrinks
+    /// the cap below `base`).
+    pub fn effective_cap(&self, base: usize, utilization: f64) -> usize {
+        if base == 0 {
+            return 0;
+        }
+        let span = (1.0 - self.util_floor).max(1e-9);
+        let t = ((utilization - self.util_floor) / span).clamp(0.0, 1.0);
+        let scale = 1.0 + t * (self.max_scale - 1.0).max(0.0);
+        ((base as f64 * scale).floor() as usize).max(base)
+    }
 }
 
 /// Batch-execution statistics for one shard (merged fleet-wide).
@@ -77,6 +120,20 @@ impl BatchStats {
     }
 }
 
+/// One batch-assembly pass's priced output.
+#[derive(Debug)]
+pub struct WindowPricing {
+    /// Merged execution stats for the drained requests.
+    pub stats: BatchStats,
+    /// Service-only microsecond sum (the feedback loop's µ̂ observation;
+    /// `stats.total_us` additionally includes queue waits).
+    pub service_us_sum: f64,
+    /// Per-session (served count, service µs sum), aligned to the input
+    /// session slice — the per-archetype telemetry stage's attribution
+    /// input (DESIGN.md §11-3).
+    pub per_session: Vec<(u64, f64)>,
+}
+
 /// Assemble and "execute" one shard's batches from its finished
 /// sessions' served requests, pushing each request's final (batched)
 /// service latency into its session's report.
@@ -87,21 +144,20 @@ impl BatchStats {
 pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>]) -> BatchStats {
     // The post-pass runs once, on finished sessions whose served lists
     // are never read again — draining is free and shares the whole
-    // implementation with the feedback path's window assembly.
-    assemble_batches_window(cfg, sessions, u64::MAX).0
+    // implementation with the drain-mode window assembly.
+    assemble_batches_window(cfg, sessions, u64::MAX).stats
 }
 
 /// Shared core of both assembly paths: group `requests` (one vec per
 /// session, aligned to device-id-sorted `sessions`) by (window, variant),
-/// chunk to the batch cap, price each member on its platform's sublinear
-/// curve, and record the final latencies into the sessions.  Returns the
-/// stats plus the service-only microsecond sum (the feedback loop's µ̂
-/// observation; `total_us` additionally includes queue waits).
+/// chunk to `cap`, price each member on its platform's sublinear curve,
+/// and record the final latencies into the sessions.
 fn group_and_price(
     cfg: &DispatchConfig,
+    cap: usize,
     sessions: &mut [Box<DeviceSession>],
     requests: &[Vec<ServedRequest>],
-) -> (BatchStats, f64) {
+) -> WindowPricing {
     let mut batches: Vec<Vec<(usize, usize)>> = Vec::new();
     if cfg.batch_window_s > 0.0 {
         // (window, variant) → requests, in (device, arrival) order.
@@ -112,7 +168,7 @@ fn group_and_price(
             }
         }
         for members in groups.into_values() {
-            for chunk in members.chunks(cfg.batch_cap()) {
+            for chunk in members.chunks(cap.max(1)) {
                 batches.push(chunk.to_vec());
             }
         }
@@ -129,6 +185,7 @@ fn group_and_price(
 
     let mut stats = BatchStats::default();
     let mut service_us_sum = 0.0f64;
+    let mut per_session = vec![(0u64, 0.0f64); sessions.len()];
     for chunk in &batches {
         let k = chunk.len();
         stats.batches += 1;
@@ -140,37 +197,52 @@ fn group_and_price(
             let factor = sessions[si].platform().batch_per_inference_factor(k);
             let service_us = r.single_us * factor;
             service_us_sum += service_us;
+            per_session[si].0 += 1;
+            per_session[si].1 += service_us;
             stats.total_us.push(r.wait_us + service_us);
             sessions[si].record_dispatched_latency(service_us);
         }
     }
-    (stats, service_us_sum)
+    WindowPricing { stats, service_us_sum, per_session }
 }
 
-/// Feedback-path batch assembly (DESIGN.md §10-3): *drain* and price the
-/// requests served in the telemetry window just stepped, so the observed
-/// service latencies can feed the window's [`crate::context::WindowSample`]
-/// before the next window's admission runs.  Returns the window's stats
-/// plus the service-only microsecond sum (the µ̂ observation; the stats'
-/// `total_us` series additionally includes queue waits).  Grouping and
-/// pricing share [`group_and_price`] with [`assemble_batches`], so the
-/// two paths cannot diverge; sessions must be device-id sorted for the
-/// same determinism argument.  Only batch windows below `window_limit`
-/// are drained — a batch straddling the telemetry boundary waits for
-/// the next flush instead of being split and mispriced (`u64::MAX`
-/// drains everything, the final-flush / legacy case).
+/// Drain-mode batch assembly (DESIGN.md §10-3 / §11-2): *drain* and
+/// price the requests served in the telemetry window just stepped, so
+/// the observed service latencies can feed the window's
+/// [`crate::context::WindowSample`] before the next window's admission
+/// runs.  Grouping and pricing share [`group_and_price`] with
+/// [`assemble_batches`], so the two stages cannot diverge; sessions must
+/// be device-id sorted for the same determinism argument.  Only batch
+/// windows below `window_limit` are drained — a batch straddling the
+/// telemetry boundary waits for the next flush instead of being split
+/// and mispriced (`u64::MAX` drains everything, the final-flush /
+/// legacy case).
 pub fn assemble_batches_window(
     cfg: &DispatchConfig,
     sessions: &mut [Box<DeviceSession>],
     window_limit: u64,
-) -> (BatchStats, f64) {
+) -> WindowPricing {
+    assemble_batches_window_capped(cfg, sessions, window_limit, cfg.batch_cap())
+}
+
+/// [`assemble_batches_window`] with an explicit per-batch cap — the
+/// admission-aware sizing stage passes the [`AdaptiveBatch`] ramp's
+/// per-window effective cap here; every other caller passes
+/// `cfg.batch_cap()` (through the wrapper above), so the static paths
+/// are untouched.
+pub fn assemble_batches_window_capped(
+    cfg: &DispatchConfig,
+    sessions: &mut [Box<DeviceSession>],
+    window_limit: u64,
+    cap: usize,
+) -> WindowPricing {
     debug_assert!(
         sessions.windows(2).all(|w| w[0].device_id < w[1].device_id),
         "assemble_batches_window needs device-id-sorted sessions"
     );
     let drained: Vec<Vec<ServedRequest>> =
         sessions.iter_mut().map(|s| s.take_served_before(window_limit)).collect();
-    group_and_price(cfg, sessions, &drained)
+    group_and_price(cfg, cap, sessions, &drained)
 }
 
 #[cfg(test)]
@@ -198,5 +270,20 @@ mod tests {
         assert_eq!(a.histogram.get(&2), Some(&2));
         assert!((a.size_mean() - 8.0 / 3.0).abs() < 1e-12);
         assert_eq!(BatchStats::default().size_mean(), 0.0);
+    }
+
+    #[test]
+    fn adaptive_cap_ramps_with_utilization() {
+        let a = AdaptiveBatch::default(); // floor 0.5, scale 4
+        assert_eq!(a.effective_cap(16, 0.0), 16, "calm keeps the base cap");
+        assert_eq!(a.effective_cap(16, 0.5), 16, "the ramp starts at the floor");
+        assert_eq!(a.effective_cap(16, 1.0), 64, "saturation reaches max_scale x");
+        assert_eq!(a.effective_cap(16, 2.0), 64, "past saturation clamps");
+        let mid = a.effective_cap(16, 0.75);
+        assert!(mid > 16 && mid < 64, "halfway up the ramp: {mid}");
+        assert_eq!(a.effective_cap(0, 1.0), 0, "unbounded stays unbounded");
+        // A degenerate floor of 1.0 must not divide by zero.
+        let edge = AdaptiveBatch { util_floor: 1.0, max_scale: 4.0 };
+        assert!(edge.effective_cap(8, 2.0) >= 8);
     }
 }

@@ -32,7 +32,12 @@
 //!   batch-size-histogram metrics folded into the fleet report JSON
 //!   (`"dispatch"` block; schema in README.md).
 //!
-//! [`crate::fleet::run_fleet_dispatch`] wires the layer under the fleet;
+//! The staged pipeline ([`crate::fleet::run_pipeline`], DESIGN.md §11)
+//! wires this layer under the fleet: `admission`/[`service`] back the
+//! admission stage (`Bounded` / `VirtualQueue`), [`batcher`] backs the
+//! batching stage (`Windowed` / `Drain` + the [`AdaptiveBatch`] sizing
+//! ramp), and [`stealing`] backs the `Pool` execution stage.
+//! [`crate::fleet::run_fleet_dispatch`] is the legacy preset over it;
 //! `bench_dispatch` sweeps policy × batch-window × shard-count over the
 //! synthetic manifest.
 
@@ -46,8 +51,11 @@ pub use admission::{
     admit_shard, AdmissionStats, AdmissionVerdict, BackpressurePolicy, RateLimit, RateLimiter,
     ShardAdmission, ShedReason,
 };
-pub use batcher::{assemble_batches, assemble_batches_window, BatchStats, ServedRequest};
-pub use service::ServiceQueue;
+pub use batcher::{
+    assemble_batches, assemble_batches_window, assemble_batches_window_capped, AdaptiveBatch,
+    BatchStats, ServedRequest, WindowPricing,
+};
+pub use service::{ServiceQueue, StreamingAdmission};
 pub use stats::DispatchReport;
 pub use stealing::StealPool;
 
@@ -98,6 +106,11 @@ pub struct DispatchConfig {
     pub batch_window_s: f64,
     /// Maximum requests per executed batch; 0 = unbounded.
     pub max_batch: usize,
+    /// Admission-aware batch sizing (DESIGN.md §11-4): grow the
+    /// effective `max_batch` as G/D/1 utilization rises.  `None`
+    /// (default) keeps the static cap everywhere — bit parity with the
+    /// pre-pipeline paths; only the windowed pipeline consults it.
+    pub adaptive_batch: Option<AdaptiveBatch>,
     /// Steal sessions between shard workers when a worker drains.
     pub stealing: bool,
     /// Device → home-shard placement.
@@ -112,6 +125,7 @@ impl Default for DispatchConfig {
             rate_limit: None,
             batch_window_s: 0.25,
             max_batch: 16,
+            adaptive_batch: None,
             stealing: true,
             placement: Placement::Modulo,
         }
@@ -133,6 +147,22 @@ impl DispatchConfig {
             usize::MAX
         } else {
             self.max_batch
+        }
+    }
+
+    /// Per-batch cap at `utilization`: the static cap unless the
+    /// admission-aware ramp is configured (DESIGN.md §11-4).
+    pub fn batch_cap_at(&self, utilization: f64) -> usize {
+        match self.adaptive_batch {
+            Some(a) => {
+                let cap = a.effective_cap(self.max_batch, utilization);
+                if cap == 0 {
+                    usize::MAX
+                } else {
+                    cap
+                }
+            }
+            None => self.batch_cap(),
         }
     }
 }

@@ -20,8 +20,11 @@
 //! The whole struct is a deterministic fold over the time-sorted arrival
 //! stream — the same replayability contract as `admit_shard` (§8-1).
 
-use super::admission::{window_key, AdmissionVerdict, ShedReason};
-use super::BackpressurePolicy;
+use crate::fleet::scenarios::Archetype;
+use crate::metrics::Series;
+
+use super::admission::{window_key, AdmissionStats, AdmissionVerdict, RateLimiter, ShedReason};
+use super::{BackpressurePolicy, DispatchConfig};
 
 /// Virtual single-server queue for one shard.
 #[derive(Debug, Clone)]
@@ -83,6 +86,83 @@ impl ServiceQueue {
         self.free_t = self.free_t.max(t) + 1.0 / mu_per_s;
         let window = window_key(t, batch_window_s);
         (AdmissionVerdict::Admitted { window, wait_us: wait_s * 1e6 }, depth)
+    }
+}
+
+/// The pipeline's `VirtualQueue` admission stage (DESIGN.md §11-2): the
+/// per-archetype token buckets (§8-1 semantics, shared
+/// [`RateLimiter`] implementation) in front of the G/D/1 virtual queue,
+/// with the admission-stat and wait-series accounting folded in.  One
+/// implementation serves every windowed runtime, so the streaming
+/// admission arithmetic cannot drift from what the stats report.
+#[derive(Debug, Clone)]
+pub struct StreamingAdmission {
+    limiter: Option<RateLimiter>,
+    queue: ServiceQueue,
+    /// Admission counters (merged fleet-wide by the report).
+    pub stats: AdmissionStats,
+    /// Queue waits of admitted requests, microseconds.
+    pub wait_us: Series,
+}
+
+impl StreamingAdmission {
+    pub fn new(cfg: &DispatchConfig) -> StreamingAdmission {
+        StreamingAdmission {
+            limiter: cfg.rate_limit.map(RateLimiter::new),
+            queue: ServiceQueue::new(cfg.queue_capacity),
+            stats: AdmissionStats::default(),
+            wait_us: Series::default(),
+        }
+    }
+
+    /// Admit or shed one arrival at simulated time `t` from `archetype`
+    /// under service-rate estimate `mu`, accounting the decision.  The
+    /// caller routes the returned verdict to the arriving session.
+    pub fn offer(
+        &mut self,
+        cfg: &DispatchConfig,
+        t: f64,
+        archetype: Archetype,
+        mu: f64,
+    ) -> AdmissionVerdict {
+        self.stats.submitted += 1;
+        if let Some(limiter) = self.limiter.as_mut() {
+            if !limiter.admit(archetype, t) {
+                self.stats.shed_rate_limited += 1;
+                // Rate-limited arrivals still observe the queue depth
+                // (same accounting as the pre-pass, admission.rs).
+                let depth = self.queue.backlog_jobs(t, mu) as usize;
+                self.stats.depth_max = self.stats.depth_max.max(depth);
+                self.stats.depth_sum += depth as u64;
+                return AdmissionVerdict::Shed(ShedReason::RateLimited);
+            }
+        }
+        let (verdict, depth) = self.queue.offer(t, mu, &cfg.policy, cfg.batch_window_s);
+        self.stats.depth_max = self.stats.depth_max.max(depth);
+        self.stats.depth_sum += depth as u64;
+        match verdict {
+            AdmissionVerdict::Admitted { wait_us, .. } => {
+                self.stats.admitted += 1;
+                self.wait_us.push(wait_us);
+            }
+            AdmissionVerdict::Shed(reason) => match reason {
+                ShedReason::RateLimited => self.stats.shed_rate_limited += 1,
+                ShedReason::QueueFull => self.stats.shed_queue_full += 1,
+                ShedReason::Displaced => self.stats.shed_displaced += 1,
+                ShedReason::Deadline => self.stats.shed_deadline += 1,
+            },
+        }
+        verdict
+    }
+
+    /// Jobs in the virtual backlog as seen at `t` under rate `mu`.
+    pub fn backlog_jobs(&self, t: f64, mu: f64) -> f64 {
+        self.queue.backlog_jobs(t, mu)
+    }
+
+    /// Consume into the worker outcome's (stats, waits) pair.
+    pub fn into_parts(self) -> (AdmissionStats, Series) {
+        (self.stats, self.wait_us)
     }
 }
 
@@ -152,6 +232,24 @@ mod tests {
             assert!(matches!(v, AdmissionVerdict::Admitted { wait_us, .. } if wait_us == 0.0));
             assert_eq!(d, 0);
         }
+    }
+
+    #[test]
+    fn streaming_admission_accounts_every_arrival() {
+        let cfg = DispatchConfig {
+            queue_capacity: 2,
+            policy: BackpressurePolicy::ShedNewest,
+            batch_window_s: 0.25,
+            ..DispatchConfig::default()
+        };
+        let mut adm = StreamingAdmission::new(&cfg);
+        for i in 0..5 {
+            adm.offer(&cfg, i as f64 * 0.001, Archetype::CommuterPhone, 10.0);
+        }
+        assert_eq!(adm.stats.submitted, 5);
+        assert_eq!(adm.stats.admitted + adm.stats.shed_total(), 5);
+        assert_eq!(adm.wait_us.len() as u64, adm.stats.admitted, "one wait per admit");
+        assert!(adm.stats.shed_queue_full > 0, "capacity 2 must shed a same-instant burst");
     }
 
     #[test]

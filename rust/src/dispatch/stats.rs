@@ -8,7 +8,7 @@ use crate::metrics::Series;
 use crate::util::json::Json;
 
 use super::admission::AdmissionStats;
-use super::batcher::BatchStats;
+use super::batcher::{AdaptiveBatch, BatchStats};
 use super::DispatchConfig;
 
 /// Fleet-wide dispatch telemetry for one run, attached to
@@ -23,6 +23,9 @@ pub struct DispatchReport {
     pub batch_window_s: f64,
     pub queue_capacity: usize,
     pub stealing_enabled: bool,
+    /// Admission-aware batch-sizing ramp, when configured (absent from
+    /// the JSON otherwise — static-cap runs keep their exact schema).
+    pub adaptive_batch: Option<AdaptiveBatch>,
     /// Merged admission counters across shards.
     pub admission: AdmissionStats,
     /// Queue waits of admitted requests, microseconds.
@@ -55,6 +58,7 @@ impl DispatchReport {
             batch_window_s: cfg.batch_window_s,
             queue_capacity: cfg.queue_capacity,
             stealing_enabled: cfg.stealing,
+            adaptive_batch: cfg.adaptive_batch,
             admission,
             wait_us,
             batches,
@@ -124,6 +128,12 @@ impl DispatchReport {
         root.insert("window_s".into(), num(self.batch_window_s));
         root.insert("capacity".into(), num(self.queue_capacity as f64));
         root.insert("stealing".into(), Json::Bool(self.stealing_enabled));
+        if let Some(a) = &self.adaptive_batch {
+            let mut m = BTreeMap::new();
+            m.insert("util_floor".into(), num(a.util_floor));
+            m.insert("max_scale".into(), num(a.max_scale));
+            root.insert("adaptive_batch".into(), Json::Obj(m));
+        }
         root.insert("queue".into(), Json::Obj(queue));
         root.insert("wait_ms".into(), series_summary_ms(&self.wait_us));
         root.insert("total_ms".into(), series_summary_ms(&self.batches.total_us));

@@ -1,5 +1,6 @@
 //! Fleet serving: sharded multi-device simulation over a shared
-//! concurrent variant cache (DESIGN.md §7).
+//! concurrent variant cache (DESIGN.md §7), driven by one staged
+//! serving pipeline (§11).
 //!
 //! The paper evaluates one device evolving one DNN; this subsystem serves
 //! an entire heterogeneous fleet under one substrate:
@@ -12,19 +13,19 @@
 //! * [`session`] — the per-device serving state machine, semantically
 //!   identical to [`crate::serving::ServingLoop`] but steppable so shard
 //!   workers can interleave many devices in simulated-time order.
-//! * [`pool`] — the sharded runtime: device → shard by id, one worker
-//!   thread per shard draining a simulated-time-ordered queue; the only
-//!   cross-shard state is the shared variant cache
-//!   ([`crate::runtime::ShardedCache`]), where the first session to
-//!   deploy a variant pays its compile and every later one reuses it.
+//! * [`pipeline`] — the unified runtime (DESIGN.md §11): one windowed
+//!   worker loop whose stages — arrival merge, admission, batching,
+//!   execution, telemetry, feedback, evolution — are picked by a
+//!   [`StagePlan`] of the stage enums below.  The three historical
+//!   runtimes (direct fleet, dispatch, feedback loop) are presets over
+//!   it ([`PipelineConfig::direct`] / [`PipelineConfig::dispatch`] /
+//!   [`PipelineConfig::feedback`]), bit-identical to their pre-pipeline
+//!   implementations.
+//! * [`pool`] — fleet-level configuration ([`FleetConfig`]), the static
+//!   device → shard map, and the three thin legacy entry points
+//!   ([`run_fleet`], [`run_fleet_dispatch`], [`run_fleet_feedback`]).
 //! * [`report`] — fleet-wide rollups: p50/p95/p99 inference latency,
-//!   evolution counts, energy, cache hit rate; JSON for `bench_fleet`.
-//!
-//! [`run_fleet_dispatch`] additionally routes every inference through
-//! the dispatch layer ([`crate::dispatch`], DESIGN.md §8): bounded
-//! admission queues with backpressure policies, windowed cross-device
-//! batching on the platform batch-latency curve, and work stealing
-//! between shard workers — `bench_dispatch` sweeps it.
+//!   evolution counts, energy, cache hit rate; JSON for the benches.
 //!
 //! `cargo run --release --bin bench_fleet -- --devices 100 --shards 4`
 //! drives the whole stack without artifacts (synthetic manifest +
@@ -33,6 +34,7 @@
 //! [`crate::coordinator::engine::AdaSpring::with_shared_cache`] for the
 //! same reuse on the real PJRT path.
 
+pub mod pipeline;
 pub mod pool;
 pub mod report;
 pub mod scenarios;
@@ -40,7 +42,97 @@ pub mod session;
 
 pub use crate::context::feedback::FeedbackConfig;
 pub use crate::coordinator::plancache::{PlanCache, PlanMode};
-pub use pool::{run_fleet, run_fleet_dispatch, shard_of, FleetConfig};
-pub use report::{ArchetypeSummary, FeedbackBlock, FleetReport, LatencySummary};
+pub use pipeline::{run_pipeline, PipelineConfig, StagePlan};
+pub use pool::{run_fleet, run_fleet_dispatch, run_fleet_feedback, shard_of, FleetConfig};
+pub use report::{ArchetypeFrame, ArchetypeSummary, FeedbackBlock, FleetReport, LatencySummary};
 pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};
 pub use session::{DeviceReport, DeviceSession, SimCompiledVariant, SimVariantCache};
+
+// ---------------------------------------------------------------------------
+// The stage contract (DESIGN.md §11-1).
+//
+// Every pipeline slot is an enum picking exactly one implementation; a
+// [`StagePlan`] is one choice per slot.  The enums are deliberately
+// small and data-free (configuration lives in `FleetConfig` /
+// `DispatchConfig`) so a mode is a *plan*, not a code path: swapping
+// per-shard telemetry for per-archetype telemetry, or bounded admission
+// for the G/D/1 virtual queue, is a one-line stage change instead of a
+// fourth worker loop.
+// ---------------------------------------------------------------------------
+
+/// How arrivals are admitted (DESIGN.md §11-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// No admission control: every event is served inline by its session
+    /// (the direct fleet path — no dispatch telemetry at all).
+    Off,
+    /// The deterministic whole-trace pre-pass (§8-1): bounded per-window
+    /// occupancy, backpressure policies, per-archetype token buckets.
+    /// Verdicts are fixed before any session steps.
+    Bounded,
+    /// The G/D/1 virtual-queue streaming admission (§10-3): each
+    /// telemetry window's arrivals are admitted at the current µ̂
+    /// estimate, so admission binds at window 0 and tracks the deployed
+    /// variants' real service rate.
+    VirtualQueue,
+}
+
+/// How admitted requests are grouped into batches (DESIGN.md §11-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchingMode {
+    /// No batching stage (the direct path serves inline).
+    Off,
+    /// The whole-run post-pass (§8-2): batches assemble per home shard
+    /// after every session finishes.
+    Windowed,
+    /// Drain mode (§10-3): each telemetry window's closed batch windows
+    /// flush inside the loop so observed service times feed the next
+    /// window's telemetry frame.
+    Drain,
+}
+
+/// Which scheduler steps sessions (DESIGN.md §11-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Statically sharded: each worker drains its own simulated-time
+    /// heap (the windowed barrier is the synchronization domain).
+    Sharded,
+    /// The shared work-stealing pool (§8-3); whether workers actually
+    /// steal is `DispatchConfig::stealing` — the pool is used either
+    /// way, exactly as the pre-pipeline dispatch runtime did.
+    Pool,
+}
+
+/// How the telemetry stage keys its EWMA frames (DESIGN.md §11-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// No telemetry stage: the run is a single un-windowed pass.
+    Off,
+    /// One frame per shard worker (the PR 4 behavior; the default).
+    Shard,
+    /// One frame per device archetype per shard: sessions see the load
+    /// their own device class generates, and the report carries a
+    /// per-archetype frame map.  The shard-level frame is still
+    /// maintained (bit-identically) for G/D/1 admission.
+    Archetype,
+}
+
+impl TelemetryMode {
+    /// Parse a `--telemetry shard|archetype` flag value.
+    pub fn parse(s: &str) -> Option<TelemetryMode> {
+        match s {
+            "shard" => Some(TelemetryMode::Shard),
+            "archetype" => Some(TelemetryMode::Archetype),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TelemetryMode::Off => "off",
+            TelemetryMode::Shard => "shard",
+            TelemetryMode::Archetype => "archetype",
+        }
+    }
+}

@@ -1,0 +1,810 @@
+//! The staged serving pipeline (DESIGN.md §11): one windowed worker
+//! loop behind every fleet runtime.
+//!
+//! PRs 1–4 grew three near-duplicate drivers — the direct sharded fleet,
+//! the dispatch runtime (admission pre-pass + work-stealing pool + batch
+//! post-pass), and the feedback runtime (windowed telemetry loop).  This
+//! module replaces all three with a single loop whose slots are picked
+//! by a [`StagePlan`] over the stage enums in [`crate::fleet`]:
+//!
+//! ```text
+//! arrival merge → admission → execution/stepping → batching
+//!                     ↑            (per window)        ↓
+//!                feedback  ←  telemetry  ←  observed service
+//! ```
+//!
+//! * **arrival merge** — every worker owns the sessions its placement
+//!   maps to its home shard and merges their pre-sampled event traces
+//!   into one time-sorted stream.
+//! * **admission** ([`AdmissionMode`]) — `Off` serves inline; `Bounded`
+//!   runs the deterministic whole-trace pre-pass (§8-1); `VirtualQueue`
+//!   admits window by window through the G/D/1 queue at the telemetry
+//!   plane's µ̂ (§10-3).
+//! * **execution** ([`ExecutionMode`]) — `Sharded` drains a local
+//!   simulated-time heap (to the window edge when windowed, to
+//!   completion otherwise); `Pool` steps from the shared work-stealing
+//!   heap (§8-3).
+//! * **batching** ([`BatchingMode`]) — `Off`, the whole-run `Windowed`
+//!   post-pass (§8-2), or per-telemetry-window `Drain` flushing (§10-3)
+//!   with the admission-aware [`crate::dispatch::AdaptiveBatch`] cap
+//!   ramp (§11-4).
+//! * **telemetry** ([`TelemetryMode`]) — `Off` collapses the loop to a
+//!   single un-windowed pass; `Shard` keys EWMA frames per worker
+//!   (§10-1); `Archetype` additionally keys them per device class
+//!   (§11-3), so each session sees the load its own class generates.
+//! * **feedback** — when on, frames ride into every session's
+//!   constraint derivation, trigger, and plan TTL (§10-2/4/5).
+//!
+//! The three legacy entry points are presets — [`PipelineConfig::direct`],
+//! [`PipelineConfig::dispatch`], [`PipelineConfig::feedback`] — each a
+//! faithful transcription of its pre-pipeline loop.  The guarantee is
+//! test-anchored from three sides: `tests/pipeline.rs` pins wrappers ≡
+//! presets and the two disjoint un-windowed execution paths (inline
+//! `Sharded` vs `Pool` + pre-pass + post-pass) against each other over
+//! randomized configs, while `tests/fleet.rs` / `tests/dispatch.rs` /
+//! `tests/feedback.rs` pin the whole stack to the untouched
+//! single-device `ServingLoop` and the cross-mode parity invariants.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::pool::FleetConfig;
+use super::report::{ArchetypeFrame, FeedbackBlock, FleetReport};
+use super::scenarios::Archetype;
+use super::session::{DeviceReport, DeviceSession, SimVariantCache};
+use super::{AdmissionMode, BatchingMode, ExecutionMode, TelemetryMode, ALL_ARCHETYPES};
+use crate::context::events::Event;
+use crate::context::telemetry::{merge_frames, LoadTelemetry, TelemetryBank, WindowSample};
+use crate::coordinator::manifest::Manifest;
+use crate::coordinator::plancache::PlanCache;
+use crate::dispatch::{
+    admission::window_key, admit_shard, assemble_batches, assemble_batches_window_capped,
+    AdmissionStats, AdmissionVerdict, BatchStats, DispatchConfig, DispatchReport, ShardAdmission,
+    StealPool, StreamingAdmission,
+};
+use crate::metrics::Series;
+use crate::runtime::ShardedCache;
+
+/// One slot choice per pipeline stage (DESIGN.md §11-1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StagePlan {
+    pub admission: AdmissionMode,
+    pub batching: BatchingMode,
+    pub execution: ExecutionMode,
+    pub telemetry: TelemetryMode,
+    /// The feedback funnel (§10-2): must agree with
+    /// `FleetConfig::feedback.enabled` (validated) so a plan can never
+    /// silently contradict the control-law config it runs under.
+    pub feedback: bool,
+}
+
+impl StagePlan {
+    /// The direct fleet path (PR 1 semantics): serve inline, no
+    /// dispatch layer at all.
+    pub fn direct() -> StagePlan {
+        StagePlan {
+            admission: AdmissionMode::Off,
+            batching: BatchingMode::Off,
+            execution: ExecutionMode::Sharded,
+            telemetry: TelemetryMode::Off,
+            feedback: false,
+        }
+    }
+
+    /// The dispatch path (PR 2/3 semantics): whole-trace bounded
+    /// admission, work-stealing pool, whole-run batch post-pass.
+    pub fn dispatch() -> StagePlan {
+        StagePlan {
+            admission: AdmissionMode::Bounded,
+            batching: BatchingMode::Windowed,
+            execution: ExecutionMode::Pool,
+            telemetry: TelemetryMode::Off,
+            feedback: false,
+        }
+    }
+
+    /// The feedback loop (PR 4 semantics): windowed telemetry, G/D/1
+    /// streaming admission, drain-mode batching, frames into evolution.
+    pub fn feedback() -> StagePlan {
+        StagePlan {
+            admission: AdmissionMode::VirtualQueue,
+            batching: BatchingMode::Drain,
+            execution: ExecutionMode::Sharded,
+            telemetry: TelemetryMode::Shard,
+            feedback: true,
+        }
+    }
+
+    /// Is this plan a windowed (telemetry-driven) run?
+    pub fn windowed(&self) -> bool {
+        self.telemetry != TelemetryMode::Off
+    }
+
+    /// Does this plan route requests through the dispatch layer (and
+    /// hence report the `"dispatch"` block)?
+    pub fn uses_dispatch(&self) -> bool {
+        self.admission != AdmissionMode::Off
+    }
+}
+
+/// Everything one pipeline run needs: the fleet shape, the dispatch
+/// knobs, and the stage plan.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub fleet: FleetConfig,
+    pub dispatch: DispatchConfig,
+    pub stages: StagePlan,
+}
+
+impl PipelineConfig {
+    /// Preset: the direct fleet path — [`super::run_fleet`] semantics.
+    pub fn direct(fleet: &FleetConfig) -> PipelineConfig {
+        PipelineConfig {
+            fleet: fleet.clone(),
+            dispatch: DispatchConfig::passthrough(),
+            stages: StagePlan::direct(),
+        }
+    }
+
+    /// Preset: the dispatch path — [`super::run_fleet_dispatch`]
+    /// semantics (with feedback off).
+    pub fn dispatch(fleet: &FleetConfig, dispatch: &DispatchConfig) -> PipelineConfig {
+        PipelineConfig {
+            fleet: fleet.clone(),
+            dispatch: dispatch.clone(),
+            stages: StagePlan::dispatch(),
+        }
+    }
+
+    /// Preset: the feedback loop — [`super::run_fleet_feedback`]
+    /// semantics.  Swap `stages.telemetry` to
+    /// [`TelemetryMode::Archetype`] for per-archetype frames (§11-3);
+    /// the default `Shard` keying is bit-identical to PR 4.
+    pub fn feedback(fleet: &FleetConfig, dispatch: &DispatchConfig) -> PipelineConfig {
+        PipelineConfig {
+            fleet: fleet.clone(),
+            dispatch: dispatch.clone(),
+            stages: StagePlan::feedback(),
+        }
+    }
+
+    /// Workers the run spawns: one per home shard, capped at the fleet
+    /// size under the dispatch layer's placement (degenerate
+    /// `shards > devices` stays well-formed); the direct path keeps one
+    /// worker per configured shard, idle or not, exactly as PR 1 did.
+    pub fn workers(&self) -> usize {
+        let shards = self.fleet.shards.max(1);
+        if self.stages.uses_dispatch() {
+            shards.min(self.fleet.devices.max(1))
+        } else {
+            shards
+        }
+    }
+
+    /// Reject stage plans that name an impossible composition; every
+    /// rule is a structural requirement of a stage, not a style check.
+    pub fn validate(&self) -> Result<()> {
+        let s = &self.stages;
+        if s.feedback != self.fleet.feedback.enabled {
+            return Err(anyhow!(
+                "stage plan feedback={} contradicts FleetConfig::feedback.enabled={}",
+                s.feedback,
+                self.fleet.feedback.enabled
+            ));
+        }
+        if s.windowed() {
+            if s.admission != AdmissionMode::VirtualQueue {
+                return Err(anyhow!(
+                    "the windowed telemetry loop admits through the G/D/1 virtual queue \
+                     (got {:?})",
+                    s.admission
+                ));
+            }
+            if s.batching != BatchingMode::Drain {
+                return Err(anyhow!(
+                    "the windowed telemetry loop needs drain-mode batching so observed \
+                     service times feed the next window (got {:?})",
+                    s.batching
+                ));
+            }
+            if s.execution != ExecutionMode::Sharded {
+                return Err(anyhow!(
+                    "the windowed barrier is the synchronization domain — the stealing \
+                     pool cannot honor it"
+                ));
+            }
+        } else {
+            if s.admission == AdmissionMode::VirtualQueue {
+                return Err(anyhow!(
+                    "G/D/1 virtual-queue admission needs the telemetry stage for its µ̂ frames"
+                ));
+            }
+            if s.batching == BatchingMode::Drain {
+                return Err(anyhow!("drain-mode batching needs the windowed telemetry loop"));
+            }
+            if s.feedback {
+                return Err(anyhow!("the feedback funnel needs telemetry frames"));
+            }
+        }
+        if s.batching != BatchingMode::Off && s.admission == AdmissionMode::Off {
+            return Err(anyhow!(
+                "the batching stage prices admitted requests — it needs an admission stage"
+            ));
+        }
+        if s.batching == BatchingMode::Off && s.admission != AdmissionMode::Off {
+            return Err(anyhow!(
+                "admission verdicts defer request pricing to the batching stage — without \
+                 one, served requests would never receive a latency (use Windowed or Drain)"
+            ));
+        }
+        if s.execution == ExecutionMode::Pool && s.admission != AdmissionMode::Bounded {
+            return Err(anyhow!(
+                "the stealing pool needs precomputed (Bounded) admission verdicts — \
+                 streaming admission would race the thieves"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What one pipeline worker hands back to the aggregator — the single
+/// outcome struct that replaced the per-mode `WorkerOutcome` /
+/// `FeedbackOutcome` pair.
+struct WorkerOutcome {
+    finished: Vec<Box<DeviceSession>>,
+    busy_ms: f64,
+    admission: AdmissionStats,
+    wait_us: Series,
+    /// Batches priced inside the worker (drain mode); the `Windowed`
+    /// post-pass fills the fleet totals after the join instead.
+    batches: BatchStats,
+    telemetry: Option<WorkerTelemetry>,
+}
+
+/// The telemetry stage's per-worker rollup.
+struct WorkerTelemetry {
+    shard_frame: LoadTelemetry,
+    /// Per-archetype final frames ([`TelemetryMode::Archetype`] only),
+    /// indexed by [`Archetype::index`].
+    archetype_frames: Option<Vec<LoadTelemetry>>,
+    windows: u64,
+    mu_prior_per_s: f64,
+}
+
+/// Run a fleet through the staged pipeline and aggregate the result.
+pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetReport> {
+    pcfg.validate()?;
+    let cfg = &pcfg.fleet;
+    let dcfg = &pcfg.dispatch;
+    let stages = pcfg.stages;
+    let workers = pcfg.workers();
+    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
+    let plan_cache = cfg.make_plan_cache();
+    let pool = (stages.execution == ExecutionMode::Pool)
+        .then(|| StealPool::new(workers, cfg.devices));
+    let t0 = Instant::now();
+
+    let outcomes: Vec<Result<WorkerOutcome>> = thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let cache = Arc::clone(&cache);
+            let plan_cache = plan_cache.clone();
+            let pool = pool.as_ref();
+            handles.push(scope.spawn(move || {
+                run_worker(manifest, pcfg, w, workers, pool, &cache, plan_cache.as_ref())
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("pipeline worker panicked"))))
+            .collect()
+    });
+
+    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(cfg.devices);
+    let mut admission = AdmissionStats::default();
+    let mut wait_us = Series::default();
+    let mut batches = BatchStats::default();
+    let mut busy_ms = vec![0.0f64; workers];
+    let mut telemetry: Vec<WorkerTelemetry> = Vec::new();
+    for (w, outcome) in outcomes.into_iter().enumerate() {
+        let o = outcome?;
+        sessions.extend(o.finished);
+        admission.merge(&o.admission);
+        wait_us.extend_from(&o.wait_us);
+        batches.merge(&o.batches);
+        busy_ms[w] = o.busy_ms;
+        telemetry.extend(o.telemetry);
+    }
+
+    // Deterministic home-shard order: batch membership and every
+    // aggregation fold run over (home_shard, device_id)-sorted sessions,
+    // independent of who stepped what (§8-3's determinism argument).
+    sessions.sort_by_key(|s| (s.home_shard, s.device_id));
+
+    // Batching stage, `Windowed` flavor (§8-2): one post-pass per home
+    // shard over the contiguous sorted slice.
+    if stages.batching == BatchingMode::Windowed {
+        let mut i = 0;
+        while i < sessions.len() {
+            let shard = sessions[i].home_shard;
+            let mut j = i;
+            while j < sessions.len() && sessions[j].home_shard == shard {
+                j += 1;
+            }
+            batches.merge(&assemble_batches(dcfg, &mut sessions[i..j]));
+            i = j;
+        }
+    }
+
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let plan_stats = plan_cache.map(|p| p.stats());
+    let device_reports: Vec<DeviceReport> = sessions
+        .into_iter()
+        .map(|s| {
+            let shard = s.home_shard;
+            s.into_report(shard)
+        })
+        .collect();
+    let mut report =
+        FleetReport::aggregate(cfg, device_reports, cache.stats(), plan_stats, wall_ms);
+
+    if stages.uses_dispatch() {
+        let (steals, sessions_stolen) =
+            pool.map(|p| (p.steals(), p.sessions_stolen())).unwrap_or((0, 0));
+        // The dispatch block reports what actually ran: the windowed
+        // loop never steals, and only the windowed loop consults the
+        // adaptive-batch ramp (a non-windowed run with the ramp
+        // configured priced every batch at the static cap, so its
+        // report must not advertise the ramp).
+        let report_dcfg = if stages.windowed() {
+            DispatchConfig { stealing: false, ..dcfg.clone() }
+        } else {
+            DispatchConfig { adaptive_batch: None, ..dcfg.clone() }
+        };
+        report.dispatch = Some(DispatchReport::new(
+            &report_dcfg,
+            workers,
+            admission,
+            wait_us,
+            batches,
+            steals,
+            sessions_stolen,
+            busy_ms,
+        ));
+    }
+
+    if stages.windowed() {
+        let shard_frames: Vec<LoadTelemetry> =
+            telemetry.iter().map(|t| t.shard_frame).collect();
+        let per_archetype = (stages.telemetry == TelemetryMode::Archetype).then(|| {
+            // Merge each archetype's frames across workers, keeping only
+            // the classes the fleet actually contains (the report's
+            // canonical archetype order).
+            let present: Vec<&'static str> =
+                report.per_archetype.iter().map(|a| a.archetype).collect();
+            ALL_ARCHETYPES
+                .iter()
+                .filter(|a| present.contains(&a.name()))
+                .map(|a| {
+                    let frames: Vec<LoadTelemetry> = telemetry
+                        .iter()
+                        .filter_map(|t| t.archetype_frames.as_ref().map(|f| f[a.index()]))
+                        .collect();
+                    ArchetypeFrame { archetype: a.name(), frame: merge_frames(&frames) }
+                })
+                .collect()
+        });
+        report.feedback = Some(FeedbackBlock {
+            config: cfg.feedback,
+            windows: telemetry.iter().map(|t| t.windows).max().unwrap_or(0),
+            telemetry: merge_frames(&shard_frames),
+            service_rate_prior_per_s: telemetry.iter().map(|t| t.mu_prior_per_s).sum(),
+            acc_loss_evo_mean: report.acc_loss_evo_mean,
+            per_archetype,
+        });
+    }
+    Ok(report)
+}
+
+/// Step sessions from `heap` in simulated-time order until every
+/// pending instant is at or past `t1` (`INFINITY` = run everything out).
+fn step_until(
+    heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
+    sessions: &mut [Box<DeviceSession>],
+    t1: f64,
+    cache: &SimVariantCache,
+) -> Result<()> {
+    loop {
+        let Some(&Reverse((bits, i))) = heap.peek() else { break };
+        if f64::from_bits(bits) >= t1 {
+            break;
+        }
+        heap.pop();
+        if sessions[i].is_done() {
+            continue;
+        }
+        sessions[i].step(cache)?;
+        if !sessions[i].is_done() {
+            heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
+        }
+    }
+    Ok(())
+}
+
+/// One pipeline worker: build the home shard's sessions, run the staged
+/// loop the plan calls for, hand back the unified outcome.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    manifest: &Manifest,
+    pcfg: &PipelineConfig,
+    w: usize,
+    workers: usize,
+    pool: Option<&StealPool>,
+    cache: &SimVariantCache,
+    plan_cache: Option<&Arc<PlanCache>>,
+) -> Result<WorkerOutcome> {
+    let cfg = &pcfg.fleet;
+    let dcfg = &pcfg.dispatch;
+    let stages = pcfg.stages;
+
+    // If this worker unwinds, don't leave stealing workers spinning on
+    // the remaining-session count forever.
+    struct AbortOnUnwind<'a>(Option<&'a StealPool>);
+    impl Drop for AbortOnUnwind<'_> {
+        fn drop(&mut self) {
+            if thread::panicking() {
+                if let Some(pool) = self.0 {
+                    pool.set_abort();
+                }
+            }
+        }
+    }
+    let _abort_guard = AbortOnUnwind(pool);
+
+    let ids: Vec<u64> = (0..cfg.devices as u64)
+        .filter(|&d| dcfg.placement.home_shard(d, workers) == w)
+        .collect();
+    let feedback = stages.feedback.then_some(&cfg.feedback);
+    let streaming = stages.admission == AdmissionMode::VirtualQueue;
+    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(ids.len());
+    for &d in &ids {
+        let scenario = cfg.scenario_for(d);
+        let mut session = match DeviceSession::with_scenario(
+            manifest, &cfg.task, &scenario, d, cfg.seed, cfg.duration_s,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                // Unblock every other worker before bailing.
+                if let Some(pool) = pool {
+                    pool.set_abort();
+                }
+                return Err(e);
+            }
+        };
+        session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
+        sessions.push(Box::new(session));
+    }
+
+    // Admission stage, `Bounded` flavor (§8-1): the deterministic
+    // whole-trace pre-pass fixes every verdict before a session steps.
+    let mut admission = AdmissionStats::default();
+    let mut wait_us = Series::default();
+    if stages.admission == AdmissionMode::Bounded {
+        let inputs: Vec<(u64, Archetype, &[Event])> =
+            sessions.iter().map(|s| (s.device_id, s.archetype, s.events())).collect();
+        let ShardAdmission { verdicts, stats, wait_us: waits } = admit_shard(dcfg, &inputs);
+        for (session, verdict) in sessions.iter_mut().zip(verdicts) {
+            session.set_dispatch(verdict);
+        }
+        admission = stats;
+        wait_us = waits;
+    }
+
+    // Execution stage, `Pool` flavor (§8-3): hand the sessions to the
+    // shared work-stealing heap and step until the whole fleet is done.
+    if let Some(pool) = pool {
+        pool.seed(w, sessions);
+        let (finished, busy_ms) = pool.drain(w, dcfg.stealing, cache)?;
+        return Ok(WorkerOutcome {
+            finished,
+            busy_ms,
+            admission,
+            wait_us,
+            batches: BatchStats::default(),
+            telemetry: None,
+        });
+    }
+
+    // Execution stage, `Sharded` flavor: a local simulated-time heap.
+    let wall0 = Instant::now();
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = sessions
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| !s.is_done())
+        .map(|(i, s)| Reverse((s.next_due().to_bits(), i)))
+        .collect();
+
+    if !stages.windowed() {
+        // Un-windowed pass (direct preset, or Bounded + Sharded): run
+        // the shard to completion in one sweep.
+        step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+        return Ok(WorkerOutcome {
+            busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
+            admission,
+            wait_us,
+            batches: BatchStats::default(),
+            telemetry: None,
+            finished: sessions,
+        });
+    }
+
+    // ----- The windowed loop (§10-3 / §11-2): telemetry, virtual-queue
+    // admission, stepping, drain-mode batching, frame observation. -----
+    let fb = cfg.feedback;
+    let keyed = stages.telemetry == TelemetryMode::Archetype;
+
+    // Priors (window 0): arrival rate from the snapshots' event-rate
+    // signal lifted through the ContextFrame funnel, and µ̂₀ from the
+    // modeled backbone latency, so admission binds immediately.
+    let session_arrival_priors: Vec<f64> =
+        sessions.iter_mut().map(|s| s.arrival_rate_prior_per_s()).collect();
+    let session_latency_ms: Vec<f64> =
+        sessions.iter().map(|s| s.modeled_backbone_latency_ms()).collect();
+    let arrival_prior: f64 = session_arrival_priors.iter().sum();
+    let mu_prior_per_s = {
+        let n = sessions.len();
+        if n == 0 {
+            0.0
+        } else {
+            let mean_ms = session_latency_ms.iter().sum::<f64>() / n as f64;
+            if mean_ms > 0.0 {
+                1e3 / mean_ms
+            } else {
+                0.0
+            }
+        }
+    };
+    let mut bank = if keyed {
+        // Per-archetype priors: each class's arrivals, and its own µ̂₀
+        // from the mean modeled latency of its sessions.
+        let n_keys = ALL_ARCHETYPES.len();
+        let mut arrivals = vec![0.0f64; n_keys];
+        let mut latency_sum = vec![0.0f64; n_keys];
+        let mut count = vec![0usize; n_keys];
+        for (i, s) in sessions.iter().enumerate() {
+            let k = s.archetype.index();
+            arrivals[k] += session_arrival_priors[i];
+            latency_sum[k] += session_latency_ms[i];
+            count[k] += 1;
+        }
+        let priors: Vec<(f64, f64)> = (0..n_keys)
+            .map(|k| {
+                let mu = if count[k] > 0 {
+                    let mean_ms = latency_sum[k] / count[k] as f64;
+                    if mean_ms > 0.0 {
+                        1e3 / mean_ms
+                    } else {
+                        0.0
+                    }
+                } else {
+                    0.0
+                };
+                (arrivals[k], mu)
+            })
+            .collect();
+        TelemetryBank::archetype_keyed(fb.ewma_alpha, arrival_prior, mu_prior_per_s, &priors)
+    } else {
+        TelemetryBank::shard_keyed(fb.ewma_alpha, arrival_prior, mu_prior_per_s)
+    };
+
+    // Arrival merge: one stream ordered by (time, device id) — stable
+    // sort keeps each session's own events in order.
+    let mut arrivals: Vec<(f64, u64, usize, Archetype)> = Vec::new();
+    for (si, s) in sessions.iter().enumerate() {
+        for e in s.events() {
+            arrivals.push((e.t_seconds, s.device_id, si, s.archetype));
+        }
+    }
+    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let mut adm = StreamingAdmission::new(dcfg);
+    let mut batches_total = BatchStats::default();
+    let tick = fb.tick_s();
+    let n_windows = fb.window_count(cfg.duration_s);
+    let mut ai = 0usize;
+    for win in 0..n_windows {
+        let last = win + 1 == n_windows;
+        let t1 = if last { f64::INFINITY } else { (win + 1) as f64 * tick };
+
+        // Telemetry stage (1/2): push the current frame into every
+        // session — its archetype's frame under keyed telemetry, the
+        // shard frame otherwise.
+        let shard_frame = bank.shard_frame();
+        let mu = shard_frame.service_rate_per_s;
+        for s in sessions.iter_mut() {
+            s.set_load(bank.frame_for(s.archetype.index()));
+        }
+
+        let mut sample = WindowSample {
+            window: win,
+            span_s: (cfg.duration_s - win as f64 * tick).min(tick).max(1e-9),
+            ..Default::default()
+        };
+        let mut keyed_samples: Vec<WindowSample> = if keyed {
+            ALL_ARCHETYPES
+                .iter()
+                .map(|_| WindowSample { window: win, span_s: sample.span_s, ..Default::default() })
+                .collect()
+        } else {
+            Vec::new()
+        };
+
+        // Admission stage, `VirtualQueue` flavor: this window's arrivals
+        // through the token buckets, then the G/D/1 queue at µ̂.
+        while ai < arrivals.len() && arrivals[ai].0 < t1 {
+            let (t, _device, si, archetype) = arrivals[ai];
+            ai += 1;
+            sample.arrivals += 1;
+            let verdict = adm.offer(dcfg, t, archetype, mu);
+            let shed = matches!(verdict, AdmissionVerdict::Shed(_));
+            if shed {
+                sample.shed += 1;
+            }
+            if keyed {
+                let ks = &mut keyed_samples[archetype.index()];
+                ks.arrivals += 1;
+                if shed {
+                    ks.shed += 1;
+                }
+            }
+            sessions[si].push_verdict(verdict);
+        }
+
+        // Execution stage: step sessions in simulated-time order to the
+        // window edge (evolutions see the frame; admitted events serve).
+        step_until(&mut heap, &mut sessions, t1, cache)?;
+
+        // Batching stage, `Drain` flavor: only batch windows fully
+        // closed by t1 flush; a straddling batch waits for the next
+        // window so it is never split.  The per-batch cap is the
+        // admission-aware ramp's when configured (§11-4).
+        let window_limit =
+            if t1.is_finite() { window_key(t1, dcfg.batch_window_s) } else { u64::MAX };
+        let cap = dcfg.batch_cap_at(shard_frame.utilization());
+        let pricing = assemble_batches_window_capped(dcfg, &mut sessions, window_limit, cap);
+        sample.served = pricing.stats.served;
+        sample.service_us_sum = pricing.service_us_sum;
+        sample.batches = pricing.stats.batches;
+        sample.batch_size_sum = pricing.stats.served;
+        sample.backlog = adm.backlog_jobs(t1.min(cfg.duration_s), mu);
+        if keyed {
+            // Attribution: served work per class from the pricing's
+            // per-session sums; the shard backlog apportioned by
+            // arrival share (the queue itself is a shard resource);
+            // batch occupancy is a shard property every class shares.
+            for (s, &(served, service_us)) in sessions.iter().zip(&pricing.per_session) {
+                let ks = &mut keyed_samples[s.archetype.index()];
+                ks.served += served;
+                ks.service_us_sum += service_us;
+            }
+            for (k, ks) in keyed_samples.iter_mut().enumerate() {
+                ks.batches = pricing.stats.batches;
+                ks.batch_size_sum = pricing.stats.served;
+                ks.backlog = if sample.arrivals > 0 {
+                    sample.backlog * ks.arrivals as f64 / sample.arrivals as f64
+                } else if shard_frame.arrival_rate_per_s > 0.0 {
+                    // An arrival-free window can still hold a draining
+                    // backlog; apportion it by each class's smoothed
+                    // arrival share so the per-class queue-depth EWMA
+                    // tracks the shard frame through lulls.
+                    sample.backlog * bank.frame_for(k).arrival_rate_per_s
+                        / shard_frame.arrival_rate_per_s
+                } else {
+                    0.0
+                };
+            }
+        }
+        batches_total.merge(&pricing.stats);
+
+        // Telemetry stage (2/2): fold the window's counters in.
+        bank.observe(&sample, &keyed_samples);
+    }
+
+    // Safety net: anything still pending (e.g. duration 0 with no
+    // windows) runs out, and leftover served requests get priced at the
+    // static cap (final flushes are the legacy batch semantics).
+    step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+    let final_pricing =
+        assemble_batches_window_capped(dcfg, &mut sessions, u64::MAX, dcfg.batch_cap());
+    batches_total.merge(&final_pricing.stats);
+
+    let (shard_frame, archetype_frames) = bank.into_frames();
+    let (admission, wait_us) = adm.into_parts();
+    Ok(WorkerOutcome {
+        busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
+        admission,
+        wait_us,
+        batches: batches_total,
+        telemetry: Some(WorkerTelemetry {
+            shard_frame,
+            archetype_frames,
+            windows: n_windows,
+            mu_prior_per_s,
+        }),
+        finished: sessions,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_describe_their_modes() {
+        let fleet = FleetConfig::default();
+        let dcfg = DispatchConfig::default();
+        let direct = PipelineConfig::direct(&fleet);
+        assert!(direct.validate().is_ok());
+        assert!(!direct.stages.windowed() && !direct.stages.uses_dispatch());
+
+        let dispatch = PipelineConfig::dispatch(&fleet, &dcfg);
+        assert!(dispatch.validate().is_ok());
+        assert!(dispatch.stages.uses_dispatch() && !dispatch.stages.windowed());
+
+        let mut fb_fleet = fleet.clone();
+        fb_fleet.feedback = crate::context::feedback::FeedbackConfig::on();
+        let feedback = PipelineConfig::feedback(&fb_fleet, &dcfg);
+        assert!(feedback.validate().is_ok());
+        assert!(feedback.stages.windowed() && feedback.stages.uses_dispatch());
+    }
+
+    #[test]
+    fn contradictory_plans_are_rejected() {
+        let fleet = FleetConfig::default();
+        let dcfg = DispatchConfig::default();
+
+        // Feedback stage without an enabled control law.
+        let mut p = PipelineConfig::feedback(&fleet, &dcfg);
+        assert!(p.validate().is_err(), "feedback stage needs feedback.enabled");
+
+        // Virtual-queue admission without telemetry.
+        p = PipelineConfig::dispatch(&fleet, &dcfg);
+        p.stages.admission = AdmissionMode::VirtualQueue;
+        assert!(p.validate().is_err());
+
+        // Stealing pool under the windowed loop.
+        let mut fb_fleet = fleet.clone();
+        fb_fleet.feedback = crate::context::feedback::FeedbackConfig::on();
+        p = PipelineConfig::feedback(&fb_fleet, &dcfg);
+        p.stages.execution = ExecutionMode::Pool;
+        assert!(p.validate().is_err());
+
+        // Batching without admission, and admission without batching
+        // (admitted requests would never be priced).
+        p = PipelineConfig::direct(&fleet);
+        p.stages.batching = BatchingMode::Windowed;
+        assert!(p.validate().is_err());
+        p = PipelineConfig::dispatch(&fleet, &dcfg);
+        p.stages.batching = BatchingMode::Off;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn worker_counts_match_the_legacy_runtimes() {
+        let mut fleet = FleetConfig { devices: 3, shards: 8, ..FleetConfig::default() };
+        assert_eq!(PipelineConfig::direct(&fleet).workers(), 8, "direct spawns every shard");
+        let dcfg = DispatchConfig::default();
+        assert_eq!(
+            PipelineConfig::dispatch(&fleet, &dcfg).workers(),
+            3,
+            "dispatch caps at the fleet size"
+        );
+        fleet.devices = 0;
+        assert_eq!(PipelineConfig::dispatch(&fleet, &dcfg).workers(), 1);
+    }
+}

@@ -1,46 +1,38 @@
-//! Sharded fleet runtime (DESIGN.md §7-3) and its dispatch-mode variant
-//! (§8).
+//! Fleet configuration, the static device → shard map, and the three
+//! legacy runtime entry points.
 //!
-//! The direct path ([`run_fleet`]): N worker threads each own a *shard*
-//! of device sessions (device → shard by id modulo, so ownership is
-//! static and lock-free) and drain a per-shard priority queue ordered by
-//! simulated time: the worker always steps the session whose next
-//! instant is earliest, so devices inside a shard interleave exactly as
-//! a global simulated clock would order them.  The only cross-shard
-//! state is the shared concurrent variant cache — the piece that
-//! *should* be shared, because compiled variants are immutable and
-//! expensive.
+//! PRs 1–4 each carried a full worker loop here (~600 LoC of
+//! near-duplicate drivers).  Those loops now live in one place — the
+//! staged pipeline ([`super::pipeline::run_pipeline`], DESIGN.md §11) —
+//! and this module keeps only the fleet-level configuration plus the
+//! historical signatures as thin presets:
 //!
-//! The dispatch path ([`run_fleet_dispatch`]) routes every inference
-//! through [`crate::dispatch`]: each worker builds its home shard's
-//! sessions, runs the deterministic admission pre-pass (§8-1) over the
-//! shard's merged arrival stream, then steps sessions from a shared
-//! work-stealing heap (§8-3); a post-pass assembles cross-device batches
-//! (§8-2) and folds dispatch telemetry into the report (§8-4).
+//! * [`run_fleet`] — the direct path ([`crate::fleet::StagePlan::direct`]):
+//!   statically sharded workers draining simulated-time heaps over the
+//!   shared variant cache, no dispatch layer.
+//! * [`run_fleet_dispatch`] — the dispatch path
+//!   ([`crate::fleet::StagePlan::dispatch`]): whole-trace bounded
+//!   admission, work-stealing pool, whole-run batch post-pass.  Routes
+//!   to the feedback preset when `FleetConfig::feedback` is enabled,
+//!   exactly as the pre-pipeline code did.
+//! * [`run_fleet_feedback`] — the feedback loop
+//!   ([`crate::fleet::StagePlan::feedback`]): windowed telemetry, G/D/1
+//!   streaming admission, drain-mode batching, frames into evolution.
+//!
+//! Each preset is bit-identical to its pre-pipeline implementation
+//! (asserted in `tests/pipeline.rs`).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
-use std::thread;
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use super::report::{FeedbackBlock, FleetReport};
+use super::pipeline::{run_pipeline, PipelineConfig};
+use super::report::FleetReport;
 use super::scenarios::{Archetype, Scenario};
-use super::session::{DeviceReport, DeviceSession, SimVariantCache};
-use crate::context::events::Event;
 use crate::context::feedback::FeedbackConfig;
-use crate::context::telemetry::{merge_frames, LoadTelemetry, TelemetryAggregator, WindowSample};
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::plancache::{PlanCache, PlanMode};
-use crate::dispatch::{
-    admit_shard, assemble_batches, assemble_batches_window, AdmissionStats, AdmissionVerdict,
-    BatchStats, DispatchConfig, DispatchReport, RateLimiter, ServiceQueue, ShardAdmission,
-    ShedReason, StealPool,
-};
-use crate::metrics::Series;
-use crate::runtime::ShardedCache;
+use crate::dispatch::DispatchConfig;
 
 /// Fleet run parameters.
 #[derive(Debug, Clone)]
@@ -141,11 +133,9 @@ pub fn shard_of(device_id: u64, shards: usize) -> usize {
     (device_id % shards.max(1) as u64) as usize
 }
 
-/// Run a whole fleet to completion and aggregate the result.
-///
-/// Every shard worker builds its sessions, then repeatedly pops the
-/// earliest-due session from its simulated-time heap, steps it once, and
-/// reinserts it — until every session has consumed its duration.
+/// Run a whole fleet to completion on the direct path — the
+/// [`PipelineConfig::direct`] preset: no admission, no batching, no
+/// telemetry, one statically sharded heap per worker.
 pub fn run_fleet(manifest: &Manifest, cfg: &FleetConfig) -> Result<FleetReport> {
     if cfg.feedback.enabled {
         return Err(anyhow!(
@@ -153,93 +143,15 @@ pub fn run_fleet(manifest: &Manifest, cfg: &FleetConfig) -> Result<FleetReport> 
              (bench_dispatch / bench_feedback), not the direct fleet path"
         ));
     }
-    let shards = cfg.shards.max(1);
-    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
-    let plan_cache = cfg.make_plan_cache();
-    let t0 = Instant::now();
-
-    let per_shard: Vec<Result<Vec<DeviceReport>>> = thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(shards);
-        for shard in 0..shards {
-            let cache = Arc::clone(&cache);
-            let plan_cache = plan_cache.clone();
-            handles.push(scope.spawn(move || {
-                run_shard(manifest, cfg, shard, shards, &cache, plan_cache.as_ref())
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("shard worker panicked"))))
-            .collect()
-    });
-
-    let mut device_reports = Vec::with_capacity(cfg.devices);
-    for shard_result in per_shard {
-        device_reports.extend(shard_result?);
-    }
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let plan_stats = plan_cache.map(|p| p.stats());
-    Ok(FleetReport::aggregate(cfg, device_reports, cache.stats(), plan_stats, wall_ms))
+    run_pipeline(manifest, &PipelineConfig::direct(cfg))
 }
 
-/// One shard worker: own the sessions for `shard`, drain them in
-/// simulated-time order.
-fn run_shard(
-    manifest: &Manifest,
-    cfg: &FleetConfig,
-    shard: usize,
-    shards: usize,
-    cache: &SimVariantCache,
-    plan_cache: Option<&Arc<PlanCache>>,
-) -> Result<Vec<DeviceReport>> {
-    let ids: Vec<u64> = (0..cfg.devices as u64)
-        .filter(|&d| shard_of(d, shards) == shard)
-        .collect();
-    let mut sessions = ids
-        .iter()
-        .map(|&d| {
-            let scenario = cfg.scenario_for(d);
-            let mut s = DeviceSession::with_scenario(
-                manifest, &cfg.task, &scenario, d, cfg.seed, cfg.duration_s,
-            )?;
-            s.set_plan_mode(cfg.plan, plan_cache);
-            Ok(s)
-        })
-        .collect::<Result<Vec<DeviceSession>>>()?;
-
-    // Per-shard simulated-time queue: (next-due time as ordered bits, idx).
-    // Times are non-negative finite (or +inf when done), so the IEEE-754
-    // bit pattern orders identically to the float.
-    let mut queue: BinaryHeap<Reverse<(u64, usize)>> = sessions
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| !s.is_done())
-        .map(|(i, s)| Reverse((s.next_due().to_bits(), i)))
-        .collect();
-    while let Some(Reverse((_, i))) = queue.pop() {
-        if sessions[i].is_done() {
-            continue;
-        }
-        sessions[i].step(cache)?;
-        if !sessions[i].is_done() {
-            queue.push(Reverse((sessions[i].next_due().to_bits(), i)));
-        }
-    }
-
-    Ok(sessions.into_iter().map(|s| s.into_report(shard)).collect())
-}
-
-/// What one dispatch-mode worker hands back to the aggregator.
-struct WorkerOutcome {
-    finished: Vec<Box<DeviceSession>>,
-    busy_ms: f64,
-    admission: AdmissionStats,
-    wait_us: Series,
-}
-
-/// Run a fleet with every inference routed through the dispatch layer
-/// (DESIGN.md §8): bounded admission per shard, windowed cross-device
-/// batching, and (optionally) work stealing between shard workers.
+/// Run a fleet with every inference routed through the dispatch layer —
+/// the [`PipelineConfig::dispatch`] preset (DESIGN.md §8): bounded
+/// admission per shard, windowed cross-device batching, and (optionally)
+/// work stealing between shard workers.  When the feedback loop is
+/// enabled this routes to [`run_fleet_feedback`], exactly as the
+/// pre-pipeline runtime did.
 ///
 /// Simulated results are bit-identical with stealing on or off — the
 /// admission pre-pass and batch post-pass are pure functions of the
@@ -250,479 +162,30 @@ pub fn run_fleet_dispatch(
     cfg: &FleetConfig,
     dcfg: &DispatchConfig,
 ) -> Result<FleetReport> {
-    // The feedback loop replaces the whole-trace admission pre-pass with
-    // the windowed telemetry loop (DESIGN.md §10-3); with feedback off
-    // this function is the PR 2 path, untouched.
     if cfg.feedback.enabled {
         return run_fleet_feedback(manifest, cfg, dcfg);
     }
-    // One worker per home shard; idle shards beyond the fleet size are
-    // not spawned (degenerate `shards > devices` stays well-formed).
-    let workers = cfg.shards.max(1).min(cfg.devices.max(1));
-    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
-    let plan_cache = cfg.make_plan_cache();
-    let pool = StealPool::new(workers, cfg.devices);
-    let t0 = Instant::now();
-
-    let outcomes: Vec<Result<WorkerOutcome>> = thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let cache = Arc::clone(&cache);
-            let plan_cache = plan_cache.clone();
-            let pool = &pool;
-            handles.push(scope.spawn(move || {
-                run_dispatch_worker(manifest, cfg, dcfg, w, workers, pool, &cache, plan_cache.as_ref())
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("dispatch worker panicked"))))
-            .collect()
-    });
-
-    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(cfg.devices);
-    let mut admission = AdmissionStats::default();
-    let mut wait_us = Series::default();
-    let mut busy_ms = vec![0.0f64; workers];
-    for (w, outcome) in outcomes.into_iter().enumerate() {
-        let o = outcome?;
-        sessions.extend(o.finished);
-        admission.merge(&o.admission);
-        wait_us.extend_from(&o.wait_us);
-        busy_ms[w] = o.busy_ms;
-    }
-
-    // Deterministic batch post-pass (§8-2): per home shard over
-    // device-id-sorted sessions, independent of who stepped what.
-    sessions.sort_by_key(|s| (s.home_shard, s.device_id));
-    let mut batches = BatchStats::default();
-    let mut i = 0;
-    while i < sessions.len() {
-        let shard = sessions[i].home_shard;
-        let mut j = i;
-        while j < sessions.len() && sessions[j].home_shard == shard {
-            j += 1;
-        }
-        batches.merge(&assemble_batches(dcfg, &mut sessions[i..j]));
-        i = j;
-    }
-
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let plan_stats = plan_cache.map(|p| p.stats());
-    Ok(assemble_fleet_report(
-        cfg,
-        dcfg,
-        workers,
-        sessions,
-        admission,
-        wait_us,
-        batches,
-        (pool.steals(), pool.sessions_stolen()),
-        busy_ms,
-        cache.stats(),
-        plan_stats,
-        wall_ms,
-    ))
+    run_pipeline(manifest, &PipelineConfig::dispatch(cfg, dcfg))
 }
 
-/// Shared tail of both dispatch-mode runtimes: device-id-ordered device
-/// reports, fleet aggregation, and the dispatch telemetry block — one
-/// implementation so the two modes' reports cannot drift apart.
-#[allow(clippy::too_many_arguments)]
-fn assemble_fleet_report(
-    cfg: &FleetConfig,
-    dcfg: &DispatchConfig,
-    workers: usize,
-    mut sessions: Vec<Box<DeviceSession>>,
-    admission: AdmissionStats,
-    wait_us: Series,
-    batches: BatchStats,
-    (steals, sessions_stolen): (u64, u64),
-    busy_ms: Vec<f64>,
-    cache_stats: crate::runtime::CacheStats,
-    plan_stats: Option<crate::runtime::CacheStats>,
-    wall_ms: f64,
-) -> FleetReport {
-    sessions.sort_by_key(|s| (s.home_shard, s.device_id));
-    let device_reports: Vec<DeviceReport> = sessions
-        .into_iter()
-        .map(|s| {
-            let shard = s.home_shard;
-            s.into_report(shard)
-        })
-        .collect();
-    let mut report = FleetReport::aggregate(cfg, device_reports, cache_stats, plan_stats, wall_ms);
-    report.dispatch = Some(DispatchReport::new(
-        dcfg,
-        workers,
-        admission,
-        wait_us,
-        batches,
-        steals,
-        sessions_stolen,
-        busy_ms,
-    ));
-    report
-}
-
-/// One dispatch-mode worker: build the home shard's sessions, run its
-/// admission pre-pass, then step from the shared work-stealing pool.
-#[allow(clippy::too_many_arguments)]
-fn run_dispatch_worker(
-    manifest: &Manifest,
-    cfg: &FleetConfig,
-    dcfg: &DispatchConfig,
-    w: usize,
-    workers: usize,
-    pool: &StealPool,
-    cache: &SimVariantCache,
-    plan_cache: Option<&Arc<PlanCache>>,
-) -> Result<WorkerOutcome> {
-    // If this worker unwinds, don't leave stealing workers spinning on
-    // the remaining-session count forever.
-    struct AbortOnUnwind<'a>(&'a StealPool);
-    impl Drop for AbortOnUnwind<'_> {
-        fn drop(&mut self) {
-            if thread::panicking() {
-                self.0.set_abort();
-            }
-        }
-    }
-    let _abort_guard = AbortOnUnwind(pool);
-
-    let ids: Vec<u64> = (0..cfg.devices as u64)
-        .filter(|&d| dcfg.placement.home_shard(d, workers) == w)
-        .collect();
-    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(ids.len());
-    for &d in &ids {
-        let scenario = cfg.scenario_for(d);
-        let mut session = match DeviceSession::with_scenario(
-            manifest, &cfg.task, &scenario, d, cfg.seed, cfg.duration_s,
-        ) {
-            Ok(s) => s,
-            Err(e) => {
-                // Unblock every other worker before bailing.
-                pool.set_abort();
-                return Err(e);
-            }
-        };
-        session.home_shard = w;
-        session.set_plan_mode(cfg.plan, plan_cache);
-        sessions.push(Box::new(session));
-    }
-
-    let inputs: Vec<(u64, Archetype, &[Event])> =
-        sessions.iter().map(|s| (s.device_id, s.archetype, s.events())).collect();
-    let ShardAdmission { verdicts, stats, wait_us } = admit_shard(dcfg, &inputs);
-    for (session, verdict) in sessions.iter_mut().zip(verdicts) {
-        session.set_dispatch(verdict);
-    }
-
-    pool.seed(w, sessions);
-    let (finished, busy_ms) = pool.drain(w, dcfg.stealing, cache)?;
-    Ok(WorkerOutcome { finished, busy_ms, admission: stats, wait_us })
-}
-
-/// What one feedback-mode worker hands back to the aggregator.
-struct FeedbackOutcome {
-    finished: Vec<Box<DeviceSession>>,
-    busy_ms: f64,
-    admission: AdmissionStats,
-    wait_us: Series,
-    batches: BatchStats,
-    frame: LoadTelemetry,
-    windows: u64,
-    mu_prior_per_s: f64,
-}
-
-/// The feedback-loop fleet runtime (DESIGN.md §10-3): each shard worker
-/// interleaves its sessions *window by window* so the dispatch
-/// telemetry of window w is in every session's hands before window w+1
-/// admits or evolves anything.  Per telemetry window:
-///
-/// 1. push the current EWMA frame into every session (constraint
-///    derivation + LoadSpike trigger input);
-/// 2. admit the window's arrivals through the G/D/1 service queue at
-///    the frame's µ̂ (window 0 runs on the modeled prior — admission
-///    binds before the first observation);
-/// 3. step sessions in simulated-time order to the window edge
-///    (evolutions see the frame; admitted events are served);
-/// 4. batch and price the window's served requests, then fold the
-///    observed arrival/shed/service/batch counters into the aggregator.
-///
-/// Work stealing is off in this mode: the windowed barrier is the
-/// synchronization domain.  Sessions stay deterministic — the loop is a
-/// pure fold over pre-sampled traces and modeled latencies.
-fn run_fleet_feedback(
+/// Run the feedback-loop fleet runtime — the [`PipelineConfig::feedback`]
+/// preset (DESIGN.md §10-3): shard workers interleave their sessions
+/// *window by window* so the dispatch telemetry of window w is in every
+/// session's hands before window w+1 admits or evolves anything.
+/// Requires an enabled [`FleetConfig::feedback`] config (the control
+/// law's parameters drive the loop).
+pub fn run_fleet_feedback(
     manifest: &Manifest,
     cfg: &FleetConfig,
     dcfg: &DispatchConfig,
 ) -> Result<FleetReport> {
-    let workers = cfg.shards.max(1).min(cfg.devices.max(1));
-    let cache: Arc<SimVariantCache> = Arc::new(ShardedCache::new(cfg.cache_stripes));
-    let plan_cache = cfg.make_plan_cache();
-    let t0 = Instant::now();
-
-    let outcomes: Vec<Result<FeedbackOutcome>> = thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let cache = Arc::clone(&cache);
-            let plan_cache = plan_cache.clone();
-            handles.push(scope.spawn(move || {
-                run_feedback_worker(manifest, cfg, dcfg, w, workers, &cache, plan_cache.as_ref())
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("feedback worker panicked"))))
-            .collect()
-    });
-
-    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(cfg.devices);
-    let mut admission = AdmissionStats::default();
-    let mut wait_us = Series::default();
-    let mut batches = BatchStats::default();
-    let mut busy_ms = vec![0.0f64; workers];
-    let mut frames = Vec::with_capacity(workers);
-    let mut windows = 0u64;
-    let mut mu_prior = 0.0f64;
-    for (w, outcome) in outcomes.into_iter().enumerate() {
-        let o = outcome?;
-        sessions.extend(o.finished);
-        admission.merge(&o.admission);
-        wait_us.extend_from(&o.wait_us);
-        batches.merge(&o.batches);
-        busy_ms[w] = o.busy_ms;
-        frames.push(o.frame);
-        windows = windows.max(o.windows);
-        mu_prior += o.mu_prior_per_s;
+    if !cfg.feedback.enabled {
+        return Err(anyhow!(
+            "run_fleet_feedback needs an enabled FeedbackConfig (--feedback on); \
+             the static dispatch path is run_fleet_dispatch"
+        ));
     }
-
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let plan_stats = plan_cache.map(|p| p.stats());
-    // The dispatch block reports what actually ran: no stealing in the
-    // windowed mode.
-    let report_dcfg = DispatchConfig { stealing: false, ..dcfg.clone() };
-    let mut report = assemble_fleet_report(
-        cfg,
-        &report_dcfg,
-        workers,
-        sessions,
-        admission,
-        wait_us,
-        batches,
-        (0, 0),
-        busy_ms,
-        cache.stats(),
-        plan_stats,
-        wall_ms,
-    );
-    report.feedback = Some(FeedbackBlock {
-        config: cfg.feedback,
-        windows,
-        telemetry: merge_frames(&frames),
-        service_rate_prior_per_s: mu_prior,
-        acc_loss_evo_mean: report.acc_loss_evo_mean,
-    });
-    Ok(report)
-}
-
-/// One feedback-mode shard worker (see [`run_fleet_feedback`]).
-#[allow(clippy::too_many_arguments)]
-fn run_feedback_worker(
-    manifest: &Manifest,
-    cfg: &FleetConfig,
-    dcfg: &DispatchConfig,
-    w: usize,
-    workers: usize,
-    cache: &SimVariantCache,
-    plan_cache: Option<&Arc<PlanCache>>,
-) -> Result<FeedbackOutcome> {
-    let fb = cfg.feedback;
-    let ids: Vec<u64> = (0..cfg.devices as u64)
-        .filter(|&d| dcfg.placement.home_shard(d, workers) == w)
-        .collect();
-    let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(ids.len());
-    for &d in &ids {
-        let scenario = cfg.scenario_for(d);
-        let mut session = DeviceSession::with_scenario(
-            manifest, &cfg.task, &scenario, d, cfg.seed, cfg.duration_s,
-        )?;
-        session.home_shard = w;
-        session.set_plan_mode(cfg.plan, plan_cache);
-        session.set_feedback(&fb);
-        session.init_streaming_verdicts();
-        sessions.push(Box::new(session));
-    }
-
-    // Priors (window 0): arrival rate from the snapshots' event-rate
-    // signal lifted through the ContextFrame funnel — the once-dead
-    // `event_rate_per_min` — and µ̂₀ from the modeled backbone latency,
-    // so admission binds immediately.
-    let arrival_prior: f64 =
-        sessions.iter_mut().map(|s| s.arrival_rate_prior_per_s()).sum();
-    let mu_prior_per_s = {
-        let n = sessions.len();
-        if n == 0 {
-            0.0
-        } else {
-            let mean_ms =
-                sessions.iter().map(|s| s.modeled_backbone_latency_ms()).sum::<f64>() / n as f64;
-            if mean_ms > 0.0 {
-                1e3 / mean_ms
-            } else {
-                0.0
-            }
-        }
-    };
-    let mut agg = TelemetryAggregator::new(fb.ewma_alpha, arrival_prior, mu_prior_per_s);
-    let mut svc = ServiceQueue::new(dcfg.queue_capacity);
-    let tick = fb.telemetry_window_s.max(1e-3);
-
-    // Merged arrival stream, ordered by (time, device id) — stable sort
-    // keeps each session's own events in order.
-    let mut arrivals: Vec<(f64, u64, usize, Archetype)> = Vec::new();
-    for (si, s) in sessions.iter().enumerate() {
-        for e in s.events() {
-            arrivals.push((e.t_seconds, s.device_id, si, s.archetype));
-        }
-    }
-    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
-
-    // Per-archetype token buckets — the same RateLimiter the pre-pass
-    // uses (§8-1): sustained overload sheds at the source before the
-    // service queue is consulted.
-    let mut limiter = dcfg.rate_limit.map(RateLimiter::new);
-
-    let mut stats = AdmissionStats::default();
-    let mut wait_us = Series::default();
-    let mut batches_total = BatchStats::default();
-    let wall0 = Instant::now();
-
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = sessions
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| !s.is_done())
-        .map(|(i, s)| Reverse((s.next_due().to_bits(), i)))
-        .collect();
-
-    let n_windows =
-        if cfg.duration_s <= 0.0 { 0 } else { (cfg.duration_s / tick).ceil() as u64 };
-    let mut ai = 0usize;
-    for win in 0..n_windows {
-        let last = win + 1 == n_windows;
-        let t1 = if last { f64::INFINITY } else { (win + 1) as f64 * tick };
-        let frame = agg.current();
-        let mu = frame.service_rate_per_s;
-        for s in sessions.iter_mut() {
-            s.set_load(frame);
-        }
-
-        let mut sample = WindowSample {
-            window: win,
-            span_s: (cfg.duration_s - win as f64 * tick).min(tick).max(1e-9),
-            ..Default::default()
-        };
-
-        // (2) admission: this window's arrivals through the token
-        // buckets, then the G/D/1 queue.
-        while ai < arrivals.len() && arrivals[ai].0 < t1 {
-            let (t, _device, si, archetype) = arrivals[ai];
-            ai += 1;
-            stats.submitted += 1;
-            sample.arrivals += 1;
-            if let Some(limiter) = limiter.as_mut() {
-                if !limiter.admit(archetype, t) {
-                    stats.shed_rate_limited += 1;
-                    sample.shed += 1;
-                    // Rate-limited arrivals still observe the queue depth
-                    // (same accounting as the pre-pass, admission.rs).
-                    let depth = svc.backlog_jobs(t, mu) as usize;
-                    stats.depth_max = stats.depth_max.max(depth);
-                    stats.depth_sum += depth as u64;
-                    sessions[si].push_verdict(AdmissionVerdict::Shed(ShedReason::RateLimited));
-                    continue;
-                }
-            }
-            let (verdict, depth) = svc.offer(t, mu, &dcfg.policy, dcfg.batch_window_s);
-            stats.depth_max = stats.depth_max.max(depth);
-            stats.depth_sum += depth as u64;
-            match verdict {
-                AdmissionVerdict::Admitted { wait_us: wus, .. } => {
-                    stats.admitted += 1;
-                    wait_us.push(wus);
-                }
-                AdmissionVerdict::Shed(reason) => {
-                    sample.shed += 1;
-                    match reason {
-                        ShedReason::RateLimited => stats.shed_rate_limited += 1,
-                        ShedReason::QueueFull => stats.shed_queue_full += 1,
-                        ShedReason::Displaced => stats.shed_displaced += 1,
-                        ShedReason::Deadline => stats.shed_deadline += 1,
-                    }
-                }
-            }
-            sessions[si].push_verdict(verdict);
-        }
-
-        // (3) step sessions in simulated-time order to the window edge.
-        loop {
-            let Some(&Reverse((bits, i))) = heap.peek() else { break };
-            if f64::from_bits(bits) >= t1 {
-                break;
-            }
-            heap.pop();
-            if sessions[i].is_done() {
-                continue;
-            }
-            sessions[i].step(cache)?;
-            if !sessions[i].is_done() {
-                heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
-            }
-        }
-
-        // (4) batch, price, observe — only batch windows fully closed by
-        // t1 flush; a straddling batch waits for the next window so it
-        // is never split (priced exactly as the PR 2 post-pass would).
-        let window_limit = if t1.is_finite() {
-            crate::dispatch::admission::window_key(t1, dcfg.batch_window_s)
-        } else {
-            u64::MAX
-        };
-        let (bstats, service_us_sum) = assemble_batches_window(dcfg, &mut sessions, window_limit);
-        sample.served = bstats.served;
-        sample.service_us_sum = service_us_sum;
-        sample.batches = bstats.batches;
-        sample.batch_size_sum = bstats.served;
-        sample.backlog = svc.backlog_jobs(t1.min(cfg.duration_s), mu);
-        batches_total.merge(&bstats);
-        agg.observe(&sample);
-    }
-
-    // Safety net: anything still pending (e.g. duration 0 with no
-    // windows) runs out, and leftover served requests get priced.
-    while let Some(Reverse((_, i))) = heap.pop() {
-        if sessions[i].is_done() {
-            continue;
-        }
-        sessions[i].step(cache)?;
-        if !sessions[i].is_done() {
-            heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
-        }
-    }
-    let (bstats, _) = assemble_batches_window(dcfg, &mut sessions, u64::MAX);
-    batches_total.merge(&bstats);
-
-    Ok(FeedbackOutcome {
-        busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
-        admission: stats,
-        wait_us,
-        batches: batches_total,
-        frame: agg.current(),
-        windows: n_windows,
-        mu_prior_per_s,
-        finished: sessions,
-    })
+    run_pipeline(manifest, &PipelineConfig::feedback(cfg, dcfg))
 }
 
 #[cfg(test)]
@@ -748,5 +211,14 @@ mod tests {
     #[test]
     fn zero_shards_degrades_to_one() {
         assert_eq!(shard_of(5, 0), 0);
+    }
+
+    #[test]
+    fn feedback_entry_point_rejects_a_disabled_config() {
+        let manifest = Manifest::synthetic();
+        let cfg = FleetConfig::default();
+        assert!(!cfg.feedback.enabled);
+        let err = run_fleet_feedback(&manifest, &cfg, &DispatchConfig::default());
+        assert!(err.is_err(), "a disabled control law must not run the windowed loop");
     }
 }

@@ -103,10 +103,18 @@ pub struct FleetReport {
     pub feedback: Option<FeedbackBlock>,
 }
 
-/// Fleet-level rollup of one feedback-loop run: the merged final
+/// One archetype's fleet-merged telemetry frame (the pipeline's
+/// per-archetype telemetry keying, DESIGN.md §11-3).
+#[derive(Debug, Clone, Copy)]
+pub struct ArchetypeFrame {
+    pub archetype: &'static str,
+    pub frame: LoadTelemetry,
+}
+
+/// Fleet-level rollup of one windowed pipeline run: the merged final
 /// telemetry frame plus the control-law echo and the accuracy price paid
 /// for the load win (DESIGN.md §10-6).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct FeedbackBlock {
     /// The control law the run used.
     pub config: FeedbackConfig,
@@ -118,6 +126,9 @@ pub struct FeedbackBlock {
     pub service_rate_prior_per_s: f64,
     /// Mean (backbone − deployed) accuracy over all evolutions.
     pub acc_loss_evo_mean: f64,
+    /// Per-archetype fleet-merged frames; `None` (and absent from the
+    /// JSON) under shard keying — the PR 4 parity guarantee.
+    pub per_archetype: Option<Vec<ArchetypeFrame>>,
 }
 
 impl FeedbackBlock {
@@ -132,6 +143,13 @@ impl FeedbackBlock {
             "service_rate_prior_per_s".into(),
             Json::Num(self.service_rate_prior_per_s),
         );
+        if let Some(frames) = &self.per_archetype {
+            let mut per = BTreeMap::new();
+            for af in frames {
+                per.insert(af.archetype.to_string(), af.frame.to_json());
+            }
+            m.insert("archetypes".into(), Json::Obj(per));
+        }
         Json::Obj(m)
     }
 

@@ -213,11 +213,36 @@ impl DeviceSession {
         })
     }
 
+    /// Bind this session to a pipeline stage plan (DESIGN.md §11-2) —
+    /// the one mode-configuration entry point, replacing the per-mode
+    /// setter trio (`set_dispatch`-era verdict routing, `set_feedback`,
+    /// `set_load`) that each legacy runtime wired by hand: home-shard
+    /// placement, the evolution plan policy, the feedback funnel (when
+    /// a config is attached), and streaming verdict delivery (the
+    /// windowed admission stages append verdicts as they admit).
+    pub fn bind_stages(
+        &mut self,
+        home_shard: usize,
+        plan: PlanMode,
+        plan_cache: Option<&Arc<PlanCache>>,
+        feedback: Option<&FeedbackConfig>,
+        streaming_verdicts: bool,
+    ) {
+        self.home_shard = home_shard;
+        self.set_plan_mode(plan, plan_cache);
+        if let Some(fb) = feedback {
+            self.set_feedback(fb);
+        }
+        if streaming_verdicts {
+            self.init_streaming_verdicts();
+        }
+    }
+
     /// Route this session's evolutions through the fleet plan policy
     /// (DESIGN.md §9-2): `Banded` quantizes constraints to band
     /// representatives, `Shared` additionally consults the fleet-wide
     /// plan cache.  `Off` leaves the exact-constraints legacy path.
-    pub fn set_plan_mode(&mut self, mode: PlanMode, cache: Option<&Arc<PlanCache>>) {
+    pub(crate) fn set_plan_mode(&mut self, mode: PlanMode, cache: Option<&Arc<PlanCache>>) {
         match mode {
             PlanMode::Off => {}
             PlanMode::Banded => self.engine.set_context_banding(ContextQuantizer::default()),
@@ -235,7 +260,7 @@ impl DeviceSession {
     /// derivation, the EMA-baselined trigger with the load-spike arm,
     /// and (when configured) the drain-coupled plan TTL.  Disabled
     /// configs leave every step bit-identical to the legacy path.
-    pub fn set_feedback(&mut self, fb: &FeedbackConfig) {
+    pub(crate) fn set_feedback(&mut self, fb: &FeedbackConfig) {
         if fb.enabled {
             self.trigger = self
                 .trigger
@@ -250,20 +275,20 @@ impl DeviceSession {
     }
 
     /// Push the shard's latest telemetry frame (per telemetry window).
-    pub fn set_load(&mut self, load: LoadTelemetry) {
+    pub(crate) fn set_load(&mut self, load: LoadTelemetry) {
         self.load = Some(load);
     }
 
     /// Switch to streaming verdict delivery: the feedback worker admits
     /// arrivals window by window and appends verdicts as it goes
     /// (instead of the whole-trace pre-pass of `set_dispatch`).
-    pub fn init_streaming_verdicts(&mut self) {
+    pub(crate) fn init_streaming_verdicts(&mut self) {
         self.verdicts = Some(Vec::with_capacity(self.events.len()));
     }
 
     /// Append the next event's admission verdict (streaming mode; must
     /// arrive in event order).
-    pub fn push_verdict(&mut self, v: AdmissionVerdict) {
+    pub(crate) fn push_verdict(&mut self, v: AdmissionVerdict) {
         if let Some(vs) = self.verdicts.as_mut() {
             vs.push(v);
         }
@@ -274,7 +299,7 @@ impl DeviceSession {
     /// input; `u64::MAX` drains everything).  Requests in a still-open
     /// batch window stay queued so a batch straddling a telemetry-window
     /// boundary is priced whole, never split.
-    pub fn take_served_before(&mut self, window_limit: u64) -> Vec<ServedRequest> {
+    pub(crate) fn take_served_before(&mut self, window_limit: u64) -> Vec<ServedRequest> {
         if window_limit == u64::MAX {
             return std::mem::take(&mut self.served);
         }
@@ -289,13 +314,13 @@ impl DeviceSession {
     /// lifted through the [`ContextFrame`] funnel — the signal the
     /// pre-feedback `constraints()` silently dropped now seeds the
     /// telemetry plane.
-    pub fn arrival_rate_prior_per_s(&mut self) -> f64 {
+    pub(crate) fn arrival_rate_prior_per_s(&mut self) -> f64 {
         ContextFrame::from_snapshot(&self.sim.snapshot()).arrival_prior_per_s
     }
 
     /// Modeled backbone (identity-config) latency at the platform's full
     /// L2 — the service-rate prior µ̂₀ before any observation.
-    pub fn modeled_backbone_latency_ms(&self) -> f64 {
+    pub(crate) fn modeled_backbone_latency_ms(&self) -> f64 {
         let identity = CompressionConfig::identity(self.engine.task().n_layers());
         self.engine
             .evaluator
@@ -304,31 +329,25 @@ impl DeviceSession {
 
     /// The session's pre-sampled event trace (the dispatch pre-pass's
     /// arrival stream).
-    pub fn events(&self) -> &[Event] {
+    pub(crate) fn events(&self) -> &[Event] {
         &self.events
     }
 
     /// This session's device platform (batch-curve lookups, §8-2).
-    pub fn platform(&self) -> &Platform {
+    pub(crate) fn platform(&self) -> &Platform {
         &self.platform
     }
 
     /// Route this session through the dispatcher: one admission verdict
     /// per event, from [`crate::dispatch::admit_shard`].
-    pub fn set_dispatch(&mut self, verdicts: Vec<AdmissionVerdict>) {
+    pub(crate) fn set_dispatch(&mut self, verdicts: Vec<AdmissionVerdict>) {
         debug_assert_eq!(verdicts.len(), self.events.len());
         self.verdicts = Some(verdicts);
     }
 
-    /// Requests served through the dispatcher so far (batch post-pass
-    /// input).
-    pub fn served_requests(&self) -> &[ServedRequest] {
-        &self.served
-    }
-
     /// Record one dispatched request's final (batched) service latency,
     /// assigned by the batch post-pass.
-    pub fn record_dispatched_latency(&mut self, service_us: f64) {
+    pub(crate) fn record_dispatched_latency(&mut self, service_us: f64) {
         self.report.inference_latency_us.push(service_us);
     }
 

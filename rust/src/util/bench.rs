@@ -1,0 +1,79 @@
+//! Shared bench-binary harness (DESIGN.md §11-5).
+//!
+//! Every bench bin used to open with the same four stanzas — parse
+//! argv, enforce the strict-CLI contract, load (or synthesize) the
+//! manifest, and close with the same table/JSON emission — nine copies
+//! that could drift apart one flag at a time.  [`Bench::init`] is the
+//! one implementation: a typo'd `--sweeep` fails loudly with the bin's
+//! usage string, a missing manifest falls back to the synthetic palette
+//! exactly as before, and `--csv` / `--json-out` behave identically
+//! across every bin.
+
+use anyhow::Result;
+
+use crate::coordinator::manifest::Manifest;
+use crate::metrics::Table;
+
+use super::cli::Args;
+use super::json::Json;
+use super::write_json_out;
+
+/// The path every bench bin resolves its default manifest against.
+pub const DEFAULT_MANIFEST: &str = "artifacts/manifest.json";
+
+/// One bench invocation's shared state: the validated CLI and the
+/// loaded (or synthetic) manifest.
+pub struct Bench {
+    pub args: Args,
+    pub manifest: Manifest,
+}
+
+impl Bench {
+    /// Parse `std::env::args`, reject unknown/misused flags against the
+    /// bin's contract (printing `usage` and exiting 2 — the strict-CLI
+    /// behavior every bin shares), then load the manifest from
+    /// `--manifest` / the default artifact path, falling back to the
+    /// synthetic palette.
+    pub fn init(allowed: &[&str], boolean_flags: &[&str], usage: &str) -> Result<Bench> {
+        let args = Args::from_env();
+        args.enforce_usage(allowed, boolean_flags, usage);
+        let manifest = Manifest::load_cli(args.get("manifest"), DEFAULT_MANIFEST)?;
+        Ok(Bench { args, manifest })
+    }
+
+    /// Render a result table the shared way: CSV under `--csv`,
+    /// markdown otherwise.
+    pub fn print_table(&self, table: &Table) {
+        if self.args.flag("csv") {
+            println!("{}", table.to_csv());
+        } else {
+            println!("{}", table.to_markdown());
+        }
+    }
+
+    /// Print the labelled JSON report and honor `--json-out` (the CI
+    /// bench-smoke step uploads the written file as an artifact).
+    pub fn emit_json(&self, label: &str, json: &Json) -> Result<()> {
+        println!("{label} JSON:\n{json}");
+        write_json_out(&self.args, json)
+    }
+
+    /// `preferred` task if the manifest has it, else the first task by
+    /// name; a manifest with zero tasks is a hard error (not a panic).
+    pub fn default_task(&self, preferred: &str) -> Result<String> {
+        let mut names: Vec<String> = self.manifest.tasks.keys().cloned().collect();
+        names.sort();
+        if names.iter().any(|n| n == preferred) {
+            return Ok(preferred.to_string());
+        }
+        match names.into_iter().next() {
+            Some(n) => Ok(n),
+            None => Err(anyhow::anyhow!("manifest contains no tasks")),
+        }
+    }
+
+    /// Parse a committed floor-check file (`--check-floor PATH`).
+    pub fn read_floor(path: &str) -> Result<Json> {
+        Json::parse(&std::fs::read_to_string(path)?)
+    }
+}

@@ -2,9 +2,12 @@
 //! (The usual ecosystem crates are unavailable in this environment; see
 //! Cargo.toml header note and DESIGN.md §5.)
 
+pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+
+pub use bench::Bench;
 
 use anyhow::Result;
 

@@ -121,7 +121,7 @@ fn feedback_reduces_shed_and_p95_under_overload() {
 
     // The on-run surfaces the context plane: telemetry + feedback JSON
     // blocks with finite, sensible numbers.
-    let fbk = on.feedback.expect("on runs carry the feedback block");
+    let fbk = on.feedback.as_ref().expect("on runs carry the feedback block");
     assert!(fbk.config.enabled);
     assert!(fbk.windows > 0);
     assert!(fbk.telemetry.arrival_rate_per_s > 0.0);
@@ -151,7 +151,7 @@ fn feedback_runs_replay_bit_identically() {
     assert_eq!(a.latency.p50_ms.to_bits(), b.latency.p50_ms.to_bits());
     assert_eq!(a.latency.p95_ms.to_bits(), b.latency.p95_ms.to_bits());
     assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
-    let (fa, fb) = (a.feedback.unwrap(), b.feedback.unwrap());
+    let (fa, fb) = (a.feedback.as_ref().unwrap(), b.feedback.as_ref().unwrap());
     let (ta, tb) = (fa.telemetry, fb.telemetry);
     assert_eq!(ta.arrival_rate_per_s.to_bits(), tb.arrival_rate_per_s.to_bits());
     assert_eq!(ta.service_rate_per_s.to_bits(), tb.service_rate_per_s.to_bits());

@@ -1,0 +1,404 @@
+//! Integration: the staged serving pipeline (DESIGN.md §11).
+//!
+//! * preset coherence — over randomized fleet shapes, each legacy entry
+//!   point (`run_fleet` / `run_fleet_dispatch` / `run_fleet_feedback`)
+//!   is bit-identical to a hand-built `PipelineConfig` preset, so the
+//!   wrappers and the presets cannot drift apart; and the direct
+//!   preset's inline `Sharded` path agrees with the dispatch preset's
+//!   `Pool` + pre-pass + post-pass path under the passthrough config —
+//!   two disjoint implementations of the same semantics, ground-truthed
+//!   against the untouched `ServingLoop` by `tests/fleet.rs` /
+//!   `tests/dispatch.rs`;
+//! * degenerate regressions on the feedback preset (devices 0,
+//!   shards > devices, duration 0) — the gap the legacy suite left;
+//! * observe-only telemetry — the windowed stages run without the
+//!   feedback funnel, a composition no legacy runtime offered;
+//! * per-archetype telemetry frames (§11-3) and admission-aware batch
+//!   sizing (§11-4) — the two one-line stage swaps the refactor buys.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::{AdaptiveBatch, BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{
+    run_fleet, run_fleet_dispatch, run_fleet_feedback, run_pipeline, AdmissionMode, BatchingMode,
+    ExecutionMode, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, StagePlan,
+    TelemetryMode,
+};
+use adaspring::util::rng::Rng;
+
+/// Bit-exact report equality over everything deterministic (wall-clock
+/// and per-worker busy times are the only excluded fields).
+fn assert_reports_identical(a: &FleetReport, b: &FleetReport, label: &str) {
+    assert_eq!(a.inferences, b.inferences, "{label}: inferences");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.evolutions, b.evolutions, "{label}: evolutions");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    for (x, y, what) in [
+        (a.latency.p50_ms, b.latency.p50_ms, "p50"),
+        (a.latency.p95_ms, b.latency.p95_ms, "p95"),
+        (a.latency.p99_ms, b.latency.p99_ms, "p99"),
+        (a.latency.mean_ms, b.latency.mean_ms, "mean"),
+        (a.latency.max_ms, b.latency.max_ms, "max"),
+        (a.search_p50_us, b.search_p50_us, "search p50"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: latency {what}");
+    }
+    assert_eq!(a.per_archetype.len(), b.per_archetype.len(), "{label}: archetype rows");
+    for (x, y) in a.per_archetype.iter().zip(b.per_archetype.iter()) {
+        assert_eq!(x.archetype, y.archetype, "{label}");
+        assert_eq!(x.inferences, y.inferences, "{label}: {}", x.archetype);
+        assert_eq!(x.shed, y.shed, "{label}: {}", x.archetype);
+        assert_eq!(x.evolutions, y.evolutions, "{label}: {}", x.archetype);
+        assert_eq!(
+            x.battery_end_mean.to_bits(),
+            y.battery_end_mean.to_bits(),
+            "{label}: {}",
+            x.archetype
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: {}", x.archetype);
+    }
+    match (&a.dispatch, &b.dispatch) {
+        (None, None) => {}
+        (Some(da), Some(db)) => {
+            assert_eq!(da.admission.submitted, db.admission.submitted, "{label}: submitted");
+            assert_eq!(da.admission.admitted, db.admission.admitted, "{label}: admitted");
+            assert_eq!(da.admission.depth_max, db.admission.depth_max, "{label}: depth");
+            assert_eq!(da.batches.histogram, db.batches.histogram, "{label}: histogram");
+            assert_eq!(da.batches.served, db.batches.served, "{label}: served");
+        }
+        _ => panic!("{label}: dispatch block presence differs"),
+    }
+    match (&a.feedback, &b.feedback) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.windows, fb.windows, "{label}: windows");
+            assert_eq!(
+                fa.telemetry.arrival_rate_per_s.to_bits(),
+                fb.telemetry.arrival_rate_per_s.to_bits(),
+                "{label}: telemetry arrival rate"
+            );
+            assert_eq!(
+                fa.telemetry.service_rate_per_s.to_bits(),
+                fb.telemetry.service_rate_per_s.to_bits(),
+                "{label}: telemetry service rate"
+            );
+            assert_eq!(
+                fa.telemetry.shed_rate.to_bits(),
+                fb.telemetry.shed_rate.to_bits(),
+                "{label}: telemetry shed rate"
+            );
+            assert_eq!(
+                fa.service_rate_prior_per_s.to_bits(),
+                fb.service_rate_prior_per_s.to_bits(),
+                "{label}: µ̂₀ prior"
+            );
+        }
+        _ => panic!("{label}: feedback block presence differs"),
+    }
+}
+
+#[test]
+fn presets_are_bit_identical_to_the_legacy_entry_points() {
+    // Acceptance: each legacy entry point is a thin preset over
+    // run_pipeline, and building the same preset by hand cannot drift
+    // from it.  Because the wrappers now delegate, true legacy-semantics
+    // parity is anchored elsewhere: the cross-path check below runs two
+    // *disjoint* pipeline implementations against each other, and the
+    // fleet/dispatch suites pin both to the untouched ServingLoop.
+    // Fleet shapes are randomized (deterministically) so none of it is
+    // tuned to one lucky configuration.
+    let manifest = Manifest::synthetic();
+    let mut rng = Rng::new(0xAD45);
+    let policies = [
+        BackpressurePolicy::Block,
+        BackpressurePolicy::ShedNewest,
+        BackpressurePolicy::ShedOldest,
+        BackpressurePolicy::Deadline { max_wait_s: 1.0 },
+    ];
+    for round in 0..3u64 {
+        let cfg = FleetConfig {
+            devices: 4 + rng.below(10),
+            shards: 1 + rng.below(4),
+            duration_s: rng.range(0.2, 0.8) * 3600.0,
+            seed: 11 + round,
+            task: "d3".to_string(),
+            cache_stripes: 8,
+            ..FleetConfig::default()
+        };
+        let dcfg = DispatchConfig {
+            queue_capacity: 2 + rng.below(8),
+            policy: *rng.pick(&policies),
+            batch_window_s: *rng.pick(&[0.0, 0.25, 1.0]),
+            stealing: rng.chance(0.5),
+            ..DispatchConfig::default()
+        };
+        let label = format!(
+            "round {round}: {}d x {}s, window {}, {:?}",
+            cfg.devices, cfg.shards, dcfg.batch_window_s, dcfg.policy
+        );
+
+        let direct_legacy = run_fleet(&manifest, &cfg).unwrap();
+        let direct_preset = run_pipeline(&manifest, &PipelineConfig::direct(&cfg)).unwrap();
+        assert_reports_identical(&direct_legacy, &direct_preset, &format!("{label} [direct]"));
+
+        // Cross-path anchor (non-tautological): the direct preset steps
+        // through the inline Sharded loop; the passthrough dispatch
+        // preset steps through the Pool + Bounded pre-pass + Windowed
+        // post-pass.  Two separate implementations must serve the same
+        // fleet identically (window 0 = batch-of-one pricing, so the
+        // distributions agree to the same tolerances tests/dispatch.rs
+        // uses against ServingLoop).
+        let passthrough = run_pipeline(
+            &manifest,
+            &PipelineConfig::dispatch(&cfg, &DispatchConfig::passthrough()),
+        )
+        .unwrap();
+        assert_eq!(passthrough.inferences, direct_preset.inferences, "{label} [cross-path]");
+        assert_eq!(passthrough.dropped, direct_preset.dropped, "{label} [cross-path]");
+        assert_eq!(passthrough.evolutions, direct_preset.evolutions, "{label} [cross-path]");
+        assert_eq!(passthrough.shed, 0, "{label} [cross-path]: passthrough never sheds");
+        assert!(
+            (passthrough.latency.p50_ms - direct_preset.latency.p50_ms).abs() < 1e-12,
+            "{label} [cross-path]: p50"
+        );
+        assert!(
+            (passthrough.latency.mean_ms - direct_preset.latency.mean_ms).abs() < 1e-6,
+            "{label} [cross-path]: mean"
+        );
+
+        let dispatch_legacy = run_fleet_dispatch(&manifest, &cfg, &dcfg).unwrap();
+        let dispatch_preset =
+            run_pipeline(&manifest, &PipelineConfig::dispatch(&cfg, &dcfg)).unwrap();
+        assert_reports_identical(
+            &dispatch_legacy,
+            &dispatch_preset,
+            &format!("{label} [dispatch]"),
+        );
+
+        let fb_cfg = FleetConfig {
+            feedback: FeedbackConfig::on(),
+            load_multiplier: *rng.pick(&[1.0, 300.0]),
+            ..cfg.clone()
+        };
+        let feedback_legacy = run_fleet_feedback(&manifest, &fb_cfg, &dcfg).unwrap();
+        let feedback_preset =
+            run_pipeline(&manifest, &PipelineConfig::feedback(&fb_cfg, &dcfg)).unwrap();
+        assert_reports_identical(
+            &feedback_legacy,
+            &feedback_preset,
+            &format!("{label} [feedback]"),
+        );
+        // run_fleet_dispatch with feedback enabled routes to the same
+        // preset (the legacy auto-routing contract).
+        let routed = run_fleet_dispatch(&manifest, &fb_cfg, &dcfg).unwrap();
+        assert_reports_identical(&feedback_legacy, &routed, &format!("{label} [routed]"));
+    }
+}
+
+/// Every number in a report must be finite — degenerate fleets may be
+/// empty but never NaN/inf.
+fn assert_finite_json(j: &adaspring::util::json::Json) {
+    use adaspring::util::json::Json;
+    match j {
+        Json::Num(n) => assert!(n.is_finite(), "non-finite number in report JSON"),
+        Json::Arr(a) => a.iter().for_each(assert_finite_json),
+        Json::Obj(m) => m.values().for_each(assert_finite_json),
+        _ => {}
+    }
+}
+
+#[test]
+fn feedback_preset_handles_degenerate_fleets() {
+    // The regression coverage the feedback runtime never had: empty
+    // fleets, more shards than devices, zero duration.
+    let manifest = Manifest::synthetic();
+    for (devices, shards, duration_s) in
+        [(0usize, 4usize, 1800.0f64), (3, 8, 900.0), (6, 2, 0.0), (0, 0, 0.0)]
+    {
+        let cfg = FleetConfig {
+            devices,
+            shards,
+            duration_s,
+            seed: 5,
+            task: "d3".to_string(),
+            cache_stripes: 4,
+            feedback: FeedbackConfig::on(),
+            ..FleetConfig::default()
+        };
+        let label = format!("devices={devices} shards={shards} duration={duration_s}");
+        let r = run_fleet_feedback(&manifest, &cfg, &DispatchConfig::default())
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_finite_json(&r.to_json());
+        assert_eq!(r.devices, devices, "{label}");
+        let fbk = r.feedback.as_ref().expect("windowed runs carry the feedback block");
+        if devices == 0 || duration_s == 0.0 {
+            assert_eq!((r.inferences, r.evolutions, r.shed), (0, 0, 0), "{label}");
+            assert_eq!(r.energy_j, 0.0, "{label}");
+        }
+        if duration_s == 0.0 {
+            assert_eq!(fbk.windows, 0, "{label}: no windows over an empty duration");
+        } else {
+            assert!(fbk.windows > 0, "{label}");
+        }
+        let d = r.dispatch.as_ref().expect("feedback runs carry the dispatch block");
+        assert!(d.workers >= 1 && d.workers <= shards.max(1), "{label}");
+    }
+}
+
+#[test]
+fn observe_only_telemetry_runs_without_the_feedback_funnel() {
+    // A composition no legacy runtime offered: G/D/1 admission +
+    // telemetry frames with the control law off.  Sessions evolve by
+    // the paper rule; the report still surfaces the telemetry plane.
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 6,
+        shards: 1,
+        duration_s: 0.2 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 600.0,
+        ..FleetConfig::default()
+    };
+    assert!(!cfg.feedback.enabled);
+    let dcfg = DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        stealing: false,
+        ..DispatchConfig::default()
+    };
+    let mut pcfg = PipelineConfig::dispatch(&cfg, &dcfg);
+    pcfg.stages = StagePlan {
+        admission: AdmissionMode::VirtualQueue,
+        batching: BatchingMode::Drain,
+        execution: ExecutionMode::Sharded,
+        telemetry: TelemetryMode::Shard,
+        feedback: false,
+    };
+    let a = run_pipeline(&manifest, &pcfg).unwrap();
+    let b = run_pipeline(&manifest, &pcfg).unwrap();
+    assert!(a.inferences > 0);
+    assert!(a.evolutions > 0, "the paper trigger still evolves");
+    let fbk = a.feedback.as_ref().expect("telemetry stage reports its block");
+    assert!(!fbk.config.enabled, "the funnel stays off");
+    assert!(fbk.windows > 0);
+    assert!(fbk.telemetry.arrival_rate_per_s > 0.0);
+    let json = a.to_json().to_string();
+    assert!(json.contains("\"telemetry\""), "{json}");
+    // Deterministic replay, like every pipeline mode.
+    assert_reports_identical(&a, &b, "observe-only replay");
+}
+
+#[test]
+fn archetype_telemetry_reports_per_class_frames() {
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 12,
+        shards: 2,
+        duration_s: 0.2 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 600.0,
+        feedback: FeedbackConfig::on(),
+        ..FleetConfig::default()
+    };
+    let dcfg = DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        stealing: false,
+        ..DispatchConfig::default()
+    };
+    let mut pcfg = PipelineConfig::feedback(&cfg, &dcfg);
+    pcfg.stages.telemetry = TelemetryMode::Archetype;
+    let r = run_pipeline(&manifest, &pcfg).unwrap();
+    assert!(r.inferences > 0);
+    let fbk = r.feedback.as_ref().expect("feedback block");
+    let frames = fbk.per_archetype.as_ref().expect("archetype keying yields per-class frames");
+    assert_eq!(
+        frames.len(),
+        r.per_archetype.len(),
+        "one telemetry frame per archetype present in the fleet"
+    );
+    for af in frames {
+        assert!(af.frame.arrival_rate_per_s.is_finite());
+        assert!(af.frame.service_rate_per_s > 0.0, "{}: µ̂ seeded from its class", af.archetype);
+    }
+    let parsed =
+        adaspring::util::json::Json::parse(&r.to_json().to_string()).unwrap();
+    let tele = parsed.get("telemetry").unwrap();
+    let per_class = tele.get("archetypes").expect("telemetry JSON carries the per-class map");
+    assert!(per_class.get(frames[0].archetype).is_ok());
+
+    // The default shard keying stays bit-identical to the legacy
+    // feedback runtime (no per-class frames, no JSON key).
+    let shard_run = run_pipeline(&manifest, &PipelineConfig::feedback(&cfg, &dcfg)).unwrap();
+    let legacy = run_fleet_feedback(&manifest, &cfg, &dcfg).unwrap();
+    assert_reports_identical(&shard_run, &legacy, "shard keying parity");
+    assert!(shard_run.feedback.as_ref().unwrap().per_archetype.is_none());
+    let legacy_json =
+        adaspring::util::json::Json::parse(&legacy.to_json().to_string()).unwrap();
+    assert!(
+        legacy_json.get("telemetry").unwrap().get("archetypes").is_err(),
+        "shard keying must not grow the telemetry schema"
+    );
+}
+
+#[test]
+fn adaptive_batch_sizing_grows_batches_under_overload() {
+    // §11-4: with the ramp armed, an overloaded window's effective batch
+    // cap rises above the static max_batch, so drain-mode batches form
+    // larger than the static run ever can.
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 12,
+        shards: 1,
+        duration_s: 0.2 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 1500.0,
+        feedback: FeedbackConfig::on(),
+        ..FleetConfig::default()
+    };
+    let static_dcfg = DispatchConfig {
+        queue_capacity: 8,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        max_batch: 2,
+        stealing: false,
+        ..DispatchConfig::default()
+    };
+    let adaptive_dcfg = DispatchConfig {
+        adaptive_batch: Some(AdaptiveBatch::default()),
+        ..static_dcfg.clone()
+    };
+    let r_static = run_fleet_feedback(&manifest, &cfg, &static_dcfg).unwrap();
+    let r_adaptive = run_fleet_feedback(&manifest, &cfg, &adaptive_dcfg).unwrap();
+
+    let d_static = r_static.dispatch.as_ref().unwrap();
+    let d_adaptive = r_adaptive.dispatch.as_ref().unwrap();
+    assert!(
+        d_static.batches.size_max <= 2,
+        "the static cap bounds every batch (got {})",
+        d_static.batches.size_max
+    );
+    assert!(
+        d_adaptive.batches.size_max > 2,
+        "surge utilization must ramp the cap above the static max_batch \
+         (adaptive max {} vs static cap 2)",
+        d_adaptive.batches.size_max
+    );
+    let json = r_adaptive.to_json().to_string();
+    assert!(json.contains("\"adaptive_batch\""), "dispatch JSON surfaces the ramp: {json}");
+    assert!(
+        !r_static.to_json().to_string().contains("\"adaptive_batch\""),
+        "static runs keep the exact legacy schema"
+    );
+}
