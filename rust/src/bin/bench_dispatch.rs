@@ -23,13 +23,16 @@
 //! additionally writes the JSON to a file for the CI bench-smoke
 //! artifact upload.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use adaspring::coordinator::Manifest;
 use adaspring::dispatch::{
     AdaptiveBatch, BackpressurePolicy, DispatchConfig, Placement, RateLimit,
 };
-use adaspring::fleet::{run_fleet_dispatch, FleetConfig, FleetReport};
+use adaspring::fleet::{
+    run_fleet_dispatch, run_pipeline, FleetConfig, FleetReport, PipelineConfig,
+};
+use adaspring::obs::TraceConfig;
 use adaspring::metrics::Table;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
@@ -48,7 +51,8 @@ const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H
                      [--feedback on|off] [--load X] [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--rate PER_S --burst N] [--max-batch N] [--adaptive-batch] \
-                     [--placement modulo|packed] [--no-steal] [--json-out PATH] [--sweep] [--csv]\n\
+                     [--placement modulo|packed] [--no-steal] [--trace-out PATH] \
+                     [--json-out PATH] [--sweep] [--csv]\n\
                      (--adaptive-batch grows the batch cap with G/D/1 utilization; it engages \
                      on the windowed pipeline, i.e. with --feedback on)";
 
@@ -90,6 +94,9 @@ fn main() -> Result<()> {
     let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
     if bench.args.flag("sweep") {
+        if bench.trace_out().is_some() {
+            bail!("--trace-out traces a single run — drop --sweep");
+        }
         return sweep(&bench);
     }
 
@@ -107,7 +114,19 @@ fn main() -> Result<()> {
         cfg.feedback.name(),
         cfg.load_multiplier
     );
-    let report = run_fleet_dispatch(&bench.manifest, &cfg, &dcfg)?;
+    let report = match bench.trace_out() {
+        // Same routing run_fleet_dispatch does, with the flight
+        // recorder attached to the preset.
+        Some(path) => {
+            let preset = if cfg.feedback.enabled {
+                PipelineConfig::feedback(&cfg, &dcfg)
+            } else {
+                PipelineConfig::dispatch(&cfg, &dcfg)
+            };
+            run_pipeline(&bench.manifest, &preset.with_trace(Some(TraceConfig::new(path))))?
+        }
+        None => run_fleet_dispatch(&bench.manifest, &cfg, &dcfg)?,
+    };
     print_summary(&report);
     bench.print_table(&report.archetype_table());
     bench.emit_json("fleet", &report.to_json())?;

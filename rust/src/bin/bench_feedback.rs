@@ -43,6 +43,7 @@ use adaspring::fleet::{
     run_pipeline, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, TelemetryMode,
 };
 use adaspring::metrics::Table;
+use adaspring::obs::TraceConfig;
 use adaspring::util::json::Json;
 use adaspring::util::Bench;
 
@@ -59,7 +60,8 @@ const USAGE: &str = "usage: bench_feedback [--devices N] [--shards N] [--hours H
                      [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--profile calm|diurnal-peak|surge|all] [--telemetry shard|archetype] \
-                     [--adaptive-batch] [--check-floor PATH] [--json-out PATH] [--csv]\n\
+                     [--adaptive-batch] [--check-floor PATH] [--trace-out PATH] \
+                     [--json-out PATH] [--csv]\n\
                      (the bench drives --feedback and --load itself, per profile and mode; \
                      --telemetry / --adaptive-batch are stage swaps on the feedback-on runs)";
 
@@ -147,6 +149,11 @@ fn main() -> Result<()> {
     if profiles.is_empty() {
         bail!("unknown --profile {wanted:?} (expected calm|diurnal-peak|surge|all)");
     }
+    // The flight recorder traces one run: the feedback-on run of the
+    // single selected profile (its audits carry the constraint funnel).
+    if bench.trace_out().is_some() && profiles.len() != 1 {
+        bail!("--trace-out traces a single profile's feedback-on run — pick one with --profile");
+    }
 
     println!(
         "# Feedback bench — {} devices x {:.2} h over {} shards (policy {}, window {} s, \
@@ -181,6 +188,7 @@ fn main() -> Result<()> {
         let mut on_pipeline = PipelineConfig::feedback(&on_cfg, &dcfg);
         on_pipeline.stages.telemetry = telemetry;
         on_pipeline.dispatch.adaptive_batch = adaptive;
+        on_pipeline.trace = bench.trace_out().map(TraceConfig::new);
         let r_on = run_pipeline(manifest, &on_pipeline)?;
         let off = Cell::from_report(&r_off);
         let on = Cell::from_report(&r_on);

@@ -23,6 +23,7 @@ use adaspring::coordinator::operators::{Op, ALL_OPS, NUM_OPS};
 use adaspring::coordinator::search::{Mutator, Runtime3C, Runtime3CParams};
 use adaspring::coordinator::{CompressionConfig, Manifest};
 use adaspring::metrics::{f1, f2, f3, Table};
+use adaspring::obs::{self, EvolutionAudit};
 use adaspring::platform::Platform;
 use adaspring::util::json::Json;
 use adaspring::util::{write_json_out, Bench};
@@ -45,6 +46,7 @@ fn main() -> Result<()> {
     let c = Constraints::from_battery(0.7, task.acc_loss_threshold, task.latency_budget_ms, 2 << 20);
 
     let mut parts: BTreeMap<String, Json> = BTreeMap::new();
+    let mut audits: Vec<EvolutionAudit> = Vec::new();
     if part == "a" || part == "all" {
         parts.insert("part_a".into(), part_a(&engine, &c)?.to_json());
     }
@@ -57,7 +59,10 @@ fn main() -> Result<()> {
             task.latency_budget_ms * 0.4,
             (1.1 * 1024.0 * 1024.0) as u64,
         );
-        parts.insert("part_b".into(), part_b(manifest, task_name, &platform, &tight)?.to_json());
+        parts.insert(
+            "part_b".into(),
+            part_b(manifest, task_name, &platform, &tight, &mut audits)?.to_json(),
+        );
     }
     if part == "c" || part == "all" {
         parts.insert("part_c".into(), part_c(manifest, task_name, &platform, &c)?.to_json());
@@ -66,6 +71,9 @@ fn main() -> Result<()> {
         parts.insert("part_d".into(), part_d(&engine, &c)?.to_json());
     }
     write_json_out(args, &Json::Obj(parts))?;
+    if let Some(path) = bench.trace_out() {
+        obs::write_audit_trace(path, task_name, &audits)?;
+    }
     Ok(())
 }
 
@@ -129,7 +137,13 @@ fn part_a(engine: &AdaSpring, c: &Constraints) -> Result<Table> {
 }
 
 /// (b) search-scheme ablation: locally greedy / inherit / inherit+mutation.
-fn part_b(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<Table> {
+fn part_b(
+    m: &Manifest,
+    task: &str,
+    p: &Platform,
+    c: &Constraints,
+    audits: &mut Vec<EvolutionAudit>,
+) -> Result<Table> {
     println!("## Fig. 10(b) — layer-dependent inheriting and mutation\n");
     let mut rows = Table::new(&["Scheme", "A loss", "E", "score (λ-weighted)", "feasible", "Sp (KB)"]);
     let cases = [
@@ -141,6 +155,7 @@ fn part_b(m: &Manifest, task: &str, p: &Platform, c: &Constraints) -> Result<Tab
         let mut engine = AdaSpring::new(m, task, p, false)?;
         engine.set_search_params(params);
         let evo = engine.evolve(c)?;
+        audits.push(evo.audit);
         let e = &evo.search.evaluation;
         rows.row(vec![
             name.to_string(),

@@ -17,6 +17,7 @@ use adaspring::context::CacheContention;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
 use adaspring::metrics::{f2, Series, Table};
+use adaspring::obs::{self, EvolutionAudit};
 use adaspring::platform::Platform;
 use adaspring::util::Bench;
 
@@ -37,6 +38,7 @@ fn main() -> Result<()> {
     ]);
     let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
     names.sort();
+    let mut audits: Vec<EvolutionAudit> = Vec::new();
     for name in &names {
         let mut engine = AdaSpring::new(manifest, name, &platform, false)?;
         let task = engine.task().clone();
@@ -53,6 +55,7 @@ fn main() -> Result<()> {
                 cache.available_bytes(),
             );
             let evo = engine.evolve(&cons)?;
+            audits.push(evo.audit);
             let ev = &evo.search.evaluation;
             acc.push(evo.deployed_accuracy);
             e.push(ev.efficiency.ln());
@@ -75,5 +78,8 @@ fn main() -> Result<()> {
     }
     bench.print_table(&out);
     adaspring::util::write_json_out(&bench.args, &out.to_json())?;
+    if let Some(path) = bench.trace_out() {
+        obs::write_audit_trace(path, "fig8:all-tasks", &audits)?;
+    }
     Ok(())
 }

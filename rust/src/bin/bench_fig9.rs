@@ -14,6 +14,7 @@ use anyhow::Result;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
 use adaspring::metrics::{f1, f2, Table};
+use adaspring::obs::{self, EvolutionAudit};
 use adaspring::platform::Platform;
 use adaspring::util::Bench;
 
@@ -39,6 +40,7 @@ fn main() -> Result<()> {
         "Platform", "Time", "Battery", "Cache MB", "Config", "A (%)", "T (ms)",
         "C/Sp", "C/Sa", "En (mJ)", "search µs",
     ]);
+    let mut audits: Vec<EvolutionAudit> = Vec::new();
     for platform in Platform::all() {
         let mut engine = AdaSpring::new(manifest, task_name, &platform, false)?;
         let task = engine.task().clone();
@@ -50,6 +52,7 @@ fn main() -> Result<()> {
                 (cache_mb * 1024.0 * 1024.0) as u64,
             );
             let evo = engine.evolve(&c)?;
+            audits.push(evo.audit);
             let e = &evo.search.evaluation;
             out.row(vec![
                 platform.name.to_string(),
@@ -68,5 +71,8 @@ fn main() -> Result<()> {
     }
     bench.print_table(&out);
     adaspring::util::write_json_out(&bench.args, &out.to_json())?;
+    if let Some(path) = bench.trace_out() {
+        obs::write_audit_trace(path, task_name, &audits)?;
+    }
     Ok(())
 }

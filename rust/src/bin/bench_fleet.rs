@@ -20,26 +20,32 @@
 //! the JSON (report or sweep array) to a file — the CI bench-smoke step
 //! uploads it as a workflow artifact.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 use adaspring::coordinator::Manifest;
-use adaspring::fleet::{run_fleet, FleetConfig, FleetReport};
+use adaspring::fleet::{run_fleet, run_pipeline, FleetConfig, FleetReport, PipelineConfig};
 use adaspring::metrics::Table;
+use adaspring::obs::{TraceConfig, ALL_STAGES};
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
 use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "json-out", "sweep", "csv",
+    "load", "check-floor", "json-out", "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv"];
 
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--feedback off] [--load X] [--json-out PATH] [--sweep] [--csv]\n\
-                     (--feedback on needs the dispatch path: bench_dispatch / bench_feedback)";
+                     [--feedback off] [--load X] [--trace-out PATH] [--check-floor PATH] \
+                     [--json-out PATH] [--sweep] [--csv]\n\
+                     (--feedback on needs the dispatch path: bench_dispatch / bench_feedback; \
+                     --check-floor runs the traced-vs-untraced overhead check against \
+                     rust/obs_floor.json)";
 
 fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())
@@ -49,7 +55,13 @@ fn main() -> Result<()> {
     let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
     if bench.args.flag("sweep") {
+        if bench.trace_out().is_some() {
+            bail!("--trace-out traces a single run — drop --sweep");
+        }
         return sweep(&bench);
+    }
+    if let Some(path) = bench.args.get("check-floor") {
+        return check_obs_floor(&bench, path);
     }
 
     let cfg = config_from(&bench.args)?;
@@ -61,11 +73,26 @@ fn main() -> Result<()> {
         cfg.task,
         cfg.seed
     );
-    let report = run_fleet(&bench.manifest, &cfg)?;
+    let report = run_traced(&bench, &cfg)?;
     print_summary(&report);
     bench.print_table(&report.archetype_table());
     bench.emit_json("fleet", &report.to_json())?;
     Ok(())
+}
+
+/// The direct fleet run, through the flight recorder when `--trace-out`
+/// is set (the untraced path stays the plain [`run_fleet`] wrapper).
+fn run_traced(bench: &Bench, cfg: &FleetConfig) -> Result<FleetReport> {
+    match bench.trace_out() {
+        Some(path) => {
+            if cfg.feedback.enabled {
+                bail!("the feedback loop needs the dispatch path (bench_dispatch / bench_feedback)");
+            }
+            let pcfg = PipelineConfig::direct(cfg).with_trace(Some(TraceConfig::new(path)));
+            run_pipeline(&bench.manifest, &pcfg)
+        }
+        None => run_fleet(&bench.manifest, cfg),
+    }
 }
 
 fn print_summary(r: &FleetReport) {
@@ -128,5 +155,138 @@ fn sweep(bench: &Bench) -> Result<()> {
     }
     bench.print_table(&table);
     bench.emit_json("sweep", &Json::Arr(records))?;
+    Ok(())
+}
+
+/// The §12 overhead gate (CI: `--check-floor rust/obs_floor.json`):
+/// best-of-3 wall-clock with tracing off vs on must stay within the
+/// committed overhead fraction plus a fixed timer-noise slack; every
+/// trace line must re-parse through [`Json::parse`]; spans must cover
+/// all five pipeline stages; and, when the ring evicted nothing, one
+/// audit must have landed per evolution.  Emits the measurements as the
+/// CI `BENCH_obs.json` artifact via `--json-out`.
+fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
+    let cfg = config_from(&bench.args)?;
+    if cfg.feedback.enabled {
+        bail!("the obs floor check runs the direct preset — drop --feedback");
+    }
+    let floor = Bench::read_floor(floor_path)?;
+    let max_frac = floor.get("max_overhead_fraction")?.as_f64()?;
+    let slack_ms = floor.get("slack_ms")?.as_f64()?;
+    let trace_path = bench.trace_out().map(str::to_string).unwrap_or_else(|| {
+        std::env::temp_dir().join("bench_fleet_obs.ndjson").to_string_lossy().into_owned()
+    });
+
+    println!(
+        "# Trace overhead check — {} devices x {:.1} h over {} shards, best of 3 per mode\n",
+        cfg.devices,
+        cfg.duration_s / 3600.0,
+        cfg.shards
+    );
+    let mut off_best = f64::INFINITY;
+    let mut on_best = f64::INFINITY;
+    let mut traced: Option<FleetReport> = None;
+    for _ in 0..3 {
+        // Interleaved off/on runs, so machine drift (thermal, noisy
+        // neighbors) debits both sides equally.
+        let r_off = run_fleet(&bench.manifest, &cfg)?;
+        off_best = off_best.min(r_off.wall_ms);
+        let pcfg = PipelineConfig::direct(&cfg)
+            .with_trace(Some(TraceConfig::new(trace_path.as_str())));
+        let r_on = run_pipeline(&bench.manifest, &pcfg)?;
+        on_best = on_best.min(r_on.wall_ms);
+        traced = Some(r_on);
+    }
+    let traced = traced.expect("three traced runs completed");
+
+    // Schema sanity on the last trace file.
+    let text = std::fs::read_to_string(&trace_path)?;
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut stage_set: Vec<String> = Vec::new();
+    let mut evicted = 0u64;
+    let mut lines = 0u64;
+    for line in text.lines() {
+        let j = Json::parse(line)?;
+        lines += 1;
+        let ev = j.get("ev")?.as_str()?.to_string();
+        match ev.as_str() {
+            "span" => {
+                let stage = j.get("stage")?.as_str()?.to_string();
+                if !stage_set.contains(&stage) {
+                    stage_set.push(stage);
+                }
+            }
+            "end" => evicted = j.get("evicted")?.as_u64()?,
+            _ => {}
+        }
+        *kinds.entry(ev).or_insert(0) += 1;
+    }
+    let count = |k: &str| kinds.get(k).copied().unwrap_or(0);
+    let audits = count("audit");
+
+    let mut failures: Vec<String> = Vec::new();
+    if count("meta") != 1 || count("end") != 1 {
+        failures.push(format!(
+            "trace framing broken: {} meta / {} end lines (want exactly 1 each)",
+            count("meta"),
+            count("end")
+        ));
+    }
+    for s in ALL_STAGES {
+        if !stage_set.iter().any(|n| n == s.name()) {
+            failures.push(format!("no span covers the {} stage", s.name()));
+        }
+    }
+    if evicted == 0 && audits != traced.evolutions as u64 {
+        failures.push(format!(
+            "{} audit lines for {} evolutions with nothing evicted",
+            audits, traced.evolutions
+        ));
+    }
+    let ceiling_ms = off_best * (1.0 + max_frac) + slack_ms;
+    if on_best > ceiling_ms {
+        failures.push(format!(
+            "traced best {on_best:.1} ms above ceiling {ceiling_ms:.1} ms \
+             (untraced best {off_best:.1} ms + {:.0}% + {slack_ms} ms slack)",
+            max_frac * 100.0
+        ));
+    }
+
+    let overhead = (on_best - off_best).max(0.0) / off_best.max(1e-9);
+    let mut m = BTreeMap::new();
+    m.insert("off_best_ms".into(), Json::Num(off_best));
+    m.insert("on_best_ms".into(), Json::Num(on_best));
+    m.insert("overhead_fraction".into(), Json::Num(overhead));
+    m.insert("max_overhead_fraction".into(), Json::Num(max_frac));
+    m.insert("slack_ms".into(), Json::Num(slack_ms));
+    m.insert("ceiling_ms".into(), Json::Num(ceiling_ms));
+    m.insert("trace_lines".into(), Json::Num(lines as f64));
+    m.insert("spans".into(), Json::Num(count("span") as f64));
+    m.insert("audits".into(), Json::Num(audits as f64));
+    m.insert("anomalies".into(), Json::Num(count("anomaly") as f64));
+    m.insert("evicted".into(), Json::Num(evicted as f64));
+    m.insert("evolutions".into(), Json::Num(traced.evolutions as f64));
+    m.insert(
+        "stages".into(),
+        Json::Arr(stage_set.iter().map(|s| Json::Str(s.clone())).collect()),
+    );
+    bench.emit_json("obs", &Json::Obj(m))?;
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "floor check ok: untraced best {off_best:.1} ms, traced best {on_best:.1} ms \
+         (overhead {:.1}% <= {:.0}% + {slack_ms} ms slack); {lines} trace lines parse, \
+         {} spans over {} stages, {audits} audits for {} evolutions",
+        overhead * 100.0,
+        max_frac * 100.0,
+        count("span"),
+        stage_set.len(),
+        traced.evolutions
+    );
     Ok(())
 }

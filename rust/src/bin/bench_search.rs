@@ -35,8 +35,11 @@ use adaspring::coordinator::costmodel::CostModel;
 use adaspring::coordinator::eval::{Constraints, Evaluator};
 use adaspring::coordinator::search::{Mutator, Runtime3C};
 use adaspring::coordinator::Manifest;
-use adaspring::fleet::{run_fleet, FleetConfig, FleetReport, PlanMode};
+use adaspring::fleet::{
+    run_fleet, run_pipeline, FleetConfig, FleetReport, PipelineConfig, PlanMode,
+};
 use adaspring::metrics::{Series, Table};
+use adaspring::obs::TraceConfig;
 use adaspring::platform::Platform;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
@@ -51,7 +54,7 @@ const BOOLEAN_FLAGS: &[&str] = &["full-eval", "csv"];
 
 const USAGE: &str = "usage: bench_search [--iters N] [--task NAME] [--manifest PATH] \
                      [--devices N] [--shards N] [--hours H] [--seed N] [--full-eval] \
-                     [--check-floor PATH] [--json-out PATH] [--csv]";
+                     [--check-floor PATH] [--trace-out PATH] [--json-out PATH] [--csv]";
 
 /// Battery moments of the context grid (paper Fig. 8 band + low tail).
 const BATTERY_MOMENTS: [f64; 5] = [0.9, 0.7, 0.5, 0.3, 0.15];
@@ -167,7 +170,7 @@ fn main() -> Result<()> {
     }
 
     // Part 2: fleet plan-cache sweep (Shared vs the Banded control).
-    let plan_json = plan_sweep(args, manifest, &task_name)?;
+    let plan_json = plan_sweep(args, manifest, &task_name, bench.trace_out())?;
 
     let mut root = BTreeMap::new();
     root.insert("task".into(), Json::Str(task_name.clone()));
@@ -210,8 +213,15 @@ fn measure(
 }
 
 /// Run the fleet under Banded (control) and Shared plan modes; report
-/// the hit rate and whether per-device results are unchanged.
-fn plan_sweep(args: &Args, manifest: &Manifest, task_name: &str) -> Result<Json> {
+/// the hit rate and whether per-device results are unchanged.  With
+/// `--trace-out` the shared run carries the flight recorder — its audit
+/// lines are where the hit/miss/stale dispositions show up.
+fn plan_sweep(
+    args: &Args,
+    manifest: &Manifest,
+    task_name: &str,
+    trace_out: Option<&str>,
+) -> Result<Json> {
     let base = FleetConfig {
         devices: args.get_usize("devices", 36),
         shards: args.get_usize("shards", 4),
@@ -229,7 +239,15 @@ fn plan_sweep(args: &Args, manifest: &Manifest, task_name: &str) -> Result<Json>
         base.shards
     );
     let banded = run_fleet(manifest, &base)?;
-    let shared = run_fleet(manifest, &FleetConfig { plan: PlanMode::Shared, ..base.clone() })?;
+    let shared_cfg = FleetConfig { plan: PlanMode::Shared, ..base.clone() };
+    let shared = match trace_out {
+        Some(path) => {
+            let pcfg =
+                PipelineConfig::direct(&shared_cfg).with_trace(Some(TraceConfig::new(path)));
+            run_pipeline(manifest, &pcfg)?
+        }
+        None => run_fleet(manifest, &shared_cfg)?,
+    };
     let parity = reports_match(&banded, &shared);
 
     let stats = shared.plan.unwrap_or_default();

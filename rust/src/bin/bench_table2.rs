@@ -20,6 +20,7 @@ use adaspring::coordinator::baselines::table2_rows;
 use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
 use adaspring::metrics::{f1, f2, pct, Table};
+use adaspring::obs::{self, EvolutionAudit};
 use adaspring::platform::Platform;
 use adaspring::util::Bench;
 
@@ -33,8 +34,9 @@ fn main() -> Result<()> {
     let default_task = bench.default_task("d1")?;
     let task_name = bench.args.get_or("task", &default_task);
     let platform = Platform::raspberry_pi_4b();
-    let engine = AdaSpring::new(&bench.manifest, task_name, &platform, false)?;
-    let task = engine.task();
+    let mut engine = AdaSpring::new(&bench.manifest, task_name, &platform, false)?;
+    let task = engine.task().clone();
+    let task = &task;
 
     // "We test the average DNN accuracy at three dynamic moments" — three
     // battery/cache moments, averaged.
@@ -49,6 +51,7 @@ fn main() -> Result<()> {
 
     // Average the baseline rows over the three moments.
     let mut all_rows: Vec<Vec<adaspring::coordinator::baselines::BaselineRow>> = Vec::new();
+    let mut audits: Vec<EvolutionAudit> = Vec::new();
     for (battery, cache_mb) in moments {
         let c = Constraints::from_battery(
             battery,
@@ -56,6 +59,12 @@ fn main() -> Result<()> {
             task.latency_budget_ms,
             (cache_mb * 1024.0 * 1024.0) as u64,
         );
+        if bench.trace_out().is_some() {
+            // The baseline table evaluates AdaSpring through the
+            // evaluator alone; run the engine per moment so the trace
+            // carries the decision trail the table summarizes.
+            audits.push(engine.evolve(&c)?.audit);
+        }
         all_rows.push(table2_rows(task, &engine.evaluator, &c));
     }
 
@@ -108,5 +117,8 @@ fn main() -> Result<()> {
         worst_hand_e / ours.energy_mj
     );
     adaspring::util::write_json_out(&bench.args, &out.to_json())?;
+    if let Some(path) = bench.trace_out() {
+        obs::write_audit_trace(path, task_name, &audits)?;
+    }
     Ok(())
 }

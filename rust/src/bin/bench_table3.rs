@@ -14,6 +14,7 @@ use adaspring::coordinator::engine::AdaSpring;
 use adaspring::coordinator::eval::Constraints;
 use adaspring::coordinator::{CompressionConfig, Op};
 use adaspring::metrics::{f1, Table};
+use adaspring::obs::{self, EvolutionAudit};
 use adaspring::platform::Platform;
 use adaspring::util::Bench;
 
@@ -32,6 +33,7 @@ fn main() -> Result<()> {
     ]);
     let mut names: Vec<_> = manifest.tasks.keys().cloned().collect();
     names.sort();
+    let mut audits: Vec<EvolutionAudit> = Vec::new();
     for name in &names {
         let mut engine = AdaSpring::new(manifest, name, &platform, false)?;
         let task = engine.task().clone();
@@ -42,6 +44,7 @@ fn main() -> Result<()> {
             2 << 20,
         );
         let evo = engine.evolve(&c)?;
+        audits.push(evo.audit);
         let ours = &evo.search.evaluation;
 
         // MobileNet anchor: depthwise-separable ≈ uniform SVD-factorized
@@ -74,5 +77,8 @@ fn main() -> Result<()> {
         );
     }
     adaspring::util::write_json_out(&bench.args, &out.to_json())?;
+    if let Some(path) = bench.trace_out() {
+        obs::write_audit_trace(path, "table3:all-tasks", &audits)?;
+    }
     Ok(())
 }

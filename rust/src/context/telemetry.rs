@@ -27,7 +27,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 
 /// Utilization at which the pre-saturation wait formula hands over to the
 /// backlog drain estimate (ρ → 1 blows the closed form up).
@@ -132,6 +132,23 @@ impl LoadTelemetry {
         m.insert("utilization".into(), Json::Num(self.utilization()));
         m.insert("gd1_wait_ms".into(), Json::Num(self.gd1_wait_s() * 1e3));
         Json::Obj(m)
+    }
+
+    /// Stream the same object [`to_json`](Self::to_json) builds through
+    /// the allocation-free [`JsonWriter`] (DESIGN.md §12-1).  Keys are
+    /// emitted in sorted order, so the bytes match the tree path's
+    /// `Display` exactly — pinned by a parity test in `tests/obs.rs`.
+    pub fn write_json<W: std::fmt::Write>(&self, w: &mut JsonWriter<'_, W>) -> std::fmt::Result {
+        w.begin_obj()?;
+        w.field_num("arrival_rate_per_s", self.arrival_rate_per_s)?;
+        w.field_num("batch_occupancy", self.batch_occupancy)?;
+        w.field_num("gd1_wait_ms", self.gd1_wait_s() * 1e3)?;
+        w.field_num("queue_depth", self.queue_depth)?;
+        w.field_num("service_rate_per_s", self.service_rate_per_s)?;
+        w.field_num("shed_rate", self.shed_rate)?;
+        w.field_num("utilization", self.utilization())?;
+        w.field_num("windows", self.windows as f64)?;
+        w.end_obj()
     }
 }
 
@@ -431,5 +448,21 @@ mod tests {
             let v = parsed.get(k).unwrap().as_f64().unwrap();
             assert!(v.is_finite(), "{k} must be finite");
         }
+    }
+
+    #[test]
+    fn streamed_frame_matches_tree_bytes() {
+        let mut f = LoadTelemetry::prior(5.0, 40.0);
+        f.shed_rate = 0.0625;
+        f.queue_depth = 3.5;
+        f.batch_occupancy = 0.75;
+        f.windows = 12;
+        let mut streamed = String::new();
+        {
+            let mut w = JsonWriter::new(&mut streamed);
+            f.write_json(&mut w).unwrap();
+            assert!(w.is_complete());
+        }
+        assert_eq!(streamed, f.to_json().to_string());
     }
 }

@@ -54,6 +54,9 @@ pub struct Trigger {
     /// Load-spike arm (feedback loop only).
     spike: Option<LoadSpikeConfig>,
     last_spike_t: Option<f64>,
+    /// Which arm caused the most recent fire (audit trail, §12-3);
+    /// `""` until the first fire.
+    last_arm: &'static str,
 }
 
 impl Trigger {
@@ -67,6 +70,7 @@ impl Trigger {
             fired_ema: None,
             spike: None,
             last_spike_t: None,
+            last_arm: "",
         }
     }
 
@@ -88,11 +92,12 @@ impl Trigger {
     /// internal reference state.
     pub fn should_fire(&mut self, snap: &ContextSnapshot) -> bool {
         self.update_ema(snap);
-        let fire = self.wants_fire(snap);
-        if fire {
+        let arm = self.firing_arm(snap);
+        if let Some(arm) = arm {
+            self.last_arm = arm;
             self.note_fire(snap);
         }
-        fire
+        arm.is_some()
     }
 
     /// Frame-aware variant: the paper arms on the snapshot plus the
@@ -101,37 +106,52 @@ impl Trigger {
     /// [`should_fire`](Self::should_fire).
     pub fn should_fire_frame(&mut self, frame: &ContextFrame) -> bool {
         self.update_ema(&frame.snapshot);
-        let mut fire = self.wants_fire(&frame.snapshot);
-        if !fire {
+        let mut arm = self.firing_arm(&frame.snapshot);
+        if arm.is_none() {
             if let (Some(spike), Some(load)) = (self.spike, frame.load.as_ref()) {
                 let cooled = match self.last_spike_t {
                     None => true,
                     Some(t0) => frame.snapshot.t_seconds - t0 >= spike.cooldown_s,
                 };
                 if cooled && spike.spiking(load) {
-                    fire = true;
+                    arm = Some("spike");
                     self.last_spike_t = Some(frame.snapshot.t_seconds);
                 }
             }
         }
-        if fire {
+        if let Some(arm) = arm {
+            self.last_arm = arm;
             self.note_fire(&frame.snapshot);
         }
-        fire
+        arm.is_some()
     }
 
-    /// Pure policy evaluation against the current references.
-    fn wants_fire(&self, snap: &ContextSnapshot) -> bool {
+    /// The arm that caused the most recent fire — `startup`, `periodic`,
+    /// `change`, or `spike` (`""` before any fire).  Feeds the evolution
+    /// audit trail.
+    pub fn last_fired_arm(&self) -> &'static str {
+        self.last_arm
+    }
+
+    /// Pure policy evaluation against the current references; names the
+    /// arm that would fire (`None` = stay put).
+    fn firing_arm(&self, snap: &ContextSnapshot) -> Option<&'static str> {
         match (self.last_fire_t, self.last_snapshot.as_ref()) {
-            (None, _) => true, // always evolve once at startup
+            (None, _) => Some("startup"), // always evolve once at startup
             (Some(t0), prev) => match self.policy {
-                TriggerPolicy::Periodic { period_s } => snap.t_seconds - t0 >= period_s,
-                TriggerPolicy::OnChange { battery_delta, cache_delta_bytes } => {
-                    self.drifted(prev, snap, battery_delta, cache_delta_bytes)
+                TriggerPolicy::Periodic { period_s } => {
+                    (snap.t_seconds - t0 >= period_s).then_some("periodic")
                 }
+                TriggerPolicy::OnChange { battery_delta, cache_delta_bytes } => self
+                    .drifted(prev, snap, battery_delta, cache_delta_bytes)
+                    .then_some("change"),
                 TriggerPolicy::Hybrid { period_s, battery_delta, cache_delta_bytes } => {
-                    snap.t_seconds - t0 >= period_s
-                        || self.drifted(prev, snap, battery_delta, cache_delta_bytes)
+                    if snap.t_seconds - t0 >= period_s {
+                        Some("periodic")
+                    } else {
+                        self.drifted(prev, snap, battery_delta, cache_delta_bytes)
+                            .then_some("change")
+                    }
                 }
             },
         }
@@ -287,5 +307,35 @@ mod tests {
         assert!(tr.should_fire_frame(&frame(240.0, Some(overload))), "cooldown elapsed");
         let calm = LoadTelemetry::prior(10.0, 100.0);
         assert!(!tr.should_fire_frame(&frame(400.0, Some(calm))), "calm load never spikes");
+    }
+
+    #[test]
+    fn fired_arm_names_the_cause() {
+        let spike =
+            LoadSpikeConfig { util_threshold: 1.0, shed_threshold: 0.05, cooldown_s: 120.0 };
+        let mut tr = Trigger::new(TriggerPolicy::Hybrid {
+            period_s: 7200.0,
+            battery_delta: 0.1,
+            cache_delta_bytes: u64::MAX,
+        })
+        .with_load_spike(spike);
+        assert_eq!(tr.last_fired_arm(), "", "no fire yet");
+        let frame = |t: f64, battery: f64, load: Option<LoadTelemetry>| {
+            let mut f = ContextFrame::from_snapshot(&snap(t, battery, 2 << 20));
+            f.load = load;
+            f
+        };
+        assert!(tr.should_fire_frame(&frame(0.0, 0.9, None)));
+        assert_eq!(tr.last_fired_arm(), "startup");
+        assert!(tr.should_fire_frame(&frame(60.0, 0.7, None)), "battery moved 0.2");
+        assert_eq!(tr.last_fired_arm(), "change");
+        let mut overload = LoadTelemetry::prior(200.0, 100.0);
+        overload.shed_rate = 0.3;
+        assert!(tr.should_fire_frame(&frame(120.0, 0.7, Some(overload))));
+        assert_eq!(tr.last_fired_arm(), "spike");
+        assert!(tr.should_fire_frame(&frame(7400.0, 0.7, None)), "periodic floor");
+        assert_eq!(tr.last_fired_arm(), "periodic");
+        assert!(!tr.should_fire_frame(&frame(7500.0, 0.7, None)));
+        assert_eq!(tr.last_fired_arm(), "periodic", "non-fires keep the last arm");
     }
 }

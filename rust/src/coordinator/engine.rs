@@ -18,10 +18,11 @@ use super::config::CompressionConfig;
 use super::costmodel::CostModel;
 use super::eval::{Constraints, Evaluator};
 use super::manifest::{Manifest, TaskArtifacts, Variant};
-use super::plancache::{ContextQuantizer, PlanCache, PlanTtl};
+use super::plancache::{outcome_label, ContextQuantizer, PlanCache, PlanTtl};
 use super::search::{Mutator, Runtime3C, Runtime3CParams, SearchResult};
 use crate::context::feedback::{ContextFrame, FeedbackConfig};
 use crate::context::ContextSnapshot;
+use crate::obs::EvolutionAudit;
 use crate::platform::Platform;
 use crate::runtime::{CacheOutcome, ExecutableCache, Executor, LoadedVariant};
 
@@ -40,6 +41,12 @@ pub struct Evolution {
     /// How the shared plan cache resolved this evolution's search —
     /// `None` when the engine runs without a plan cache (DESIGN.md §9-2).
     pub plan_outcome: Option<CacheOutcome>,
+    /// Decision audit for the trace plane (DESIGN.md §12-3): always
+    /// populated — the fields are byproducts of the evolution itself —
+    /// but only *emitted* when a tracer is attached.  The engine leaves
+    /// `device`/`t_s`/`arm` at their defaults; the serving layer that
+    /// knows the trigger patches them in.
+    pub audit: EvolutionAudit,
 }
 
 impl Evolution {
@@ -209,6 +216,9 @@ impl AdaSpring {
     /// [`evolve`](Self::evolve) at the paper-rule constraints.
     pub fn evolve_frame(&mut self, frame: &ContextFrame, fb: &FeedbackConfig) -> Result<Evolution> {
         let constraints = self.constraints_for_frame(frame, fb);
+        // Audit baseline: the paper-rule (feedback-off) derivation from
+        // the same frame, so final − base *is* the funnel adjustment.
+        let base = frame.constraints(self.task.acc_loss_threshold, self.task.latency_budget_ms);
         let load_band = match (&self.quantizer, fb.enabled) {
             (Some(q), true) => q.load_band(frame.utilization()),
             _ => 0,
@@ -216,14 +226,16 @@ impl AdaSpring {
         let age = self
             .plan_ttl
             .map(|ttl| (frame.snapshot.t_seconds, ttl.ttl_s(frame.drain_per_hour)));
-        self.evolve_inner(&constraints, load_band, age)
+        self.evolve_inner(&constraints, load_band, age, (base.lambda2, base.latency_budget_ms))
     }
 
     /// One full evolution: search (consulting the plan cache when one is
     /// attached), snap to the nearest artifact, swap the active
     /// executable (compiling lazily on first use).
     pub fn evolve(&mut self, constraints: &Constraints) -> Result<Evolution> {
-        self.evolve_inner(constraints, 0, None)
+        // No feedback funnel on this path: the audit's before/after
+        // constraint values coincide.
+        self.evolve_inner(constraints, 0, None, (constraints.lambda2, constraints.latency_budget_ms))
     }
 
     fn evolve_inner(
@@ -231,6 +243,7 @@ impl AdaSpring {
         constraints: &Constraints,
         load_band: u32,
         age: Option<(f64, f64)>,
+        (lambda2_base, budget_base_ms): (f64, f64),
     ) -> Result<Evolution> {
         let t0 = Instant::now();
         let (search, plan_outcome) = self.run_search(constraints, load_band, age);
@@ -243,13 +256,30 @@ impl AdaSpring {
             self.active = Some(loaded);
         }
         self.active_variant = Some(variant_id);
+        let evolution_us = t0.elapsed().as_micros();
+        let audit = EvolutionAudit {
+            device: 0,
+            t_s: 0.0,
+            arm: "",
+            plan: outcome_label(plan_outcome),
+            candidates: search.candidates_evaluated as u64,
+            load_band,
+            variant: variant_id as u64,
+            lambda2_base,
+            lambda2_final: constraints.lambda2,
+            budget_base_ms,
+            budget_final_ms: constraints.latency_budget_ms,
+            search_us: search.search_time_us as f64,
+            evolution_us: evolution_us as f64,
+        };
         Ok(Evolution {
             search,
             variant_id,
             snap_distance,
-            evolution_us: t0.elapsed().as_micros(),
+            evolution_us,
             deployed_accuracy,
             plan_outcome,
+            audit,
         })
     }
 

@@ -84,7 +84,8 @@ impl Manifest {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading manifest {}", path.display()))?;
-        let j = Json::parse(&text).context("parsing manifest")?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
         let root = path
             .parent()
             .ok_or_else(|| anyhow!("manifest has no parent dir"))?

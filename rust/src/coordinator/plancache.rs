@@ -92,6 +92,18 @@ impl PlanSignature {
     }
 }
 
+/// Stable wire name of a plan-cache disposition for the evolution audit
+/// trail (DESIGN.md §12-3); `None` — an engine with no plan cache —
+/// reads `"none"`.
+pub fn outcome_label(outcome: Option<CacheOutcome>) -> &'static str {
+    match outcome {
+        Some(CacheOutcome::Hit) => "hit",
+        Some(CacheOutcome::Miss) => "miss",
+        Some(CacheOutcome::Stale) => "stale",
+        None => "none",
+    }
+}
+
 /// Maps exact Eq.-1 constraints onto a coarse band signature and back to
 /// the band's representative constraints.  Engines in banded mode search
 /// *at the representative*, so every context inside a band shares one

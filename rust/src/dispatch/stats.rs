@@ -37,6 +37,13 @@ pub struct DispatchReport {
     /// Per-worker stepping time (wall ms) — the load-balance view the
     /// stealing tests assert on.
     pub worker_busy_ms: Vec<f64>,
+    /// Per-worker breakdown (DESIGN.md §12-5): parallel vectors indexed
+    /// by worker, surfaced as the `"steals"."per_worker"` JSON array.
+    /// Empty vectors (pre-§12 callers) omit nothing — the array then
+    /// carries only each worker's `busy_ms`.
+    pub worker_steps: Vec<u64>,
+    pub worker_steals: Vec<u64>,
+    pub worker_sessions_stolen: Vec<u64>,
 }
 
 impl DispatchReport {
@@ -51,6 +58,9 @@ impl DispatchReport {
         steals: u64,
         sessions_stolen: u64,
         worker_busy_ms: Vec<f64>,
+        worker_steps: Vec<u64>,
+        worker_steals: Vec<u64>,
+        worker_sessions_stolen: Vec<u64>,
     ) -> DispatchReport {
         DispatchReport {
             workers,
@@ -65,6 +75,9 @@ impl DispatchReport {
             steals,
             sessions_stolen,
             worker_busy_ms,
+            worker_steps,
+            worker_steals,
+            worker_sessions_stolen,
         }
     }
 
@@ -121,6 +134,26 @@ impl DispatchReport {
             "worker_busy_ms".into(),
             Json::Arr(self.worker_busy_ms.iter().map(|&b| num(b)).collect()),
         );
+        let per_worker = self
+            .worker_busy_ms
+            .iter()
+            .enumerate()
+            .map(|(i, &busy)| {
+                let mut m = BTreeMap::new();
+                m.insert("busy_ms".into(), num(busy));
+                if let Some(&s) = self.worker_steps.get(i) {
+                    m.insert("steps".into(), num(s as f64));
+                }
+                if let Some(&s) = self.worker_steals.get(i) {
+                    m.insert("steals".into(), num(s as f64));
+                }
+                if let Some(&s) = self.worker_sessions_stolen.get(i) {
+                    m.insert("sessions_stolen".into(), num(s as f64));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        steals.insert("per_worker".into(), Json::Arr(per_worker));
 
         let mut root = BTreeMap::new();
         root.insert("workers".into(), num(self.workers as f64));
@@ -176,6 +209,9 @@ mod tests {
             0,
             0,
             vec![],
+            vec![],
+            vec![],
+            vec![],
         );
         assert_eq!(r.max_busy_ms(), 0.0);
         let json = r.to_json().to_string();
@@ -212,6 +248,9 @@ mod tests {
             3,
             7,
             vec![1.0, 2.0],
+            vec![40, 60],
+            vec![3, 0],
+            vec![7, 0],
         );
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
         let hist = parsed.get("batches").unwrap().get("histogram").unwrap().as_arr().unwrap();
@@ -222,5 +261,12 @@ mod tests {
             parsed.get("steals").unwrap().get("worker_busy_ms").unwrap().as_arr().unwrap().len(),
             2
         );
+        let per_worker =
+            parsed.get("steals").unwrap().get("per_worker").unwrap().as_arr().unwrap();
+        assert_eq!(per_worker.len(), 2, "one breakdown row per worker");
+        assert_eq!(per_worker[0].get("steps").unwrap().as_usize().unwrap(), 40);
+        assert_eq!(per_worker[0].get("steals").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(per_worker[0].get("sessions_stolen").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(per_worker[1].get("busy_ms").unwrap().as_f64().unwrap(), 2.0);
     }
 }

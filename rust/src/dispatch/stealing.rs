@@ -65,20 +65,23 @@ pub struct StealPool {
     /// Sessions not yet run to completion (fleet-wide).
     remaining: AtomicUsize,
     abort: AtomicBool,
-    steals: AtomicU64,
-    sessions_stolen: AtomicU64,
+    /// Per-worker steal counters, indexed by the *thief* (DESIGN.md
+    /// §12-5: the dispatch JSON's per-worker breakdown).
+    steals: Vec<AtomicU64>,
+    sessions_stolen: Vec<AtomicU64>,
 }
 
 impl StealPool {
     /// A pool for `workers` shard workers expecting `total_sessions`
     /// sessions fleet-wide.
     pub fn new(workers: usize, total_sessions: usize) -> StealPool {
+        let workers = workers.max(1);
         StealPool {
-            queues: (0..workers.max(1)).map(|_| Mutex::new(BinaryHeap::new())).collect(),
+            queues: (0..workers).map(|_| Mutex::new(BinaryHeap::new())).collect(),
             remaining: AtomicUsize::new(total_sessions),
             abort: AtomicBool::new(false),
-            steals: AtomicU64::new(0),
-            sessions_stolen: AtomicU64::new(0),
+            steals: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            sessions_stolen: (0..workers).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -103,29 +106,42 @@ impl StealPool {
         self.abort.store(true, Ordering::Relaxed);
     }
 
-    /// Number of successful steal operations.
+    /// Number of successful steal operations (fleet-wide).
     pub fn steals(&self) -> u64 {
-        self.steals.load(Ordering::Relaxed)
+        self.steals.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Number of sessions moved by steals.
+    /// Number of sessions moved by steals (fleet-wide).
     pub fn sessions_stolen(&self) -> u64 {
-        self.sessions_stolen.load(Ordering::Relaxed)
+        self.sessions_stolen.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Successful steals per worker, indexed by the thief.
+    pub fn worker_steals(&self) -> Vec<u64> {
+        self.steals.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Sessions stolen per worker, indexed by the thief.
+    pub fn worker_sessions_stolen(&self) -> Vec<u64> {
+        self.sessions_stolen.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Worker `w`'s main loop: step own sessions in simulated-time order;
     /// when the local heap drains, either stop (`steal == false`, static
     /// partitioning) or steal from the most-loaded worker until the whole
-    /// fleet is done.  Returns the sessions this worker finished and its
-    /// busy time (wall milliseconds spent stepping).
+    /// fleet is done.  Returns the sessions this worker finished, its
+    /// busy time (wall milliseconds spent stepping), and how many
+    /// session steps it executed (the per-worker load breakdown the
+    /// dispatch JSON surfaces, DESIGN.md §12-5).
     pub fn drain(
         &self,
         w: usize,
         steal: bool,
         cache: &SimVariantCache,
-    ) -> Result<(Vec<Box<DeviceSession>>, f64)> {
+    ) -> Result<(Vec<Box<DeviceSession>>, f64, u64)> {
         let mut finished = Vec::new();
         let mut busy = Duration::ZERO;
+        let mut steps = 0u64;
         loop {
             if self.abort.load(Ordering::Relaxed) {
                 break;
@@ -136,6 +152,7 @@ impl StealPool {
                     let t0 = Instant::now();
                     let stepped = p.session.step(cache);
                     busy += t0.elapsed();
+                    steps += 1;
                     if let Err(e) = stepped {
                         self.set_abort();
                         return Err(e);
@@ -165,7 +182,7 @@ impl StealPool {
                 }
             }
         }
-        Ok((finished, busy.as_secs_f64() * 1e3))
+        Ok((finished, busy.as_secs_f64() * 1e3, steps))
     }
 
     /// Steal half the earliest-due sessions from the most-loaded worker
@@ -198,8 +215,8 @@ impl StealPool {
         if taken.is_empty() {
             return false;
         }
-        self.steals.fetch_add(1, Ordering::Relaxed);
-        self.sessions_stolen.fetch_add(taken.len() as u64, Ordering::Relaxed);
+        self.steals[w].fetch_add(1, Ordering::Relaxed);
+        self.sessions_stolen[w].fetch_add(taken.len() as u64, Ordering::Relaxed);
         let mut own = self.heap(w);
         for p in taken {
             own.push(p);
@@ -253,6 +270,13 @@ mod tests {
         assert_eq!(counts.iter().sum::<usize>(), 6, "every session finishes exactly once");
         assert!(pool.steals() >= 1, "thieves must have stolen from worker 0");
         assert!(pool.sessions_stolen() >= 1);
+        let per_worker = pool.worker_steals();
+        assert_eq!(per_worker.len(), 3, "one steal slot per worker");
+        assert_eq!(per_worker.iter().sum::<u64>(), pool.steals(), "totals are the per-worker sum");
+        assert_eq!(
+            pool.worker_sessions_stolen().iter().sum::<u64>(),
+            pool.sessions_stolen()
+        );
     }
 
     #[test]
@@ -285,7 +309,8 @@ mod tests {
         let pool = StealPool::new(1, 2);
         pool.seed(0, sessions(2, 0.0));
         let cache: SimVariantCache = ShardedCache::new(2);
-        let (finished, _busy) = pool.drain(0, false, &cache).unwrap();
+        let (finished, _busy, steps) = pool.drain(0, false, &cache).unwrap();
         assert_eq!(finished.len(), 2);
+        assert_eq!(steps, 2, "each done session costs exactly its terminal pop");
     }
 }

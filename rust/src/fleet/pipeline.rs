@@ -68,6 +68,7 @@ use crate::dispatch::{
     StealPool, StreamingAdmission,
 };
 use crate::metrics::Series;
+use crate::obs::{ShardTracer, Stage, StageSpan, TraceConfig, TraceEvent, TraceSink};
 use crate::runtime::ShardedCache;
 
 /// One slot choice per pipeline stage (DESIGN.md §11-1).
@@ -139,6 +140,10 @@ pub struct PipelineConfig {
     pub fleet: FleetConfig,
     pub dispatch: DispatchConfig,
     pub stages: StagePlan,
+    /// Flight-recorder tracing (DESIGN.md §12); `None` — the default on
+    /// every preset — takes zero extra timestamps and keeps every
+    /// report bit-identical to the untraced run.
+    pub trace: Option<TraceConfig>,
 }
 
 impl PipelineConfig {
@@ -148,6 +153,7 @@ impl PipelineConfig {
             fleet: fleet.clone(),
             dispatch: DispatchConfig::passthrough(),
             stages: StagePlan::direct(),
+            trace: None,
         }
     }
 
@@ -158,6 +164,7 @@ impl PipelineConfig {
             fleet: fleet.clone(),
             dispatch: dispatch.clone(),
             stages: StagePlan::dispatch(),
+            trace: None,
         }
     }
 
@@ -170,7 +177,16 @@ impl PipelineConfig {
             fleet: fleet.clone(),
             dispatch: dispatch.clone(),
             stages: StagePlan::feedback(),
+            trace: None,
         }
+    }
+
+    /// Attach (or detach) the flight-recorder sink — builder form of
+    /// setting [`PipelineConfig::trace`], the bench bins' `--trace-out`
+    /// wiring.
+    pub fn with_trace(mut self, trace: Option<TraceConfig>) -> PipelineConfig {
+        self.trace = trace;
+        self
     }
 
     /// Workers the run spawns: one per home shard, capped at the fleet
@@ -258,12 +274,17 @@ impl PipelineConfig {
 struct WorkerOutcome {
     finished: Vec<Box<DeviceSession>>,
     busy_ms: f64,
+    /// Session steps this worker executed (per-worker load breakdown,
+    /// DESIGN.md §12-5).
+    steps: u64,
     admission: AdmissionStats,
     wait_us: Series,
     /// Batches priced inside the worker (drain mode); the `Windowed`
     /// post-pass fills the fleet totals after the join instead.
     batches: BatchStats,
     telemetry: Option<WorkerTelemetry>,
+    /// Events this worker's flight-recorder ring evicted (0 untraced).
+    trace_evicted: u64,
 }
 
 /// The telemetry stage's per-worker rollup.
@@ -287,6 +308,25 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
     let plan_cache = cfg.make_plan_cache();
     let pool = (stages.execution == ExecutionMode::Pool)
         .then(|| StealPool::new(workers, cfg.devices));
+    // Trace plane (§12): create the shared sink and write the run
+    // header before any worker spawns, so a `meta` line leads every
+    // trace even if the run aborts mid-flight.
+    let sink = match &pcfg.trace {
+        Some(tc) => {
+            let s = TraceSink::create(&tc.path)?;
+            s.write(&TraceEvent::Meta {
+                task: cfg.task.clone(),
+                devices: cfg.devices as u64,
+                shards: cfg.shards as u64,
+                workers: workers as u64,
+                duration_s: cfg.duration_s,
+                seed: cfg.seed,
+                ring_capacity: tc.ring_capacity as u64,
+            })?;
+            Some(s)
+        }
+        None => None,
+    };
     let t0 = Instant::now();
 
     let outcomes: Vec<Result<WorkerOutcome>> = thread::scope(|scope| {
@@ -295,8 +335,9 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
             let cache = Arc::clone(&cache);
             let plan_cache = plan_cache.clone();
             let pool = pool.as_ref();
+            let sink = sink.as_ref();
             handles.push(scope.spawn(move || {
-                run_worker(manifest, pcfg, w, workers, pool, &cache, plan_cache.as_ref())
+                run_worker(manifest, pcfg, w, workers, pool, &cache, plan_cache.as_ref(), sink)
             }));
         }
         handles
@@ -310,6 +351,8 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
     let mut wait_us = Series::default();
     let mut batches = BatchStats::default();
     let mut busy_ms = vec![0.0f64; workers];
+    let mut worker_steps = vec![0u64; workers];
+    let mut trace_evicted = 0u64;
     let mut telemetry: Vec<WorkerTelemetry> = Vec::new();
     for (w, outcome) in outcomes.into_iter().enumerate() {
         let o = outcome?;
@@ -318,6 +361,8 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
         wait_us.extend_from(&o.wait_us);
         batches.merge(&o.batches);
         busy_ms[w] = o.busy_ms;
+        worker_steps[w] = o.steps;
+        trace_evicted += o.trace_evicted;
         telemetry.extend(o.telemetry);
     }
 
@@ -327,7 +372,8 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
     sessions.sort_by_key(|s| (s.home_shard, s.device_id));
 
     // Batching stage, `Windowed` flavor (§8-2): one post-pass per home
-    // shard over the contiguous sorted slice.
+    // shard over the contiguous sorted slice.  This runs after the
+    // worker join, so its spans go straight to the sink, shard by shard.
     if stages.batching == BatchingMode::Windowed {
         let mut i = 0;
         while i < sessions.len() {
@@ -336,7 +382,20 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
             while j < sessions.len() && sessions[j].home_shard == shard {
                 j += 1;
             }
-            batches.merge(&assemble_batches(dcfg, &mut sessions[i..j]));
+            let tb = sink.as_ref().map(|_| Instant::now());
+            let stats = assemble_batches(dcfg, &mut sessions[i..j]);
+            if let Some(s) = &sink {
+                s.write(&TraceEvent::Span(StageSpan {
+                    shard: shard as u32,
+                    window: 0,
+                    t_s: 0.0,
+                    stage: Stage::Batching,
+                    wall_us: us_since(tb),
+                    items: stats.served,
+                    aux: stats.batches,
+                }))?;
+            }
+            batches.merge(&stats);
             i = j;
         }
     }
@@ -355,7 +414,11 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
 
     if stages.uses_dispatch() {
         let (steals, sessions_stolen) =
-            pool.map(|p| (p.steals(), p.sessions_stolen())).unwrap_or((0, 0));
+            pool.as_ref().map(|p| (p.steals(), p.sessions_stolen())).unwrap_or((0, 0));
+        let (worker_steals, worker_stolen) = pool
+            .as_ref()
+            .map(|p| (p.worker_steals(), p.worker_sessions_stolen()))
+            .unwrap_or_else(|| (vec![0; workers], vec![0; workers]));
         // The dispatch block reports what actually ran: the windowed
         // loop never steals, and only the windowed loop consults the
         // adaptive-batch ramp (a non-windowed run with the ramp
@@ -375,6 +438,9 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
             steals,
             sessions_stolen,
             busy_ms,
+            worker_steps,
+            worker_steals,
+            worker_stolen,
         ));
     }
 
@@ -408,17 +474,31 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
             per_archetype,
         });
     }
+
+    // Trace footer: the sink's own event totals plus the workers'
+    // summed ring evictions, then flush.
+    if let Some(sink) = sink {
+        sink.finish(wall_ms, trace_evicted)?;
+    }
     Ok(report)
+}
+
+/// Elapsed microseconds since a trace-gated [`Instant`]; 0 untraced.
+fn us_since(t0: Option<Instant>) -> f64 {
+    t0.map(|t| t.elapsed().as_secs_f64() * 1e6).unwrap_or(0.0)
 }
 
 /// Step sessions from `heap` in simulated-time order until every
 /// pending instant is at or past `t1` (`INFINITY` = run everything out).
+/// Returns the number of session steps executed (the execution span's
+/// item counter, §12-2).
 fn step_until(
     heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
     sessions: &mut [Box<DeviceSession>],
     t1: f64,
     cache: &SimVariantCache,
-) -> Result<()> {
+) -> Result<u64> {
+    let mut steps = 0u64;
     loop {
         let Some(&Reverse((bits, i))) = heap.peek() else { break };
         if f64::from_bits(bits) >= t1 {
@@ -429,11 +509,39 @@ fn step_until(
             continue;
         }
         sessions[i].step(cache)?;
+        steps += 1;
         if !sessions[i].is_done() {
             heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
         }
     }
-    Ok(())
+    Ok(steps)
+}
+
+/// Drain every session's buffered evolution audits into the tracer;
+/// returns (audit count, plan-cache hits, Σ evolution µs) — the
+/// evolution span's counters (§12-3).
+fn flush_audits(
+    tracer: &mut ShardTracer<'_>,
+    sessions: &mut [Box<DeviceSession>],
+) -> Result<(u64, u64, f64)> {
+    let (mut n, mut hits, mut evo_us) = (0u64, 0u64, 0.0f64);
+    for s in sessions.iter_mut() {
+        for a in s.take_audits() {
+            n += 1;
+            if a.plan == "hit" {
+                hits += 1;
+            }
+            evo_us += a.evolution_us;
+            tracer.audit(a)?;
+        }
+    }
+    Ok((n, hits, evo_us))
+}
+
+/// A zero-cost span for a stage the plan leaves off — emitted so every
+/// trace covers all five stages regardless of preset (§12-2).
+fn idle_span(shard: u32, stage: Stage) -> StageSpan {
+    StageSpan { shard, window: 0, t_s: 0.0, stage, wall_us: 0.0, items: 0, aux: 0 }
 }
 
 /// One pipeline worker: build the home shard's sessions, run the staged
@@ -447,10 +555,19 @@ fn run_worker(
     pool: Option<&StealPool>,
     cache: &SimVariantCache,
     plan_cache: Option<&Arc<PlanCache>>,
+    sink: Option<&TraceSink>,
 ) -> Result<WorkerOutcome> {
     let cfg = &pcfg.fleet;
     let dcfg = &pcfg.dispatch;
     let stages = pcfg.stages;
+    // Trace plane (§12): a flight-recorder ring per worker, its spike
+    // detector armed with the same thresholds as the feedback trigger's
+    // load-spike arm.
+    let mut tracer = sink.map(|s| {
+        let ring = pcfg.trace.as_ref().map(|t| t.ring_capacity).unwrap_or(1);
+        let spike = &cfg.feedback.spike;
+        ShardTracer::new(s, w as u32, ring, (spike.util_threshold, spike.shed_threshold))
+    });
 
     // If this worker unwinds, don't leave stealing workers spinning on
     // the remaining-session count forever.
@@ -487,6 +604,9 @@ fn run_worker(
             }
         };
         session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
+        if tracer.is_some() {
+            session.enable_trace();
+        }
         sessions.push(Box::new(session));
     }
 
@@ -495,6 +615,7 @@ fn run_worker(
     let mut admission = AdmissionStats::default();
     let mut wait_us = Series::default();
     if stages.admission == AdmissionMode::Bounded {
+        let ta = tracer.as_ref().map(|_| Instant::now());
         let inputs: Vec<(u64, Archetype, &[Event])> =
             sessions.iter().map(|s| (s.device_id, s.archetype, s.events())).collect();
         let ShardAdmission { verdicts, stats, wait_us: waits } = admit_shard(dcfg, &inputs);
@@ -503,20 +624,65 @@ fn run_worker(
         }
         admission = stats;
         wait_us = waits;
+        if let Some(tr) = tracer.as_mut() {
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: 0,
+                t_s: 0.0,
+                stage: Stage::Admission,
+                wall_us: us_since(ta),
+                items: admission.submitted,
+                aux: admission.shed_total(),
+            });
+        }
     }
 
     // Execution stage, `Pool` flavor (§8-3): hand the sessions to the
     // shared work-stealing heap and step until the whole fleet is done.
     if let Some(pool) = pool {
         pool.seed(w, sessions);
-        let (finished, busy_ms) = pool.drain(w, dcfg.stealing, cache)?;
+        let te = tracer.as_ref().map(|_| Instant::now());
+        let (mut finished, busy_ms, steps) = pool.drain(w, dcfg.stealing, cache)?;
+        let trace_evicted = match tracer {
+            Some(mut tr) => {
+                let shard = w as u32;
+                tr.span(StageSpan {
+                    shard,
+                    window: 0,
+                    t_s: 0.0,
+                    stage: Stage::Execution,
+                    wall_us: us_since(te),
+                    items: steps,
+                    aux: finished.len() as u64,
+                });
+                // Audits ride with whoever *finished* the session — under
+                // stealing, pool spans attribute to the worker index.
+                let (n, hits, evo_us) = flush_audits(&mut tr, &mut finished)?;
+                tr.span(StageSpan {
+                    shard,
+                    window: 0,
+                    t_s: 0.0,
+                    stage: Stage::Evolution,
+                    wall_us: evo_us,
+                    items: n,
+                    aux: hits,
+                });
+                // Batching spans come from the aggregator's Windowed
+                // post-pass; feedback never runs on the pool path.
+                tr.span(idle_span(shard, Stage::Feedback));
+                tr.finish()?
+            }
+            None => 0,
+        };
         return Ok(WorkerOutcome {
             finished,
             busy_ms,
+            steps,
             admission,
             wait_us,
             batches: BatchStats::default(),
             telemetry: None,
+            trace_evicted,
         });
     }
 
@@ -532,13 +698,49 @@ fn run_worker(
     if !stages.windowed() {
         // Un-windowed pass (direct preset, or Bounded + Sharded): run
         // the shard to completion in one sweep.
-        step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+        let te = tracer.as_ref().map(|_| Instant::now());
+        let steps = step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+        let trace_evicted = match tracer {
+            Some(mut tr) => {
+                let shard = w as u32;
+                if stages.admission == AdmissionMode::Off {
+                    tr.span(idle_span(shard, Stage::Admission));
+                }
+                tr.span(StageSpan {
+                    shard,
+                    window: 0,
+                    t_s: 0.0,
+                    stage: Stage::Execution,
+                    wall_us: us_since(te),
+                    items: steps,
+                    aux: sessions.len() as u64,
+                });
+                let (n, hits, evo_us) = flush_audits(&mut tr, &mut sessions)?;
+                tr.span(StageSpan {
+                    shard,
+                    window: 0,
+                    t_s: 0.0,
+                    stage: Stage::Evolution,
+                    wall_us: evo_us,
+                    items: n,
+                    aux: hits,
+                });
+                if stages.batching == BatchingMode::Off {
+                    tr.span(idle_span(shard, Stage::Batching));
+                }
+                tr.span(idle_span(shard, Stage::Feedback));
+                tr.finish()?
+            }
+            None => 0,
+        };
         return Ok(WorkerOutcome {
             busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
+            steps,
             admission,
             wait_us,
             batches: BatchStats::default(),
             telemetry: None,
+            trace_evicted,
             finished: sessions,
         });
     }
@@ -617,17 +819,34 @@ fn run_worker(
     let tick = fb.tick_s();
     let n_windows = fb.window_count(cfg.duration_s);
     let mut ai = 0usize;
+    let mut total_steps = 0u64;
+    // Sessions done as of the previous window (execution-span counter;
+    // only maintained when tracing).
+    let mut prev_done = 0u64;
     for win in 0..n_windows {
         let last = win + 1 == n_windows;
         let t1 = if last { f64::INFINITY } else { (win + 1) as f64 * tick };
+        let win_t_s = win as f64 * tick;
 
         // Telemetry stage (1/2): push the current frame into every
         // session — its archetype's frame under keyed telemetry, the
         // shard frame otherwise.
+        let tf = tracer.as_ref().map(|_| Instant::now());
         let shard_frame = bank.shard_frame();
         let mu = shard_frame.service_rate_per_s;
         for s in sessions.iter_mut() {
             s.set_load(bank.frame_for(s.archetype.index()));
+        }
+        if let Some(tr) = tracer.as_mut() {
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Feedback,
+                wall_us: us_since(tf),
+                items: sessions.len() as u64,
+                aux: 0,
+            });
         }
 
         let mut sample = WindowSample {
@@ -646,6 +865,7 @@ fn run_worker(
 
         // Admission stage, `VirtualQueue` flavor: this window's arrivals
         // through the token buckets, then the G/D/1 queue at µ̂.
+        let ta = tracer.as_ref().map(|_| Instant::now());
         while ai < arrivals.len() && arrivals[ai].0 < t1 {
             let (t, _device, si, archetype) = arrivals[ai];
             ai += 1;
@@ -664,10 +884,48 @@ fn run_worker(
             }
             sessions[si].push_verdict(verdict);
         }
+        if let Some(tr) = tracer.as_mut() {
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Admission,
+                wall_us: us_since(ta),
+                items: sample.arrivals,
+                aux: sample.shed,
+            });
+        }
 
         // Execution stage: step sessions in simulated-time order to the
         // window edge (evolutions see the frame; admitted events serve).
-        step_until(&mut heap, &mut sessions, t1, cache)?;
+        let te = tracer.as_ref().map(|_| Instant::now());
+        let win_steps = step_until(&mut heap, &mut sessions, t1, cache)?;
+        total_steps += win_steps;
+        if let Some(tr) = tracer.as_mut() {
+            let done_now = sessions.iter().filter(|s| s.is_done()).count() as u64;
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Execution,
+                wall_us: us_since(te),
+                items: win_steps,
+                aux: done_now - prev_done,
+            });
+            prev_done = done_now;
+            // Evolution stage (§12-3): the audits the window's steps
+            // buffered, with the engine's own µs as the span's wall.
+            let (n, hits, evo_us) = flush_audits(tr, &mut sessions)?;
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Evolution,
+                wall_us: evo_us,
+                items: n,
+                aux: hits,
+            });
+        }
 
         // Batching stage, `Drain` flavor: only batch windows fully
         // closed by t1 flush; a straddling batch waits for the next
@@ -676,7 +934,19 @@ fn run_worker(
         let window_limit =
             if t1.is_finite() { window_key(t1, dcfg.batch_window_s) } else { u64::MAX };
         let cap = dcfg.batch_cap_at(shard_frame.utilization());
+        let tb = tracer.as_ref().map(|_| Instant::now());
         let pricing = assemble_batches_window_capped(dcfg, &mut sessions, window_limit, cap);
+        if let Some(tr) = tracer.as_mut() {
+            tr.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Batching,
+                wall_us: us_since(tb),
+                items: pricing.stats.served,
+                aux: pricing.stats.batches,
+            });
+        }
         sample.served = pricing.stats.served;
         sample.service_us_sum = pricing.service_us_sum;
         sample.batches = pricing.stats.batches;
@@ -713,20 +983,38 @@ fn run_worker(
 
         // Telemetry stage (2/2): fold the window's counters in.
         bank.observe(&sample, &keyed_samples);
+
+        // Anomaly detection (§12-4): feed the folded frame through the
+        // shed-spike detector; an idle→spiking transition force-flushes
+        // the flight recorder so the lead-up windows hit disk.
+        if let Some(tr) = tracer.as_mut() {
+            let frame = bank.shard_frame();
+            tr.observe_load(win, win_t_s, frame.utilization(), frame.shed_rate)?;
+        }
     }
 
     // Safety net: anything still pending (e.g. duration 0 with no
     // windows) runs out, and leftover served requests get priced at the
     // static cap (final flushes are the legacy batch semantics).
-    step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+    total_steps += step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
     let final_pricing =
         assemble_batches_window_capped(dcfg, &mut sessions, u64::MAX, dcfg.batch_cap());
     batches_total.merge(&final_pricing.stats);
 
+    let trace_evicted = match tracer {
+        Some(mut tr) => {
+            // Audits from safety-net steps (e.g. a zero-window run's
+            // startup evolutions) still reach the trail.
+            flush_audits(&mut tr, &mut sessions)?;
+            tr.finish()?
+        }
+        None => 0,
+    };
     let (shard_frame, archetype_frames) = bank.into_frames();
     let (admission, wait_us) = adm.into_parts();
     Ok(WorkerOutcome {
         busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
+        steps: total_steps,
         admission,
         wait_us,
         batches: batches_total,
@@ -737,6 +1025,7 @@ fn run_worker(
             mu_prior_per_s,
         }),
         finished: sessions,
+        trace_evicted,
     })
 }
 

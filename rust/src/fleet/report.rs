@@ -14,7 +14,7 @@ use crate::context::telemetry::LoadTelemetry;
 use crate::dispatch::DispatchReport;
 use crate::metrics::{Series, Table};
 use crate::runtime::CacheStats;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 
 /// Latency summary in milliseconds.
 #[derive(Debug, Clone, Copy, Default)]
@@ -132,25 +132,54 @@ pub struct FeedbackBlock {
 }
 
 impl FeedbackBlock {
-    /// The `"telemetry"` JSON block (schema: README.md).
-    pub fn telemetry_json(&self) -> Json {
-        let mut m = match self.telemetry.to_json() {
-            Json::Obj(m) => m,
-            _ => unreachable!("LoadTelemetry::to_json emits an object"),
-        };
-        m.insert("windows".into(), Json::Num(self.windows as f64));
-        m.insert(
-            "service_rate_prior_per_s".into(),
-            Json::Num(self.service_rate_prior_per_s),
-        );
+    /// Stream the `"telemetry"` block through the allocation-free
+    /// [`JsonWriter`] (DESIGN.md §12-1).  Key order is sorted, matching
+    /// what the old `BTreeMap` tree serialized byte-for-byte (pinned in
+    /// `tests/obs.rs`); the block's fleet-max `windows` overrides the
+    /// merged frame's, so the frame fields are spelled out inline.
+    pub fn write_telemetry_json<W: std::fmt::Write>(
+        &self,
+        w: &mut JsonWriter<'_, W>,
+    ) -> std::fmt::Result {
+        let t = &self.telemetry;
+        w.begin_obj()?;
         if let Some(frames) = &self.per_archetype {
-            let mut per = BTreeMap::new();
-            for af in frames {
-                per.insert(af.archetype.to_string(), af.frame.to_json());
+            // The frames ride in canonical archetype order; the wire
+            // order is sorted-by-name like every other object key.
+            let mut sorted: Vec<&ArchetypeFrame> = frames.iter().collect();
+            sorted.sort_by_key(|af| af.archetype);
+            w.key("archetypes")?;
+            w.begin_obj()?;
+            for af in sorted {
+                w.key(af.archetype)?;
+                af.frame.write_json(w)?;
             }
-            m.insert("archetypes".into(), Json::Obj(per));
+            w.end_obj()?;
         }
-        Json::Obj(m)
+        w.field_num("arrival_rate_per_s", t.arrival_rate_per_s)?;
+        w.field_num("batch_occupancy", t.batch_occupancy)?;
+        w.field_num("gd1_wait_ms", t.gd1_wait_s() * 1e3)?;
+        w.field_num("queue_depth", t.queue_depth)?;
+        w.field_num("service_rate_per_s", t.service_rate_per_s)?;
+        w.field_num("service_rate_prior_per_s", self.service_rate_prior_per_s)?;
+        w.field_num("shed_rate", t.shed_rate)?;
+        w.field_num("utilization", t.utilization())?;
+        w.field_num("windows", self.windows as f64)?;
+        w.end_obj()
+    }
+
+    /// The `"telemetry"` JSON block (schema: README.md) — an adapter over
+    /// [`write_telemetry_json`](Self::write_telemetry_json) for callers
+    /// that graft the block into a larger tree.  Lossless: sorted keys
+    /// plus shortest-representation floats make parse∘stream exact.
+    pub fn telemetry_json(&self) -> Json {
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            self.write_telemetry_json(&mut w).expect("writing to a String cannot fail");
+            debug_assert!(w.is_complete());
+        }
+        Json::parse(&buf).expect("streamed telemetry block is valid JSON")
     }
 
     /// The `"feedback"` JSON block (schema: README.md).

@@ -37,6 +37,7 @@ use crate::coordinator::plancache::{ContextQuantizer, PlanCache, PlanMode};
 use crate::coordinator::CompressionConfig;
 use crate::dispatch::{AdmissionVerdict, ServedRequest};
 use crate::metrics::Series;
+use crate::obs::EvolutionAudit;
 use crate::platform::{EnergyModel, Platform};
 use crate::runtime::{CacheOutcome, ShardedCache};
 use crate::serving::{EvolutionRecord, ServingReport, CONTEXT_CHECK_PERIOD_S};
@@ -108,6 +109,12 @@ pub struct DeviceSession {
     /// Σ over evolutions of (backbone acc − deployed acc): the bounded
     /// extra-accuracy-loss metric bench_feedback reports.
     acc_loss_evo_sum: f64,
+    /// Flight-recorder tracing armed (DESIGN.md §12): buffer evolution
+    /// audits for the shard tracer to drain.  Off costs nothing — the
+    /// audit struct is a by-product the engine fills either way.
+    trace: bool,
+    /// Audits since the last [`take_audits`](Self::take_audits) drain.
+    audits: Vec<EvolutionAudit>,
 }
 
 /// A finished session's summary, handed to the fleet aggregator.
@@ -210,7 +217,20 @@ impl DeviceSession {
             drain_per_hour: 0.0,
             backbone_accuracy,
             acc_loss_evo_sum: 0.0,
+            trace: false,
+            audits: Vec::new(),
         })
+    }
+
+    /// Arm audit buffering for the trace plane (§12-3).
+    pub(crate) fn enable_trace(&mut self) {
+        self.trace = true;
+    }
+
+    /// Drain the evolution audits buffered since the last call (empty
+    /// unless [`enable_trace`](Self::enable_trace) armed the session).
+    pub(crate) fn take_audits(&mut self) -> Vec<EvolutionAudit> {
+        std::mem::take(&mut self.audits)
     }
 
     /// Bind this session to a pipeline stage plan (DESIGN.md §11-2) —
@@ -400,7 +420,8 @@ impl DeviceSession {
                         frame = frame.with_load(load);
                     }
                     if self.trigger.should_fire_frame(&frame) {
-                        let evo = self.engine.evolve_frame(&frame, &fb)?;
+                        let mut evo = self.engine.evolve_frame(&frame, &fb)?;
+                        self.note_audit(&mut evo);
                         self.after_evolution(&snap, evo, cache)?;
                     }
                 }
@@ -408,7 +429,8 @@ impl DeviceSession {
                 _ => {
                     if self.trigger.should_fire(&snap) {
                         let constraints = self.engine.constraints_for(&snap);
-                        let evo = self.engine.evolve(&constraints)?;
+                        let mut evo = self.engine.evolve(&constraints)?;
+                        self.note_audit(&mut evo);
                         self.after_evolution(&snap, evo, cache)?;
                     }
                 }
@@ -460,6 +482,18 @@ impl DeviceSession {
 
         self.done = self.t >= self.duration_s;
         Ok(())
+    }
+
+    /// Patch the engine's audit by-product with what only the session
+    /// knows — device, simulated time, and the trigger arm that fired —
+    /// and buffer it when tracing is armed (§12-3).
+    fn note_audit(&mut self, evo: &mut Evolution) {
+        evo.audit.device = self.device_id;
+        evo.audit.t_s = self.t;
+        evo.audit.arm = self.trigger.last_fired_arm();
+        if self.trace {
+            self.audits.push(evo.audit);
+        }
     }
 
     /// Shared evolution tail: plan-outcome accounting, variant (re)load

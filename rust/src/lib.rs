@@ -23,12 +23,15 @@
 //!   bounded admission queues with backpressure policies, windowed
 //!   cross-device batching, work stealing between shard workers.
 //! * [`metrics`] — table/series emission for the benchmark harness.
+//! * [`obs`] — the flight-recorder tracing plane (`--trace-out`):
+//!   per-stage spans, evolution decision audits, streaming ndjson.
 
 pub mod context;
 pub mod coordinator;
 pub mod dispatch;
 pub mod fleet;
 pub mod metrics;
+pub mod obs;
 pub mod platform;
 pub mod runtime;
 pub mod serving;

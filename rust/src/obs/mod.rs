@@ -1,0 +1,73 @@
+//! Flight-recorder tracing plane (DESIGN.md §12).
+//!
+//! The paper's headline claims are operational — ≤6.2 ms runtime
+//! evolution, 3.1×/4.2× latency/energy wins — so the reproduction needs
+//! to *attribute* milliseconds and decisions, not just total them.  This
+//! module is the observability subsystem the staged pipeline (§11)
+//! reports into when a bench runs with `--trace-out PATH`:
+//!
+//! * [`event`] — the ndjson line protocol: per-window per-stage
+//!   [`StageSpan`]s, per-evolution [`EvolutionAudit`] decision records
+//!   (trigger arm, plan-cache disposition, constraint-funnel
+//!   before/after), anomaly markers, and run meta/end framing.  Every
+//!   line is one JSON object with an `"ev"` discriminator, emitted
+//!   through the streaming [`crate::util::json::JsonWriter`] — no
+//!   intermediate `Json` trees, one reused `String` buffer per sink.
+//! * [`recorder`] — the bounded ring-buffer [`FlightRecorder`] (fixed
+//!   memory, oldest-evicted), the shared ndjson [`TraceSink`], and the
+//!   per-worker [`ShardTracer`] that force-flushes its ring the moment
+//!   an anomaly fires (shed-rate spike, λ2-floor ratchet) so the events
+//!   *leading up to* the anomaly are on disk even if the run dies.
+//!
+//! Tracing is strictly additive: with no [`TraceConfig`] attached the
+//! pipeline takes zero extra timestamps and allocates nothing, and every
+//! report stays bit-identical (`tests/obs.rs` pins this across all three
+//! presets).
+
+pub mod event;
+pub mod recorder;
+
+pub use event::{EvolutionAudit, Stage, StageSpan, TraceEvent, ALL_STAGES};
+pub use recorder::{FlightRecorder, ShardTracer, TraceSink};
+
+use anyhow::Result;
+
+/// Default per-worker flight-recorder capacity (events).
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Where and how a pipeline run traces (`--trace-out`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Output ndjson path.
+    pub path: String,
+    /// Per-worker flight-recorder ring capacity, events.
+    pub ring_capacity: usize,
+}
+
+impl TraceConfig {
+    pub fn new(path: impl Into<String>) -> TraceConfig {
+        TraceConfig { path: path.into(), ring_capacity: DEFAULT_RING_CAPACITY }
+    }
+}
+
+/// Write an audit-only trace (meta + one line per evolution + end) —
+/// the `--trace-out` path for the single-engine paper benches
+/// (fig8/9/10, table2/3), which have no pipeline stages to span but
+/// still want the decision trail.
+pub fn write_audit_trace(path: &str, task: &str, audits: &[EvolutionAudit]) -> Result<()> {
+    let sink = TraceSink::create(path)?;
+    sink.write(&TraceEvent::Meta {
+        task: task.to_string(),
+        devices: 1,
+        shards: 1,
+        workers: 1,
+        duration_s: 0.0,
+        seed: 0,
+        ring_capacity: audits.len() as u64,
+    })?;
+    for a in audits {
+        sink.write(&TraceEvent::Audit(*a))?;
+    }
+    sink.finish(0.0, 0)?;
+    Ok(())
+}

@@ -1,0 +1,311 @@
+//! Flight recorder + trace sink (DESIGN.md §12-4).
+//!
+//! Each pipeline worker owns a [`ShardTracer`]: a bounded ring of trace
+//! events ([`FlightRecorder`]) in front of the run's shared ndjson
+//! [`TraceSink`].  The ring is fixed memory — when it fills, the oldest
+//! event is evicted (and counted), so a long quiet run can't grow the
+//! trace plane without bound.  Two things move events to disk: normal
+//! completion (the worker drains its ring once, oldest-first), and an
+//! **anomaly** — a shed-rate spike or a λ2-floor ratchet escalation —
+//! which force-flushes immediately so the window history *leading up to*
+//! the anomaly survives even if the process dies right after.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::event::{EvolutionAudit, TraceEvent};
+
+/// Bounded oldest-evicted event ring (fixed memory per worker).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: std::collections::VecDeque<TraceEvent>,
+    capacity: usize,
+    evicted: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            ring: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            evicted: 0,
+        }
+    }
+
+    /// Append, evicting the oldest event when full.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.evicted += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Events evicted (ring overflow) so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Take every buffered event, oldest first.
+    pub fn drain_events(&mut self) -> Vec<TraceEvent> {
+        self.ring.drain(..).collect()
+    }
+
+    /// Buffered events, oldest first (tests).
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+}
+
+struct SinkInner {
+    out: BufWriter<File>,
+    /// Reused line buffer: the sink's only allocation after creation.
+    buf: String,
+    spans: u64,
+    audits: u64,
+    anomalies: u64,
+}
+
+/// The run-wide ndjson writer every worker's tracer drains into.
+pub struct TraceSink {
+    inner: Mutex<SinkInner>,
+}
+
+impl TraceSink {
+    /// Create/truncate the trace file (errors name the path).
+    pub fn create(path: &str) -> Result<TraceSink> {
+        let file = File::create(path).with_context(|| format!("creating trace file {path}"))?;
+        Ok(TraceSink {
+            inner: Mutex::new(SinkInner {
+                out: BufWriter::new(file),
+                buf: String::with_capacity(256),
+                spans: 0,
+                audits: 0,
+                anomalies: 0,
+            }),
+        })
+    }
+
+    /// Write one event as one ndjson line.
+    pub fn write(&self, ev: &TraceEvent) -> Result<()> {
+        let mut inner = self.inner.lock().expect("trace sink poisoned");
+        Self::write_locked(&mut inner, ev)
+    }
+
+    /// Write a batch under one lock acquisition (ring drains).
+    pub fn write_all(&self, events: &[TraceEvent]) -> Result<()> {
+        let mut inner = self.inner.lock().expect("trace sink poisoned");
+        for ev in events {
+            Self::write_locked(&mut inner, ev)?;
+        }
+        Ok(())
+    }
+
+    fn write_locked(inner: &mut SinkInner, ev: &TraceEvent) -> Result<()> {
+        match ev {
+            TraceEvent::Span(_) => inner.spans += 1,
+            TraceEvent::Audit(_) => inner.audits += 1,
+            TraceEvent::Anomaly { .. } => inner.anomalies += 1,
+            TraceEvent::Meta { .. } | TraceEvent::End { .. } => {}
+        }
+        inner.buf.clear();
+        ev.write_json(&mut inner.buf).expect("writing to String is infallible");
+        inner.buf.push('\n');
+        inner.out.write_all(inner.buf.as_bytes()).context("writing trace line")
+    }
+
+    /// Write the `end` footer (with the sink's own event totals plus the
+    /// workers' summed eviction count) and flush.
+    pub fn finish(self, wall_ms: f64, evicted: u64) -> Result<()> {
+        let mut inner = self.inner.into_inner().expect("trace sink poisoned");
+        let end = TraceEvent::End {
+            wall_ms,
+            spans: inner.spans,
+            audits: inner.audits,
+            anomalies: inner.anomalies,
+            evicted,
+        };
+        Self::write_locked(&mut inner, &end)?;
+        inner.out.flush().context("flushing trace file")
+    }
+}
+
+/// One worker's view of the trace plane: a flight-recorder ring, the
+/// shared sink, and the anomaly detectors that trigger force flushes.
+pub struct ShardTracer<'a> {
+    sink: &'a TraceSink,
+    ring: FlightRecorder,
+    shard: u32,
+    /// Shed-spike arm thresholds (utilization, shed rate) — the same
+    /// values as the feedback trigger's `LoadSpikeConfig`.
+    spike_util: f64,
+    spike_shed: f64,
+    was_spiking: bool,
+    /// Largest λ2 ratchet (final − base floor) seen so far; only an
+    /// *escalation* re-fires the anomaly, so a persistently-ratcheted
+    /// fleet doesn't flush every window.
+    max_ratchet: f64,
+}
+
+impl<'a> ShardTracer<'a> {
+    pub fn new(
+        sink: &'a TraceSink,
+        shard: u32,
+        ring_capacity: usize,
+        spike_thresholds: (f64, f64),
+    ) -> ShardTracer<'a> {
+        ShardTracer {
+            sink,
+            ring: FlightRecorder::new(ring_capacity),
+            shard,
+            spike_util: spike_thresholds.0,
+            spike_shed: spike_thresholds.1,
+            was_spiking: false,
+            max_ratchet: 0.0,
+        }
+    }
+
+    /// Record one stage span.
+    pub fn span(&mut self, span: super::event::StageSpan) {
+        self.ring.push(TraceEvent::Span(span));
+    }
+
+    /// Record one evolution audit; a λ2-floor ratchet escalation beyond
+    /// anything this worker has seen force-flushes the ring.
+    pub fn audit(&mut self, audit: EvolutionAudit) -> Result<()> {
+        let ratchet = audit.lambda2_final - audit.lambda2_base;
+        let (window, t_s) = (0, audit.t_s);
+        self.ring.push(TraceEvent::Audit(audit));
+        if ratchet > self.max_ratchet && ratchet > 1e-12 {
+            self.max_ratchet = ratchet;
+            self.anomaly(window, t_s, "lambda2_ratchet", ratchet)?;
+        }
+        Ok(())
+    }
+
+    /// Feed the window's shard-level load frame through the shed-spike
+    /// detector; an idle→spiking transition force-flushes the ring.
+    pub fn observe_load(
+        &mut self,
+        window: u64,
+        t_s: f64,
+        utilization: f64,
+        shed_rate: f64,
+    ) -> Result<()> {
+        let spiking = utilization >= self.spike_util && shed_rate >= self.spike_shed;
+        if spiking && !self.was_spiking {
+            self.anomaly(window, t_s, "shed_spike", shed_rate)?;
+        }
+        self.was_spiking = spiking;
+        Ok(())
+    }
+
+    fn anomaly(&mut self, window: u64, t_s: f64, kind: &'static str, value: f64) -> Result<()> {
+        self.ring.push(TraceEvent::Anomaly { shard: self.shard, window, t_s, kind, value });
+        self.flush()
+    }
+
+    /// Drain the ring to the sink (force flush / completion).
+    fn flush(&mut self) -> Result<()> {
+        let events = self.ring.drain_events();
+        self.sink.write_all(&events)
+    }
+
+    /// Drain remaining events; returns how many the ring evicted over
+    /// the tracer's lifetime.
+    pub fn finish(mut self) -> Result<u64> {
+        self.flush()?;
+        Ok(self.ring.evicted())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::{Stage, StageSpan};
+
+    fn audit_for(device: u64) -> EvolutionAudit {
+        EvolutionAudit { device, arm: "periodic", plan: "none", ..Default::default() }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let mut ring = FlightRecorder::new(4);
+        for d in 0..10u64 {
+            ring.push(TraceEvent::Audit(audit_for(d)));
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.evicted(), 6);
+        let devices: Vec<u64> = ring
+            .events()
+            .map(|e| match e {
+                TraceEvent::Audit(a) => a.device,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(devices, [6, 7, 8, 9], "oldest evicted, order preserved");
+        assert_eq!(ring.drain_events().len(), 4);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn tracer_force_flushes_on_spike_and_ratchet_escalation() {
+        let dir = std::env::temp_dir().join(format!("obs_tracer_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ndjson");
+        let path_str = path.to_str().unwrap();
+        {
+            let sink = TraceSink::create(path_str).unwrap();
+            let mut tr = ShardTracer::new(&sink, 0, 8, (0.85, 0.02));
+            tr.span(StageSpan {
+                shard: 0,
+                window: 0,
+                t_s: 0.0,
+                stage: Stage::Execution,
+                wall_us: 1.0,
+                items: 1,
+                aux: 0,
+            });
+            // Below thresholds: nothing flushed yet.
+            tr.observe_load(0, 0.0, 0.5, 0.0).unwrap();
+            assert_eq!(tr.ring.len(), 1);
+            // Spike transition: span + anomaly hit the sink immediately.
+            tr.observe_load(1, 1.0, 0.9, 0.1).unwrap();
+            assert!(tr.ring.is_empty(), "anomaly force-flushes the ring");
+            // Still spiking: no re-fire.
+            tr.observe_load(2, 2.0, 0.95, 0.2).unwrap();
+            // Ratchet escalation fires once per new maximum.
+            let mut a = audit_for(1);
+            (a.lambda2_base, a.lambda2_final) = (0.3, 0.4);
+            tr.audit(a).unwrap();
+            let mut b = audit_for(2);
+            (b.lambda2_base, b.lambda2_final) = (0.3, 0.35);
+            tr.audit(b).unwrap(); // smaller ratchet: buffered, no flush
+            assert_eq!(tr.ring.len(), 1);
+            let evicted = tr.finish().unwrap();
+            sink.finish(1.0, evicted).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let kinds: Vec<String> = text
+            .lines()
+            .map(|l| {
+                let j = crate::util::json::Json::parse(l).unwrap();
+                j.get("ev").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(kinds, ["span", "anomaly", "audit", "anomaly", "audit", "end"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

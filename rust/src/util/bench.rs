@@ -36,9 +36,22 @@ impl Bench {
     /// synthetic palette.
     pub fn init(allowed: &[&str], boolean_flags: &[&str], usage: &str) -> Result<Bench> {
         let args = Args::from_env();
-        args.enforce_usage(allowed, boolean_flags, usage);
+        // Every bin accepts --trace-out (DESIGN.md §12: the flight
+        // recorder's ndjson sink) without each contract listing it.
+        let mut allowed: Vec<&str> = allowed.to_vec();
+        if !allowed.contains(&"trace-out") {
+            allowed.push("trace-out");
+        }
+        args.enforce_usage(&allowed, boolean_flags, usage);
         let manifest = Manifest::load_cli(args.get("manifest"), DEFAULT_MANIFEST)?;
         Ok(Bench { args, manifest })
+    }
+
+    /// The `--trace-out PATH` flag — the flight-recorder ndjson sink
+    /// shared by every bench bin (absent ⇒ tracing fully off, reports
+    /// bit-identical to pre-§12 output).
+    pub fn trace_out(&self) -> Option<&str> {
+        self.args.get("trace-out")
     }
 
     /// Render a result table the shared way: CSV under `--csv`,

@@ -2,13 +2,16 @@
 //!
 //! Supports the full JSON grammar the artifacts manifest uses: objects,
 //! arrays, strings (with escapes), numbers, booleans, null.  Parsing is a
-//! straightforward recursive descent over bytes; serialization is only what
-//! the metrics emitters need.
+//! straightforward recursive descent over bytes.  Serialization has two
+//! faces sharing one escaping/number-formatting core: the [`Json`] tree's
+//! `Display` (for parsed values) and the streaming [`JsonWriter`] (for
+//! emitters that never want to build a tree — the flight-recorder trace
+//! plane and the report blocks, DESIGN.md §12).
 
 use std::collections::BTreeMap;
 use std::fmt;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -113,9 +116,11 @@ impl Json {
     }
 
     /// Write the serialized document (plus trailing newline) to `path`
-    /// (the bench binaries' `--json-out`).
-    pub fn write_to(&self, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, format!("{self}\n"))
+    /// (the bench binaries' `--json-out`).  Failures name the offending
+    /// path — a bare `io::Error` with no filename is undebuggable from a
+    /// CI log.
+    pub fn write_to(&self, path: &str) -> Result<()> {
+        std::fs::write(path, format!("{self}\n")).with_context(|| format!("writing json {path}"))
     }
 }
 
@@ -333,13 +338,7 @@ impl fmt::Display for Json {
         match self {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    write!(f, "{}", *n as i64)
-                } else {
-                    write!(f, "{n}")
-                }
-            }
+            Json::Num(n) => write_num(f, *n),
             Json::Str(s) => write_escaped(f, s),
             Json::Arr(a) => {
                 write!(f, "[")?;
@@ -366,20 +365,200 @@ impl fmt::Display for Json {
     }
 }
 
-fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
-    write!(f, "\"")?;
+/// The one number format both serializers share: integral values below
+/// 2^53-ish print without a fraction, everything else uses Rust's
+/// shortest-round-trip `f64` repr.  `JsonWriter` output is therefore
+/// byte-compatible with `Json::Display` by construction.
+fn write_num<W: fmt::Write + ?Sized>(out: &mut W, n: f64) -> fmt::Result {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        write!(out, "{}", n as i64)
+    } else {
+        write!(out, "{n}")
+    }
+}
+
+/// The one string escaper both serializers share (quotes included).
+fn write_escaped<W: fmt::Write + ?Sized>(out: &mut W, s: &str) -> fmt::Result {
+    write!(out, "\"")?;
     for c in s.chars() {
         match c {
-            '"' => write!(f, "\\\"")?,
-            '\\' => write!(f, "\\\\")?,
-            '\n' => write!(f, "\\n")?,
-            '\r' => write!(f, "\\r")?,
-            '\t' => write!(f, "\\t")?,
-            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-            c => write!(f, "{c}")?,
+            '"' => write!(out, "\\\"")?,
+            '\\' => write!(out, "\\\\")?,
+            '\n' => write!(out, "\\n")?,
+            '\r' => write!(out, "\\r")?,
+            '\t' => write!(out, "\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => write!(out, "{c}")?,
         }
     }
-    write!(f, "\"")
+    write!(out, "\"")
+}
+
+// ---------------------------------------------------------------------------
+// Streaming writer (DESIGN.md §12-1)
+// ---------------------------------------------------------------------------
+
+/// Maximum container nesting `JsonWriter` supports (two `u64` bitmaps).
+pub const MAX_DEPTH: usize = 64;
+
+/// A streaming JSON serializer: values go straight to the underlying
+/// `fmt::Write` with no intermediate `Json` tree and no allocation of
+/// its own — all state is two `u64` bitmaps and a depth counter, so a
+/// hot emitter (the per-window trace plane) can reuse one `String`
+/// buffer across lines.
+///
+/// Emission is caller-ordered: objects print keys in call order, so
+/// emitters mirroring a `BTreeMap`-built block must emit keys sorted to
+/// stay byte-identical (the `tests/obs.rs` parity tests pin this).
+/// Escaping and number formatting share the `Display` impl's helpers,
+/// so `Json::parse(streamed)?.to_string() == streamed` for sorted-key
+/// documents.
+///
+/// Misuse (a value where a key is due, unbalanced `end_*`, nesting past
+/// [`MAX_DEPTH`]) panics: emitters are static code paths, not data.
+pub struct JsonWriter<'w, W: fmt::Write> {
+    out: &'w mut W,
+    /// Bit `d` set ⇒ the container at depth `d` is an object.
+    obj_bits: u64,
+    /// Bit `d` set ⇒ the container at depth `d` already has an element.
+    elem_bits: u64,
+    depth: usize,
+    /// A key was just written; the next value completes the member.
+    pending_key: bool,
+}
+
+impl<'w, W: fmt::Write> JsonWriter<'w, W> {
+    pub fn new(out: &'w mut W) -> JsonWriter<'w, W> {
+        JsonWriter { out, obj_bits: 0, elem_bits: 0, depth: 0, pending_key: false }
+    }
+
+    /// Comma/colon bookkeeping shared by every value form.
+    fn value_prefix(&mut self) -> fmt::Result {
+        if self.depth == 0 {
+            return Ok(());
+        }
+        let bit = 1u64 << (self.depth - 1);
+        if self.obj_bits & bit != 0 {
+            assert!(self.pending_key, "JsonWriter: value inside object without key()");
+            self.pending_key = false;
+        } else {
+            if self.elem_bits & bit != 0 {
+                write!(self.out, ",")?;
+            }
+            self.elem_bits |= bit;
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, is_obj: bool) {
+        assert!(self.depth < MAX_DEPTH, "JsonWriter: nesting deeper than {MAX_DEPTH}");
+        let bit = 1u64 << self.depth;
+        if is_obj {
+            self.obj_bits |= bit;
+        } else {
+            self.obj_bits &= !bit;
+        }
+        self.elem_bits &= !bit;
+        self.depth += 1;
+    }
+
+    pub fn begin_obj(&mut self) -> fmt::Result {
+        self.value_prefix()?;
+        self.push(true);
+        write!(self.out, "{{")
+    }
+
+    pub fn end_obj(&mut self) -> fmt::Result {
+        assert!(
+            self.depth > 0 && self.obj_bits & (1 << (self.depth - 1)) != 0 && !self.pending_key,
+            "JsonWriter: unbalanced end_obj"
+        );
+        self.depth -= 1;
+        write!(self.out, "}}")
+    }
+
+    pub fn begin_arr(&mut self) -> fmt::Result {
+        self.value_prefix()?;
+        self.push(false);
+        write!(self.out, "[")
+    }
+
+    pub fn end_arr(&mut self) -> fmt::Result {
+        assert!(
+            self.depth > 0 && self.obj_bits & (1 << (self.depth - 1)) == 0,
+            "JsonWriter: unbalanced end_arr"
+        );
+        self.depth -= 1;
+        write!(self.out, "]")
+    }
+
+    /// Emit an object member key; the next value call completes it.
+    pub fn key(&mut self, k: &str) -> fmt::Result {
+        assert!(self.depth > 0, "JsonWriter: key() at top level");
+        let bit = 1u64 << (self.depth - 1);
+        assert!(
+            self.obj_bits & bit != 0 && !self.pending_key,
+            "JsonWriter: key() outside object or after key()"
+        );
+        if self.elem_bits & bit != 0 {
+            write!(self.out, ",")?;
+        }
+        self.elem_bits |= bit;
+        write_escaped(self.out, k)?;
+        write!(self.out, ":")?;
+        self.pending_key = true;
+        Ok(())
+    }
+
+    pub fn num(&mut self, n: f64) -> fmt::Result {
+        self.value_prefix()?;
+        write_num(self.out, n)
+    }
+
+    pub fn str_val(&mut self, s: &str) -> fmt::Result {
+        self.value_prefix()?;
+        write_escaped(self.out, s)
+    }
+
+    pub fn bool_val(&mut self, b: bool) -> fmt::Result {
+        self.value_prefix()?;
+        write!(self.out, "{b}")
+    }
+
+    pub fn null(&mut self) -> fmt::Result {
+        self.value_prefix()?;
+        write!(self.out, "null")
+    }
+
+    /// Serialize a parsed [`Json`] tree in place (sorted keys, exactly
+    /// its `Display` bytes) — the bridge for blocks that still build
+    /// trees.
+    pub fn json(&mut self, v: &Json) -> fmt::Result {
+        self.value_prefix()?;
+        write!(self.out, "{v}")
+    }
+
+    // -- object-member conveniences ---------------------------------------
+
+    pub fn field_num(&mut self, k: &str, n: f64) -> fmt::Result {
+        self.key(k)?;
+        self.num(n)
+    }
+
+    pub fn field_str(&mut self, k: &str, s: &str) -> fmt::Result {
+        self.key(k)?;
+        self.str_val(s)
+    }
+
+    pub fn field_bool(&mut self, k: &str, b: bool) -> fmt::Result {
+        self.key(k)?;
+        self.bool_val(b)
+    }
+
+    /// Balanced-document check for emitters that want a final assert.
+    pub fn is_complete(&self) -> bool {
+        self.depth == 0 && !self.pending_key
+    }
 }
 
 #[cfg(test)]
@@ -427,5 +606,78 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn writer_matches_display_bytes() {
+        let mut s = String::new();
+        let mut w = JsonWriter::new(&mut s);
+        w.begin_obj().unwrap();
+        w.field_num("a", 1.0).unwrap();
+        w.key("b").unwrap();
+        w.begin_arr().unwrap();
+        w.num(2.5).unwrap();
+        w.bool_val(true).unwrap();
+        w.null().unwrap();
+        w.str_val("x\"y\nµ").unwrap();
+        w.end_arr().unwrap();
+        w.field_str("c", "plain").unwrap();
+        w.end_obj().unwrap();
+        assert!(w.is_complete());
+        let parsed = Json::parse(&s).unwrap();
+        // Keys were emitted sorted, so the tree's Display reproduces the
+        // streamed bytes exactly.
+        assert_eq!(parsed.to_string(), s);
+    }
+
+    #[test]
+    fn writer_number_format_is_display_compatible() {
+        for n in [0.0, -0.0, 1.0, -17.0, 2.5, 1e15, 1.5e-3, 9.993e2, f64::MIN_POSITIVE] {
+            let mut s = String::new();
+            JsonWriter::new(&mut s).num(n).unwrap();
+            assert_eq!(s, Json::Num(n).to_string(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn writer_control_chars_round_trip() {
+        let nasty = "\u{0001}\u{001f} tab\t nl\n cr\r q\" bs\\ 日本語";
+        let mut s = String::new();
+        JsonWriter::new(&mut s).str_val(nasty).unwrap();
+        assert_eq!(Json::parse(&s).unwrap(), Json::Str(nasty.to_string()));
+    }
+
+    #[test]
+    fn writer_empty_and_nested_containers() {
+        let mut s = String::new();
+        let mut w = JsonWriter::new(&mut s);
+        w.begin_obj().unwrap();
+        w.key("arr").unwrap();
+        w.begin_arr().unwrap();
+        w.begin_obj().unwrap();
+        w.end_obj().unwrap();
+        w.begin_arr().unwrap();
+        w.end_arr().unwrap();
+        w.end_arr().unwrap();
+        w.key("obj").unwrap();
+        w.begin_obj().unwrap();
+        w.end_obj().unwrap();
+        w.end_obj().unwrap();
+        assert_eq!(s, r#"{"arr":[{},[]],"obj":{}}"#);
+    }
+
+    #[test]
+    #[should_panic(expected = "without key")]
+    fn writer_rejects_bare_value_in_object() {
+        let mut s = String::new();
+        let mut w = JsonWriter::new(&mut s);
+        w.begin_obj().unwrap();
+        let _ = w.num(1.0);
+    }
+
+    #[test]
+    fn write_to_error_names_path() {
+        let err = Json::Null.write_to("/nonexistent-dir-zz/x.json").unwrap_err();
+        assert!(format!("{err:#}").contains("/nonexistent-dir-zz/x.json"));
     }
 }

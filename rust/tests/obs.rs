@@ -1,0 +1,462 @@
+//! Integration: the flight-recorder tracing plane (DESIGN.md §12).
+//!
+//! * randomized `JsonWriter` round-trip — random `Json` trees streamed
+//!   through the allocation-free writer must serialize byte-identically
+//!   to the tree `Display`, and re-parse to an equal tree (escapes,
+//!   UTF-8, control characters, exponent literals, deep nesting);
+//! * flight-recorder ring — bounded, oldest-evicted, order-preserving;
+//! * trace-off bit-parity — running each of the three pipeline presets
+//!   with `--trace-out` attached must leave every deterministic report
+//!   field bit-identical to the untraced run (the §12 "strictly
+//!   additive" guarantee), while the trace itself satisfies the schema
+//!   contract: every line re-parses byte-exact, one `meta` header and
+//!   one `end` footer, spans covering all five stages, and one audit
+//!   line per evolution when the ring never evicted;
+//! * streamed telemetry block — `FeedbackBlock::write_telemetry_json`
+//!   is byte-identical to the `BTreeMap` tree it replaced.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use adaspring::context::telemetry::LoadTelemetry;
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::DispatchConfig;
+use adaspring::fleet::{
+    run_pipeline, ArchetypeFrame, FeedbackBlock, FeedbackConfig, FleetConfig, FleetReport,
+    PipelineConfig,
+};
+use adaspring::obs::{EvolutionAudit, FlightRecorder, TraceConfig, TraceEvent, ALL_STAGES};
+use adaspring::util::json::{Json, JsonWriter};
+use adaspring::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Randomized JsonWriter round-trip (§12-1)
+// ---------------------------------------------------------------------
+
+/// Strings exercising every escape class the writer handles: quotes,
+/// backslashes, the named control escapes, raw control bytes (\u form),
+/// and multi-byte UTF-8.
+const STRINGS: &[&str] = &[
+    "",
+    "plain ascii",
+    "with \"quotes\" and \\backslashes\\",
+    "line\nbreak\ttab\rreturn",
+    "control \u{1}\u{1f} bytes",
+    "µ-bench ✓ λ2 ratchet",
+    "wide 🚀 char",
+];
+
+const KEYS: &[&str] = &["a", "b9", "key", "nested", "with \"quote", "λ-key", "z"];
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    // Leaves only at the depth limit; containers get rarer as we go down.
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num(random_num(rng)),
+        3 => Json::Str((*rng.pick(STRINGS)).to_string()),
+        4 => {
+            let n = rng.below(4);
+            Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.below(4);
+            let mut m = BTreeMap::new();
+            for _ in 0..n {
+                m.insert((*rng.pick(KEYS)).to_string(), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+fn random_num(rng: &mut Rng) -> f64 {
+    match rng.below(4) {
+        // Integral (printed through the i64 path): small through ~1e14.
+        0 => (rng.next_u64() % 2_000_000_000) as f64 - 1e9,
+        1 => (rng.next_u64() % 100_000_000_000_000) as f64,
+        // Fractional, incl. negatives.
+        2 => rng.range(-1e3, 1e3) + 0.5,
+        // Tiny — values a JSON producer would write with an exponent.
+        _ => rng.range(0.1, 10.0) * 1e-7,
+    }
+}
+
+/// Stream a `Json` tree through the writer.  `BTreeMap` iteration is
+/// key-sorted, so the streamed bytes must equal the tree's `Display`.
+fn stream_json<W: std::fmt::Write>(w: &mut JsonWriter<'_, W>, j: &Json) -> std::fmt::Result {
+    match j {
+        Json::Null => w.null(),
+        Json::Bool(b) => w.bool_val(*b),
+        Json::Num(n) => w.num(*n),
+        Json::Str(s) => w.str_val(s),
+        Json::Arr(xs) => {
+            w.begin_arr()?;
+            for x in xs {
+                stream_json(w, x)?;
+            }
+            w.end_arr()
+        }
+        Json::Obj(m) => {
+            w.begin_obj()?;
+            for (k, v) in m {
+                w.key(k)?;
+                stream_json(w, v)?;
+            }
+            w.end_obj()
+        }
+    }
+}
+
+#[test]
+fn streamed_writer_matches_tree_display_and_reparses() {
+    let mut rng = Rng::new(0x0B5);
+    for round in 0..200u32 {
+        // Root is always a container (the only shape the codebase emits).
+        let tree = match round % 2 {
+            0 => {
+                let mut m = BTreeMap::new();
+                for _ in 0..(1 + rng.below(4)) {
+                    m.insert((*rng.pick(KEYS)).to_string(), random_json(&mut rng, 3));
+                }
+                Json::Obj(m)
+            }
+            _ => Json::Arr((0..(1 + rng.below(4))).map(|_| random_json(&mut rng, 3)).collect()),
+        };
+        let mut streamed = String::new();
+        {
+            let mut w = JsonWriter::new(&mut streamed);
+            stream_json(&mut w, &tree).unwrap();
+            assert!(w.is_complete(), "round {round}: writer left incomplete");
+        }
+        assert_eq!(streamed, tree.to_string(), "round {round}: streamed bytes == Display");
+        let parsed = Json::parse(&streamed).unwrap_or_else(|e| panic!("round {round}: {e}"));
+        assert_eq!(parsed, tree, "round {round}: parse(streamed) == tree");
+    }
+}
+
+#[test]
+fn exponent_literals_parse_and_restream() {
+    // Exponent forms are parser input, never writer output — the writer
+    // re-emits them in plain notation, which must re-parse to the same
+    // value.
+    for (text, value) in
+        [("1.5e-3", 0.0015), ("2E2", 200.0), ("-3.25e+1", -32.5), ("7e0", 7.0)]
+    {
+        let parsed = Json::parse(text).unwrap();
+        assert_eq!(parsed, Json::Num(value), "{text}");
+        let mut streamed = String::new();
+        {
+            let mut w = JsonWriter::new(&mut streamed);
+            w.begin_arr().unwrap();
+            w.num(value).unwrap();
+            w.end_arr().unwrap();
+        }
+        assert_eq!(Json::parse(&streamed).unwrap(), Json::Arr(vec![Json::Num(value)]), "{text}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Flight-recorder ring (§12-4)
+// ---------------------------------------------------------------------
+
+#[test]
+fn flight_recorder_evicts_oldest_and_preserves_order() {
+    let mut ring = FlightRecorder::new(5);
+    for d in 0..12u64 {
+        ring.push(TraceEvent::Audit(EvolutionAudit { device: d, ..Default::default() }));
+    }
+    assert_eq!(ring.len(), 5);
+    assert_eq!(ring.evicted(), 7, "12 pushed into capacity 5");
+    let devices: Vec<u64> = ring
+        .drain_events()
+        .into_iter()
+        .map(|e| match e {
+            TraceEvent::Audit(a) => a.device,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+    assert_eq!(devices, [7, 8, 9, 10, 11], "oldest evicted first, FIFO order kept");
+    assert!(ring.is_empty());
+    assert_eq!(ring.evicted(), 7, "draining doesn't count as eviction");
+}
+
+// ---------------------------------------------------------------------
+// Trace-off bit-parity + trace schema contract (§12)
+// ---------------------------------------------------------------------
+
+/// Bit-exact report equality over everything deterministic (wall-clock
+/// and per-worker busy times are the only excluded fields) — the same
+/// contract `tests/pipeline.rs` pins between presets and legacy entry
+/// points, here pinned between an untraced and a traced run.
+fn assert_reports_identical(a: &FleetReport, b: &FleetReport, label: &str) {
+    assert_eq!(a.inferences, b.inferences, "{label}: inferences");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.evolutions, b.evolutions, "{label}: evolutions");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    for (x, y, what) in [
+        (a.latency.p50_ms, b.latency.p50_ms, "p50"),
+        (a.latency.p95_ms, b.latency.p95_ms, "p95"),
+        (a.latency.p99_ms, b.latency.p99_ms, "p99"),
+        (a.latency.mean_ms, b.latency.mean_ms, "mean"),
+        (a.latency.max_ms, b.latency.max_ms, "max"),
+        (a.search_p50_us, b.search_p50_us, "search p50"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: latency {what}");
+    }
+    assert_eq!(a.per_archetype.len(), b.per_archetype.len(), "{label}: archetype rows");
+    for (x, y) in a.per_archetype.iter().zip(b.per_archetype.iter()) {
+        assert_eq!(x.archetype, y.archetype, "{label}");
+        assert_eq!(x.inferences, y.inferences, "{label}: {}", x.archetype);
+        assert_eq!(x.shed, y.shed, "{label}: {}", x.archetype);
+        assert_eq!(x.evolutions, y.evolutions, "{label}: {}", x.archetype);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: {}", x.archetype);
+    }
+    match (&a.dispatch, &b.dispatch) {
+        (None, None) => {}
+        (Some(da), Some(db)) => {
+            assert_eq!(da.admission.submitted, db.admission.submitted, "{label}: submitted");
+            assert_eq!(da.admission.admitted, db.admission.admitted, "{label}: admitted");
+            assert_eq!(da.batches.histogram, db.batches.histogram, "{label}: histogram");
+            assert_eq!(da.batches.served, db.batches.served, "{label}: served");
+        }
+        _ => panic!("{label}: dispatch block presence differs"),
+    }
+    match (&a.feedback, &b.feedback) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.windows, fb.windows, "{label}: windows");
+            assert_eq!(
+                fa.telemetry.arrival_rate_per_s.to_bits(),
+                fb.telemetry.arrival_rate_per_s.to_bits(),
+                "{label}: telemetry arrival rate"
+            );
+            assert_eq!(
+                fa.telemetry.shed_rate.to_bits(),
+                fb.telemetry.shed_rate.to_bits(),
+                "{label}: telemetry shed rate"
+            );
+            assert_eq!(
+                fa.service_rate_prior_per_s.to_bits(),
+                fb.service_rate_prior_per_s.to_bits(),
+                "{label}: µ̂₀ prior"
+            );
+        }
+        _ => panic!("{label}: feedback block presence differs"),
+    }
+}
+
+/// Validate one trace file against the §12-2 schema contract.
+fn validate_trace(path: &Path, evolutions: u64, label: &str) {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{label}: {e}"));
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 2, "{label}: at least meta + end");
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut stages: BTreeSet<String> = BTreeSet::new();
+    let mut evicted = 0u64;
+    for (i, line) in lines.iter().enumerate() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("{label}: line {i}: {e}"));
+        // Keys are emitted sorted, so parse→Display is byte-exact.
+        assert_eq!(j.to_string(), *line, "{label}: line {i} round-trips");
+        let ev = j.get("ev").unwrap().as_str().unwrap().to_string();
+        match ev.as_str() {
+            "meta" => assert_eq!(i, 0, "{label}: meta leads the trace"),
+            "span" => {
+                stages.insert(j.get("stage").unwrap().as_str().unwrap().to_string());
+            }
+            "audit" => {
+                for k in ["arm", "plan"] {
+                    assert!(
+                        !j.get(k).unwrap().as_str().unwrap().is_empty(),
+                        "{label}: line {i}: audit {k} present"
+                    );
+                }
+            }
+            "anomaly" => {}
+            "end" => {
+                assert_eq!(i + 1, lines.len(), "{label}: end closes the trace");
+                evicted = j.get("evicted").unwrap().as_u64().unwrap();
+                let spans = j.get("spans").unwrap().as_u64().unwrap();
+                assert_eq!(
+                    spans,
+                    kinds.get("span").copied().unwrap_or(0),
+                    "{label}: footer span total matches the lines written"
+                );
+            }
+            other => panic!("{label}: line {i}: unknown ev {other:?}"),
+        }
+        *kinds.entry(ev).or_insert(0) += 1;
+    }
+    assert_eq!(kinds.get("meta"), Some(&1), "{label}: exactly one meta");
+    assert_eq!(kinds.get("end"), Some(&1), "{label}: exactly one end");
+    for s in ALL_STAGES {
+        assert!(stages.contains(s.name()), "{label}: stage {:?} never spanned", s.name());
+    }
+    if evicted == 0 {
+        assert_eq!(
+            kinds.get("audit").copied().unwrap_or(0),
+            evolutions,
+            "{label}: one audit line per evolution when nothing evicted"
+        );
+    }
+}
+
+fn trace_path(dir: &Path, name: &str) -> PathBuf {
+    dir.join(format!("{name}.ndjson"))
+}
+
+#[test]
+fn tracing_is_strictly_additive_across_all_three_presets() {
+    let manifest = Manifest::synthetic();
+    let dir = std::env::temp_dir().join(format!("obs_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = FleetConfig {
+        devices: 6,
+        shards: 2,
+        duration_s: 1800.0,
+        seed: 17,
+        task: "d3".to_string(),
+        cache_stripes: 4,
+        ..FleetConfig::default()
+    };
+    let dcfg = DispatchConfig::default();
+    let fb_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..cfg.clone() };
+
+    // (label, untraced preset, traced preset) — presets are rebuilt
+    // because with_trace consumes the config.
+    let presets: [(&str, PipelineConfig, PipelineConfig); 3] = [
+        ("direct", PipelineConfig::direct(&cfg), PipelineConfig::direct(&cfg)),
+        (
+            "dispatch",
+            PipelineConfig::dispatch(&cfg, &dcfg),
+            PipelineConfig::dispatch(&cfg, &dcfg),
+        ),
+        (
+            "feedback",
+            PipelineConfig::feedback(&fb_cfg, &dcfg),
+            PipelineConfig::feedback(&fb_cfg, &dcfg),
+        ),
+    ];
+    for (label, untraced, traced_cfg) in presets {
+        let path = trace_path(&dir, label);
+        let plain = run_pipeline(&manifest, &untraced).unwrap();
+        let traced = run_pipeline(
+            &manifest,
+            &traced_cfg.with_trace(Some(TraceConfig::new(path.to_str().unwrap()))),
+        )
+        .unwrap();
+        assert_reports_identical(&plain, &traced, label);
+        assert!(traced.evolutions > 0, "{label}: fleets evolve, so the audit check bites");
+        validate_trace(&path, traced.evolutions as u64, label);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn tiny_ring_evictions_are_reported_in_the_footer() {
+    // A capacity-1 ring under a real run must evict; the end footer's
+    // `evicted` has to carry the workers' summed count.
+    let manifest = Manifest::synthetic();
+    let dir = std::env::temp_dir().join(format!("obs_ring_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = trace_path(&dir, "tiny");
+    let cfg = FleetConfig {
+        devices: 4,
+        shards: 2,
+        duration_s: 1800.0,
+        seed: 3,
+        task: "d3".to_string(),
+        cache_stripes: 4,
+        ..FleetConfig::default()
+    };
+    let tc = TraceConfig { path: path.to_str().unwrap().to_string(), ring_capacity: 1 };
+    let report =
+        run_pipeline(&manifest, &PipelineConfig::direct(&cfg).with_trace(Some(tc))).unwrap();
+    assert!(report.evolutions > 0);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let end = Json::parse(text.lines().last().unwrap()).unwrap();
+    assert_eq!(end.get("ev").unwrap().as_str().unwrap(), "end");
+    assert!(
+        end.get("evicted").unwrap().as_u64().unwrap() > 0,
+        "capacity-1 ring under a multi-span run must evict"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Streamed telemetry block parity (§12-1)
+// ---------------------------------------------------------------------
+
+fn random_frame(rng: &mut Rng) -> LoadTelemetry {
+    LoadTelemetry {
+        windows: rng.below(50) as u64,
+        arrival_rate_per_s: rng.range(0.0, 100.0),
+        service_rate_per_s: rng.range(0.0, 200.0),
+        shed_rate: rng.range(0.0, 1.0),
+        queue_depth: rng.range(0.0, 20.0),
+        batch_occupancy: rng.range(1.0, 8.0),
+    }
+}
+
+#[test]
+fn streamed_telemetry_block_matches_the_tree_form() {
+    // The old implementation built the block as a BTreeMap tree:
+    // frame.to_json(), `windows` overridden by the fleet max, the µ̂₀
+    // prior added, and per-archetype frames as a name-keyed (so
+    // alphabetical) object.  The streamed writer must reproduce those
+    // bytes exactly — including when the canonical archetype vec order
+    // differs from the sorted wire order.
+    let mut rng = Rng::new(0x7E1E);
+    for round in 0..50u32 {
+        let frames = ["worker", "commuter", "sensor"]
+            .into_iter()
+            .map(|name| ArchetypeFrame { archetype: name, frame: random_frame(&mut rng) })
+            .collect::<Vec<_>>();
+        let block = FeedbackBlock {
+            config: FeedbackConfig::on(),
+            windows: rng.below(1000) as u64,
+            telemetry: random_frame(&mut rng),
+            service_rate_prior_per_s: rng.range(0.0, 500.0),
+            acc_loss_evo_mean: rng.range(0.0, 0.05),
+            per_archetype: if round % 3 == 0 { None } else { Some(frames) },
+        };
+
+        let expected = {
+            let mut m = match block.telemetry.to_json() {
+                Json::Obj(m) => m,
+                other => panic!("frame JSON is an object, got {other:?}"),
+            };
+            m.insert("windows".into(), Json::Num(block.windows as f64));
+            m.insert(
+                "service_rate_prior_per_s".into(),
+                Json::Num(block.service_rate_prior_per_s),
+            );
+            if let Some(frames) = &block.per_archetype {
+                let mut arch = BTreeMap::new();
+                for af in frames {
+                    arch.insert(af.archetype.to_string(), af.frame.to_json());
+                }
+                m.insert("archetypes".into(), Json::Obj(arch));
+            }
+            Json::Obj(m).to_string()
+        };
+
+        let mut streamed = String::new();
+        {
+            let mut w = JsonWriter::new(&mut streamed);
+            block.write_telemetry_json(&mut w).unwrap();
+            assert!(w.is_complete(), "round {round}");
+        }
+        assert_eq!(streamed, expected, "round {round}: streamed == tree bytes");
+        assert_eq!(
+            block.telemetry_json().to_string(),
+            expected,
+            "round {round}: adapter parses back to the same bytes"
+        );
+    }
+}
