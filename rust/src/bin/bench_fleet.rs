@@ -28,24 +28,27 @@ use adaspring::coordinator::Manifest;
 use adaspring::fleet::{run_fleet, run_pipeline, FleetConfig, FleetReport, PipelineConfig};
 use adaspring::metrics::Table;
 use adaspring::obs::{TraceConfig, ALL_STAGES};
+use adaspring::util::bench::guard_overwrite;
 use adaspring::util::cli::Args;
 use adaspring::util::json::Json;
 use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "check-floor", "json-out", "sweep", "csv",
+    "load", "check-floor", "json-out", "metrics-json", "sweep", "csv", "metrics",
 ];
 
-const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv"];
+const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "metrics"];
 
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--feedback off] [--load X] [--trace-out PATH] [--check-floor PATH] \
-                     [--json-out PATH] [--sweep] [--csv]\n\
+                     [--feedback off] [--load X] [--trace-out PATH] [--metrics] \
+                     [--metrics-json PATH] [--check-floor PATH] [--json-out PATH] [--sweep] \
+                     [--csv]\n\
                      (--feedback on needs the dispatch path: bench_dispatch / bench_feedback; \
-                     --check-floor runs the traced-vs-untraced overhead check against \
-                     rust/obs_floor.json)";
+                     --metrics adds the \"metrics\" block to the report, --metrics-json also \
+                     writes the metrics/series blocks to PATH; --check-floor runs the \
+                     traced-vs-untraced overhead check against rust/obs_floor.json)";
 
 fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())
@@ -76,23 +79,39 @@ fn main() -> Result<()> {
     let report = run_traced(&bench, &cfg)?;
     print_summary(&report);
     bench.print_table(&report.archetype_table());
-    bench.emit_json("fleet", &report.to_json())?;
+    let json = report.to_json();
+    bench.emit_json("fleet", &json)?;
+    if let Some(path) = bench.args.get("metrics-json") {
+        // The metrics/series blocks alone — the CI BENCH_metrics.json
+        // artifact, small enough to eyeball in a workflow run.
+        guard_overwrite(&bench.args, path)?;
+        let mut m = BTreeMap::new();
+        for key in ["metrics", "series"] {
+            if let Ok(block) = json.get(key) {
+                m.insert(key.to_string(), block.clone());
+            }
+        }
+        Json::Obj(m).write_to(path)?;
+        println!("metrics JSON written to {path}");
+    }
     Ok(())
 }
 
 /// The direct fleet run, through the flight recorder when `--trace-out`
-/// is set (the untraced path stays the plain [`run_fleet`] wrapper).
+/// is set and the metrics plane when `--metrics` / `--metrics-json` is
+/// (the bare path stays the plain [`run_fleet`] wrapper).
 fn run_traced(bench: &Bench, cfg: &FleetConfig) -> Result<FleetReport> {
-    match bench.trace_out() {
-        Some(path) => {
-            if cfg.feedback.enabled {
-                bail!("the feedback loop needs the dispatch path (bench_dispatch / bench_feedback)");
-            }
-            let pcfg = PipelineConfig::direct(cfg).with_trace(Some(TraceConfig::new(path)));
-            run_pipeline(&bench.manifest, &pcfg)
-        }
-        None => run_fleet(&bench.manifest, cfg),
+    let metrics = bench.args.flag("metrics") || bench.args.get("metrics-json").is_some();
+    if bench.trace_out().is_none() && !metrics {
+        return run_fleet(&bench.manifest, cfg);
     }
+    if cfg.feedback.enabled {
+        bail!("the feedback loop needs the dispatch path (bench_dispatch / bench_feedback)");
+    }
+    let pcfg = PipelineConfig::direct(cfg)
+        .with_trace(bench.trace_out().map(TraceConfig::new))
+        .with_metrics(metrics);
+    run_pipeline(&bench.manifest, &pcfg)
 }
 
 fn print_summary(r: &FleetReport) {
@@ -158,13 +177,15 @@ fn sweep(bench: &Bench) -> Result<()> {
     Ok(())
 }
 
-/// The §12 overhead gate (CI: `--check-floor rust/obs_floor.json`):
-/// best-of-3 wall-clock with tracing off vs on must stay within the
-/// committed overhead fraction plus a fixed timer-noise slack; every
-/// trace line must re-parse through [`Json::parse`]; spans must cover
-/// all five pipeline stages; and, when the ring evicted nothing, one
-/// audit must have landed per evolution.  Emits the measurements as the
-/// CI `BENCH_obs.json` artifact via `--json-out`.
+/// The §12/§13 overhead gate (CI: `--check-floor rust/obs_floor.json`):
+/// best-of-3 wall-clock with observability off vs tracing on vs metrics
+/// on — both instrumented modes must stay within the committed overhead
+/// fraction plus a fixed timer-noise slack; every trace line must
+/// re-parse through [`Json::parse`]; spans must cover all five pipeline
+/// stages; when the ring evicted nothing, one audit must have landed
+/// per evolution; and the metered report must carry a well-formed
+/// `"metrics"` block.  Emits the measurements as the CI
+/// `BENCH_obs.json` artifact via `--json-out`.
 fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
     let cfg = config_from(&bench.args)?;
     if cfg.feedback.enabled {
@@ -178,17 +199,19 @@ fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
     });
 
     println!(
-        "# Trace overhead check — {} devices x {:.1} h over {} shards, best of 3 per mode\n",
+        "# Observability overhead check — {} devices x {:.1} h over {} shards, best of 3 per mode\n",
         cfg.devices,
         cfg.duration_s / 3600.0,
         cfg.shards
     );
     let mut off_best = f64::INFINITY;
     let mut on_best = f64::INFINITY;
+    let mut met_best = f64::INFINITY;
     let mut traced: Option<FleetReport> = None;
+    let mut metered: Option<FleetReport> = None;
     for _ in 0..3 {
-        // Interleaved off/on runs, so machine drift (thermal, noisy
-        // neighbors) debits both sides equally.
+        // Interleaved off/on/metered runs, so machine drift (thermal,
+        // noisy neighbors) debits every side equally.
         let r_off = run_fleet(&bench.manifest, &cfg)?;
         off_best = off_best.min(r_off.wall_ms);
         let pcfg = PipelineConfig::direct(&cfg)
@@ -196,8 +219,13 @@ fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
         let r_on = run_pipeline(&bench.manifest, &pcfg)?;
         on_best = on_best.min(r_on.wall_ms);
         traced = Some(r_on);
+        let mcfg = PipelineConfig::direct(&cfg).with_metrics(true);
+        let r_met = run_pipeline(&bench.manifest, &mcfg)?;
+        met_best = met_best.min(r_met.wall_ms);
+        metered = Some(r_met);
     }
     let traced = traced.expect("three traced runs completed");
+    let metered = metered.expect("three metered runs completed");
 
     // Schema sanity on the last trace file.
     let text = std::fs::read_to_string(&trace_path)?;
@@ -251,12 +279,47 @@ fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
             max_frac * 100.0
         ));
     }
+    // Metrics recording rides the same gate (§13): histogram pushes and
+    // counter bumps must be as cheap as the trace plane they sit beside.
+    if met_best > ceiling_ms {
+        failures.push(format!(
+            "metered best {met_best:.1} ms above ceiling {ceiling_ms:.1} ms \
+             (uninstrumented best {off_best:.1} ms + {:.0}% + {slack_ms} ms slack)",
+            max_frac * 100.0
+        ));
+    }
+    // And the metered report must carry live data — a hollow registry
+    // would sail under the timing gate while recording nothing.
+    let met_json = metered.to_json();
+    let metric_u64 = |path: &[&str]| -> u64 {
+        let mut j = &met_json;
+        for key in path {
+            match j.get(key) {
+                Ok(next) => j = next,
+                Err(_) => return 0,
+            }
+        }
+        j.as_u64().unwrap_or(0)
+    };
+    let met_steps = metric_u64(&["metrics", "counters", "steps"]);
+    let met_exec_spans = metric_u64(&["metrics", "stages", "execution", "spans"]);
+    if met_steps == 0 || met_exec_spans == 0 {
+        failures.push(format!(
+            "metered report's metrics block is hollow: counters.steps={met_steps}, \
+             stages.execution.spans={met_exec_spans} (want both > 0)"
+        ));
+    }
 
     let overhead = (on_best - off_best).max(0.0) / off_best.max(1e-9);
+    let met_overhead = (met_best - off_best).max(0.0) / off_best.max(1e-9);
     let mut m = BTreeMap::new();
     m.insert("off_best_ms".into(), Json::Num(off_best));
     m.insert("on_best_ms".into(), Json::Num(on_best));
+    m.insert("met_best_ms".into(), Json::Num(met_best));
     m.insert("overhead_fraction".into(), Json::Num(overhead));
+    m.insert("met_overhead_fraction".into(), Json::Num(met_overhead));
+    m.insert("metrics_steps".into(), Json::Num(met_steps as f64));
+    m.insert("metrics_execution_spans".into(), Json::Num(met_exec_spans as f64));
     m.insert("max_overhead_fraction".into(), Json::Num(max_frac));
     m.insert("slack_ms".into(), Json::Num(slack_ms));
     m.insert("ceiling_ms".into(), Json::Num(ceiling_ms));
@@ -279,10 +342,12 @@ fn check_obs_floor(bench: &Bench, floor_path: &str) -> Result<()> {
         std::process::exit(1);
     }
     println!(
-        "floor check ok: untraced best {off_best:.1} ms, traced best {on_best:.1} ms \
-         (overhead {:.1}% <= {:.0}% + {slack_ms} ms slack); {lines} trace lines parse, \
-         {} spans over {} stages, {audits} audits for {} evolutions",
+        "floor check ok: off best {off_best:.1} ms, traced best {on_best:.1} ms \
+         ({:.1}%), metered best {met_best:.1} ms ({:.1}%) <= {:.0}% + {slack_ms} ms slack; \
+         {lines} trace lines parse, {} spans over {} stages, {audits} audits for {} \
+         evolutions, metrics steps={met_steps} execution spans={met_exec_spans}",
         overhead * 100.0,
+        met_overhead * 100.0,
         max_frac * 100.0,
         count("span"),
         stage_set.len(),

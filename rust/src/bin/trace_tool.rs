@@ -1,0 +1,59 @@
+//! Offline trace analyzer (DESIGN.md §13-4): turn a flight-recorder
+//! ndjson file (`--trace-out` output, §12) into a queryable report.
+//!
+//! One pass over the trace: strict schema validation (every violation
+//! collected with its line number), per-stage wall-time breakdowns, the
+//! per-window cross-shard critical path, and the evolution audit-trail
+//! summary (trigger arms, plan-cache dispositions, λ2 drift, search and
+//! evolution time distributions).  The JSON report goes to stdout and —
+//! under `--json-out PATH` — to disk, refusing to overwrite an existing
+//! file unless `--force` is passed.
+//!
+//! Exit status: 0 for a clean trace, 1 if any schema violations were
+//! found (CI runs this over the bench-smoke traces and fails on drift),
+//! 2 for usage or I/O errors.
+
+use anyhow::{anyhow, Result};
+
+use adaspring::obs::analyze::analyze_file;
+use adaspring::util::bench::guard_overwrite;
+use adaspring::util::cli::Args;
+
+const USAGE: &str = "usage: trace_tool --trace PATH [--json-out PATH] [--force]
+  --trace PATH      flight-recorder ndjson file to analyze (required)
+  --json-out PATH   also write the JSON report to PATH
+  --force           allow --json-out to overwrite an existing file";
+
+fn main() {
+    match run() {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("trace_tool: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn run() -> Result<i32> {
+    let args = Args::from_env();
+    args.enforce_usage(&["trace", "json-out", "force"], &["force"], USAGE);
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow!("--trace PATH is required\n{USAGE}"))?;
+    let analysis = analyze_file(path)?;
+    let report = analysis.to_json();
+    if let Some(out) = args.get("json-out") {
+        guard_overwrite(&args, out)?;
+        std::fs::write(out, &report)?;
+    }
+    print!("{report}");
+    if analysis.violations.is_empty() {
+        Ok(0)
+    } else {
+        for v in &analysis.violations {
+            eprintln!("violation: {v}");
+        }
+        eprintln!("trace_tool: {} schema violation(s) in {path}", analysis.violations.len());
+        Ok(1)
+    }
+}

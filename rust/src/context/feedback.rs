@@ -152,6 +152,15 @@ impl FeedbackConfig {
         }
     }
 
+    /// The load-ratcheted λ2 floor at `shed_rate` — the control law's
+    /// (a)-term, shared by [`constraints`](Self::constraints) and the
+    /// metrics plane's per-window series capture (DESIGN.md §13-3) so
+    /// the reported floor cannot drift from the one applied.  0.3 is the
+    /// paper's §6.3 base floor; the cap bounds only the load ratchet.
+    pub fn lambda2_floor(&self, shed_rate: f64) -> f64 {
+        (0.3 + self.shed_lambda2_gain * shed_rate.clamp(0.0, 1.0)).min(self.lambda2_cap)
+    }
+
     /// Derive the Eq.-1 constraint set from a context frame — the single
     /// constraint-derivation funnel of the stack.  Disabled (or
     /// load-free) frames reproduce the paper's §6.3 rule bit-exactly;
@@ -175,12 +184,9 @@ impl FeedbackConfig {
             return base;
         };
         // (a) shed rate ratchets compression pressure: the λ2 floor
-        // rises with the smoothed shed fraction.  The cap bounds only
-        // the load-ratcheted floor — the paper's battery-derived λ2 is
-        // never weakened by attaching telemetry.
-        let floor = (0.3 + self.shed_lambda2_gain * load.shed_rate.clamp(0.0, 1.0))
-            .min(self.lambda2_cap);
-        let lambda2 = base.lambda2.max(floor);
+        // rises with the smoothed shed fraction.  The paper's
+        // battery-derived λ2 is never weakened by attaching telemetry.
+        let lambda2 = base.lambda2.max(self.lambda2_floor(load.shed_rate));
         // (b) queue delay tightens the latency budget via the G/D/1
         // service-rate estimate.
         let latency_budget = if load.utilization() >= self.tighten_above_utilization {

@@ -26,7 +26,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::context::events::Event;
 use crate::fleet::scenarios::Archetype;
-use crate::metrics::Series;
+use crate::obs::metrics::Histogram;
 
 use super::DispatchConfig;
 
@@ -201,7 +201,7 @@ pub struct ShardAdmission {
     pub verdicts: Vec<Vec<AdmissionVerdict>>,
     pub stats: AdmissionStats,
     /// Queue waits of finally-admitted requests, microseconds.
-    pub wait_us: Series,
+    pub wait_us: Histogram,
 }
 
 /// Batch-window key of arrival instant `t` (window 0 disables batching:
@@ -349,7 +349,7 @@ pub fn admit_shard(
 
     // Waits of the *finally* admitted set (displacement can overturn an
     // earlier admit, so collect at the end rather than during the walk).
-    let mut wait_us = Series::default();
+    let mut wait_us = Histogram::default();
     for vs in &verdicts {
         for v in vs {
             if let AdmissionVerdict::Admitted { wait_us: w, .. } = v {

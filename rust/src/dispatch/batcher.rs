@@ -30,7 +30,7 @@
 use std::collections::BTreeMap;
 
 use crate::fleet::DeviceSession;
-use crate::metrics::Series;
+use crate::obs::metrics::Histogram;
 
 use super::DispatchConfig;
 
@@ -95,7 +95,7 @@ pub struct BatchStats {
     pub histogram: BTreeMap<usize, u64>,
     /// End-to-end dispatch latency per request (wait + batched service),
     /// microseconds.
-    pub total_us: Series,
+    pub total_us: Histogram,
 }
 
 impl BatchStats {
@@ -116,7 +116,7 @@ impl BatchStats {
         for (size, count) in &o.histogram {
             *self.histogram.entry(*size).or_insert(0) += count;
         }
-        self.total_us.extend_from(&o.total_us);
+        self.total_us.merge(&o.total_us);
     }
 }
 
@@ -256,14 +256,14 @@ mod tests {
             served: 6,
             size_max: 4,
             histogram: [(2usize, 1u64), (4, 1)].into_iter().collect(),
-            total_us: Series::default(),
+            total_us: Histogram::default(),
         };
         let b = BatchStats {
             batches: 1,
             served: 2,
             size_max: 2,
             histogram: [(2usize, 1u64)].into_iter().collect(),
-            total_us: Series::default(),
+            total_us: Histogram::default(),
         };
         a.merge(&b);
         assert_eq!((a.batches, a.served, a.size_max), (3, 8, 4));

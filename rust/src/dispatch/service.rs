@@ -21,7 +21,7 @@
 //! stream — the same replayability contract as `admit_shard` (§8-1).
 
 use crate::fleet::scenarios::Archetype;
-use crate::metrics::Series;
+use crate::obs::metrics::Histogram;
 
 use super::admission::{window_key, AdmissionStats, AdmissionVerdict, RateLimiter, ShedReason};
 use super::{BackpressurePolicy, DispatchConfig};
@@ -102,7 +102,7 @@ pub struct StreamingAdmission {
     /// Admission counters (merged fleet-wide by the report).
     pub stats: AdmissionStats,
     /// Queue waits of admitted requests, microseconds.
-    pub wait_us: Series,
+    pub wait_us: Histogram,
 }
 
 impl StreamingAdmission {
@@ -111,7 +111,7 @@ impl StreamingAdmission {
             limiter: cfg.rate_limit.map(RateLimiter::new),
             queue: ServiceQueue::new(cfg.queue_capacity),
             stats: AdmissionStats::default(),
-            wait_us: Series::default(),
+            wait_us: Histogram::default(),
         }
     }
 
@@ -161,7 +161,7 @@ impl StreamingAdmission {
     }
 
     /// Consume into the worker outcome's (stats, waits) pair.
-    pub fn into_parts(self) -> (AdmissionStats, Series) {
+    pub fn into_parts(self) -> (AdmissionStats, Histogram) {
         (self.stats, self.wait_us)
     }
 }

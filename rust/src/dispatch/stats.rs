@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::metrics::Series;
+use crate::obs::metrics::Histogram;
 use crate::util::json::Json;
 
 use super::admission::AdmissionStats;
@@ -29,7 +29,7 @@ pub struct DispatchReport {
     /// Merged admission counters across shards.
     pub admission: AdmissionStats,
     /// Queue waits of admitted requests, microseconds.
-    pub wait_us: Series,
+    pub wait_us: Histogram,
     /// Merged batch-execution stats across shards.
     pub batches: BatchStats,
     pub steals: u64,
@@ -53,7 +53,7 @@ impl DispatchReport {
         cfg: &DispatchConfig,
         workers: usize,
         admission: AdmissionStats,
-        wait_us: Series,
+        wait_us: Histogram,
         batches: BatchStats,
         steals: u64,
         sessions_stolen: u64,
@@ -176,9 +176,9 @@ impl DispatchReport {
     }
 }
 
-/// p50/p95/max/mean summary of a microsecond series, in milliseconds
+/// p50/p95/max/mean summary of a microsecond histogram, in milliseconds
 /// (zeros when empty — degenerate fleets must stay NaN-free).
-fn series_summary_ms(s: &Series) -> Json {
+fn series_summary_ms(s: &Histogram) -> Json {
     let mut m = BTreeMap::new();
     let (p50, p95, max, mean) = if s.is_empty() {
         (0.0, 0.0, 0.0, 0.0)
@@ -204,7 +204,7 @@ mod tests {
             &cfg,
             0,
             AdmissionStats::default(),
-            Series::default(),
+            Histogram::default(),
             BatchStats::default(),
             0,
             0,
@@ -237,13 +237,13 @@ mod tests {
             served: 5,
             size_max: 3,
             histogram: [(2usize, 1u64), (3, 1)].into_iter().collect(),
-            total_us: Series::default(),
+            total_us: Histogram::default(),
         };
         let r = DispatchReport::new(
             &cfg,
             2,
             AdmissionStats::default(),
-            Series::default(),
+            Histogram::default(),
             batches,
             3,
             7,

@@ -67,7 +67,7 @@ use crate::dispatch::{
     AdmissionStats, AdmissionVerdict, BatchStats, DispatchConfig, DispatchReport, ShardAdmission,
     StealPool, StreamingAdmission,
 };
-use crate::metrics::Series;
+use crate::obs::metrics::{merge_window_series, Histogram, MetricsRegistry, WindowMetric};
 use crate::obs::{ShardTracer, Stage, StageSpan, TraceConfig, TraceEvent, TraceSink};
 use crate::runtime::ShardedCache;
 
@@ -144,6 +144,12 @@ pub struct PipelineConfig {
     /// every preset — takes zero extra timestamps and keeps every
     /// report bit-identical to the untraced run.
     pub trace: Option<TraceConfig>,
+    /// Metrics plane (DESIGN.md §13): per-stage wall-time histograms,
+    /// named counters/gauges, and the per-window `"series"` points.
+    /// Recording is observational-only — `false`, the preset default,
+    /// keeps every simulated result bit-identical to the metered run
+    /// (`tests/metrics.rs` pins this).
+    pub metrics: bool,
 }
 
 impl PipelineConfig {
@@ -154,6 +160,7 @@ impl PipelineConfig {
             dispatch: DispatchConfig::passthrough(),
             stages: StagePlan::direct(),
             trace: None,
+            metrics: false,
         }
     }
 
@@ -165,6 +172,7 @@ impl PipelineConfig {
             dispatch: dispatch.clone(),
             stages: StagePlan::dispatch(),
             trace: None,
+            metrics: false,
         }
     }
 
@@ -178,6 +186,7 @@ impl PipelineConfig {
             dispatch: dispatch.clone(),
             stages: StagePlan::feedback(),
             trace: None,
+            metrics: false,
         }
     }
 
@@ -186,6 +195,13 @@ impl PipelineConfig {
     /// wiring.
     pub fn with_trace(mut self, trace: Option<TraceConfig>) -> PipelineConfig {
         self.trace = trace;
+        self
+    }
+
+    /// Arm (or disarm) the metrics plane — builder form of setting
+    /// [`PipelineConfig::metrics`], the bench bins' `--metrics` wiring.
+    pub fn with_metrics(mut self, metrics: bool) -> PipelineConfig {
+        self.metrics = metrics;
         self
     }
 
@@ -278,13 +294,17 @@ struct WorkerOutcome {
     /// DESIGN.md §12-5).
     steps: u64,
     admission: AdmissionStats,
-    wait_us: Series,
+    wait_us: Histogram,
     /// Batches priced inside the worker (drain mode); the `Windowed`
     /// post-pass fills the fleet totals after the join instead.
     batches: BatchStats,
     telemetry: Option<WorkerTelemetry>,
     /// Events this worker's flight-recorder ring evicted (0 untraced).
     trace_evicted: u64,
+    /// The worker's metrics-plane registry (`None` with metrics off).
+    registry: Option<MetricsRegistry>,
+    /// Per-window series points (windowed runs with metrics on).
+    series: Vec<WindowMetric>,
 }
 
 /// The telemetry stage's per-worker rollup.
@@ -348,22 +368,35 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
 
     let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(cfg.devices);
     let mut admission = AdmissionStats::default();
-    let mut wait_us = Series::default();
+    let mut wait_us = Histogram::default();
     let mut batches = BatchStats::default();
     let mut busy_ms = vec![0.0f64; workers];
     let mut worker_steps = vec![0u64; workers];
     let mut trace_evicted = 0u64;
     let mut telemetry: Vec<WorkerTelemetry> = Vec::new();
+    let mut metrics: Option<MetricsRegistry> = None;
+    let mut series_per_worker: Vec<Vec<WindowMetric>> = Vec::new();
     for (w, outcome) in outcomes.into_iter().enumerate() {
         let o = outcome?;
         sessions.extend(o.finished);
         admission.merge(&o.admission);
-        wait_us.extend_from(&o.wait_us);
+        wait_us.merge(&o.wait_us);
         batches.merge(&o.batches);
         busy_ms[w] = o.busy_ms;
         worker_steps[w] = o.steps;
         trace_evicted += o.trace_evicted;
         telemetry.extend(o.telemetry);
+        // Registry merge is order-independent (§13-2), so the fold over
+        // worker index order is as good as any.
+        if let Some(r) = o.registry {
+            match metrics.as_mut() {
+                Some(m) => m.merge(&r),
+                None => metrics = Some(r),
+            }
+        }
+        if !o.series.is_empty() {
+            series_per_worker.push(o.series);
+        }
     }
 
     // Deterministic home-shard order: batch membership and every
@@ -382,18 +415,23 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
             while j < sessions.len() && sessions[j].home_shard == shard {
                 j += 1;
             }
-            let tb = sink.as_ref().map(|_| Instant::now());
+            let tb = (sink.is_some() || metrics.is_some()).then(Instant::now);
             let stats = assemble_batches(dcfg, &mut sessions[i..j]);
+            let wall_us = us_since(tb);
             if let Some(s) = &sink {
                 s.write(&TraceEvent::Span(StageSpan {
                     shard: shard as u32,
                     window: 0,
                     t_s: 0.0,
                     stage: Stage::Batching,
-                    wall_us: us_since(tb),
+                    wall_us,
                     items: stats.served,
                     aux: stats.batches,
                 }))?;
+            }
+            if let Some(m) = metrics.as_mut() {
+                m.stage_span(Stage::Batching, wall_us, stats.served);
+                m.counter_add("batches", stats.batches);
             }
             batches.merge(&stats);
             i = j;
@@ -475,6 +513,9 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
         });
     }
 
+    report.metrics = metrics;
+    report.series = merge_window_series(&series_per_worker);
+
     // Trace footer: the sink's own event totals plus the workers'
     // summed ring evictions, then flush.
     if let Some(sink) = sink {
@@ -517,11 +558,43 @@ fn step_until(
     Ok(steps)
 }
 
-/// Drain every session's buffered evolution audits into the tracer;
+/// A worker's observability taps: the flight-recorder tracer (§12) and
+/// the metrics registry (§13).  Both planes are observational-only and
+/// share the stage-span instrumentation points; wall clocks are read
+/// only while at least one is live, so the bare hot path stays free of
+/// timestamp calls.
+struct Taps<'a> {
+    tracer: Option<ShardTracer<'a>>,
+    reg: Option<MetricsRegistry>,
+}
+
+impl Taps<'_> {
+    /// Is either plane recording?
+    fn live(&self) -> bool {
+        self.tracer.is_some() || self.reg.is_some()
+    }
+
+    /// Observability-gated timestamp (`None` with both planes off).
+    fn now(&self) -> Option<Instant> {
+        self.live().then(Instant::now)
+    }
+
+    /// Record one stage span into both live planes.
+    fn span(&mut self, span: StageSpan) {
+        if let Some(reg) = self.reg.as_mut() {
+            reg.stage_span(span.stage, span.wall_us, span.items);
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.span(span);
+        }
+    }
+}
+
+/// Drain every session's buffered evolution audits into the taps;
 /// returns (audit count, plan-cache hits, Σ evolution µs) — the
 /// evolution span's counters (§12-3).
 fn flush_audits(
-    tracer: &mut ShardTracer<'_>,
+    taps: &mut Taps<'_>,
     sessions: &mut [Box<DeviceSession>],
 ) -> Result<(u64, u64, f64)> {
     let (mut n, mut hits, mut evo_us) = (0u64, 0u64, 0.0f64);
@@ -532,8 +605,13 @@ fn flush_audits(
                 hits += 1;
             }
             evo_us += a.evolution_us;
-            tracer.audit(a)?;
+            if let Some(tr) = taps.tracer.as_mut() {
+                tr.audit(a)?;
+            }
         }
+    }
+    if let Some(reg) = taps.reg.as_mut() {
+        reg.counter_add("evolutions", n);
     }
     Ok((n, hits, evo_us))
 }
@@ -562,12 +640,20 @@ fn run_worker(
     let stages = pcfg.stages;
     // Trace plane (§12): a flight-recorder ring per worker, its spike
     // detector armed with the same thresholds as the feedback trigger's
-    // load-spike arm.
-    let mut tracer = sink.map(|s| {
-        let ring = pcfg.trace.as_ref().map(|t| t.ring_capacity).unwrap_or(1);
-        let spike = &cfg.feedback.spike;
-        ShardTracer::new(s, w as u32, ring, (spike.util_threshold, spike.shed_threshold))
-    });
+    // load-spike arm.  Metrics plane (§13): a registry per worker, every
+    // (stage, archetype) slot pre-registered so hot-path records never
+    // allocate.
+    let mut taps = Taps {
+        tracer: sink.map(|s| {
+            let ring = pcfg.trace.as_ref().map(|t| t.ring_capacity).unwrap_or(1);
+            let spike = &cfg.feedback.spike;
+            ShardTracer::new(s, w as u32, ring, (spike.util_threshold, spike.shed_threshold))
+        }),
+        reg: pcfg.metrics.then(|| {
+            let keys: Vec<&'static str> = ALL_ARCHETYPES.iter().map(|a| a.name()).collect();
+            MetricsRegistry::new(&keys)
+        }),
+    };
 
     // If this worker unwinds, don't leave stealing workers spinning on
     // the remaining-session count forever.
@@ -604,7 +690,9 @@ fn run_worker(
             }
         };
         session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
-        if tracer.is_some() {
+        if taps.live() {
+            // Both planes drain the audit buffer: the tracer onto the
+            // trail, the registry into the evolution counters.
             session.enable_trace();
         }
         sessions.push(Box::new(session));
@@ -613,67 +701,80 @@ fn run_worker(
     // Admission stage, `Bounded` flavor (§8-1): the deterministic
     // whole-trace pre-pass fixes every verdict before a session steps.
     let mut admission = AdmissionStats::default();
-    let mut wait_us = Series::default();
+    let mut wait_us = Histogram::default();
     if stages.admission == AdmissionMode::Bounded {
-        let ta = tracer.as_ref().map(|_| Instant::now());
+        let ta = taps.now();
         let inputs: Vec<(u64, Archetype, &[Event])> =
             sessions.iter().map(|s| (s.device_id, s.archetype, s.events())).collect();
+        if let Some(reg) = taps.reg.as_mut() {
+            // Submission attribution per device class (best-effort
+            // item breakdown, §13-2).
+            for (_, archetype, events) in &inputs {
+                reg.stage_items_keyed(Stage::Admission, archetype.index(), events.len() as u64);
+            }
+        }
         let ShardAdmission { verdicts, stats, wait_us: waits } = admit_shard(dcfg, &inputs);
         for (session, verdict) in sessions.iter_mut().zip(verdicts) {
             session.set_dispatch(verdict);
         }
         admission = stats;
         wait_us = waits;
-        if let Some(tr) = tracer.as_mut() {
-            tr.span(StageSpan {
-                shard: w as u32,
-                window: 0,
-                t_s: 0.0,
-                stage: Stage::Admission,
-                wall_us: us_since(ta),
-                items: admission.submitted,
-                aux: admission.shed_total(),
-            });
-        }
+        taps.span(StageSpan {
+            shard: w as u32,
+            window: 0,
+            t_s: 0.0,
+            stage: Stage::Admission,
+            wall_us: us_since(ta),
+            items: admission.submitted,
+            aux: admission.shed_total(),
+        });
     }
 
     // Execution stage, `Pool` flavor (§8-3): hand the sessions to the
     // shared work-stealing heap and step until the whole fleet is done.
     if let Some(pool) = pool {
         pool.seed(w, sessions);
-        let te = tracer.as_ref().map(|_| Instant::now());
+        let te = taps.now();
         let (mut finished, busy_ms, steps) = pool.drain(w, dcfg.stealing, cache)?;
-        let trace_evicted = match tracer {
-            Some(mut tr) => {
-                let shard = w as u32;
-                tr.span(StageSpan {
-                    shard,
-                    window: 0,
-                    t_s: 0.0,
-                    stage: Stage::Execution,
-                    wall_us: us_since(te),
-                    items: steps,
-                    aux: finished.len() as u64,
-                });
-                // Audits ride with whoever *finished* the session — under
-                // stealing, pool spans attribute to the worker index.
-                let (n, hits, evo_us) = flush_audits(&mut tr, &mut finished)?;
-                tr.span(StageSpan {
-                    shard,
-                    window: 0,
-                    t_s: 0.0,
-                    stage: Stage::Evolution,
-                    wall_us: evo_us,
-                    items: n,
-                    aux: hits,
-                });
-                // Batching spans come from the aggregator's Windowed
-                // post-pass; feedback never runs on the pool path.
-                tr.span(idle_span(shard, Stage::Feedback));
-                tr.finish()?
-            }
+        let shard = w as u32;
+        taps.span(StageSpan {
+            shard,
+            window: 0,
+            t_s: 0.0,
+            stage: Stage::Execution,
+            wall_us: us_since(te),
+            items: steps,
+            aux: finished.len() as u64,
+        });
+        // Audits ride with whoever *finished* the session — under
+        // stealing, pool spans attribute to the worker index.
+        let (n, hits, evo_us) = flush_audits(&mut taps, &mut finished)?;
+        taps.span(StageSpan {
+            shard,
+            window: 0,
+            t_s: 0.0,
+            stage: Stage::Evolution,
+            wall_us: evo_us,
+            items: n,
+            aux: hits,
+        });
+        if let Some(tr) = taps.tracer.as_mut() {
+            // Batching spans come from the aggregator's Windowed
+            // post-pass; feedback never runs on the pool path.  Idle
+            // spans complete the trace's five-stage contract but stay
+            // out of the registry (a dead stage has no wall sample).
+            tr.span(idle_span(shard, Stage::Feedback));
+        }
+        if let Some(reg) = taps.reg.as_mut() {
+            reg.counter_add("steps", steps);
+        }
+        let trace_evicted = match taps.tracer.take() {
+            Some(mut tr) => tr.finish()?,
             None => 0,
         };
+        if let Some(reg) = taps.reg.as_mut() {
+            reg.gauge_max("trace_evicted", trace_evicted as f64);
+        }
         return Ok(WorkerOutcome {
             finished,
             busy_ms,
@@ -683,6 +784,8 @@ fn run_worker(
             batches: BatchStats::default(),
             telemetry: None,
             trace_evicted,
+            registry: taps.reg,
+            series: Vec::new(),
         });
     }
 
@@ -698,41 +801,49 @@ fn run_worker(
     if !stages.windowed() {
         // Un-windowed pass (direct preset, or Bounded + Sharded): run
         // the shard to completion in one sweep.
-        let te = tracer.as_ref().map(|_| Instant::now());
+        let te = taps.now();
         let steps = step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
-        let trace_evicted = match tracer {
-            Some(mut tr) => {
-                let shard = w as u32;
-                if stages.admission == AdmissionMode::Off {
-                    tr.span(idle_span(shard, Stage::Admission));
-                }
-                tr.span(StageSpan {
-                    shard,
-                    window: 0,
-                    t_s: 0.0,
-                    stage: Stage::Execution,
-                    wall_us: us_since(te),
-                    items: steps,
-                    aux: sessions.len() as u64,
-                });
-                let (n, hits, evo_us) = flush_audits(&mut tr, &mut sessions)?;
-                tr.span(StageSpan {
-                    shard,
-                    window: 0,
-                    t_s: 0.0,
-                    stage: Stage::Evolution,
-                    wall_us: evo_us,
-                    items: n,
-                    aux: hits,
-                });
-                if stages.batching == BatchingMode::Off {
-                    tr.span(idle_span(shard, Stage::Batching));
-                }
-                tr.span(idle_span(shard, Stage::Feedback));
-                tr.finish()?
+        let shard = w as u32;
+        if let Some(tr) = taps.tracer.as_mut() {
+            if stages.admission == AdmissionMode::Off {
+                tr.span(idle_span(shard, Stage::Admission));
             }
+        }
+        taps.span(StageSpan {
+            shard,
+            window: 0,
+            t_s: 0.0,
+            stage: Stage::Execution,
+            wall_us: us_since(te),
+            items: steps,
+            aux: sessions.len() as u64,
+        });
+        let (n, hits, evo_us) = flush_audits(&mut taps, &mut sessions)?;
+        taps.span(StageSpan {
+            shard,
+            window: 0,
+            t_s: 0.0,
+            stage: Stage::Evolution,
+            wall_us: evo_us,
+            items: n,
+            aux: hits,
+        });
+        if let Some(tr) = taps.tracer.as_mut() {
+            if stages.batching == BatchingMode::Off {
+                tr.span(idle_span(shard, Stage::Batching));
+            }
+            tr.span(idle_span(shard, Stage::Feedback));
+        }
+        if let Some(reg) = taps.reg.as_mut() {
+            reg.counter_add("steps", steps);
+        }
+        let trace_evicted = match taps.tracer.take() {
+            Some(mut tr) => tr.finish()?,
             None => 0,
         };
+        if let Some(reg) = taps.reg.as_mut() {
+            reg.gauge_max("trace_evicted", trace_evicted as f64);
+        }
         return Ok(WorkerOutcome {
             busy_ms: wall0.elapsed().as_secs_f64() * 1e3,
             steps,
@@ -742,6 +853,8 @@ fn run_worker(
             telemetry: None,
             trace_evicted,
             finished: sessions,
+            registry: taps.reg,
+            series: Vec::new(),
         });
     }
 
@@ -821,8 +934,12 @@ fn run_worker(
     let mut ai = 0usize;
     let mut total_steps = 0u64;
     // Sessions done as of the previous window (execution-span counter;
-    // only maintained when tracing).
+    // only maintained when observed).
     let mut prev_done = 0u64;
+    // Per-window series points (§13-3); drain-mode pricing already
+    // isolates each window's latencies, so the window's `BatchStats`
+    // histogram *is* the snapshot delta.
+    let mut series: Vec<WindowMetric> = Vec::new();
     for win in 0..n_windows {
         let last = win + 1 == n_windows;
         let t1 = if last { f64::INFINITY } else { (win + 1) as f64 * tick };
@@ -831,23 +948,21 @@ fn run_worker(
         // Telemetry stage (1/2): push the current frame into every
         // session — its archetype's frame under keyed telemetry, the
         // shard frame otherwise.
-        let tf = tracer.as_ref().map(|_| Instant::now());
+        let tf = taps.now();
         let shard_frame = bank.shard_frame();
         let mu = shard_frame.service_rate_per_s;
         for s in sessions.iter_mut() {
             s.set_load(bank.frame_for(s.archetype.index()));
         }
-        if let Some(tr) = tracer.as_mut() {
-            tr.span(StageSpan {
-                shard: w as u32,
-                window: win,
-                t_s: win_t_s,
-                stage: Stage::Feedback,
-                wall_us: us_since(tf),
-                items: sessions.len() as u64,
-                aux: 0,
-            });
-        }
+        taps.span(StageSpan {
+            shard: w as u32,
+            window: win,
+            t_s: win_t_s,
+            stage: Stage::Feedback,
+            wall_us: us_since(tf),
+            items: sessions.len() as u64,
+            aux: 0,
+        });
 
         let mut sample = WindowSample {
             window: win,
@@ -865,7 +980,7 @@ fn run_worker(
 
         // Admission stage, `VirtualQueue` flavor: this window's arrivals
         // through the token buckets, then the G/D/1 queue at µ̂.
-        let ta = tracer.as_ref().map(|_| Instant::now());
+        let ta = taps.now();
         while ai < arrivals.len() && arrivals[ai].0 < t1 {
             let (t, _device, si, archetype) = arrivals[ai];
             ai += 1;
@@ -882,28 +997,30 @@ fn run_worker(
                     ks.shed += 1;
                 }
             }
+            if let Some(reg) = taps.reg.as_mut() {
+                // Per-class submission attribution: O(1), no allocation.
+                reg.stage_items_keyed(Stage::Admission, archetype.index(), 1);
+            }
             sessions[si].push_verdict(verdict);
         }
-        if let Some(tr) = tracer.as_mut() {
-            tr.span(StageSpan {
-                shard: w as u32,
-                window: win,
-                t_s: win_t_s,
-                stage: Stage::Admission,
-                wall_us: us_since(ta),
-                items: sample.arrivals,
-                aux: sample.shed,
-            });
-        }
+        taps.span(StageSpan {
+            shard: w as u32,
+            window: win,
+            t_s: win_t_s,
+            stage: Stage::Admission,
+            wall_us: us_since(ta),
+            items: sample.arrivals,
+            aux: sample.shed,
+        });
 
         // Execution stage: step sessions in simulated-time order to the
         // window edge (evolutions see the frame; admitted events serve).
-        let te = tracer.as_ref().map(|_| Instant::now());
+        let te = taps.now();
         let win_steps = step_until(&mut heap, &mut sessions, t1, cache)?;
         total_steps += win_steps;
-        if let Some(tr) = tracer.as_mut() {
+        if taps.live() {
             let done_now = sessions.iter().filter(|s| s.is_done()).count() as u64;
-            tr.span(StageSpan {
+            taps.span(StageSpan {
                 shard: w as u32,
                 window: win,
                 t_s: win_t_s,
@@ -915,8 +1032,8 @@ fn run_worker(
             prev_done = done_now;
             // Evolution stage (§12-3): the audits the window's steps
             // buffered, with the engine's own µs as the span's wall.
-            let (n, hits, evo_us) = flush_audits(tr, &mut sessions)?;
-            tr.span(StageSpan {
+            let (n, hits, evo_us) = flush_audits(&mut taps, &mut sessions)?;
+            taps.span(StageSpan {
                 shard: w as u32,
                 window: win,
                 t_s: win_t_s,
@@ -934,18 +1051,25 @@ fn run_worker(
         let window_limit =
             if t1.is_finite() { window_key(t1, dcfg.batch_window_s) } else { u64::MAX };
         let cap = dcfg.batch_cap_at(shard_frame.utilization());
-        let tb = tracer.as_ref().map(|_| Instant::now());
+        let tb = taps.now();
         let pricing = assemble_batches_window_capped(dcfg, &mut sessions, window_limit, cap);
-        if let Some(tr) = tracer.as_mut() {
-            tr.span(StageSpan {
-                shard: w as u32,
-                window: win,
-                t_s: win_t_s,
-                stage: Stage::Batching,
-                wall_us: us_since(tb),
-                items: pricing.stats.served,
-                aux: pricing.stats.batches,
-            });
+        taps.span(StageSpan {
+            shard: w as u32,
+            window: win,
+            t_s: win_t_s,
+            stage: Stage::Batching,
+            wall_us: us_since(tb),
+            items: pricing.stats.served,
+            aux: pricing.stats.batches,
+        });
+        if let Some(reg) = taps.reg.as_mut() {
+            // Served-work attribution per device class, from the same
+            // per-session sums the keyed telemetry stage uses.
+            for (s, &(served, _)) in sessions.iter().zip(&pricing.per_session) {
+                if served > 0 {
+                    reg.stage_items_keyed(Stage::Batching, s.archetype.index(), served);
+                }
+            }
         }
         sample.served = pricing.stats.served;
         sample.service_us_sum = pricing.service_us_sum;
@@ -984,10 +1108,32 @@ fn run_worker(
         // Telemetry stage (2/2): fold the window's counters in.
         bank.observe(&sample, &keyed_samples);
 
+        // Series point (§13-3): drain-mode pricing isolates this
+        // window's latencies, so its histogram is the snapshot delta;
+        // the λ2 floor is the one the folded frame puts in force for
+        // the *next* window's constraint derivations (§10-2).
+        if let Some(reg) = taps.reg.as_mut() {
+            reg.gauge_max("backlog_jobs", sample.backlog);
+            let lambda2_floor = if stages.feedback {
+                fb.lambda2_floor(bank.shard_frame().shed_rate)
+            } else {
+                fb.lambda2_floor(0.0)
+            };
+            series.push(WindowMetric {
+                window: win,
+                t_s: win_t_s,
+                latency_us: pricing.stats.total_us.clone(),
+                arrivals: sample.arrivals,
+                served: sample.served,
+                shed: sample.shed,
+                lambda2_floor,
+            });
+        }
+
         // Anomaly detection (§12-4): feed the folded frame through the
         // shed-spike detector; an idle→spiking transition force-flushes
         // the flight recorder so the lead-up windows hit disk.
-        if let Some(tr) = tracer.as_mut() {
+        if let Some(tr) = taps.tracer.as_mut() {
             let frame = bank.shard_frame();
             tr.observe_load(win, win_t_s, frame.utilization(), frame.shed_rate)?;
         }
@@ -1001,15 +1147,23 @@ fn run_worker(
         assemble_batches_window_capped(dcfg, &mut sessions, u64::MAX, dcfg.batch_cap());
     batches_total.merge(&final_pricing.stats);
 
-    let trace_evicted = match tracer {
-        Some(mut tr) => {
-            // Audits from safety-net steps (e.g. a zero-window run's
-            // startup evolutions) still reach the trail.
-            flush_audits(&mut tr, &mut sessions)?;
-            tr.finish()?
-        }
+    if taps.live() {
+        // Audits from safety-net steps (e.g. a zero-window run's
+        // startup evolutions) still reach the trail and the counters.
+        flush_audits(&mut taps, &mut sessions)?;
+    }
+    if let Some(reg) = taps.reg.as_mut() {
+        reg.counter_add("steps", total_steps);
+        reg.counter_add("batches", batches_total.batches);
+        reg.counter_add("windows", n_windows);
+    }
+    let trace_evicted = match taps.tracer.take() {
+        Some(mut tr) => tr.finish()?,
         None => 0,
     };
+    if let Some(reg) = taps.reg.as_mut() {
+        reg.gauge_max("trace_evicted", trace_evicted as f64);
+    }
     let (shard_frame, archetype_frames) = bank.into_frames();
     let (admission, wait_us) = adm.into_parts();
     Ok(WorkerOutcome {
@@ -1026,6 +1180,8 @@ fn run_worker(
         }),
         finished: sessions,
         trace_evicted,
+        registry: taps.reg,
+        series,
     })
 }
 

@@ -12,7 +12,8 @@ use super::session::DeviceReport;
 use crate::context::feedback::FeedbackConfig;
 use crate::context::telemetry::LoadTelemetry;
 use crate::dispatch::DispatchReport;
-use crate::metrics::{Series, Table};
+use crate::metrics::Table;
+use crate::obs::metrics::{write_series_json, Histogram, MetricsRegistry, WindowMetric};
 use crate::runtime::CacheStats;
 use crate::util::json::{Json, JsonWriter};
 
@@ -27,7 +28,11 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    fn from_series_us(s: &Series) -> LatencySummary {
+    /// Summarize a microsecond histogram in milliseconds.  Percentiles
+    /// come from the fixed-memory log-bucketed [`Histogram`]
+    /// (DESIGN.md §13-1) — within its documented relative-error bound of
+    /// the exact sample percentiles; count/mean/max are exact.
+    fn from_hist_us(s: &Histogram) -> LatencySummary {
         if s.is_empty() {
             return LatencySummary::default();
         }
@@ -101,6 +106,14 @@ pub struct FleetReport {
     /// JSON) whenever the loop is off — the off-path bit-parity
     /// guarantee.
     pub feedback: Option<FeedbackBlock>,
+    /// Merged per-stage metrics registry (DESIGN.md §13-2); `None` (and
+    /// absent from the JSON) unless the run recorded with `--metrics` —
+    /// the metrics-off bit-parity guarantee.
+    pub metrics: Option<MetricsRegistry>,
+    /// Per-window time-series points (DESIGN.md §13-3); empty (and
+    /// absent from the JSON) unless metrics recording ran on a windowed
+    /// pipeline.
+    pub series: Vec<WindowMetric>,
 }
 
 /// One archetype's fleet-merged telemetry frame (the pipeline's
@@ -213,8 +226,8 @@ impl FleetReport {
         plan: Option<CacheStats>,
         wall_ms: f64,
     ) -> FleetReport {
-        let mut latency_us = Series::default();
-        let mut search_us = Series::default();
+        let mut latency_us = Histogram::default();
+        let mut search_us = Histogram::default();
         let mut inferences = 0usize;
         let mut dropped = 0usize;
         let mut shed = 0usize;
@@ -226,8 +239,8 @@ impl FleetReport {
         let mut acc_loss_evo_sum = 0.0f64;
         let mut by_archetype: BTreeMap<&'static str, Vec<&DeviceReport>> = BTreeMap::new();
         for r in &reports {
-            latency_us.extend_from(&r.latency_us);
-            search_us.extend_from(&r.search_us);
+            latency_us.merge(&r.latency_us);
+            search_us.merge(&r.search_us);
             inferences += r.inferences;
             dropped += r.dropped;
             shed += r.shed;
@@ -245,7 +258,7 @@ impl FleetReport {
             .iter()
             .filter_map(|a| {
                 let rs = by_archetype.get(a.name())?;
-                let mut lat = Series::default();
+                let mut lat = Histogram::default();
                 let mut inf = 0usize;
                 let mut sh = 0usize;
                 let mut evo = 0usize;
@@ -254,7 +267,7 @@ impl FleetReport {
                 let mut hits = 0u64;
                 let mut misses = 0u64;
                 for r in rs {
-                    lat.extend_from(&r.latency_us);
+                    lat.merge(&r.latency_us);
                     inf += r.inferences;
                     sh += r.shed;
                     evo += r.evolutions;
@@ -269,7 +282,7 @@ impl FleetReport {
                     inferences: inf,
                     shed: sh,
                     evolutions: evo,
-                    latency: LatencySummary::from_series_us(&lat),
+                    latency: LatencySummary::from_hist_us(&lat),
                     battery_end_mean: battery / rs.len().max(1) as f64,
                     energy_j: energy,
                     cache_hits: hits,
@@ -289,7 +302,7 @@ impl FleetReport {
             dropped,
             shed,
             evolutions,
-            latency: LatencySummary::from_series_us(&latency_us),
+            latency: LatencySummary::from_hist_us(&latency_us),
             search_p50_us: search_pcts[0],
             search_p99_us: search_pcts[1],
             energy_j,
@@ -307,6 +320,8 @@ impl FleetReport {
             wall_ms,
             dispatch: None,
             feedback: None,
+            metrics: None,
+            series: Vec::new(),
         }
     }
 
@@ -380,6 +395,30 @@ impl FleetReport {
         if let Some(feedback) = &self.feedback {
             root.insert("telemetry".into(), feedback.telemetry_json());
             root.insert("feedback".into(), feedback.feedback_json());
+        }
+        if let Some(metrics) = &self.metrics {
+            let mut buf = String::new();
+            {
+                let mut w = JsonWriter::new(&mut buf);
+                metrics.write_json(&mut w).expect("writing to a String cannot fail");
+                debug_assert!(w.is_complete());
+            }
+            root.insert(
+                "metrics".into(),
+                Json::parse(&buf).expect("streamed metrics block is valid JSON"),
+            );
+        }
+        if !self.series.is_empty() {
+            let mut buf = String::new();
+            {
+                let mut w = JsonWriter::new(&mut buf);
+                write_series_json(&self.series, &mut w).expect("writing to a String cannot fail");
+                debug_assert!(w.is_complete());
+            }
+            root.insert(
+                "series".into(),
+                Json::parse(&buf).expect("streamed series block is valid JSON"),
+            );
         }
         Json::Obj(root)
     }

@@ -36,7 +36,7 @@ use crate::coordinator::manifest::Manifest;
 use crate::coordinator::plancache::{ContextQuantizer, PlanCache, PlanMode};
 use crate::coordinator::CompressionConfig;
 use crate::dispatch::{AdmissionVerdict, ServedRequest};
-use crate::metrics::Series;
+use crate::obs::metrics::Histogram;
 use crate::obs::EvolutionAudit;
 use crate::platform::{EnergyModel, Platform};
 use crate::runtime::{CacheOutcome, ShardedCache};
@@ -75,6 +75,11 @@ pub struct DeviceSession {
     ei: usize,
     done: bool,
     report: ServingReport,
+    /// Fleet-path inference latencies, µs — fixed memory however long
+    /// the session serves (DESIGN.md §13-1).  The `ServingReport`'s raw
+    /// sample series stays empty on fleet paths; `ServingLoop` keeps it
+    /// as the exact-percentile oracle (`tests/dispatch.rs`).
+    latency_hist: Histogram,
     /// Variant this session last fetched from the shared cache; re-deploys
     /// of the same variant skip the cache so the hit rate measures actual
     /// reuse of compiles, not a session re-touching its own executable.
@@ -130,8 +135,8 @@ pub struct DeviceReport {
     /// direct path).
     pub shed: usize,
     pub evolutions: usize,
-    pub latency_us: Series,
-    pub search_us: Series,
+    pub latency_us: Histogram,
+    pub search_us: Histogram,
     pub battery_end: f64,
     pub energy_j: f64,
     pub cache_hits: u64,
@@ -202,6 +207,7 @@ impl DeviceSession {
             ei: 0,
             done: duration_s <= 0.0,
             report: ServingReport::default(),
+            latency_hist: Histogram::default(),
             loaded_variant: None,
             cache_hits: 0,
             cache_misses: 0,
@@ -368,7 +374,7 @@ impl DeviceSession {
     /// Record one dispatched request's final (batched) service latency,
     /// assigned by the batch post-pass.
     pub(crate) fn record_dispatched_latency(&mut self, service_us: f64) {
-        self.report.inference_latency_us.push(service_us);
+        self.latency_hist.push(service_us);
     }
 
     /// Has the session consumed its whole simulated duration?
@@ -471,7 +477,7 @@ impl DeviceSession {
                     match self.engine.modeled_active_latency_ms(available) {
                         Some(latency_ms) => {
                             self.report.inferences += 1;
-                            self.report.inference_latency_us.push(latency_ms * 1e3);
+                            self.latency_hist.push(latency_ms * 1e3);
                             self.sim.advance(0.0, self.energy_per_inference_j);
                         }
                         None => self.report.dropped += 1,
@@ -571,9 +577,15 @@ impl DeviceSession {
         &self.report
     }
 
+    /// Snapshot of the fleet-path latency histogram (the windowed
+    /// series capture diffs consecutive snapshots, DESIGN.md §13-3).
+    pub(crate) fn latency_hist(&self) -> &Histogram {
+        &self.latency_hist
+    }
+
     /// Consume the session into its fleet summary.
     pub fn into_report(self, shard: usize) -> DeviceReport {
-        let mut search_us = Series::default();
+        let mut search_us = Histogram::default();
         for e in &self.report.evolutions {
             search_us.push(e.search_time_us as f64);
         }
@@ -586,7 +598,7 @@ impl DeviceSession {
             dropped: self.report.dropped,
             shed: self.shed,
             evolutions: self.report.evolutions.len(),
-            latency_us: self.report.inference_latency_us,
+            latency_us: self.latency_hist,
             search_us,
             battery_end: self.sim.battery.fraction(),
             energy_j: self.report.inferences as f64 * self.energy_per_inference_j,

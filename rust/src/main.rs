@@ -211,12 +211,13 @@ fn serve(args: &Args) -> Result<()> {
         (0..n_in).map(|_| rng.normal() as f32).collect()
     })?;
 
+    let host_pcts = report.inference_latency_us.percentiles(&[50.0, 99.0]);
     println!(
         "handled {} inferences ({} dropped); host p50={:.2} ms p99={:.2} ms",
         report.inferences,
         report.dropped,
-        report.inference_latency_us.percentile(50.0) / 1e3,
-        report.inference_latency_us.percentile(99.0) / 1e3
+        host_pcts[0] / 1e3,
+        host_pcts[1] / 1e3
     );
     let mut t = Table::new(&["t (min)", "battery", "cache KB", "variant", "config", "evolve ms"]);
     for e in &report.evolutions {

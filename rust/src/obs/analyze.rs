@@ -1,0 +1,491 @@
+//! Offline trace analyzer (DESIGN.md §13-4) — the library behind
+//! `trace_tool`, which turns a PR 6 `--trace-out` ndjson file from
+//! write-only into queryable.
+//!
+//! [`TraceAnalysis::from_ndjson`] makes one pass over the lines:
+//!
+//! * **Schema validation** — every line must decode through the strict
+//!   [`TraceEvent::parse`], the first line must be `meta`, the last
+//!   `end`, and the `end` footer's span/audit/anomaly totals must match
+//!   what the file actually contains.  Violations are *collected* (with
+//!   line numbers), not bailed on, so a truncated trace still yields a
+//!   best-effort report; `trace_tool` exits nonzero iff any exist.
+//! * **Stage breakdown** — per [`Stage`]: span count, total wall time,
+//!   a fixed-memory wall-time [`Histogram`], and the stage's item/aux
+//!   counters.
+//! * **Critical path** — spans are regrouped per (window, stage) with
+//!   the max across shards kept; a window's critical path is the sum of
+//!   its five stage maxima (stages are sequential within a window,
+//!   shards run in parallel), and the run's is the sum over windows.
+//!   `parallel_fraction` = critical / total wall — how much of the
+//!   recorded work was on the blocking path.
+//! * **Audit summary** — trigger-arm and plan-disposition counts, the
+//!   λ2 ratchet drift (`final − base`) and latency-budget debit
+//!   distributions, and search/evolution time via histograms — the
+//!   paper's ≤6.2 ms evolution claim, readable from any trace.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::JsonWriter;
+
+use super::event::{
+    Stage, TraceEvent, ALL_STAGES, KNOWN_ANOMALY_KINDS, KNOWN_ARMS, KNOWN_PLANS,
+};
+use super::metrics::Histogram;
+
+/// One stage's totals over the whole trace.
+#[derive(Debug, Clone, Default)]
+pub struct StageBreakdown {
+    pub spans: u64,
+    pub wall_us: Histogram,
+    pub wall_us_total: f64,
+    pub items: u64,
+    pub aux: u64,
+}
+
+/// One window's cross-shard reconstruction.
+#[derive(Debug, Clone)]
+pub struct WindowBreakdown {
+    pub window: u64,
+    /// Window-start simulated time (min over the window's spans).
+    pub t_s: f64,
+    /// Max-across-shards wall time per stage, [`ALL_STAGES`] order.
+    pub stage_max_us: [f64; ALL_STAGES.len()],
+    /// Total recorded wall time (all shards, all stages).
+    pub total_us: f64,
+}
+
+impl WindowBreakdown {
+    /// The window's blocking path: stages serialize, shards don't.
+    pub fn critical_path_us(&self) -> f64 {
+        self.stage_max_us.iter().sum()
+    }
+}
+
+/// Aggregated [`super::event::EvolutionAudit`] view.
+#[derive(Debug, Clone, Default)]
+pub struct AuditSummary {
+    pub count: u64,
+    /// Counts per trigger arm, [`KNOWN_ARMS`] order.
+    pub by_arm: [u64; KNOWN_ARMS.len()],
+    /// Counts per plan disposition, [`KNOWN_PLANS`] order.
+    pub by_plan: [u64; KNOWN_PLANS.len()],
+    /// λ2 ratchet per audit (`lambda2_final − lambda2_base`).
+    pub lambda2_drift_sum: f64,
+    pub lambda2_drift_max: f64,
+    /// Latency-budget debit per audit (`budget_base_ms − budget_final_ms`).
+    pub budget_debit_ms_sum: f64,
+    pub budget_debit_ms_max: f64,
+    pub candidates: u64,
+    pub search_us: Histogram,
+    pub evolution_us: Histogram,
+}
+
+/// Everything `trace_tool` reports about one ndjson trace.
+#[derive(Debug, Clone, Default)]
+pub struct TraceAnalysis {
+    /// The `meta` header, if one decoded.
+    pub meta: Option<TraceEvent>,
+    /// The `end` footer, if one decoded.
+    pub end: Option<TraceEvent>,
+    pub stages: Vec<StageBreakdown>,
+    pub windows: Vec<WindowBreakdown>,
+    pub audits: AuditSummary,
+    /// Anomaly counts, [`KNOWN_ANOMALY_KINDS`] order.
+    pub anomalies: [u64; KNOWN_ANOMALY_KINDS.len()],
+    /// Schema violations, each tagged with its 1-based line number.
+    pub violations: Vec<String>,
+    pub lines: u64,
+}
+
+impl TraceAnalysis {
+    /// Analyze a full ndjson trace document.
+    pub fn from_ndjson(text: &str) -> TraceAnalysis {
+        let mut a = TraceAnalysis {
+            stages: ALL_STAGES.iter().map(|_| StageBreakdown::default()).collect(),
+            ..TraceAnalysis::default()
+        };
+        let (mut spans, mut audits, mut anomalies) = (0u64, 0u64, 0u64);
+        let mut saw_end_line = None::<u64>;
+        for (i, line) in text.lines().enumerate() {
+            let lineno = i as u64 + 1;
+            a.lines = lineno;
+            if line.trim().is_empty() {
+                a.violations.push(format!("line {lineno}: blank line inside trace"));
+                continue;
+            }
+            let ev = match TraceEvent::parse(line) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    a.violations.push(format!("line {lineno}: {e:#}"));
+                    continue;
+                }
+            };
+            if let Some(end_line) = saw_end_line {
+                a.violations
+                    .push(format!("line {lineno}: event after end footer (line {end_line})"));
+            }
+            match ev {
+                TraceEvent::Meta { .. } => {
+                    if lineno != 1 {
+                        a.violations.push(format!("line {lineno}: meta not the first line"));
+                    }
+                    if a.meta.is_some() {
+                        a.violations.push(format!("line {lineno}: duplicate meta"));
+                    }
+                    a.meta = Some(ev);
+                }
+                TraceEvent::Span(s) => {
+                    spans += 1;
+                    a.observe_span(s);
+                }
+                TraceEvent::Audit(audit) => {
+                    audits += 1;
+                    a.observe_audit(&audit);
+                }
+                TraceEvent::Anomaly { kind, .. } => {
+                    anomalies += 1;
+                    if let Some(k) = KNOWN_ANOMALY_KINDS.iter().position(|n| *n == kind) {
+                        a.anomalies[k] += 1;
+                    }
+                }
+                TraceEvent::End { spans: es, audits: ea, anomalies: ean, .. } => {
+                    saw_end_line = Some(lineno);
+                    if es != spans || ea != audits || ean != anomalies {
+                        a.violations.push(format!(
+                            "line {lineno}: end totals (spans {es}, audits {ea}, anomalies \
+                             {ean}) disagree with file contents (spans {spans}, audits \
+                             {audits}, anomalies {anomalies})"
+                        ));
+                    }
+                    a.end = Some(ev);
+                }
+            }
+        }
+        if a.lines == 0 {
+            a.violations.push("empty trace".into());
+        } else {
+            if a.meta.is_none() {
+                a.violations.push("no meta header".into());
+            }
+            if saw_end_line.is_none() {
+                a.violations.push("no end footer (truncated trace?)".into());
+            }
+        }
+        a.windows.sort_by_key(|w| w.window);
+        a
+    }
+
+    fn observe_span(&mut self, s: super::event::StageSpan) {
+        let stage_idx = ALL_STAGES.iter().position(|st| *st == s.stage).expect("known stage");
+        let row = &mut self.stages[stage_idx];
+        row.spans += 1;
+        row.wall_us.push(s.wall_us);
+        row.wall_us_total += s.wall_us;
+        row.items += s.items;
+        row.aux += s.aux;
+        let w = match self.windows.iter_mut().find(|w| w.window == s.window) {
+            Some(w) => w,
+            None => {
+                self.windows.push(WindowBreakdown {
+                    window: s.window,
+                    t_s: s.t_s,
+                    stage_max_us: [0.0; ALL_STAGES.len()],
+                    total_us: 0.0,
+                });
+                self.windows.last_mut().expect("just pushed")
+            }
+        };
+        w.t_s = w.t_s.min(s.t_s);
+        w.stage_max_us[stage_idx] = w.stage_max_us[stage_idx].max(s.wall_us);
+        w.total_us += s.wall_us;
+    }
+
+    fn observe_audit(&mut self, audit: &super::event::EvolutionAudit) {
+        let s = &mut self.audits;
+        s.count += 1;
+        if let Some(k) = KNOWN_ARMS.iter().position(|n| *n == audit.arm) {
+            s.by_arm[k] += 1;
+        }
+        if let Some(k) = KNOWN_PLANS.iter().position(|n| *n == audit.plan) {
+            s.by_plan[k] += 1;
+        }
+        let drift = audit.lambda2_final - audit.lambda2_base;
+        s.lambda2_drift_sum += drift;
+        s.lambda2_drift_max = s.lambda2_drift_max.max(drift);
+        let debit = audit.budget_base_ms - audit.budget_final_ms;
+        s.budget_debit_ms_sum += debit;
+        s.budget_debit_ms_max = s.budget_debit_ms_max.max(debit);
+        s.candidates += audit.candidates;
+        s.search_us.push(audit.search_us);
+        s.evolution_us.push(audit.evolution_us);
+    }
+
+    /// Total recorded wall time across every span, µs.
+    pub fn total_wall_us(&self) -> f64 {
+        self.stages.iter().map(|s| s.wall_us_total).sum()
+    }
+
+    /// The run's critical path: Σ over windows of the window's blocking
+    /// path, µs.
+    pub fn critical_path_us(&self) -> f64 {
+        self.windows.iter().map(|w| w.critical_path_us()).sum()
+    }
+
+    /// Stream the analyzer report (sorted keys; schema in README.md).
+    pub fn write_json<W: std::fmt::Write>(&self, w: &mut JsonWriter<'_, W>) -> std::fmt::Result {
+        w.begin_obj()?;
+
+        w.key("anomalies")?;
+        w.begin_obj()?;
+        for (kind, &n) in KNOWN_ANOMALY_KINDS.iter().zip(self.anomalies.iter()) {
+            w.field_num(kind, n as f64)?;
+        }
+        w.end_obj()?;
+
+        w.key("audits")?;
+        w.begin_obj()?;
+        w.key("by_arm")?;
+        w.begin_obj()?;
+        let mut arms: Vec<(&str, u64)> =
+            KNOWN_ARMS.iter().copied().zip(self.audits.by_arm.iter().copied()).collect();
+        arms.sort_by_key(|&(k, _)| k);
+        for (arm, n) in arms {
+            w.field_num(arm, n as f64)?;
+        }
+        w.end_obj()?;
+        w.key("by_plan")?;
+        w.begin_obj()?;
+        let mut plans: Vec<(&str, u64)> =
+            KNOWN_PLANS.iter().copied().zip(self.audits.by_plan.iter().copied()).collect();
+        plans.sort_by_key(|&(k, _)| k);
+        for (plan, n) in plans {
+            w.field_num(plan, n as f64)?;
+        }
+        w.end_obj()?;
+        let n = self.audits.count.max(1) as f64;
+        w.field_num("budget_debit_ms_max", self.audits.budget_debit_ms_max)?;
+        w.field_num("budget_debit_ms_mean", self.audits.budget_debit_ms_sum / n)?;
+        w.field_num("candidates", self.audits.candidates as f64)?;
+        w.field_num("count", self.audits.count as f64)?;
+        w.key("evolution_us")?;
+        self.audits.evolution_us.write_summary_json(w)?;
+        w.field_num("lambda2_drift_max", self.audits.lambda2_drift_max)?;
+        w.field_num("lambda2_drift_mean", self.audits.lambda2_drift_sum / n)?;
+        w.key("search_us")?;
+        self.audits.search_us.write_summary_json(w)?;
+        w.end_obj()?;
+
+        w.key("critical_path")?;
+        w.begin_obj()?;
+        let critical = self.critical_path_us();
+        let total = self.total_wall_us();
+        w.field_num("critical_ms", critical / 1e3)?;
+        w.field_num(
+            "parallel_fraction",
+            if total > 0.0 { critical / total } else { 1.0 },
+        )?;
+        w.field_num("total_wall_ms", total / 1e3)?;
+        w.field_num("windows", self.windows.len() as f64)?;
+        w.end_obj()?;
+
+        if let Some(TraceEvent::End { wall_ms, spans, audits, anomalies, evicted }) = &self.end {
+            w.key("end")?;
+            w.begin_obj()?;
+            w.field_num("anomalies", *anomalies as f64)?;
+            w.field_num("audits", *audits as f64)?;
+            w.field_num("evicted", *evicted as f64)?;
+            w.field_num("spans", *spans as f64)?;
+            w.field_num("wall_ms", *wall_ms)?;
+            w.end_obj()?;
+        }
+
+        w.field_num("lines", self.lines as f64)?;
+
+        if let Some(TraceEvent::Meta {
+            task,
+            devices,
+            shards,
+            workers,
+            duration_s,
+            seed,
+            ring_capacity,
+        }) = &self.meta
+        {
+            w.key("meta")?;
+            w.begin_obj()?;
+            w.field_num("devices", *devices as f64)?;
+            w.field_num("duration_s", *duration_s)?;
+            w.field_num("ring_capacity", *ring_capacity as f64)?;
+            w.field_num("seed", *seed as f64)?;
+            w.field_num("shards", *shards as f64)?;
+            w.field_str("task", task)?;
+            w.field_num("workers", *workers as f64)?;
+            w.end_obj()?;
+        }
+
+        w.key("stages")?;
+        w.begin_obj()?;
+        for (stage, row) in ALL_STAGES.iter().zip(self.stages.iter()) {
+            w.key(stage.name())?;
+            w.begin_obj()?;
+            w.field_num("aux", row.aux as f64)?;
+            w.field_num("items", row.items as f64)?;
+            w.field_num("spans", row.spans as f64)?;
+            w.key("wall_us")?;
+            row.wall_us.write_summary_json(w)?;
+            w.field_num("wall_us_total", row.wall_us_total)?;
+            w.end_obj()?;
+        }
+        w.end_obj()?;
+
+        w.key("violations")?;
+        w.begin_arr()?;
+        for v in &self.violations {
+            w.str_val(v)?;
+        }
+        w.end_arr()?;
+
+        w.key("windows")?;
+        w.begin_arr()?;
+        for win in &self.windows {
+            w.begin_obj()?;
+            w.field_num("critical_us", win.critical_path_us())?;
+            w.key("stage_max_us")?;
+            w.begin_obj()?;
+            for (stage, &us) in ALL_STAGES.iter().zip(win.stage_max_us.iter()) {
+                w.field_num(stage.name(), us)?;
+            }
+            w.end_obj()?;
+            w.field_num("t_s", win.t_s)?;
+            w.field_num("total_us", win.total_us)?;
+            w.field_num("window", win.window as f64)?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+
+        w.end_obj()
+    }
+
+    /// The report as a JSON string (trailing newline included).
+    pub fn to_json(&self) -> String {
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            self.write_json(&mut w).expect("writing to String is infallible");
+            assert!(w.is_complete());
+        }
+        buf.push('\n');
+        buf
+    }
+}
+
+/// Analyze a trace file on disk (errors name the path).
+pub fn analyze_file(path: &str) -> Result<TraceAnalysis> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
+    Ok(TraceAnalysis::from_ndjson(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::{EvolutionAudit, StageSpan};
+
+    fn line(ev: &TraceEvent) -> String {
+        let mut s = String::new();
+        ev.write_json(&mut s).unwrap();
+        s
+    }
+
+    fn span(shard: u32, window: u64, stage: Stage, wall_us: f64) -> TraceEvent {
+        TraceEvent::Span(StageSpan {
+            shard,
+            window,
+            t_s: window as f64 * 60.0,
+            stage,
+            wall_us,
+            items: 10,
+            aux: 1,
+        })
+    }
+
+    fn meta() -> TraceEvent {
+        TraceEvent::Meta {
+            task: "d3".into(),
+            devices: 4,
+            shards: 2,
+            workers: 2,
+            duration_s: 120.0,
+            seed: 7,
+            ring_capacity: 64,
+        }
+    }
+
+    #[test]
+    fn clean_trace_reconstructs_critical_path() {
+        // Window 0: execution 100 vs 40 across shards, evolution 10 vs 30
+        // → critical 100 + 30 = 130; total 180.
+        let events = vec![
+            meta(),
+            span(0, 0, Stage::Execution, 100.0),
+            span(1, 0, Stage::Execution, 40.0),
+            span(0, 0, Stage::Evolution, 10.0),
+            span(1, 0, Stage::Evolution, 30.0),
+            TraceEvent::Audit(EvolutionAudit {
+                device: 1,
+                arm: "spike",
+                plan: "hit",
+                lambda2_base: 0.3,
+                lambda2_final: 0.5,
+                budget_base_ms: 30.0,
+                budget_final_ms: 25.0,
+                search_us: 100.0,
+                evolution_us: 150.0,
+                candidates: 8,
+                ..Default::default()
+            }),
+            TraceEvent::Anomaly { shard: 0, window: 0, t_s: 0.0, kind: "shed_spike", value: 0.2 },
+            TraceEvent::End { wall_ms: 5.0, spans: 4, audits: 1, anomalies: 1, evicted: 0 },
+        ];
+        let text: String = events.iter().map(|e| line(e) + "\n").collect();
+        let a = TraceAnalysis::from_ndjson(&text);
+        assert_eq!(a.violations, Vec::<String>::new());
+        assert_eq!(a.windows.len(), 1);
+        assert!((a.windows[0].critical_path_us() - 130.0).abs() < 1e-9);
+        assert!((a.total_wall_us() - 180.0).abs() < 1e-9);
+        let exec = &a.stages[ALL_STAGES.iter().position(|s| *s == Stage::Execution).unwrap()];
+        assert_eq!(exec.spans, 2);
+        assert!((exec.wall_us_total - 140.0).abs() < 1e-9);
+        assert_eq!(a.audits.count, 1);
+        assert!((a.audits.lambda2_drift_max - 0.2).abs() < 1e-12);
+        assert!((a.audits.budget_debit_ms_max - 5.0).abs() < 1e-12);
+        assert_eq!(a.anomalies[0], 1, "shed_spike counted");
+        // The report is valid JSON with the headline keys.
+        let json = crate::util::json::Json::parse(a.to_json().trim()).unwrap();
+        assert_eq!(json.get("violations").unwrap().as_arr().unwrap().len(), 0);
+        let cp = json.get("critical_path").unwrap();
+        assert!((cp.get("critical_ms").unwrap().as_f64().unwrap() - 0.13).abs() < 1e-9);
+        assert!(cp.get("parallel_fraction").unwrap().as_f64().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn violations_are_collected_not_fatal() {
+        // Missing meta, garbage line, end totals that lie, event after end.
+        let text = format!(
+            "{}\nnot json\n{}\n{}\n",
+            line(&span(0, 0, Stage::Execution, 50.0)),
+            line(&TraceEvent::End { wall_ms: 1.0, spans: 9, audits: 0, anomalies: 0, evicted: 0 }),
+            line(&span(0, 1, Stage::Execution, 10.0)),
+        );
+        let a = TraceAnalysis::from_ndjson(&text);
+        assert!(a.violations.iter().any(|v| v.contains("no meta header")), "{:?}", a.violations);
+        assert!(a.violations.iter().any(|v| v.contains("line 2")));
+        assert!(a.violations.iter().any(|v| v.contains("disagree")));
+        assert!(a.violations.iter().any(|v| v.contains("after end footer")));
+        // The spans still aggregated best-effort.
+        assert_eq!(a.windows.len(), 2);
+        let empty = TraceAnalysis::from_ndjson("");
+        assert!(empty.violations.iter().any(|v| v.contains("empty trace")));
+    }
+}

@@ -8,7 +8,9 @@
 
 use std::fmt;
 
-use crate::util::json::JsonWriter;
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{Json, JsonWriter};
 
 /// The five pipeline stages a window is attributed across (§11-2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -35,6 +37,28 @@ impl Stage {
             Stage::Feedback => "feedback",
         }
     }
+
+    /// Inverse of [`name`](Stage::name) — the trace decoder's lookup.
+    pub fn from_name(name: &str) -> Option<Stage> {
+        ALL_STAGES.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+/// Trigger arms an [`EvolutionAudit`] may carry (wire values).
+pub const KNOWN_ARMS: [&str; 4] = ["startup", "periodic", "change", "spike"];
+/// Plan-cache dispositions an [`EvolutionAudit`] may carry.
+pub const KNOWN_PLANS: [&str; 4] = ["hit", "miss", "stale", "none"];
+/// Anomaly kinds the [`super::recorder::ShardTracer`] emits.
+pub const KNOWN_ANOMALY_KINDS: [&str; 2] = ["shed_spike", "lambda2_ratchet"];
+
+/// Intern a wire string against a closed vocabulary (the audit/anomaly
+/// fields are `&'static str`; an unknown value is a schema violation).
+fn intern(what: &str, known: &'static [&'static str], v: &str) -> Result<&'static str> {
+    known
+        .iter()
+        .copied()
+        .find(|k| *k == v)
+        .with_context(|| format!("unknown {what} {v:?} (expected one of {known:?})"))
 }
 
 /// One stage's share of one shard-window: wall time plus the stage's
@@ -171,6 +195,120 @@ impl TraceEvent {
         debug_assert!(w.is_complete());
         Ok(())
     }
+
+    /// Strict inverse of [`write_json`](TraceEvent::write_json): decode
+    /// one ndjson line, rejecting unknown `"ev"` kinds, missing or
+    /// extra fields, wrong types, and out-of-vocabulary stage / arm /
+    /// plan / anomaly-kind strings.  This *is* the analyzer's schema
+    /// validation — `trace_tool` fails a trace iff a line fails here.
+    pub fn parse(line: &str) -> Result<TraceEvent> {
+        let j = Json::parse(line).context("trace line is not valid JSON")?;
+        let obj = j.as_obj().context("trace line is not an object")?;
+        let ev = j.get("ev")?.as_str().context("\"ev\" discriminator")?;
+        let expect_keys = |keys: &[&str]| -> Result<()> {
+            if obj.len() != keys.len() || !keys.iter().all(|k| obj.contains_key(*k)) {
+                let got: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+                bail!("{ev} line has keys {got:?}, schema requires {keys:?}");
+            }
+            Ok(())
+        };
+        let num = |k: &str| -> Result<f64> { j.get(k)?.as_f64().with_context(|| k.to_string()) };
+        let int = |k: &str| -> Result<u64> { j.get(k)?.as_u64().with_context(|| k.to_string()) };
+        match ev {
+            "meta" => {
+                expect_keys(&[
+                    "devices",
+                    "duration_s",
+                    "ev",
+                    "ring_capacity",
+                    "seed",
+                    "shards",
+                    "task",
+                    "workers",
+                ])?;
+                Ok(TraceEvent::Meta {
+                    task: j.get("task")?.as_str()?.to_string(),
+                    devices: int("devices")?,
+                    shards: int("shards")?,
+                    workers: int("workers")?,
+                    duration_s: num("duration_s")?,
+                    seed: int("seed")?,
+                    ring_capacity: int("ring_capacity")?,
+                })
+            }
+            "span" => {
+                expect_keys(&[
+                    "aux", "ev", "items", "shard", "stage", "t_s", "wall_us", "window",
+                ])?;
+                let stage_name = j.get("stage")?.as_str()?;
+                let stage = Stage::from_name(stage_name)
+                    .with_context(|| format!("unknown stage {stage_name:?}"))?;
+                Ok(TraceEvent::Span(StageSpan {
+                    shard: int("shard")? as u32,
+                    window: int("window")?,
+                    t_s: num("t_s")?,
+                    stage,
+                    wall_us: num("wall_us")?,
+                    items: int("items")?,
+                    aux: int("aux")?,
+                }))
+            }
+            "audit" => {
+                expect_keys(&[
+                    "arm",
+                    "budget_base_ms",
+                    "budget_final_ms",
+                    "candidates",
+                    "device",
+                    "ev",
+                    "evolution_us",
+                    "lambda2_base",
+                    "lambda2_final",
+                    "load_band",
+                    "plan",
+                    "search_us",
+                    "t_s",
+                    "variant",
+                ])?;
+                Ok(TraceEvent::Audit(EvolutionAudit {
+                    device: int("device")?,
+                    t_s: num("t_s")?,
+                    arm: intern("arm", &KNOWN_ARMS, j.get("arm")?.as_str()?)?,
+                    plan: intern("plan", &KNOWN_PLANS, j.get("plan")?.as_str()?)?,
+                    candidates: int("candidates")?,
+                    load_band: int("load_band")? as u32,
+                    variant: int("variant")?,
+                    lambda2_base: num("lambda2_base")?,
+                    lambda2_final: num("lambda2_final")?,
+                    budget_base_ms: num("budget_base_ms")?,
+                    budget_final_ms: num("budget_final_ms")?,
+                    search_us: num("search_us")?,
+                    evolution_us: num("evolution_us")?,
+                }))
+            }
+            "anomaly" => {
+                expect_keys(&["ev", "kind", "shard", "t_s", "value", "window"])?;
+                Ok(TraceEvent::Anomaly {
+                    shard: int("shard")? as u32,
+                    window: int("window")?,
+                    t_s: num("t_s")?,
+                    kind: intern("anomaly kind", &KNOWN_ANOMALY_KINDS, j.get("kind")?.as_str()?)?,
+                    value: num("value")?,
+                })
+            }
+            "end" => {
+                expect_keys(&["anomalies", "audits", "ev", "evicted", "spans", "wall_ms"])?;
+                Ok(TraceEvent::End {
+                    wall_ms: num("wall_ms")?,
+                    spans: int("spans")?,
+                    audits: int("audits")?,
+                    anomalies: int("anomalies")?,
+                    evicted: int("evicted")?,
+                })
+            }
+            other => bail!("unknown trace event kind {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -232,7 +370,30 @@ mod tests {
             // byte-exact (the CI schema-sanity re-parse relies on parse
             // succeeding; this pins the stronger property).
             assert_eq!(parsed.to_string(), line);
+            // The typed decoder inverts the encoder exactly.
+            assert_eq!(&TraceEvent::parse(&line).unwrap(), ev);
         }
+    }
+
+    #[test]
+    fn parse_rejects_schema_violations() {
+        // Unknown event kind.
+        assert!(TraceEvent::parse(r#"{"ev":"bogus"}"#).is_err());
+        // Missing field (span without wall_us).
+        let line = r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"execution","t_s":0,"window":0}"#;
+        assert!(TraceEvent::parse(line).is_err());
+        // Extra field.
+        let line = r#"{"anomalies":0,"audits":0,"ev":"end","evicted":0,"extra":1,"spans":0,"wall_ms":1}"#;
+        assert!(TraceEvent::parse(line).is_err());
+        // Out-of-vocabulary stage / arm / anomaly kind.
+        let line = r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"warp","t_s":0,"wall_us":1,"window":0}"#;
+        assert!(TraceEvent::parse(line).is_err());
+        let line = r#"{"ev":"anomaly","kind":"gremlin","shard":0,"t_s":0,"value":1,"window":0}"#;
+        assert!(TraceEvent::parse(line).is_err());
+        // Wrong type (string where number is due).
+        let line = r#"{"anomalies":0,"audits":0,"ev":"end","evicted":"no","spans":0,"wall_ms":1}"#;
+        assert!(TraceEvent::parse(line).is_err());
+        assert!(TraceEvent::parse("not json").is_err());
     }
 
     #[test]

@@ -1,0 +1,684 @@
+//! Fleet metrics plane (DESIGN.md §13): fixed-memory mergeable
+//! histograms, the per-stage metrics registry, and the per-window
+//! time-series points behind the report's `"series"` block.
+//!
+//! The paper's headline claims are distribution-tail claims (3.1×
+//! latency, ≤6.2 ms evolution), yet [`crate::metrics::Series`] hoards
+//! every raw sample and re-sorts to answer a percentile — memory and
+//! aggregation cost scale with total inferences, which the ROADMAP's
+//! million-device north star cannot afford.  [`Histogram`] is the
+//! HDR-style replacement: a log-bucketed, const-size bucket array with
+//! O(1) record, exact count/sum/min/max, and an order-independent
+//! [`merge`](Histogram::merge), so per-device histograms roll up into
+//! shard and fleet views without ever touching raw samples.
+//!
+//! # Bucket layout and error bound
+//!
+//! A value's bucket is its binary octave (the f64 exponent) split into
+//! [`SUBS`] = 64 log-spaced sub-buckets (the top [`SUB_BITS`] = 6
+//! mantissa bits): [`OCTAVES`] = 64 octaves × 64 sub-buckets = 4096
+//! buckets covering `[2⁻³², 2³²)` — for microsecond latencies that is
+//! ~2.3e-10 µs up to ~71 minutes.  Values outside the range clamp to the
+//! edge buckets; zero/negative/NaN clamp to bucket 0.  A percentile is
+//! answered as its bucket's midpoint (clamped into the exact observed
+//! `[min, max]`), so for in-range values the relative error is at most
+//! half a bucket width: [`RELATIVE_ERROR_BOUND`] = 1/(2·64) ≈ 0.78 % —
+//! documented as ≤ 1 % and pinned against the exact [`Series`] oracle by
+//! randomized tests (`tests/metrics.rs`).
+//!
+//! # Merge semantics
+//!
+//! `merge` adds bucket counts element-wise and folds count/min/max —
+//! all exactly order-independent — plus the f64 `sum`, which is
+//! order-independent only up to floating-point rounding.  Percentiles of
+//! a merged histogram are therefore bit-identical regardless of shard
+//! merge order; means agree to ~1e-12 relative.
+//!
+//! Percentile *rank* semantics mirror `Series::percentiles` exactly
+//! (`idx = round(p/100 · (n−1))`, value = idx-th smallest), so the two
+//! disagree only by the bucket quantization, never by rank convention.
+
+use crate::util::json::JsonWriter;
+
+use super::event::{Stage, ALL_STAGES};
+
+/// Mantissa bits per bucket index: 2^6 = 64 sub-buckets per octave.
+pub const SUB_BITS: u32 = 6;
+/// Sub-buckets per octave.
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Lowest tracked binary octave (values below clamp to bucket 0).
+pub const MIN_EXP: i32 = -32;
+/// Octaves covered: exponents `MIN_EXP ..= MIN_EXP + OCTAVES - 1`.
+pub const OCTAVES: usize = 64;
+/// Total bucket count (64 octaves × 64 sub-buckets = 4096 × u64 = 32 KiB).
+pub const NUM_BUCKETS: usize = OCTAVES * SUBS;
+/// Documented relative error bound of a histogram percentile vs the
+/// exact sample percentile, for values inside the tracked range: half a
+/// sub-bucket's relative width.
+pub const RELATIVE_ERROR_BOUND: f64 = 1.0 / (2 * SUBS) as f64;
+
+/// Smallest value that gets its own bucket (2^MIN_EXP).
+const MIN_TRACKABLE: f64 = 1.0 / 4294967296.0;
+/// First value past the top bucket (2^(MIN_EXP + OCTAVES)).
+const MAX_TRACKABLE: f64 = 4294967296.0;
+
+/// Fixed-memory log-bucketed latency histogram.  API mirrors
+/// [`crate::metrics::Series`] (`push`/`len`/`mean`/`min`/`max`/
+/// `percentiles`) so report plumbing swaps between them freely; `Series`
+/// stays as the exact oracle in tests.
+#[derive(Clone)]
+pub struct Histogram {
+    /// Bucket occupancy counts (boxed: the struct moves through worker
+    /// outcomes and reports by value).
+    buckets: Box<[u64; NUM_BUCKETS]>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: Box::new([0u64; NUM_BUCKETS]),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("min", &self.min)
+            .field("max", &self.max)
+            .finish_non_exhaustive()
+    }
+}
+
+impl Histogram {
+    /// Bucket index for `v` — monotone in `v`, O(1), no branches on the
+    /// occupancy array.  Out-of-range / non-finite / non-positive values
+    /// clamp to the edge buckets (counted exactly; representative error
+    /// unbounded only for them).
+    fn bucket_index(v: f64) -> usize {
+        if !(v >= MIN_TRACKABLE) {
+            return 0; // zero, negative, subnormal-small, NaN
+        }
+        if v >= MAX_TRACKABLE {
+            return NUM_BUCKETS - 1; // huge or +inf
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        ((exp - MIN_EXP) as usize) * SUBS + sub
+    }
+
+    /// A bucket's representative value: its log-midpoint.
+    fn representative(idx: usize) -> f64 {
+        let exp = (idx / SUBS) as i32 + MIN_EXP;
+        let sub = idx % SUBS;
+        (2f64).powi(exp) * (1.0 + (sub as f64 + 0.5) / SUBS as f64)
+    }
+
+    /// A bucket's lower edge (used for delta-support bounds).
+    fn lower_edge(idx: usize) -> f64 {
+        let exp = (idx / SUBS) as i32 + MIN_EXP;
+        let sub = idx % SUBS;
+        (2f64).powi(exp) * (1.0 + sub as f64 / SUBS as f64)
+    }
+
+    /// A bucket's upper edge.
+    fn upper_edge(idx: usize) -> f64 {
+        let exp = (idx / SUBS) as i32 + MIN_EXP;
+        let sub = idx % SUBS;
+        (2f64).powi(exp) * (1.0 + (sub as f64 + 1.0) / SUBS as f64)
+    }
+
+    /// Record one sample: O(1), zero allocation.
+    pub fn push(&mut self, v: f64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded (exact).
+    pub fn len(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact sample count as recorded (u64 — fleet-scale safe).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0.0 when empty, like `Series`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact minimum (+∞ when empty, like `Series`).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Exact maximum (−∞ when empty, like `Series`).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// One percentile — same rank convention as `Series::percentile`,
+    /// answered from buckets within [`RELATIVE_ERROR_BOUND`].
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles in one cumulative bucket walk (0.0s when
+    /// empty, matching `Series::percentiles`).  Monotone in `p` by
+    /// construction — the cumulative walk can only move right.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<f64> {
+        if self.count == 0 {
+            return vec![0.0; ps.len()];
+        }
+        // Ranks may arrive unsorted; one walk per rank over 4096 buckets
+        // is still microseconds and keeps the code obvious.
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
+                let mut cum = 0u64;
+                for (i, &c) in self.buckets.iter().enumerate() {
+                    cum += c;
+                    if cum > rank {
+                        let r = Self::representative(i);
+                        return if self.min <= self.max { r.clamp(self.min, self.max) } else { r };
+                    }
+                }
+                self.max
+            })
+            .collect()
+    }
+
+    /// Fold another histogram in: element-wise bucket adds plus
+    /// count/sum/min/max folds.  Counts, percentiles, min and max are
+    /// exactly merge-order-independent; `sum` (hence `mean`) only up to
+    /// f64 rounding.
+    pub fn merge(&mut self, o: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += o.count;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    /// Snapshot delta: the samples recorded between `earlier` (a past
+    /// snapshot of *this same* histogram) and now — the per-window
+    /// series capture.  Bucket counts and `count`/`sum` subtract
+    /// exactly; the delta's min/max are bounded by the support of its
+    /// non-empty buckets (edges, not exact extremes), which keeps
+    /// percentile clamping sound without snapshotting raw samples.
+    pub fn delta_since(&self, earlier: &Histogram) -> Histogram {
+        let mut d = Histogram::default();
+        let mut lo: Option<usize> = None;
+        let mut hi: Option<usize> = None;
+        for i in 0..NUM_BUCKETS {
+            let c = self.buckets[i].saturating_sub(earlier.buckets[i]);
+            d.buckets[i] = c;
+            if c > 0 {
+                lo.get_or_insert(i);
+                hi = Some(i);
+            }
+        }
+        d.count = self.count.saturating_sub(earlier.count);
+        d.sum = if d.count == 0 { 0.0 } else { self.sum - earlier.sum };
+        if let (Some(lo), Some(hi)) = (lo, hi) {
+            d.min = Self::lower_edge(lo).max(self.min);
+            d.max = Self::upper_edge(hi).min(self.max);
+        }
+        d
+    }
+
+    /// Stream the summary object `{count, mean, p50, p95, p99, max}`
+    /// (microsecond samples reported in µs; callers scale keys/values as
+    /// their schema needs).
+    pub fn write_summary_json<W: std::fmt::Write>(
+        &self,
+        w: &mut JsonWriter<'_, W>,
+    ) -> std::fmt::Result {
+        let p = self.percentiles(&[50.0, 95.0, 99.0]);
+        let max = if self.count == 0 { 0.0 } else { self.max };
+        w.begin_obj()?;
+        w.field_num("count", self.count as f64)?;
+        w.field_num("max", max)?;
+        w.field_num("mean", self.mean())?;
+        w.field_num("p50", p[0])?;
+        w.field_num("p95", p[1])?;
+        w.field_num("p99", p[2])?;
+        w.end_obj()
+    }
+}
+
+/// One pipeline stage's registry row: a wall-time histogram, an item
+/// counter, and per-archetype item attribution.
+#[derive(Debug, Clone, Default)]
+pub struct StageMetrics {
+    /// Wall time per recorded span, microseconds.
+    pub wall_us: Histogram,
+    /// Spans recorded.
+    pub spans: u64,
+    /// Items the stage processed (stage-specific meaning, as §12-2).
+    pub items: u64,
+    /// Items attributed per archetype key (index-aligned with the
+    /// registry's key table; attribution is best-effort per stage).
+    pub items_by_key: Vec<u64>,
+}
+
+/// Named counters/gauges/histograms keyed by (stage, archetype)
+/// (DESIGN.md §13-2).  Built once per worker with every slot
+/// pre-registered, so the hot-path record calls are array index + add —
+/// zero allocation.  Workers' registries merge order-independently into
+/// the fleet view behind the report's `"metrics"` block.
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    /// Archetype key table (canonical order; shared statics).
+    keys: Vec<&'static str>,
+    /// One row per [`Stage`], indexed by position in [`ALL_STAGES`].
+    stages: Vec<StageMetrics>,
+    /// Monotone named counters (merge = sum).
+    counters: Vec<(&'static str, u64)>,
+    /// Last-value-wins named gauges (merge = max — the binding value
+    /// across shards).
+    gauges: Vec<(&'static str, f64)>,
+}
+
+/// Counter names pre-registered on every registry (merge = sum).
+const COUNTER_NAMES: [&str; 4] = ["batches", "evolutions", "steps", "windows"];
+/// Gauge names pre-registered on every registry (merge = max).
+const GAUGE_NAMES: [&str; 2] = ["backlog_jobs", "trace_evicted"];
+
+impl MetricsRegistry {
+    /// Build with every (stage, archetype) slot and known counter/gauge
+    /// name pre-registered (allocation happens here, never on record).
+    pub fn new(archetype_keys: &[&'static str]) -> MetricsRegistry {
+        MetricsRegistry {
+            keys: archetype_keys.to_vec(),
+            stages: ALL_STAGES
+                .iter()
+                .map(|_| StageMetrics {
+                    items_by_key: vec![0; archetype_keys.len()],
+                    ..StageMetrics::default()
+                })
+                .collect(),
+            counters: COUNTER_NAMES.iter().map(|&n| (n, 0)).collect(),
+            gauges: GAUGE_NAMES.iter().map(|&n| (n, 0.0)).collect(),
+        }
+    }
+
+    fn stage_row(&mut self, stage: Stage) -> &mut StageMetrics {
+        let idx = ALL_STAGES.iter().position(|s| *s == stage).expect("stage in ALL_STAGES");
+        &mut self.stages[idx]
+    }
+
+    /// Record one stage span: wall time + item count.  O(1).
+    pub fn stage_span(&mut self, stage: Stage, wall_us: f64, items: u64) {
+        let row = self.stage_row(stage);
+        row.wall_us.push(wall_us);
+        row.spans += 1;
+        row.items += items;
+    }
+
+    /// Attribute `n` of a stage's items to archetype key `k`.  O(1).
+    pub fn stage_items_keyed(&mut self, stage: Stage, k: usize, n: u64) {
+        let row = self.stage_row(stage);
+        if let Some(slot) = row.items_by_key.get_mut(k) {
+            *slot += n;
+        }
+    }
+
+    /// Add to a pre-registered counter (unknown names are dropped — the
+    /// hot path never allocates a new slot).
+    pub fn counter_add(&mut self, name: &str, n: u64) {
+        if let Some(slot) = self.counters.iter_mut().find(|(k, _)| *k == name) {
+            slot.1 += n;
+        }
+    }
+
+    /// Set a pre-registered gauge to `max(current, v)`.
+    pub fn gauge_max(&mut self, name: &str, v: f64) {
+        if let Some(slot) = self.gauges.iter_mut().find(|(k, _)| *k == name) {
+            slot.1 = slot.1.max(v);
+        }
+    }
+
+    /// Fold another worker's registry in (same key table assumed —
+    /// every worker builds from the same canonical archetype list).
+    pub fn merge(&mut self, o: &MetricsRegistry) {
+        for (a, b) in self.stages.iter_mut().zip(o.stages.iter()) {
+            a.wall_us.merge(&b.wall_us);
+            a.spans += b.spans;
+            a.items += b.items;
+            for (x, y) in a.items_by_key.iter_mut().zip(b.items_by_key.iter()) {
+                *x += *y;
+            }
+        }
+        for (a, b) in self.counters.iter_mut().zip(o.counters.iter()) {
+            debug_assert_eq!(a.0, b.0);
+            a.1 += b.1;
+        }
+        for (a, b) in self.gauges.iter_mut().zip(o.gauges.iter()) {
+            debug_assert_eq!(a.0, b.0);
+            a.1 = a.1.max(b.1);
+        }
+    }
+
+    /// Stream the `"metrics"` block (schema: README.md).  Keys sorted,
+    /// like every other block, so parse∘stream is exact.
+    pub fn write_json<W: std::fmt::Write>(&self, w: &mut JsonWriter<'_, W>) -> std::fmt::Result {
+        w.begin_obj()?;
+        w.key("counters")?;
+        w.begin_obj()?;
+        for &(name, v) in &self.counters {
+            w.field_num(name, v as f64)?;
+        }
+        w.end_obj()?;
+        w.key("gauges")?;
+        w.begin_obj()?;
+        for &(name, v) in &self.gauges {
+            w.field_num(name, v)?;
+        }
+        w.end_obj()?;
+        w.key("stages")?;
+        w.begin_obj()?;
+        // ALL_STAGES is already alphabetical on the wire names.
+        for (stage, row) in ALL_STAGES.iter().zip(self.stages.iter()) {
+            w.key(stage.name())?;
+            w.begin_obj()?;
+            let mut keyed: Vec<(&'static str, u64)> = self
+                .keys
+                .iter()
+                .zip(row.items_by_key.iter())
+                .filter(|(_, &n)| n > 0)
+                .map(|(&k, &n)| (k, n))
+                .collect();
+            keyed.sort_by_key(|&(k, _)| k);
+            w.key("by_archetype")?;
+            w.begin_obj()?;
+            for (k, n) in keyed {
+                w.field_num(k, n as f64)?;
+            }
+            w.end_obj()?;
+            w.field_num("items", row.items as f64)?;
+            w.field_num("spans", row.spans as f64)?;
+            w.key("wall_us")?;
+            row.wall_us.write_summary_json(w)?;
+            w.end_obj()?;
+        }
+        w.end_obj()?;
+        w.end_obj()
+    }
+}
+
+/// One telemetry window's metrics point — the `"series"` block's unit
+/// (DESIGN.md §13-3).  Per-worker points merge across shards by window
+/// index: the latency delta-histograms merge exactly, the counters sum,
+/// and the λ2 floor keeps the max (the tightest floor in force anywhere
+/// in the fleet that window).
+#[derive(Debug, Clone)]
+pub struct WindowMetric {
+    pub window: u64,
+    /// Window-start simulated time, seconds.
+    pub t_s: f64,
+    /// Latencies priced in this window (µs) — a snapshot delta.
+    pub latency_us: Histogram,
+    pub arrivals: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// λ2 floor the control law held during the window (0.3 = paper
+    /// floor; feedback off reports the paper floor).
+    pub lambda2_floor: f64,
+}
+
+impl WindowMetric {
+    /// Shed fraction of the window's arrivals (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        if self.arrivals == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.arrivals as f64
+        }
+    }
+}
+
+/// Merge per-worker window series into the fleet series: points align
+/// by window index (shards run the same window grid), counters sum,
+/// latency histograms merge, λ2 floors keep the max.
+pub fn merge_window_series(per_worker: &[Vec<WindowMetric>]) -> Vec<WindowMetric> {
+    let mut out: Vec<WindowMetric> = Vec::new();
+    for series in per_worker {
+        for p in series {
+            let w = p.window as usize;
+            while out.len() <= w {
+                let i = out.len() as u64;
+                out.push(WindowMetric {
+                    window: i,
+                    t_s: p.t_s,
+                    latency_us: Histogram::default(),
+                    arrivals: 0,
+                    served: 0,
+                    shed: 0,
+                    lambda2_floor: 0.0,
+                });
+            }
+            let slot = &mut out[w];
+            slot.t_s = p.t_s;
+            slot.latency_us.merge(&p.latency_us);
+            slot.arrivals += p.arrivals;
+            slot.served += p.served;
+            slot.shed += p.shed;
+            slot.lambda2_floor = slot.lambda2_floor.max(p.lambda2_floor);
+        }
+    }
+    out
+}
+
+/// Stream the `"series"` block: one object per window with the windowed
+/// latency percentiles (ms), the shed rate, and the λ2 floor — the
+/// feedback control law's behavior, readable directly from the report.
+pub fn write_series_json<W: std::fmt::Write>(
+    series: &[WindowMetric],
+    w: &mut JsonWriter<'_, W>,
+) -> std::fmt::Result {
+    w.begin_arr()?;
+    for p in series {
+        let lat = p.latency_us.percentiles(&[50.0, 95.0]);
+        w.begin_obj()?;
+        w.field_num("arrivals", p.arrivals as f64)?;
+        w.field_num("lambda2_floor", p.lambda2_floor)?;
+        w.field_num("p50_ms", lat[0] / 1e3)?;
+        w.field_num("p95_ms", lat[1] / 1e3)?;
+        w.field_num("served", p.served as f64)?;
+        w.field_num("shed", p.shed as f64)?;
+        w.field_num("shed_rate", p.shed_rate())?;
+        w.field_num("t_s", p.t_s)?;
+        w.field_num("window", p.window as f64)?;
+        w.end_obj()?;
+    }
+    w.end_arr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_clamped() {
+        let mut last = 0usize;
+        let mut v = MIN_TRACKABLE;
+        while v < MAX_TRACKABLE {
+            let i = Histogram::bucket_index(v);
+            assert!(i >= last, "index must be monotone at {v}");
+            last = i;
+            v *= 1.009; // finer than a sub-bucket's 1/64 spacing
+        }
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-5.0), 0);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(1e300), NUM_BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(f64::INFINITY), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn representative_sits_inside_its_bucket() {
+        for v in [1e-6, 0.02, 1.0, 3.7, 512.0, 123456.789, 4e9 / 2.0] {
+            let i = Histogram::bucket_index(v);
+            let r = Histogram::representative(i);
+            let rel = (r - v).abs() / v;
+            assert!(
+                rel <= 1.0 / SUBS as f64,
+                "representative {r} vs {v} off by {rel} (bucket {i})"
+            );
+            assert!(Histogram::lower_edge(i) <= v && v < Histogram::upper_edge(i));
+        }
+    }
+
+    #[test]
+    fn constant_samples_are_exact() {
+        let mut h = Histogram::default();
+        for _ in 0..1000 {
+            h.push(42.5);
+        }
+        // min == max clamps the representative to the exact value.
+        assert_eq!(h.percentile(50.0), 42.5);
+        assert_eq!(h.percentile(99.0), 42.5);
+        assert_eq!(h.min(), 42.5);
+        assert_eq!(h.max(), 42.5);
+        assert!((h.mean() - 42.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_mirrors_series_conventions() {
+        let h = Histogram::default();
+        assert_eq!(h.percentiles(&[50.0, 99.0]), vec![0.0, 0.0]);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            h.write_summary_json(&mut w).unwrap();
+            assert!(w.is_complete());
+        }
+        // No NaN/inf leaks into the summary of an empty histogram.
+        assert!(!buf.contains("inf") && !buf.contains("NaN") && !buf.contains("null"), "{buf}");
+    }
+
+    #[test]
+    fn delta_since_isolates_the_new_samples() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.push(i as f64);
+        }
+        let snap = h.clone();
+        for i in 1000..1100 {
+            h.push(i as f64);
+        }
+        let d = h.delta_since(&snap);
+        assert_eq!(d.count(), 100);
+        let p50 = d.percentile(50.0);
+        assert!((1000.0..1100.0).contains(&p50), "delta p50 {p50} must be in the new range");
+        assert!(d.min() >= 1000.0 * (1.0 - 1.0 / SUBS as f64));
+        // Empty delta stays clean.
+        let none = h.delta_since(&h.clone());
+        assert_eq!(none.count(), 0);
+        assert_eq!(none.percentile(95.0), 0.0);
+    }
+
+    #[test]
+    fn registry_records_and_merges() {
+        let keys: &[&'static str] = &["a", "b"];
+        let mut r1 = MetricsRegistry::new(keys);
+        r1.stage_span(Stage::Execution, 120.0, 10);
+        r1.stage_items_keyed(Stage::Execution, 0, 6);
+        r1.counter_add("steps", 10);
+        r1.gauge_max("backlog_jobs", 2.0);
+        let mut r2 = MetricsRegistry::new(keys);
+        r2.stage_span(Stage::Execution, 80.0, 4);
+        r2.stage_items_keyed(Stage::Execution, 1, 4);
+        r2.counter_add("steps", 4);
+        r2.gauge_max("backlog_jobs", 5.0);
+        r1.merge(&r2);
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            r1.write_json(&mut w).unwrap();
+            assert!(w.is_complete());
+        }
+        let json = crate::util::json::Json::parse(&buf).unwrap();
+        let exec = json.get("stages").unwrap().get("execution").unwrap();
+        assert_eq!(exec.get("items").unwrap().as_usize().unwrap(), 14);
+        assert_eq!(exec.get("spans").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            exec.get("by_archetype").unwrap().get("a").unwrap().as_usize().unwrap(),
+            6
+        );
+        assert_eq!(json.get("counters").unwrap().get("steps").unwrap().as_usize().unwrap(), 14);
+        assert_eq!(
+            json.get("gauges").unwrap().get("backlog_jobs").unwrap().as_f64().unwrap(),
+            5.0
+        );
+    }
+
+    #[test]
+    fn window_series_merges_by_index() {
+        let mk = |window: u64, served: u64, shed: u64, floor: f64, v: f64| {
+            let mut latency_us = Histogram::default();
+            latency_us.push(v);
+            WindowMetric {
+                window,
+                t_s: window as f64 * 60.0,
+                latency_us,
+                arrivals: served + shed,
+                served,
+                shed,
+                lambda2_floor: floor,
+            }
+        };
+        let a = vec![mk(0, 10, 0, 0.3, 1000.0), mk(1, 8, 2, 0.45, 2000.0)];
+        let b = vec![mk(0, 5, 5, 0.6, 1500.0)];
+        let merged = merge_window_series(&[a, b]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0].served, 15);
+        assert_eq!(merged[0].shed, 5);
+        assert_eq!(merged[0].lambda2_floor, 0.6, "max floor wins");
+        assert_eq!(merged[0].latency_us.count(), 2);
+        assert!((merged[0].shed_rate() - 0.25).abs() < 1e-12);
+        assert_eq!(merged[1].lambda2_floor, 0.45);
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            write_series_json(&merged, &mut w).unwrap();
+            assert!(w.is_complete());
+        }
+        let json = crate::util::json::Json::parse(&buf).unwrap();
+        assert_eq!(json.as_arr().unwrap().len(), 2);
+    }
+}

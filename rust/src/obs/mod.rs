@@ -24,10 +24,14 @@
 //! report stays bit-identical (`tests/obs.rs` pins this across all three
 //! presets).
 
+pub mod analyze;
 pub mod event;
+pub mod metrics;
 pub mod recorder;
 
+pub use analyze::TraceAnalysis;
 pub use event::{EvolutionAudit, Stage, StageSpan, TraceEvent, ALL_STAGES};
+pub use metrics::{Histogram, MetricsRegistry, WindowMetric, RELATIVE_ERROR_BOUND};
 pub use recorder::{FlightRecorder, ShardTracer, TraceSink};
 
 use anyhow::Result;

@@ -37,12 +37,24 @@ impl Bench {
     pub fn init(allowed: &[&str], boolean_flags: &[&str], usage: &str) -> Result<Bench> {
         let args = Args::from_env();
         // Every bin accepts --trace-out (DESIGN.md §12: the flight
-        // recorder's ndjson sink) without each contract listing it.
+        // recorder's ndjson sink) and --force (override the clobber
+        // guard below) without each contract listing them.
         let mut allowed: Vec<&str> = allowed.to_vec();
-        if !allowed.contains(&"trace-out") {
-            allowed.push("trace-out");
+        for extra in ["trace-out", "force"] {
+            if !allowed.contains(&extra) {
+                allowed.push(extra);
+            }
         }
-        args.enforce_usage(&allowed, boolean_flags, usage);
+        let mut boolean_flags: Vec<&str> = boolean_flags.to_vec();
+        if !boolean_flags.contains(&"force") {
+            boolean_flags.push("force");
+        }
+        args.enforce_usage(&allowed, &boolean_flags, usage);
+        // Clobber guard (§13-5): a rerun must not silently eat an
+        // existing trace — the file is the flight recorder's only copy.
+        if let Some(path) = args.get("trace-out") {
+            guard_overwrite(&args, path)?;
+        }
         let manifest = Manifest::load_cli(args.get("manifest"), DEFAULT_MANIFEST)?;
         Ok(Bench { args, manifest })
     }
@@ -89,4 +101,15 @@ impl Bench {
     pub fn read_floor(path: &str) -> Result<Json> {
         Json::parse(&std::fs::read_to_string(path)?)
     }
+}
+
+/// Refuse to overwrite an existing output file unless `--force` was
+/// passed; the error names the offending path so the fix is obvious.
+pub fn guard_overwrite(args: &Args, path: &str) -> Result<()> {
+    if !args.flag("force") && std::path::Path::new(path).exists() {
+        return Err(anyhow::anyhow!(
+            "refusing to overwrite existing file {path} (pass --force to allow)"
+        ));
+    }
+    Ok(())
 }

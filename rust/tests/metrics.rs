@@ -1,0 +1,365 @@
+//! Integration: the fleet metrics plane (DESIGN.md §13).
+//!
+//! * randomized histogram-vs-Series parity — the log-bucketed
+//!   [`Histogram`] must answer every percentile within the documented
+//!   [`RELATIVE_ERROR_BOUND`] of the exact sorted-sample oracle, with
+//!   count/sum/min/max exact;
+//! * merge algebra — merging is associative and commutative with
+//!   bit-exact percentiles (bucket counts are integers), and invariant
+//!   to how a sample stream is sharded;
+//! * snapshot deltas — `delta_since` isolates a window's samples;
+//! * metrics-off bit-parity — running each of the three pipeline
+//!   presets with `--metrics` attached must leave every deterministic
+//!   report field bit-identical to the unmetered run (the §13 "strictly
+//!   additive" guarantee), while the metered report carries a live
+//!   `"metrics"` block and — on the windowed preset — a per-window
+//!   `"series"` block.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::DispatchConfig;
+use adaspring::fleet::{run_pipeline, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig};
+use adaspring::metrics::Series;
+use adaspring::obs::{Histogram, RELATIVE_ERROR_BOUND};
+use adaspring::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Histogram vs the exact Series oracle (§13-1)
+// ---------------------------------------------------------------------
+
+/// Latency-like positive samples spanning ten decades — microseconds
+/// through tens of seconds, all well inside the trackable range.
+fn random_samples(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            let decade = rng.range(-3.0, 7.0);
+            (10f64).powf(decade) * rng.range(1.0, 10.0)
+        })
+        .collect()
+}
+
+fn fill(values: &[f64]) -> (Histogram, Series) {
+    let mut h = Histogram::default();
+    let mut s = Series::default();
+    for &v in values {
+        h.push(v);
+        s.push(v);
+    }
+    (h, s)
+}
+
+const PS: &[f64] = &[0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 99.9, 100.0];
+
+#[test]
+fn randomized_percentiles_match_the_exact_oracle_within_the_bound() {
+    let mut rng = Rng::new(0x13A);
+    for round in 0..100u32 {
+        let n = 1 + rng.below(2000);
+        let values = random_samples(&mut rng, n);
+        let (h, s) = fill(&values);
+
+        assert_eq!(h.count() as usize, s.len(), "round {round}: exact count");
+        assert_eq!(h.min().to_bits(), s.min().to_bits(), "round {round}: exact min");
+        assert_eq!(h.max().to_bits(), s.max().to_bits(), "round {round}: exact max");
+        assert!(
+            (h.mean() - s.mean()).abs() <= 1e-9 * s.mean().abs() + 1e-12,
+            "round {round}: mean is sum/count, exact up to f64 rounding"
+        );
+
+        let hp = h.percentiles(PS);
+        let sp = s.percentiles(PS);
+        for ((&p, &got), &exact) in PS.iter().zip(&hp).zip(&sp) {
+            assert!(
+                (got - exact).abs() <= RELATIVE_ERROR_BOUND * exact + 1e-12,
+                "round {round}: p{p}: histogram {got} vs exact {exact} \
+                 (bound {RELATIVE_ERROR_BOUND})"
+            );
+        }
+        // The extremes stay inside the tracked support.
+        assert!(hp[0] >= s.min(), "round {round}: p0 clamped to min");
+        assert!(hp[PS.len() - 1] <= s.max(), "round {round}: p100 clamped to max");
+        // The cumulative walk is monotone in p by construction.
+        for w in hp.windows(2) {
+            assert!(w[0] <= w[1], "round {round}: percentiles monotone");
+        }
+    }
+}
+
+#[test]
+fn empty_and_degenerate_histograms_mirror_series() {
+    let (h, s) = fill(&[]);
+    assert!(h.is_empty());
+    assert_eq!(h.percentiles(PS), s.percentiles(PS), "empty → all zeros");
+    assert_eq!(h.mean(), 0.0);
+
+    // A single sample answers every percentile with itself (clamping).
+    let (h, _) = fill(&[123.456]);
+    for p in h.percentiles(PS) {
+        assert_eq!(p.to_bits(), 123.456f64.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Merge algebra + shard-order invariance (§13-1)
+// ---------------------------------------------------------------------
+
+fn assert_same_distribution(a: &Histogram, b: &Histogram, label: &str) {
+    assert_eq!(a.count(), b.count(), "{label}: count");
+    assert_eq!(a.min().to_bits(), b.min().to_bits(), "{label}: min");
+    assert_eq!(a.max().to_bits(), b.max().to_bits(), "{label}: max");
+    let (pa, pb) = (a.percentiles(PS), b.percentiles(PS));
+    for ((&p, &x), &y) in PS.iter().zip(&pa).zip(&pb) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: p{p} bit-exact");
+    }
+    assert!(
+        (a.sum() - b.sum()).abs() <= 1e-9 * a.sum().abs() + 1e-12,
+        "{label}: sum up to f64 rounding"
+    );
+}
+
+#[test]
+fn merge_is_associative_commutative_and_shard_invariant() {
+    let mut rng = Rng::new(0xC0DE);
+    for round in 0..25u32 {
+        let values = random_samples(&mut rng, 50 + rng.below(1500));
+        let shards = 2 + rng.below(6);
+
+        // Round-robin sharding — each shard gets an interleaved slice.
+        let mut parts: Vec<Histogram> = vec![Histogram::default(); shards];
+        for (i, &v) in values.iter().enumerate() {
+            parts[i % shards].push(v);
+        }
+        let (whole, oracle) = fill(&values);
+
+        // Left fold, right fold, and reversed order all agree bit-exactly
+        // with the unsharded histogram.
+        let mut left = Histogram::default();
+        for p in &parts {
+            left.merge(p);
+        }
+        let mut right = Histogram::default();
+        for p in parts.iter().rev() {
+            right.merge(p);
+        }
+        let mut paired = Histogram::default();
+        for pair in parts.chunks(2) {
+            let mut sub = Histogram::default();
+            for p in pair {
+                sub.merge(p);
+            }
+            paired.merge(&sub);
+        }
+        assert_same_distribution(&left, &whole, &format!("round {round}: fold == unsharded"));
+        assert_same_distribution(&left, &right, &format!("round {round}: fold order"));
+        assert_same_distribution(&left, &paired, &format!("round {round}: grouping"));
+
+        // And the merged view still honors the oracle bound.
+        let (mp, op) = (left.percentiles(PS), oracle.percentiles(PS));
+        for ((&p, &got), &exact) in PS.iter().zip(&mp).zip(&op) {
+            assert!(
+                (got - exact).abs() <= RELATIVE_ERROR_BOUND * exact + 1e-12,
+                "round {round}: merged p{p}: {got} vs exact {exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn delta_since_isolates_the_window_samples() {
+    let mut rng = Rng::new(0xD17A);
+    for round in 0..25u32 {
+        let before = random_samples(&mut rng, 1 + rng.below(500));
+        let after = random_samples(&mut rng, 1 + rng.below(500));
+        let mut h = Histogram::default();
+        for &v in &before {
+            h.push(v);
+        }
+        let snapshot = h.clone();
+        for &v in &after {
+            h.push(v);
+        }
+        let delta = h.delta_since(&snapshot);
+        let (window_only, oracle) = fill(&after);
+
+        assert_eq!(delta.count(), window_only.count(), "round {round}: exact count");
+        assert!(
+            (delta.sum() - window_only.sum()).abs() <= 1e-9 * window_only.sum().abs() + 1e-12,
+            "round {round}: sums subtract exactly"
+        );
+        // Delta min/max are support bounds (bucket edges), not exact
+        // extremes — they must bracket the true window extremes.
+        assert!(delta.min() <= oracle.min() + 1e-12, "round {round}: min bound");
+        assert!(delta.max() >= oracle.max() - 1e-12, "round {round}: max bound");
+        // Interior percentiles still honor the oracle bound: the edge
+        // clamp only widens toward real support.
+        let (dp, op) = (delta.percentiles(&[50.0, 95.0]), oracle.percentiles(&[50.0, 95.0]));
+        for (i, (&got, &exact)) in dp.iter().zip(&op).enumerate() {
+            assert!(
+                (got - exact).abs() <= RELATIVE_ERROR_BOUND * exact + 1e-12,
+                "round {round}: delta percentile {i}: {got} vs exact {exact}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics-off bit-parity across the three presets (§13-2/§13-3)
+// ---------------------------------------------------------------------
+
+/// Bit-exact report equality over everything deterministic (wall-clock
+/// and per-worker busy times are the only excluded fields) — the same
+/// contract `tests/obs.rs` pins between an untraced and a traced run,
+/// here pinned between an unmetered and a metered run.
+fn assert_reports_identical(a: &FleetReport, b: &FleetReport, label: &str) {
+    assert_eq!(a.inferences, b.inferences, "{label}: inferences");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.evolutions, b.evolutions, "{label}: evolutions");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    for (x, y, what) in [
+        (a.latency.p50_ms, b.latency.p50_ms, "p50"),
+        (a.latency.p95_ms, b.latency.p95_ms, "p95"),
+        (a.latency.p99_ms, b.latency.p99_ms, "p99"),
+        (a.latency.mean_ms, b.latency.mean_ms, "mean"),
+        (a.latency.max_ms, b.latency.max_ms, "max"),
+        (a.search_p50_us, b.search_p50_us, "search p50"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: latency {what}");
+    }
+    assert_eq!(a.per_archetype.len(), b.per_archetype.len(), "{label}: archetype rows");
+    for (x, y) in a.per_archetype.iter().zip(b.per_archetype.iter()) {
+        assert_eq!(x.archetype, y.archetype, "{label}");
+        assert_eq!(x.inferences, y.inferences, "{label}: {}", x.archetype);
+        assert_eq!(x.shed, y.shed, "{label}: {}", x.archetype);
+        assert_eq!(x.evolutions, y.evolutions, "{label}: {}", x.archetype);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: {}", x.archetype);
+    }
+    match (&a.dispatch, &b.dispatch) {
+        (None, None) => {}
+        (Some(da), Some(db)) => {
+            assert_eq!(da.admission.submitted, db.admission.submitted, "{label}: submitted");
+            assert_eq!(da.admission.admitted, db.admission.admitted, "{label}: admitted");
+            assert_eq!(da.batches.histogram, db.batches.histogram, "{label}: histogram");
+            assert_eq!(da.batches.served, db.batches.served, "{label}: served");
+        }
+        _ => panic!("{label}: dispatch block presence differs"),
+    }
+    match (&a.feedback, &b.feedback) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.windows, fb.windows, "{label}: windows");
+            assert_eq!(
+                fa.telemetry.shed_rate.to_bits(),
+                fb.telemetry.shed_rate.to_bits(),
+                "{label}: telemetry shed rate"
+            );
+        }
+        _ => panic!("{label}: feedback block presence differs"),
+    }
+}
+
+/// Walk a parsed report JSON down `path`, returning 0 on any miss.
+fn json_u64(j: &adaspring::util::json::Json, path: &[&str]) -> u64 {
+    let mut cur = j;
+    for key in path {
+        match cur.get(key) {
+            Ok(next) => cur = next,
+            Err(_) => return 0,
+        }
+    }
+    cur.as_u64().unwrap_or(0)
+}
+
+#[test]
+fn metrics_are_strictly_additive_across_all_three_presets() {
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 6,
+        shards: 2,
+        duration_s: 1800.0,
+        seed: 17,
+        task: "d3".to_string(),
+        cache_stripes: 4,
+        ..FleetConfig::default()
+    };
+    let dcfg = DispatchConfig::default();
+    let fb_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..cfg.clone() };
+
+    // (label, windowed?, unmetered preset, metered preset) — presets are
+    // rebuilt because with_metrics consumes the config.
+    let presets: [(&str, bool, PipelineConfig, PipelineConfig); 3] = [
+        ("direct", false, PipelineConfig::direct(&cfg), PipelineConfig::direct(&cfg)),
+        (
+            "dispatch",
+            false,
+            PipelineConfig::dispatch(&cfg, &dcfg),
+            PipelineConfig::dispatch(&cfg, &dcfg),
+        ),
+        (
+            "feedback",
+            true,
+            PipelineConfig::feedback(&fb_cfg, &dcfg),
+            PipelineConfig::feedback(&fb_cfg, &dcfg),
+        ),
+    ];
+    for (label, windowed, unmetered, metered_cfg) in presets {
+        let plain = run_pipeline(&manifest, &unmetered).unwrap();
+        let metered = run_pipeline(&manifest, &metered_cfg.with_metrics(true)).unwrap();
+        assert_reports_identical(&plain, &metered, label);
+
+        assert!(plain.metrics.is_none(), "{label}: metrics off by default");
+        assert!(plain.series.is_empty(), "{label}: series off by default");
+        assert!(metered.metrics.is_some(), "{label}: metered run carries the registry");
+
+        let json = metered.to_json();
+        assert!(json.get("metrics").is_ok(), "{label}: report JSON has the metrics block");
+        assert!(plain.to_json().get("metrics").is_err(), "{label}: unmetered JSON has none");
+        assert!(
+            json_u64(&json, &["metrics", "counters", "steps"]) > 0,
+            "{label}: workers stepped"
+        );
+        assert!(
+            json_u64(&json, &["metrics", "stages", "execution", "spans"]) > 0,
+            "{label}: execution spans recorded"
+        );
+        assert_eq!(
+            json_u64(&json, &["metrics", "counters", "evolutions"]),
+            metered.evolutions as u64,
+            "{label}: evolutions counter matches the report"
+        );
+
+        if windowed {
+            assert!(!metered.series.is_empty(), "{label}: windowed run yields a series");
+            assert!(json.get("series").is_ok(), "{label}: report JSON has the series block");
+            assert!(
+                json_u64(&json, &["metrics", "counters", "windows"]) > 0,
+                "{label}: windows counted"
+            );
+            let mut served_total = 0u64;
+            for (i, w) in metered.series.iter().enumerate() {
+                assert_eq!(w.window as usize, i, "{label}: windows indexed densely");
+                assert!(w.shed <= w.arrivals, "{label}: window {i} shed bounded");
+                let r = w.shed_rate();
+                assert!((0.0..=1.0).contains(&r), "{label}: window {i} shed rate in [0,1]");
+                assert!(
+                    (0.3..=0.9).contains(&w.lambda2_floor),
+                    "{label}: window {i} λ2 floor within the control-law range"
+                );
+                served_total += w.served;
+            }
+            // The post-loop safety-net flush can price leftovers outside
+            // any window, so the series bounds the total from below.
+            assert!(served_total > 0, "{label}: windows served work");
+            assert!(
+                served_total as usize <= metered.inferences,
+                "{label}: per-window served ({served_total}) bounded by the fleet total ({})",
+                metered.inferences
+            );
+        } else {
+            assert!(metered.series.is_empty(), "{label}: unwindowed run has no series");
+            assert!(json.get("series").is_err(), "{label}: no series block in the JSON");
+        }
+    }
+}
