@@ -25,7 +25,11 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Result};
 
 use adaspring::coordinator::Manifest;
-use adaspring::fleet::{run_fleet, run_pipeline, FleetConfig, FleetReport, PipelineConfig};
+use adaspring::dispatch::DispatchConfig;
+use adaspring::fleet::{
+    run_fleet, run_pipeline, AdmissionMode, BatchingMode, ExecutionMode, FeedbackConfig,
+    FleetConfig, FleetReport, PipelineConfig, PlanMode, SchedulerMode, StagePlan, TelemetryMode,
+};
 use adaspring::metrics::Table;
 use adaspring::obs::{TraceConfig, ALL_STAGES};
 use adaspring::util::bench::guard_overwrite;
@@ -35,20 +39,25 @@ use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "check-floor", "json-out", "metrics-json", "sweep", "csv", "metrics",
+    "load", "active-fraction", "scheduler", "check-floor", "json-out", "metrics-json", "sweep",
+    "csv", "metrics",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "metrics"];
 
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--feedback off] [--load X] [--trace-out PATH] [--metrics] \
+                     [--feedback off] [--load X] [--active-fraction F] \
+                     [--scheduler windowed|event] [--trace-out PATH] [--metrics] \
                      [--metrics-json PATH] [--check-floor PATH] [--json-out PATH] [--sweep] \
                      [--csv]\n\
                      (--feedback on needs the dispatch path: bench_dispatch / bench_feedback; \
                      --metrics adds the \"metrics\" block to the report, --metrics-json also \
-                     writes the metrics/series blocks to PATH; --check-floor runs the \
-                     traced-vs-untraced overhead check against rust/obs_floor.json)";
+                     writes the metrics/series blocks to PATH; --scheduler runs the observe-only \
+                     windowed composition under the chosen scheduler — DESIGN.md §14; \
+                     --check-floor alone runs the traced-vs-untraced overhead check against \
+                     rust/obs_floor.json, --scheduler + --check-floor runs the event-scheduler \
+                     speedup check against rust/event_floor.json)";
 
 fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())
@@ -57,26 +66,43 @@ fn config_from(args: &Args) -> Result<FleetConfig> {
 fn main() -> Result<()> {
     let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
+    let scheduler = match bench.args.get("scheduler") {
+        Some(s) => match SchedulerMode::parse(s) {
+            Some(m) => Some(m),
+            None => bail!("unknown --scheduler {s:?} (expected windowed|event)"),
+        },
+        None => None,
+    };
     if bench.args.flag("sweep") {
         if bench.trace_out().is_some() {
             bail!("--trace-out traces a single run — drop --sweep");
         }
+        if scheduler.is_some() {
+            bail!("--sweep sweeps the direct path — drop --scheduler");
+        }
         return sweep(&bench);
     }
     if let Some(path) = bench.args.get("check-floor") {
-        return check_obs_floor(&bench, path);
+        return match scheduler {
+            Some(_) => check_event_floor(&bench, path),
+            None => check_obs_floor(&bench, path),
+        };
     }
 
     let cfg = config_from(&bench.args)?;
     println!(
-        "# Fleet serving — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
+        "# Fleet serving{} — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
+        scheduler.map(|m| format!(" ({} scheduler)", m.name())).unwrap_or_default(),
         cfg.devices,
         cfg.duration_s / 3600.0,
         cfg.shards,
         cfg.task,
         cfg.seed
     );
-    let report = run_traced(&bench, &cfg)?;
+    let report = match scheduler {
+        Some(mode) => run_scheduled(&bench, &cfg, mode)?,
+        None => run_traced(&bench, &cfg)?,
+    };
     print_summary(&report);
     bench.print_table(&report.archetype_table());
     let json = report.to_json();
@@ -112,6 +138,171 @@ fn run_traced(bench: &Bench, cfg: &FleetConfig) -> Result<FleetReport> {
         .with_trace(bench.trace_out().map(TraceConfig::new))
         .with_metrics(metrics);
     run_pipeline(&bench.manifest, &pcfg)
+}
+
+/// The observe-only windowed composition (virtual-queue admission, drain
+/// batching, shard telemetry, feedback law *off*) under an explicit
+/// scheduler — the §14 comparison harness: both schedulers run the same
+/// windowed contract, so their wall-clock difference is purely the
+/// per-window sweep the event core eliminates.
+fn scheduled_pipeline(cfg: &FleetConfig, scheduler: SchedulerMode) -> PipelineConfig {
+    PipelineConfig {
+        fleet: cfg.clone(),
+        dispatch: DispatchConfig::default(),
+        stages: StagePlan {
+            admission: AdmissionMode::VirtualQueue,
+            batching: BatchingMode::Drain,
+            execution: ExecutionMode::Sharded,
+            telemetry: TelemetryMode::Shard,
+            feedback: false,
+            scheduler,
+        },
+        trace: None,
+        metrics: false,
+    }
+}
+
+/// `--scheduler windowed|event`: one observe-only windowed run under the
+/// chosen scheduler (both produce bit-identical reports —
+/// `tests/scheduler.rs`; the wall-clock is what differs).
+fn run_scheduled(
+    bench: &Bench,
+    cfg: &FleetConfig,
+    scheduler: SchedulerMode,
+) -> Result<FleetReport> {
+    if cfg.feedback.enabled {
+        bail!(
+            "--scheduler runs the observe-only windowed composition — drop --feedback \
+             (the feedback presets run through bench_feedback)"
+        );
+    }
+    let metrics = bench.args.flag("metrics") || bench.args.get("metrics-json").is_some();
+    let pcfg = scheduled_pipeline(cfg, scheduler)
+        .with_trace(bench.trace_out().map(TraceConfig::new))
+        .with_metrics(metrics);
+    run_pipeline(&bench.manifest, &pcfg)
+}
+
+/// The §14 event-scheduler floor (CI: `--scheduler event --devices 1000000
+/// --check-floor rust/event_floor.json`): windowed vs event-driven
+/// wall-clock on the observe-only composition at a small fleet and at the
+/// CLI fleet, mostly-idle (the floor's `active_fraction`).  Gates:
+///
+/// * event beats windowed at the small fleet (`min_speedup_small`) and by
+///   the headline factor at the large one (`min_speedup_large`);
+/// * per-device event wall stays flat as the fleet grows
+///   (`max_scale_ratio`) — total-device sweeps are gone, so wall grows
+///   only with constructed sessions plus *active* work;
+/// * both schedulers agree on inferences/evolutions/shed at both sizes
+///   (the cheap in-run echo of the `tests/scheduler.rs` bit-parity gate).
+///
+/// Emits the measurements as the CI `BENCH_event.json` artifact via
+/// `--json-out`.
+fn check_event_floor(bench: &Bench, floor_path: &str) -> Result<()> {
+    let base = config_from(&bench.args)?;
+    if base.feedback.enabled {
+        bail!("the event floor check builds its own windowed composition — drop --feedback");
+    }
+    let floor = Bench::read_floor(floor_path)?;
+    let devices_small = floor.get("devices_small")?.as_u64()? as usize;
+    let sim_seconds = floor.get("sim_seconds")?.as_f64()?;
+    let window_s = floor.get("telemetry_window_s")?.as_f64()?;
+    let active_fraction = floor.get("active_fraction")?.as_f64()?;
+    let min_small = floor.get("min_speedup_small")?.as_f64()?;
+    let min_large = floor.get("min_speedup_large")?.as_f64()?;
+    let max_scale = floor.get("max_scale_ratio")?.as_f64()?;
+    let devices_large = base.devices.max(devices_small);
+
+    let cfg_at = |devices: usize| FleetConfig {
+        devices,
+        duration_s: sim_seconds,
+        active_fraction,
+        // Shared plan cache: startup evolutions are mostly hits, so the
+        // measured gap is scheduling, not redundant search.
+        plan: PlanMode::Shared,
+        feedback: FeedbackConfig { telemetry_window_s: window_s, ..FeedbackConfig::off() },
+        ..base.clone()
+    };
+    let windows = (sim_seconds / window_s).ceil() as u64;
+    println!(
+        "# Event-scheduler floor — windowed vs event at {devices_small} and {devices_large} \
+         devices\n#   {:.1}% active, {sim_seconds:.0} s simulated, {windows} telemetry windows, \
+         {} shards\n",
+        active_fraction * 100.0,
+        base.shards
+    );
+
+    let mut failures: Vec<String> = Vec::new();
+    let mut m = BTreeMap::new();
+    let mut speedups: Vec<(usize, f64, f64, f64)> = Vec::new(); // (devices, win, event, speedup)
+    for (tag, devices) in [("small", devices_small), ("large", devices_large)] {
+        let cfg = cfg_at(devices);
+        let w = run_pipeline(&bench.manifest, &scheduled_pipeline(&cfg, SchedulerMode::Windowed))?;
+        let e =
+            run_pipeline(&bench.manifest, &scheduled_pipeline(&cfg, SchedulerMode::EventDriven))?;
+        let speedup = w.wall_ms / e.wall_ms.max(1e-9);
+        println!(
+            "{devices} devices: windowed {:.0} ms, event {:.0} ms ({speedup:.1}x); \
+             {} inferences, {} evolutions, {} shed",
+            w.wall_ms, e.wall_ms, e.inferences, e.evolutions, e.shed
+        );
+        if (w.inferences, w.evolutions, w.shed) != (e.inferences, e.evolutions, e.shed) {
+            failures.push(format!(
+                "schedulers disagree at {devices} devices: windowed \
+                 ({}, {}, {}) vs event ({}, {}, {}) inferences/evolutions/shed",
+                w.inferences, w.evolutions, w.shed, e.inferences, e.evolutions, e.shed
+            ));
+        }
+        m.insert(format!("devices_{tag}"), Json::Num(devices as f64));
+        m.insert(format!("windowed_{tag}_ms"), Json::Num(w.wall_ms));
+        m.insert(format!("event_{tag}_ms"), Json::Num(e.wall_ms));
+        m.insert(format!("speedup_{tag}"), Json::Num(speedup));
+        m.insert(format!("inferences_{tag}"), Json::Num(e.inferences as f64));
+        speedups.push((devices, w.wall_ms, e.wall_ms, speedup));
+    }
+    let (small, large) = (&speedups[0], &speedups[1]);
+    if small.3 < min_small {
+        failures.push(format!(
+            "event-driven only {:.2}x faster than windowed at {} devices (floor {min_small}x)",
+            small.3, small.0
+        ));
+    }
+    if large.3 < min_large {
+        failures.push(format!(
+            "event-driven only {:.2}x faster than windowed at {} devices (floor {min_large}x)",
+            large.3, large.0
+        ));
+    }
+    // Per-device event wall: the large fleet may not cost more per
+    // session than the small one beyond the committed headroom.
+    let per_device_ratio = (large.2 / large.0 as f64) / (small.2 / small.0 as f64).max(1e-12);
+    if large.0 > small.0 && per_device_ratio > max_scale {
+        failures.push(format!(
+            "per-device event wall grew {per_device_ratio:.2}x from {} to {} devices \
+             (floor {max_scale}x): the scheduler is scaling in total, not active, devices",
+            small.0, large.0
+        ));
+    }
+    m.insert("per_device_scale_ratio".into(), Json::Num(per_device_ratio));
+    m.insert("windows".into(), Json::Num(windows as f64));
+    m.insert("active_fraction".into(), Json::Num(active_fraction));
+    m.insert("min_speedup_small".into(), Json::Num(min_small));
+    m.insert("min_speedup_large".into(), Json::Num(min_large));
+    m.insert("max_scale_ratio".into(), Json::Num(max_scale));
+    bench.emit_json("event", &Json::Obj(m))?;
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "\nfloor check ok: {:.1}x at {} devices (>= {min_small}x), {:.1}x at {} devices \
+         (>= {min_large}x), per-device event wall ratio {per_device_ratio:.2} (<= {max_scale})",
+        small.3, small.0, large.3, large.0
+    );
+    Ok(())
 }
 
 fn print_summary(r: &FleetReport) {

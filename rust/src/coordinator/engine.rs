@@ -56,9 +56,38 @@ impl Evolution {
     }
 }
 
+/// Per-task fitted models shared across every session of a worker
+/// (DESIGN.md §14): [`AccuracyModel::fit`] solves a dense ridge system,
+/// which is invisible per engine but dominates construction at a million
+/// devices.  Both members depend only on the task — never the platform —
+/// and fitting is deterministic, so one shared fit cloned per session is
+/// bit-identical to a million independent fits.
+#[derive(Debug, Clone)]
+pub struct TaskModels {
+    pub cost_model: Arc<CostModel>,
+    pub accuracy: Arc<AccuracyModel>,
+}
+
+impl TaskModels {
+    /// Fit both task-level models once.
+    pub fn fit(task: &TaskArtifacts) -> TaskModels {
+        TaskModels {
+            cost_model: Arc::new(CostModel::new(
+                &task.backbone,
+                &task.input_shape,
+                task.num_classes,
+            )),
+            accuracy: Arc::new(AccuracyModel::fit(task)),
+        }
+    }
+}
+
 /// The runtime engine for one task on one platform.
 pub struct AdaSpring {
-    task: TaskArtifacts,
+    /// Shared task artifacts: every fleet session on the same task holds
+    /// the same `Arc` (built once per worker), so a million-device run
+    /// pays one palette/backbone copy per task instead of one per device.
+    task: Arc<TaskArtifacts>,
     root: PathBuf,
     pub evaluator: Evaluator,
     searcher: Runtime3C,
@@ -86,25 +115,51 @@ impl AdaSpring {
         platform: &Platform,
         with_executor: bool,
     ) -> Result<AdaSpring> {
-        let task = manifest.task(task_name)?.clone();
-        let cost_model = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
-        let accuracy = AccuracyModel::fit(&task);
-        let evaluator = Evaluator::new(cost_model, accuracy, platform);
+        let task = Arc::new(manifest.task(task_name)?.clone());
+        let mut engine = Self::with_task(task, manifest.root.clone(), platform);
+        if with_executor {
+            engine.executor = Some(Executor::new(&engine.task)?);
+        }
+        Ok(engine)
+    }
+
+    /// Build over an already-shared task `Arc` (no executor) — the fleet
+    /// path: a worker resolves its task once and every session's engine
+    /// holds the same artifacts instead of a per-device clone.
+    pub fn with_task(task: Arc<TaskArtifacts>, root: PathBuf, platform: &Platform) -> AdaSpring {
+        let models = TaskModels::fit(&task);
+        Self::with_task_models(task, root, platform, &models)
+    }
+
+    /// Build over shared task artifacts *and* pre-fitted task models —
+    /// the million-device constructor: the caller fits [`TaskModels`]
+    /// once and every session clones the coefficients instead of
+    /// re-solving the ridge system.
+    pub fn with_task_models(
+        task: Arc<TaskArtifacts>,
+        root: PathBuf,
+        platform: &Platform,
+        models: &TaskModels,
+    ) -> AdaSpring {
+        let evaluator = Evaluator::from_shared(
+            Arc::clone(&models.cost_model),
+            Arc::clone(&models.accuracy),
+            platform,
+        );
         let searcher = Runtime3C::new(Mutator::from_task(&task));
-        let executor = if with_executor { Some(Executor::new(&task)?) } else { None };
-        Ok(AdaSpring {
+        AdaSpring {
             task,
-            root: manifest.root.clone(),
+            root,
             evaluator,
             searcher,
-            executor,
+            executor: None,
             active: None,
             active_variant: None,
             platform_name: platform.name,
             quantizer: None,
             plan_cache: None,
             plan_ttl: None,
-        })
+        }
     }
 
     /// Build with an executor over a *shared* executable cache: variants

@@ -1,6 +1,8 @@
 //! Candidate evaluation: the objective of Eq. 1 and the dynamic constraint
 //! set, shared by Runtime3C and the baseline optimizers.
 
+use std::sync::Arc;
+
 use super::accuracy::AccuracyModel;
 use super::config::CompressionConfig;
 use super::costmodel::{CostModel, Costs};
@@ -193,10 +195,15 @@ impl Scored for Evaluation {
 }
 
 /// Evaluator bound to one task + platform.
+///
+/// The task-level models are held behind `Arc` so a million fleet
+/// sessions of the same task share one coefficient table instead of
+/// cloning ~1 KB of heap each (DESIGN.md §14); both models are
+/// read-only after fitting, so sharing is invisible to evaluation.
 #[derive(Debug, Clone)]
 pub struct Evaluator {
-    cost_model: CostModel,
-    accuracy: AccuracyModel,
+    cost_model: Arc<CostModel>,
+    accuracy: Arc<AccuracyModel>,
     energy: EnergyModel,
     latency: LatencyModel,
     param_cache_fraction: f64,
@@ -206,6 +213,16 @@ pub struct Evaluator {
 
 impl Evaluator {
     pub fn new(cost_model: CostModel, accuracy: AccuracyModel, platform: &Platform) -> Evaluator {
+        Self::from_shared(Arc::new(cost_model), Arc::new(accuracy), platform)
+    }
+
+    /// Build over already-shared task models (the fleet constructor:
+    /// two refcount bumps instead of two deep clones per session).
+    pub fn from_shared(
+        cost_model: Arc<CostModel>,
+        accuracy: Arc<AccuracyModel>,
+        platform: &Platform,
+    ) -> Evaluator {
         Evaluator {
             cost_model,
             accuracy,

@@ -148,14 +148,17 @@ pub fn assemble_batches(cfg: &DispatchConfig, sessions: &mut [Box<DeviceSession>
     assemble_batches_window(cfg, sessions, u64::MAX).stats
 }
 
-/// Shared core of both assembly paths: group `requests` (one vec per
-/// session, aligned to device-id-sorted `sessions`) by (window, variant),
-/// chunk to `cap`, price each member on its platform's sublinear curve,
-/// and record the final latencies into the sessions.
+/// Shared core of every assembly path: group `requests` (one vec per
+/// drained session, in device-id order) by (window, variant), chunk to
+/// `cap`, price each member on its platform's sublinear curve, and
+/// record the final latencies into the sessions.  `targets` maps each
+/// request-vec position to its index in `sessions` (`None` = identity,
+/// the full-drain paths); `per_session` aligns with `requests`.
 fn group_and_price(
     cfg: &DispatchConfig,
     cap: usize,
     sessions: &mut [Box<DeviceSession>],
+    targets: Option<&[usize]>,
     requests: &[Vec<ServedRequest>],
 ) -> WindowPricing {
     let mut batches: Vec<Vec<(usize, usize)>> = Vec::new();
@@ -185,7 +188,7 @@ fn group_and_price(
 
     let mut stats = BatchStats::default();
     let mut service_us_sum = 0.0f64;
-    let mut per_session = vec![(0u64, 0.0f64); sessions.len()];
+    let mut per_session = vec![(0u64, 0.0f64); requests.len()];
     for chunk in &batches {
         let k = chunk.len();
         stats.batches += 1;
@@ -194,13 +197,14 @@ fn group_and_price(
         *stats.histogram.entry(k).or_insert(0) += 1;
         for &(si, ri) in chunk {
             let r = requests[si][ri];
-            let factor = sessions[si].platform().batch_per_inference_factor(k);
+            let s = &mut sessions[targets.map_or(si, |t| t[si])];
+            let factor = s.platform().batch_per_inference_factor(k);
             let service_us = r.single_us * factor;
             service_us_sum += service_us;
             per_session[si].0 += 1;
             per_session[si].1 += service_us;
             stats.total_us.push(r.wait_us + service_us);
-            sessions[si].record_dispatched_latency(service_us);
+            s.record_dispatched_latency(service_us);
         }
     }
     WindowPricing { stats, service_us_sum, per_session }
@@ -242,7 +246,35 @@ pub fn assemble_batches_window_capped(
     );
     let drained: Vec<Vec<ServedRequest>> =
         sessions.iter_mut().map(|s| s.take_served_before(window_limit)).collect();
-    group_and_price(cfg, cap, sessions, &drained)
+    group_and_price(cfg, cap, sessions, None, &drained)
+}
+
+/// Subset batch assembly (DESIGN.md §14): drain and price only the
+/// sessions at `indices` — the event-driven scheduler's dirty set.
+/// `indices` must be ascending (= device-id order within a worker's
+/// sorted slice), which makes the (window, variant) group contents and
+/// intra-group order — and therefore every batch, its pricing, and the
+/// float summation order — identical to a full drain in which the
+/// omitted sessions had nothing to contribute.  `per_session` aligns
+/// with `indices`.
+pub fn assemble_batches_for(
+    cfg: &DispatchConfig,
+    sessions: &mut [Box<DeviceSession>],
+    indices: &[usize],
+    window_limit: u64,
+    cap: usize,
+) -> WindowPricing {
+    debug_assert!(
+        indices.windows(2).all(|w| w[0] < w[1]),
+        "assemble_batches_for needs ascending indices"
+    );
+    debug_assert!(
+        sessions.windows(2).all(|w| w[0].device_id < w[1].device_id),
+        "assemble_batches_for needs device-id-sorted sessions"
+    );
+    let drained: Vec<Vec<ServedRequest>> =
+        indices.iter().map(|&i| sessions[i].take_served_before(window_limit)).collect();
+    group_and_price(cfg, cap, sessions, Some(indices), &drained)
 }
 
 #[cfg(test)]

@@ -52,7 +52,8 @@ pub use admission::{
     ShardAdmission, ShedReason,
 };
 pub use batcher::{
-    assemble_batches, assemble_batches_window, assemble_batches_window_capped, AdaptiveBatch,
+    assemble_batches, assemble_batches_for, assemble_batches_window,
+    assemble_batches_window_capped, AdaptiveBatch,
     BatchStats, ServedRequest, WindowPricing,
 };
 pub use service::{ServiceQueue, StreamingAdmission};

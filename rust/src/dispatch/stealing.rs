@@ -5,8 +5,8 @@
 //! the whole fleet behind one thread.  Here each worker owns a shared,
 //! simulated-time-ordered heap of *whole sessions*: it pops the
 //! earliest-due session, steps it once, and reinserts it — and when its
-//! local heap drains it steals half the earliest-due sessions from the
-//! most-loaded worker and keeps going.
+//! local heap drains it steals the most-loaded worker's earliest-due
+//! half as one contiguous event range (§14) and keeps going.
 //!
 //! Stealing is safe precisely because of the dispatch factorization:
 //! admission verdicts are precomputed (§8-1) and batch membership is a
@@ -185,8 +185,15 @@ impl StealPool {
         Ok((finished, busy.as_secs_f64() * 1e3, steps))
     }
 
-    /// Steal half the earliest-due sessions from the most-loaded worker
-    /// into `w`'s heap.  Returns false when nothing was stealable.
+    /// Steal the earliest-due half of the most-loaded worker's queue
+    /// into `w`'s heap, as one contiguous *event range* (DESIGN.md §14):
+    /// the victim's heap is partitioned around its median due key with
+    /// one `select_nth_unstable` pass, the earliest-due range moves
+    /// whole, and both halves re-heapify in O(n) — instead of `take`
+    /// successive O(log n) pops each touching the victim's whole heap.
+    /// Which thread steps a session never changes its trajectory (§8-3),
+    /// so the split point is a wall-clock choice only.  Returns false
+    /// when nothing was stealable.
     fn steal_into(&self, w: usize) -> bool {
         let mut victim = None;
         let mut best = 0usize;
@@ -201,26 +208,31 @@ impl StealPool {
             }
         }
         let Some(v) = victim else { return false };
-        let mut taken = Vec::new();
-        {
+        let taken = {
             let mut vq = self.heap(v);
-            let take = (vq.len() + 1) / 2;
-            for _ in 0..take {
-                match vq.pop() {
-                    Some(p) => taken.push(p),
-                    None => break,
-                }
+            let n = vq.len();
+            if n == 0 {
+                return false;
             }
-        }
+            let take = (n + 1) / 2;
+            let mut all = std::mem::take(&mut *vq).into_vec();
+            if take < all.len() {
+                // `Pending`'s Ord is reversed (max-heap top = earliest
+                // due), so ordering by `b.cmp(a)` puts the earliest-due
+                // sessions first; everything left of the partition point
+                // is the contiguous earliest key range.
+                all.select_nth_unstable_by(take - 1, |a, b| b.cmp(a));
+            }
+            let rest = all.split_off(take);
+            *vq = BinaryHeap::from(rest);
+            all
+        };
         if taken.is_empty() {
             return false;
         }
         self.steals[w].fetch_add(1, Ordering::Relaxed);
         self.sessions_stolen[w].fetch_add(taken.len() as u64, Ordering::Relaxed);
-        let mut own = self.heap(w);
-        for p in taken {
-            own.push(p);
-        }
+        self.heap(w).extend(taken);
         true
     }
 }

@@ -1,0 +1,256 @@
+//! Event-queue scheduler core (DESIGN.md §14).
+//!
+//! The windowed worker loop historically swept *every* session once per
+//! telemetry window — frame delivery, batching drain, the done-count
+//! scan, the audit flush — so per-window cost scaled with total devices
+//! even when almost all of them were idle between arrivals.  At the
+//! ROADMAP's million-device scale that sweep dominates wall-clock: a 1%
+//! active fleet pays 100× its useful work in bookkeeping.
+//!
+//! [`EventCore`] is the calendar-queue replacement: a binary heap keyed
+//! on each session's `next_due()` (already `min(next_arrival,
+//! next_context_check, duration)` — the event triple the issue names),
+//! plus struct-of-arrays per-session hot state that the per-window
+//! sweeps used to re-derive:
+//!
+//! * `frame_epoch` — the telemetry window whose frame the session last
+//!   received, so frames deliver *lazily at heap-pop time* instead of by
+//!   full sweep.  `DeviceSession::step` is the only reader of its load
+//!   frame, so a session that skips windows observes exactly the frame
+//!   the sweep would have left it: the current window's.
+//! * `queued`/`dirty` — which sessions hold undrained served requests,
+//!   so drain-mode batching visits the dirty set (in ascending index =
+//!   device-id order, preserving batch membership and float-sum order)
+//!   instead of draining every session.
+//! * `touched` — which sessions stepped since the last audit flush, so
+//!   the trace plane's per-window audit drain stops being a fleet sweep.
+//! * `done` — an incremental completion counter replacing the per-window
+//!   `sessions.iter().filter(is_done).count()` scan.
+//!
+//! The windowed sweep stays in `fleet/pipeline.rs` as the bit-parity
+//! oracle behind [`crate::fleet::SchedulerMode`] — exactly how
+//! `search_full` oracles the arena search — and `tests/scheduler.rs`
+//! pins `EventDriven ≡ Windowed` report-bit-identity across presets and
+//! randomized stage swaps.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use super::session::{DeviceSession, SimVariantCache};
+use crate::context::telemetry::LoadTelemetry;
+
+/// Sentinel for "no telemetry frame delivered yet".
+const NO_EPOCH: u64 = u64::MAX;
+
+/// Per-worker event-queue scheduler state (struct-of-arrays over the
+/// worker's session slice; every index below is a position in that
+/// slice, not a device id — though ascending index order *is* ascending
+/// device-id order, which the batching stage relies on).
+pub struct EventCore {
+    /// Min-heap of `(next_due bits, session index)` — non-negative
+    /// finite times (and the terminal `+inf`) order identically to the
+    /// float, the same key the `StealPool` uses.
+    heap: BinaryHeap<Reverse<(u64, usize)>>,
+    /// Telemetry window whose frame each session last received.
+    frame_epoch: Vec<u64>,
+    /// Session holds undrained served requests (guards `dirty` dedup).
+    queued: Vec<bool>,
+    /// Indices with `queued` set, in insertion order (sorted on take).
+    dirty: Vec<usize>,
+    /// Session stepped since the last `drain_touched` (audit tracking;
+    /// only maintained when armed — the trace plane is optional).
+    touched: Vec<bool>,
+    touched_list: Vec<usize>,
+    track_touched: bool,
+    /// Sessions run to completion (incremental — no per-window scan).
+    done: u64,
+}
+
+impl EventCore {
+    /// Build the scheduler over a worker's sessions.  `track_touched`
+    /// arms stepped-session tracking for the audit flush (pass the
+    /// observability planes' liveness; untraced runs skip the cost).
+    pub fn new(sessions: &[Box<DeviceSession>], track_touched: bool) -> EventCore {
+        let n = sessions.len();
+        let mut heap = BinaryHeap::with_capacity(n);
+        let mut done = 0u64;
+        for (i, s) in sessions.iter().enumerate() {
+            if s.is_done() {
+                done += 1;
+            } else {
+                heap.push(Reverse((s.next_due().to_bits(), i)));
+            }
+        }
+        EventCore {
+            heap,
+            frame_epoch: vec![NO_EPOCH; n],
+            queued: vec![false; n],
+            dirty: Vec::new(),
+            touched: vec![false; n],
+            touched_list: Vec::new(),
+            track_touched,
+            done,
+        }
+    }
+
+    /// Sessions that have consumed their whole duration so far.
+    pub fn done(&self) -> u64 {
+        self.done
+    }
+
+    /// Step sessions in simulated-time order until every pending instant
+    /// is at or past `t1` (`INFINITY` = run everything out), delivering
+    /// telemetry frames lazily at pop time.  `frames` is the current
+    /// window's per-archetype frame table (indexed by
+    /// `Archetype::index`) plus the window epoch; `None` skips delivery
+    /// (un-windowed paths, and the windowed oracle which sweeps
+    /// eagerly).  Returns `(steps, frames_delivered)`.
+    pub fn run_until(
+        &mut self,
+        sessions: &mut [Box<DeviceSession>],
+        t1: f64,
+        cache: &SimVariantCache,
+        frames: Option<(&[LoadTelemetry], u64)>,
+    ) -> Result<(u64, u64)> {
+        let mut steps = 0u64;
+        let mut delivered = 0u64;
+        loop {
+            let Some(&Reverse((bits, i))) = self.heap.peek() else { break };
+            if f64::from_bits(bits) >= t1 {
+                break;
+            }
+            self.heap.pop();
+            if sessions[i].is_done() {
+                // Defensive: a stale heap entry for a finished session
+                // (cannot occur under the push discipline below, but a
+                // skipped pop must never step a done session).
+                continue;
+            }
+            if let Some((frames, epoch)) = frames {
+                if self.frame_epoch[i] != epoch {
+                    sessions[i].set_load(frames[sessions[i].archetype.index()]);
+                    self.frame_epoch[i] = epoch;
+                    delivered += 1;
+                }
+            }
+            sessions[i].step(cache)?;
+            steps += 1;
+            if self.track_touched && !self.touched[i] {
+                self.touched[i] = true;
+                self.touched_list.push(i);
+            }
+            if !self.queued[i] && sessions[i].served_pending() {
+                self.queued[i] = true;
+                self.dirty.push(i);
+            }
+            if sessions[i].is_done() {
+                self.done += 1;
+            } else {
+                self.heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
+            }
+        }
+        Ok((steps, delivered))
+    }
+
+    /// Take the dirty set — every session index holding undrained served
+    /// requests — sorted ascending (= device-id order within a worker,
+    /// so subset batch assembly visits requests in exactly the order the
+    /// full drain would).  Clears the flags; re-flag leftovers with
+    /// [`mark_pending`](Self::mark_pending) after a partial drain.
+    pub fn take_dirty(&mut self) -> Vec<usize> {
+        let mut v = std::mem::take(&mut self.dirty);
+        v.sort_unstable();
+        for &i in &v {
+            self.queued[i] = false;
+        }
+        v
+    }
+
+    /// Re-flag a session whose drain left still-open batch windows
+    /// queued (the straddling-batch case).
+    pub fn mark_pending(&mut self, i: usize) {
+        if !self.queued[i] {
+            self.queued[i] = true;
+            self.dirty.push(i);
+        }
+    }
+
+    /// Take the sessions stepped since the last call, sorted ascending —
+    /// the audit flush's visit set (empty unless tracking was armed).
+    pub fn drain_touched(&mut self) -> Vec<usize> {
+        let mut v = std::mem::take(&mut self.touched_list);
+        v.sort_unstable();
+        for &i in &v {
+            self.touched[i] = false;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::manifest::Manifest;
+    use crate::runtime::ShardedCache;
+
+    fn sessions(n: u64, duration_s: f64) -> Vec<Box<DeviceSession>> {
+        let manifest = Manifest::synthetic();
+        (0..n)
+            .map(|d| Box::new(DeviceSession::new(&manifest, "d3", d, 7, duration_s).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn done_counter_is_incremental_and_matches_a_scan() {
+        let mut ss = sessions(4, 120.0);
+        let cache: SimVariantCache = ShardedCache::new(4);
+        let mut core = EventCore::new(&ss, false);
+        assert_eq!(core.done(), 0);
+        let (steps, _) = core.run_until(&mut ss, 60.0, &cache, None).unwrap();
+        assert!(steps > 0);
+        assert_eq!(core.done(), ss.iter().filter(|s| s.is_done()).count() as u64);
+        core.run_until(&mut ss, f64::INFINITY, &cache, None).unwrap();
+        assert_eq!(core.done(), 4);
+        assert!(ss.iter().all(|s| s.is_done()));
+    }
+
+    #[test]
+    fn zero_duration_sessions_count_done_at_construction() {
+        let mut ss = sessions(3, 0.0);
+        let cache: SimVariantCache = ShardedCache::new(2);
+        let mut core = EventCore::new(&ss, false);
+        assert_eq!(core.done(), 3, "duration-0 sessions are born done");
+        let (steps, _) = core.run_until(&mut ss, f64::INFINITY, &cache, None).unwrap();
+        assert_eq!(steps, 0, "nothing to step");
+    }
+
+    #[test]
+    fn dirty_set_returns_sorted_and_requeues() {
+        let ss = sessions(3, 60.0);
+        let mut core = EventCore::new(&ss, false);
+        core.mark_pending(2);
+        core.mark_pending(0);
+        core.mark_pending(2); // deduped by the queued flag
+        assert_eq!(core.take_dirty(), vec![0, 2], "sorted = device-id order");
+        assert!(core.take_dirty().is_empty(), "flags cleared on take");
+        core.mark_pending(1);
+        assert_eq!(core.take_dirty(), vec![1]);
+    }
+
+    #[test]
+    fn touched_tracking_is_armed_explicitly() {
+        let mut ss = sessions(2, 60.0);
+        let cache: SimVariantCache = ShardedCache::new(2);
+        let mut off = EventCore::new(&ss, false);
+        off.run_until(&mut ss, f64::INFINITY, &cache, None).unwrap();
+        assert!(off.drain_touched().is_empty(), "untracked runs record nothing");
+
+        let mut ss = sessions(2, 60.0);
+        let mut on = EventCore::new(&ss, true);
+        on.run_until(&mut ss, f64::INFINITY, &cache, None).unwrap();
+        assert_eq!(on.drain_touched(), vec![0, 1]);
+        assert!(on.drain_touched().is_empty(), "drained set resets");
+    }
+}

@@ -34,6 +34,7 @@
 //! [`crate::coordinator::engine::AdaSpring::with_shared_cache`] for the
 //! same reuse on the real PJRT path.
 
+pub mod events;
 pub mod pipeline;
 pub mod pool;
 pub mod report;
@@ -42,6 +43,7 @@ pub mod session;
 
 pub use crate::context::feedback::FeedbackConfig;
 pub use crate::coordinator::plancache::{PlanCache, PlanMode};
+pub use events::EventCore;
 pub use pipeline::{run_pipeline, PipelineConfig, StagePlan};
 pub use pool::{run_fleet, run_fleet_dispatch, run_fleet_feedback, shard_of, FleetConfig};
 pub use report::{ArchetypeFrame, ArchetypeSummary, FeedbackBlock, FleetReport, LatencySummary};
@@ -133,6 +135,42 @@ impl TelemetryMode {
             TelemetryMode::Off => "off",
             TelemetryMode::Shard => "shard",
             TelemetryMode::Archetype => "archetype",
+        }
+    }
+}
+
+/// How the worker loop visits sessions across telemetry windows
+/// (DESIGN.md §14).  The windowed sweep is the bit-parity oracle —
+/// exactly how `search_full` oracles the arena search — and the
+/// event-driven core must produce identical reports under every plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Per-window full sweep: every window touches every session for
+    /// frame delivery, batching, and bookkeeping — O(total devices) per
+    /// window regardless of activity (the pre-§14 behavior).
+    Windowed,
+    /// Calendar-queue scheduler ([`EventCore`]): a window only touches
+    /// sessions with due events; frames deliver lazily at heap-pop time
+    /// and batching drains only the dirty set, so idle windows cost O(1)
+    /// and throughput scales with *active* devices.
+    EventDriven,
+}
+
+impl SchedulerMode {
+    /// Parse a `--scheduler windowed|event` flag value.
+    pub fn parse(s: &str) -> Option<SchedulerMode> {
+        match s {
+            "windowed" => Some(SchedulerMode::Windowed),
+            "event" => Some(SchedulerMode::EventDriven),
+            _ => None,
+        }
+    }
+
+    /// Stable CLI/report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerMode::Windowed => "windowed",
+            SchedulerMode::EventDriven => "event",
         }
     }
 }

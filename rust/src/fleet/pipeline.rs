@@ -45,27 +45,29 @@
 //! `tests/feedback.rs` pin the whole stack to the untouched
 //! single-device `ServingLoop` and the cross-mode parity invariants.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use super::events::EventCore;
 use super::pool::FleetConfig;
 use super::report::{ArchetypeFrame, FeedbackBlock, FleetReport};
 use super::scenarios::Archetype;
 use super::session::{DeviceReport, DeviceSession, SimVariantCache};
-use super::{AdmissionMode, BatchingMode, ExecutionMode, TelemetryMode, ALL_ARCHETYPES};
+use super::{
+    AdmissionMode, BatchingMode, ExecutionMode, SchedulerMode, TelemetryMode, ALL_ARCHETYPES,
+};
 use crate::context::events::Event;
 use crate::context::telemetry::{merge_frames, LoadTelemetry, TelemetryBank, WindowSample};
+use crate::coordinator::engine::TaskModels;
 use crate::coordinator::manifest::Manifest;
 use crate::coordinator::plancache::PlanCache;
 use crate::dispatch::{
-    admission::window_key, admit_shard, assemble_batches, assemble_batches_window_capped,
-    AdmissionStats, AdmissionVerdict, BatchStats, DispatchConfig, DispatchReport, ShardAdmission,
-    StealPool, StreamingAdmission,
+    admission::window_key, admit_shard, assemble_batches, assemble_batches_for,
+    assemble_batches_window_capped, AdmissionStats, AdmissionVerdict, BatchStats, DispatchConfig,
+    DispatchReport, ShardAdmission, StealPool, StreamingAdmission,
 };
 use crate::obs::metrics::{merge_window_series, Histogram, MetricsRegistry, WindowMetric};
 use crate::obs::{ShardTracer, Stage, StageSpan, TraceConfig, TraceEvent, TraceSink};
@@ -82,6 +84,12 @@ pub struct StagePlan {
     /// `FleetConfig::feedback.enabled` (validated) so a plan can never
     /// silently contradict the control-law config it runs under.
     pub feedback: bool,
+    /// How the windowed loop visits sessions (§14): the full-sweep
+    /// windowed oracle, or the calendar event queue that only touches
+    /// sessions with due events.  Legal on every plan; un-windowed
+    /// paths run a single whole-run sweep under either mode and are
+    /// identical by construction.
+    pub scheduler: SchedulerMode,
 }
 
 impl StagePlan {
@@ -94,6 +102,7 @@ impl StagePlan {
             execution: ExecutionMode::Sharded,
             telemetry: TelemetryMode::Off,
             feedback: false,
+            scheduler: SchedulerMode::Windowed,
         }
     }
 
@@ -106,6 +115,7 @@ impl StagePlan {
             execution: ExecutionMode::Pool,
             telemetry: TelemetryMode::Off,
             feedback: false,
+            scheduler: SchedulerMode::Windowed,
         }
     }
 
@@ -118,6 +128,7 @@ impl StagePlan {
             execution: ExecutionMode::Sharded,
             telemetry: TelemetryMode::Shard,
             feedback: true,
+            scheduler: SchedulerMode::Windowed,
         }
     }
 
@@ -529,35 +540,6 @@ fn us_since(t0: Option<Instant>) -> f64 {
     t0.map(|t| t.elapsed().as_secs_f64() * 1e6).unwrap_or(0.0)
 }
 
-/// Step sessions from `heap` in simulated-time order until every
-/// pending instant is at or past `t1` (`INFINITY` = run everything out).
-/// Returns the number of session steps executed (the execution span's
-/// item counter, §12-2).
-fn step_until(
-    heap: &mut BinaryHeap<Reverse<(u64, usize)>>,
-    sessions: &mut [Box<DeviceSession>],
-    t1: f64,
-    cache: &SimVariantCache,
-) -> Result<u64> {
-    let mut steps = 0u64;
-    loop {
-        let Some(&Reverse((bits, i))) = heap.peek() else { break };
-        if f64::from_bits(bits) >= t1 {
-            break;
-        }
-        heap.pop();
-        if sessions[i].is_done() {
-            continue;
-        }
-        sessions[i].step(cache)?;
-        steps += 1;
-        if !sessions[i].is_done() {
-            heap.push(Reverse((sessions[i].next_due().to_bits(), i)));
-        }
-    }
-    Ok(steps)
-}
-
 /// A worker's observability taps: the flight-recorder tracer (§12) and
 /// the metrics registry (§13).  Both planes are observational-only and
 /// share the stage-span instrumentation points; wall clocks are read
@@ -600,6 +582,34 @@ fn flush_audits(
     let (mut n, mut hits, mut evo_us) = (0u64, 0u64, 0.0f64);
     for s in sessions.iter_mut() {
         for a in s.take_audits() {
+            n += 1;
+            if a.plan == "hit" {
+                hits += 1;
+            }
+            evo_us += a.evolution_us;
+            if let Some(tr) = taps.tracer.as_mut() {
+                tr.audit(a)?;
+            }
+        }
+    }
+    if let Some(reg) = taps.reg.as_mut() {
+        reg.counter_add("evolutions", n);
+    }
+    Ok((n, hits, evo_us))
+}
+
+/// [`flush_audits`] restricted to an (ascending) index subset — the
+/// event scheduler flushes only sessions that stepped since the last
+/// flush (§14); every untouched session's audit buffer is empty by
+/// construction, so the drained trail is identical to a full sweep.
+fn flush_audits_for(
+    taps: &mut Taps<'_>,
+    sessions: &mut [Box<DeviceSession>],
+    indices: &[usize],
+) -> Result<(u64, u64, f64)> {
+    let (mut n, mut hits, mut evo_us) = (0u64, 0u64, 0.0f64);
+    for &i in indices {
+        for a in sessions[i].take_audits() {
             n += 1;
             if a.plan == "hit" {
                 hits += 1;
@@ -675,12 +685,13 @@ fn run_worker(
     let feedback = stages.feedback.then_some(&cfg.feedback);
     let streaming = stages.admission == AdmissionMode::VirtualQueue;
     let mut sessions: Vec<Box<DeviceSession>> = Vec::with_capacity(ids.len());
-    for &d in &ids {
-        let scenario = cfg.scenario_for(d);
-        let mut session = match DeviceSession::with_scenario(
-            manifest, &cfg.task, &scenario, d, cfg.seed, cfg.duration_s,
-        ) {
-            Ok(s) => s,
+    if !ids.is_empty() {
+        // One task-artifact resolution per worker: every session on this
+        // worker shares an `Arc`'d palette instead of deep-cloning the
+        // backbone per device (§14) — the difference between a 1M-device
+        // fleet fitting in memory or not.
+        let task = match manifest.task(&cfg.task) {
+            Ok(t) => Arc::new(t.clone()),
             Err(e) => {
                 // Unblock every other worker before bailing.
                 if let Some(pool) = pool {
@@ -689,13 +700,24 @@ fn run_worker(
                 return Err(e);
             }
         };
-        session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
-        if taps.live() {
-            // Both planes drain the audit buffer: the tracer onto the
-            // trail, the registry into the evolution counters.
-            session.enable_trace();
+        // One ridge fit per worker, cloned into every session's engine:
+        // the fit is deterministic, so this is bit-identical to fitting
+        // per device and turns the dominant construction cost into a
+        // coefficient memcpy (§14).
+        let models = TaskModels::fit(&task);
+        for &d in &ids {
+            let scenario = cfg.scenario_for(d);
+            let mut session = DeviceSession::with_scenario_task(
+                &task, &models, manifest.root.clone(), &scenario, d, cfg.seed, cfg.duration_s,
+            );
+            session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
+            if taps.live() {
+                // Both planes drain the audit buffer: the tracer onto the
+                // trail, the registry into the evolution counters.
+                session.enable_trace();
+            }
+            sessions.push(Box::new(session));
         }
-        sessions.push(Box::new(session));
     }
 
     // Admission stage, `Bounded` flavor (§8-1): the deterministic
@@ -789,20 +811,21 @@ fn run_worker(
         });
     }
 
-    // Execution stage, `Sharded` flavor: a local simulated-time heap.
+    // Execution stage, `Sharded` flavor: the calendar event core (§14)
+    // — one simulated-time heap per worker, incremental done counting,
+    // and (event-mode windowed only) touch tracking for the subset
+    // audit flush.
     let wall0 = Instant::now();
-    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = sessions
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| !s.is_done())
-        .map(|(i, s)| Reverse((s.next_due().to_bits(), i)))
-        .collect();
+    let event_driven = stages.scheduler == SchedulerMode::EventDriven;
+    let mut core =
+        EventCore::new(&sessions, taps.live() && stages.windowed() && event_driven);
 
     if !stages.windowed() {
         // Un-windowed pass (direct preset, or Bounded + Sharded): run
-        // the shard to completion in one sweep.
+        // the shard to completion in one sweep — both scheduler modes
+        // take the identical single-sweep path here.
         let te = taps.now();
-        let steps = step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
+        let (steps, _) = core.run_until(&mut sessions, f64::INFINITY, cache, None)?;
         let shard = w as u32;
         if let Some(tr) = taps.tracer.as_mut() {
             if stages.admission == AdmissionMode::Off {
@@ -865,11 +888,13 @@ fn run_worker(
 
     // Priors (window 0): arrival rate from the snapshots' event-rate
     // signal lifted through the ContextFrame funnel, and µ̂₀ from the
-    // modeled backbone latency, so admission binds immediately.
+    // modeled backbone latency, so admission binds immediately.  Both
+    // are memoized inside the session (invalidated only by evolution,
+    // §14), so this collect is the run's one cold derivation.
     let session_arrival_priors: Vec<f64> =
         sessions.iter_mut().map(|s| s.arrival_rate_prior_per_s()).collect();
     let session_latency_ms: Vec<f64> =
-        sessions.iter().map(|s| s.modeled_backbone_latency_ms()).collect();
+        sessions.iter_mut().map(|s| s.modeled_backbone_latency_ms()).collect();
     let arrival_prior: f64 = session_arrival_priors.iter().sum();
     let mu_prior_per_s = {
         let n = sessions.len();
@@ -945,24 +970,32 @@ fn run_worker(
         let t1 = if last { f64::INFINITY } else { (win + 1) as f64 * tick };
         let win_t_s = win as f64 * tick;
 
-        // Telemetry stage (1/2): push the current frame into every
-        // session — its archetype's frame under keyed telemetry, the
-        // shard frame otherwise.
-        let tf = taps.now();
+        // Telemetry stage (1/2): this window's frames.  The windowed
+        // oracle pushes them into every session eagerly; the event
+        // scheduler snapshots one frame per archetype and delivers
+        // lazily at a session's first step of the window (§14), so an
+        // idle session costs nothing.  `step` is the sole reader of the
+        // delivered frame, so both routes are observationally identical.
         let shard_frame = bank.shard_frame();
         let mu = shard_frame.service_rate_per_s;
-        for s in sessions.iter_mut() {
-            s.set_load(bank.frame_for(s.archetype.index()));
+        let mut frame_table: Vec<LoadTelemetry> = Vec::new();
+        if event_driven {
+            frame_table.extend((0..ALL_ARCHETYPES.len()).map(|k| bank.frame_for(k)));
+        } else {
+            let tf = taps.now();
+            for s in sessions.iter_mut() {
+                s.set_load(bank.frame_for(s.archetype.index()));
+            }
+            taps.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Feedback,
+                wall_us: us_since(tf),
+                items: sessions.len() as u64,
+                aux: 0,
+            });
         }
-        taps.span(StageSpan {
-            shard: w as u32,
-            window: win,
-            t_s: win_t_s,
-            stage: Stage::Feedback,
-            wall_us: us_since(tf),
-            items: sessions.len() as u64,
-            aux: 0,
-        });
 
         let mut sample = WindowSample {
             window: win,
@@ -1013,13 +1046,34 @@ fn run_worker(
             aux: sample.shed,
         });
 
-        // Execution stage: step sessions in simulated-time order to the
-        // window edge (evolutions see the frame; admitted events serve).
+        // Execution stage: step due sessions in simulated-time order to
+        // the window edge (evolutions see the frame; admitted events
+        // serve).  Event mode hands the frame table to the core for
+        // lazy delivery and reports delivered frames on the Feedback
+        // span (wall 0: delivery rides the execution pops).
         let te = taps.now();
-        let win_steps = step_until(&mut heap, &mut sessions, t1, cache)?;
+        let (win_steps, delivered) = core.run_until(
+            &mut sessions,
+            t1,
+            cache,
+            if event_driven { Some((frame_table.as_slice(), win)) } else { None },
+        )?;
         total_steps += win_steps;
+        if event_driven {
+            taps.span(StageSpan {
+                shard: w as u32,
+                window: win,
+                t_s: win_t_s,
+                stage: Stage::Feedback,
+                wall_us: 0.0,
+                items: delivered,
+                aux: 0,
+            });
+        }
         if taps.live() {
-            let done_now = sessions.iter().filter(|s| s.is_done()).count() as u64;
+            // Done transitions come off the core's incremental counter —
+            // the per-window O(fleet) completion scan is gone (§14).
+            let done_now = core.done();
             taps.span(StageSpan {
                 shard: w as u32,
                 window: win,
@@ -1032,7 +1086,13 @@ fn run_worker(
             prev_done = done_now;
             // Evolution stage (§12-3): the audits the window's steps
             // buffered, with the engine's own µs as the span's wall.
-            let (n, hits, evo_us) = flush_audits(&mut taps, &mut sessions)?;
+            // Event mode visits only sessions the core saw step.
+            let (n, hits, evo_us) = if event_driven {
+                let touched = core.drain_touched();
+                flush_audits_for(&mut taps, &mut sessions, &touched)?
+            } else {
+                flush_audits(&mut taps, &mut sessions)?
+            };
             taps.span(StageSpan {
                 shard: w as u32,
                 window: win,
@@ -1052,7 +1112,24 @@ fn run_worker(
             if t1.is_finite() { window_key(t1, dcfg.batch_window_s) } else { u64::MAX };
         let cap = dcfg.batch_cap_at(shard_frame.utilization());
         let tb = taps.now();
-        let pricing = assemble_batches_window_capped(dcfg, &mut sessions, window_limit, cap);
+        // Event mode assembles over the core's dirty list — exactly the
+        // sessions holding served requests, in ascending index (= device
+        // id) order, so batch membership, pricing, and every float fold
+        // match the oracle's full sweep bit for bit (§14).  A session
+        // whose straddling batch stays buffered is re-flagged for the
+        // next flush.
+        let (pricing, batch_indices) = if event_driven {
+            let dirty = core.take_dirty();
+            let p = assemble_batches_for(dcfg, &mut sessions, &dirty, window_limit, cap);
+            for &si in &dirty {
+                if sessions[si].served_pending() {
+                    core.mark_pending(si);
+                }
+            }
+            (p, Some(dirty))
+        } else {
+            (assemble_batches_window_capped(dcfg, &mut sessions, window_limit, cap), None)
+        };
         taps.span(StageSpan {
             shard: w as u32,
             window: win,
@@ -1065,8 +1142,9 @@ fn run_worker(
         if let Some(reg) = taps.reg.as_mut() {
             // Served-work attribution per device class, from the same
             // per-session sums the keyed telemetry stage uses.
-            for (s, &(served, _)) in sessions.iter().zip(&pricing.per_session) {
+            for (si, &(served, _)) in pricing.per_session.iter().enumerate() {
                 if served > 0 {
+                    let s = &sessions[batch_indices.as_ref().map_or(si, |ix| ix[si])];
                     reg.stage_items_keyed(Stage::Batching, s.archetype.index(), served);
                 }
             }
@@ -1081,7 +1159,10 @@ fn run_worker(
             // per-session sums; the shard backlog apportioned by
             // arrival share (the queue itself is a shard resource);
             // batch occupancy is a shard property every class shares.
-            for (s, &(served, service_us)) in sessions.iter().zip(&pricing.per_session) {
+            // (Skipped sessions would add exact-zero terms, so the
+            // event-mode subset fold is bit-identical to the sweep.)
+            for (si, &(served, service_us)) in pricing.per_session.iter().enumerate() {
+                let s = &sessions[batch_indices.as_ref().map_or(si, |ix| ix[si])];
                 let ks = &mut keyed_samples[s.archetype.index()];
                 ks.served += served;
                 ks.service_us_sum += service_us;
@@ -1141,16 +1222,29 @@ fn run_worker(
 
     // Safety net: anything still pending (e.g. duration 0 with no
     // windows) runs out, and leftover served requests get priced at the
-    // static cap (final flushes are the legacy batch semantics).
-    total_steps += step_until(&mut heap, &mut sessions, f64::INFINITY, cache)?;
-    let final_pricing =
-        assemble_batches_window_capped(dcfg, &mut sessions, u64::MAX, dcfg.batch_cap());
+    // static cap (final flushes are the legacy batch semantics).  No
+    // frames ride this sweep in either mode: after the last window
+    // (t1 = ∞) the heap is already empty, and a zero-window run never
+    // built a frame — the oracle delivered none either.
+    let (tail_steps, _) = core.run_until(&mut sessions, f64::INFINITY, cache, None)?;
+    total_steps += tail_steps;
+    let final_pricing = if event_driven {
+        let dirty = core.take_dirty();
+        assemble_batches_for(dcfg, &mut sessions, &dirty, u64::MAX, dcfg.batch_cap())
+    } else {
+        assemble_batches_window_capped(dcfg, &mut sessions, u64::MAX, dcfg.batch_cap())
+    };
     batches_total.merge(&final_pricing.stats);
 
     if taps.live() {
         // Audits from safety-net steps (e.g. a zero-window run's
         // startup evolutions) still reach the trail and the counters.
-        flush_audits(&mut taps, &mut sessions)?;
+        if event_driven {
+            let touched = core.drain_touched();
+            flush_audits_for(&mut taps, &mut sessions, &touched)?;
+        } else {
+            flush_audits(&mut taps, &mut sessions)?;
+        }
     }
     if let Some(reg) = taps.reg.as_mut() {
         reg.counter_add("steps", total_steps);

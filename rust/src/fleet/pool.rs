@@ -59,6 +59,14 @@ pub struct FleetConfig {
     /// Event-intensity multiplier over every scenario profile (the
     /// overload knob; exactly 1.0 = identity, bit-identical traces).
     pub load_multiplier: f64,
+    /// Fraction of devices that actively submit requests (§14): each
+    /// device draws a deterministic Bernoulli per (seed, id); inactive
+    /// devices keep their platform/battery/trigger context but have
+    /// their event stream silenced.  Exactly 1.0 — the default — is
+    /// the identity (no RNG draw, bit-identical fleets), and the knob
+    /// is what makes million-device runs mostly-idle, the regime the
+    /// event-driven scheduler exists for.
+    pub active_fraction: f64,
 }
 
 impl Default for FleetConfig {
@@ -73,6 +81,7 @@ impl Default for FleetConfig {
             plan: PlanMode::Off,
             feedback: FeedbackConfig::off(),
             load_multiplier: 1.0,
+            active_fraction: 1.0,
         }
     }
 }
@@ -80,8 +89,8 @@ impl Default for FleetConfig {
 impl FleetConfig {
     /// Parse the bench binaries' shared fleet flags (`--devices`,
     /// `--shards`, `--hours`, `--seed`, `--task`, `--stripes`,
-    /// `--plan off|banded|shared`, `--feedback on|off`, `--load X`)
-    /// over this config's values as defaults.  A malformed `--plan` /
+    /// `--plan off|banded|shared`, `--feedback on|off`, `--load X`,
+    /// `--active-fraction F`) over this config's values as defaults.  A malformed `--plan` /
     /// `--feedback` value is an error the caller surfaces (the bins
     /// exit through their `Result` main).
     pub fn from_args(args: &crate::util::cli::Args, defaults: FleetConfig) -> Result<FleetConfig> {
@@ -101,6 +110,12 @@ impl FleetConfig {
                 "--load must be a positive finite multiplier (got {load_multiplier})"
             ));
         }
+        let active_fraction = args.get_f64("active-fraction", defaults.active_fraction);
+        if !(0.0..=1.0).contains(&active_fraction) {
+            return Err(anyhow!(
+                "--active-fraction must be in [0, 1] (got {active_fraction})"
+            ));
+        }
         Ok(FleetConfig {
             devices: args.get_usize("devices", defaults.devices),
             shards: args.get_usize("shards", defaults.shards),
@@ -111,12 +126,20 @@ impl FleetConfig {
             plan,
             feedback,
             load_multiplier,
+            active_fraction,
         })
     }
 
-    /// The (possibly load-scaled) scenario of `device` under this config.
+    /// The (possibly load-scaled, possibly silenced) scenario of
+    /// `device` under this config.
     pub fn scenario_for(&self, device: u64) -> Scenario {
-        Archetype::for_device(device).scenario().with_load(self.load_multiplier)
+        let scenario =
+            Archetype::for_device(device).scenario().with_load(self.load_multiplier);
+        if Scenario::is_active(self.seed, device, self.active_fraction) {
+            scenario
+        } else {
+            scenario.silenced()
+        }
     }
 
     /// The shared plan cache this config calls for (`Shared` only).

@@ -201,6 +201,35 @@ impl Scenario {
         self
     }
 
+    /// The same scenario with its event stream silenced — the shape an
+    /// *inactive* device takes under `--active-fraction` (§14): the
+    /// platform, battery/cache dynamics, and trigger policy all stay
+    /// put, so the device still exists (and still evolves on its
+    /// context triggers), it just never submits inference requests.
+    /// The profile keeps one explicit zero-rate segment: an *empty*
+    /// segment list means "default rate", not "no events".
+    pub fn silenced(mut self) -> Scenario {
+        self.profile = DayProfile { segments: vec![(0.0, 0.0)] };
+        self
+    }
+
+    /// Deterministic active/inactive draw for `--active-fraction`
+    /// (§14): a fraction ≥ 1.0 short-circuits to `true` without
+    /// touching the RNG, so the default config is the exact identity.
+    /// The mixing constant differs from the context/trace sub-seed
+    /// streams so activity decorrelates from both.
+    pub fn is_active(fleet_seed: u64, device_id: u64, fraction: f64) -> bool {
+        if fraction >= 1.0 {
+            return true;
+        }
+        if fraction <= 0.0 {
+            return false;
+        }
+        let mut rng =
+            Rng::new(fleet_seed ^ device_id.wrapping_mul(0xD1B54A32D192ED03));
+        rng.chance(fraction)
+    }
+
     /// Per-device sub-seed for the context simulator (battery/cache).
     pub fn context_seed(fleet_seed: u64, device_id: u64) -> u64 {
         Rng::new(fleet_seed ^ device_id.wrapping_mul(0x9E3779B97F4A7C15)).next_u64()
@@ -295,6 +324,40 @@ mod tests {
         }
         // The overnight phone starts low on battery by construction.
         assert!(sim1.snapshot().battery_fraction < 0.15);
+    }
+
+    #[test]
+    fn silenced_scenarios_emit_no_events_but_keep_their_context() {
+        for a in ALL_ARCHETYPES {
+            let s = a.scenario().silenced();
+            let events = s.trace(Scenario::trace_seed(42, 7)).sample(8.0 * 3600.0);
+            assert!(events.is_empty(), "{:?}: silenced profile produced events", a);
+            let loud = a.scenario();
+            assert_eq!(
+                format!("{:?}", s.trigger),
+                format!("{:?}", loud.trigger),
+                "{:?}: trigger policy must survive",
+                a
+            );
+            assert_eq!(s.initial_battery, loud.initial_battery, "{:?}", a);
+        }
+    }
+
+    #[test]
+    fn activity_draw_is_deterministic_and_respects_the_edges() {
+        for d in 0..64u64 {
+            assert!(Scenario::is_active(42, d, 1.0), "fraction 1.0 is the identity");
+            assert!(!Scenario::is_active(42, d, 0.0), "fraction 0.0 silences everyone");
+            assert_eq!(
+                Scenario::is_active(42, d, 0.3),
+                Scenario::is_active(42, d, 0.3),
+                "device {d}: draw must replay"
+            );
+        }
+        // The draw tracks the fraction at fleet scale (loose bounds —
+        // this is a seeded PRNG, not a statistical test).
+        let active = (0..10_000u64).filter(|&d| Scenario::is_active(42, d, 0.3)).count();
+        assert!((2_000..4_000).contains(&active), "~30% active, got {active}");
     }
 
     #[test]

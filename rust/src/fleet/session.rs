@@ -22,6 +22,7 @@
 //! attached the session serves every event inline — the direct path,
 //! byte-identical to PR 1.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -31,8 +32,8 @@ use crate::context::feedback::{ContextFrame, FeedbackConfig};
 use crate::context::telemetry::LoadTelemetry;
 use crate::context::{ContextSimulator, ContextSnapshot, Trigger};
 use crate::context::events::Event;
-use crate::coordinator::engine::{AdaSpring, Evolution};
-use crate::coordinator::manifest::Manifest;
+use crate::coordinator::engine::{AdaSpring, Evolution, TaskModels};
+use crate::coordinator::manifest::{Manifest, TaskArtifacts};
 use crate::coordinator::plancache::{ContextQuantizer, PlanCache, PlanMode};
 use crate::coordinator::CompressionConfig;
 use crate::dispatch::{AdmissionVerdict, ServedRequest};
@@ -120,6 +121,12 @@ pub struct DeviceSession {
     trace: bool,
     /// Audits since the last [`take_audits`](Self::take_audits) drain.
     audits: Vec<EvolutionAudit>,
+    /// Once-per-run prior caches (DESIGN.md §14 satellite): the windowed
+    /// loop's window-0 priors stop being hidden per-restart linear
+    /// recomputes.  Invalidated only on evolution (a deploy is the one
+    /// event that changes what the modeled-latency prior describes).
+    cached_arrival_prior_per_s: Option<f64>,
+    cached_backbone_latency_ms: Option<f64>,
 }
 
 /// A finished session's summary, handed to the fleet aggregator.
@@ -174,6 +181,39 @@ impl DeviceSession {
         duration_s: f64,
     ) -> Result<DeviceSession> {
         let engine = AdaSpring::new(manifest, task, &scenario.platform, false)?;
+        Ok(Self::from_engine(engine, scenario, device_id, fleet_seed, duration_s))
+    }
+
+    /// Build over an already-shared task `Arc` (the fleet worker path):
+    /// the engine holds the worker's task artifacts instead of cloning
+    /// them per device — at a million devices the difference between one
+    /// palette copy per worker and gigabytes of duplicates.
+    /// `models` carries the task's pre-fitted cost/accuracy models so a
+    /// million constructions clone coefficients instead of re-running the
+    /// ridge fit (bit-identical either way — the fit is deterministic).
+    pub(crate) fn with_scenario_task(
+        task: &Arc<TaskArtifacts>,
+        models: &TaskModels,
+        root: PathBuf,
+        scenario: &Scenario,
+        device_id: u64,
+        fleet_seed: u64,
+        duration_s: f64,
+    ) -> DeviceSession {
+        let engine =
+            AdaSpring::with_task_models(Arc::clone(task), root, &scenario.platform, models);
+        Self::from_engine(engine, scenario, device_id, fleet_seed, duration_s)
+    }
+
+    /// Shared constructor tail: wire the simulators, event trace, and
+    /// energy model around a built engine.
+    fn from_engine(
+        engine: AdaSpring,
+        scenario: &Scenario,
+        device_id: u64,
+        fleet_seed: u64,
+        duration_s: f64,
+    ) -> DeviceSession {
         let sim = scenario.simulator(Scenario::context_seed(fleet_seed, device_id));
         let events = scenario
             .trace(Scenario::trace_seed(fleet_seed, device_id))
@@ -190,7 +230,7 @@ impl DeviceSession {
                 .total_j()
         };
         let backbone_accuracy = engine.task().backbone.accuracy;
-        Ok(DeviceSession {
+        DeviceSession {
             device_id,
             archetype: scenario.archetype,
             home_shard: 0,
@@ -225,7 +265,9 @@ impl DeviceSession {
             acc_loss_evo_sum: 0.0,
             trace: false,
             audits: Vec::new(),
-        })
+            cached_arrival_prior_per_s: None,
+            cached_backbone_latency_ms: None,
+        }
     }
 
     /// Arm audit buffering for the trace plane (§12-3).
@@ -341,22 +383,40 @@ impl DeviceSession {
     /// pre-feedback `constraints()` silently dropped now seeds the
     /// telemetry plane.
     pub(crate) fn arrival_rate_prior_per_s(&mut self) -> f64 {
-        ContextFrame::from_snapshot(&self.sim.snapshot()).arrival_prior_per_s
+        if let Some(v) = self.cached_arrival_prior_per_s {
+            return v;
+        }
+        let v = ContextFrame::from_snapshot(&self.sim.snapshot()).arrival_prior_per_s;
+        self.cached_arrival_prior_per_s = Some(v);
+        v
     }
 
     /// Modeled backbone (identity-config) latency at the platform's full
-    /// L2 — the service-rate prior µ̂₀ before any observation.
-    pub(crate) fn modeled_backbone_latency_ms(&self) -> f64 {
+    /// L2 — the service-rate prior µ̂₀ before any observation.  Memoized
+    /// like the arrival prior (invalidated on evolution).
+    pub(crate) fn modeled_backbone_latency_ms(&mut self) -> f64 {
+        if let Some(v) = self.cached_backbone_latency_ms {
+            return v;
+        }
         let identity = CompressionConfig::identity(self.engine.task().n_layers());
-        self.engine
+        let v = self
+            .engine
             .evaluator
-            .modeled_latency_ms(&identity, self.platform.l2_cache_bytes)
+            .modeled_latency_ms(&identity, self.platform.l2_cache_bytes);
+        self.cached_backbone_latency_ms = Some(v);
+        v
     }
 
     /// The session's pre-sampled event trace (the dispatch pre-pass's
     /// arrival stream).
     pub(crate) fn events(&self) -> &[Event] {
         &self.events
+    }
+
+    /// Does the session hold served requests not yet drained by a batch
+    /// assembly?  The event-driven scheduler's dirty-set predicate (§14).
+    pub(crate) fn served_pending(&self) -> bool {
+        !self.served.is_empty()
     }
 
     /// This session's device platform (batch-curve lookups, §8-2).
@@ -522,6 +582,9 @@ impl DeviceSession {
         }
         self.acc_loss_evo_sum += (self.backbone_accuracy - evo.deployed_accuracy).max(0.0);
         self.report.evolutions.push(EvolutionRecord::capture(snap, &evo));
+        // Evolution is the prior caches' one invalidation point (§14).
+        self.cached_arrival_prior_per_s = None;
+        self.cached_backbone_latency_ms = None;
         Ok(())
     }
 

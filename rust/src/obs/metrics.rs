@@ -7,8 +7,9 @@
 //! every raw sample and re-sorts to answer a percentile — memory and
 //! aggregation cost scale with total inferences, which the ROADMAP's
 //! million-device north star cannot afford.  [`Histogram`] is the
-//! HDR-style replacement: a log-bucketed, const-size bucket array with
-//! O(1) record, exact count/sum/min/max, and an order-independent
+//! HDR-style replacement: a log-bucketed histogram (sparse until it
+//! earns the const-size dense array — see `SPARSE_MAX`) with O(1)
+//! record, exact count/sum/min/max, and an order-independent
 //! [`merge`](Histogram::merge), so per-device histograms roll up into
 //! shard and fleet views without ever touching raw samples.
 //!
@@ -62,15 +63,32 @@ const MIN_TRACKABLE: f64 = 1.0 / 4294967296.0;
 /// First value past the top bucket (2^(MIN_EXP + OCTAVES)).
 const MAX_TRACKABLE: f64 = 4294967296.0;
 
+/// Distinct-bucket threshold past which a sparse histogram promotes to
+/// the dense array.  64 entries × 12 bytes ≪ the 32 KiB dense array, and
+/// a sorted-vec insert at this size is still a few cache lines.
+const SPARSE_MAX: usize = 64;
+
+/// Bucket storage: histograms start sparse (a sorted `(index, count)`
+/// vec — most per-device histograms touch a handful of buckets) and
+/// promote to the dense 32 KiB array only past [`SPARSE_MAX`] distinct
+/// buckets.  Million-device fleets would otherwise pay 32 KiB × 2
+/// histograms × devices — tens of GiB — before the first sample lands.
+/// The representation is invisible: every observable (count, sum,
+/// min/max, percentiles, merges, deltas) is bit-identical either way.
+#[derive(Clone)]
+enum Buckets {
+    /// `(bucket index, count)` sorted ascending by index; counts > 0.
+    Sparse(Vec<(u32, u64)>),
+    Dense(Box<[u64; NUM_BUCKETS]>),
+}
+
 /// Fixed-memory log-bucketed latency histogram.  API mirrors
 /// [`crate::metrics::Series`] (`push`/`len`/`mean`/`min`/`max`/
 /// `percentiles`) so report plumbing swaps between them freely; `Series`
 /// stays as the exact oracle in tests.
 #[derive(Clone)]
 pub struct Histogram {
-    /// Bucket occupancy counts (boxed: the struct moves through worker
-    /// outcomes and reports by value).
-    buckets: Box<[u64; NUM_BUCKETS]>,
+    buckets: Buckets,
     count: u64,
     sum: f64,
     min: f64,
@@ -80,7 +98,7 @@ pub struct Histogram {
 impl Default for Histogram {
     fn default() -> Histogram {
         Histogram {
-            buckets: Box::new([0u64; NUM_BUCKETS]),
+            buckets: Buckets::Sparse(Vec::new()),
             count: 0,
             sum: 0.0,
             min: f64::INFINITY,
@@ -139,9 +157,64 @@ impl Histogram {
         (2f64).powi(exp) * (1.0 + (sub as f64 + 1.0) / SUBS as f64)
     }
 
-    /// Record one sample: O(1), zero allocation.
+    /// Occupancy of one bucket (0 when untouched).
+    fn bucket(&self, idx: usize) -> u64 {
+        match &self.buckets {
+            Buckets::Sparse(v) => v
+                .binary_search_by_key(&(idx as u32), |&(i, _)| i)
+                .map(|p| v[p].1)
+                .unwrap_or(0),
+            Buckets::Dense(d) => d[idx],
+        }
+    }
+
+    /// Add `n` to one bucket, promoting sparse → dense past
+    /// [`SPARSE_MAX`] distinct buckets.
+    fn bucket_add(&mut self, idx: usize, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if let Buckets::Sparse(v) = &mut self.buckets {
+            match v.binary_search_by_key(&(idx as u32), |&(i, _)| i) {
+                Ok(p) => {
+                    v[p].1 += n;
+                    return;
+                }
+                Err(p) => {
+                    if v.len() < SPARSE_MAX {
+                        v.insert(p, (idx as u32, n));
+                        return;
+                    }
+                    let mut dense = Box::new([0u64; NUM_BUCKETS]);
+                    for &(i, c) in v.iter() {
+                        dense[i as usize] = c;
+                    }
+                    self.buckets = Buckets::Dense(dense);
+                }
+            }
+        }
+        if let Buckets::Dense(d) = &mut self.buckets {
+            d[idx] += n;
+        }
+    }
+
+    /// Visit non-empty buckets in ascending index order.  Skipping empty
+    /// buckets is observationally identical to the dense walk — zero
+    /// counts never advance a cumulative rank and never bound a delta's
+    /// support.
+    fn nonzero(&self) -> Box<dyn Iterator<Item = (usize, u64)> + '_> {
+        match &self.buckets {
+            Buckets::Sparse(v) => Box::new(v.iter().map(|&(i, c)| (i as usize, c))),
+            Buckets::Dense(d) => {
+                Box::new(d.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| (i, c)))
+            }
+        }
+    }
+
+    /// Record one sample: O(1) amortized, allocation-free once a bucket
+    /// exists.
     pub fn push(&mut self, v: f64) {
-        self.buckets[Self::bucket_index(v)] += 1;
+        self.bucket_add(Self::bucket_index(v), 1);
         self.count += 1;
         self.sum += v;
         self.min = self.min.min(v);
@@ -199,13 +272,13 @@ impl Histogram {
         if self.count == 0 {
             return vec![0.0; ps.len()];
         }
-        // Ranks may arrive unsorted; one walk per rank over 4096 buckets
-        // is still microseconds and keeps the code obvious.
+        // Ranks may arrive unsorted; one walk per rank over the occupied
+        // buckets is still microseconds and keeps the code obvious.
         ps.iter()
             .map(|&p| {
                 let rank = ((p / 100.0) * (self.count - 1) as f64).round() as u64;
                 let mut cum = 0u64;
-                for (i, &c) in self.buckets.iter().enumerate() {
+                for (i, c) in self.nonzero() {
                     cum += c;
                     if cum > rank {
                         let r = Self::representative(i);
@@ -222,8 +295,8 @@ impl Histogram {
     /// exactly merge-order-independent; `sum` (hence `mean`) only up to
     /// f64 rounding.
     pub fn merge(&mut self, o: &Histogram) {
-        for (a, b) in self.buckets.iter_mut().zip(o.buckets.iter()) {
-            *a += *b;
+        for (i, c) in o.nonzero() {
+            self.bucket_add(i, c);
         }
         self.count += o.count;
         self.sum += o.sum;
@@ -241,10 +314,13 @@ impl Histogram {
         let mut d = Histogram::default();
         let mut lo: Option<usize> = None;
         let mut hi: Option<usize> = None;
-        for i in 0..NUM_BUCKETS {
-            let c = self.buckets[i].saturating_sub(earlier.buckets[i]);
-            d.buckets[i] = c;
+        // Buckets empty in `self` subtract to zero regardless of
+        // `earlier`, so walking only `self`'s occupied buckets matches
+        // the full-array subtraction exactly.
+        for (i, c) in self.nonzero() {
+            let c = c.saturating_sub(earlier.bucket(i));
             if c > 0 {
+                d.bucket_add(i, c);
                 lo.get_or_insert(i);
                 hi = Some(i);
             }
@@ -610,6 +686,53 @@ mod tests {
         let none = h.delta_since(&h.clone());
         assert_eq!(none.count(), 0);
         assert_eq!(none.percentile(95.0), 0.0);
+    }
+
+    #[test]
+    fn sparse_dense_promotion_is_invisible() {
+        // Build one histogram from a wide push stream (crosses the
+        // SPARSE_MAX boundary and promotes to dense) and a twin by
+        // merging per-chunk sparse histograms of the same stream — every
+        // bucket-derived observable must agree bit-exactly.
+        let stream: Vec<f64> = (0..(SPARSE_MAX * 4))
+            .map(|k| 1.07f64.powi(k as i32) + if k % 7 == 0 { 1.5 } else { 0.0 })
+            .collect();
+        let mut pushed = Histogram::default();
+        for &v in &stream {
+            pushed.push(v);
+        }
+        assert!(matches!(pushed.buckets, Buckets::Dense(_)), "stream must cross SPARSE_MAX");
+        let mut merged = Histogram::default();
+        for chunk in stream.chunks(SPARSE_MAX / 2) {
+            let mut part = Histogram::default();
+            for &v in chunk {
+                part.push(v);
+            }
+            assert!(matches!(part.buckets, Buckets::Sparse(_)), "chunks must stay sparse");
+            merged.merge(&part);
+        }
+        assert_eq!(pushed.count(), merged.count());
+        assert_eq!(pushed.min().to_bits(), merged.min().to_bits());
+        assert_eq!(pushed.max().to_bits(), merged.max().to_bits());
+        let a: Vec<(usize, u64)> = pushed.nonzero().collect();
+        let b: Vec<(usize, u64)> = merged.nonzero().collect();
+        assert_eq!(a, b, "bucket occupancy must be representation-independent");
+        for p in [0.0, 10.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(pushed.percentile(p).to_bits(), merged.percentile(p).to_bits());
+        }
+        // Deltas across the promotion boundary stay exact: earlier
+        // snapshot is sparse, current is dense.
+        let mut h = Histogram::default();
+        h.push(3.0);
+        let snap = h.clone();
+        for &v in &stream {
+            h.push(v);
+        }
+        let d = h.delta_since(&snap);
+        assert_eq!(d.count(), stream.len() as u64);
+        let dd = h.delta_since(&h.clone());
+        assert_eq!(dd.count(), 0);
+        assert_eq!(dd.percentile(95.0), 0.0);
     }
 
     #[test]

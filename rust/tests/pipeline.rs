@@ -23,8 +23,8 @@ use adaspring::coordinator::Manifest;
 use adaspring::dispatch::{AdaptiveBatch, BackpressurePolicy, DispatchConfig};
 use adaspring::fleet::{
     run_fleet, run_fleet_dispatch, run_fleet_feedback, run_pipeline, AdmissionMode, BatchingMode,
-    ExecutionMode, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, StagePlan,
-    TelemetryMode,
+    ExecutionMode, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, SchedulerMode,
+    StagePlan, TelemetryMode,
 };
 use adaspring::util::rng::Rng;
 
@@ -279,6 +279,7 @@ fn observe_only_telemetry_runs_without_the_feedback_funnel() {
         execution: ExecutionMode::Sharded,
         telemetry: TelemetryMode::Shard,
         feedback: false,
+        scheduler: SchedulerMode::Windowed,
     };
     let a = run_pipeline(&manifest, &pcfg).unwrap();
     let b = run_pipeline(&manifest, &pcfg).unwrap();

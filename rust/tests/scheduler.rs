@@ -1,0 +1,334 @@
+//! Integration: the event-queue scheduler (DESIGN.md §14).
+//!
+//! * bit-parity — `SchedulerMode::EventDriven` produces reports
+//!   bit-identical to the `Windowed` oracle across all three presets
+//!   under randomized fleet shapes, plus the §11 stage swaps
+//!   (per-archetype telemetry, adaptive batch sizing) and the
+//!   observe-only composition;
+//! * degenerate regressions on the event-driven path (devices 0,
+//!   shards > devices, duration 0) — the same shapes the windowed loop
+//!   is pinned on in `tests/pipeline.rs`;
+//! * `--active-fraction` semantics — exactly 1.0 is the bit-identity,
+//!   0.0 silences the whole fleet, intermediate fractions are a
+//!   deterministic strict subset on the direct path.
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::{AdaptiveBatch, BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{
+    run_fleet, run_pipeline, AdmissionMode, BatchingMode, ExecutionMode, FeedbackConfig,
+    FleetConfig, FleetReport, PipelineConfig, SchedulerMode, StagePlan, TelemetryMode,
+};
+use adaspring::util::rng::Rng;
+
+/// Bit-exact report equality over everything deterministic (wall-clock
+/// and per-worker busy times are the only excluded fields) — the same
+/// comparator `tests/pipeline.rs` pins the presets with.
+fn assert_reports_identical(a: &FleetReport, b: &FleetReport, label: &str) {
+    assert_eq!(a.inferences, b.inferences, "{label}: inferences");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.evolutions, b.evolutions, "{label}: evolutions");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    for (x, y, what) in [
+        (a.latency.p50_ms, b.latency.p50_ms, "p50"),
+        (a.latency.p95_ms, b.latency.p95_ms, "p95"),
+        (a.latency.p99_ms, b.latency.p99_ms, "p99"),
+        (a.latency.mean_ms, b.latency.mean_ms, "mean"),
+        (a.latency.max_ms, b.latency.max_ms, "max"),
+        (a.search_p50_us, b.search_p50_us, "search p50"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: latency {what}");
+    }
+    assert_eq!(a.per_archetype.len(), b.per_archetype.len(), "{label}: archetype rows");
+    for (x, y) in a.per_archetype.iter().zip(b.per_archetype.iter()) {
+        assert_eq!(x.archetype, y.archetype, "{label}");
+        assert_eq!(x.inferences, y.inferences, "{label}: {}", x.archetype);
+        assert_eq!(x.shed, y.shed, "{label}: {}", x.archetype);
+        assert_eq!(x.evolutions, y.evolutions, "{label}: {}", x.archetype);
+        assert_eq!(
+            x.battery_end_mean.to_bits(),
+            y.battery_end_mean.to_bits(),
+            "{label}: {}",
+            x.archetype
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: {}", x.archetype);
+    }
+    match (&a.dispatch, &b.dispatch) {
+        (None, None) => {}
+        (Some(da), Some(db)) => {
+            assert_eq!(da.admission.submitted, db.admission.submitted, "{label}: submitted");
+            assert_eq!(da.admission.admitted, db.admission.admitted, "{label}: admitted");
+            assert_eq!(da.admission.depth_max, db.admission.depth_max, "{label}: depth");
+            assert_eq!(da.batches.histogram, db.batches.histogram, "{label}: histogram");
+            assert_eq!(da.batches.served, db.batches.served, "{label}: served");
+        }
+        _ => panic!("{label}: dispatch block presence differs"),
+    }
+    match (&a.feedback, &b.feedback) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.windows, fb.windows, "{label}: windows");
+            assert_eq!(
+                fa.telemetry.arrival_rate_per_s.to_bits(),
+                fb.telemetry.arrival_rate_per_s.to_bits(),
+                "{label}: telemetry arrival rate"
+            );
+            assert_eq!(
+                fa.telemetry.service_rate_per_s.to_bits(),
+                fb.telemetry.service_rate_per_s.to_bits(),
+                "{label}: telemetry service rate"
+            );
+            assert_eq!(
+                fa.telemetry.shed_rate.to_bits(),
+                fb.telemetry.shed_rate.to_bits(),
+                "{label}: telemetry shed rate"
+            );
+            assert_eq!(
+                fa.service_rate_prior_per_s.to_bits(),
+                fb.service_rate_prior_per_s.to_bits(),
+                "{label}: µ̂₀ prior"
+            );
+        }
+        _ => panic!("{label}: feedback block presence differs"),
+    }
+}
+
+fn with_scheduler(mut p: PipelineConfig, s: SchedulerMode) -> PipelineConfig {
+    p.stages.scheduler = s;
+    p
+}
+
+/// Run one pipeline config under both schedulers and assert report-bit
+/// identity.
+fn assert_scheduler_parity(manifest: &Manifest, pcfg: &PipelineConfig, label: &str) {
+    let w = run_pipeline(manifest, &with_scheduler(pcfg.clone(), SchedulerMode::Windowed))
+        .unwrap_or_else(|e| panic!("{label} [windowed]: {e}"));
+    let e = run_pipeline(manifest, &with_scheduler(pcfg.clone(), SchedulerMode::EventDriven))
+        .unwrap_or_else(|e| panic!("{label} [event]: {e}"));
+    assert_reports_identical(&w, &e, label);
+}
+
+#[test]
+fn event_driven_is_bit_identical_to_windowed_across_presets() {
+    // Acceptance (§14): the event core must be indistinguishable from
+    // the windowed oracle everywhere — the three presets, randomized
+    // fleet shapes, and both one-line stage swaps.  Shapes are
+    // randomized deterministically so nothing is tuned to one lucky
+    // configuration.
+    let manifest = Manifest::synthetic();
+    let mut rng = Rng::new(0x5C4ED);
+    let policies = [
+        BackpressurePolicy::Block,
+        BackpressurePolicy::ShedNewest,
+        BackpressurePolicy::ShedOldest,
+        BackpressurePolicy::Deadline { max_wait_s: 1.0 },
+    ];
+    for round in 0..3u64 {
+        let cfg = FleetConfig {
+            devices: 4 + rng.below(10),
+            shards: 1 + rng.below(4),
+            duration_s: rng.range(0.2, 0.6) * 3600.0,
+            seed: 23 + round,
+            task: "d3".to_string(),
+            cache_stripes: 8,
+            load_multiplier: *rng.pick(&[1.0, 300.0]),
+            active_fraction: *rng.pick(&[1.0, 0.5]),
+            ..FleetConfig::default()
+        };
+        let dcfg = DispatchConfig {
+            queue_capacity: 2 + rng.below(8),
+            policy: *rng.pick(&policies),
+            batch_window_s: *rng.pick(&[0.0, 0.25, 1.0]),
+            stealing: rng.chance(0.5),
+            ..DispatchConfig::default()
+        };
+        let label = format!(
+            "round {round}: {}d x {}s, active {}, {:?}",
+            cfg.devices, cfg.shards, cfg.active_fraction, dcfg.policy
+        );
+
+        // Un-windowed presets: both schedulers run the single
+        // whole-duration pass — identical by construction, pinned
+        // anyway so the claim never silently narrows.
+        assert_scheduler_parity(
+            &manifest,
+            &PipelineConfig::direct(&cfg),
+            &format!("{label} [direct]"),
+        );
+        assert_scheduler_parity(
+            &manifest,
+            &PipelineConfig::dispatch(&cfg, &dcfg),
+            &format!("{label} [dispatch]"),
+        );
+
+        // The windowed feedback preset — the composition the event core
+        // actually restructures (lazy frames, dirty-set batching).
+        let fb_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..cfg.clone() };
+        assert_scheduler_parity(
+            &manifest,
+            &PipelineConfig::feedback(&fb_cfg, &dcfg),
+            &format!("{label} [feedback]"),
+        );
+
+        // Stage swaps (§11-3/§11-4) on top of the windowed loop:
+        // per-archetype frames and the admission-aware batch ramp.
+        let mut swapped = PipelineConfig::feedback(&fb_cfg, &dcfg);
+        swapped.stages.telemetry = TelemetryMode::Archetype;
+        swapped.dispatch.adaptive_batch = Some(AdaptiveBatch::default());
+        assert_scheduler_parity(&manifest, &swapped, &format!("{label} [archetype+adaptive]"));
+    }
+}
+
+#[test]
+fn event_driven_matches_the_observe_only_composition() {
+    // The windowed stages without the feedback funnel — frames flow,
+    // the control law stays off — under both schedulers.
+    let manifest = Manifest::synthetic();
+    let cfg = FleetConfig {
+        devices: 6,
+        shards: 1,
+        duration_s: 0.2 * 3600.0,
+        seed: 42,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 600.0,
+        ..FleetConfig::default()
+    };
+    let dcfg = DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        stealing: false,
+        ..DispatchConfig::default()
+    };
+    let mut pcfg = PipelineConfig::dispatch(&cfg, &dcfg);
+    pcfg.stages = StagePlan {
+        admission: AdmissionMode::VirtualQueue,
+        batching: BatchingMode::Drain,
+        execution: ExecutionMode::Sharded,
+        telemetry: TelemetryMode::Shard,
+        feedback: false,
+        scheduler: SchedulerMode::Windowed,
+    };
+    let w = run_pipeline(&manifest, &pcfg).unwrap();
+    assert!(w.inferences > 0);
+    pcfg.stages.scheduler = SchedulerMode::EventDriven;
+    let e = run_pipeline(&manifest, &pcfg).unwrap();
+    assert_reports_identical(&w, &e, "observe-only");
+    // And the event path replays deterministically, like every mode.
+    let e2 = run_pipeline(&manifest, &pcfg).unwrap();
+    assert_reports_identical(&e, &e2, "observe-only event replay");
+}
+
+/// Every number in a report must be finite — degenerate fleets may be
+/// empty but never NaN/inf.
+fn assert_finite_json(j: &adaspring::util::json::Json) {
+    use adaspring::util::json::Json;
+    match j {
+        Json::Num(n) => assert!(n.is_finite(), "non-finite number in report JSON"),
+        Json::Arr(a) => a.iter().for_each(assert_finite_json),
+        Json::Obj(m) => m.values().for_each(assert_finite_json),
+        _ => {}
+    }
+}
+
+#[test]
+fn event_driven_handles_degenerate_fleets() {
+    // The same regression shapes the windowed loop is pinned on: empty
+    // fleets, more shards than devices, zero duration — on the event
+    // path, with windowed parity asserted on each.
+    let manifest = Manifest::synthetic();
+    let dcfg = DispatchConfig::default();
+    for (devices, shards, duration_s) in
+        [(0usize, 4usize, 1800.0f64), (3, 8, 900.0), (6, 2, 0.0), (0, 0, 0.0)]
+    {
+        let cfg = FleetConfig {
+            devices,
+            shards,
+            duration_s,
+            seed: 5,
+            task: "d3".to_string(),
+            cache_stripes: 4,
+            feedback: FeedbackConfig::on(),
+            ..FleetConfig::default()
+        };
+        let label = format!("devices={devices} shards={shards} duration={duration_s}");
+        let mut pcfg = PipelineConfig::feedback(&cfg, &dcfg);
+        pcfg.stages.scheduler = SchedulerMode::EventDriven;
+        let r = run_pipeline(&manifest, &pcfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_finite_json(&r.to_json());
+        assert_eq!(r.devices, devices, "{label}");
+        if devices == 0 || duration_s == 0.0 {
+            assert_eq!((r.inferences, r.evolutions, r.shed), (0, 0, 0), "{label}");
+        }
+        let w = run_pipeline(&manifest, &PipelineConfig::feedback(&cfg, &dcfg))
+            .unwrap_or_else(|e| panic!("{label} [windowed]: {e}"));
+        assert_reports_identical(&w, &r, &label);
+    }
+}
+
+#[test]
+fn active_fraction_one_is_the_bit_identity() {
+    // Exactly 1.0 — the default — must not even draw the Bernoulli:
+    // an explicit 1.0 is bit-identical to a config that never heard of
+    // the knob.
+    let manifest = Manifest::synthetic();
+    let base = FleetConfig {
+        devices: 10,
+        shards: 2,
+        duration_s: 0.2 * 3600.0,
+        seed: 9,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        ..FleetConfig::default()
+    };
+    let explicit = FleetConfig { active_fraction: 1.0, ..base.clone() };
+    let a = run_fleet(&manifest, &base).unwrap();
+    let b = run_fleet(&manifest, &explicit).unwrap();
+    assert_reports_identical(&a, &b, "active-fraction 1.0");
+}
+
+#[test]
+fn active_fraction_silences_and_subsets_deterministically() {
+    let manifest = Manifest::synthetic();
+    let base = FleetConfig {
+        devices: 16,
+        shards: 2,
+        duration_s: 0.2 * 3600.0,
+        seed: 77,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        ..FleetConfig::default()
+    };
+
+    // 0.0: every event stream silenced — no inferences, no energy from
+    // serving, but the fleet still runs (context loop, report shape).
+    let silent_cfg = FleetConfig { active_fraction: 0.0, ..base.clone() };
+    let silent = run_fleet(&manifest, &silent_cfg).unwrap();
+    assert_eq!(silent.inferences, 0, "a 0.0-active fleet serves nothing");
+    assert_finite_json(&silent.to_json());
+
+    // Intermediate: on the direct path sessions are independent, so a
+    // half-active fleet serves a strict nonempty subset of the full
+    // fleet's inferences, and replays bit-identically.
+    let full = run_fleet(&manifest, &base).unwrap();
+    let half_cfg = FleetConfig { active_fraction: 0.5, ..base.clone() };
+    let half = run_fleet(&manifest, &half_cfg).unwrap();
+    let half2 = run_fleet(&manifest, &half_cfg).unwrap();
+    assert_reports_identical(&half, &half2, "active-fraction replay");
+    assert!(
+        half.inferences > 0 && half.inferences < full.inferences,
+        "half-active serves a strict nonempty subset ({} of {})",
+        half.inferences,
+        full.inferences
+    );
+    // The event scheduler agrees on the mostly-idle fleet — the regime
+    // it exists for.
+    let w = run_pipeline(&manifest, &PipelineConfig::direct(&half_cfg)).unwrap();
+    let e_cfg = with_scheduler(PipelineConfig::direct(&half_cfg), SchedulerMode::EventDriven);
+    let e = run_pipeline(&manifest, &e_cfg).unwrap();
+    assert_reports_identical(&w, &e, "half-active scheduler parity");
+}
