@@ -40,21 +40,24 @@ use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "window", "capacity", "policy", "rate", "burst", "max-batch", "adaptive-batch",
-    "placement", "no-steal", "json-out", "sweep", "csv",
+    "load", "active-fraction", "scheduler", "window", "capacity", "policy", "rate", "burst",
+    "max-batch", "adaptive-batch", "placement", "no-steal", "json-out", "sweep", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "no-steal", "adaptive-batch"];
 
 const USAGE: &str = "usage: bench_dispatch [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
-                     [--feedback on|off] [--load X] [--window SECS] [--capacity N] \
+                     [--feedback on|off] [--load X] [--active-fraction F] \
+                     [--scheduler windowed|event] [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--rate PER_S --burst N] [--max-batch N] [--adaptive-batch] \
                      [--placement modulo|packed] [--no-steal] [--trace-out PATH] \
                      [--json-out PATH] [--sweep] [--csv]\n\
                      (--adaptive-batch grows the batch cap with G/D/1 utilization; it engages \
-                     on the windowed pipeline, i.e. with --feedback on)";
+                     on the windowed pipeline, i.e. with --feedback on; --scheduler picks how \
+                     the windowed loop visits sessions — DESIGN.md §14 — and --active-fraction \
+                     leaves a fraction of devices idle, same contract as bench_fleet)";
 
 fn fleet_config(args: &Args) -> Result<FleetConfig> {
     // Dispatch-bench defaults: a smaller, shorter fleet than the raw
@@ -93,9 +96,13 @@ fn dispatch_config(args: &Args) -> Result<DispatchConfig> {
 fn main() -> Result<()> {
     let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
+    let scheduler = bench.scheduler()?;
     if bench.args.flag("sweep") {
         if bench.trace_out().is_some() {
             bail!("--trace-out traces a single run — drop --sweep");
+        }
+        if scheduler.is_some() {
+            bail!("--sweep sweeps the default scheduler — drop --scheduler");
         }
         return sweep(&bench);
     }
@@ -114,18 +121,23 @@ fn main() -> Result<()> {
         cfg.feedback.name(),
         cfg.load_multiplier
     );
-    let report = match bench.trace_out() {
+    let report = if bench.trace_out().is_some() || scheduler.is_some() {
         // Same routing run_fleet_dispatch does, with the flight
-        // recorder attached to the preset.
-        Some(path) => {
-            let preset = if cfg.feedback.enabled {
-                PipelineConfig::feedback(&cfg, &dcfg)
-            } else {
-                PipelineConfig::dispatch(&cfg, &dcfg)
-            };
-            run_pipeline(&bench.manifest, &preset.with_trace(Some(TraceConfig::new(path))))?
+        // recorder and/or the explicit §14 scheduler attached to the
+        // preset (the scheduler choice is report-invariant —
+        // tests/scheduler.rs — so this stays the same bench).
+        let mut preset = if cfg.feedback.enabled {
+            PipelineConfig::feedback(&cfg, &dcfg)
+        } else {
+            PipelineConfig::dispatch(&cfg, &dcfg)
+        };
+        if let Some(mode) = scheduler {
+            preset.stages.scheduler = mode;
         }
-        None => run_fleet_dispatch(&bench.manifest, &cfg, &dcfg)?,
+        let preset = preset.with_trace(bench.trace_out().map(TraceConfig::new));
+        run_pipeline(&bench.manifest, &preset)?
+    } else {
+        run_fleet_dispatch(&bench.manifest, &cfg, &dcfg)?
     };
     print_summary(&report);
     bench.print_table(&report.archetype_table());

@@ -48,22 +48,26 @@ use adaspring::util::json::Json;
 use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
-    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "window",
-    "capacity", "policy", "profile", "telemetry", "adaptive-batch", "check-floor", "json-out",
-    "csv",
+    "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan",
+    "active-fraction", "scheduler", "window", "capacity", "policy", "profile", "telemetry",
+    "adaptive-batch", "check-floor", "json-out", "csv",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["csv", "adaptive-batch"];
 
 const USAGE: &str = "usage: bench_feedback [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
+                     [--active-fraction F] [--scheduler windowed|event] \
                      [--window SECS] [--capacity N] \
                      [--policy block|shed-newest|shed-oldest|deadline:SECS] \
                      [--profile calm|diurnal-peak|surge|all] [--telemetry shard|archetype] \
                      [--adaptive-batch] [--check-floor PATH] [--trace-out PATH] \
                      [--json-out PATH] [--csv]\n\
                      (the bench drives --feedback and --load itself, per profile and mode; \
-                     --telemetry / --adaptive-batch are stage swaps on the feedback-on runs)";
+                     --telemetry / --adaptive-batch are stage swaps on the feedback-on runs; \
+                     --scheduler picks how the windowed loop visits sessions on both the off \
+                     and on runs — DESIGN.md §14 — and --active-fraction leaves a fraction of \
+                     devices idle, same contract as bench_fleet)";
 
 /// The overload profiles: (name, event-intensity multiplier).
 const PROFILES: [(&str, f64); 3] = [("calm", 1.0), ("diurnal-peak", 600.0), ("surge", 1500.0)];
@@ -132,6 +136,7 @@ fn main() -> Result<()> {
     // the feedback-on runs carry it (the off runs stay the exact PR 2
     // dispatch preset either way).
     let adaptive = args.flag("adaptive-batch").then(AdaptiveBatch::default);
+    let scheduler = bench.scheduler()?;
     let dcfg = DispatchConfig {
         queue_capacity: args.get_usize("capacity", 4),
         policy,
@@ -184,8 +189,16 @@ fn main() -> Result<()> {
         let on_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..off_cfg.clone() };
         // Off = the dispatch preset (PR 2/3 path, bit-identical); on =
         // the feedback preset with the requested stage swaps applied.
-        let r_off = run_pipeline(manifest, &PipelineConfig::dispatch(&off_cfg, &dcfg))?;
+        let mut off_pipeline = PipelineConfig::dispatch(&off_cfg, &dcfg);
         let mut on_pipeline = PipelineConfig::feedback(&on_cfg, &dcfg);
+        if let Some(mode) = scheduler {
+            // Applied to both runs: the scheduler choice is
+            // report-invariant (tests/scheduler.rs), so the off/on
+            // comparison stays apples-to-apples either way.
+            off_pipeline.stages.scheduler = mode;
+            on_pipeline.stages.scheduler = mode;
+        }
+        let r_off = run_pipeline(manifest, &off_pipeline)?;
         on_pipeline.stages.telemetry = telemetry;
         on_pipeline.dispatch.adaptive_batch = adaptive;
         on_pipeline.trace = bench.trace_out().map(TraceConfig::new);

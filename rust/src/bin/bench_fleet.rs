@@ -21,26 +21,31 @@
 //! uploads it as a workflow artifact.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use adaspring::coordinator::Manifest;
 use adaspring::dispatch::DispatchConfig;
 use adaspring::fleet::{
-    run_fleet, run_pipeline, AdmissionMode, BatchingMode, ExecutionMode, FeedbackConfig,
-    FleetConfig, FleetReport, PipelineConfig, PlanMode, SchedulerMode, StagePlan, TelemetryMode,
+    load_trace, record_trace_to_file, run_fleet, run_pipeline, AdmissionMode, ArrivalTrace,
+    BatchingMode, ExecutionMode, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig,
+    PlanMode, SchedulerMode, StagePlan, TelemetryMode,
 };
 use adaspring::metrics::Table;
-use adaspring::obs::{TraceConfig, ALL_STAGES};
+use adaspring::obs::{
+    EvolutionAudit, StageSpan, TraceConfig, TraceEvent, ALL_STAGES, KNOWN_ANOMALY_KINDS,
+    KNOWN_ARMS, KNOWN_PLANS,
+};
 use adaspring::util::bench::guard_overwrite;
 use adaspring::util::cli::Args;
-use adaspring::util::json::Json;
+use adaspring::util::json::{Json, JsonWriter};
 use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "devices", "shards", "hours", "seed", "task", "manifest", "stripes", "plan", "feedback",
-    "load", "active-fraction", "scheduler", "check-floor", "json-out", "metrics-json", "sweep",
-    "csv", "metrics",
+    "load", "active-fraction", "scheduler", "record-trace", "trace", "check-floor", "json-out",
+    "metrics-json", "sweep", "csv", "metrics",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "metrics"];
@@ -48,16 +53,22 @@ const BOOLEAN_FLAGS: &[&str] = &["sweep", "csv", "metrics"];
 const USAGE: &str = "usage: bench_fleet [--devices N] [--shards N] [--hours H] [--seed N] \
                      [--task NAME] [--manifest PATH] [--stripes N] [--plan off|banded|shared] \
                      [--feedback off] [--load X] [--active-fraction F] \
-                     [--scheduler windowed|event] [--trace-out PATH] [--metrics] \
+                     [--scheduler windowed|event] [--record-trace PATH] [--trace PATH] \
+                     [--trace-out PATH] [--metrics] \
                      [--metrics-json PATH] [--check-floor PATH] [--json-out PATH] [--sweep] \
                      [--csv]\n\
                      (--feedback on needs the dispatch path: bench_dispatch / bench_feedback; \
                      --metrics adds the \"metrics\" block to the report, --metrics-json also \
                      writes the metrics/series blocks to PATH; --scheduler runs the observe-only \
                      windowed composition under the chosen scheduler — DESIGN.md §14; \
+                     --record-trace dumps this run's arrival stream as a §15 ndjson trace, \
+                     --trace replays a recorded trace (workload identity comes from its meta \
+                     line — combine only with execution knobs like --shards / --plan / \
+                     --scheduler); \
                      --check-floor alone runs the traced-vs-untraced overhead check against \
                      rust/obs_floor.json, --scheduler + --check-floor runs the event-scheduler \
-                     speedup check against rust/event_floor.json)";
+                     speedup check against rust/event_floor.json, --trace + --check-floor runs \
+                     the trace-replay floor against rust/trace_floor.json)";
 
 fn config_from(args: &Args) -> Result<FleetConfig> {
     FleetConfig::from_args(args, FleetConfig::default())
@@ -66,13 +77,16 @@ fn config_from(args: &Args) -> Result<FleetConfig> {
 fn main() -> Result<()> {
     let bench = Bench::init(ALLOWED, BOOLEAN_FLAGS, USAGE)?;
 
-    let scheduler = match bench.args.get("scheduler") {
-        Some(s) => match SchedulerMode::parse(s) {
-            Some(m) => Some(m),
-            None => bail!("unknown --scheduler {s:?} (expected windowed|event)"),
-        },
-        None => None,
-    };
+    let scheduler = bench.scheduler()?;
+    let record = bench.args.get("record-trace");
+    let replay = bench.args.get("trace");
+    if let (Some(rec), Some(rep)) = (record, replay) {
+        bail!(
+            "--record-trace {rec} and --trace {rep} cannot be combined: --record-trace \
+             derives a trace from this run's synthetic scenarios, --trace replays an \
+             existing one — pick one"
+        );
+    }
     if bench.args.flag("sweep") {
         if bench.trace_out().is_some() {
             bail!("--trace-out traces a single run — drop --sweep");
@@ -80,16 +94,55 @@ fn main() -> Result<()> {
         if scheduler.is_some() {
             bail!("--sweep sweeps the direct path — drop --scheduler");
         }
+        if record.is_some() || replay.is_some() {
+            bail!("--sweep sweeps synthetic runs — drop --record-trace / --trace");
+        }
         return sweep(&bench);
     }
     if let Some(path) = bench.args.get("check-floor") {
-        return match scheduler {
-            Some(_) => check_event_floor(&bench, path),
-            None => check_obs_floor(&bench, path),
+        return match (replay, scheduler) {
+            (Some(trace_path), Some(_)) => {
+                bail!("--check-floor with --trace runs the direct replay path — drop --scheduler \
+                       (replaying {trace_path})")
+            }
+            (Some(trace_path), None) => check_trace_floor(&bench, trace_path, path),
+            (None, Some(_)) => check_event_floor(&bench, path),
+            (None, None) => check_obs_floor(&bench, path),
         };
     }
 
-    let cfg = config_from(&bench.args)?;
+    let (cfg, arrivals) = match replay {
+        Some(path) => {
+            // Replay (DESIGN.md §15-2): the trace's meta line *is* the
+            // workload identity, so identity flags would silently
+            // contradict it — reject them outright.
+            for flag in ["devices", "hours", "seed", "task", "load", "active-fraction"] {
+                if bench.args.get(flag).is_some() {
+                    bail!(
+                        "--trace replays the recorded workload identity — drop --{flag} \
+                         (devices/hours/seed/task/load/active-fraction come from the \
+                         trace's meta line; execution knobs like --shards / --plan / \
+                         --scheduler still apply)"
+                    );
+                }
+            }
+            let trace = Arc::new(load_trace(path)?);
+            let cfg = trace.meta.to_fleet_config(&config_from(&bench.args)?);
+            println!(
+                "# replaying {path}: {} arrival events, {} battery drains\n",
+                trace.total_events(),
+                trace.total_drains()
+            );
+            (cfg, Some(trace))
+        }
+        None => (config_from(&bench.args)?, None),
+    };
+    if let Some(path) = record {
+        // Clobber guard (§13-5), same contract as --trace-out.
+        guard_overwrite(&bench.args, path)?;
+        let lines = record_trace_to_file(&cfg, path)?;
+        println!("# arrival trace ({lines} lines) recorded to {path}\n");
+    }
     println!(
         "# Fleet serving{} — {} devices x {:.1} h over {} shards (task {}, seed {})\n",
         scheduler.map(|m| format!(" ({} scheduler)", m.name())).unwrap_or_default(),
@@ -100,35 +153,60 @@ fn main() -> Result<()> {
         cfg.seed
     );
     let report = match scheduler {
-        Some(mode) => run_scheduled(&bench, &cfg, mode)?,
-        None => run_traced(&bench, &cfg)?,
+        Some(mode) => run_scheduled(&bench, &cfg, mode, arrivals)?,
+        None => run_traced(&bench, &cfg, arrivals)?,
     };
     print_summary(&report);
     bench.print_table(&report.archetype_table());
-    let json = report.to_json();
-    bench.emit_json("fleet", &json)?;
+    // Streamed emission (§15-3): the report bytes go straight from the
+    // aggregator through `JsonWriter` — no `Json` tree for the headline
+    // `--json-out` path (byte parity with the tree is pinned in
+    // tests/trace.rs).
+    let mut body = String::new();
+    {
+        let mut w = JsonWriter::new(&mut body);
+        report.write_json(&mut w).expect("writing to a String cannot fail");
+        debug_assert!(w.is_complete());
+    }
+    bench.emit_json_str("fleet", &body)?;
     if let Some(path) = bench.args.get("metrics-json") {
         // The metrics/series blocks alone — the CI BENCH_metrics.json
         // artifact, small enough to eyeball in a workflow run.
         guard_overwrite(&bench.args, path)?;
-        let mut m = BTreeMap::new();
-        for key in ["metrics", "series"] {
-            if let Ok(block) = json.get(key) {
-                m.insert(key.to_string(), block.clone());
+        let mut m = String::new();
+        {
+            let mut w = JsonWriter::new(&mut m);
+            w.begin_obj().expect("writing to a String cannot fail");
+            if let Some(metrics) = &report.metrics {
+                w.key("metrics").expect("writing to a String cannot fail");
+                metrics.write_json(&mut w).expect("writing to a String cannot fail");
             }
+            if !report.series.is_empty() {
+                w.key("series").expect("writing to a String cannot fail");
+                adaspring::obs::metrics::write_series_json(&report.series, &mut w)
+                    .expect("writing to a String cannot fail");
+            }
+            w.end_obj().expect("writing to a String cannot fail");
+            debug_assert!(w.is_complete());
         }
-        Json::Obj(m).write_to(path)?;
+        m.push('\n');
+        std::fs::write(path, m).with_context(|| format!("writing json {path}"))?;
         println!("metrics JSON written to {path}");
     }
     Ok(())
 }
 
 /// The direct fleet run, through the flight recorder when `--trace-out`
-/// is set and the metrics plane when `--metrics` / `--metrics-json` is
-/// (the bare path stays the plain [`run_fleet`] wrapper).
-fn run_traced(bench: &Bench, cfg: &FleetConfig) -> Result<FleetReport> {
+/// is set, the metrics plane when `--metrics` / `--metrics-json` is,
+/// and the §15 replayer when `--trace` supplied `arrivals` (the bare
+/// path stays the plain [`run_fleet`] wrapper).
+fn run_traced(
+    bench: &Bench,
+    cfg: &FleetConfig,
+    arrivals: Option<Arc<ArrivalTrace>>,
+) -> Result<FleetReport> {
     let metrics = bench.args.flag("metrics") || bench.args.get("metrics-json").is_some();
-    if bench.trace_out().is_none() && !metrics {
+    if bench.trace_out().is_none() && !metrics && arrivals.is_none() {
         return run_fleet(&bench.manifest, cfg);
     }
     if cfg.feedback.enabled {
@@ -136,7 +214,8 @@ fn run_traced(bench: &Bench, cfg: &FleetConfig) -> Result<FleetReport> {
     }
     let pcfg = PipelineConfig::direct(cfg)
         .with_trace(bench.trace_out().map(TraceConfig::new))
-        .with_metrics(metrics);
+        .with_metrics(metrics)
+        .with_arrivals(arrivals);
     run_pipeline(&bench.manifest, &pcfg)
 }
 
@@ -159,6 +238,7 @@ fn scheduled_pipeline(cfg: &FleetConfig, scheduler: SchedulerMode) -> PipelineCo
         },
         trace: None,
         metrics: false,
+        arrivals: None,
     }
 }
 
@@ -169,6 +249,7 @@ fn run_scheduled(
     bench: &Bench,
     cfg: &FleetConfig,
     scheduler: SchedulerMode,
+    arrivals: Option<Arc<ArrivalTrace>>,
 ) -> Result<FleetReport> {
     if cfg.feedback.enabled {
         bail!(
@@ -179,7 +260,8 @@ fn run_scheduled(
     let metrics = bench.args.flag("metrics") || bench.args.get("metrics-json").is_some();
     let pcfg = scheduled_pipeline(cfg, scheduler)
         .with_trace(bench.trace_out().map(TraceConfig::new))
-        .with_metrics(metrics);
+        .with_metrics(metrics)
+        .with_arrivals(arrivals);
     run_pipeline(&bench.manifest, &pcfg)
 }
 
@@ -303,6 +385,198 @@ fn check_event_floor(bench: &Bench, floor_path: &str) -> Result<()> {
         small.3, small.0, large.3, large.0
     );
     Ok(())
+}
+
+/// The §15 trace-replay floor (CI: `--trace rust/fixtures/flash_crowd.ndjson
+/// --check-floor rust/trace_floor.json`): replay the fixture through the
+/// direct pipeline and gate on
+///
+/// * replay wall staying within `max_replay_wall_ratio` of a synthetic
+///   run of the same fleet shape — the replayer's streaming read path
+///   must cost no more than a small multiple of scenario sampling;
+/// * at least `min_inferences` served from the recorded arrivals (an
+///   empty replay would sail under any timing gate);
+/// * all three replays agreeing on inferences/evolutions/shed (the
+///   cheap in-run echo of the `tests/trace.rs` bit-parity gate);
+/// * the §15-1 pull reader beating the tree parser by
+///   `min_parse_speedup` on a generated `parse_lines`-line §12 obs
+///   trace — the single-pass ingest win.
+///
+/// Emits the measurements as the CI `BENCH_trace.json` artifact via
+/// `--json-out`.
+fn check_trace_floor(bench: &Bench, trace_path: &str, floor_path: &str) -> Result<()> {
+    let floor = Bench::read_floor(floor_path)?;
+    let max_wall_ratio = floor.get("max_replay_wall_ratio")?.as_f64()?;
+    let min_inferences = floor.get("min_inferences")?.as_u64()?;
+    let min_parse_speedup = floor.get("min_parse_speedup")?.as_f64()?;
+    let parse_lines = floor.get("parse_lines")?.as_u64()?;
+
+    let trace = Arc::new(load_trace(trace_path)?);
+    let base = config_from(&bench.args)?;
+    if base.feedback.enabled {
+        bail!("the trace floor check runs the direct preset — drop --feedback");
+    }
+    let cfg = trace.meta.to_fleet_config(&base);
+    println!(
+        "# Trace-replay floor — {} devices x {:.0} s, {} recorded arrivals ({trace_path}), \
+         best of 3 per mode\n",
+        cfg.devices,
+        cfg.duration_s,
+        trace.total_events()
+    );
+
+    // Replay vs synthetic, interleaved so machine drift debits both.
+    let mut syn_best = f64::INFINITY;
+    let mut rep_best = f64::INFINITY;
+    let mut counts: Vec<(usize, usize, usize)> = Vec::new();
+    let mut replayed: Option<FleetReport> = None;
+    for _ in 0..3 {
+        let s = run_pipeline(&bench.manifest, &PipelineConfig::direct(&cfg))?;
+        syn_best = syn_best.min(s.wall_ms);
+        let pcfg = PipelineConfig::direct(&cfg).with_arrivals(Some(trace.clone()));
+        let r = run_pipeline(&bench.manifest, &pcfg)?;
+        rep_best = rep_best.min(r.wall_ms);
+        counts.push((r.inferences, r.evolutions, r.shed));
+        replayed = Some(r);
+    }
+    let replayed = replayed.expect("three replays completed");
+    let wall_ratio = rep_best / syn_best.max(1e-9);
+
+    // Pull-vs-tree decode throughput on a generated §12 obs trace.
+    let doc = synth_obs_trace(parse_lines);
+    let tree_ms = time_trace_decode(&doc, false)?;
+    let pull_ms = time_trace_decode(&doc, true)?;
+    let parse_speedup = tree_ms / pull_ms.max(1e-9);
+    println!(
+        "replay best {rep_best:.1} ms vs synthetic best {syn_best:.1} ms ({wall_ratio:.2}x); \
+         {} inferences; pull decode {pull_ms:.1} ms vs tree {tree_ms:.1} ms \
+         ({parse_speedup:.2}x over {parse_lines} lines)",
+        replayed.inferences
+    );
+
+    let mut failures: Vec<String> = Vec::new();
+    if wall_ratio > max_wall_ratio {
+        failures.push(format!(
+            "replay wall {rep_best:.1} ms is {wall_ratio:.2}x the synthetic {syn_best:.1} ms \
+             (floor {max_wall_ratio}x): the replay read path is costing more than scenario \
+             sampling"
+        ));
+    }
+    if (replayed.inferences as u64) < min_inferences {
+        failures.push(format!(
+            "replay served only {} inferences (floor {min_inferences}): the recorded arrivals \
+             are not reaching the sessions",
+            replayed.inferences
+        ));
+    }
+    if counts.windows(2).any(|w| w[0] != w[1]) {
+        failures.push(format!("replays disagree across runs: {counts:?}"));
+    }
+    if parse_speedup < min_parse_speedup {
+        failures.push(format!(
+            "pull reader only {parse_speedup:.2}x faster than the tree parser \
+             (floor {min_parse_speedup}x) over {parse_lines} lines"
+        ));
+    }
+
+    let mut m = BTreeMap::new();
+    m.insert("devices".into(), Json::Num(cfg.devices as f64));
+    m.insert("duration_s".into(), Json::Num(cfg.duration_s));
+    m.insert("trace_events".into(), Json::Num(trace.total_events() as f64));
+    m.insert("trace_drains".into(), Json::Num(trace.total_drains() as f64));
+    m.insert("synthetic_best_ms".into(), Json::Num(syn_best));
+    m.insert("replay_best_ms".into(), Json::Num(rep_best));
+    m.insert("replay_wall_ratio".into(), Json::Num(wall_ratio));
+    m.insert("max_replay_wall_ratio".into(), Json::Num(max_wall_ratio));
+    m.insert("inferences".into(), Json::Num(replayed.inferences as f64));
+    m.insert("min_inferences".into(), Json::Num(min_inferences as f64));
+    m.insert("parse_lines".into(), Json::Num(parse_lines as f64));
+    m.insert("tree_parse_ms".into(), Json::Num(tree_ms));
+    m.insert("pull_parse_ms".into(), Json::Num(pull_ms));
+    m.insert("parse_speedup".into(), Json::Num(parse_speedup));
+    m.insert("min_parse_speedup".into(), Json::Num(min_parse_speedup));
+    bench.emit_json("trace", &Json::Obj(m))?;
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "\nfloor check ok: replay {wall_ratio:.2}x synthetic wall (<= {max_wall_ratio}x), \
+         {} inferences (>= {min_inferences}), pull decode {parse_speedup:.2}x tree \
+         (>= {min_parse_speedup}x)",
+        replayed.inferences
+    );
+    Ok(())
+}
+
+/// Deterministically synthesize an `n`-line §12 obs trace (span / audit
+/// / anomaly lines cycling through the stage and vocab tables) for the
+/// decode-throughput comparison.
+fn synth_obs_trace(n: u64) -> String {
+    let mut doc = String::new();
+    for i in 0..n {
+        let ev = match i % 3 {
+            0 => TraceEvent::Span(StageSpan {
+                shard: (i % 4) as u32,
+                window: i / 7,
+                t_s: i as f64 * 0.25,
+                stage: ALL_STAGES[(i % 5) as usize],
+                wall_us: 12.5 + i as f64,
+                items: i % 100,
+                aux: i % 7,
+            }),
+            1 => TraceEvent::Audit(EvolutionAudit {
+                device: i % 1000,
+                t_s: i as f64 * 0.25,
+                arm: KNOWN_ARMS[(i % 4) as usize],
+                plan: KNOWN_PLANS[(i % 4) as usize],
+                candidates: i % 64,
+                load_band: (i % 5) as u32,
+                variant: i % 9,
+                lambda2_base: 0.3,
+                lambda2_final: 0.45,
+                budget_base_ms: 30.0,
+                budget_final_ms: 24.5,
+                search_us: 180.0,
+                evolution_us: 210.0,
+            }),
+            _ => TraceEvent::Anomaly {
+                shard: (i % 4) as u32,
+                window: i / 7,
+                t_s: i as f64 * 0.25,
+                kind: KNOWN_ANOMALY_KINDS[(i % 2) as usize],
+                value: 0.5,
+            },
+        };
+        ev.write_json(&mut doc).expect("writing to a String cannot fail");
+        doc.push('\n');
+    }
+    doc
+}
+
+/// Best-of-3 wall time (ms) decoding every line of `doc` through the
+/// pull reader (`use_pull`) or the tree oracle.
+fn time_trace_decode(doc: &str, use_pull: bool) -> Result<f64> {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let mut spans = 0u64;
+        for line in doc.lines() {
+            let ev = if use_pull {
+                TraceEvent::parse_pull(line)?
+            } else {
+                TraceEvent::parse(line)?
+            };
+            // Keep the decode live so the loop can't be hollowed out.
+            spans += matches!(ev, TraceEvent::Span(_)) as u64;
+        }
+        std::hint::black_box(spans);
+        best = best.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(best)
 }
 
 fn print_summary(r: &FleetReport) {

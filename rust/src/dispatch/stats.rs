@@ -3,9 +3,10 @@
 //! report's `"dispatch"` JSON block (schema in README.md).
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 use crate::obs::metrics::Histogram;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonWriter};
 
 use super::admission::AdmissionStats;
 use super::batcher::{AdaptiveBatch, BatchStats};
@@ -174,6 +175,91 @@ impl DispatchReport {
         root.insert("steals".into(), Json::Obj(steals));
         Json::Obj(root)
     }
+
+    /// Streaming twin of [`DispatchReport::to_json`] (DESIGN.md §15-3):
+    /// emits the identical bytes through a [`JsonWriter`] without ever
+    /// building the tree.  Keys are written in sorted order to mirror
+    /// the `BTreeMap`-backed `Display`; `tests/trace.rs` pins the byte
+    /// parity.
+    pub fn write_json<W: fmt::Write>(&self, w: &mut JsonWriter<'_, W>) -> fmt::Result {
+        w.begin_obj()?;
+        if let Some(a) = &self.adaptive_batch {
+            w.key("adaptive_batch")?;
+            w.begin_obj()?;
+            w.field_num("max_scale", a.max_scale)?;
+            w.field_num("util_floor", a.util_floor)?;
+            w.end_obj()?;
+        }
+        w.key("batches")?;
+        w.begin_obj()?;
+        w.field_num("count", self.batches.batches as f64)?;
+        w.key("histogram")?;
+        w.begin_arr()?;
+        for (size, count) in &self.batches.histogram {
+            w.begin_obj()?;
+            w.field_num("count", *count as f64)?;
+            w.field_num("size", *size as f64)?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.field_num("served", self.batches.served as f64)?;
+        w.field_num("size_max", self.batches.size_max as f64)?;
+        w.field_num("size_mean", self.batches.size_mean())?;
+        w.end_obj()?;
+        w.field_num("capacity", self.queue_capacity as f64)?;
+        w.field_str("policy", &self.policy)?;
+        w.key("queue")?;
+        w.begin_obj()?;
+        w.field_num("admitted", self.admission.admitted as f64)?;
+        w.field_num("depth_max", self.admission.depth_max as f64)?;
+        w.field_num("depth_mean", self.admission.depth_mean())?;
+        w.key("shed")?;
+        w.begin_obj()?;
+        w.field_num("deadline", self.admission.shed_deadline as f64)?;
+        w.field_num("displaced", self.admission.shed_displaced as f64)?;
+        w.field_num("queue_full", self.admission.shed_queue_full as f64)?;
+        w.field_num("rate_limited", self.admission.shed_rate_limited as f64)?;
+        w.field_num("total", self.admission.shed_total() as f64)?;
+        w.end_obj()?;
+        w.field_num("submitted", self.admission.submitted as f64)?;
+        w.end_obj()?;
+        w.field_bool("stealing", self.stealing_enabled)?;
+        w.key("steals")?;
+        w.begin_obj()?;
+        w.field_num("count", self.steals as f64)?;
+        w.key("per_worker")?;
+        w.begin_arr()?;
+        for (i, &busy) in self.worker_busy_ms.iter().enumerate() {
+            w.begin_obj()?;
+            w.field_num("busy_ms", busy)?;
+            if let Some(&s) = self.worker_sessions_stolen.get(i) {
+                w.field_num("sessions_stolen", s as f64)?;
+            }
+            if let Some(&s) = self.worker_steals.get(i) {
+                w.field_num("steals", s as f64)?;
+            }
+            if let Some(&s) = self.worker_steps.get(i) {
+                w.field_num("steps", s as f64)?;
+            }
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.field_num("sessions", self.sessions_stolen as f64)?;
+        w.key("worker_busy_ms")?;
+        w.begin_arr()?;
+        for &b in &self.worker_busy_ms {
+            w.num(b)?;
+        }
+        w.end_arr()?;
+        w.end_obj()?;
+        w.key("total_ms")?;
+        write_series_summary_ms(w, &self.batches.total_us)?;
+        w.key("wait_ms")?;
+        write_series_summary_ms(w, &self.wait_us)?;
+        w.field_num("window_s", self.batch_window_s)?;
+        w.field_num("workers", self.workers as f64)?;
+        w.end_obj()
+    }
 }
 
 /// p50/p95/max/mean summary of a microsecond histogram, in milliseconds
@@ -191,6 +277,25 @@ fn series_summary_ms(s: &Histogram) -> Json {
     m.insert("max".into(), Json::Num(max / 1e3));
     m.insert("mean".into(), Json::Num(mean / 1e3));
     Json::Obj(m)
+}
+
+/// Streaming twin of [`series_summary_ms`] (sorted keys).
+fn write_series_summary_ms<W: fmt::Write>(
+    w: &mut JsonWriter<'_, W>,
+    s: &Histogram,
+) -> fmt::Result {
+    let (p50, p95, max, mean) = if s.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        let p = s.percentiles(&[50.0, 95.0]);
+        (p[0], p[1], s.max(), s.mean())
+    };
+    w.begin_obj()?;
+    w.field_num("max", max / 1e3)?;
+    w.field_num("mean", mean / 1e3)?;
+    w.field_num("p50", p50 / 1e3)?;
+    w.field_num("p95", p95 / 1e3)?;
+    w.end_obj()
 }
 
 #[cfg(test)]
@@ -268,5 +373,38 @@ mod tests {
         assert_eq!(per_worker[0].get("steals").unwrap().as_usize().unwrap(), 3);
         assert_eq!(per_worker[0].get("sessions_stolen").unwrap().as_usize().unwrap(), 7);
         assert_eq!(per_worker[1].get("busy_ms").unwrap().as_f64().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn streamed_dispatch_json_matches_tree() {
+        let cfg = DispatchConfig {
+            adaptive_batch: Some(AdaptiveBatch::default()),
+            ..DispatchConfig::default()
+        };
+        let batches = BatchStats {
+            batches: 2,
+            served: 5,
+            size_max: 3,
+            histogram: [(2usize, 1u64), (3, 1)].into_iter().collect(),
+            total_us: Histogram::default(),
+        };
+        let r = DispatchReport::new(
+            &cfg,
+            2,
+            AdmissionStats::default(),
+            Histogram::default(),
+            batches,
+            3,
+            7,
+            vec![1.0, 2.0],
+            vec![40, 60],
+            vec![3, 0],
+            vec![7, 0],
+        );
+        let mut buf = String::new();
+        let mut w = JsonWriter::new(&mut buf);
+        r.write_json(&mut w).unwrap();
+        assert!(w.is_complete());
+        assert_eq!(buf, r.to_json().to_string(), "streamed dispatch block must match the tree");
     }
 }

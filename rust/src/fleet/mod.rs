@@ -26,6 +26,11 @@
 //!   ([`run_fleet`], [`run_fleet_dispatch`], [`run_fleet_feedback`]).
 //! * [`report`] — fleet-wide rollups: p50/p95/p99 inference latency,
 //!   evolution counts, energy, cache hit rate; JSON for the benches.
+//! * [`trace`] — the trace plane (DESIGN.md §15): a versioned ndjson
+//!   arrival-trace schema, a recorder that dumps any synthetic run's
+//!   arrival stream, a streaming bounded-memory loader, and the three
+//!   committed fixture-trace generators, so recorded workloads replay
+//!   bit-identically through the pipeline.
 //!
 //! `cargo run --release --bin bench_fleet -- --devices 100 --shards 4`
 //! drives the whole stack without artifacts (synthetic manifest +
@@ -40,6 +45,7 @@ pub mod pool;
 pub mod report;
 pub mod scenarios;
 pub mod session;
+pub mod trace;
 
 pub use crate::context::feedback::FeedbackConfig;
 pub use crate::coordinator::plancache::{PlanCache, PlanMode};
@@ -49,6 +55,10 @@ pub use pool::{run_fleet, run_fleet_dispatch, run_fleet_feedback, shard_of, Flee
 pub use report::{ArchetypeFrame, ArchetypeSummary, FeedbackBlock, FleetReport, LatencySummary};
 pub use scenarios::{Archetype, Scenario, ALL_ARCHETYPES};
 pub use session::{DeviceReport, DeviceSession, SimCompiledVariant, SimVariantCache};
+pub use trace::{
+    generate_fixture, load_trace, parse_trace, record_trace_to_file, record_trace_to_string,
+    ArrivalTrace, TraceMeta, FIXTURES, TRACE_SCHEMA,
+};
 
 // ---------------------------------------------------------------------------
 // The stage contract (DESIGN.md §11-1).

@@ -161,6 +161,12 @@ pub struct PipelineConfig {
     /// keeps every simulated result bit-identical to the metered run
     /// (`tests/metrics.rs` pins this).
     pub metrics: bool,
+    /// Replayed arrival trace (DESIGN.md §15): when set, every session's
+    /// event stream (and any exogenous battery drains) comes from the
+    /// recorded trace instead of its `Scenario`-sampled one.  `None` —
+    /// the default on every preset — leaves the synthetic path
+    /// untouched, so the presets stay bit-identical to PR 8.
+    pub arrivals: Option<Arc<super::trace::ArrivalTrace>>,
 }
 
 impl PipelineConfig {
@@ -172,6 +178,7 @@ impl PipelineConfig {
             stages: StagePlan::direct(),
             trace: None,
             metrics: false,
+            arrivals: None,
         }
     }
 
@@ -184,6 +191,7 @@ impl PipelineConfig {
             stages: StagePlan::dispatch(),
             trace: None,
             metrics: false,
+            arrivals: None,
         }
     }
 
@@ -198,6 +206,7 @@ impl PipelineConfig {
             stages: StagePlan::feedback(),
             trace: None,
             metrics: false,
+            arrivals: None,
         }
     }
 
@@ -213,6 +222,18 @@ impl PipelineConfig {
     /// [`PipelineConfig::metrics`], the bench bins' `--metrics` wiring.
     pub fn with_metrics(mut self, metrics: bool) -> PipelineConfig {
         self.metrics = metrics;
+        self
+    }
+
+    /// Feed sessions from a replayed arrival trace instead of their
+    /// synthetic `Scenario` streams — builder form of setting
+    /// [`PipelineConfig::arrivals`], the bench bins' `--trace PATH`
+    /// wiring (§15).
+    pub fn with_arrivals(
+        mut self,
+        arrivals: Option<Arc<super::trace::ArrivalTrace>>,
+    ) -> PipelineConfig {
+        self.arrivals = arrivals;
         self
     }
 
@@ -710,6 +731,17 @@ fn run_worker(
             let mut session = DeviceSession::with_scenario_task(
                 &task, &models, manifest.root.clone(), &scenario, d, cfg.seed, cfg.duration_s,
             );
+            if let Some(trace) = pcfg.arrivals.as_deref() {
+                // Replay (§15): swap the scenario-sampled events for the
+                // recorded stream before stage binding sizes anything
+                // off the event count.  Context simulation stays
+                // scenario-seeded, so a trace recorded from the same
+                // config replays bit-identically.
+                session.override_events(
+                    trace.events_for(d).to_vec(),
+                    trace.drains_for(d).to_vec(),
+                );
+            }
             session.bind_stages(w, cfg.plan, plan_cache, feedback, streaming);
             if taps.live() {
                 // Both planes drain the audit buffer: the tracer onto the

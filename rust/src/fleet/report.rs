@@ -195,6 +195,27 @@ impl FeedbackBlock {
         Json::parse(&buf).expect("streamed telemetry block is valid JSON")
     }
 
+    /// Streaming twin of [`feedback_json`](Self::feedback_json): sorted
+    /// keys, byte-identical to the tree block's `Display`.
+    pub fn write_feedback_json<W: std::fmt::Write>(
+        &self,
+        w: &mut JsonWriter<'_, W>,
+    ) -> std::fmt::Result {
+        w.begin_obj()?;
+        w.field_num("acc_loss_evo_mean", self.acc_loss_evo_mean)?;
+        w.field_bool("enabled", self.config.enabled)?;
+        w.field_num("ewma_alpha", self.config.ewma_alpha)?;
+        w.field_num("min_budget_fraction", self.config.min_budget_fraction)?;
+        w.field_num("plan_ttl_base_s", self.config.plan_ttl.map(|t| t.base_s).unwrap_or(0.0))?;
+        w.field_num("shed_lambda2_gain", self.config.shed_lambda2_gain)?;
+        w.field_num("spike_cooldown_s", self.config.spike.cooldown_s)?;
+        w.field_num("spike_shed_threshold", self.config.spike.shed_threshold)?;
+        w.field_num("spike_util_threshold", self.config.spike.util_threshold)?;
+        w.field_num("telemetry_window_s", self.config.telemetry_window_s)?;
+        w.field_num("wait_budget_gain", self.config.wait_budget_gain)?;
+        w.end_obj()
+    }
+
     /// The `"feedback"` JSON block (schema: README.md).
     pub fn feedback_json(&self) -> Json {
         let num = Json::Num;
@@ -423,6 +444,112 @@ impl FleetReport {
         Json::Obj(root)
     }
 
+    /// Streaming twin of [`to_json`](Self::to_json) (DESIGN.md §15-3):
+    /// emits the identical report bytes through the allocation-free
+    /// [`JsonWriter`], so `--json-out` never materializes a `Json`
+    /// tree.  Keys are written in sorted order to mirror the
+    /// `BTreeMap`-backed `Display`; `tests/trace.rs` pins the byte
+    /// parity under every preset.
+    pub fn write_json<W: std::fmt::Write>(&self, w: &mut JsonWriter<'_, W>) -> std::fmt::Result {
+        w.begin_obj()?;
+        w.key("archetypes")?;
+        w.begin_arr()?;
+        for a in &self.per_archetype {
+            w.begin_obj()?;
+            w.field_str("archetype", a.archetype)?;
+            w.field_num("battery_end_mean", a.battery_end_mean)?;
+            w.field_num("cache_hits", a.cache_hits as f64)?;
+            w.field_num("cache_misses", a.cache_misses as f64)?;
+            w.field_num("devices", a.devices as f64)?;
+            w.field_num("energy_j", a.energy_j)?;
+            w.field_num("evolutions", a.evolutions as f64)?;
+            w.field_num("inferences", a.inferences as f64)?;
+            w.key("latency_ms")?;
+            write_latency_json(w, &a.latency)?;
+            w.field_num("shed", a.shed as f64)?;
+            w.end_obj()?;
+        }
+        w.end_arr()?;
+        w.key("cache")?;
+        w.begin_obj()?;
+        w.field_num("compiled", self.cache.entries as f64)?;
+        w.field_num("hit_rate", self.cache.hit_rate())?;
+        w.field_num("hits", self.cache.hits as f64)?;
+        w.field_num("misses", self.cache.misses as f64)?;
+        w.field_num("stale", self.cache.stale as f64)?;
+        w.end_obj()?;
+        if let Some(dispatch) = &self.dispatch {
+            w.key("dispatch")?;
+            dispatch.write_json(w)?;
+        }
+        if let Some(feedback) = &self.feedback {
+            w.key("feedback")?;
+            feedback.write_feedback_json(w)?;
+        }
+        w.key("fleet")?;
+        w.begin_obj()?;
+        w.field_num("devices", self.devices as f64)?;
+        w.field_num("duration_s", self.duration_s)?;
+        w.field_num("seed", self.seed as f64)?;
+        w.field_num("shards", self.shards as f64)?;
+        w.field_str("task", &self.task)?;
+        w.end_obj()?;
+        w.key("latency_ms")?;
+        write_latency_json(w, &self.latency)?;
+        if let Some(metrics) = &self.metrics {
+            w.key("metrics")?;
+            metrics.write_json(w)?;
+        }
+        if let Some(plan) = &self.plan {
+            w.key("plan_cache")?;
+            w.begin_obj()?;
+            w.field_num("hit_rate", plan.hit_rate())?;
+            w.field_num("hits", plan.hits as f64)?;
+            w.field_num("misses", plan.misses as f64)?;
+            w.field_num("plans", plan.entries as f64)?;
+            w.field_num("stale", plan.stale as f64)?;
+            w.end_obj()?;
+        }
+        w.key("search_us")?;
+        w.begin_obj()?;
+        w.field_num("p50_us", self.search_p50_us)?;
+        w.field_num("p99_us", self.search_p99_us)?;
+        w.end_obj()?;
+        if !self.series.is_empty() {
+            w.key("series")?;
+            write_series_json(&self.series, w)?;
+        }
+        if let Some(feedback) = &self.feedback {
+            w.key("telemetry")?;
+            feedback.write_telemetry_json(w)?;
+        }
+        w.key("totals")?;
+        w.begin_obj()?;
+        w.field_num("dropped", self.dropped as f64)?;
+        w.field_num("energy_j", self.energy_j)?;
+        w.field_num("evolutions", self.evolutions as f64)?;
+        w.field_num("inferences", self.inferences as f64)?;
+        w.field_num("shed", self.shed as f64)?;
+        w.field_num("wall_ms", self.wall_ms)?;
+        w.end_obj()?;
+        w.end_obj()
+    }
+
+    /// Stream the report (plus trailing newline) to `path` — the bench
+    /// binaries' `--json-out` without an intermediate tree.  Emits
+    /// exactly the bytes `self.to_json().write_to(path)` would.
+    pub fn write_json_to(&self, path: &str) -> anyhow::Result<()> {
+        use anyhow::Context;
+        let mut buf = String::new();
+        {
+            let mut w = JsonWriter::new(&mut buf);
+            self.write_json(&mut w).expect("writing to a String cannot fail");
+            debug_assert!(w.is_complete());
+        }
+        buf.push('\n');
+        std::fs::write(path, buf).with_context(|| format!("writing json {path}"))
+    }
+
     /// Per-archetype markdown table for the bench output.
     pub fn archetype_table(&self) -> Table {
         let mut t = Table::new(&[
@@ -454,4 +581,18 @@ fn latency_json(l: &LatencySummary) -> Json {
     m.insert("mean".into(), Json::Num(l.mean_ms));
     m.insert("max".into(), Json::Num(l.max_ms));
     Json::Obj(m)
+}
+
+/// Streaming twin of [`latency_json`] (sorted keys).
+fn write_latency_json<W: std::fmt::Write>(
+    w: &mut JsonWriter<'_, W>,
+    l: &LatencySummary,
+) -> std::fmt::Result {
+    w.begin_obj()?;
+    w.field_num("max", l.max_ms)?;
+    w.field_num("mean", l.mean_ms)?;
+    w.field_num("p50", l.p50_ms)?;
+    w.field_num("p95", l.p95_ms)?;
+    w.field_num("p99", l.p99_ms)?;
+    w.end_obj()
 }

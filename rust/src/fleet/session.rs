@@ -67,6 +67,12 @@ pub struct DeviceSession {
     sim: ContextSimulator,
     trigger: Trigger,
     events: Vec<Event>,
+    /// Exogenous `(t_seconds, joules)` battery drains from a replayed
+    /// trace (DESIGN.md §15), time-sorted; empty on synthetic runs and
+    /// on traces recorded from them, so replay stays bit-identical.
+    drains: Vec<(f64, f64)>,
+    /// Next pending entry in `drains`.
+    di: usize,
     energy_per_inference_j: f64,
     duration_s: f64,
     // Loop state, mirroring ServingLoop::run.
@@ -239,6 +245,8 @@ impl DeviceSession {
             sim,
             trigger: scenario.make_trigger(),
             events,
+            drains: Vec::new(),
+            di: 0,
             energy_per_inference_j,
             duration_s,
             t: 0.0,
@@ -273,6 +281,22 @@ impl DeviceSession {
     /// Arm audit buffering for the trace plane (§12-3).
     pub(crate) fn enable_trace(&mut self) {
         self.trace = true;
+    }
+
+    /// Replace the synthetic arrival stream with recorded trace events
+    /// (DESIGN.md §15): the session keeps its scenario-derived context
+    /// — battery, cache contention, trigger, sub-seeds — and only the
+    /// request arrivals (plus any exogenous battery drains) come from
+    /// the trace.  Must be called before the session steps or binds
+    /// streaming verdicts.
+    pub(crate) fn override_events(&mut self, events: Vec<Event>, drains: Vec<(f64, f64)>) {
+        debug_assert!(
+            self.t == 0.0 && self.ei == 0 && self.verdicts.is_none(),
+            "override_events must precede stepping and stage binding"
+        );
+        self.events = events;
+        self.drains = drains;
+        self.di = 0;
     }
 
     /// Drain the evolution audits buffered since the last call (empty
@@ -453,7 +477,8 @@ impl DeviceSession {
             .get(self.ei)
             .map(|e| e.t_seconds)
             .unwrap_or(f64::INFINITY);
-        next_event_t.min(self.next_check).min(self.duration_s)
+        let next_drain_t = self.drains.get(self.di).map(|d| d.0).unwrap_or(f64::INFINITY);
+        next_event_t.min(next_drain_t).min(self.next_check).min(self.duration_s)
     }
 
     /// Process one simulated instant — one iteration of the
@@ -468,10 +493,18 @@ impl DeviceSession {
             .get(self.ei)
             .map(|e| e.t_seconds)
             .unwrap_or(f64::INFINITY);
-        let t = next_event_t.min(self.next_check).min(self.duration_s);
+        let next_drain_t = self.drains.get(self.di).map(|d| d.0).unwrap_or(f64::INFINITY);
+        let t = next_event_t.min(next_drain_t).min(self.next_check).min(self.duration_s);
         self.t = t;
         self.sim.advance(t - self.last_t, 0.0);
         self.last_t = t;
+
+        // Exogenous battery drains from a replayed trace land before the
+        // context check so the trigger sees the post-drain battery.
+        while self.di < self.drains.len() && (t - self.drains[self.di].0).abs() < 1e-9 {
+            self.sim.advance(0.0, self.drains[self.di].1);
+            self.di += 1;
+        }
 
         if t >= self.next_check {
             let snap = self.sim.snapshot();

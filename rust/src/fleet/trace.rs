@@ -1,0 +1,922 @@
+//! Arrival-trace record/replay (DESIGN.md §15).
+//!
+//! Every fleet workload so far was synthetic: each device samples a
+//! thinned-Poisson event stream from its archetype's [`DayProfile`].
+//! This module makes the workload a first-class, replayable artifact —
+//! a versioned ndjson *arrival trace* that any run can record
+//! (`bench_fleet --record-trace PATH`) and any later run can replay
+//! (`bench_fleet --trace PATH`), feeding recorded events straight into
+//! the scheduler in place of `Scenario`-generated arrivals.  Replaying
+//! a trace recorded from a synthetic run reproduces the original
+//! [`crate::fleet::FleetReport`] bit-identically (`tests/trace.rs`).
+//!
+//! ## Schema (version 1)
+//!
+//! Line 1 is the meta record; every following line is one event, sorted
+//! by `(t_ms, device)`.  Keys are sorted within each line so the stream
+//! is byte-stable under the parse ∘ serialize round trip:
+//!
+//! ```text
+//! {"active_fraction":1,"devices":48,"duration_s":600,"kind":"meta",
+//!  "load_multiplier":1,"schema":1,"seed":4242,"task":"d3"}
+//! {"archetype":"edge-box","class":"social","device":4,"kind":"arrival","t_ms":1703.25}
+//! {"device":7,"drain_j":30,"kind":"battery","t_ms":300000}
+//! {"device":9,"kind":"silence","t_ms":0}
+//! ```
+//!
+//! * `arrival` — one inference request; `class` is the acoustic event
+//!   kind (`emergency` | `social`), `archetype` must match the round-
+//!   robin assignment for `device` (the archetype *is* a function of
+//!   the id — carrying it makes traces self-describing and lets the
+//!   loader cross-check).
+//! * `battery` — an exogenous battery drain of `drain_j` joules at
+//!   `t_ms` (the correlated-drain fixture; synthetic recordings never
+//!   emit these, so replay stays bit-identical).
+//! * `silence` — the device submits no arrivals from `t_ms` on; the
+//!   recorder emits one at t=0 for every device inactive under
+//!   `--active-fraction`, and the loader rejects later arrivals.
+//!
+//! ## The `t_ms` encoding
+//!
+//! Event times are simulated *seconds* as `f64`; multiplying by 1e3 and
+//! back through `f64` arithmetic is lossy (≈2% of random times in an
+//! 8-hour day fail `(x*1e3)/1e3 == x`), which would break bit-identical
+//! replay.  The recorder instead shifts the decimal point of the
+//! shortest-round-trip `Display` string three places right (a pure text
+//! transform — `f64` `Display` never uses exponent notation), and the
+//! loader shifts it back before parsing, so the decoded seconds are
+//! the original bits by construction.  This is why the line format
+//! flows through [`JsonWriter::field_num_raw`] and why the pull
+//! reader's [`JsonToken::Num`] exposes the raw token.
+//!
+//! ## Memory bound
+//!
+//! The loader is a single streaming pass over the file through one
+//! reused line buffer and the allocation-free pull reader
+//! ([`crate::util::json::ObjFields`]) — no `Json` tree per line, no
+//! per-event steady-state allocation beyond the destination event
+//! vectors themselves (the same `Vec<Event>` per device the synthetic
+//! path materializes).  Peak memory is O(events retained) + one line.
+
+use std::fmt::Write as _;
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::pool::FleetConfig;
+use super::scenarios::{Archetype, Scenario};
+use crate::context::events::{Event, EventKind};
+use crate::util::json::{JsonToken, JsonWriter, ObjFields};
+use crate::util::rng::Rng;
+
+/// Trace schema version this build reads and writes.
+pub const TRACE_SCHEMA: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// The t_ms decimal-shift codec
+// ---------------------------------------------------------------------------
+
+/// Encode seconds as a `t_ms` number token: shift the decimal point of
+/// the shortest-round-trip `Display` string three places right.  `disp`
+/// and `out` are caller-owned scratch buffers (cleared here) so the
+/// recorder's hot loop allocates nothing per event.
+fn seconds_to_ms_token(t: f64, disp: &mut String, out: &mut String) {
+    debug_assert!(t.is_finite() && t >= 0.0, "event times are non-negative seconds (got {t})");
+    disp.clear();
+    write!(disp, "{t}").expect("write! to String");
+    out.clear();
+    let (ip, fp) = disp.split_once('.').unwrap_or((disp.as_str(), ""));
+    let fb = fp.as_bytes();
+    let mut lead = true;
+    for c in ip
+        .chars()
+        .chain((0..3).map(|i| fb.get(i).map(|&b| b as char).unwrap_or('0')))
+    {
+        if lead && c == '0' {
+            continue;
+        }
+        lead = false;
+        out.push(c);
+    }
+    if lead {
+        out.push('0');
+    }
+    if fp.len() > 3 {
+        out.push('.');
+        out.push_str(&fp[3..]);
+    }
+}
+
+/// Decode a `t_ms` number token back to seconds: shift the decimal
+/// point three places left and parse.  Exact inverse of
+/// [`seconds_to_ms_token`] — the digits are untouched, only the point
+/// moves, so parsing recovers the original `f64` bits.
+fn ms_token_to_seconds(token: &str, buf: &mut String) -> Result<f64> {
+    if token.is_empty()
+        || token.starts_with('-')
+        || token.contains(['e', 'E'])
+        || !token.bytes().all(|b| b.is_ascii_digit() || b == b'.')
+    {
+        bail!("t_ms must be a plain non-negative decimal (got {token:?})");
+    }
+    let (ip, fp) = token.split_once('.').unwrap_or((token, ""));
+    if ip.is_empty() || fp.contains('.') {
+        bail!("malformed t_ms token {token:?}");
+    }
+    buf.clear();
+    if ip.len() > 3 {
+        buf.push_str(&ip[..ip.len() - 3]);
+        buf.push('.');
+        buf.push_str(&ip[ip.len() - 3..]);
+    } else {
+        buf.push_str("0.");
+        for _ in ip.len()..3 {
+            buf.push('0');
+        }
+        buf.push_str(ip);
+    }
+    buf.push_str(fp);
+    while buf.ends_with('0') {
+        buf.pop();
+    }
+    if buf.ends_with('.') {
+        buf.pop();
+    }
+    buf.parse().with_context(|| format!("t_ms token {token:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Meta + in-memory trace
+// ---------------------------------------------------------------------------
+
+/// The trace's self-describing header (line 1): everything needed to
+/// reconstruct the originating [`FleetConfig`]'s *workload identity* —
+/// the fields that determine per-device scenarios, sub-seeds, and
+/// activity draws.  Sharding/plan/feedback knobs are deliberately not
+/// part of the identity: the same trace replays under any of them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    pub devices: usize,
+    pub duration_s: f64,
+    pub seed: u64,
+    pub task: String,
+    pub load_multiplier: f64,
+    pub active_fraction: f64,
+}
+
+impl TraceMeta {
+    pub fn of(cfg: &FleetConfig) -> TraceMeta {
+        TraceMeta {
+            devices: cfg.devices,
+            duration_s: cfg.duration_s,
+            seed: cfg.seed,
+            task: cfg.task.clone(),
+            load_multiplier: cfg.load_multiplier,
+            active_fraction: cfg.active_fraction,
+        }
+    }
+
+    /// A [`FleetConfig`] for replaying this trace: identity fields from
+    /// the meta line, execution knobs (shards, stripes, plan, feedback)
+    /// from `base`.
+    pub fn to_fleet_config(&self, base: &FleetConfig) -> FleetConfig {
+        FleetConfig {
+            devices: self.devices,
+            duration_s: self.duration_s,
+            seed: self.seed,
+            task: self.task.clone(),
+            load_multiplier: self.load_multiplier,
+            active_fraction: self.active_fraction,
+            ..base.clone()
+        }
+    }
+}
+
+/// Per-device replay payload.
+#[derive(Debug, Clone, Default)]
+struct DeviceEvents {
+    events: Vec<Event>,
+    /// Exogenous `(t_seconds, joules)` battery drains, time-sorted.
+    drains: Vec<(f64, f64)>,
+}
+
+/// A fully loaded arrival trace, ready to feed the pipeline via
+/// [`crate::fleet::PipelineConfig::with_arrivals`].
+#[derive(Debug, Clone)]
+pub struct ArrivalTrace {
+    pub meta: TraceMeta,
+    per_device: Vec<DeviceEvents>,
+}
+
+impl ArrivalTrace {
+    pub fn events_for(&self, device: u64) -> &[Event] {
+        &self.per_device[device as usize].events
+    }
+
+    pub fn drains_for(&self, device: u64) -> &[(f64, f64)] {
+        &self.per_device[device as usize].drains
+    }
+
+    pub fn total_events(&self) -> usize {
+        self.per_device.iter().map(|d| d.events.len()).sum()
+    }
+
+    pub fn total_drains(&self) -> usize {
+        self.per_device.iter().map(|d| d.drains.len()).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recorder
+// ---------------------------------------------------------------------------
+
+/// Streaming ndjson emitter for trace lines: one reused line buffer
+/// through [`JsonWriter`], two scratch buffers for the t_ms codec.
+struct TraceSinkLine<W: Write> {
+    out: W,
+    line: String,
+    disp: String,
+    tok: String,
+}
+
+impl<W: Write> TraceSinkLine<W> {
+    fn new(out: W) -> TraceSinkLine<W> {
+        TraceSinkLine { out, line: String::new(), disp: String::new(), tok: String::new() }
+    }
+
+    fn flush_line(&mut self) -> Result<()> {
+        self.line.push('\n');
+        self.out.write_all(self.line.as_bytes()).context("writing trace line")?;
+        Ok(())
+    }
+
+    fn meta(&mut self, m: &TraceMeta) -> Result<()> {
+        self.line.clear();
+        let mut w = JsonWriter::new(&mut self.line);
+        w.begin_obj()?;
+        w.field_num("active_fraction", m.active_fraction)?;
+        w.field_num("devices", m.devices as f64)?;
+        w.field_num("duration_s", m.duration_s)?;
+        w.field_str("kind", "meta")?;
+        w.field_num("load_multiplier", m.load_multiplier)?;
+        w.field_num("schema", TRACE_SCHEMA as f64)?;
+        w.field_num("seed", m.seed as f64)?;
+        w.field_str("task", &m.task)?;
+        w.end_obj()?;
+        self.flush_line()
+    }
+
+    fn arrival(&mut self, t: f64, device: u64, kind: EventKind) -> Result<()> {
+        seconds_to_ms_token(t, &mut self.disp, &mut self.tok);
+        self.line.clear();
+        let mut w = JsonWriter::new(&mut self.line);
+        w.begin_obj()?;
+        w.field_str("archetype", Archetype::for_device(device).name())?;
+        w.field_str("class", class_name(kind))?;
+        w.field_num("device", device as f64)?;
+        w.field_str("kind", "arrival")?;
+        w.field_num_raw("t_ms", &self.tok)?;
+        w.end_obj()?;
+        self.flush_line()
+    }
+
+    fn battery(&mut self, t: f64, device: u64, drain_j: f64) -> Result<()> {
+        seconds_to_ms_token(t, &mut self.disp, &mut self.tok);
+        self.line.clear();
+        let mut w = JsonWriter::new(&mut self.line);
+        w.begin_obj()?;
+        w.field_num("device", device as f64)?;
+        w.field_num("drain_j", drain_j)?;
+        w.field_str("kind", "battery")?;
+        w.field_num_raw("t_ms", &self.tok)?;
+        w.end_obj()?;
+        self.flush_line()
+    }
+
+    fn silence(&mut self, t: f64, device: u64) -> Result<()> {
+        seconds_to_ms_token(t, &mut self.disp, &mut self.tok);
+        self.line.clear();
+        let mut w = JsonWriter::new(&mut self.line);
+        w.begin_obj()?;
+        w.field_num("device", device as f64)?;
+        w.field_str("kind", "silence")?;
+        w.field_num_raw("t_ms", &self.tok)?;
+        w.end_obj()?;
+        self.flush_line()
+    }
+}
+
+fn class_name(kind: EventKind) -> &'static str {
+    match kind {
+        EventKind::Emergency => "emergency",
+        EventKind::Social => "social",
+    }
+}
+
+fn class_parse(s: &str) -> Result<EventKind> {
+    match s {
+        "emergency" => Ok(EventKind::Emergency),
+        "social" => Ok(EventKind::Social),
+        _ => bail!("unknown event class {s:?} (expected emergency|social)"),
+    }
+}
+
+/// Record the synthetic arrival stream `cfg` would generate — the exact
+/// per-device thinned-Poisson samples the pipeline's sessions draw,
+/// regenerated from the fleet's deterministic sub-seeds — as a
+/// schema-v1 trace.  Returns the number of event lines written.
+pub fn record_trace<W: Write>(cfg: &FleetConfig, out: W) -> Result<usize> {
+    let mut sink = TraceSinkLine::new(out);
+    sink.meta(&TraceMeta::of(cfg))?;
+    // Silence lines first (all at t=0, device-ordered — consistent with
+    // the global (t, device) sort), then the merged arrival stream.
+    let mut merged: Vec<(f64, u64, EventKind)> = Vec::new();
+    for d in 0..cfg.devices as u64 {
+        if !Scenario::is_active(cfg.seed, d, cfg.active_fraction) {
+            sink.silence(0.0, d)?;
+            continue;
+        }
+        let scenario = cfg.scenario_for(d);
+        let events = scenario.trace(Scenario::trace_seed(cfg.seed, d)).sample(cfg.duration_s);
+        merged.extend(events.iter().map(|e| (e.t_seconds, d, e.kind)));
+    }
+    merged.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite event times").then(a.1.cmp(&b.1)));
+    let lines = merged.len();
+    for (t, d, kind) in merged {
+        sink.arrival(t, d, kind)?;
+    }
+    sink.out.flush().context("flushing trace")?;
+    Ok(lines)
+}
+
+/// [`record_trace`] to a buffered file.
+pub fn record_trace_to_file(cfg: &FleetConfig, path: &str) -> Result<usize> {
+    let file = std::fs::File::create(path).with_context(|| format!("creating trace {path}"))?;
+    record_trace(cfg, std::io::BufWriter::new(file))
+}
+
+/// [`record_trace`] into a string (tests, fixtures).
+pub fn record_trace_to_string(cfg: &FleetConfig) -> Result<String> {
+    let mut buf = Vec::new();
+    record_trace(cfg, &mut buf)?;
+    Ok(String::from_utf8(buf).expect("trace lines are UTF-8"))
+}
+
+// ---------------------------------------------------------------------------
+// Streaming loader
+// ---------------------------------------------------------------------------
+
+/// Incremental trace loader: feed it lines, then [`finish`].  One line
+/// at a time through the pull reader — no tree per line, errors carry
+/// the 1-based offending line number.
+///
+/// [`finish`]: TraceLoader::finish
+pub struct TraceLoader {
+    meta: Option<TraceMeta>,
+    per_device: Vec<DeviceEvents>,
+    /// Per-device silence start (arrivals at or after it are rejected).
+    silenced: Vec<Option<f64>>,
+    lineno: usize,
+    shift_buf: String,
+}
+
+/// One parsed event line, before validation against the meta.
+struct RawLine<'a> {
+    kind: Option<&'a str>,
+    t_raw: Option<&'a str>,
+    device: Option<f64>,
+    archetype: Option<&'a str>,
+    class: Option<&'a str>,
+    drain_j: Option<f64>,
+    // meta-only fields
+    schema: Option<f64>,
+    devices: Option<f64>,
+    duration_s: Option<f64>,
+    seed: Option<f64>,
+    task: Option<&'a str>,
+    load_multiplier: Option<f64>,
+    active_fraction: Option<f64>,
+    fields: usize,
+}
+
+impl Default for TraceLoader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceLoader {
+    pub fn new() -> TraceLoader {
+        TraceLoader {
+            meta: None,
+            per_device: Vec::new(),
+            silenced: Vec::new(),
+            lineno: 0,
+            shift_buf: String::new(),
+        }
+    }
+
+    /// Ingest the next line (without its newline).
+    pub fn push_line(&mut self, line: &str) -> Result<()> {
+        self.lineno += 1;
+        self.push_inner(line).with_context(|| format!("trace line {}", self.lineno))
+    }
+
+    fn push_inner(&mut self, line: &str) -> Result<()> {
+        if line.trim().is_empty() {
+            bail!("blank line");
+        }
+        let mut f = ObjFields::new(line)?;
+        let mut raw = RawLine {
+            kind: None,
+            t_raw: None,
+            device: None,
+            archetype: None,
+            class: None,
+            drain_j: None,
+            schema: None,
+            devices: None,
+            duration_s: None,
+            seed: None,
+            task: None,
+            load_multiplier: None,
+            active_fraction: None,
+            fields: 0,
+        };
+        while let Some((key, val)) = f.next_field()? {
+            raw.fields += 1;
+            match key {
+                "kind" => raw.kind = Some(expect_str(key, val)?),
+                "t_ms" => {
+                    raw.t_raw = Some(match val {
+                        JsonToken::Num { raw, .. } => raw,
+                        other => bail!("t_ms must be a number (got {other:?})"),
+                    })
+                }
+                "device" => raw.device = Some(expect_num(key, val)?),
+                "archetype" => raw.archetype = Some(expect_str(key, val)?),
+                "class" => raw.class = Some(expect_str(key, val)?),
+                "drain_j" => raw.drain_j = Some(expect_num(key, val)?),
+                "schema" => raw.schema = Some(expect_num(key, val)?),
+                "devices" => raw.devices = Some(expect_num(key, val)?),
+                "duration_s" => raw.duration_s = Some(expect_num(key, val)?),
+                "seed" => raw.seed = Some(expect_num(key, val)?),
+                "task" => raw.task = Some(expect_str(key, val)?),
+                "load_multiplier" => raw.load_multiplier = Some(expect_num(key, val)?),
+                "active_fraction" => raw.active_fraction = Some(expect_num(key, val)?),
+                other => bail!("unknown key {other:?}"),
+            }
+        }
+        match raw.kind {
+            Some("meta") => self.take_meta(raw),
+            Some("arrival") => self.take_arrival(raw),
+            Some("battery") => self.take_battery(raw),
+            Some("silence") => self.take_silence(raw),
+            Some(other) => bail!("unknown kind {other:?} (expected meta|arrival|battery|silence)"),
+            None => bail!("missing \"kind\""),
+        }
+    }
+
+    fn take_meta(&mut self, raw: RawLine<'_>) -> Result<()> {
+        if self.meta.is_some() {
+            bail!("duplicate meta line");
+        }
+        if self.lineno != 1 {
+            bail!("meta must be the first line");
+        }
+        let schema = req(raw.schema, "schema")? as u64;
+        if schema != TRACE_SCHEMA {
+            bail!("unsupported trace schema {schema} (this build reads {TRACE_SCHEMA})");
+        }
+        let devices = req(raw.devices, "devices")? as usize;
+        let duration_s = req(raw.duration_s, "duration_s")?;
+        if !(duration_s > 0.0 && duration_s.is_finite()) {
+            bail!("duration_s must be positive and finite (got {duration_s})");
+        }
+        let meta = TraceMeta {
+            devices,
+            duration_s,
+            seed: req(raw.seed, "seed")? as u64,
+            task: req(raw.task, "task")?.to_string(),
+            load_multiplier: req(raw.load_multiplier, "load_multiplier")?,
+            active_fraction: req(raw.active_fraction, "active_fraction")?,
+        };
+        if raw.fields != 8 {
+            bail!("meta line carries {} keys, expected 8", raw.fields);
+        }
+        self.per_device = vec![DeviceEvents::default(); devices];
+        self.silenced = vec![None; devices];
+        self.meta = Some(meta);
+        Ok(())
+    }
+
+    fn event_prelude(&mut self, raw: &RawLine<'_>) -> Result<(u64, f64)> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow!("event before meta line"))?;
+        let device = req(raw.device, "device")?;
+        if device < 0.0 || device.fract() != 0.0 {
+            bail!("device must be a non-negative integer (got {device})");
+        }
+        let device = device as u64;
+        if device as usize >= meta.devices {
+            bail!("device {device} out of range (meta declares {} devices)", meta.devices);
+        }
+        let t = ms_token_to_seconds(req(raw.t_raw, "t_ms")?, &mut self.shift_buf)?;
+        if t >= meta.duration_s {
+            bail!("t={t}s is at or past duration_s={}", meta.duration_s);
+        }
+        Ok((device, t))
+    }
+
+    fn take_arrival(&mut self, raw: RawLine<'_>) -> Result<()> {
+        let (device, t) = self.event_prelude(&raw)?;
+        let archetype = req(raw.archetype, "archetype")?;
+        let expect = Archetype::for_device(device).name();
+        if archetype != expect {
+            bail!("device {device} is archetype {expect:?}, line says {archetype:?}");
+        }
+        let kind = class_parse(req(raw.class, "class")?)?;
+        if raw.fields != 5 {
+            bail!("arrival line carries {} keys, expected 5", raw.fields);
+        }
+        if let Some(since) = self.silenced[device as usize] {
+            if t >= since {
+                bail!("arrival at t={t}s for device {device} silenced since t={since}s");
+            }
+        }
+        let dev = &mut self.per_device[device as usize];
+        if let Some(last) = dev.events.last() {
+            if t < last.t_seconds {
+                bail!(
+                    "arrivals for device {device} out of order (t={t}s after t={}s)",
+                    last.t_seconds
+                );
+            }
+        }
+        dev.events.push(Event { t_seconds: t, kind });
+        Ok(())
+    }
+
+    fn take_battery(&mut self, raw: RawLine<'_>) -> Result<()> {
+        let (device, t) = self.event_prelude(&raw)?;
+        let drain_j = req(raw.drain_j, "drain_j")?;
+        if !(drain_j >= 0.0 && drain_j.is_finite()) {
+            bail!("drain_j must be non-negative and finite (got {drain_j})");
+        }
+        if raw.fields != 4 {
+            bail!("battery line carries {} keys, expected 4", raw.fields);
+        }
+        let dev = &mut self.per_device[device as usize];
+        if let Some(&(last, _)) = dev.drains.last() {
+            if t < last {
+                bail!("battery drains for device {device} out of order (t={t}s after t={last}s)");
+            }
+        }
+        dev.drains.push((t, drain_j));
+        Ok(())
+    }
+
+    fn take_silence(&mut self, raw: RawLine<'_>) -> Result<()> {
+        let (device, t) = self.event_prelude(&raw)?;
+        if raw.fields != 3 {
+            bail!("silence line carries {} keys, expected 3", raw.fields);
+        }
+        if let Some(e) = self.per_device[device as usize].events.last() {
+            if e.t_seconds >= t {
+                bail!("silence at t={t}s for device {device} after arrival at t={}s", e.t_seconds);
+            }
+        }
+        self.silenced[device as usize] = Some(t);
+        Ok(())
+    }
+
+    /// Validate completeness and hand back the loaded trace.
+    pub fn finish(self) -> Result<ArrivalTrace> {
+        let meta = self.meta.ok_or_else(|| anyhow!("empty trace (no meta line)"))?;
+        Ok(ArrivalTrace { meta, per_device: self.per_device })
+    }
+}
+
+fn expect_str<'a>(key: &str, val: JsonToken<'a>) -> Result<&'a str> {
+    match val {
+        JsonToken::Str { raw, escaped: false } => Ok(raw),
+        JsonToken::Str { escaped: true, .. } => {
+            bail!("{key}: escaped strings unsupported in trace lines")
+        }
+        other => bail!("{key} must be a string (got {other:?})"),
+    }
+}
+
+fn expect_num(key: &str, val: JsonToken<'_>) -> Result<f64> {
+    match val {
+        JsonToken::Num { val, .. } => Ok(val),
+        other => bail!("{key} must be a number (got {other:?})"),
+    }
+}
+
+fn req<T>(v: Option<T>, key: &str) -> Result<T> {
+    v.ok_or_else(|| anyhow!("missing \"{key}\""))
+}
+
+/// Parse a whole trace held in memory (tests, fixtures).
+pub fn parse_trace(text: &str) -> Result<ArrivalTrace> {
+    let mut loader = TraceLoader::new();
+    for line in text.lines() {
+        loader.push_line(line)?;
+    }
+    loader.finish()
+}
+
+/// Load a trace file in one streaming pass — one reused line buffer,
+/// no per-line tree (the §15 memory bound).
+pub fn load_trace(path: &str) -> Result<ArrivalTrace> {
+    let file = std::fs::File::open(path).with_context(|| format!("opening trace {path}"))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut loader = TraceLoader::new();
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        let n = reader.read_line(&mut buf).with_context(|| format!("reading trace {path}"))?;
+        if n == 0 {
+            break;
+        }
+        loader.push_line(buf.trim_end_matches(['\n', '\r']))?;
+    }
+    loader.finish().with_context(|| format!("loading trace {path}"))
+}
+
+// ---------------------------------------------------------------------------
+// Committed fixtures (rust/fixtures/*.ndjson)
+// ---------------------------------------------------------------------------
+
+/// Names of the committed fixture traces (`rust/fixtures/*.ndjson`),
+/// generated by [`generate_fixture`] and validated in `tests/trace.rs`
+/// (clean load, matching meta, exact event/drain counts; full
+/// stream equality runs under `cargo test -- --ignored`).
+pub const FIXTURES: [&str; 3] = ["flash_crowd", "regional_wave", "battery_drain"];
+
+/// Deterministically generate a named fixture trace.  Each models a
+/// correlated arrival pattern the synthetic diurnal profiles cannot
+/// produce — the workloads AdaEvo/LegoDNN-style fleets actually see:
+///
+/// * `flash_crowd` — a steady trickle across 48 devices, then every
+///   device bursts inside the same 30-second window (the viral-moment
+///   shape that stresses admission + batching at once).
+/// * `regional_wave` — three 16-device regions surge one after another
+///   (a rolling geographic wave; shard-local load moves over time).
+/// * `battery_drain` — moderate arrivals over 24 devices plus three
+///   fleet-wide exogenous battery-drain pulses (`battery` events), the
+///   correlated λ2-pressure scenario.
+pub fn generate_fixture(name: &str) -> Result<String> {
+    let (meta, events) = match name {
+        "flash_crowd" => fixture_flash_crowd(),
+        "regional_wave" => fixture_regional_wave(),
+        "battery_drain" => fixture_battery_drain(),
+        _ => bail!("unknown fixture {name:?} (expected one of {FIXTURES:?})"),
+    };
+    write_fixture(meta, events)
+}
+
+/// A raw fixture event before sorting/serialization.
+enum FixEvent {
+    Arrival { t: f64, device: u64, kind: EventKind },
+    Battery { t: f64, device: u64, drain_j: f64 },
+}
+
+impl FixEvent {
+    fn t(&self) -> f64 {
+        match self {
+            FixEvent::Arrival { t, .. } | FixEvent::Battery { t, .. } => *t,
+        }
+    }
+
+    fn device(&self) -> u64 {
+        match self {
+            FixEvent::Arrival { device, .. } | FixEvent::Battery { device, .. } => *device,
+        }
+    }
+}
+
+fn write_fixture(meta: TraceMeta, mut events: Vec<FixEvent>) -> Result<String> {
+    events.sort_by(|a, b| {
+        a.t().partial_cmp(&b.t()).expect("finite fixture times").then(a.device().cmp(&b.device()))
+    });
+    let mut buf = Vec::new();
+    let mut sink = TraceSinkLine::new(&mut buf);
+    sink.meta(&meta)?;
+    for e in &events {
+        match *e {
+            FixEvent::Arrival { t, device, kind } => sink.arrival(t, device, kind)?,
+            FixEvent::Battery { t, device, drain_j } => sink.battery(t, device, drain_j)?,
+        }
+    }
+    Ok(String::from_utf8(buf).expect("trace lines are UTF-8"))
+}
+
+fn fixture_meta(devices: usize, duration_s: f64, seed: u64) -> TraceMeta {
+    TraceMeta {
+        devices,
+        duration_s,
+        seed,
+        task: "d3".to_string(),
+        load_multiplier: 1.0,
+        active_fraction: 1.0,
+    }
+}
+
+fn draw_class(rng: &mut Rng) -> EventKind {
+    if rng.chance(0.25) {
+        EventKind::Emergency
+    } else {
+        EventKind::Social
+    }
+}
+
+fn fixture_flash_crowd() -> (TraceMeta, Vec<FixEvent>) {
+    let (devices, duration) = (48u64, 600.0);
+    let mut rng = Rng::new(0xF1A5_4C20);
+    let mut events = Vec::new();
+    for d in 0..devices {
+        // Background trickle: ~8 arrivals over the run.
+        for _ in 0..8 {
+            let t = rng.range(0.0, duration);
+            events.push(FixEvent::Arrival { t, device: d, kind: draw_class(&mut rng) });
+        }
+        // The crowd: every device bursts in the same 30 s window.
+        for _ in 0..5 {
+            let t = rng.range(240.0, 270.0);
+            events.push(FixEvent::Arrival { t, device: d, kind: draw_class(&mut rng) });
+        }
+    }
+    (fixture_meta(devices as usize, duration, 0xF1A5), events)
+}
+
+fn fixture_regional_wave() -> (TraceMeta, Vec<FixEvent>) {
+    let (devices, duration) = (48u64, 900.0);
+    let mut rng = Rng::new(0x4E61_0A3E);
+    let mut events = Vec::new();
+    for d in 0..devices {
+        let region = d / 16;
+        let (w0, w1) = (region as f64 * 300.0, region as f64 * 300.0 + 120.0);
+        // Sparse background outside the wave.
+        for _ in 0..3 {
+            let t = rng.range(0.0, duration);
+            events.push(FixEvent::Arrival { t, device: d, kind: draw_class(&mut rng) });
+        }
+        // The region's surge window.
+        for _ in 0..12 {
+            let t = rng.range(w0, w1);
+            events.push(FixEvent::Arrival { t, device: d, kind: draw_class(&mut rng) });
+        }
+    }
+    (fixture_meta(devices as usize, duration, 0x4E61), events)
+}
+
+fn fixture_battery_drain() -> (TraceMeta, Vec<FixEvent>) {
+    let (devices, duration) = (24u64, 900.0);
+    let mut rng = Rng::new(0xBA77_E21);
+    let mut events = Vec::new();
+    for d in 0..devices {
+        for _ in 0..10 {
+            let t = rng.range(0.0, duration);
+            events.push(FixEvent::Arrival { t, device: d, kind: draw_class(&mut rng) });
+        }
+        // Three correlated fleet-wide drain pulses; magnitude varies by
+        // archetype so the per-archetype λ2 pressure differs.
+        for (i, pulse_t) in [300.0, 600.0, 840.0].into_iter().enumerate() {
+            let drain_j = 25.0 + 5.0 * Archetype::for_device(d).index() as f64 + i as f64;
+            events.push(FixEvent::Battery { t: pulse_t, device: d, drain_j });
+        }
+    }
+    (fixture_meta(devices as usize, duration, 0xBA77), events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_token_round_trips_bit_exactly() {
+        let mut rng = Rng::new(7);
+        let (mut disp, mut tok, mut back) = (String::new(), String::new(), String::new());
+        for _ in 0..5000 {
+            let t = rng.range(0.0, 8.0 * 3600.0);
+            seconds_to_ms_token(t, &mut disp, &mut tok);
+            let decoded = ms_token_to_seconds(&tok, &mut back).unwrap();
+            assert_eq!(decoded.to_bits(), t.to_bits(), "t={t} tok={tok}");
+        }
+        for t in [0.0, 0.5, 42.0, 0.0001234, 24242.251169493964, 28799.999] {
+            seconds_to_ms_token(t, &mut disp, &mut tok);
+            let decoded = ms_token_to_seconds(&tok, &mut back).unwrap();
+            assert_eq!(decoded.to_bits(), t.to_bits(), "t={t} tok={tok}");
+        }
+    }
+
+    #[test]
+    fn ms_token_examples_are_canonical() {
+        let (mut disp, mut tok) = (String::new(), String::new());
+        let cases = [
+            (0.0, "0"),
+            (0.5, "500"),
+            (42.0, "42000"),
+            (0.0001234, "0.1234"),
+            (123.4567, "123456.7"),
+        ];
+        for (t, want) in cases {
+            seconds_to_ms_token(t, &mut disp, &mut tok);
+            assert_eq!(tok, want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn ms_token_rejects_non_decimal() {
+        let mut buf = String::new();
+        for bad in ["-1", "1e3", "", ".", "1.2.3", "abc"] {
+            assert!(ms_token_to_seconds(bad, &mut buf).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn record_then_parse_reproduces_synthetic_events() {
+        let cfg = FleetConfig {
+            devices: 12,
+            duration_s: 0.2 * 3600.0,
+            active_fraction: 0.5,
+            ..FleetConfig::default()
+        };
+        let text = record_trace_to_string(&cfg).unwrap();
+        let trace = parse_trace(&text).unwrap();
+        assert_eq!(trace.meta, TraceMeta::of(&cfg));
+        for d in 0..cfg.devices as u64 {
+            let want = if Scenario::is_active(cfg.seed, d, cfg.active_fraction) {
+                cfg.scenario_for(d).trace(Scenario::trace_seed(cfg.seed, d)).sample(cfg.duration_s)
+            } else {
+                Vec::new()
+            };
+            let got = trace.events_for(d);
+            assert_eq!(got.len(), want.len(), "device {d}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.t_seconds.to_bits(), w.t_seconds.to_bits(), "device {d}");
+                assert_eq!(g.kind, w.kind, "device {d}");
+            }
+        }
+        assert_eq!(trace.total_drains(), 0, "synthetic recordings carry no battery events");
+    }
+
+    #[test]
+    fn loader_errors_carry_line_numbers() {
+        let cfg = FleetConfig { devices: 6, duration_s: 360.0, ..FleetConfig::default() };
+        let text = record_trace_to_string(&cfg).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() > 4, "need a few events to corrupt");
+
+        // Truncated mid-line.
+        let mut loader = TraceLoader::new();
+        loader.push_line(lines[0]).unwrap();
+        loader.push_line(lines[1]).unwrap();
+        let cut = &lines[2][..lines[2].len() / 2];
+        let err = format!("{:#}", loader.push_line(cut).unwrap_err());
+        assert!(err.contains("trace line 3"), "err={err}");
+
+        // Corrupt field value.
+        let mut loader = TraceLoader::new();
+        loader.push_line(lines[0]).unwrap();
+        let bad = lines[1].replace("\"kind\":\"arrival\"", "\"kind\":\"arival\"");
+        let err = format!("{:#}", loader.push_line(&bad).unwrap_err());
+        assert!(err.contains("trace line 2") && err.contains("arival"), "err={err}");
+
+        // Missing meta.
+        let err = format!("{:#}", parse_trace(lines[1]).unwrap_err());
+        assert!(err.contains("trace line 1") && err.contains("before meta"), "err={err}");
+
+        // Wrong archetype for the device id.
+        let mut loader = TraceLoader::new();
+        loader.push_line(lines[0]).unwrap();
+        let bad = lines[1].replacen('-', "X", 1);
+        assert!(loader.push_line(&bad).is_err());
+    }
+
+    #[test]
+    fn fixtures_generate_deterministically_and_load() {
+        for name in FIXTURES {
+            let a = generate_fixture(name).unwrap();
+            let b = generate_fixture(name).unwrap();
+            assert_eq!(a, b, "{name} generation must be deterministic");
+            let trace = parse_trace(&a).unwrap();
+            assert!(trace.total_events() > 100, "{name} is non-trivial");
+        }
+        assert!(generate_fixture("nope").is_err());
+    }
+
+    #[test]
+    fn silence_truncates_and_rejects_later_arrivals() {
+        let meta = r#"{"active_fraction":1,"devices":6,"duration_s":600,"kind":"meta","load_multiplier":1,"schema":1,"seed":1,"task":"d3"}"#;
+        let silence = r#"{"device":2,"kind":"silence","t_ms":100000}"#;
+        let arrival = r#"{"archetype":"office-hub","class":"social","device":2,"kind":"arrival","t_ms":200000}"#;
+        let err = parse_trace(&format!("{meta}\n{silence}\n{arrival}")).unwrap_err();
+        assert!(format!("{err:#}").contains("silenced since"), "{err:#}");
+        // An arrival before the silence point is fine.
+        let early = r#"{"archetype":"office-hub","class":"social","device":2,"kind":"arrival","t_ms":50000}"#;
+        let trace = parse_trace(&format!("{meta}\n{early}\n{silence}")).unwrap();
+        assert_eq!(trace.events_for(2).len(), 1);
+    }
+}

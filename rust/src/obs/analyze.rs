@@ -114,7 +114,10 @@ impl TraceAnalysis {
                 a.violations.push(format!("line {lineno}: blank line inside trace"));
                 continue;
             }
-            let ev = match TraceEvent::parse(line) {
+            // Pull-reader ingest (DESIGN.md §15-1): one allocation-free
+            // scan per line instead of a `Json` tree; `TraceEvent::parse`
+            // remains the schema oracle the decoder is pinned against.
+            let ev = match TraceEvent::parse_pull(line) {
                 Ok(ev) => ev,
                 Err(e) => {
                     a.violations.push(format!("line {lineno}: {e:#}"));

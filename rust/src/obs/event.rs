@@ -10,7 +10,7 @@ use std::fmt;
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::json::{Json, JsonWriter};
+use crate::util::json::{unescape_into, Json, JsonToken, JsonWriter, ObjFields};
 
 /// The five pipeline stages a window is attributed across (§11-2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -309,6 +309,195 @@ impl TraceEvent {
             other => bail!("unknown trace event kind {other:?}"),
         }
     }
+
+    /// Pull-reader twin of [`parse`](TraceEvent::parse) (DESIGN.md
+    /// §15-1): decode one ndjson line in a single [`ObjFields`] scan —
+    /// no `Json` tree, no per-line allocation beyond the rare escaped
+    /// string — with the same strict schema checks.  The tree decoder
+    /// stays the parity oracle (`tests::every_event_kind_round_trips`);
+    /// the §12 analyzer and `trace_tool` ingest through this one.
+    /// Deliberately stricter than the oracle on two degenerate shapes
+    /// the protocol never emits: duplicate keys and escaped object
+    /// keys are errors here, while the tree parser silently dedups.
+    pub fn parse_pull(line: &str) -> Result<TraceEvent> {
+        const MAX_FIELDS: usize = 16;
+        let mut fields: [(&str, Field); MAX_FIELDS] = [("", Field::Other); MAX_FIELDS];
+        let mut n = 0usize;
+        let mut scan = ObjFields::new(line).context("trace line is not valid JSON")?;
+        while let Some((k, tok)) = scan.next_field().context("trace line is not valid JSON")? {
+            if n == MAX_FIELDS {
+                bail!("trace line has more than {MAX_FIELDS} fields");
+            }
+            let v = match tok {
+                JsonToken::Num { val, .. } => Field::Num(val),
+                JsonToken::Str { raw, escaped } => Field::Str { raw, escaped },
+                _ => Field::Other,
+            };
+            fields[n] = (k, v);
+            n += 1;
+        }
+        let fields = &fields[..n];
+        let find = |k: &str| fields.iter().find(|(fk, _)| *fk == k).map(|&(_, v)| v);
+        let ev = match find("ev") {
+            Some(Field::Str { raw, escaped: false }) => raw,
+            Some(_) => bail!("\"ev\" discriminator is not a plain string"),
+            None => bail!("\"ev\" discriminator: key missing"),
+        };
+        let require = |keys: &[&'static str]| -> Result<()> {
+            if fields.len() != keys.len() || !keys.iter().all(|k| find(k).is_some()) {
+                let got: Vec<&str> = fields.iter().map(|&(k, _)| k).collect();
+                bail!("{ev} line has keys {got:?}, schema requires {keys:?}");
+            }
+            Ok(())
+        };
+        let num = |k: &'static str| -> Result<f64> { find(k).context(k)?.num(k) };
+        let int = |k: &'static str| -> Result<u64> { find(k).context(k)?.int(k) };
+        match ev {
+            "meta" => {
+                require(&[
+                    "devices",
+                    "duration_s",
+                    "ev",
+                    "ring_capacity",
+                    "seed",
+                    "shards",
+                    "task",
+                    "workers",
+                ])?;
+                let mut scratch = String::new();
+                let task = find("task").context("task")?.str_in("task", &mut scratch)?.to_string();
+                Ok(TraceEvent::Meta {
+                    task,
+                    devices: int("devices")?,
+                    shards: int("shards")?,
+                    workers: int("workers")?,
+                    duration_s: num("duration_s")?,
+                    seed: int("seed")?,
+                    ring_capacity: int("ring_capacity")?,
+                })
+            }
+            "span" => {
+                require(&["aux", "ev", "items", "shard", "stage", "t_s", "wall_us", "window"])?;
+                let mut scratch = String::new();
+                let stage_name = find("stage").context("stage")?.str_in("stage", &mut scratch)?;
+                let stage = Stage::from_name(stage_name)
+                    .with_context(|| format!("unknown stage {stage_name:?}"))?;
+                Ok(TraceEvent::Span(StageSpan {
+                    shard: int("shard")? as u32,
+                    window: int("window")?,
+                    t_s: num("t_s")?,
+                    stage,
+                    wall_us: num("wall_us")?,
+                    items: int("items")?,
+                    aux: int("aux")?,
+                }))
+            }
+            "audit" => {
+                require(&[
+                    "arm",
+                    "budget_base_ms",
+                    "budget_final_ms",
+                    "candidates",
+                    "device",
+                    "ev",
+                    "evolution_us",
+                    "lambda2_base",
+                    "lambda2_final",
+                    "load_band",
+                    "plan",
+                    "search_us",
+                    "t_s",
+                    "variant",
+                ])?;
+                let mut scratch = String::new();
+                let arm_name = find("arm").context("arm")?.str_in("arm", &mut scratch)?;
+                let arm = intern("arm", &KNOWN_ARMS, arm_name)?;
+                let plan_name = find("plan").context("plan")?.str_in("plan", &mut scratch)?;
+                let plan = intern("plan", &KNOWN_PLANS, plan_name)?;
+                Ok(TraceEvent::Audit(EvolutionAudit {
+                    device: int("device")?,
+                    t_s: num("t_s")?,
+                    arm,
+                    plan,
+                    candidates: int("candidates")?,
+                    load_band: int("load_band")? as u32,
+                    variant: int("variant")?,
+                    lambda2_base: num("lambda2_base")?,
+                    lambda2_final: num("lambda2_final")?,
+                    budget_base_ms: num("budget_base_ms")?,
+                    budget_final_ms: num("budget_final_ms")?,
+                    search_us: num("search_us")?,
+                    evolution_us: num("evolution_us")?,
+                }))
+            }
+            "anomaly" => {
+                require(&["ev", "kind", "shard", "t_s", "value", "window"])?;
+                let mut scratch = String::new();
+                let kind_name = find("kind").context("kind")?.str_in("kind", &mut scratch)?;
+                let kind = intern("anomaly kind", &KNOWN_ANOMALY_KINDS, kind_name)?;
+                Ok(TraceEvent::Anomaly {
+                    shard: int("shard")? as u32,
+                    window: int("window")?,
+                    t_s: num("t_s")?,
+                    kind,
+                    value: num("value")?,
+                })
+            }
+            "end" => {
+                require(&["anomalies", "audits", "ev", "evicted", "spans", "wall_ms"])?;
+                Ok(TraceEvent::End {
+                    wall_ms: num("wall_ms")?,
+                    spans: int("spans")?,
+                    audits: int("audits")?,
+                    anomalies: int("anomalies")?,
+                    evicted: int("evicted")?,
+                })
+            }
+            other => bail!("unknown trace event kind {other:?}"),
+        }
+    }
+}
+
+/// One scalar captured by [`TraceEvent::parse_pull`]'s field scan.
+#[derive(Clone, Copy)]
+enum Field<'a> {
+    Num(f64),
+    Str { raw: &'a str, escaped: bool },
+    /// bool / null — valid JSON, never valid in this protocol.
+    Other,
+}
+
+impl<'a> Field<'a> {
+    fn num(self, k: &str) -> Result<f64> {
+        match self {
+            Field::Num(n) => Ok(n),
+            _ => bail!("{k}: not a number"),
+        }
+    }
+
+    fn int(self, k: &str) -> Result<u64> {
+        let f = self.num(k)?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("{k}: not a non-negative integer: {f}");
+        }
+        Ok(f as u64)
+    }
+
+    /// Borrowed string payload; the rare escaped one decodes into
+    /// `scratch`.
+    fn str_in<'s>(self, k: &str, scratch: &'s mut String) -> Result<&'s str>
+    where
+        'a: 's,
+    {
+        match self {
+            Field::Str { raw, escaped: false } => Ok(raw),
+            Field::Str { raw, escaped: true } => {
+                unescape_into(raw, scratch)?;
+                Ok(scratch.as_str())
+            }
+            _ => bail!("{k}: not a string"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -370,30 +559,33 @@ mod tests {
             // byte-exact (the CI schema-sanity re-parse relies on parse
             // succeeding; this pins the stronger property).
             assert_eq!(parsed.to_string(), line);
-            // The typed decoder inverts the encoder exactly.
+            // The typed decoder inverts the encoder exactly, and the
+            // pull-reader decoder agrees with the tree oracle.
             assert_eq!(&TraceEvent::parse(&line).unwrap(), ev);
+            assert_eq!(&TraceEvent::parse_pull(&line).unwrap(), ev);
         }
     }
 
     #[test]
     fn parse_rejects_schema_violations() {
-        // Unknown event kind.
-        assert!(TraceEvent::parse(r#"{"ev":"bogus"}"#).is_err());
-        // Missing field (span without wall_us).
-        let line = r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"execution","t_s":0,"window":0}"#;
-        assert!(TraceEvent::parse(line).is_err());
-        // Extra field.
-        let line = r#"{"anomalies":0,"audits":0,"ev":"end","evicted":0,"extra":1,"spans":0,"wall_ms":1}"#;
-        assert!(TraceEvent::parse(line).is_err());
-        // Out-of-vocabulary stage / arm / anomaly kind.
-        let line = r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"warp","t_s":0,"wall_us":1,"window":0}"#;
-        assert!(TraceEvent::parse(line).is_err());
-        let line = r#"{"ev":"anomaly","kind":"gremlin","shard":0,"t_s":0,"value":1,"window":0}"#;
-        assert!(TraceEvent::parse(line).is_err());
-        // Wrong type (string where number is due).
-        let line = r#"{"anomalies":0,"audits":0,"ev":"end","evicted":"no","spans":0,"wall_ms":1}"#;
-        assert!(TraceEvent::parse(line).is_err());
-        assert!(TraceEvent::parse("not json").is_err());
+        let bad = [
+            // Unknown event kind.
+            r#"{"ev":"bogus"}"#,
+            // Missing field (span without wall_us).
+            r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"execution","t_s":0,"window":0}"#,
+            // Extra field.
+            r#"{"anomalies":0,"audits":0,"ev":"end","evicted":0,"extra":1,"spans":0,"wall_ms":1}"#,
+            // Out-of-vocabulary stage / anomaly kind.
+            r#"{"aux":0,"ev":"span","items":1,"shard":0,"stage":"warp","t_s":0,"wall_us":1,"window":0}"#,
+            r#"{"ev":"anomaly","kind":"gremlin","shard":0,"t_s":0,"value":1,"window":0}"#,
+            // Wrong type (string where number is due).
+            r#"{"anomalies":0,"audits":0,"ev":"end","evicted":"no","spans":0,"wall_ms":1}"#,
+            "not json",
+        ];
+        for line in bad {
+            assert!(TraceEvent::parse(line).is_err(), "tree accepted {line:?}");
+            assert!(TraceEvent::parse_pull(line).is_err(), "pull accepted {line:?}");
+        }
     }
 
     #[test]

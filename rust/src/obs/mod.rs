@@ -30,7 +30,10 @@ pub mod metrics;
 pub mod recorder;
 
 pub use analyze::TraceAnalysis;
-pub use event::{EvolutionAudit, Stage, StageSpan, TraceEvent, ALL_STAGES};
+pub use event::{
+    EvolutionAudit, Stage, StageSpan, TraceEvent, ALL_STAGES, KNOWN_ANOMALY_KINDS, KNOWN_ARMS,
+    KNOWN_PLANS,
+};
 pub use metrics::{Histogram, MetricsRegistry, WindowMetric, RELATIVE_ERROR_BOUND};
 pub use recorder::{FlightRecorder, ShardTracer, TraceSink};
 

@@ -9,7 +9,7 @@
 //! exactly as before, and `--csv` / `--json-out` behave identically
 //! across every bin.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::coordinator::manifest::Manifest;
 use crate::metrics::Table;
@@ -81,6 +81,32 @@ impl Bench {
     pub fn emit_json(&self, label: &str, json: &Json) -> Result<()> {
         println!("{label} JSON:\n{json}");
         write_json_out(&self.args, json)
+    }
+
+    /// Streamed counterpart of [`emit_json`](Self::emit_json): `body` is
+    /// a complete JSON document already serialized with sorted keys
+    /// (e.g. by [`crate::fleet::FleetReport::write_json`]), printed and
+    /// written to `--json-out` without ever building a `Json` tree.
+    pub fn emit_json_str(&self, label: &str, body: &str) -> Result<()> {
+        println!("{label} JSON:\n{body}");
+        if let Some(path) = self.args.get("json-out") {
+            std::fs::write(path, format!("{body}\n"))
+                .with_context(|| format!("writing json {path}"))?;
+            eprintln!("wrote JSON report to {path}");
+        }
+        Ok(())
+    }
+
+    /// Parse the shared `--scheduler windowed|event` flag (DESIGN.md
+    /// §14) — `None` when absent, a usage error on anything else.
+    pub fn scheduler(&self) -> Result<Option<crate::fleet::SchedulerMode>> {
+        match self.args.get("scheduler") {
+            Some(s) => match crate::fleet::SchedulerMode::parse(s) {
+                Some(m) => Ok(Some(m)),
+                None => Err(anyhow::anyhow!("unknown --scheduler {s:?} (expected windowed|event)")),
+            },
+            None => Ok(None),
+        }
     }
 
     /// `preferred` task if the manifest has it, else the first task by

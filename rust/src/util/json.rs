@@ -538,6 +538,24 @@ impl<'w, W: fmt::Write> JsonWriter<'w, W> {
         write!(self.out, "{v}")
     }
 
+    /// Emit a pre-formatted JSON number token verbatim.  The trace
+    /// recorder's `t_ms` decimal-shift encoding (DESIGN.md §15) writes
+    /// tokens whose round-trip through `f64` arithmetic would lose the
+    /// original seconds bits, so they bypass [`write_num`].
+    pub fn num_raw(&mut self, token: &str) -> fmt::Result {
+        debug_assert!(
+            token.parse::<f64>().is_ok(),
+            "num_raw: invalid number token {token:?}"
+        );
+        self.value_prefix()?;
+        write!(self.out, "{token}")
+    }
+
+    pub fn field_num_raw(&mut self, k: &str, token: &str) -> fmt::Result {
+        self.key(k)?;
+        self.num_raw(token)
+    }
+
     // -- object-member conveniences ---------------------------------------
 
     pub fn field_num(&mut self, k: &str, n: f64) -> fmt::Result {
@@ -558,6 +576,401 @@ impl<'w, W: fmt::Write> JsonWriter<'w, W> {
     /// Balanced-document check for emitters that want a final assert.
     pub fn is_complete(&self) -> bool {
         self.depth == 0 && !self.pending_key
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pull reader (DESIGN.md §15-1)
+// ---------------------------------------------------------------------------
+
+/// One token from [`PullParser`]: container brackets, object keys, and
+/// scalar values.  String and number payloads borrow the input — the
+/// reader itself allocates nothing, which is what lets the ndjson
+/// ingest paths (the §12 trace analyzer, the §15 arrival-trace
+/// replayer) run one reused line buffer instead of a `Json` tree per
+/// line.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JsonToken<'a> {
+    BeginObj,
+    EndObj,
+    BeginArr,
+    EndArr,
+    /// Object member key.  `raw` is the slice between the quotes with
+    /// escapes still encoded; `escaped` says whether any are present
+    /// (decode the rare escaped case with [`unescape_into`]).
+    Key { raw: &'a str, escaped: bool },
+    Str { raw: &'a str, escaped: bool },
+    /// `raw` is the exact number token (the trace replayer's
+    /// decimal-shift decode needs the unparsed digits); `val` is its
+    /// parsed value, identical to what [`Json::parse`] would store.
+    Num { raw: &'a str, val: f64 },
+    Bool(bool),
+    Null,
+    /// End of document (trailing whitespace consumed, nothing after).
+    End,
+}
+
+/// Allocation-free pull parser over the same grammar [`Json::parse`]
+/// accepts — the tree parser stays as the parity oracle
+/// (`tests::pull_matches_tree_*`).  Structure is validated with the
+/// same two-bitmap scheme [`JsonWriter`] uses in reverse, so nesting
+/// past [`MAX_DEPTH`] is an error rather than unbounded state.
+pub struct PullParser<'a> {
+    text: &'a str,
+    pos: usize,
+    /// Bit `d` set ⇒ the container at depth `d` is an object.
+    obj_bits: u64,
+    /// Bit `d` set ⇒ the container at depth `d` already has an element.
+    elem_bits: u64,
+    depth: usize,
+    /// A key + colon was just consumed; the next token must be a value.
+    expect_value: bool,
+    /// The single top-level value has been fully consumed.
+    done: bool,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(text: &'a str) -> PullParser<'a> {
+        PullParser {
+            text,
+            pos: 0,
+            obj_bits: 0,
+            elem_bits: 0,
+            depth: 0,
+            expect_value: false,
+            done: false,
+        }
+    }
+
+    /// Byte offset of the parse cursor (for caller error context).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn bytes(&self) -> &'a [u8] {
+        self.text.as_bytes()
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes().get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes().get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<()> {
+        if self.depth >= MAX_DEPTH {
+            bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos);
+        }
+        let bit = 1u64 << self.depth;
+        if is_obj {
+            self.obj_bits |= bit;
+        } else {
+            self.obj_bits &= !bit;
+        }
+        self.elem_bits &= !bit;
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn pop(&mut self) {
+        self.depth -= 1;
+        if self.depth == 0 {
+            self.done = true;
+        }
+    }
+
+    /// Pull the next token.  After [`JsonToken::End`] every further
+    /// call keeps returning `End`.
+    pub fn next_token(&mut self) -> Result<JsonToken<'a>> {
+        self.skip_ws();
+        if self.depth == 0 {
+            if self.done {
+                return if self.pos == self.bytes().len() {
+                    Ok(JsonToken::End)
+                } else {
+                    bail!("trailing garbage at byte {}", self.pos)
+                };
+            }
+            let tok = self.value_start()?;
+            if !matches!(tok, JsonToken::BeginObj | JsonToken::BeginArr) {
+                self.done = true;
+            }
+            return Ok(tok);
+        }
+        if self.expect_value {
+            self.expect_value = false;
+            return self.value_start();
+        }
+        let bit = 1u64 << (self.depth - 1);
+        let is_obj = self.obj_bits & bit != 0;
+        if self.elem_bits & bit != 0 {
+            // After a complete member/element: separator or closer.
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                    self.skip_ws();
+                }
+                Some(b'}') if is_obj => {
+                    self.pos += 1;
+                    self.pop();
+                    return Ok(JsonToken::EndObj);
+                }
+                Some(b']') if !is_obj => {
+                    self.pos += 1;
+                    self.pop();
+                    return Ok(JsonToken::EndArr);
+                }
+                _ => bail!(
+                    "expected ',' or '{}' at byte {}",
+                    if is_obj { '}' } else { ']' },
+                    self.pos
+                ),
+            }
+        } else {
+            // First member/element: an immediate closer means empty.
+            match self.peek() {
+                Some(b'}') if is_obj => {
+                    self.pos += 1;
+                    self.pop();
+                    return Ok(JsonToken::EndObj);
+                }
+                Some(b']') if !is_obj => {
+                    self.pos += 1;
+                    self.pop();
+                    return Ok(JsonToken::EndArr);
+                }
+                _ => {}
+            }
+        }
+        self.elem_bits |= bit;
+        if is_obj {
+            let (raw, escaped) = self.scan_string()?;
+            self.skip_ws();
+            if self.peek() != Some(b':') {
+                bail!("expected ':' at byte {}", self.pos);
+            }
+            self.pos += 1;
+            self.expect_value = true;
+            Ok(JsonToken::Key { raw, escaped })
+        } else {
+            self.value_start()
+        }
+    }
+
+    fn value_start(&mut self) -> Result<JsonToken<'a>> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => {
+                self.pos += 1;
+                self.push(true)?;
+                Ok(JsonToken::BeginObj)
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.push(false)?;
+                Ok(JsonToken::BeginArr)
+            }
+            Some(b'"') => {
+                let (raw, escaped) = self.scan_string()?;
+                Ok(JsonToken::Str { raw, escaped })
+            }
+            Some(b't') => self.lit("true", JsonToken::Bool(true)),
+            Some(b'f') => self.lit("false", JsonToken::Bool(false)),
+            Some(b'n') => self.lit("null", JsonToken::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.scan_number(),
+            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn lit(&mut self, s: &str, tok: JsonToken<'a>) -> Result<JsonToken<'a>> {
+        if self.bytes()[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(tok)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    /// Scan a quoted string, returning the raw slice between the
+    /// quotes.  Escape sequences are shape-checked here (known escape
+    /// char, 4 hex digits after `\u`) but decoded lazily by
+    /// [`unescape_into`]; quote and backslash are ASCII so byte
+    /// scanning stays on char boundaries of the input `&str`.
+    fn scan_string(&mut self) -> Result<(&'a str, bool)> {
+        if self.peek() != Some(b'"') {
+            bail!("expected '\"' at byte {}", self.pos);
+        }
+        self.pos += 1;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    let raw = &self.text[start..self.pos];
+                    self.pos += 1;
+                    return Ok((raw, escaped));
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {
+                            self.pos += 1;
+                        }
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes()
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| anyhow!("bad \\u escape"))?;
+                            if !hex.iter().all(|b| b.is_ascii_hexdigit()) {
+                                bail!("bad \\u escape at byte {}", self.pos);
+                            }
+                            self.pos += 5;
+                        }
+                        other => bail!("bad escape {:?}", other.map(|c| c as char)),
+                    }
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    fn scan_number(&mut self) -> Result<JsonToken<'a>> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let raw = &self.text[start..self.pos];
+        let val: f64 = raw.parse().with_context(|| format!("bad number at byte {start}"))?;
+        Ok(JsonToken::Num { raw, val })
+    }
+}
+
+/// Decode an escaped string payload (a `raw` slice from
+/// [`JsonToken::Str`] / [`JsonToken::Key`] with `escaped == true`)
+/// into `out`, which is cleared first.  Hot ndjson consumers only hit
+/// this on fields that can actually carry escapes (e.g. a trace meta
+/// task name), so the buffer amortizes to zero steady-state
+/// allocation.
+pub fn unescape_into(raw: &str, out: &mut String) -> Result<()> {
+    out.clear();
+    let bytes = raw.as_bytes();
+    let mut pos = 0;
+    while pos < bytes.len() {
+        if bytes[pos] != b'\\' {
+            let len = utf8_len(bytes[pos]);
+            let chunk =
+                raw.get(pos..pos + len).ok_or_else(|| anyhow!("truncated utf8 in string"))?;
+            out.push_str(chunk);
+            pos += len;
+            continue;
+        }
+        pos += 1;
+        match bytes.get(pos) {
+            Some(b'"') => out.push('"'),
+            Some(b'\\') => out.push('\\'),
+            Some(b'/') => out.push('/'),
+            Some(b'b') => out.push('\u{0008}'),
+            Some(b'f') => out.push('\u{000C}'),
+            Some(b'n') => out.push('\n'),
+            Some(b'r') => out.push('\r'),
+            Some(b't') => out.push('\t'),
+            Some(b'u') => {
+                let hex = bytes.get(pos + 1..pos + 5).ok_or_else(|| anyhow!("bad \\u escape"))?;
+                let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                let ch = if (0xD800..0xDC00).contains(&code) {
+                    let rest = &bytes[pos + 5..];
+                    if rest.starts_with(b"\\u") {
+                        let low = u32::from_str_radix(std::str::from_utf8(&rest[2..6])?, 16)?;
+                        pos += 6;
+                        char::from_u32(0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00))
+                    } else {
+                        None
+                    }
+                } else {
+                    char::from_u32(code)
+                };
+                out.push(ch.ok_or_else(|| anyhow!("bad codepoint"))?);
+                pos += 4;
+            }
+            other => bail!("bad escape {:?}", other.map(|&c| c as char)),
+        }
+        pos += 1;
+    }
+    Ok(())
+}
+
+/// Single-pass field iterator over a one-line flat JSON object — the
+/// shape every ndjson plane in this repo emits (§12 trace events, §15
+/// arrival traces).  Values must be scalars; a nested container is an
+/// error, which keeps per-line state to the parser cursor alone.
+pub struct ObjFields<'a> {
+    p: PullParser<'a>,
+    done: bool,
+}
+
+impl<'a> ObjFields<'a> {
+    pub fn new(line: &'a str) -> Result<ObjFields<'a>> {
+        let mut p = PullParser::new(line);
+        match p.next_token()? {
+            JsonToken::BeginObj => Ok(ObjFields { p, done: false }),
+            _ => bail!("line is not a JSON object"),
+        }
+    }
+
+    /// Next `(key, scalar value)` pair, or `None` once the closing
+    /// brace (and end of line — trailing garbage is an error) is
+    /// reached.
+    pub fn next_field(&mut self) -> Result<Option<(&'a str, JsonToken<'a>)>> {
+        if self.done {
+            return Ok(None);
+        }
+        match self.p.next_token()? {
+            JsonToken::EndObj => {
+                self.p.next_token()?; // End, or a trailing-garbage error
+                self.done = true;
+                Ok(None)
+            }
+            JsonToken::Key { raw, escaped } => {
+                if escaped {
+                    bail!("escaped object keys unsupported in ndjson lines");
+                }
+                match self.p.next_token()? {
+                    JsonToken::BeginObj | JsonToken::BeginArr => {
+                        bail!("nested containers unsupported in flat ndjson line (key {raw:?})")
+                    }
+                    v => Ok(Some((raw, v))),
+                }
+            }
+            _ => unreachable!("object member position yields Key or EndObj"),
+        }
     }
 }
 
@@ -679,5 +1092,164 @@ mod tests {
     fn write_to_error_names_path() {
         let err = Json::Null.write_to("/nonexistent-dir-zz/x.json").unwrap_err();
         assert!(format!("{err:#}").contains("/nonexistent-dir-zz/x.json"));
+    }
+
+    // -- pull reader -------------------------------------------------------
+
+    /// Rebuild a `Json` tree from pull tokens; the recursion mirrors
+    /// what callers would do and exercises every token kind.  Errors
+    /// propagate so the reject-parity test sees them as `Err`, not a
+    /// panic.
+    fn rebuild(p: &mut PullParser<'_>, tok: JsonToken<'_>) -> Result<Json> {
+        Ok(match tok {
+            JsonToken::Null => Json::Null,
+            JsonToken::Bool(b) => Json::Bool(b),
+            JsonToken::Num { val, .. } => Json::Num(val),
+            JsonToken::Str { raw, escaped } => {
+                if escaped {
+                    let mut s = String::new();
+                    unescape_into(raw, &mut s)?;
+                    Json::Str(s)
+                } else {
+                    Json::Str(raw.to_string())
+                }
+            }
+            JsonToken::BeginArr => {
+                let mut out = Vec::new();
+                loop {
+                    match p.next_token()? {
+                        JsonToken::EndArr => break Json::Arr(out),
+                        t => out.push(rebuild(p, t)?),
+                    }
+                }
+            }
+            JsonToken::BeginObj => {
+                let mut map = BTreeMap::new();
+                loop {
+                    match p.next_token()? {
+                        JsonToken::EndObj => break Json::Obj(map),
+                        JsonToken::Key { raw, escaped } => {
+                            let key = if escaped {
+                                let mut s = String::new();
+                                unescape_into(raw, &mut s)?;
+                                s
+                            } else {
+                                raw.to_string()
+                            };
+                            let t = p.next_token()?;
+                            map.insert(key, rebuild(p, t)?);
+                        }
+                        other => bail!("unexpected {other:?} in object"),
+                    }
+                }
+            }
+            other => bail!("unexpected {other:?}"),
+        })
+    }
+
+    fn pull_tree(text: &str) -> Result<Json> {
+        let mut p = PullParser::new(text);
+        let tok = p.next_token()?;
+        let v = rebuild(&mut p, tok)?;
+        match p.next_token()? {
+            JsonToken::End => Ok(v),
+            other => bail!("expected End, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pull_matches_tree_on_accepts() {
+        let docs = [
+            r#"{"version": 1, "fast": false,
+                "tasks": {"d3": {"accs": [0.95, 0.9], "shape": [32, 32, 1],
+                "title": "UbiSound µ-bench \"quoted\""}}}"#,
+            r#"[1,-2.5,1e3,-1.5E-3,0.125,true,false,null,"",{},[[]],"\u00b5\ud83d\ude00"]"#,
+            "42",
+            "\"plain\"",
+            " [ 1 , 2 ] ",
+            r#"{"archetype":"edge-box","class":"social","device":17,"kind":"arrival","t_ms":45050123.456}"#,
+        ];
+        for doc in docs {
+            let oracle = Json::parse(doc).unwrap();
+            let pulled = pull_tree(doc).unwrap();
+            assert_eq!(pulled, oracle, "doc={doc}");
+        }
+    }
+
+    #[test]
+    fn pull_matches_tree_on_rejects() {
+        let bad = [
+            "{",
+            "[1,]",
+            "{}x",
+            "\"unterminated",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "[1 2]",
+            "tru",
+            "{\"a\":\"\\q\"}",
+            "",
+        ];
+        for doc in bad {
+            assert!(Json::parse(doc).is_err(), "oracle accepted {doc:?}");
+            // Drive the pull parser to exhaustion; it must error too.
+            assert!(pull_tree(doc).is_err(), "pull accepted {doc:?}");
+        }
+    }
+
+    #[test]
+    fn pull_number_raw_token_is_exact() {
+        let mut p = PullParser::new(r#"{"t_ms":45050123.456789012}"#);
+        assert_eq!(p.next_token().unwrap(), JsonToken::BeginObj);
+        assert!(matches!(p.next_token().unwrap(), JsonToken::Key { raw: "t_ms", .. }));
+        match p.next_token().unwrap() {
+            JsonToken::Num { raw, val } => {
+                assert_eq!(raw, "45050123.456789012");
+                assert_eq!(val, 45050123.456789012);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn obj_fields_iterates_flat_line() {
+        let line = r#"{"a":1,"b":"x","c":true,"d":null}"#;
+        let mut f = ObjFields::new(line).unwrap();
+        let mut seen = Vec::new();
+        while let Some((k, v)) = f.next_field().unwrap() {
+            seen.push((k.to_string(), format!("{v:?}")));
+        }
+        assert_eq!(seen.len(), 4);
+        assert_eq!(seen[0].0, "a");
+        assert_eq!(seen[3].0, "d");
+        assert!(f.next_field().unwrap().is_none());
+    }
+
+    #[test]
+    fn obj_fields_rejects_nesting_and_trailing() {
+        let mut f = ObjFields::new(r#"{"a":{"b":1}}"#).unwrap();
+        assert!(f.next_field().is_err());
+        let mut f = ObjFields::new(r#"{"a":1} x"#).unwrap();
+        assert!(f.next_field().unwrap().is_some());
+        assert!(f.next_field().is_err());
+        assert!(ObjFields::new("[1]").is_err());
+    }
+
+    #[test]
+    fn writer_num_raw_emits_verbatim() {
+        let mut s = String::new();
+        let mut w = JsonWriter::new(&mut s);
+        w.begin_obj().unwrap();
+        w.field_num_raw("t_ms", "45050123.456789012345").unwrap();
+        w.end_obj().unwrap();
+        assert_eq!(s, r#"{"t_ms":45050123.456789012345}"#);
+    }
+
+    #[test]
+    fn unescape_handles_surrogate_pairs() {
+        let mut out = String::new();
+        unescape_into("a\\u00b5b\\ud83d\\ude00c\\n", &mut out).unwrap();
+        assert_eq!(out, "aµb😀c\n");
+        assert!(unescape_into("\\ud800x", &mut out).is_err());
     }
 }

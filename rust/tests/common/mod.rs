@@ -1,0 +1,92 @@
+//! Shared integration-test helpers.  Each `tests/*.rs` crate that wants
+//! them declares `mod common;` — the comparators live here once instead
+//! of drifting apart per file.
+#![allow(dead_code)] // each test crate uses its own subset
+
+use adaspring::fleet::FleetReport;
+use adaspring::util::json::Json;
+
+/// Bit-exact report equality over everything deterministic (wall-clock
+/// and per-worker busy times are the only excluded fields) — the
+/// comparator `tests/pipeline.rs` / `tests/scheduler.rs` /
+/// `tests/trace.rs` pin parity claims with.
+pub fn assert_reports_identical(a: &FleetReport, b: &FleetReport, label: &str) {
+    assert_eq!(a.inferences, b.inferences, "{label}: inferences");
+    assert_eq!(a.dropped, b.dropped, "{label}: dropped");
+    assert_eq!(a.shed, b.shed, "{label}: shed");
+    assert_eq!(a.evolutions, b.evolutions, "{label}: evolutions");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{label}: energy");
+    for (x, y, what) in [
+        (a.latency.p50_ms, b.latency.p50_ms, "p50"),
+        (a.latency.p95_ms, b.latency.p95_ms, "p95"),
+        (a.latency.p99_ms, b.latency.p99_ms, "p99"),
+        (a.latency.mean_ms, b.latency.mean_ms, "mean"),
+        (a.latency.max_ms, b.latency.max_ms, "max"),
+        (a.search_p50_us, b.search_p50_us, "search p50"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: latency {what}");
+    }
+    assert_eq!(a.per_archetype.len(), b.per_archetype.len(), "{label}: archetype rows");
+    for (x, y) in a.per_archetype.iter().zip(b.per_archetype.iter()) {
+        assert_eq!(x.archetype, y.archetype, "{label}");
+        assert_eq!(x.inferences, y.inferences, "{label}: {}", x.archetype);
+        assert_eq!(x.shed, y.shed, "{label}: {}", x.archetype);
+        assert_eq!(x.evolutions, y.evolutions, "{label}: {}", x.archetype);
+        assert_eq!(
+            x.battery_end_mean.to_bits(),
+            y.battery_end_mean.to_bits(),
+            "{label}: {}",
+            x.archetype
+        );
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{label}: {}", x.archetype);
+    }
+    match (&a.dispatch, &b.dispatch) {
+        (None, None) => {}
+        (Some(da), Some(db)) => {
+            assert_eq!(da.admission.submitted, db.admission.submitted, "{label}: submitted");
+            assert_eq!(da.admission.admitted, db.admission.admitted, "{label}: admitted");
+            assert_eq!(da.admission.depth_max, db.admission.depth_max, "{label}: depth");
+            assert_eq!(da.batches.histogram, db.batches.histogram, "{label}: histogram");
+            assert_eq!(da.batches.served, db.batches.served, "{label}: served");
+        }
+        _ => panic!("{label}: dispatch block presence differs"),
+    }
+    match (&a.feedback, &b.feedback) {
+        (None, None) => {}
+        (Some(fa), Some(fb)) => {
+            assert_eq!(fa.windows, fb.windows, "{label}: windows");
+            assert_eq!(
+                fa.telemetry.arrival_rate_per_s.to_bits(),
+                fb.telemetry.arrival_rate_per_s.to_bits(),
+                "{label}: telemetry arrival rate"
+            );
+            assert_eq!(
+                fa.telemetry.service_rate_per_s.to_bits(),
+                fb.telemetry.service_rate_per_s.to_bits(),
+                "{label}: telemetry service rate"
+            );
+            assert_eq!(
+                fa.telemetry.shed_rate.to_bits(),
+                fb.telemetry.shed_rate.to_bits(),
+                "{label}: telemetry shed rate"
+            );
+            assert_eq!(
+                fa.service_rate_prior_per_s.to_bits(),
+                fb.service_rate_prior_per_s.to_bits(),
+                "{label}: µ̂₀ prior"
+            );
+        }
+        _ => panic!("{label}: feedback block presence differs"),
+    }
+}
+
+/// Every number in a report must be finite — degenerate fleets may be
+/// empty but never NaN/inf.
+pub fn assert_finite_json(j: &Json) {
+    match j {
+        Json::Num(n) => assert!(n.is_finite(), "non-finite number in report JSON"),
+        Json::Arr(a) => a.iter().for_each(assert_finite_json),
+        Json::Obj(m) => m.values().for_each(assert_finite_json),
+        _ => {}
+    }
+}

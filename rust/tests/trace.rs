@@ -1,0 +1,205 @@
+//! Integration: the arrival-trace plane (DESIGN.md §15).
+//!
+//! * record → replay bit-parity — a trace recorded from a synthetic run
+//!   and replayed through `PipelineConfig::with_arrivals` produces a
+//!   report bit-identical to the synthetic run, across all three
+//!   presets and both schedulers (the tentpole acceptance gate);
+//! * committed fixtures (`rust/fixtures/*.ndjson`) load cleanly, match
+//!   the in-crate generators on meta and per-device shape, and replay
+//!   deterministically (full stream equality vs the generator runs
+//!   under `cargo test -- --ignored`);
+//! * streamed report emission — `FleetReport::write_json` is
+//!   byte-identical to the `to_json` tree across the presets, including
+//!   the dispatch / feedback / metrics / series blocks (the zero-tree
+//!   `--json-out` path's parity oracle).
+//!
+//! Everything runs without artifacts (synthetic manifest + modeled
+//! inference).
+
+mod common;
+
+use std::sync::Arc;
+
+use adaspring::coordinator::Manifest;
+use adaspring::dispatch::{BackpressurePolicy, DispatchConfig};
+use adaspring::fleet::{
+    generate_fixture, load_trace, parse_trace, record_trace_to_string, run_pipeline,
+    ArrivalTrace, FeedbackConfig, FleetConfig, FleetReport, PipelineConfig, SchedulerMode,
+    FIXTURES,
+};
+use adaspring::util::json::JsonWriter;
+
+use common::assert_reports_identical;
+
+fn fixture_path(name: &str) -> String {
+    format!("{}/fixtures/{name}.ndjson", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn test_fleet() -> FleetConfig {
+    FleetConfig {
+        devices: 10,
+        shards: 2,
+        duration_s: 0.2 * 3600.0,
+        seed: 33,
+        task: "d3".to_string(),
+        cache_stripes: 8,
+        load_multiplier: 300.0,
+        active_fraction: 0.5,
+        ..FleetConfig::default()
+    }
+}
+
+fn test_dispatch() -> DispatchConfig {
+    DispatchConfig {
+        queue_capacity: 4,
+        policy: BackpressurePolicy::ShedNewest,
+        batch_window_s: 0.25,
+        stealing: false,
+        ..DispatchConfig::default()
+    }
+}
+
+#[test]
+fn replay_is_bit_identical_across_presets_and_schedulers() {
+    // The §15 acceptance gate: replaying a trace recorded from a
+    // synthetic run must be indistinguishable from the run itself —
+    // the sessions keep their scenario-derived context (battery,
+    // network, motion) and only the event stream is substituted, so
+    // every downstream number matches to the bit.
+    let manifest = Manifest::synthetic();
+    let cfg = test_fleet();
+    let dcfg = test_dispatch();
+    let trace: Arc<ArrivalTrace> =
+        Arc::new(parse_trace(&record_trace_to_string(&cfg).unwrap()).unwrap());
+    assert!(trace.total_events() > 0, "recorded trace is non-trivial");
+
+    let fb_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..cfg.clone() };
+    let presets: Vec<(&str, PipelineConfig)> = vec![
+        ("direct", PipelineConfig::direct(&cfg)),
+        ("dispatch", PipelineConfig::dispatch(&cfg, &dcfg)),
+        ("feedback", PipelineConfig::feedback(&fb_cfg, &dcfg)),
+    ];
+    for (name, preset) in presets {
+        for scheduler in [SchedulerMode::Windowed, SchedulerMode::EventDriven] {
+            let label = format!("{name} [{}]", scheduler.name());
+            let mut synthetic = preset.clone();
+            synthetic.stages.scheduler = scheduler;
+            let mut replay = synthetic.clone();
+            replay.arrivals = Some(trace.clone());
+            let s = run_pipeline(&manifest, &synthetic)
+                .unwrap_or_else(|e| panic!("{label} [synthetic]: {e}"));
+            let r = run_pipeline(&manifest, &replay)
+                .unwrap_or_else(|e| panic!("{label} [replay]: {e}"));
+            assert!(s.inferences > 0, "{label}: synthetic run serves nothing");
+            assert_reports_identical(&s, &r, &label);
+        }
+    }
+}
+
+#[test]
+fn committed_fixtures_load_and_match_generator_shape() {
+    // The committed ndjson files and the in-crate generators must agree
+    // on the workload identity and per-device shape.  (Full per-event
+    // equality is the ignored test below — this one is the always-on
+    // structural gate.)
+    for name in FIXTURES {
+        let committed = std::fs::read_to_string(fixture_path(name))
+            .unwrap_or_else(|e| panic!("{name}: reading committed fixture: {e}"));
+        let c = parse_trace(&committed).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let g = parse_trace(&generate_fixture(name).unwrap()).unwrap();
+        assert_eq!(c.meta, g.meta, "{name}: meta");
+        assert_eq!(c.total_events(), g.total_events(), "{name}: event count");
+        assert_eq!(c.total_drains(), g.total_drains(), "{name}: drain count");
+        for d in 0..c.meta.devices as u64 {
+            assert_eq!(
+                c.events_for(d).len(),
+                g.events_for(d).len(),
+                "{name}: device {d} events"
+            );
+            assert_eq!(
+                c.drains_for(d).len(),
+                g.drains_for(d).len(),
+                "{name}: device {d} drains"
+            );
+        }
+        assert!(c.total_events() > 100, "{name} is non-trivial");
+    }
+}
+
+#[test]
+#[ignore = "full stream pin; the always-on gate checks meta + shape"]
+fn committed_fixtures_match_generator_exactly() {
+    for name in FIXTURES {
+        let c = parse_trace(&std::fs::read_to_string(fixture_path(name)).unwrap()).unwrap();
+        let g = parse_trace(&generate_fixture(name).unwrap()).unwrap();
+        for d in 0..c.meta.devices as u64 {
+            for (i, (ce, ge)) in c.events_for(d).iter().zip(g.events_for(d)).enumerate() {
+                assert_eq!(
+                    ce.t_seconds.to_bits(),
+                    ge.t_seconds.to_bits(),
+                    "{name}: device {d} event {i} time"
+                );
+                assert_eq!(ce.kind, ge.kind, "{name}: device {d} event {i} class");
+            }
+            for (i, (cd, gd)) in c.drains_for(d).iter().zip(g.drains_for(d)).enumerate() {
+                assert_eq!(cd.0.to_bits(), gd.0.to_bits(), "{name}: device {d} drain {i} t");
+                assert_eq!(cd.1.to_bits(), gd.1.to_bits(), "{name}: device {d} drain {i} J");
+            }
+        }
+    }
+}
+
+#[test]
+fn fixture_replay_is_deterministic_and_serves_arrivals() {
+    // End-to-end over a committed file: `load_trace` (the streaming
+    // file path), then two replays through the direct preset must agree
+    // bit-for-bit and actually serve the recorded arrivals.
+    let trace = Arc::new(load_trace(&fixture_path("flash_crowd")).unwrap());
+    assert_eq!(trace.meta.devices, 48);
+    let cfg = trace.meta.to_fleet_config(&FleetConfig::default());
+    let pcfg = PipelineConfig::direct(&cfg).with_arrivals(Some(trace.clone()));
+    let manifest = Manifest::synthetic();
+    let a = run_pipeline(&manifest, &pcfg).unwrap();
+    let b = run_pipeline(&manifest, &pcfg).unwrap();
+    assert!(a.inferences > 0, "replay serves the recorded arrivals");
+    assert_reports_identical(&a, &b, "fixture replay determinism");
+
+    // The battery-drain fixture carries exogenous drains; replaying it
+    // must consume them (more energy drawn than ignoring them would).
+    let bd = Arc::new(load_trace(&fixture_path("battery_drain")).unwrap());
+    assert!(bd.total_drains() > 0);
+    let bd_cfg = bd.meta.to_fleet_config(&FleetConfig::default());
+    let r = run_pipeline(&manifest, &PipelineConfig::direct(&bd_cfg).with_arrivals(Some(bd)))
+        .unwrap();
+    assert!(r.inferences > 0);
+}
+
+fn streamed_json(r: &FleetReport) -> String {
+    let mut buf = String::new();
+    let mut w = JsonWriter::new(&mut buf);
+    r.write_json(&mut w).unwrap();
+    assert!(w.is_complete());
+    buf
+}
+
+#[test]
+fn streamed_report_json_matches_tree_across_presets() {
+    // The zero-tree `--json-out` path (§15-3): `FleetReport::write_json`
+    // must emit the exact bytes `to_json().to_string()` does — the tree
+    // stays the oracle, the stream is what ships.
+    let manifest = Manifest::synthetic();
+    let cfg = test_fleet();
+    let dcfg = test_dispatch();
+    let fb_cfg = FleetConfig { feedback: FeedbackConfig::on(), ..cfg.clone() };
+    let cases: Vec<(&str, PipelineConfig)> = vec![
+        ("direct", PipelineConfig::direct(&cfg)),
+        // Metrics on: the report carries the metrics + series blocks.
+        ("direct+metrics", PipelineConfig::direct(&cfg).with_metrics(true)),
+        ("dispatch", PipelineConfig::dispatch(&cfg, &dcfg)),
+        ("feedback", PipelineConfig::feedback(&fb_cfg, &dcfg).with_metrics(true)),
+    ];
+    for (name, pcfg) in cases {
+        let r = run_pipeline(&manifest, &pcfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(streamed_json(&r), r.to_json().to_string(), "{name}: stream vs tree");
+    }
+}
