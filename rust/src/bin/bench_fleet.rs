@@ -599,6 +599,22 @@ fn print_summary(r: &FleetReport) {
         r.cache.misses,
         r.cache.hit_rate() * 100.0
     );
+    // Under --plan shared: how lookups resolved on the §16 read path —
+    // lock-free snapshot hits vs waiters coalesced onto an in-flight
+    // peer search (both are subsets of `hits`).
+    if let Some(p) = &r.plan {
+        println!(
+            "plan cache: {} plans, {} hits ({} lock-free, {} coalesced) / {} misses / \
+             {} stale (hit rate {:.1}%)\n",
+            p.entries,
+            p.hits,
+            p.lock_free_hits,
+            p.coalesced,
+            p.misses,
+            p.stale,
+            p.hit_rate() * 100.0
+        );
+    }
 }
 
 /// Fleet-size × shard-count sweep: the scaling table behind the fleet

@@ -13,11 +13,19 @@
 //! reporting the plan-cache hit rate and asserting per-device results
 //! are unchanged (`parity_with_banded`).
 //!
+//! Part 3 — plan-cache contention arm (`--threads N`): N workers over
+//! one shared `PlanCache`, measuring lock-free hit throughput under
+//! overlapping and disjoint signature mixes against a mutex-per-stripe
+//! model of the old read path, and proving singleflight caps duplicate
+//! searches at one per (signature, epoch).  `--check-plan-floor` gates
+//! on the committed `rust/plancache_floor.json`.
+//!
 //! Usage:
 //!   cargo run --release --bin bench_search -- [--iters 3] [--task d3]
 //!       [--manifest path] [--devices 36] [--shards 4] [--hours 1]
 //!       [--seed 42] [--full-eval] [--check-floor path]
-//!       [--json-out path] [--csv]
+//!       [--json-out path] [--csv] [--threads N]
+//!       [--plancache-json-out path] [--check-plan-floor path]
 //!
 //! Unknown flags are rejected with this usage.  `--json-out` writes the
 //! full JSON report (schema: README.md "Search bench schema") — CI emits
@@ -25,7 +33,10 @@
 //! incremental searches/sec drop more than 2× below the committed
 //! baseline floor (`rust/search_floor.json`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -33,8 +44,9 @@ use anyhow::Result;
 use adaspring::coordinator::accuracy::AccuracyModel;
 use adaspring::coordinator::costmodel::CostModel;
 use adaspring::coordinator::eval::{Constraints, Evaluator};
+use adaspring::coordinator::plancache::PlanEntry;
 use adaspring::coordinator::search::{Mutator, Runtime3C};
-use adaspring::coordinator::Manifest;
+use adaspring::coordinator::{Manifest, PlanCache, PlanSignature};
 use adaspring::fleet::{
     run_fleet, run_pipeline, FleetConfig, FleetReport, PipelineConfig, PlanMode,
 };
@@ -47,14 +59,15 @@ use adaspring::util::Bench;
 
 const ALLOWED: &[&str] = &[
     "iters", "task", "manifest", "devices", "shards", "hours", "seed", "full-eval",
-    "check-floor", "json-out", "csv",
+    "check-floor", "json-out", "csv", "threads", "plancache-json-out", "check-plan-floor",
 ];
 
 const BOOLEAN_FLAGS: &[&str] = &["full-eval", "csv"];
 
 const USAGE: &str = "usage: bench_search [--iters N] [--task NAME] [--manifest PATH] \
                      [--devices N] [--shards N] [--hours H] [--seed N] [--full-eval] \
-                     [--check-floor PATH] [--trace-out PATH] [--json-out PATH] [--csv]";
+                     [--check-floor PATH] [--trace-out PATH] [--json-out PATH] [--csv] \
+                     [--threads N] [--plancache-json-out PATH] [--check-plan-floor PATH]";
 
 /// Battery moments of the context grid (paper Fig. 8 band + low tail).
 const BATTERY_MOMENTS: [f64; 5] = [0.9, 0.7, 0.5, 0.3, 0.15];
@@ -178,14 +191,40 @@ fn main() -> Result<()> {
     // Part 2: fleet plan-cache sweep (Shared vs the Banded control).
     let plan_json = plan_sweep(args, manifest, &task_name, bench.trace_out())?;
 
+    // Part 3 (--threads N): plan-cache contention arm — N workers over a
+    // shared PlanCache, disjoint + overlapping signature mixes.
+    let contention = contention_arm(args, manifest, &task_name)?;
+
     let mut root = BTreeMap::new();
     root.insert("task".into(), Json::Str(task_name.clone()));
     root.insert("search".into(), Json::Obj(search_json));
     root.insert("plan_cache".into(), plan_json);
+    if let Some(c) = &contention {
+        root.insert("contention".into(), c.to_json());
+    }
     bench.emit_json("search", &Json::Obj(root))?;
+
+    if let Some(c) = &contention {
+        if let Some(path) = args.get("plancache-json-out") {
+            let mut doc = BTreeMap::new();
+            doc.insert("task".into(), Json::Str(task_name.clone()));
+            doc.insert("contention".into(), c.to_json());
+            std::fs::write(path, format!("{}\n", Json::Obj(doc)))?;
+            eprintln!("wrote plan-cache contention report to {path}");
+        }
+    }
 
     if let Some(path) = args.get("check-floor") {
         check_floor(path, incremental.as_ref())?;
+    }
+    if let Some(path) = args.get("check-plan-floor") {
+        match &contention {
+            Some(c) => check_plan_floor(path, c)?,
+            None => {
+                eprintln!("--check-plan-floor requires --threads N");
+                std::process::exit(2);
+            }
+        }
     }
     Ok(())
 }
@@ -326,5 +365,300 @@ fn check_floor(path: &str, incremental: Option<&ModeStats>) -> Result<()> {
         "floor check ok: {observed:.0} searches/s vs floor {floor:.0}/s \
          (fails under {fail_under:.0}/s)"
     );
+    Ok(())
+}
+
+/// Plan-cache contention measurements (`--threads N`).
+struct ContentionStats {
+    threads: usize,
+    signatures: usize,
+    rounds: usize,
+    /// Warm hit throughput, every thread sweeping every signature.
+    overlapping_lookups_per_sec: f64,
+    /// Warm hit throughput, each thread on its own signature slice.
+    disjoint_lookups_per_sec: f64,
+    /// The same overlapping workload against the mutex-model baseline.
+    mutex_lookups_per_sec: f64,
+    builds: u64,
+    max_builds_per_signature: u64,
+    coalesced: u64,
+    lock_free_hits: u64,
+    hits: u64,
+}
+
+impl ContentionStats {
+    fn speedup_vs_mutex(&self) -> f64 {
+        self.overlapping_lookups_per_sec / self.mutex_lookups_per_sec.max(1e-9)
+    }
+
+    /// Fraction of the cold-phase lookups resolved by parking on another
+    /// worker's in-flight search.
+    fn coalesce_rate(&self) -> f64 {
+        let cold = (self.threads * self.signatures) as f64;
+        self.coalesced as f64 / cold.max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("threads".into(), Json::Num(self.threads as f64));
+        m.insert("signatures".into(), Json::Num(self.signatures as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert(
+            "overlapping_lookups_per_sec".into(),
+            Json::Num(self.overlapping_lookups_per_sec),
+        );
+        m.insert("disjoint_lookups_per_sec".into(), Json::Num(self.disjoint_lookups_per_sec));
+        m.insert("mutex_model_lookups_per_sec".into(), Json::Num(self.mutex_lookups_per_sec));
+        m.insert("speedup_vs_mutex".into(), Json::Num(self.speedup_vs_mutex()));
+        m.insert("builds".into(), Json::Num(self.builds as f64));
+        m.insert(
+            "max_builds_per_signature".into(),
+            Json::Num(self.max_builds_per_signature as f64),
+        );
+        m.insert("coalesced".into(), Json::Num(self.coalesced as f64));
+        m.insert("coalesce_rate".into(), Json::Num(self.coalesce_rate()));
+        m.insert("lock_free_hits".into(), Json::Num(self.lock_free_hits as f64));
+        m.insert("hits".into(), Json::Num(self.hits as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Stripe routing for the mutex-model baseline (the same default-hasher
+/// modulo the striped cache uses).
+fn stripe_of(sig: &PlanSignature, stripes: usize) -> usize {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    sig.hash(&mut h);
+    (h.finish() as usize) % stripes
+}
+
+/// `--threads N` contention arm: N workers over one shared [`PlanCache`].
+///
+/// Phase 1 races every worker over every signature on a cold cache — the
+/// overlapping miss mix, where singleflight must cap builds at one per
+/// (signature, epoch).  Phases 2–3 measure warm hit throughput under the
+/// overlapping and disjoint signature mixes (steady-state hits are
+/// lock-free snapshot reads, DESIGN.md §16).  Phase 4 replays the warm
+/// overlapping workload against a mutex-per-stripe model of the PR 3
+/// read path — stripe lock held across the map read — which is the
+/// baseline the committed floor's speedup gate compares against.
+fn contention_arm(
+    args: &Args,
+    manifest: &Manifest,
+    task_name: &str,
+) -> Result<Option<ContentionStats>> {
+    let threads = args.get_usize("threads", 0);
+    if threads == 0 {
+        return Ok(None);
+    }
+    const SIGNATURES: usize = 64;
+    const ROUNDS: usize = 300;
+    const STRIPES: usize = 16;
+
+    let task = manifest.task(task_name)?.clone();
+    let cm = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+    let evaluator = Evaluator::new(cm, AccuracyModel::fit(&task), &Platform::raspberry_pi_4b());
+    let searcher = Runtime3C::new(Mutator::from_task(&task));
+
+    let cache = PlanCache::new(STRIPES);
+    let q = *cache.quantizer();
+    let sigs: Vec<PlanSignature> = (0..SIGNATURES)
+        .map(|i| {
+            // Distinct storage bands (the quantizer's 128 KB step) sweep
+            // out SIGNATURES distinct plan signatures.
+            let c = Constraints::from_battery(
+                0.15 + 0.8 * (i as f64 / SIGNATURES as f64),
+                task.acc_loss_threshold,
+                task.latency_budget_ms,
+                (1024 + 256 * i as u64) * 1024,
+            );
+            q.signature(task_name, "contention-bench", &c)
+        })
+        .collect();
+
+    println!(
+        "# Plan-cache contention arm — {threads} threads x {SIGNATURES} signatures x \
+         {ROUNDS} rounds (overlapping + disjoint mixes, mutex-model baseline)\n"
+    );
+
+    // Phase 1 — cold overlapping misses: builds counted per signature.
+    let builds_per_sig: Vec<AtomicU64> = (0..SIGNATURES).map(|_| AtomicU64::new(0)).collect();
+    let barrier = Barrier::new(threads);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let (cache, sigs, builds, barrier, searcher, evaluator) =
+                (&cache, &sigs, &builds_per_sig, &barrier, &searcher, &evaluator);
+            scope.spawn(move || {
+                barrier.wait();
+                for (i, sig) in sigs.iter().enumerate() {
+                    cache.lookup_or_search(sig.clone(), |banded| {
+                        builds[i].fetch_add(1, Ordering::Relaxed);
+                        searcher.search(evaluator, banded)
+                    });
+                }
+            });
+        }
+    });
+    let builds: u64 = builds_per_sig.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+    let max_builds_per_signature =
+        builds_per_sig.iter().map(|b| b.load(Ordering::Relaxed)).max().unwrap_or(0);
+
+    // Phase 2 — warm overlapping mix (lock-free snapshot hits).
+    let barrier = Barrier::new(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let (cache, sigs, barrier, searcher, evaluator) =
+                (&cache, &sigs, &barrier, &searcher, &evaluator);
+            scope.spawn(move || {
+                barrier.wait();
+                for _ in 0..ROUNDS {
+                    for sig in sigs {
+                        cache.lookup_or_search(sig.clone(), |banded| {
+                            searcher.search(evaluator, banded)
+                        });
+                    }
+                }
+            });
+        }
+    });
+    let overlapping_lookups_per_sec =
+        (threads * ROUNDS * SIGNATURES) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Phase 3 — warm disjoint mix: each thread owns a signature slice.
+    let chunk = (SIGNATURES + threads - 1) / threads;
+    let barrier = Barrier::new(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let slice = &sigs[(t * chunk).min(SIGNATURES)..((t + 1) * chunk).min(SIGNATURES)];
+            let (cache, barrier, searcher, evaluator) =
+                (&cache, &barrier, &searcher, &evaluator);
+            scope.spawn(move || {
+                barrier.wait();
+                for _ in 0..ROUNDS {
+                    for sig in slice {
+                        cache.lookup_or_search(sig.clone(), |banded| {
+                            searcher.search(evaluator, banded)
+                        });
+                    }
+                }
+            });
+        }
+    });
+    let disjoint_lookups_per_sec =
+        (ROUNDS * SIGNATURES) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Phase 4 — mutex-model baseline: the PR 3 read path held its stripe
+    // lock across the map read; replay the warm overlapping workload
+    // against that locking discipline (same stripe routing, same
+    // plan-clone-out cost) to price what the snapshot path removed.
+    let mut maps: Vec<HashMap<PlanSignature, Arc<PlanEntry>>> =
+        (0..STRIPES).map(|_| HashMap::new()).collect();
+    for sig in &sigs {
+        let banded = q.representative(sig);
+        let entry = Arc::new(PlanEntry {
+            result: searcher.search(&evaluator, &banded),
+            epoch: 0,
+            built_t_s: 0.0,
+        });
+        maps[stripe_of(sig, STRIPES)].insert(sig.clone(), entry);
+    }
+    let model: Vec<Mutex<HashMap<PlanSignature, Arc<PlanEntry>>>> =
+        maps.into_iter().map(Mutex::new).collect();
+    let barrier = Barrier::new(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let (model, sigs, barrier) = (&model, &sigs, &barrier);
+            scope.spawn(move || {
+                barrier.wait();
+                for _ in 0..ROUNDS {
+                    for sig in sigs {
+                        let entry = {
+                            let guard = model[stripe_of(sig, STRIPES)]
+                                .lock()
+                                .unwrap_or_else(|p| p.into_inner());
+                            guard.get(sig).map(Arc::clone)
+                        };
+                        let _plan = entry.expect("model is pre-populated").result.clone();
+                    }
+                }
+            });
+        }
+    });
+    let mutex_lookups_per_sec =
+        (threads * ROUNDS * SIGNATURES) as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    let stats = cache.stats();
+    let c = ContentionStats {
+        threads,
+        signatures: SIGNATURES,
+        rounds: ROUNDS,
+        overlapping_lookups_per_sec,
+        disjoint_lookups_per_sec,
+        mutex_lookups_per_sec,
+        builds,
+        max_builds_per_signature,
+        coalesced: stats.coalesced,
+        lock_free_hits: stats.lock_free_hits,
+        hits: stats.hits,
+    };
+    println!(
+        "contention: lock-free {:.0}/s overlapping, {:.0}/s disjoint vs mutex model \
+         {:.0}/s ({:.2}x); {} builds over {} signatures (max {} per signature), \
+         {} coalesced ({:.0}% of cold lookups)\n",
+        c.overlapping_lookups_per_sec,
+        c.disjoint_lookups_per_sec,
+        c.mutex_lookups_per_sec,
+        c.speedup_vs_mutex(),
+        c.builds,
+        c.signatures,
+        c.max_builds_per_signature,
+        c.coalesced,
+        c.coalesce_rate() * 100.0,
+    );
+    Ok(Some(c))
+}
+
+/// Fail (exit 1) when the contention arm violates the committed plan
+/// floor (`rust/plancache_floor.json`): singleflight must cap builds at
+/// `max_builds_per_signature_epoch`, and the lock-free hit path must
+/// beat the mutex model by `lookup_speedup_floor` at ≥ `min_threads`.
+fn check_plan_floor(path: &str, c: &ContentionStats) -> Result<()> {
+    let floor = Bench::read_floor(path)?;
+    let min_threads = floor.get("min_threads")?.as_f64()? as usize;
+    let speedup_floor = floor.get("lookup_speedup_floor")?.as_f64()?;
+    let cap = floor.get("max_builds_per_signature_epoch")?.as_f64()? as u64;
+    if c.max_builds_per_signature > cap {
+        eprintln!(
+            "FAIL: {} searches ran for one (signature, epoch) — singleflight must cap \
+             duplicates at {cap}",
+            c.max_builds_per_signature
+        );
+        std::process::exit(1);
+    }
+    let speedup = c.speedup_vs_mutex();
+    if c.threads >= min_threads && speedup < speedup_floor {
+        eprintln!(
+            "FAIL: lock-free hit path {:.0} lookups/s is only {speedup:.2}x the mutex \
+             model's {:.0}/s at {} threads (floor {speedup_floor:.2}x at >= {min_threads} \
+             threads)",
+            c.overlapping_lookups_per_sec, c.mutex_lookups_per_sec, c.threads
+        );
+        std::process::exit(1);
+    }
+    if c.threads < min_threads {
+        println!(
+            "plan floor: duplicate cap ok ({} <= {cap}); speedup gate skipped below \
+             {min_threads} threads",
+            c.max_builds_per_signature
+        );
+    } else {
+        println!(
+            "plan floor ok: {speedup:.2}x vs the mutex model (floor {speedup_floor:.2}x), \
+             builds capped at {} per signature",
+            c.max_builds_per_signature
+        );
+    }
     Ok(())
 }

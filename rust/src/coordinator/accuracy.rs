@@ -89,6 +89,18 @@ impl AccuracyModel {
         self.exact.get(ids).map(|&acc| (self.backbone_acc - acc).max(0.0))
     }
 
+    /// The smallest loss [`Self::exact_loss`] can ever return — the floor
+    /// of the measured-palette override table (+∞ when the table is
+    /// empty).  The arena's dominance-bound pruning (DESIGN.md §16) needs
+    /// this because an exact override may undercut the additive estimate,
+    /// so `finalize_loss` alone is not a sound lower bound on a
+    /// candidate's final loss.  O(palette); callers cache the value.
+    pub fn min_exact_loss(&self) -> f64 {
+        self.exact
+            .values()
+            .fold(f64::INFINITY, |m, &acc| m.min((self.backbone_acc - acc).max(0.0)))
+    }
+
     /// Fold the interaction penalty into an accumulated coefficient sum
     /// and clamp — the shared final step of [`Self::predict_loss`] and the
     /// arena's incremental accumulation, so both paths are bit-identical.

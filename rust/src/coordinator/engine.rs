@@ -233,6 +233,11 @@ impl AdaSpring {
     /// shared plan cache (DESIGN.md §9-2).  `load_band` keys the plan
     /// cache's load regime (0 on every load-free path) and `age` carries
     /// (now_s, ttl_s) for drain-coupled expiry (§10-5).
+    ///
+    /// With a plan cache attached the common case is a lock-free snapshot
+    /// hit (DESIGN.md §16); on a miss the search closure below runs
+    /// outside every cache lock, and concurrent engines missing on the
+    /// same signature coalesce onto one search instead of convoying.
     fn run_search(
         &self,
         constraints: &Constraints,

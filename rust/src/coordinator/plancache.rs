@@ -223,8 +223,9 @@ pub struct PlanEntry {
     pub built_t_s: f64,
 }
 
-/// Lock-striped signature → plan map shared fleet-wide (same striping as
-/// [`crate::runtime::ShardedCache`], which backs it).
+/// Striped signature → plan map shared fleet-wide, backed by
+/// [`crate::runtime::ShardedCache`]: lock-free hits, singleflight
+/// misses (DESIGN.md §16).
 pub struct PlanCache {
     cache: ShardedCache<PlanEntry, PlanSignature>,
     quantizer: ContextQuantizer,
@@ -244,22 +245,37 @@ impl PlanCache {
         &self.quantizer
     }
 
+    /// Current invalidation epoch.
+    ///
+    /// Ordering contract (DESIGN.md §16): staleness detection is
+    /// *value*-based — a lookup compares `entry.epoch` against this
+    /// counter, and entries reach readers through the cache's own
+    /// publish/read synchronization, not through this load.  All the
+    /// counter must provide is monotonic visibility: once a thread
+    /// observes epoch `e`, it never acts on `e - 1` (`Acquire` pairs
+    /// with the `Release` bump below).  Nothing anywhere compares the
+    /// epoch's order against *other* atomics, so `SeqCst`'s single
+    /// total order bought nothing — hence Acquire/Release.
     pub fn epoch(&self) -> u64 {
-        self.epoch.load(Ordering::SeqCst)
+        self.epoch.load(Ordering::Acquire)
     }
 
     /// Invalidate every cached plan (palette/model push).  Old entries
     /// stay resident but fail revalidation: the next lookup per
-    /// signature rebuilds in place and counts as stale.
+    /// signature rebuilds in place and counts as stale.  (`Release`:
+    /// see the ordering contract on [`PlanCache::epoch`].)
     pub fn bump_epoch(&self) {
-        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 
     /// Fetch the plan for `sig`, searching at the band representative on
-    /// miss (or stale hit).  The stripe lock is held across the search,
-    /// so concurrent sessions racing one signature search once and share
-    /// the result — the same dedup the variant cache gives compiles.
-    /// Age-blind: entries only go stale on an epoch bump.
+    /// miss (or stale hit).  Hits are lock-free snapshot reads; on a
+    /// miss, concurrent sessions racing one signature coalesce — exactly
+    /// one runs the search, *outside every stripe lock*, and the rest
+    /// park and share the resulting entry (DESIGN.md §16).  The search
+    /// is a pure function of the signature, so coalescing is
+    /// bit-identical for plan results.  Age-blind: entries only go
+    /// stale on an epoch bump.
     pub fn lookup_or_search(
         &self,
         sig: PlanSignature,
@@ -275,11 +291,13 @@ impl PlanCache {
     /// reproduces the age-blind path bit-identically.
     ///
     /// Shared-cache caveat: shard workers advance simulated time
-    /// independently, so which thread's `now_s` stamps a TTL rebuild
-    /// depends on stripe-lock order — the hit/stale *counters* are
-    /// scheduling-dependent on multi-shard TTL'd runs.  Plans and device
-    /// trajectories are not: a rebuild searches at the signature's
-    /// representative, so every outcome returns the identical result.
+    /// independently, so which thread's `now_s` stamps a TTL rebuild —
+    /// and which thread wins the singleflight and which threads
+    /// coalesce — depends on scheduling order.  The hit/miss/stale/
+    /// coalesced *counters* are therefore scheduling-dependent on
+    /// multi-shard runs.  Plans and device trajectories are not: a
+    /// rebuild searches at the signature's representative, so every
+    /// outcome returns the identical result (DESIGN.md §16).
     pub fn lookup_or_search_at(
         &self,
         sig: PlanSignature,
@@ -309,7 +327,8 @@ impl PlanCache {
         (entry.result.clone(), outcome)
     }
 
-    /// Counter snapshot (entries / hits / misses / stale).
+    /// Counter snapshot (entries / hits / misses / stale, plus the §16
+    /// read-path split: lock-free hits and coalesced searches).
     pub fn stats(&self) -> CacheStats {
         self.cache.stats()
     }

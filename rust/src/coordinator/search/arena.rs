@@ -92,6 +92,19 @@ impl Scored for Candidate {
     }
 }
 
+/// Outcome of a bounded extension scoring
+/// ([`SearchArena::eval_extension_bounded`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Extension {
+    /// Exactly scored — identical to what [`SearchArena::eval_extension`]
+    /// returns for the same call (memoized per canonical op per layer).
+    Scored(Op, EvalCore),
+    /// Skipped: the extension's optimistic bound is strictly
+    /// pareto-dominated by an already-scored incumbent, so its exact core
+    /// could never enter the Pareto front (DESIGN.md §16).
+    Pruned(Op),
+}
+
 /// The per-search arena: inherited-prefix accumulators, the identity-tail
 /// memo, and the packed op-id scratch buffer candidates are built in.
 pub struct SearchArena<'a> {
@@ -116,6 +129,14 @@ pub struct SearchArena<'a> {
     tail_memo: HashMap<(usize, usize, usize, usize), Costs>,
     /// Packed op-id buffer of the candidate being scored.
     scratch: Vec<u8>,
+    /// Per-layer canonical-op score memo (reset by [`Self::begin_layer`]):
+    /// within one layer every request that canonicalizes to the same
+    /// operator scores identically, so duplicates return the cached core
+    /// instead of re-running the exact path.
+    op_memo: [Option<(Op, EvalCore)>; NUM_OPS],
+    /// Cached [`crate::coordinator::accuracy::AccuracyModel::min_exact_loss`]
+    /// — the palette floor folded into the pruning bound.
+    min_exact_loss: f64,
 }
 
 impl<'a> SearchArena<'a> {
@@ -143,6 +164,8 @@ impl<'a> SearchArena<'a> {
             id_states,
             tail_memo: HashMap::new(),
             scratch: vec![0u8; n],
+            op_memo: [None; NUM_OPS],
+            min_exact_loss: eval.accuracy_model().min_exact_loss(),
         };
         // Layer 0 is never compressed (Algorithm 1 footnote).
         arena.commit(0, Op::Identity);
@@ -219,6 +242,83 @@ impl<'a> SearchArena<'a> {
             }
         };
         (op, self.eval.evaluate_core(costs, acc_loss, c))
+    }
+
+    /// Reset the per-layer duplicate-op memo.  Call once at the top of
+    /// each search layer, before the first
+    /// [`Self::eval_extension_bounded`] of that layer — the memo is only
+    /// valid while (layer, prefix, constraints) stay fixed.
+    pub fn begin_layer(&mut self) {
+        self.op_memo = [None; NUM_OPS];
+    }
+
+    /// [`Self::eval_extension`] with dominance-bound pruning and a
+    /// per-layer duplicate memo (DESIGN.md §16).
+    ///
+    /// The extension's *costs* are computed exactly (one O(1) fold plus
+    /// the memoized tail) so its efficiency is known bit-exactly before
+    /// scoring; its accuracy loss is lower-bounded by
+    /// min(additive estimate, palette floor) — a measured exact-palette
+    /// override can undercut the additive sum, so the floor must be
+    /// folded in for the bound to be sound.  If some incumbent `b` with
+    /// `b.acc_loss <= valid_loss_cap` (and `b.feasible` when
+    /// `require_feasible` — callers whose consumer is
+    /// [`super::pareto::survivor`] need a feasible dominator so the
+    /// violation fallback, which dominance says nothing about, cannot
+    /// fire) strictly dominates `(acc_lower, efficiency)`, the true core
+    /// is strictly dominated too and can never enter any Pareto front the
+    /// caller computes: the skip is decision-invariant, and the exact
+    /// O(L) accuracy path (scratch pack + palette hash) never runs.
+    ///
+    /// Duplicate requests that canonicalize to an already-scored operator
+    /// return the memoized `(op, core)` — bit-identical by construction
+    /// (same canonical op, same prefix, same constraints).
+    pub fn eval_extension_bounded(
+        &mut self,
+        layer: usize,
+        op: Op,
+        inherited: bool,
+        c: &Constraints,
+        incumbents: &[Candidate],
+        valid_loss_cap: f64,
+        require_feasible: bool,
+    ) -> Extension {
+        let cop = self.canon.canonical(layer, op);
+        if let Some((mop, core)) = self.op_memo[cop.id() as usize] {
+            return Extension::Scored(mop, core);
+        }
+        let (pre_state, pre_sum, pre_k) = if inherited {
+            (self.state, self.loss_sum, self.loss_k)
+        } else {
+            (self.id_states[layer], 0.0, 0usize)
+        };
+        // Exact costs — the same arithmetic `eval_extension` runs, so the
+        // efficiency below equals the true core's bit-for-bit.
+        let (_lc, exit) = self.eval.cost_model().fold_layer(&pre_state, layer, cop);
+        let costs = exit.costs + self.tail(layer + 1, exit);
+        let efficiency = costs.efficiency(self.eval.mu1, self.eval.mu2);
+        let additive = {
+            let (mut sum, mut k) = (pre_sum, pre_k);
+            if cop != Op::Identity {
+                sum += self.eval.accuracy_model().loss_coeff(layer, cop.id());
+                k += 1;
+            }
+            self.eval.accuracy_model().finalize_loss(sum, k)
+        };
+        let acc_lower = additive.min(self.min_exact_loss);
+        let dominated = incumbents.iter().any(|b| {
+            (!require_feasible || b.core.feasible)
+                && b.core.acc_loss <= valid_loss_cap
+                && b.core.acc_loss <= acc_lower
+                && b.core.efficiency >= efficiency
+                && (b.core.acc_loss < acc_lower || b.core.efficiency > efficiency)
+        });
+        if dominated {
+            return Extension::Pruned(cop);
+        }
+        let scored = self.eval_extension(layer, op, inherited, c);
+        self.op_memo[cop.id() as usize] = Some(scored);
+        Extension::Scored(scored.0, scored.1)
     }
 
     /// Fold the adopted operator into the committed prefix (Algorithm 1
@@ -377,6 +477,70 @@ mod tests {
         let mut arena = SearchArena::new(&eval);
         let full = eval.evaluate(&CompressionConfig::identity(5), &c);
         assert_eq!(full.core(), arena.identity_core(&c));
+    }
+
+    #[test]
+    fn bounded_extension_matches_unbounded_without_incumbents() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.4, 0.05, 20.0, 220 * 1024);
+        let mut plain = SearchArena::new(&eval);
+        let mut bounded = SearchArena::new(&eval);
+        plain.commit(1, Op::Ch50);
+        bounded.commit(1, Op::Ch50);
+        bounded.begin_layer();
+        for &op in ALL_OPS.iter() {
+            let (cop, core) = plain.eval_extension(2, op, true, &c);
+            match bounded.eval_extension_bounded(2, op, true, &c, &[], 0.05, false) {
+                Extension::Scored(bop, bcore) => {
+                    assert_eq!(bop, cop, "{op:?}");
+                    assert_eq!(bcore, core, "{op:?}");
+                }
+                Extension::Pruned(_) => panic!("nothing to dominate {op:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn op_memo_returns_bit_identical_duplicates() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.5, 0.05, 20.0, 2 << 20);
+        let mut arena = SearchArena::new(&eval);
+        arena.begin_layer();
+        // At layer 1 of the toy backbone Depth is illegal (stride 2, no
+        // residual) → canonicalizes to Identity, sharing its memo slot.
+        let a = arena.eval_extension_bounded(1, Op::Identity, true, &c, &[], 0.05, false);
+        let b = arena.eval_extension_bounded(1, Op::Depth, true, &c, &[], 0.05, false);
+        assert_eq!(a, b);
+        assert!(matches!(a, Extension::Scored(Op::Identity, _)));
+    }
+
+    #[test]
+    fn bounded_extension_prunes_strictly_dominated_ops() {
+        let eval = evaluator();
+        let c = Constraints::from_battery(0.5, 0.05, 20.0, 2 << 20);
+        let mut arena = SearchArena::new(&eval);
+        arena.begin_layer();
+        let (_, id_core) = arena.eval_extension(1, Op::Identity, true, &c);
+        // A synthetic incumbent that dominates every real extension.
+        let champion = Candidate {
+            op: Op::Identity,
+            core: EvalCore {
+                acc_loss: 0.0,
+                efficiency: f64::INFINITY,
+                feasible: true,
+                ..id_core
+            },
+        };
+        match arena.eval_extension_bounded(1, Op::Fire, true, &c, &[champion], 0.05, true) {
+            Extension::Pruned(op) => assert_eq!(op, Op::Fire),
+            Extension::Scored(..) => panic!("dominated extension must prune"),
+        }
+        // The same call with no incumbents scores exactly (and a pruned
+        // op was never memoized as scored).
+        assert!(matches!(
+            arena.eval_extension_bounded(1, Op::Fire, true, &c, &[], 0.05, true),
+            Extension::Scored(Op::Fire, _)
+        ));
     }
 
     #[test]

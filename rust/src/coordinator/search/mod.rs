@@ -13,7 +13,7 @@ pub mod mutation;
 pub mod pareto;
 pub mod runtime3c;
 
-pub use arena::{eval_ids, Candidate, CanonTable, SearchArena};
+pub use arena::{eval_ids, Candidate, CanonTable, Extension, SearchArena};
 pub use exhaustive::ExhaustiveOptimizer;
 pub use greedy::GreedyOptimizer;
 pub use mutation::Mutator;

@@ -11,7 +11,7 @@
 
 use std::time::Instant;
 
-use super::arena::{eval_ids, materialize, Candidate, SearchArena};
+use super::arena::{eval_ids, materialize, Candidate, Extension, SearchArena};
 use super::mutation::Mutator;
 use super::pareto;
 use crate::coordinator::config::CompressionConfig;
@@ -95,8 +95,13 @@ impl Runtime3C {
     /// one operator in O(1) (prefix accumulators + memoized identity
     /// tails), live as packed op-ids in the per-search arena, and only
     /// the survivor materializes a `CompressionConfig`/`Evaluation`.
-    /// Decision-for-decision identical to [`Self::search_full`], the
-    /// O(L²) full-evaluation oracle (`tests/search_parity.rs`).
+    /// Extensions whose optimistic bound is already strictly
+    /// pareto-dominated skip their exact scoring entirely, and duplicate
+    /// canonical operators are memoized per layer (DESIGN.md §16) — both
+    /// shortcuts are decision-invariant, and `candidates_evaluated` still
+    /// counts every considered extension.  Decision-for-decision
+    /// identical to [`Self::search_full`], the O(L²) full-evaluation
+    /// oracle (`tests/search_parity.rs`).
     pub fn search(&self, eval: &Evaluator, constraints: &Constraints) -> SearchResult {
         let t0 = Instant::now();
         let n = eval.n_layers();
@@ -119,11 +124,31 @@ impl Runtime3C {
 
             // Line 1: candidate space at this layer = hardware-efficient
             // operator groups Δ', each scored as a one-operator extension.
+            // Dominance-bound pruning (DESIGN.md §16): a pruned extension
+            // is still *counted* — `candidates_evaluated` stays equal to
+            // the `search_full` oracle's — but its exact scoring is
+            // skipped and it never enters the pool.  Strictly dominated
+            // candidates cannot change the front or the best-two, and the
+            // dominator's validity rules out the valid-space fallback, so
+            // the decisions below are unchanged.  Identity scores first
+            // against no incumbents, so `candidates[0]` stays the
+            // identity extension.
+            arena.begin_layer();
             let mut candidates: Vec<Candidate> = Vec::with_capacity(ALL_OPS.len());
             for &op in ALL_OPS.iter() {
-                let (cop, core) = arena.eval_extension(layer, op, inherited, constraints);
+                match arena.eval_extension_bounded(
+                    layer,
+                    op,
+                    inherited,
+                    constraints,
+                    &candidates,
+                    self.params.valid_loss_cap,
+                    false,
+                ) {
+                    Extension::Scored(cop, core) => candidates.push(Candidate { op: cop, core }),
+                    Extension::Pruned(_) => {}
+                }
                 evaluated += 1;
-                candidates.push(Candidate { op: cop, core });
             }
 
             // Valid-space guard (paper: exclude A_loss > 5%) — unless that
@@ -160,9 +185,29 @@ impl Runtime3C {
                         if added >= need {
                             break 'grow;
                         }
-                        let (cop, core) = arena.eval_extension(layer, m, inherited, constraints);
+                        // Pruning here requires a *feasible* dominator:
+                        // the pool feeds `pareto::survivor`, whose
+                        // infeasible branch ranks by constraint violation
+                        // — which dominance in (A_loss, E) says nothing
+                        // about.  A feasible dominator forces the
+                        // feasible branch, where strictly dominated
+                        // mutants can never win.  Counters and the rng
+                        // call pattern stay oracle-identical.
+                        match arena.eval_extension_bounded(
+                            layer,
+                            m,
+                            inherited,
+                            constraints,
+                            &pool,
+                            self.params.valid_loss_cap,
+                            true,
+                        ) {
+                            Extension::Scored(cop, core) => {
+                                pool.push(Candidate { op: cop, core })
+                            }
+                            Extension::Pruned(_) => {}
+                        }
                         evaluated += 1;
-                        pool.push(Candidate { op: cop, core });
                         added += 1;
                     }
                 }

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::obs::metrics::Histogram;
+use crate::runtime::CacheStats;
 use crate::util::json::{Json, JsonWriter};
 
 use super::admission::AdmissionStats;
@@ -45,6 +46,13 @@ pub struct DispatchReport {
     pub worker_steps: Vec<u64>,
     pub worker_steals: Vec<u64>,
     pub worker_sessions_stolen: Vec<u64>,
+    /// Shared plan-cache counters as the dispatch workers saw them
+    /// (DESIGN.md §16) — `lock_free_hits` / `coalesced` split how pool
+    /// workers resolved their lookups: snapshot reads vs parking on
+    /// another worker's in-flight search.  `None` outside
+    /// `PlanMode::Shared` runs (block absent from the JSON, preserving
+    /// the pre-§16 schema).
+    pub plan: Option<CacheStats>,
 }
 
 impl DispatchReport {
@@ -79,7 +87,15 @@ impl DispatchReport {
             worker_steps,
             worker_steals,
             worker_sessions_stolen,
+            plan: None,
         }
+    }
+
+    /// Attach the shared plan-cache counters observed by this run's pool
+    /// workers (emitted as the `"plan_cache"` block).
+    pub fn with_plan(mut self, plan: Option<CacheStats>) -> DispatchReport {
+        self.plan = plan;
+        self
     }
 
     /// Total requests shed at admission.
@@ -168,6 +184,17 @@ impl DispatchReport {
             m.insert("max_scale".into(), num(a.max_scale));
             root.insert("adaptive_batch".into(), Json::Obj(m));
         }
+        if let Some(p) = &self.plan {
+            let mut m = BTreeMap::new();
+            m.insert("coalesced".into(), num(p.coalesced as f64));
+            m.insert("hit_rate".into(), num(p.hit_rate()));
+            m.insert("hits".into(), num(p.hits as f64));
+            m.insert("lock_free_hits".into(), num(p.lock_free_hits as f64));
+            m.insert("misses".into(), num(p.misses as f64));
+            m.insert("plans".into(), num(p.entries as f64));
+            m.insert("stale".into(), num(p.stale as f64));
+            root.insert("plan_cache".into(), Json::Obj(m));
+        }
         root.insert("queue".into(), Json::Obj(queue));
         root.insert("wait_ms".into(), series_summary_ms(&self.wait_us));
         root.insert("total_ms".into(), series_summary_ms(&self.batches.total_us));
@@ -207,6 +234,18 @@ impl DispatchReport {
         w.field_num("size_mean", self.batches.size_mean())?;
         w.end_obj()?;
         w.field_num("capacity", self.queue_capacity as f64)?;
+        if let Some(p) = &self.plan {
+            w.key("plan_cache")?;
+            w.begin_obj()?;
+            w.field_num("coalesced", p.coalesced as f64)?;
+            w.field_num("hit_rate", p.hit_rate())?;
+            w.field_num("hits", p.hits as f64)?;
+            w.field_num("lock_free_hits", p.lock_free_hits as f64)?;
+            w.field_num("misses", p.misses as f64)?;
+            w.field_num("plans", p.entries as f64)?;
+            w.field_num("stale", p.stale as f64)?;
+            w.end_obj()?;
+        }
         w.field_str("policy", &self.policy)?;
         w.key("queue")?;
         w.begin_obj()?;
@@ -400,11 +439,23 @@ mod tests {
             vec![40, 60],
             vec![3, 0],
             vec![7, 0],
-        );
+        )
+        .with_plan(Some(CacheStats {
+            entries: 3,
+            hits: 10,
+            misses: 3,
+            stale: 1,
+            lock_free_hits: 7,
+            coalesced: 2,
+        }));
         let mut buf = String::new();
         let mut w = JsonWriter::new(&mut buf);
         r.write_json(&mut w).unwrap();
         assert!(w.is_complete());
         assert_eq!(buf, r.to_json().to_string(), "streamed dispatch block must match the tree");
+        let parsed = Json::parse(&buf).unwrap();
+        let plan = parsed.get("plan_cache").unwrap();
+        assert_eq!(plan.get("lock_free_hits").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(plan.get("coalesced").unwrap().as_usize().unwrap(), 2);
     }
 }

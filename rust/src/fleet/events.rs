@@ -32,6 +32,17 @@
 //! `search_full` oracles the arena search — and `tests/scheduler.rs`
 //! pins `EventDriven ≡ Windowed` report-bit-identity across presets and
 //! randomized stage swaps.
+//!
+//! Under `PlanMode::Shared` the sessions popped here resolve their
+//! evolutions against the DESIGN.md §16 plan cache: steady-state lookups
+//! are lock-free snapshot reads, and a pool worker that misses while a
+//! peer is already searching the same signature *parks on the in-flight
+//! search* instead of re-running it.  Both states are wall-clock-only —
+//! simulated time, event order, and plan *results* are untouched (the
+//! coalesced waiter receives the identical `Arc<PlanEntry>` and its
+//! audit records the same `"hit"` label) — so event/windowed bit-parity
+//! holds with sharing on; only the hit/miss/coalesced *counters* depend
+//! on scheduling.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

@@ -499,19 +499,25 @@ pub fn run_pipeline(manifest: &Manifest, pcfg: &PipelineConfig) -> Result<FleetR
         } else {
             DispatchConfig { adaptive_batch: None, ..dcfg.clone() }
         };
-        report.dispatch = Some(DispatchReport::new(
-            &report_dcfg,
-            workers,
-            admission,
-            wait_us,
-            batches,
-            steals,
-            sessions_stolen,
-            busy_ms,
-            worker_steps,
-            worker_steals,
-            worker_stolen,
-        ));
+        // Pool workers resolve plan lookups against the shared cache:
+        // surface its counters (lock-free hit / coalesced split) on the
+        // dispatch block too, next to the workers that observed them.
+        report.dispatch = Some(
+            DispatchReport::new(
+                &report_dcfg,
+                workers,
+                admission,
+                wait_us,
+                batches,
+                steals,
+                sessions_stolen,
+                busy_ms,
+                worker_steps,
+                worker_steals,
+                worker_stolen,
+            )
+            .with_plan(plan_stats),
+        );
     }
 
     if stages.windowed() {

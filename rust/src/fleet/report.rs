@@ -407,6 +407,8 @@ impl FleetReport {
             p.insert("misses".into(), num(plan.misses as f64));
             p.insert("stale".into(), num(plan.stale as f64));
             p.insert("hit_rate".into(), num(plan.hit_rate()));
+            p.insert("lock_free_hits".into(), num(plan.lock_free_hits as f64));
+            p.insert("coalesced".into(), num(plan.coalesced as f64));
             root.insert("plan_cache".into(), Json::Obj(p));
         }
         root.insert("archetypes".into(), Json::Arr(archetypes));
@@ -503,8 +505,10 @@ impl FleetReport {
         if let Some(plan) = &self.plan {
             w.key("plan_cache")?;
             w.begin_obj()?;
+            w.field_num("coalesced", plan.coalesced as f64)?;
             w.field_num("hit_rate", plan.hit_rate())?;
             w.field_num("hits", plan.hits as f64)?;
+            w.field_num("lock_free_hits", plan.lock_free_hits as f64)?;
             w.field_num("misses", plan.misses as f64)?;
             w.field_num("plans", plan.entries as f64)?;
             w.field_num("stale", plan.stale as f64)?;

@@ -1,14 +1,29 @@
-//! Lock-striped concurrent variant cache (DESIGN.md §4).
+//! Lock-free-read concurrent variant cache (DESIGN.md §4, §16).
 //!
 //! Compiled executables are the expensive, immutable, perfectly shareable
 //! resource of the whole runtime: every device session that evolves to
 //! palette variant v of task t wants *the same* compiled artifact.  This
 //! cache makes that sharing explicit — entries are `Arc<V>` keyed by
-//! `(task, variant)`, the map is striped across independent mutexes so
-//! concurrent sessions on different variants never contend, and a builder
-//! closure runs at most once per key (the stripe lock is held across the
-//! build, so two sessions racing to compile the same variant serialize and
-//! the loser gets the winner's artifact).
+//! `(task, variant)` and striped by key hash — and makes the fleet-scale
+//! hot path cheap: a hit never takes a lock.
+//!
+//! Concurrency model (DESIGN.md §16):
+//!
+//! * **Read path** — each stripe publishes an immutable snapshot of its
+//!   map through an atomic pointer.  A lookup derefs the snapshot under
+//!   a reader count ([`Stripe::read`]) and returns; no mutex, no
+//!   waiting, no writer can block it.
+//! * **Write path** — the stripe mutex survives only for writers.  A
+//!   publish clones the snapshot, inserts, swaps the pointer, and
+//!   retires the old map until no lock-free reader can still hold it
+//!   (copy-on-write; builds are rare — one per distinct key — while
+//!   reads happen per inference/evolution across the fleet).
+//! * **Miss path** — per-key singleflight: the first caller to miss
+//!   registers an in-flight build and runs the builder *outside every
+//!   stripe lock*; concurrent callers for the same key park on the
+//!   flight and share the winner's `Arc` (counted `coalesced`).  A
+//!   failed build completes the flight with the error and publishes
+//!   nothing, so a failure never poisons the key.
 //!
 //! The cache is generic over the entry type: the PJRT path stores
 //! [`crate::runtime::LoadedVariant`] (see [`crate::runtime::Executor`]),
@@ -19,16 +34,21 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// Cache key: (task name, palette variant id) — the default key type.
 /// The cache is generic over the key, so the coordinator's evolution
 /// plan cache reuses the same striping (keyed by quantized context
 /// signature, DESIGN.md §9-2).
 pub type VariantKey = (String, usize);
+
+/// One stripe's published map: immutable once published, replaced
+/// wholesale by writers (copy-on-write).
+type Snapshot<K, V> = HashMap<K, Arc<V>>;
 
 /// Snapshot of the cache counters.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -40,10 +60,20 @@ pub struct CacheStats {
     /// place; only [`ShardedCache::get_or_revalidate_with`] produces
     /// these — plain lookups never do).
     pub stale: u64,
+    /// Hits served entirely off a stripe's published snapshot — no
+    /// mutex touched, no waiting.  A subset of `hits`; the remainder
+    /// resolved on the writer path (racing a concurrent build).
+    pub lock_free_hits: u64,
+    /// Lookups that parked on another caller's in-flight build of the
+    /// same key and shared its result (singleflight).  A subset of
+    /// `hits`: without coalescing each would have re-run the builder.
+    pub coalesced: u64,
 }
 
 impl CacheStats {
     /// Hits over total lookups (0 when the cache was never consulted).
+    /// `lock_free_hits` and `coalesced` are subsets of `hits`, not
+    /// additional lookups, so they stay out of the denominator.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses + self.stale;
         if total == 0 {
@@ -65,26 +95,168 @@ pub enum CacheOutcome {
     Stale,
 }
 
-/// A lock-striped `K → Arc<V>` map with build-once inserts.
+/// One in-flight build: the singleflight rendezvous concurrent callers
+/// of the same key park on.  The builder completes it exactly once with
+/// either the published `Arc` or the build error's message (the error
+/// itself goes to the builder's caller; `anyhow::Error` is not `Clone`).
+struct Flight<V> {
+    slot: Mutex<Option<Result<Arc<V>, String>>>,
+    done: Condvar,
+}
+
+impl<V> Flight<V> {
+    fn new() -> Flight<V> {
+        Flight { slot: Mutex::new(None), done: Condvar::new() }
+    }
+
+    fn complete(&self, result: Result<Arc<V>, String>) {
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        *slot = Some(result);
+        self.done.notify_all();
+    }
+
+    fn wait(&self) -> Result<Arc<V>, String> {
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(result) = slot.as_ref() {
+                return result.clone();
+            }
+            slot = self.done.wait(slot).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Writer-side state of one stripe, behind its (writer-only) mutex.
+struct StripeState<K, V> {
+    /// Snapshots retired by a publish while lock-free readers might
+    /// still hold them; freed by the first later publish that proves
+    /// no reader is in flight (see [`Stripe::publish`]).
+    garbage: Vec<Box<Snapshot<K, V>>>,
+    /// Singleflight registry: at most one in-flight build per key.
+    inflight: HashMap<K, Arc<Flight<V>>>,
+}
+
+/// One lock stripe: a published snapshot readers deref without locks,
+/// plus the mutex-guarded writer state.
+struct Stripe<K, V> {
+    /// The published snapshot.  Always a valid `Box<Snapshot>` leaked
+    /// with `Box::into_raw`; replaced only under `state`'s mutex and
+    /// freed only once provably unobserved (`publish`) or on drop.
+    published: AtomicPtr<Snapshot<K, V>>,
+    /// Lock-free readers currently inside [`Stripe::read`].
+    readers: AtomicU64,
+    /// Entries in the published snapshot — mirrors `published.len()` so
+    /// fleet-wide `len()` / report snapshots never touch the stripes'
+    /// locks or snapshots.
+    entries: AtomicU64,
+    state: Mutex<StripeState<K, V>>,
+    /// The published map is shared by `&` across threads, which the
+    /// auto traits can't see through `AtomicPtr` — this reinstates the
+    /// real bounds (`Send`/`Sync` iff the boxed map is).
+    _marker: PhantomData<Box<Snapshot<K, V>>>,
+}
+
+impl<K: Hash + Eq + Clone, V> Stripe<K, V> {
+    fn new() -> Stripe<K, V> {
+        Stripe {
+            published: AtomicPtr::new(Box::into_raw(Box::new(HashMap::new()))),
+            readers: AtomicU64::new(0),
+            entries: AtomicU64::new(0),
+            state: Mutex::new(StripeState { garbage: Vec::new(), inflight: HashMap::new() }),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Lock-free read of the published snapshot.
+    ///
+    /// Protocol (all `SeqCst`): a reader announces itself on `readers`
+    /// *before* loading the pointer and signs off *after* its last
+    /// deref.  A writer retires the old snapshot after storing the new
+    /// pointer and frees retired snapshots only when it observes
+    /// `readers == 0` *after* that store.  In the single total order of
+    /// `SeqCst` operations, a reader not counted at that observation
+    /// increments after it, so its pointer load is ordered after the
+    /// store and can only see the new snapshot — nobody can still hold
+    /// a freed map.  (`Acquire`/`Release` alone cannot give the writer
+    /// that store→load ordering against the readers counter, which is
+    /// why the handshake stays `SeqCst`; the counters in
+    /// [`ShardedCache`] are plain `Relaxed` tallies.)
+    fn read<T>(&self, f: impl FnOnce(&Snapshot<K, V>) -> T) -> T {
+        self.readers.fetch_add(1, Ordering::SeqCst);
+        // SAFETY: `published` always points at a live leaked Box; it is
+        // freed only by a writer that observed `readers == 0` after
+        // unpublishing it, which the count we hold rules out (above).
+        let out = f(unsafe { &*self.published.load(Ordering::SeqCst) });
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    /// The current snapshot, writer-side: holding the state mutex keeps
+    /// the pointer stable (publishes and frees both require it), so no
+    /// reader count is needed.
+    fn current<'a>(&'a self, _state: &'a StripeState<K, V>) -> &'a Snapshot<K, V> {
+        // SAFETY: see above — the caller holds the stripe's state mutex.
+        unsafe { &*self.published.load(Ordering::SeqCst) }
+    }
+
+    /// Copy-on-write publish of `key → value` (state mutex held by the
+    /// caller).  Returns whether the key was fresh (an insert, not a
+    /// stale replace).
+    fn publish(&self, state: &mut StripeState<K, V>, key: K, value: Arc<V>) -> bool {
+        let old = self.published.load(Ordering::SeqCst);
+        // SAFETY: the state mutex keeps `old` stable (see `current`).
+        let mut next = unsafe { (*old).clone() };
+        let fresh = next.insert(key, value).is_none();
+        if fresh {
+            self.entries.fetch_add(1, Ordering::Relaxed);
+        }
+        self.published.store(Box::into_raw(Box::new(next)), Ordering::SeqCst);
+        // SAFETY: `old` was the published leaked Box and is unreachable
+        // to new readers from here on; park it until provably unheld.
+        state.garbage.push(unsafe { Box::from_raw(old) });
+        if self.readers.load(Ordering::SeqCst) == 0 {
+            // No reader is in flight *after* the store above, so none
+            // can hold any retired snapshot (see `read`) — free them.
+            // Readers arriving later only ever see the new pointer.
+            state.garbage.clear();
+        }
+        fresh
+    }
+}
+
+impl<K, V> Drop for Stripe<K, V> {
+    fn drop(&mut self) {
+        // SAFETY: `&mut self` — no readers, no writers; reclaim the
+        // leaked published Box (retired ones drop with `state`).
+        drop(unsafe { Box::from_raw(*self.published.get_mut()) });
+    }
+}
+
+/// A striped `K → Arc<V>` map with lock-free hits and singleflight
+/// build-once inserts.
 pub struct ShardedCache<V, K = VariantKey> {
-    stripes: Vec<Mutex<HashMap<K, Arc<V>>>>,
+    stripes: Vec<Stripe<K, V>>,
     hits: AtomicU64,
     misses: AtomicU64,
     stale: AtomicU64,
+    lock_free_hits: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 /// Default stripe count — enough that a handful of shard workers rarely
 /// collide, small enough to stay cheap for single-engine use.
 pub const DEFAULT_STRIPES: usize = 16;
 
-impl<V, K: Hash + Eq> ShardedCache<V, K> {
+impl<V, K: Hash + Eq + Clone> ShardedCache<V, K> {
     pub fn new(stripes: usize) -> ShardedCache<V, K> {
         let n = stripes.max(1);
         ShardedCache {
-            stripes: (0..n).map(|_| Mutex::new(HashMap::new())).collect(),
+            stripes: (0..n).map(|_| Stripe::new()).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             stale: AtomicU64::new(0),
+            lock_free_hits: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
         }
     }
 
@@ -101,85 +273,185 @@ impl<V, K: Hash + Eq> ShardedCache<V, K> {
         self.stripes.len()
     }
 
-    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, Arc<V>>> {
+    fn stripe(&self, key: &K) -> &Stripe<K, V> {
         &self.stripes[self.stripe_of(key)]
     }
 
     /// Fetch the entry for `key`, building it with `build` on first use.
     /// Returns the shared entry plus whether this lookup was a hit.  The
-    /// stripe lock is held across `build`, so the builder runs at most
-    /// once per key even under concurrent callers (they serialize on the
-    /// stripe and the second caller finds the first caller's entry).
+    /// builder runs outside every stripe lock; concurrent callers of the
+    /// same key coalesce on it ([`Self::lookup_with`]), so it still runs
+    /// at most once per key.
     pub fn get_or_try_insert_with(
         &self,
         key: K,
         build: impl FnOnce() -> Result<V>,
     ) -> Result<(Arc<V>, bool)> {
-        let mut map = self.stripe(&key).lock().unwrap_or_else(|p| p.into_inner());
-        if let Some(entry) = map.get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok((entry.clone(), true));
-        }
-        let entry = Arc::new(build()?);
-        map.insert(key, entry.clone());
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        Ok((entry, false))
+        let (entry, outcome) = self.lookup_with(key, |_| true, build)?;
+        Ok((entry, outcome == CacheOutcome::Hit))
     }
 
     /// Like [`Self::get_or_try_insert_with`], but an existing entry is
     /// revalidated with `valid` first; a failing entry is rebuilt in
     /// place and counted as stale (the plan cache's epoch invalidation,
-    /// DESIGN.md §9-2).  The stripe lock is held across `build`, same
-    /// build-once guarantee as the plain path.
+    /// DESIGN.md §9-2).  Build-once still holds per (key, validity
+    /// generation): a caller whose `valid` rejects an in-flight build's
+    /// result (e.g. the epoch bumped mid-build) retries and rebuilds
+    /// rather than serve a cross-generation entry.
     pub fn get_or_revalidate_with(
         &self,
         key: K,
         valid: impl Fn(&V) -> bool,
         build: impl FnOnce() -> Result<V>,
     ) -> Result<(Arc<V>, CacheOutcome)> {
-        let mut map = self.stripe(&key).lock().unwrap_or_else(|p| p.into_inner());
-        let outcome = match map.get(&key) {
-            Some(entry) if valid(entry) => {
+        self.lookup_with(key, valid, build)
+    }
+
+    /// The one lookup implementation (DESIGN.md §16): lock-free snapshot
+    /// probe, then the writer path — recheck under the stripe mutex,
+    /// park on an in-flight build, or become the builder (outside all
+    /// stripe locks).
+    fn lookup_with(
+        &self,
+        key: K,
+        valid: impl Fn(&V) -> bool,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<(Arc<V>, CacheOutcome)> {
+        let stripe = self.stripe(&key);
+        // Fast path: published-snapshot probe, zero locks.
+        if let Some(found) = stripe.read(|map| map.get(&key).cloned()) {
+            if valid(&found) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Ok((entry.clone(), CacheOutcome::Hit));
+                self.lock_free_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok((found, CacheOutcome::Hit));
             }
-            Some(_) => CacheOutcome::Stale,
-            None => CacheOutcome::Miss,
-        };
-        let entry = Arc::new(build()?);
-        map.insert(key, entry.clone());
-        match outcome {
-            CacheOutcome::Stale => self.stale.fetch_add(1, Ordering::Relaxed),
-            _ => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        Ok((entry, outcome))
+        }
+        // `build` is consumed exactly once, on the builder branch below
+        // — which returns — but the waiter-retry loop keeps the borrow
+        // checker from seeing that, hence the Option.
+        let mut build = Some(build);
+        loop {
+            let mut state = stripe.state.lock().unwrap_or_else(|p| p.into_inner());
+            // Recheck under the mutex: a build may have completed (or an
+            // entry gone stale) between the snapshot probe and here.
+            let rechecked =
+                stripe.current(&state).get(&key).map(|e| (Arc::clone(e), valid(e)));
+            let outcome = match rechecked {
+                Some((entry, true)) => {
+                    drop(state);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((entry, CacheOutcome::Hit));
+                }
+                Some((_, false)) => CacheOutcome::Stale,
+                None => CacheOutcome::Miss,
+            };
+            let inflight = state.inflight.get(&key).map(Arc::clone);
+            if let Some(flight) = inflight {
+                // Coalesce: somebody is already building this key.
+                drop(state);
+                match flight.wait() {
+                    Ok(entry) if valid(&entry) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        self.coalesced.fetch_add(1, Ordering::Relaxed);
+                        return Ok((entry, CacheOutcome::Hit));
+                    }
+                    // The flight's result fails *our* validity (epoch
+                    // bumped mid-build): retry from the top and rebuild
+                    // — never serve a cross-generation entry.
+                    Ok(_) => continue,
+                    Err(msg) => return Err(anyhow!("coalesced build failed: {msg}")),
+                }
+            }
+            // Become the builder: register the flight, run the builder
+            // outside every stripe lock, publish, release the waiters.
+            let flight = Arc::new(Flight::new());
+            state.inflight.insert(key.clone(), Arc::clone(&flight));
+            drop(state);
+            // If `build` unwinds, release the waiters with an error
+            // instead of leaving them parked on a flight nobody will
+            // ever complete.
+            let mut abort = AbortFlight { stripe, key: Some(key), flight: Some(flight) };
+            let result = (build.take().expect("the builder branch runs at most once"))();
+            let key = abort.key.take().expect("abort guard disarmed once");
+            let flight = abort.flight.take().expect("abort guard disarmed once");
+            let mut state = stripe.state.lock().unwrap_or_else(|p| p.into_inner());
+            state.inflight.remove(&key);
+            return match result {
+                Ok(value) => {
+                    let entry = Arc::new(value);
+                    stripe.publish(&mut state, key, Arc::clone(&entry));
+                    drop(state);
+                    flight.complete(Ok(Arc::clone(&entry)));
+                    match outcome {
+                        CacheOutcome::Stale => self.stale.fetch_add(1, Ordering::Relaxed),
+                        _ => self.misses.fetch_add(1, Ordering::Relaxed),
+                    };
+                    Ok((entry, outcome))
+                }
+                Err(e) => {
+                    drop(state);
+                    // A failed build publishes nothing: the key is not
+                    // poisoned, the next caller simply builds again.
+                    flight.complete(Err(e.to_string()));
+                    Err(e)
+                }
+            };
+        }
     }
 
-    /// Fetch without building (no hit/miss accounting).
+    /// Fetch without building (no hit/miss accounting, no locks).
     pub fn peek(&self, key: &K) -> Option<Arc<V>> {
-        let map = self.stripe(key).lock().unwrap_or_else(|p| p.into_inner());
-        map.get(key).cloned()
+        self.stripe(key).read(|map| map.get(key).cloned())
     }
 
-    /// Number of cached entries across all stripes.
+    /// Number of cached entries across all stripes, from the relaxed
+    /// per-stripe counters — report snapshots no longer lock (or even
+    /// read) any stripe map.
     pub fn len(&self) -> usize {
-        self.stripes
-            .iter()
-            .map(|s| s.lock().unwrap_or_else(|p| p.into_inner()).len())
-            .sum()
+        self.stripes.iter().map(|s| s.entries.load(Ordering::Relaxed) as usize).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Counter snapshot (entries / hits / misses / stale).
+    /// Per-stripe entry counts (relaxed counters, no locks) — the
+    /// distribution view the fleet report can sample for free.
+    pub fn stripe_entries(&self) -> Vec<usize> {
+        self.stripes.iter().map(|s| s.entries.load(Ordering::Relaxed) as usize).collect()
+    }
+
+    /// Counter snapshot (entries / hits / misses / stale plus the §16
+    /// read-path split: lock-free hits and coalesced waits).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             entries: self.len(),
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             stale: self.stale.load(Ordering::Relaxed),
+            lock_free_hits: self.lock_free_hits.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Unwind guard for the builder branch of
+/// [`ShardedCache::lookup_with`]: if the builder panics, deregister the
+/// flight and fail any parked waiters; disarmed (fields taken) on the
+/// normal path.
+struct AbortFlight<'a, K: Hash + Eq + Clone, V> {
+    stripe: &'a Stripe<K, V>,
+    key: Option<K>,
+    flight: Option<Arc<Flight<V>>>,
+}
+
+impl<K: Hash + Eq + Clone, V> Drop for AbortFlight<'_, K, V> {
+    fn drop(&mut self) {
+        if let (Some(key), Some(flight)) = (self.key.take(), self.flight.take()) {
+            let mut state = self.stripe.state.lock().unwrap_or_else(|p| p.into_inner());
+            state.inflight.remove(&key);
+            drop(state);
+            flight.complete(Err("builder panicked".to_string()));
         }
     }
 }
@@ -212,6 +484,8 @@ mod tests {
         assert_eq!(built.load(Ordering::SeqCst), 1);
         let s = cache.stats();
         assert_eq!((s.entries, s.hits, s.misses), (1, 1, 1));
+        assert_eq!(s.lock_free_hits, 1, "the uncontended hit is a snapshot hit");
+        assert_eq!(s.coalesced, 0);
         assert!((s.hit_rate() - 0.5).abs() < 1e-9);
     }
 
@@ -224,6 +498,7 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(cache.len(), 32);
+        assert_eq!(cache.stripe_entries().iter().sum::<usize>(), 32);
         for id in 0..32 {
             assert_eq!(*cache.peek(&("t".to_string(), id)).unwrap(), id * 10);
         }
@@ -287,5 +562,107 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.hits + s.misses, 2);
         assert_eq!(s.hits, 1);
+    }
+
+    #[test]
+    fn builder_reentrancy_does_not_deadlock() {
+        // §16 pin: the builder runs with no stripe lock held, so it may
+        // itself consult the cache — even the very same stripe (1 stripe
+        // forces the collision).  Under the old lock-across-build model
+        // this recursion deadlocked on the non-reentrant stripe mutex.
+        let cache: Arc<ShardedCache<u32>> = Arc::new(ShardedCache::new(1));
+        let inner = Arc::clone(&cache);
+        let (v, _) = cache
+            .get_or_try_insert_with(("t".to_string(), 0), move || {
+                assert!(inner.peek(&("t".to_string(), 1)).is_none());
+                let (dep, hit) = inner.get_or_try_insert_with(("t".to_string(), 1), || Ok(7))?;
+                assert!(!hit);
+                Ok(*dep + 1)
+            })
+            .unwrap();
+        assert_eq!(*v, 8);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn coalesced_waiters_share_one_arc_identity() {
+        use std::sync::Barrier;
+        const THREADS: usize = 6;
+        let cache: Arc<ShardedCache<u64>> = Arc::new(ShardedCache::new(2));
+        let barrier = Arc::new(Barrier::new(THREADS));
+        let built = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..THREADS {
+            let cache = Arc::clone(&cache);
+            let barrier = Arc::clone(&barrier);
+            let built = Arc::clone(&built);
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                let (v, _) = cache
+                    .get_or_try_insert_with(("t".to_string(), 9), || {
+                        built.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        Ok(1234)
+                    })
+                    .unwrap();
+                v
+            }));
+        }
+        let arcs: Vec<Arc<u64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(built.load(Ordering::SeqCst), 1);
+        for v in &arcs {
+            assert!(Arc::ptr_eq(v, &arcs[0]), "all waiters share the builder's Arc");
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, (THREADS - 1) as u64);
+        assert_eq!(
+            s.coalesced + s.lock_free_hits,
+            s.hits,
+            "every non-builder either coalesced or read the snapshot: {s:?}"
+        );
+    }
+
+    #[test]
+    fn midflight_invalidation_never_serves_a_cross_generation_entry() {
+        // §16 pin (d): a waiter whose validity generation advanced while
+        // the flight was in the air rejects the flight's result and
+        // rebuilds — it must never observe the stale generation.
+        let cache: Arc<ShardedCache<(u64, u32), u32>> = Arc::new(ShardedCache::new(1));
+        let epoch = Arc::new(AtomicU64::new(0));
+
+        let builder = {
+            let cache = Arc::clone(&cache);
+            let epoch = Arc::clone(&epoch);
+            std::thread::spawn(move || {
+                let e = epoch.load(Ordering::SeqCst);
+                let (v, _) = cache
+                    .get_or_revalidate_with(
+                        3u32,
+                        |entry| entry.0 == epoch.load(Ordering::SeqCst),
+                        || {
+                            // Mid-build, the epoch bumps under us.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok((e, 100))
+                        },
+                    )
+                    .unwrap();
+                v
+            })
+        };
+        // Let the builder take the flight, then invalidate its epoch.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        epoch.store(1, Ordering::SeqCst);
+        let (fresh, _) = cache
+            .get_or_revalidate_with(
+                3u32,
+                |entry| entry.0 == epoch.load(Ordering::SeqCst),
+                || Ok((epoch.load(Ordering::SeqCst), 200)),
+            )
+            .unwrap();
+        assert_eq!(fresh.0, 1, "the waiter rebuilt at its own epoch, not the flight's");
+        assert_eq!(*fresh, (1, 200));
+        let stale = builder.join().unwrap();
+        assert_eq!(stale.0, 0, "the builder returns its own (now stale) build");
     }
 }

@@ -7,12 +7,18 @@
 //! the ≤6.2 ms evolution-latency claim covers the search + swap, not the
 //! one-off compile.
 //!
-//! The cache is an [`ExecutableCache`] (DESIGN.md §4): an `Arc`-shared,
-//! lock-striped map keyed by (task, variant).  An executor built with
+//! The cache is an [`ExecutableCache`] (DESIGN.md §4, §16): an
+//! `Arc`-shared striped map keyed by (task, variant) whose hits are
+//! lock-free snapshot reads — the steady-state fleet never touches a
+//! mutex to fetch a compiled variant.  An executor built with
 //! [`Executor::new`] owns a private cache (the single-device case); fleet
 //! deployments hand the same `Arc` to every engine via
 //! [`Executor::with_cache`], so a variant compiled by one device session
-//! is reused by every other session that evolves to it.
+//! is reused by every other session that evolves to it.  Concurrent
+//! sessions racing the first compile of one variant coalesce: one PJRT
+//! compile runs (outside every cache lock), the rest share its
+//! executable — and a compile *failure* propagates to every waiter
+//! without poisoning the key.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -92,7 +98,8 @@ impl Executor {
     }
 
     /// Load + compile a variant's HLO artifact (cached fleet-wide when the
-    /// cache is shared; the compile runs at most once per (task, variant)).
+    /// cache is shared; the compile runs at most once per (task, variant),
+    /// outside the cache's stripe locks — racing loaders coalesce on it).
     pub fn load(&self, task: &TaskArtifacts, v: &Variant, root: &Path) -> Result<Arc<LoadedVariant>> {
         let (loaded, _hit) = self
             .cache

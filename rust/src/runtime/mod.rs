@@ -2,9 +2,10 @@
 //! client.  Python never runs here — the HLO was lowered once by
 //! `python/compile/aot.py` (see /opt/xla-example/load_hlo for the pattern).
 //!
-//! Compiled executables live in a lock-striped [`cache::ShardedCache`]
-//! keyed by (task, variant); share one cache `Arc` across executors to
-//! reuse compiles across engines/devices (DESIGN.md §4).
+//! Compiled executables live in a striped [`cache::ShardedCache`] keyed
+//! by (task, variant) — lock-free hits, singleflight compiles (DESIGN.md
+//! §4, §16); share one cache `Arc` across executors to reuse compiles
+//! across engines/devices.
 
 pub mod cache;
 pub mod executor;

@@ -1,0 +1,192 @@
+//! Integration: the shared `PlanCache` under real thread contention
+//! (DESIGN.md §16).  Plans served through the lock-free snapshot path,
+//! the singleflight coalescing path, and the stale-rebuild path must all
+//! be bit-identical to a fresh uncached search at the signature's band
+//! representative — memoization, never approximation — and an epoch bump
+//! landing while a search is in flight must never let a later lookup
+//! observe the superseded plan.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+use adaspring::coordinator::accuracy::AccuracyModel;
+use adaspring::coordinator::costmodel::CostModel;
+use adaspring::coordinator::eval::{Constraints, Evaluator};
+use adaspring::coordinator::search::{Mutator, Runtime3C, SearchResult};
+use adaspring::coordinator::{Manifest, PlanCache, PlanSignature};
+use adaspring::platform::Platform;
+use adaspring::runtime::CacheOutcome;
+use adaspring::util::rng::Rng;
+
+fn searcher_for(platform: &Platform) -> (Evaluator, Runtime3C) {
+    let manifest = Manifest::synthetic();
+    let task = manifest.task("d3").unwrap();
+    let cm = CostModel::new(&task.backbone, &task.input_shape, task.num_classes);
+    let evaluator = Evaluator::new(cm, AccuracyModel::fit(task), platform);
+    (evaluator, Runtime3C::new(Mutator::from_task(task)))
+}
+
+/// Randomized constraint set whose storage floors land in distinct
+/// 128 KB quantizer bands, so every config owns its own signature.
+fn random_distinct_constraints(rng: &mut Rng, n: usize) -> Vec<Constraints> {
+    (0..n)
+        .map(|i| {
+            Constraints::from_battery(
+                rng.range(0.05, 1.0),
+                rng.range(0.01, 0.2),
+                rng.range(5.0, 60.0),
+                (512 + 256 * i as u64) * 1024,
+            )
+        })
+        .collect()
+}
+
+fn assert_same_plan(got: &SearchResult, want: &SearchResult, c: &Constraints, who: &str) {
+    assert_eq!(got.evaluation.config, want.evaluation.config, "{who}: config diverged");
+    assert_eq!(got.candidates_evaluated, want.candidates_evaluated, "{who}");
+    assert_eq!(got.layers_visited, want.layers_visited, "{who}");
+    assert_eq!(got.early_stop, want.early_stop, "{who}");
+    assert_eq!(got.code.digits(), want.code.digits(), "{who}");
+    assert_eq!(
+        got.evaluation.score(c).to_bits(),
+        want.evaluation.score(c).to_bits(),
+        "{who}: score must be bit-identical"
+    );
+}
+
+/// Acceptance (ISSUE 10): with many threads hammering one shared cache
+/// over randomized configs, every plan anyone receives — snapshot hit,
+/// coalesced wait, or the builder's own — is bit-identical to the
+/// uncached oracle, and singleflight caps builds at one per signature.
+#[test]
+fn threaded_shared_plans_are_bit_identical_to_the_uncached_oracle() {
+    const THREADS: usize = 8;
+    const CONFIGS: usize = 12;
+    let platform = Platform::raspberry_pi_4b();
+    let (evaluator, searcher) = searcher_for(&platform);
+    let cache = PlanCache::new(8);
+    let q = *cache.quantizer();
+
+    let mut rng = Rng::new(0x516); // §16
+    let contexts = random_distinct_constraints(&mut rng, CONFIGS);
+    let sigs: Vec<PlanSignature> =
+        contexts.iter().map(|c| q.signature("d3", platform.name, c)).collect();
+
+    let builds: Vec<AtomicUsize> = (0..CONFIGS).map(|_| AtomicUsize::new(0)).collect();
+    let barrier = Barrier::new(THREADS);
+    let per_thread: Vec<Vec<SearchResult>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let (cache, sigs, builds, barrier, searcher, evaluator) =
+                    (&cache, &sigs, &builds, &barrier, &searcher, &evaluator);
+                scope.spawn(move || {
+                    barrier.wait();
+                    // Offset walks interleave the stripes' traffic.
+                    (0..CONFIGS)
+                        .map(|i| {
+                            let k = (t + i) % CONFIGS;
+                            let (result, _) =
+                                cache.lookup_or_search(sigs[k].clone(), |banded| {
+                                    builds[k].fetch_add(1, Ordering::SeqCst);
+                                    searcher.search(evaluator, banded)
+                                });
+                            (k, result)
+                        })
+                        .fold(vec![None; CONFIGS], |mut acc, (k, r)| {
+                            acc[k] = Some(r);
+                            acc
+                        })
+                        .into_iter()
+                        .map(Option::unwrap)
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (k, sig) in sigs.iter().enumerate() {
+        assert_eq!(
+            builds[k].load(Ordering::SeqCst),
+            1,
+            "signature {k}: singleflight must cap builds at one per (signature, epoch)"
+        );
+        let banded = q.representative(sig);
+        let oracle = searcher.search(&evaluator, &banded);
+        for (t, results) in per_thread.iter().enumerate() {
+            assert_same_plan(&results[k], &oracle, &banded, &format!("thread {t} config {k}"));
+        }
+    }
+
+    let stats = cache.stats();
+    assert_eq!(stats.entries, CONFIGS);
+    assert_eq!(stats.misses, CONFIGS as u64, "one search per signature fleet-wide");
+    assert_eq!(stats.hits + stats.misses, (THREADS * CONFIGS) as u64);
+    assert!(
+        stats.lock_free_hits + stats.coalesced <= stats.hits,
+        "the §16 split ({} lock-free + {} coalesced) partitions hits ({})",
+        stats.lock_free_hits,
+        stats.coalesced,
+        stats.hits
+    );
+}
+
+/// An epoch bump landing while a plan search is in flight: the builder
+/// (which captured the old epoch) keeps its result, but every lookup
+/// that starts after the bump must rebuild — whether it parks on the
+/// stale flight and retries, or finds the stale entry — and the cache
+/// must end up holding the new-epoch plan.
+#[test]
+fn bump_epoch_mid_flight_never_serves_a_cross_epoch_plan() {
+    let platform = Platform::jetbot();
+    let (evaluator, searcher) = searcher_for(&platform);
+    let cache = PlanCache::new(4);
+    let q = *cache.quantizer();
+    let c = Constraints::from_battery(0.5, 0.05, 30.0, 2 << 20);
+    let sig = q.signature("d3", platform.name, &c);
+
+    let builds = AtomicUsize::new(0);
+    let entered = Barrier::new(2); // builder A ↔ main
+    let release = Barrier::new(2);
+    std::thread::scope(|scope| {
+        let (cache, sig, builds, entered, release, searcher, evaluator) =
+            (&cache, &sig, &builds, &entered, &release, &searcher, &evaluator);
+        let a = scope.spawn(move || {
+            cache.lookup_or_search(sig.clone(), |banded| {
+                builds.fetch_add(1, Ordering::SeqCst);
+                entered.wait(); // flight is open; let main bump the epoch
+                release.wait(); // hold the flight until main has bumped
+                searcher.search(evaluator, banded)
+            })
+        });
+        entered.wait();
+        cache.bump_epoch(); // supersede the plan A is mid-way through
+        release.wait();
+        let (a_result, a_outcome) = a.join().unwrap();
+        assert_eq!(a_outcome, CacheOutcome::Miss, "the builder keeps its own build");
+        let banded = q.representative(sig);
+        assert_same_plan(&a_result, &searcher.search(evaluator, &banded), &banded, "builder");
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "no duplicate while in flight");
+    });
+
+    // First post-bump lookup: the cached entry carries the superseded
+    // epoch, so it must rebuild — never serve the cross-epoch plan.
+    let (post, outcome) = cache.lookup_or_search(sig.clone(), |banded| {
+        builds.fetch_add(1, Ordering::SeqCst);
+        searcher.search(&evaluator, banded)
+    });
+    assert_eq!(outcome, CacheOutcome::Stale, "post-bump lookup rebuilds");
+    assert_eq!(builds.load(Ordering::SeqCst), 2);
+    let banded = q.representative(&sig);
+    assert_same_plan(&post, &searcher.search(&evaluator, &banded), &banded, "post-bump");
+
+    // And the rebuilt entry is current: the next lookup hits.
+    let (_, outcome) = cache.lookup_or_search(sig, |banded| {
+        builds.fetch_add(1, Ordering::SeqCst);
+        searcher.search(&evaluator, banded)
+    });
+    assert_eq!(outcome, CacheOutcome::Hit);
+    assert_eq!(builds.load(Ordering::SeqCst), 2, "current-epoch entry serves without rebuild");
+    let stats = cache.stats();
+    assert_eq!((stats.entries, stats.hits, stats.misses, stats.stale), (1, 1, 1, 1));
+}
